@@ -1,0 +1,97 @@
+//! Quickstart: build a CAUSE system, feed it data, unlearn a user's data,
+//! and inspect what happened.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! This example uses the accounting backend (no artifacts required); see
+//! `e2e_edge_unlearning.rs` for the full PJRT-executed pipeline.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::experiments::common;
+use cause::unlearning::UnlearningService;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Configure the device: paper defaults, smaller population for demo.
+    let cfg = ExperimentConfig {
+        users: 40,
+        rounds: 6,
+        shards: 4,
+        unlearn_prob: 0.2,
+        ..Default::default()
+    };
+    println!(
+        "device: C_m={:.1} GB, model={} ({} MB dense, {} MB pruned at keep={})",
+        cfg.memory_bytes as f64 / (1u64 << 30) as f64,
+        cfg.model.name,
+        cfg.model.file_mb,
+        cfg.model.pruned_bytes(cfg.prune_keep) / (1024 * 1024),
+        cfg.prune_keep
+    );
+
+    // 2. Synthesize the edge population and its unlearning request trace.
+    let pop = common::population(&cfg);
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig::paper_default(7).with_prob(cfg.unlearn_prob),
+    );
+    println!(
+        "population: {} users, {} samples over {} rounds; {} unlearning requests",
+        cfg.users,
+        pop.total_samples(),
+        cfg.rounds,
+        trace.total_requests()
+    );
+
+    // 3. Build CAUSE (UCDP + RCMP + FiboR + SC) and run the lifecycle.
+    let engine = SystemVariant::Cause.build_cost(&cfg)?;
+    println!(
+        "store: {} checkpoint slots ({} policy)\n",
+        engine.store().capacity(),
+        engine.store().policy_name()
+    );
+    let mut svc = UnlearningService::new(engine);
+
+    for t in 1..=cfg.rounds {
+        svc.ingest_round(&pop)?;
+        for req in trace.at(t) {
+            svc.submit(req.clone());
+        }
+        let served = svc.drain()?;
+        let m = &svc.engine().metrics;
+        println!(
+            "round {t}: served {served} requests | RSN this round {:>8} | \
+             store {}/{} slots",
+            m.rsn_by_round.last().copied().unwrap_or(0),
+            svc.engine().store().occupied(),
+            svc.engine().store().capacity(),
+        );
+    }
+
+    // 4. Receipts: what each unlearning request cost.
+    println!("\nper-request receipts (first 5):");
+    for r in svc.log.iter().take(5) {
+        println!(
+            "  user {:>3} @ round {}: RSN {:>7}, {} lineage(s) retrained, \
+             ~{:.1}s / {:.0} J on-device",
+            r.user, r.round, r.rsn, r.lineages_retrained, r.est_seconds, r.est_joules
+        );
+    }
+
+    let m = &svc.engine().metrics;
+    println!(
+        "\ntotals: RSN {} | energy {:.0} J | warm retrains {} | scratch {} | \
+         checkpoints stored {} (replaced {}, rejected {})",
+        m.total_rsn(),
+        m.energy_joules,
+        m.warm_retrains,
+        m.scratch_retrains,
+        m.ckpts_stored,
+        m.ckpts_replaced,
+        m.ckpts_rejected
+    );
+    Ok(())
+}

@@ -1,0 +1,94 @@
+//! Satellite scenario: exact unlearning on an energy-harvesting device.
+//!
+//! An AI cubesat captures imagery each orbit (a training round), and
+//! sensitive captures must be forgotten on demand (the paper's motivating
+//! wartime-imagery example). The battery cannot always cover a retrain, so
+//! the service defers requests until solar harvest catches up — the
+//! experiment shows why CAUSE's low-RSN retraining is what makes exact
+//! unlearning feasible at all in this envelope.
+//!
+//! ```bash
+//! cargo run --release --example satellite_energy
+//! ```
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::experiments::common;
+use cause::sim::device::AI_CUBESAT;
+use cause::sim::Battery;
+use cause::unlearning::UnlearningService;
+
+const ORBIT_SECS: f64 = 5_400.0; // ~90 minutes
+
+fn run_system(variant: SystemVariant) -> anyhow::Result<()> {
+    let cfg = ExperimentConfig {
+        users: 30,
+        rounds: 8,
+        shards: 4,
+        unlearn_prob: 0.3,
+        model: cause::config::profiles::MOBILENETV2, // edge-sized backbone
+        ..Default::default()
+    }
+    .with_memory_gb(AI_CUBESAT.memory_bytes as f64 / (1u64 << 30) as f64);
+
+    let pop = common::population(&cfg);
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig::paper_default(13).with_prob(cfg.unlearn_prob),
+    );
+
+    let engine = variant.build_cost(&cfg)?;
+    let mut svc = UnlearningService::new(engine).with_battery(Battery::new(&AI_CUBESAT));
+
+    let mut deferred_total = 0usize;
+    for orbit in 1..=cfg.rounds {
+        svc.harvest(ORBIT_SECS);
+        svc.ingest_round(&pop)?;
+        for req in trace.at(orbit) {
+            svc.submit(req.clone());
+        }
+        let before = svc.pending();
+        svc.drain()?;
+        let deferred = svc.pending();
+        deferred_total += deferred;
+        println!(
+            "  orbit {orbit}: {} new requests, {} served, {} deferred | \
+             battery {:>5.1}% | RSN so far {}",
+            trace.at(orbit).len(),
+            before - deferred,
+            deferred,
+            svc.battery().map(|b| b.soc() * 100.0).unwrap_or(100.0),
+            svc.engine().metrics.total_rsn()
+        );
+        // Idle harvest between request bursts.
+        svc.harvest(ORBIT_SECS);
+        svc.drain()?;
+    }
+    let m = &svc.engine().metrics;
+    println!(
+        "  == {}: total RSN {} | energy {:.0} J (battery {:.0} J) | \
+         deferral events {} | brownouts {}\n",
+        variant.display(),
+        m.total_rsn(),
+        m.energy_joules,
+        AI_CUBESAT.battery_joules,
+        deferred_total,
+        svc.battery().map(|b| b.brownouts).unwrap_or(0)
+    );
+    Ok(())
+}
+
+fn main() -> anyhow::Result<()> {
+    println!(
+        "cubesat envelope: {} MB model memory, {:.0} Wh battery, {:.0} W harvest\n",
+        AI_CUBESAT.memory_bytes / (1024 * 1024),
+        AI_CUBESAT.battery_joules / 3600.0,
+        AI_CUBESAT.harvest_watts
+    );
+    for v in [SystemVariant::Cause, SystemVariant::Sisa] {
+        println!("{}:", v.display());
+        run_system(v)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,194 @@
+"""AOT pipeline: lower every model variant's computations to HLO text.
+
+Python runs ONCE at build time (``make artifacts``); the Rust coordinator
+loads the emitted ``artifacts/*.hlo.txt`` through PJRT and never calls back
+into Python.
+
+Interchange format is **HLO text**, not serialized ``HloModuleProto``:
+jax >= 0.5 emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowering goes stablehlo ->
+XlaComputation (``return_tuple=True``) -> ``as_hlo_text``.
+
+Artifact signatures (mirrored by ``rust/src/runtime/session.rs``):
+
+  <variant>/init        [seed]                  -> (p_0 .. p_k)
+  <variant>/train_step  [p_0..p_k, x, y, lr]    -> (p_0 .. p_k, loss)
+  <variant>/predict     [p_0..p_k, x]           -> (logits,)
+  <variant>/prune       [p_0..p_k, keep_frac]   -> (p_0 .. p_k)
+
+Alongside the HLO files a ``manifest.txt`` (tiny line format parsed by
+``rust/src/runtime/artifact.rs``) and a human-facing ``manifest.json`` are
+written.
+"""
+
+from __future__ import annotations
+
+import argparse
+import functools
+import json
+import os
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _tensor_line(kind: str, name: str, dims) -> str:
+    dims = list(dims)
+    d = "-" if not dims else "x".join(str(int(x)) for x in dims)
+    return f"{kind} {name} f32 {d}"
+
+
+def lower_variant(spec: M.VariantSpec, out_dir: str):
+    """Lower the four artifacts of one variant; returns manifest entries."""
+    scalar = _spec(())
+    params0 = jax.eval_shape(
+        functools.partial(M.init_params, spec), jnp.float32(0)
+    )
+    p_specs = [_spec(p.shape) for p in params0]
+    x_spec = _spec((spec.batch, spec.features))
+    y_spec = _spec((spec.batch,))
+    k = len(p_specs)
+
+    entries = []
+
+    def emit(kind: str, fn, in_specs, in_names, out_shapes, out_names, extra_meta=None):
+        name = f"{spec.name}/{kind}"
+        fname = f"{spec.name}_{kind}.hlo.txt"
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*in_specs)
+        text = to_hlo_text(lowered)
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        lines = [f"artifact {name}", f"file {fname}"]
+        lines += [_tensor_line("input", n, s.shape) for n, s in zip(in_names, in_specs)]
+        lines += [_tensor_line("output", n, s) for n, s in zip(out_names, out_shapes)]
+        meta = {
+            "proxy_for": spec.proxy_for.replace(" ", "_"),
+            "param_count": M.param_count(spec),
+            "flops_per_example": M.flops_per_example(spec),
+            "classes": spec.classes,
+            "batch": spec.batch,
+            "features": spec.features,
+        }
+        meta.update(extra_meta or {})
+        lines += [f"meta {k2} {v}" for k2, v in meta.items()]
+        lines.append("end")
+        print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {time.time() - t0:.1f}s",
+              flush=True)
+        entries.append((name, fname, lines, meta,
+                        [(n, list(map(int, s.shape))) for n, s in zip(in_names, in_specs)],
+                        [(n, list(map(int, s))) for n, s in zip(out_names, out_shapes)]))
+
+    p_names = [f"p{i}" for i in range(k)]
+    p_shapes = [p.shape for p in p_specs]
+
+    emit(
+        "init",
+        lambda seed: tuple(M.init_params(spec, seed)),
+        [scalar],
+        ["seed"],
+        p_shapes,
+        p_names,
+    )
+    emit(
+        "train_step",
+        lambda *a: M.train_step(spec, list(a[:k]), a[k], a[k + 1], a[k + 2]),
+        [*p_specs, x_spec, y_spec, scalar],
+        [*p_names, "x", "y", "lr"],
+        [*p_shapes, ()],
+        [*p_names, "loss"],
+    )
+    emit(
+        "predict",
+        lambda *a: (M.predict(spec, list(a[:k]), a[k]),),
+        [*p_specs, x_spec],
+        [*p_names, "x"],
+        [(spec.batch, spec.classes)],
+        ["logits"],
+    )
+    emit(
+        "prune",
+        lambda *a: M.prune_step(spec, list(a[:k]), a[k]),
+        [*p_specs, scalar],
+        [*p_names, "keep_frac"],
+        p_shapes,
+        p_names,
+        extra_meta={
+            "prunable_params": sum(
+                int(jnp.prod(jnp.array(p.shape)))
+                for p in params0
+                if len(p.shape) == 2 and int(jnp.prod(jnp.array(p.shape))) >= 1024
+            )
+        },
+    )
+    return entries
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--variants",
+        default=",".join(M.VARIANTS),
+        help="comma-separated variant names (default: all)",
+    )
+    args = ap.parse_args()
+
+    out_dir = os.path.abspath(args.out)
+    os.makedirs(out_dir, exist_ok=True)
+    wanted = [v for v in args.variants.split(",") if v]
+    for v in wanted:
+        if v not in M.VARIANTS:
+            print(f"unknown variant '{v}'; have {list(M.VARIANTS)}", file=sys.stderr)
+            return 1
+
+    all_entries = []
+    for v in wanted:
+        print(f"lowering {v} ...", flush=True)
+        all_entries += lower_variant(M.VARIANTS[v], out_dir)
+
+    manifest_lines = ["# generated by python/compile/aot.py — do not edit"]
+    for _name, _fname, lines, _meta, _ins, _outs in all_entries:
+        manifest_lines += lines + [""]
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(
+            {
+                name: {
+                    "file": fname,
+                    "meta": meta,
+                    "inputs": ins,
+                    "outputs": outs,
+                }
+                for name, fname, _lines, meta, ins, outs in all_entries
+            },
+            f,
+            indent=2,
+        )
+    print(f"wrote {len(all_entries)} artifacts + manifest to {out_dir}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

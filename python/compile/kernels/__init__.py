@@ -1,0 +1,9 @@
+"""Layer-1 Pallas kernels (build-time only; never imported at runtime)."""
+
+from .dense import dense, matmul, relu_mask  # noqa: F401
+from .prune import (  # noqa: F401
+    apply_threshold,
+    fast_threshold,
+    magnitude_prune,
+    magnitude_prune_fast,
+)

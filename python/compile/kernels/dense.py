@@ -1,0 +1,162 @@
+"""Layer-1 Pallas kernels: fused dense layers for the edge models.
+
+The paper trains its edge models (ResNet-34 / VGG-16 / MobileNetV2 proxies)
+on an NVIDIA Jetson Orin Nano; the compute hot-spot of the per-shard
+(re)training loop is the dense matmul stack. Here that hot-spot is written as
+Pallas kernels so it lowers into the same HLO artifact as the surrounding JAX
+graph (see DESIGN.md §Hardware-Adaptation for the CUDA->TPU rethink: tiles
+are sized for VMEM residency and the MXU 128x128 systolic array rather than
+CUDA threadblocks/shared memory).
+
+Kernels:
+  * ``matmul``/``dense`` — fused ``act(x @ w + b)`` forward, tiled
+    ``(bm, bn, bk)`` with K as the sequential innermost grid axis and the
+    bias+activation epilogue fused into the final K step.
+  * backward — ``dx = g @ w.T``, ``dw = x.T @ g``, ``db = sum(g)`` plus a
+    Pallas relu-mask kernel, wired via ``jax.custom_vjp`` so ``jax.grad`` in
+    Layer 2 differentiates straight through the Pallas call.
+
+All kernels run with ``interpret=True`` (this image's PJRT is CPU-only; real
+TPU lowering emits a Mosaic custom-call the CPU plugin cannot execute).
+Correctness is pinned against the pure-jnp oracle in ``ref.py`` by
+``python/tests/test_kernel.py``.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Literal, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Activation = Literal["relu", "none"]
+
+# TPU-minded tile ceilings: the MXU is a 128x128 systolic array and VMEM is
+# ~16 MiB/core. A (128, 128) f32 output tile plus (128, 512) lhs and
+# (512, 128) rhs tiles is ~576 KiB — comfortably triple-bufferable.
+_BM, _BN, _BK = 128, 128, 512
+
+
+def _tile(dim: int, ceiling: int) -> int:
+    """Largest divisor of ``dim`` that is <= ceiling.
+
+    AOT shapes are static, so exact divisors are picked instead of padding;
+    for the edge-model shapes (3072/1024/256/128/64, classes 10/100) this
+    always finds a healthy tile.
+    """
+    if dim <= ceiling:
+        return dim
+    for cand in range(ceiling, 0, -1):
+        if dim % cand == 0:
+            return cand
+    return dim
+
+
+def matmul(x: jax.Array, w: jax.Array, b: Optional[jax.Array] = None,
+           activation: Activation = "none") -> jax.Array:
+    """Tiled Pallas ``act(x @ w + b)``; the building block for ``dense``.
+
+    Grid = (M/bm, N/bn, K/bk); the output tile is revisited across the K
+    axis and acts as the accumulator (f32). The epilogue (bias + activation)
+    runs fused on the last K step — the Pallas analogue of a CUDA
+    mainloop + epilogue split.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"matmul inner dims mismatch: {x.shape} @ {w.shape}"
+    bm, bn, bk = _tile(m, _BM), _tile(n, _BN), _tile(k, _BK)
+    nk = k // bk
+
+    def kernel(*refs):
+        if b is not None:
+            x_ref, w_ref, b_ref, o_ref = refs
+        else:
+            (x_ref, w_ref, o_ref), b_ref = refs, None
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _init():
+            o_ref[...] = jnp.zeros_like(o_ref)
+
+        o_ref[...] += jnp.dot(
+            x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+        )
+
+        @pl.when(kk == nk - 1)
+        def _epilogue():
+            out = o_ref[...]
+            if b_ref is not None:
+                out = out + b_ref[...]
+            if activation == "relu":
+                out = jnp.maximum(out, 0.0)
+            o_ref[...] = out
+
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+        pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+    ]
+    args = [x, w]
+    if b is not None:
+        assert b.shape == (n,), f"bias shape {b.shape} != ({n},)"
+        # Rank-2 bias so the block layout matches the output tile.
+        in_specs.append(pl.BlockSpec((1, bn), lambda i, j, kk: (0, j)))
+        args.append(b.reshape(1, n))
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, nk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(*args)
+
+
+def _relu_mask_kernel(g_ref, y_ref, o_ref):
+    """dL/d(pre-activation) = g * 1[y > 0] for the relu epilogue."""
+    o_ref[...] = jnp.where(y_ref[...] > 0.0, g_ref[...], 0.0)
+
+
+def relu_mask(g: jax.Array, y: jax.Array) -> jax.Array:
+    """Elementwise backward mask as a Pallas kernel (row-tiled)."""
+    m, n = g.shape
+    bm = _tile(m, _BM)
+    return pl.pallas_call(
+        _relu_mask_kernel,
+        grid=(m // bm,),
+        in_specs=[
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+            pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(g, y)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def dense(x: jax.Array, w: jax.Array, b: jax.Array,
+          activation: Activation = "relu") -> jax.Array:
+    """Fused dense layer ``act(x @ w + b)`` with Pallas forward and backward."""
+    return matmul(x, w, b, activation)
+
+
+def _dense_fwd(x, w, b, activation):
+    y = matmul(x, w, b, activation)
+    return y, (x, w, y)
+
+
+def _dense_bwd(activation, res, g):
+    x, w, y = res
+    if activation == "relu":
+        g = relu_mask(g, y)
+    # dx = g @ w.T ; dw = x.T @ g ; db = sum_rows(g) — Pallas matmuls.
+    dx = matmul(g, w.T)
+    dw = matmul(x.T, g)
+    db = jnp.sum(g, axis=0)
+    return dx, dw, db
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)

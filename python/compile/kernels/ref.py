@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every Pallas kernel in this package has a reference implementation here with
+the same semantics, written with nothing but ``jax.numpy``. The pytest suite
+(``python/tests/test_kernel.py``) sweeps shapes and dtypes with hypothesis
+and asserts ``allclose`` between kernel and oracle.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ref_matmul(x, w, b=None, activation="none"):
+    """act(x @ w + b) in plain jnp."""
+    y = jnp.dot(x, w)
+    if b is not None:
+        y = y + b
+    if activation == "relu":
+        y = jnp.maximum(y, 0.0)
+    return y
+
+
+def ref_dense_vjp(x, w, b, g, activation="relu"):
+    """Reference gradients of the fused dense layer via jax.vjp."""
+
+    def f(x, w, b):
+        return ref_matmul(x, w, b, activation)
+
+    _, vjp = jax.vjp(f, x, w, b)
+    return vjp(g)
+
+
+def ref_magnitude_prune(w, keep_frac):
+    """Keep the keep_frac largest-|w| entries, zero the rest (ties keep)."""
+    flat = jnp.abs(w.reshape(-1))
+    n = flat.shape[0]
+    srt = jnp.sort(flat)
+    drop = jnp.clip((1.0 - keep_frac) * n, 0, n)
+    idx = jnp.clip(jnp.floor(drop).astype(jnp.int32), 0, n - 1)
+    thr = jnp.where(drop >= n, jnp.inf, srt[idx])
+    thr = jnp.where(keep_frac >= 1.0, -jnp.inf, thr)
+    return jnp.where(jnp.abs(w) >= thr, w, 0.0)

@@ -1,0 +1,209 @@
+"""Layer-2 JAX model: edge-model variants, loss, train step, prune step.
+
+The paper trains ResNet-34 / VGG-16 / DenseNet-121 / MobileNetV2 on CIFAR-10,
+CIFAR-100 and SVHN on a Jetson Orin Nano. That testbed is not available
+here, so each backbone is substituted by an MLP proxy whose parameter count
+preserves the paper's *ordering and ratios* (ResNet-34 > VGG-16 >
+DenseNet-121 > MobileNetV2) at ~1/13 scale, plus one small CNN variant that
+exercises the conv path. DESIGN.md §Substitutions records the mapping; the
+systems behaviour the paper measures (retrained-sample counts, memory
+footprints, energy ∝ samples) depends on relative model sizes and sample
+counts, which the proxies preserve.
+
+Every dense layer goes through the Layer-1 Pallas kernel
+(``kernels.dense``), so the AOT-lowered HLO contains the kernel body.
+Gradients flow through the kernel's ``custom_vjp``.
+
+Conventions (shared with ``rust/src/runtime/session.rs``):
+  * ``x`` is ``[batch, 3072]`` f32 (32x32x3 flattened, CIFAR/SVHN-shaped);
+  * ``y`` is ``[batch]`` f32 class indices; ``y < 0`` marks a padded row
+    that must not contribute to loss or gradients;
+  * parameters are a flat list ``[w1, b1, w2, b2, ...]`` (conv variants
+    prepend rank-4 conv kernels);
+  * optimizer is plain SGD (the paper uses Adam; optimizer state would
+    double every checkpoint stored on the device — see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels
+
+IMG_FEATURES = 32 * 32 * 3  # 3072; CIFAR-10 / CIFAR-100 / SVHN all share it.
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantSpec:
+    """Static description of one AOT model variant."""
+
+    name: str
+    #: Paper backbone this variant proxies (documentation only).
+    proxy_for: str
+    #: Hidden layer widths; input is IMG_FEATURES, output is ``classes``.
+    hidden: Tuple[int, ...]
+    classes: int
+    batch: int
+    #: Conv stem: list of (out_channels, stride). Empty = pure MLP.
+    conv: Tuple[Tuple[int, int], ...] = ()
+
+    @property
+    def features(self) -> int:
+        return IMG_FEATURES
+
+
+# Parameter-count ordering mirrors Table 2 of the paper:
+#   ResNet-34 23.6M > VGG-16 15.0M > DenseNet-121 7.1M > MobileNetV2 2.2M
+# at roughly 1/13 scale (see DESIGN.md §Substitutions).
+VARIANTS: Dict[str, VariantSpec] = {
+    v.name: v
+    for v in [
+        VariantSpec("resnet34_c10", "ResNet-34/CIFAR-10", (512, 256, 128), 10, 64),
+        VariantSpec("resnet34_c100", "ResNet-34/CIFAR-100", (512, 256, 128), 100, 64),
+        VariantSpec("vgg16_c10", "VGG-16/CIFAR-10", (384, 128), 10, 64),
+        VariantSpec("vgg16_c100", "VGG-16/CIFAR-100", (384, 128), 100, 64),
+        VariantSpec("densenet121_c100", "DenseNet-121/CIFAR-100", (192, 96), 100, 64),
+        VariantSpec("mobilenetv2_c10", "MobileNetV2/CIFAR-10", (96,), 10, 64),
+        VariantSpec(
+            "cnn_c10", "conv-stem demo (e2e example)", (128,), 10, 32,
+            conv=((16, 2), (32, 2)),
+        ),
+    ]
+}
+
+
+def layer_dims(spec: VariantSpec) -> List[Tuple[int, int]]:
+    """(fan_in, fan_out) of each dense layer, conv stem included upstream."""
+    if spec.conv:
+        side = 32
+        ch = 3
+        for out_ch, stride in spec.conv:
+            side //= stride
+            ch = out_ch
+        first = side * side * ch
+    else:
+        first = spec.features
+    widths = [first, *spec.hidden, spec.classes]
+    return list(zip(widths[:-1], widths[1:]))
+
+
+def init_params(spec: VariantSpec, seed: jax.Array) -> List[jax.Array]:
+    """He-normal initialization from an f32 seed scalar (AOT-friendly)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.int32))
+    params: List[jax.Array] = []
+    if spec.conv:
+        ch = 3
+        for out_ch, _stride in spec.conv:
+            key, sub = jax.random.split(key)
+            fan_in = 3 * 3 * ch
+            k = jax.random.normal(sub, (3, 3, ch, out_ch), jnp.float32)
+            params.append(k * jnp.sqrt(2.0 / fan_in))
+            ch = out_ch
+    for fan_in, fan_out in layer_dims(spec):
+        key, sub = jax.random.split(key)
+        w = jax.random.normal(sub, (fan_in, fan_out), jnp.float32)
+        params.append(w * jnp.sqrt(2.0 / fan_in))
+        params.append(jnp.zeros((fan_out,), jnp.float32))
+    return params
+
+
+def _conv_stem(spec: VariantSpec, params: Sequence[jax.Array], x: jax.Array):
+    """Apply the conv stem (plain XLA convs; dense layers use Pallas)."""
+    n_conv = len(spec.conv)
+    h = x.reshape(-1, 32, 32, 3)
+    for i, (_out_ch, stride) in enumerate(spec.conv):
+        h = jax.lax.conv_general_dilated(
+            h,
+            params[i],
+            window_strides=(stride, stride),
+            padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        )
+        h = jnp.maximum(h, 0.0)
+    return h.reshape(h.shape[0], -1), n_conv
+
+
+def predict(spec: VariantSpec, params: Sequence[jax.Array], x: jax.Array):
+    """Logits ``[batch, classes]``; every dense layer is the Pallas kernel."""
+    if spec.conv:
+        h, n_conv = _conv_stem(spec, params, x)
+    else:
+        h, n_conv = x, 0
+    dense_params = params[n_conv:]
+    n_layers = len(dense_params) // 2
+    for l in range(n_layers):
+        w, b = dense_params[2 * l], dense_params[2 * l + 1]
+        act = "relu" if l + 1 < n_layers else "none"
+        h = kernels.dense(h, w, b, act)
+    return h
+
+
+def masked_cross_entropy(logits: jax.Array, y: jax.Array) -> jax.Array:
+    """Mean softmax CE over rows with ``y >= 0``; padded rows contribute 0."""
+    classes = logits.shape[-1]
+    valid = y >= 0.0
+    labels = jnp.clip(y, 0.0, classes - 1.0).astype(jnp.int32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    nll = jnp.where(valid, nll, 0.0)
+    denom = jnp.maximum(jnp.sum(valid.astype(jnp.float32)), 1.0)
+    return jnp.sum(nll) / denom
+
+
+def loss_fn(spec: VariantSpec, params, x, y):
+    return masked_cross_entropy(predict(spec, params, x), y)
+
+
+def train_step(spec: VariantSpec, params, x, y, lr):
+    """One SGD step; returns (new_params..., loss)."""
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(spec, p, x, y)
+    )(list(params))
+    new_params = [p - lr * g for p, g in zip(params, grads)]
+    return (*new_params, loss)
+
+
+def prunable(p: jax.Array) -> bool:
+    """RCMP prunes the dense weight matrices (rank-2, non-trivial size)."""
+    return p.ndim == 2 and p.size >= 1024
+
+
+def prune_step(spec: VariantSpec, params, keep_frac):
+    """Magnitude-prune each prunable tensor via the Pallas mask kernel.
+
+    Uses the bisection threshold (`magnitude_prune_fast`): XLA-CPU's sort
+    made the sort-based variant ~17x slower (EXPERIMENTS.md §Perf-L2).
+    """
+    return tuple(
+        kernels.magnitude_prune_fast(p, keep_frac) if prunable(p) else p
+        for p in params
+    )
+
+
+def param_count(spec: VariantSpec) -> int:
+    n = 0
+    if spec.conv:
+        ch = 3
+        for out_ch, _ in spec.conv:
+            n += 3 * 3 * ch * out_ch
+            ch = out_ch
+    for fan_in, fan_out in layer_dims(spec):
+        n += fan_in * fan_out + fan_out
+    return n
+
+
+def flops_per_example(spec: VariantSpec) -> int:
+    """fwd+bwd FLOPs per example ~= 3 * 2 * sum(w_elems) for the MLP stack."""
+    dense = sum(fi * fo for fi, fo in layer_dims(spec))
+    conv = 0
+    if spec.conv:
+        side, ch = 32, 3
+        for out_ch, stride in spec.conv:
+            side //= stride
+            conv += side * side * 3 * 3 * ch * out_ch
+            ch = out_ch
+    return 6 * (dense + conv)

@@ -1,0 +1,158 @@
+"""Layer-1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes (and the activation/bias space); every case
+asserts allclose against ``ref.py``. This is the core correctness signal
+for everything the Rust coordinator later executes through PJRT.
+"""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import dense, magnitude_prune, matmul, relu_mask
+from compile.kernels.ref import ref_dense_vjp, ref_magnitude_prune, ref_matmul
+
+# Dimensions exercise tile boundaries: below, at, and above the (128, 512)
+# ceilings, plus awkward primes.
+DIMS_M = [1, 3, 17, 64, 128, 130]
+DIMS_N = [1, 10, 96, 100, 128, 130]
+DIMS_K = [1, 32, 100, 512, 515]
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    m=st.sampled_from(DIMS_M),
+    n=st.sampled_from(DIMS_N),
+    k=st.sampled_from(DIMS_K),
+    bias=st.booleans(),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_matmul_matches_ref(m, n, k, bias, act):
+    x = rand(m * 1000 + k, (m, k))
+    w = rand(n * 7 + k, (k, n))
+    b = rand(n, (n,)) if bias else None
+    got = matmul(x, w, b, act)
+    want = ref_matmul(x, w, b, act)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([2, 64, 128]),
+    n=st.sampled_from([10, 96, 128]),
+    k=st.sampled_from([32, 512]),
+    act=st.sampled_from(["none", "relu"]),
+)
+def test_dense_gradients_match_ref(m, n, k, act):
+    x = rand(1 + m, (m, k))
+    w = rand(2 + n, (k, n))
+    b = rand(3 + k, (n,))
+    g = rand(4 + m + n, (m, n))
+
+    def loss(x, w, b):
+        return jnp.sum(dense(x, w, b, act) * g)
+
+    dx, dw, db = jax.grad(loss, argnums=(0, 1, 2))(x, w, b)
+    rx, rw, rb = ref_dense_vjp(x, w, b, g, act)
+    np.testing.assert_allclose(dx, rx, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(dw, rw, rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(db, rb, rtol=3e-4, atol=3e-4)
+
+
+def test_relu_mask_blocks_negative_preactivations():
+    g = jnp.ones((4, 8), jnp.float32)
+    y = jnp.array([[-1.0, 2.0] * 4] * 4, jnp.float32)
+    out = relu_mask(g, y)
+    assert float(out[0, 0]) == 0.0
+    assert float(out[0, 1]) == 1.0
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    m=st.sampled_from([8, 64, 127]),
+    n=st.sampled_from([16, 100, 128]),
+    keep=st.floats(min_value=0.0, max_value=1.0),
+)
+def test_magnitude_prune_matches_ref(m, n, keep):
+    w = rand(m * n, (m, n))
+    got = magnitude_prune(w, jnp.float32(keep))
+    want = ref_magnitude_prune(w, jnp.float32(keep))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("keep", [0.0, 0.1, 0.3, 0.5, 0.9, 1.0])
+def test_prune_sparsity_tracks_keep(keep):
+    w = rand(99, (64, 128))
+    out = np.asarray(magnitude_prune(w, jnp.float32(keep)))
+    frac_kept = (out != 0).mean()
+    assert abs(frac_kept - keep) < 0.02, (keep, frac_kept)
+
+
+def test_prune_keeps_largest_magnitudes():
+    w = jnp.array([[1.0, -5.0, 0.1, 3.0]], jnp.float32)
+    out = np.asarray(magnitude_prune(w, jnp.float32(0.5)))
+    assert out[0, 1] == -5.0 and out[0, 3] == 3.0
+    assert out[0, 0] == 0.0 and out[0, 2] == 0.0
+
+
+def test_prune_idempotent():
+    w = rand(7, (32, 64))
+    once = magnitude_prune(w, jnp.float32(0.4))
+    twice = magnitude_prune(once, jnp.float32(0.4))
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+def test_grad_through_pruned_dense_is_finite():
+    # RCMP fine-tunes after pruning: gradients through sparse weights must
+    # stay finite.
+    x = rand(1, (8, 64))
+    w = magnitude_prune(rand(2, (64, 32)), jnp.float32(0.3))
+    b = jnp.zeros((32,), jnp.float32)
+
+    def loss(w):
+        return jnp.sum(dense(x, w, b, "relu"))
+
+    g = jax.grad(loss)(w)
+    assert np.isfinite(np.asarray(g)).all()
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.sampled_from([8, 64, 127]),
+    n=st.sampled_from([16, 100, 128]),
+    keep=st.floats(min_value=0.05, max_value=0.95),
+)
+def test_fast_prune_is_threshold_consistent(m, n, keep):
+    """The bisection prune keeps exactly a top-magnitude set of the right size."""
+    from compile.kernels import magnitude_prune_fast
+
+    w = rand(m * n + 1, (m, n))
+    out = np.asarray(magnitude_prune_fast(w, jnp.float32(keep)))
+    aw = np.abs(np.asarray(w))
+    kept = out != 0
+    if kept.any() and (~kept).any():
+        assert aw[kept].min() >= aw[~kept].max() - 1e-7
+    achieved = kept.mean()
+    assert abs(achieved - keep) < 5e-3, (keep, achieved)
+
+
+def test_fast_prune_matches_exact_on_distinct_magnitudes():
+    from compile.kernels import magnitude_prune_fast
+
+    w = jnp.arange(1.0, 129.0, dtype=jnp.float32).reshape(8, 16) * jnp.where(
+        jnp.arange(128).reshape(8, 16) % 2 == 0, 1.0, -1.0
+    )
+    exact = np.asarray(ref_magnitude_prune(w, jnp.float32(0.5)))
+    fast = np.asarray(magnitude_prune_fast(w, jnp.float32(0.5)))
+    np.testing.assert_array_equal(exact, fast)

@@ -1,0 +1,118 @@
+"""Layer-2 correctness: model variants, masked loss, train step, pruning."""
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def spec():
+    return M.VARIANTS["mobilenetv2_c10"]
+
+
+def make_batch(spec, n, seed=0):
+    key = jax.random.PRNGKey(seed)
+    kx, ky = jax.random.split(key)
+    x = jax.random.normal(kx, (spec.batch, spec.features), jnp.float32)
+    y = jnp.where(
+        jnp.arange(spec.batch) < n,
+        jax.random.randint(ky, (spec.batch,), 0, spec.classes).astype(jnp.float32),
+        -1.0,
+    )
+    return x, y
+
+
+def test_variant_catalog_is_consistent():
+    # Proxy parameter ordering mirrors Table 2 of the paper.
+    count = lambda name: M.param_count(M.VARIANTS[name])
+    assert count("resnet34_c10") > count("vgg16_c10")
+    assert count("vgg16_c10") > count("densenet121_c100")
+    assert count("densenet121_c100") > count("mobilenetv2_c10")
+    for spec in M.VARIANTS.values():
+        params = M.init_params(spec, jnp.float32(0))
+        total = sum(int(np.prod(p.shape)) for p in params)
+        assert total == M.param_count(spec), spec.name
+        assert M.flops_per_example(spec) > 0
+
+
+def test_init_is_seed_deterministic(spec):
+    a = M.init_params(spec, jnp.float32(5))
+    b = M.init_params(spec, jnp.float32(5))
+    c = M.init_params(spec, jnp.float32(6))
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+    assert any(
+        not np.array_equal(np.asarray(pa), np.asarray(pc)) for pa, pc in zip(a, c)
+    )
+
+
+def test_predict_shapes_all_variants():
+    for spec in M.VARIANTS.values():
+        params = M.init_params(spec, jnp.float32(1))
+        x = jnp.zeros((spec.batch, spec.features), jnp.float32)
+        logits = M.predict(spec, params, x)
+        assert logits.shape == (spec.batch, spec.classes), spec.name
+
+
+def test_masked_loss_ignores_padding(spec):
+    params = M.init_params(spec, jnp.float32(2))
+    x, y = make_batch(spec, spec.batch // 2, seed=1)
+    # Zero out padded rows' features: loss must not change.
+    mask = (y >= 0)[:, None]
+    x_zeroed = jnp.where(mask, x, 0.0)
+    l1 = M.loss_fn(spec, params, x, y)
+    l2 = M.loss_fn(spec, params, x_zeroed, y)
+    np.testing.assert_allclose(l1, l2, rtol=1e-6)
+    # Gradients likewise.
+    g1 = jax.grad(lambda p: M.loss_fn(spec, p, x, y))(params)
+    g2 = jax.grad(lambda p: M.loss_fn(spec, p, x_zeroed, y))(params)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_all_padded_batch_gives_zero_loss(spec):
+    params = M.init_params(spec, jnp.float32(3))
+    x = jnp.zeros((spec.batch, spec.features), jnp.float32)
+    y = -jnp.ones((spec.batch,), jnp.float32)
+    assert float(M.loss_fn(spec, params, x, y)) == 0.0
+
+
+def test_train_step_reduces_loss(spec):
+    params = list(M.init_params(spec, jnp.float32(4)))
+    x, y = make_batch(spec, spec.batch, seed=2)
+    first = float(M.loss_fn(spec, params, x, y))
+    for _ in range(15):
+        out = M.train_step(spec, params, x, y, jnp.float32(0.05))
+        params = list(out[:-1])
+    last = float(out[-1])
+    assert last < first * 0.7, (first, last)
+
+
+def test_prune_step_only_touches_prunable(spec):
+    params = M.init_params(spec, jnp.float32(5))
+    pruned = M.prune_step(spec, params, jnp.float32(0.3))
+    for p, q in zip(params, pruned):
+        if M.prunable(p):
+            frac = float((np.asarray(q) != 0).mean())
+            assert abs(frac - 0.3) < 0.02
+        else:
+            np.testing.assert_array_equal(np.asarray(p), np.asarray(q))
+
+
+def test_conv_variant_trains():
+    spec = M.VARIANTS["cnn_c10"]
+    params = list(M.init_params(spec, jnp.float32(6)))
+    x, y = make_batch(spec, spec.batch, seed=3)
+    first = float(M.loss_fn(spec, params, x, y))
+    for _ in range(10):
+        out = M.train_step(spec, params, x, y, jnp.float32(0.05))
+        params = list(out[:-1])
+    assert float(out[-1]) < first, "conv variant failed to learn"

@@ -1,0 +1,90 @@
+//! L3 perf microbenches: the coordinator's hot paths.
+//!
+//! These feed EXPERIMENTS.md §Perf — victim selection, partitioning,
+//! lineage bookkeeping, checkpoint-store operations, and the end-to-end
+//! cost-mode round/request loop.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::partition::{Partitioner, Ucdp, Uniform};
+use cause::replacement::{FiboR, ReplacementPolicy};
+use cause::util::bench::{black_box, Bench};
+
+fn main() {
+    let mut b = Bench::new("coordinator-hot-paths");
+
+    // FiboR victim selection (called once per checkpoint store when full).
+    b.iter("fibor_victim_x10k", 50, || {
+        let mut f = FiboR::new();
+        let mut acc = 0usize;
+        for _ in 0..10_000 {
+            acc = acc.wrapping_add(f.victim(64).unwrap());
+        }
+        black_box(acc)
+    });
+
+    // Partitioner assignment over one paper-scale round.
+    let cfg = ExperimentConfig::default();
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.clone(),
+        users: 100,
+        rounds: 10,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.7,
+        seed: 1,
+    });
+    b.iter("ucdp_assign_full_trace", 50, || {
+        let mut p = Ucdp::new(4, 7);
+        let mut n = 0;
+        for r in 1..=10 {
+            n += p.assign(pop.blocks_at(r), 4).len();
+        }
+        black_box(n)
+    });
+    b.iter("uniform_assign_full_trace", 50, || {
+        let mut p = Uniform::new(4);
+        let mut n = 0;
+        for r in 1..=10 {
+            n += p.assign(pop.blocks_at(r), 4).len();
+        }
+        black_box(n)
+    });
+
+    // End-to-end cost-mode runs (the engine loop the sweeps hammer).
+    for (label, v) in [
+        ("engine_cause_paper_default", SystemVariant::Cause),
+        ("engine_sisa_paper_default", SystemVariant::Sisa),
+        ("engine_arcane_paper_default", SystemVariant::Arcane),
+    ] {
+        b.iter(label, 10, || {
+            let cfg = ExperimentConfig::default();
+            let pop = cause::experiments::common::population(&cfg);
+            let trace = RequestTrace::generate(
+                &pop,
+                &TraceConfig::paper_default(cfg.seed ^ 0x7ace).with_prob(cfg.unlearn_prob),
+            );
+            let mut engine = v.build_cost(&cfg).unwrap();
+            engine.run_trace(&pop, &trace).unwrap();
+            black_box(engine.metrics.total_rsn())
+        });
+    }
+
+    // Population + trace generation (dominates sweep setup cost).
+    b.iter("population_generate_50k", 10, || {
+        let pop = EdgePopulation::generate(PopulationConfig {
+            spec: cfg.dataset.clone(),
+            users: 100,
+            rounds: 10,
+            size_sigma: 0.8,
+            label_alpha: 0.5,
+            arrival_prob: 0.7,
+            seed: 2,
+        });
+        black_box(pop.total_samples())
+    });
+
+    b.report();
+}

@@ -1,0 +1,26 @@
+//! Bench target regenerating the paper artifact 'fig5' (see DESIGN.md
+//! per-experiment index). Timing wraps the full experiment; the tables are
+//! printed so `cargo bench` reproduces the paper's rows.
+//!
+//! Scale: smoke by default (CI-friendly); set CAUSE_SCALE=full for the
+//! paper-shaped run.
+
+use cause::experiments::{self, Scale};
+use cause::util::bench::Bench;
+
+fn main() {
+    let scale = match std::env::var("CAUSE_SCALE").as_deref() {
+        Ok("full") => Scale::Full,
+        _ => Scale::Smoke,
+    };
+    let mut b = Bench::new("fig5");
+    let mut tables = Vec::new();
+    b.iter("fig5", 2, || {
+        tables = experiments::run("fig5", scale).expect("experiment fig5");
+    });
+    for t in &tables {
+        println!("{}", t.render());
+    }
+    experiments::report("fig5", &tables).expect("report");
+    b.report();
+}

@@ -1,0 +1,54 @@
+//! Runtime perf microbenches: the PJRT hot path (L1+L2 through L3's eyes).
+//!
+//! Measures per-op latency of train_step / predict / prune executions and
+//! the host<->literal transfer overhead. Requires `make artifacts`; exits
+//! cleanly when they are missing.
+
+use std::rc::Rc;
+
+use cause::runtime::{Runtime, TrainSession};
+use cause::util::bench::{black_box, Bench};
+
+fn main() {
+    let dir = cause::experiments::common::artifacts_dir();
+    if !dir.join("manifest.txt").exists() {
+        println!("bench_runtime: SKIPPED (no artifacts — run `make artifacts`)");
+        return;
+    }
+    let rt = Rc::new(Runtime::new(&dir).expect("runtime"));
+    let mut b = Bench::new("pjrt-runtime");
+
+    for variant in ["mobilenetv2_c10", "vgg16_c10", "resnet34_c10", "cnn_c10"] {
+        if rt.manifest().get(&format!("{variant}/train_step")).is_err() {
+            continue;
+        }
+        let mut sess = TrainSession::init(rt.clone(), variant, 3).expect("init");
+        let bs = sess.batch_size();
+        let fd = sess.feature_dim();
+        let xs = vec![0.1f32; bs * fd];
+        let ys: Vec<f32> = (0..bs).map(|i| (i % 10) as f32).collect();
+
+        b.iter(&format!("{variant}/train_step"), 30, || {
+            black_box(sess.step(&xs, &ys, 0.05).unwrap())
+        });
+        b.iter(&format!("{variant}/predict"), 30, || {
+            black_box(sess.logits(&xs, bs).unwrap().len())
+        });
+        b.iter(&format!("{variant}/prune"), 15, || {
+            sess.prune(0.3).unwrap();
+        });
+    }
+
+    let stats = rt.stats();
+    println!(
+        "cumulative: {} executions | execute {:.2}s | transfer {:.2}s \
+         ({:.1}% of hot path) | {} compiles ({:.2}s)",
+        stats.executions,
+        stats.execute_secs,
+        stats.transfer_secs,
+        100.0 * stats.transfer_secs / (stats.execute_secs + stats.transfer_secs).max(1e-9),
+        stats.compiles,
+        stats.compile_secs
+    );
+    b.report();
+}

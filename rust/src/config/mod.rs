@@ -1,0 +1,207 @@
+//! Configuration system: model profiles (paper Table 2 scale), experiment
+//! configs, and a tiny `key = value` config-file loader for the CLI.
+
+pub mod profiles;
+
+use anyhow::{bail, Result};
+
+use crate::data::catalog::{DatasetSpec, CIFAR10};
+pub use profiles::ModelProfile;
+
+/// Everything a simulated run needs; defaults are the paper's §5.1 setup.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub seed: u64,
+    /// Number of users contributing data (paper: 100, non-IID).
+    pub users: usize,
+    /// Training rounds T (paper: 10).
+    pub rounds: u32,
+    /// Epochs per training round (paper: 80). Affects energy, not RSN.
+    pub epochs_per_round: u32,
+    /// Initial shard count S (paper default: 4).
+    pub shards: usize,
+    /// Device memory budget for sub-model storage, bytes (paper C_m = 2 GB).
+    pub memory_bytes: u64,
+    /// Unlearning request probability ρ_u (paper default: 0.1).
+    pub unlearn_prob: f64,
+    /// Shard-controller γ (min shard fraction) and p (decay) — paper: 0.5.
+    pub sc_gamma: f64,
+    pub sc_p: f64,
+    /// Fraction of prunable weights KEPT by RCMP (paper δ=70% pruned → 0.3).
+    pub prune_keep: f64,
+    pub model: ModelProfile,
+    pub dataset: DatasetSpec,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        Self {
+            seed: 42,
+            users: 100,
+            rounds: 10,
+            epochs_per_round: 80,
+            shards: 4,
+            memory_bytes: 2 * 1024 * 1024 * 1024,
+            unlearn_prob: 0.1,
+            sc_gamma: 0.5,
+            sc_p: 0.5,
+            prune_keep: 0.3,
+            model: profiles::RESNET34,
+            dataset: CIFAR10,
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_shards(mut self, s: usize) -> Self {
+        self.shards = s;
+        self
+    }
+
+    pub fn with_memory_gb(mut self, gb: f64) -> Self {
+        self.memory_bytes = (gb * 1024.0 * 1024.0 * 1024.0) as u64;
+        self
+    }
+
+    pub fn with_unlearn_prob(mut self, p: f64) -> Self {
+        self.unlearn_prob = p;
+        self
+    }
+
+    pub fn with_model(mut self, m: ModelProfile) -> Self {
+        self.model = m;
+        self
+    }
+
+    pub fn with_dataset(mut self, d: DatasetSpec) -> Self {
+        self.dataset = d;
+        self
+    }
+
+    /// Apply a `key = value` assignment (config file / CLI override).
+    pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
+        let v = value.trim();
+        match key.trim() {
+            "seed" => self.seed = v.parse()?,
+            "users" => self.users = v.parse()?,
+            "rounds" => self.rounds = v.parse()?,
+            "epochs_per_round" => self.epochs_per_round = v.parse()?,
+            "shards" => self.shards = v.parse()?,
+            "memory_gb" => {
+                self.memory_bytes = (v.parse::<f64>()? * 1024.0 * 1024.0 * 1024.0) as u64
+            }
+            "unlearn_prob" => self.unlearn_prob = v.parse()?,
+            "sc_gamma" => self.sc_gamma = v.parse()?,
+            "sc_p" => self.sc_p = v.parse()?,
+            "prune_keep" => self.prune_keep = v.parse()?,
+            "model" => {
+                self.model = ModelProfile::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown model '{v}'"))?
+            }
+            "dataset" => {
+                self.dataset = DatasetSpec::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown dataset '{v}'"))?
+                    .clone()
+            }
+            other => bail!("unknown config key '{other}'"),
+        }
+        Ok(())
+    }
+
+    /// Parse a config file: `#` comments, `key = value` lines.
+    pub fn from_file(path: &std::path::Path) -> Result<Self> {
+        let mut cfg = Self::default();
+        let text = std::fs::read_to_string(path)?;
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("{}:{}: expected 'key = value'", path.display(), ln + 1);
+            };
+            cfg.apply(k, v)
+                .map_err(|e| anyhow::anyhow!("{}:{}: {e}", path.display(), ln + 1))?;
+        }
+        Ok(cfg)
+    }
+
+    /// Sanity-check ranges.
+    pub fn validate(&self) -> Result<()> {
+        if self.users == 0 || self.rounds == 0 || self.shards == 0 {
+            bail!("users/rounds/shards must be positive");
+        }
+        if !(0.0..=1.0).contains(&self.unlearn_prob)
+            || !(0.0..=1.0).contains(&self.sc_gamma)
+            || !(0.0..=1.0).contains(&self.prune_keep)
+        {
+            bail!("probabilities/fractions must be in [0,1]");
+        }
+        if self.sc_p < 0.0 {
+            bail!("sc_p must be >= 0");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper() {
+        let c = ExperimentConfig::default();
+        assert_eq!(c.users, 100);
+        assert_eq!(c.rounds, 10);
+        assert_eq!(c.epochs_per_round, 80);
+        assert_eq!(c.shards, 4);
+        assert_eq!(c.memory_bytes, 2 << 30);
+        assert_eq!(c.unlearn_prob, 0.1);
+        assert_eq!(c.sc_gamma, 0.5);
+        assert_eq!(c.sc_p, 0.5);
+        assert!((c.prune_keep - 0.3).abs() < 1e-12);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn apply_overrides() {
+        let mut c = ExperimentConfig::default();
+        c.apply("shards", "16").unwrap();
+        c.apply("memory_gb", "0.5").unwrap();
+        c.apply("model", "vgg16").unwrap();
+        c.apply("dataset", "svhn").unwrap();
+        assert_eq!(c.shards, 16);
+        assert_eq!(c.memory_bytes, 512 * 1024 * 1024);
+        assert_eq!(c.model.name, "vgg16");
+        assert_eq!(c.dataset.name, "svhn");
+        assert!(c.apply("nope", "1").is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("cause_cfg_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("exp.conf");
+        std::fs::write(&p, "# test\nshards = 8\nunlearn_prob = 0.3\n").unwrap();
+        let c = ExperimentConfig::from_file(&p).unwrap();
+        assert_eq!(c.shards, 8);
+        assert_eq!(c.unlearn_prob, 0.3);
+        std::fs::write(&p, "bogus\n").unwrap();
+        assert!(ExperimentConfig::from_file(&p).is_err());
+    }
+
+    #[test]
+    fn validate_rejects_bad_ranges() {
+        let mut c = ExperimentConfig::default();
+        c.unlearn_prob = 1.5;
+        assert!(c.validate().is_err());
+        c = ExperimentConfig::default();
+        c.shards = 0;
+        assert!(c.validate().is_err());
+    }
+}

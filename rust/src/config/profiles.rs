@@ -1,0 +1,150 @@
+//! Model profiles at *paper scale* (Table 2): parameter counts, file sizes,
+//! per-sample compute, and the AOT artifact variant that proxies each model
+//! for real-training experiments.
+//!
+//! The cost/energy accounting path uses these paper-scale numbers so memory
+//! budgets like "C_m = 2 GB" carry the paper's meaning; the PJRT path uses
+//! the proxy artifacts' true sizes (read from the manifest).
+
+/// Static profile of one backbone model.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ModelProfile {
+    pub name: &'static str,
+    /// Parameters, millions (Table 2 "Params (M)" original).
+    pub params_m: f64,
+    /// Dense model file size, MB (Table 2 "Model File Size" original).
+    pub file_mb: f64,
+    /// Seconds to train one epoch over the full corpus on the Jetson-class
+    /// device (derived from Table 2 retrain times; used only to translate
+    /// RSN into seconds for readability).
+    pub train_secs_per_epoch: f64,
+    /// Training samples covered by `train_secs_per_epoch`.
+    pub corpus_samples: f64,
+    /// Fraction of parameters that magnitude pruning can remove (dense
+    /// layers; conv/bn overhead is the remainder). Derived from Table 2:
+    /// at δ=70%, file size drops 58.8–63.6% → prunable ≈ 0.9.
+    pub prunable_frac: f64,
+    /// AOT artifact variant used when this profile trains for real.
+    pub variant_c10: &'static str,
+    pub variant_c100: &'static str,
+}
+
+impl ModelProfile {
+    pub fn by_name(name: &str) -> Option<ModelProfile> {
+        match name {
+            "resnet34" => Some(RESNET34),
+            "vgg16" => Some(VGG16),
+            "densenet121" => Some(DENSENET121),
+            "mobilenetv2" => Some(MOBILENETV2),
+            _ => None,
+        }
+    }
+
+    pub const fn file_bytes(&self) -> u64 {
+        (self.file_mb * 1024.0 * 1024.0) as u64
+    }
+
+    /// Stored size after pruning with keep fraction `keep` (CSR-style
+    /// sparse encoding ≈ value + index per nonzero; Table 2 shows the
+    /// file size shrinking near-linearly with δ).
+    pub fn pruned_bytes(&self, keep: f64) -> u64 {
+        let keep = keep.clamp(0.0, 1.0);
+        let dense = self.file_mb * 1024.0 * 1024.0;
+        let fixed = dense * (1.0 - self.prunable_frac);
+        let kept = dense * self.prunable_frac * keep;
+        (fixed + kept) as u64
+    }
+
+    /// Device seconds to (re)train `samples` for `epochs` epochs.
+    pub fn train_secs(&self, samples: u64, epochs: u32) -> f64 {
+        self.train_secs_per_epoch * (samples as f64 / self.corpus_samples) * epochs as f64
+    }
+}
+
+// Table 2 anchors. Retrain-time entries in Table 2 are for the pruning
+// experiment's epoch counts (Appendix A); we normalize to per-epoch over
+// the training split.
+pub const RESNET34: ModelProfile = ModelProfile {
+    name: "resnet34",
+    params_m: 23.61,
+    file_mb: 85.82,
+    train_secs_per_epoch: 746.37 / 20.0,
+    corpus_samples: 50_000.0,
+    prunable_frac: 0.9,
+    variant_c10: "resnet34_c10",
+    variant_c100: "resnet34_c100",
+};
+
+pub const VGG16: ModelProfile = ModelProfile {
+    name: "vgg16",
+    params_m: 15.05,
+    file_mb: 53.02,
+    train_secs_per_epoch: 750.31 / 30.0,
+    corpus_samples: 50_000.0,
+    prunable_frac: 0.95,
+    variant_c10: "vgg16_c10",
+    variant_c100: "vgg16_c100",
+};
+
+pub const DENSENET121: ModelProfile = ModelProfile {
+    name: "densenet121",
+    params_m: 7.14,
+    file_mb: 26.24,
+    train_secs_per_epoch: 957.20 / 20.0,
+    corpus_samples: 50_000.0,
+    prunable_frac: 0.88,
+    variant_c10: "densenet121_c100", // paper pairs DenseNet with CIFAR-100
+    variant_c100: "densenet121_c100",
+};
+
+pub const MOBILENETV2: ModelProfile = ModelProfile {
+    name: "mobilenetv2",
+    params_m: 2.18,
+    file_mb: 7.71,
+    train_secs_per_epoch: 212.42 / 20.0,
+    corpus_samples: 50_000.0,
+    prunable_frac: 0.9,
+    variant_c10: "mobilenetv2_c10",
+    variant_c100: "mobilenetv2_c10",
+};
+
+/// All four profiles in the paper's comparison order.
+pub const ALL_MODELS: [ModelProfile; 4] = [RESNET34, VGG16, DENSENET121, MOBILENETV2];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_ordering_matches_paper() {
+        assert!(RESNET34.file_mb > VGG16.file_mb);
+        assert!(VGG16.file_mb > DENSENET121.file_mb);
+        assert!(DENSENET121.file_mb > MOBILENETV2.file_mb);
+    }
+
+    #[test]
+    fn pruning_shrinks_linearly() {
+        let full = RESNET34.pruned_bytes(1.0);
+        let p70 = RESNET34.pruned_bytes(0.3);
+        let p0 = RESNET34.pruned_bytes(0.0);
+        assert_eq!(full, RESNET34.file_bytes());
+        // Table 2: δ=70% → ~63.6% size reduction for ResNet-34.
+        let reduction = 1.0 - p70 as f64 / full as f64;
+        assert!((reduction - 0.63).abs() < 0.02, "reduction {reduction}");
+        assert!(p0 < p70);
+    }
+
+    #[test]
+    fn train_time_scales_with_samples_and_epochs() {
+        let t1 = MOBILENETV2.train_secs(50_000, 1);
+        let t2 = MOBILENETV2.train_secs(25_000, 2);
+        assert!((t1 - t2).abs() < 1e-9);
+        assert!((t1 - 212.42 / 20.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lookup() {
+        assert_eq!(ModelProfile::by_name("vgg16").unwrap().name, "vgg16");
+        assert!(ModelProfile::by_name("alexnet").is_none());
+    }
+}

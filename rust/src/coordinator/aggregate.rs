@@ -1,0 +1,92 @@
+//! Result aggregation: label-based majority vote over sub-models
+//! (the paper's aggregation strategy, same as SISA/ARCANE).
+
+/// Majority vote over per-model predicted labels for one example.
+/// Ties break toward the lowest label (deterministic).
+pub fn majority_vote(predictions: &[usize], classes: usize) -> usize {
+    let mut counts = vec![0u32; classes];
+    for &p in predictions {
+        if p < classes {
+            counts[p] += 1;
+        }
+    }
+    counts
+        .iter()
+        .enumerate()
+        .max_by_key(|(label, c)| (**c, std::cmp::Reverse(*label)))
+        .map(|(label, _)| label)
+        .unwrap_or(0)
+}
+
+/// Argmax of one logits row.
+pub fn argmax(logits: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, v) in logits.iter().enumerate() {
+        if *v > logits[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Ensemble accuracy: per-model logits (model × example × class collapsed
+/// to labels), majority-voted against ground truth.
+pub fn ensemble_accuracy(
+    per_model_labels: &[Vec<usize>],
+    truth: &[f32],
+    classes: usize,
+) -> f64 {
+    if per_model_labels.is_empty() || truth.is_empty() {
+        return 0.0;
+    }
+    let n = truth.len();
+    let mut correct = 0usize;
+    let mut votes = Vec::with_capacity(per_model_labels.len());
+    for i in 0..n {
+        votes.clear();
+        for m in per_model_labels {
+            votes.push(m[i]);
+        }
+        if majority_vote(&votes, classes) == truth[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn majority_picks_mode() {
+        assert_eq!(majority_vote(&[1, 1, 2], 3), 1);
+        assert_eq!(majority_vote(&[0, 2, 2, 2], 3), 2);
+    }
+
+    #[test]
+    fn tie_breaks_low() {
+        assert_eq!(majority_vote(&[0, 1], 2), 0);
+        assert_eq!(majority_vote(&[2, 1], 3), 1);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[0.1, 0.9, 0.9]), 1);
+        assert_eq!(argmax(&[3.0]), 0);
+    }
+
+    #[test]
+    fn ensemble_accuracy_counts() {
+        // Two models; model 0 is right on both, model 1 wrong on second.
+        let labels = vec![vec![0, 1], vec![0, 0]];
+        let acc = ensemble_accuracy(&labels, &[0.0, 1.0], 2);
+        // Example 0: votes {0,0} -> 0 correct. Example 1: {1,0} tie -> 0, wrong.
+        assert!((acc - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn out_of_range_votes_ignored() {
+        assert_eq!(majority_vote(&[9, 9, 1], 3), 1);
+    }
+}

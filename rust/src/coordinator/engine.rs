@@ -1,0 +1,344 @@
+//! The exact-unlearning engine — Algorithm 3 of the paper, generalized so
+//! CAUSE and every baseline are configuration points of the same loop.
+//!
+//! Per round t (Algorithm 3 lines 1–5):
+//!   1. the shard controller yields S_t;
+//!   2. the partitioner assigns the round's new blocks to shard lineages;
+//!   3. every touched lineage trains incrementally on its new segment
+//!      (with the system's pruning schedule interleaved — RCMP);
+//!   4. the resulting sub-model checkpoint is stored per the replacement
+//!      policy (FiboR for CAUSE; reject-when-full for SISA/ARCANE/OMP).
+//!
+//! Per unlearning request (lines 6–12):
+//!   1. the affected lineages and their earliest poisoned segments are
+//!      located through the block index;
+//!   2. the unlearned samples are removed from the lineage bookkeeping;
+//!   3. every stored checkpoint containing poisoned data is deleted
+//!      (line 11);
+//!   4. each affected lineage retrains from the newest surviving
+//!      checkpoint that predates the poison (line 8) — or from scratch —
+//!      and the retrained model is stored again via the policy (line 12);
+//!   5. RSN += samples replayed — the paper's headline metric.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::lineage::LineageSet;
+use crate::data::dataset::EdgePopulation;
+use crate::data::trace::{RequestTrace, UnlearnRequest};
+use crate::energy::EnergyModel;
+use crate::memory::{Checkpoint, ModelStore, StoreEvent};
+use crate::metrics::RunMetrics;
+use crate::partition::Partitioner;
+use crate::pruning::PruneSchedule;
+use crate::shard_controller::ShardController;
+use crate::training::Trainer;
+
+/// When the engine measures ensemble accuracy (PJRT backend only).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EvalPolicy {
+    Never,
+    FinalRound,
+    EveryRound,
+}
+
+/// Outcome of one unlearning request.
+#[derive(Clone, Debug, Default)]
+pub struct UnlearnOutcome {
+    pub rsn: u64,
+    pub lineages_retrained: usize,
+    pub warm_starts: usize,
+    pub scratch_starts: usize,
+    pub ckpts_invalidated: usize,
+}
+
+/// Outcome of one training round.
+#[derive(Clone, Debug, Default)]
+pub struct RoundReport {
+    pub round: u32,
+    pub shards_active: usize,
+    pub lineages_trained: Vec<usize>,
+    pub new_samples: u64,
+}
+
+/// The unlearning engine.
+pub struct Engine {
+    pub cfg: ExperimentConfig,
+    partitioner: Box<dyn Partitioner>,
+    sc: ShardController,
+    store: ModelStore,
+    lineages: LineageSet,
+    trainer: Box<dyn Trainer>,
+    schedule: PruneSchedule,
+    energy: EnergyModel,
+    pub metrics: RunMetrics,
+    round: u32,
+    eval: EvalPolicy,
+    /// Lineages that ever received data (eligible for serving/eval).
+    active: Vec<bool>,
+}
+
+impl Engine {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        cfg: ExperimentConfig,
+        partitioner: Box<dyn Partitioner>,
+        sc: ShardController,
+        store: ModelStore,
+        trainer: Box<dyn Trainer>,
+        schedule: PruneSchedule,
+        eval: EvalPolicy,
+    ) -> Self {
+        let energy = EnergyModel::for_model(&cfg.model);
+        let max = cfg.shards;
+        Self {
+            cfg,
+            partitioner,
+            sc,
+            store,
+            lineages: LineageSet::new(max),
+            trainer,
+            schedule,
+            energy,
+            metrics: RunMetrics::default(),
+            round: 0,
+            eval,
+            active: vec![false; max],
+        }
+    }
+
+    pub fn round(&self) -> u32 {
+        self.round
+    }
+
+    pub fn store(&self) -> &ModelStore {
+        &self.store
+    }
+
+    pub fn lineages(&self) -> &LineageSet {
+        &self.lineages
+    }
+
+    pub fn active_lineages(&self) -> Vec<usize> {
+        self.active
+            .iter()
+            .enumerate()
+            .filter(|(_, a)| **a)
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Execute one training round over the population's new data.
+    pub fn run_round(&mut self, pop: &EdgePopulation) -> Result<RoundReport> {
+        self.round += 1;
+        let t = self.round;
+        let s_t = self.sc.shards_at(t);
+        let blocks = pop.blocks_at(t);
+        let placements = self.partitioner.assign(blocks, s_t);
+        debug_assert!(
+            crate::partition::coverage_ok(blocks, &placements, s_t).is_ok(),
+            "partitioner broke the coverage contract"
+        );
+        let touched =
+            self.lineages.add_round(t, &placements, |b| pop.block(b).unwrap().user);
+
+        let mut new_samples = 0;
+        for &lineage in &touched {
+            self.active[lineage] = true;
+            let l = self.lineages.get(lineage);
+            let covered = l.segment_count() - 1;
+            let seg_blocks = l.replay_blocks(covered); // just the new segment
+            new_samples += seg_blocks.iter().map(|(_, n)| n).sum::<u64>();
+            let out = self.trainer.run(
+                lineage,
+                &seg_blocks,
+                self.cfg.epochs_per_round,
+                self.schedule,
+            )?;
+            self.metrics.prunes += out.prune_ops;
+            self.metrics.energy_joules += self.energy.prune_joules(out.prune_ops);
+            self.store_snapshot(lineage, t)?;
+        }
+
+        // Open this round's metric slots.
+        self.metrics.rsn_by_round.push(0);
+        self.metrics.requests_by_round.push(0);
+        let acc = match self.eval {
+            EvalPolicy::EveryRound => self.evaluate()?,
+            EvalPolicy::FinalRound if t == self.cfg.rounds => self.evaluate()?,
+            _ => None,
+        };
+        self.metrics.accuracy_by_round.push(acc);
+
+        Ok(RoundReport {
+            round: t,
+            shards_active: s_t,
+            lineages_trained: touched,
+            new_samples,
+        })
+    }
+
+    /// Snapshot the lineage's current model and store it (Algorithm 2).
+    fn store_snapshot(&mut self, lineage: usize, round: u32) -> Result<()> {
+        let cover = self.lineages.get(lineage).segment_count();
+        self.store_snapshot_with_coverage(lineage, round, cover)
+    }
+
+    /// Snapshot with an explicit coverage (retrained models cover only
+    /// through the poisoned segment).
+    fn store_snapshot_with_coverage(
+        &mut self,
+        lineage: usize,
+        round: u32,
+        covered_segments: u32,
+    ) -> Result<()> {
+        let (size, params) = self.trainer.snapshot(lineage)?;
+        let id = self.store.next_id();
+        let ckpt = Checkpoint {
+            id,
+            lineage,
+            round,
+            covered_segments,
+            size_bytes: size,
+            params,
+        };
+        match self.store.store(ckpt) {
+            StoreEvent::Stored { .. } => self.metrics.ckpts_stored += 1,
+            StoreEvent::Replaced { .. } => {
+                self.metrics.ckpts_stored += 1;
+                self.metrics.ckpts_replaced += 1;
+            }
+            StoreEvent::Rejected => self.metrics.ckpts_rejected += 1,
+        }
+        Ok(())
+    }
+
+    /// Serve one unlearning request (Algorithm 3 lines 7–12).
+    pub fn process_request(&mut self, req: &UnlearnRequest) -> Result<UnlearnOutcome> {
+        let mut outcome = UnlearnOutcome::default();
+
+        // 1. Remove the samples and collect each affected lineage's
+        //    poisoned segment indices.
+        let mut poisoned: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+        for (block, n) in &req.parts {
+            for (seg_ref, removed) in self.lineages.remove_samples(*block, *n) {
+                if removed == 0 {
+                    continue;
+                }
+                let segs = poisoned.entry(seg_ref.lineage).or_default();
+                if !segs.contains(&seg_ref.segment) {
+                    segs.push(seg_ref.segment);
+                }
+            }
+        }
+
+        // 2. For every poisoned sub-model version, retrain from the newest
+        //    surviving checkpoint that predates it (Alg. 3 line 8: "the
+        //    sub-model most closely to the unlearned data before D_r is
+        //    learned"), replaying through the poisoned segment. Later
+        //    sub-model versions stay in place — the paper's retraining
+        //    accounting (see DESIGN.md §Key-decisions).
+        for (lineage, mut segs) in poisoned {
+            segs.sort_unstable();
+            outcome.lineages_retrained += 1;
+            let mut last_clean_cover = 0;
+            for q in segs {
+                let max_cover = q as u32; // checkpoint must cover < segment q
+                let clean_cover = q as u32 + 1; // retrained version's coverage
+                let best = self
+                    .store
+                    .best_checkpoint(lineage, max_cover)
+                    .map(|c| (c.covered_segments, c.params.clone()));
+
+                // Algorithm 3 line 11: delete the sub-model version that
+                // learned the unlearned data; the retrained clean model
+                // replaces it.
+                outcome.ckpts_invalidated += self.store.invalidate(|c| {
+                    c.lineage == lineage && c.covered_segments == clean_cover
+                });
+
+                let (covered, warm_params) = match best {
+                    Some((cov, params)) => {
+                        outcome.warm_starts += 1;
+                        (cov, params)
+                    }
+                    None => {
+                        outcome.scratch_starts += 1;
+                        (0, None)
+                    }
+                };
+                let replay =
+                    self.lineages.get(lineage).replay_range(covered, clean_cover);
+                let rsn: u64 = replay.iter().map(|(_, n)| n).sum();
+                outcome.rsn += rsn;
+
+                self.trainer.reset(lineage, warm_params.as_deref())?;
+                if !replay.is_empty() {
+                    let out = self.trainer.run(
+                        lineage,
+                        &replay,
+                        self.cfg.epochs_per_round,
+                        self.schedule,
+                    )?;
+                    self.metrics.prunes += out.prune_ops;
+                    self.metrics.energy_joules += self.energy.prune_joules(out.prune_ops);
+                }
+                // Algorithm 3 line 12: store the retrained sub-model with
+                // its true coverage (clean through segment q).
+                self.store_snapshot_with_coverage(lineage, self.round, clean_cover)?;
+                last_clean_cover = last_clean_cover.max(clean_cover);
+            }
+            // Serving continuity: the deployed sub-model stays the newest
+            // version (the paper keeps later sub-model versions in place —
+            // see DESIGN.md §Key-decisions); the retrain above refreshed
+            // the *poisoned* version's checkpoint.
+            let newest = self
+                .store
+                .latest(lineage)
+                .filter(|c| c.covered_segments > last_clean_cover)
+                .map(|c| c.params.clone());
+            if let Some(params) = newest {
+                self.trainer.reset(lineage, params.as_deref())?;
+            }
+        }
+
+        // 3. Account.
+        self.metrics.energy_joules +=
+            self.energy.retrain_joules(outcome.rsn, self.cfg.epochs_per_round);
+        if let Some(last) = self.metrics.rsn_by_round.last_mut() {
+            *last += outcome.rsn;
+        }
+        if let Some(last) = self.metrics.requests_by_round.last_mut() {
+            *last += 1;
+        }
+        self.metrics.warm_retrains += outcome.warm_starts as u64;
+        self.metrics.scratch_retrains += outcome.scratch_starts as u64;
+        self.metrics.lineages_retrained += outcome.lineages_retrained as u64;
+        self.metrics.ckpts_invalidated += outcome.ckpts_invalidated as u64;
+        Ok(outcome)
+    }
+
+    /// Ensemble accuracy of the active lineages (real backend only).
+    pub fn evaluate(&mut self) -> Result<Option<f64>> {
+        let active = self.active_lineages();
+        self.trainer.evaluate(&active)
+    }
+
+    /// Drive the full trace: T rounds, serving each round's requests FCFS.
+    pub fn run_trace(
+        &mut self,
+        pop: &EdgePopulation,
+        trace: &RequestTrace,
+    ) -> Result<&RunMetrics> {
+        for t in 1..=self.cfg.rounds.min(pop.rounds()) {
+            self.run_round(pop)?;
+            for req in trace.at(t) {
+                self.process_request(req)?;
+            }
+            let _ = t;
+        }
+        Ok(&self.metrics)
+    }
+}

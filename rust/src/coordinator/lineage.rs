@@ -1,0 +1,347 @@
+//! Shard lineages: which sub-model learned which data, in what order.
+//!
+//! A *lineage* is one shard's training history — a sequence of segments,
+//! one per round in which the shard received data. A checkpoint taken after
+//! segment k covers segments `0..=k` (incremental training, the paper's
+//! Fig. 1 semantics: M2 is M1 plus D2). Unlearning data that entered at
+//! segment p invalidates every checkpoint covering p and restarts training
+//! from the newest stored checkpoint covering `< p` segments.
+//!
+//! The lineage set also maintains the block → (lineage, segment) index the
+//! engine uses to route unlearning requests, and the per-placement sample
+//! counts that shrink as data is removed (so RSN never counts samples that
+//! were already forgotten).
+
+use std::collections::BTreeMap;
+
+use crate::data::dataset::{BlockId, UserId};
+use crate::partition::Placement;
+
+/// One block's placement inside a segment, with its *current* sample count
+/// (decreases as unlearning requests remove data).
+#[derive(Clone, Debug)]
+pub struct SegPlacement {
+    pub block: BlockId,
+    pub user: UserId,
+    pub samples: u64,
+}
+
+/// One round's worth of data added to a lineage.
+#[derive(Clone, Debug)]
+pub struct Segment {
+    /// Round at which this data was learned (1-based).
+    pub round: u32,
+    pub placements: Vec<SegPlacement>,
+}
+
+impl Segment {
+    pub fn samples(&self) -> u64 {
+        self.placements.iter().map(|p| p.samples).sum()
+    }
+}
+
+/// Where a block's data lives: lineage + segment index within it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SegmentRef {
+    pub lineage: usize,
+    pub segment: usize,
+}
+
+/// One shard's training history.
+#[derive(Clone, Debug, Default)]
+pub struct Lineage {
+    pub segments: Vec<Segment>,
+}
+
+impl Lineage {
+    /// Samples that must be replayed when retraining from a checkpoint
+    /// covering `covered` segments (i.e. segments `covered..`).
+    pub fn replay_samples(&self, covered: u32) -> u64 {
+        self.segments
+            .iter()
+            .skip(covered as usize)
+            .map(|s| s.samples())
+            .sum()
+    }
+
+    /// Current total samples.
+    pub fn total_samples(&self) -> u64 {
+        self.replay_samples(0)
+    }
+
+    pub fn segment_count(&self) -> u32 {
+        self.segments.len() as u32
+    }
+
+    /// The replay data (block, samples) from segment `covered` onward.
+    pub fn replay_blocks(&self, covered: u32) -> Vec<(BlockId, u64)> {
+        self.replay_range(covered, self.segment_count())
+    }
+
+    /// Replay data for segments `covered..through` (exclusive upper bound).
+    ///
+    /// This is the paper's retraining window: from the newest surviving
+    /// checkpoint up to (and including) the poisoned segment — later
+    /// sub-model versions are left in place (see DESIGN.md §Key-decisions
+    /// on the paper's retraining accounting).
+    pub fn replay_range(&self, covered: u32, through: u32) -> Vec<(BlockId, u64)> {
+        self.segments
+            .iter()
+            .take(through as usize)
+            .skip(covered as usize)
+            .flat_map(|s| s.placements.iter())
+            .filter(|p| p.samples > 0)
+            .map(|p| (p.block, p.samples))
+            .collect()
+    }
+
+    /// Samples in segments `covered..through`.
+    pub fn replay_range_samples(&self, covered: u32, through: u32) -> u64 {
+        self.segments
+            .iter()
+            .take(through as usize)
+            .skip(covered as usize)
+            .map(|s| s.samples())
+            .sum()
+    }
+}
+
+/// All lineages plus the block placement index.
+#[derive(Clone, Debug)]
+pub struct LineageSet {
+    lineages: Vec<Lineage>,
+    /// block -> all its placements (class-based partitioning splits blocks).
+    index: BTreeMap<BlockId, Vec<SegmentRef>>,
+}
+
+impl LineageSet {
+    pub fn new(max_shards: usize) -> Self {
+        Self { lineages: vec![Lineage::default(); max_shards], index: BTreeMap::new() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.lineages.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.lineages.is_empty()
+    }
+
+    pub fn get(&self, l: usize) -> &Lineage {
+        &self.lineages[l]
+    }
+
+    /// Record one round's placements; returns the lineages that received
+    /// data this round (and must be (re)trained + checkpointed).
+    pub fn add_round(
+        &mut self,
+        round: u32,
+        placements: &[Placement],
+        user_of: impl Fn(BlockId) -> UserId,
+    ) -> Vec<usize> {
+        let mut touched: BTreeMap<usize, Vec<SegPlacement>> = BTreeMap::new();
+        for p in placements {
+            touched.entry(p.shard).or_default().push(SegPlacement {
+                block: p.block,
+                user: user_of(p.block),
+                samples: p.samples,
+            });
+        }
+        let mut out = Vec::with_capacity(touched.len());
+        for (lineage, placs) in touched {
+            let seg_idx = self.lineages[lineage].segments.len();
+            for sp in &placs {
+                self.index
+                    .entry(sp.block)
+                    .or_default()
+                    .push(SegmentRef { lineage, segment: seg_idx });
+            }
+            self.lineages[lineage].segments.push(Segment { round, placements: placs });
+            out.push(lineage);
+        }
+        out
+    }
+
+    /// All placements of a block.
+    pub fn placements_of(&self, block: BlockId) -> &[SegmentRef] {
+        self.index.get(&block).map(|v| v.as_slice()).unwrap_or(&[])
+    }
+
+    /// Remove `n` samples of `block` (distributed across its placements
+    /// proportionally, largest-first for the remainder). Returns the
+    /// affected (lineage, segment) pairs with the amount actually removed.
+    pub fn remove_samples(&mut self, block: BlockId, n: u64) -> Vec<(SegmentRef, u64)> {
+        let refs = self.index.get(&block).cloned().unwrap_or_default();
+        if refs.is_empty() || n == 0 {
+            return vec![];
+        }
+        // Current sizes of each placement of this block.
+        let mut sizes: Vec<u64> = refs
+            .iter()
+            .map(|r| {
+                self.lineages[r.lineage].segments[r.segment]
+                    .placements
+                    .iter()
+                    .filter(|p| p.block == block)
+                    .map(|p| p.samples)
+                    .sum()
+            })
+            .collect();
+        let total: u64 = sizes.iter().sum();
+        let n = n.min(total);
+        if n == 0 {
+            return vec![];
+        }
+        // Proportional split, remainder to the largest placements.
+        let mut take: Vec<u64> =
+            sizes.iter().map(|s| (n as u128 * *s as u128 / total as u128) as u64).collect();
+        let mut assigned: u64 = take.iter().sum();
+        let mut order: Vec<usize> = (0..refs.len()).collect();
+        order.sort_by_key(|i| std::cmp::Reverse(sizes[*i] - take[*i]));
+        let mut oi = 0;
+        while assigned < n {
+            let i = order[oi % order.len()];
+            if take[i] < sizes[i] {
+                take[i] += 1;
+                assigned += 1;
+            }
+            oi += 1;
+        }
+        // Apply.
+        let mut out = Vec::new();
+        for (i, r) in refs.iter().enumerate() {
+            if take[i] == 0 {
+                continue;
+            }
+            let mut left = take[i];
+            for p in &mut self.lineages[r.lineage].segments[r.segment].placements {
+                if p.block == block && left > 0 {
+                    let cut = left.min(p.samples);
+                    p.samples -= cut;
+                    left -= cut;
+                }
+            }
+            debug_assert_eq!(left, 0);
+            out.push((*r, take[i]));
+            sizes[i] -= take[i];
+        }
+        out
+    }
+
+    /// Total samples currently held across all lineages.
+    pub fn total_samples(&self) -> u64 {
+        self.lineages.iter().map(|l| l.total_samples()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::{BlockId, UserId};
+    use crate::partition::Placement;
+
+    fn place(block: u64, shard: usize, samples: u64) -> Placement {
+        Placement { block: BlockId(block), shard, samples }
+    }
+
+    #[test]
+    fn add_round_builds_segments_and_index() {
+        let mut ls = LineageSet::new(3);
+        let touched = ls.add_round(
+            1,
+            &[place(0, 0, 100), place(1, 0, 50), place(2, 2, 30)],
+            |_| UserId(0),
+        );
+        assert_eq!(touched, vec![0, 2]);
+        assert_eq!(ls.get(0).total_samples(), 150);
+        assert_eq!(ls.get(1).total_samples(), 0);
+        assert_eq!(ls.get(2).total_samples(), 30);
+        assert_eq!(ls.placements_of(BlockId(0)).len(), 1);
+    }
+
+    #[test]
+    fn replay_counts_suffix_segments() {
+        let mut ls = LineageSet::new(1);
+        ls.add_round(1, &[place(0, 0, 100)], |_| UserId(0));
+        ls.add_round(2, &[place(1, 0, 40)], |_| UserId(0));
+        ls.add_round(3, &[place(2, 0, 60)], |_| UserId(0));
+        let l = ls.get(0);
+        assert_eq!(l.segment_count(), 3);
+        assert_eq!(l.replay_samples(0), 200);
+        assert_eq!(l.replay_samples(1), 100);
+        assert_eq!(l.replay_samples(3), 0);
+        assert_eq!(l.replay_blocks(1), vec![(BlockId(1), 40), (BlockId(2), 60)]);
+    }
+
+    #[test]
+    fn remove_samples_shrinks_and_reports() {
+        let mut ls = LineageSet::new(1);
+        ls.add_round(1, &[place(0, 0, 100)], |_| UserId(0));
+        let removed = ls.remove_samples(BlockId(0), 30);
+        assert_eq!(removed.len(), 1);
+        assert_eq!(removed[0].1, 30);
+        assert_eq!(ls.get(0).total_samples(), 70);
+        // Removing more than remains clamps.
+        let removed = ls.remove_samples(BlockId(0), 1000);
+        assert_eq!(removed[0].1, 70);
+        assert_eq!(ls.get(0).total_samples(), 0);
+        // Unknown block: no-op.
+        assert!(ls.remove_samples(BlockId(9), 5).is_empty());
+    }
+
+    #[test]
+    fn split_blocks_remove_proportionally() {
+        let mut ls = LineageSet::new(2);
+        // Class-based style: block 0 split 80/20 across two shards.
+        ls.add_round(1, &[place(0, 0, 80), place(0, 1, 20)], |_| UserId(0));
+        let removed = ls.remove_samples(BlockId(0), 50);
+        let total_removed: u64 = removed.iter().map(|(_, n)| n).sum();
+        assert_eq!(total_removed, 50);
+        // Proportional-ish: shard 0 loses ~40, shard 1 ~10.
+        let by_lineage: std::collections::BTreeMap<usize, u64> =
+            removed.iter().map(|(r, n)| (r.lineage, *n)).collect();
+        assert!(by_lineage[&0] >= 35 && by_lineage[&0] <= 45, "{by_lineage:?}");
+        assert_eq!(ls.total_samples(), 50);
+    }
+
+    #[test]
+    fn prop_removal_conserves_totals() {
+        use crate::testkit::forall;
+        forall(
+            0x11EA6E,
+            100,
+            |rng, size| {
+                let blocks = 1 + (10.0 * size) as usize;
+                let shards = rng.range(1, 5);
+                let placements: Vec<(u64, usize, u64)> = (0..blocks)
+                    .map(|b| (b as u64, rng.range(0, shards), rng.range(1, 200) as u64))
+                    .collect();
+                let removals: Vec<(u64, u64)> = (0..blocks * 2)
+                    .map(|_| {
+                        (rng.range(0, blocks) as u64, rng.range(0, 300) as u64)
+                    })
+                    .collect();
+                (shards, placements, removals)
+            },
+            |(shards, placements, removals)| {
+                let mut ls = LineageSet::new(*shards);
+                let ps: Vec<Placement> =
+                    placements.iter().map(|(b, s, n)| place(*b, *s, *n)).collect();
+                ls.add_round(1, &ps, |_| UserId(0));
+                let mut expected: i64 = placements.iter().map(|(_, _, n)| *n as i64).sum();
+                for (b, n) in removals {
+                    let removed: u64 =
+                        ls.remove_samples(BlockId(*b), *n).iter().map(|(_, k)| k).sum();
+                    expected -= removed as i64;
+                    if ls.total_samples() as i64 != expected {
+                        return Err(format!(
+                            "total {} != expected {expected}",
+                            ls.total_samples()
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

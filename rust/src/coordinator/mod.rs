@@ -1,0 +1,11 @@
+//! The Layer-3 coordinator: shard lineages, the unlearning engine, system
+//! presets (CAUSE and all baselines), and result aggregation.
+
+pub mod aggregate;
+pub mod engine;
+pub mod lineage;
+pub mod system;
+
+pub use engine::{Engine, RoundReport, UnlearnOutcome};
+pub use lineage::{Lineage, LineageSet, SegmentRef};
+pub use system::{CauseSystem, SystemVariant};

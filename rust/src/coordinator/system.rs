@@ -1,0 +1,223 @@
+//! System presets: CAUSE and every benchmark system as configuration
+//! points of the shared [`Engine`].
+//!
+//! | System      | Partition   | Replacement | Pruning            | SC  |
+//! |-------------|-------------|-------------|--------------------|-----|
+//! | CAUSE       | UCDP        | FiboR       | RCMP δ=70% (iter.) | on  |
+//! | CAUSE-No-SC | UCDP        | FiboR       | RCMP δ=70%         | off |
+//! | CAUSE-U     | uniform     | FiboR       | RCMP δ=70%         | on  |
+//! | CAUSE-C     | class-based | FiboR       | RCMP δ=70%         | on  |
+//! | SISA        | uniform     | none        | none               | off |
+//! | ARCANE      | class-based | none        | none               | off |
+//! | OMP-70      | uniform     | none        | one-shot δ=70%     | off |
+//! | OMP-95      | uniform     | none        | one-shot δ=95%     | off |
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::{Engine, EvalPolicy};
+use crate::memory::ModelStore;
+use crate::partition::{ClassBased, Partitioner, Ucdp, Uniform};
+use crate::pruning::PruneSchedule;
+use crate::replacement::{FiboR, NoReplace, RandomReplace, ReplacementPolicy};
+use crate::shard_controller::ShardController;
+use crate::training::{CostTrainer, Trainer};
+
+/// The systems compared throughout §5 of the paper.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum SystemVariant {
+    Cause,
+    CauseNoSc,
+    CauseU,
+    CauseC,
+    /// CAUSE with random replacement instead of FiboR (§4.4 remark).
+    CauseRandomReplace,
+    Sisa,
+    Arcane,
+    Omp70,
+    Omp95,
+}
+
+impl SystemVariant {
+    pub fn display(&self) -> &'static str {
+        match self {
+            SystemVariant::Cause => "CAUSE",
+            SystemVariant::CauseNoSc => "CAUSE-No-SC",
+            SystemVariant::CauseU => "CAUSE-U",
+            SystemVariant::CauseC => "CAUSE-C",
+            SystemVariant::CauseRandomReplace => "CAUSE-Rand",
+            SystemVariant::Sisa => "SISA",
+            SystemVariant::Arcane => "ARCANE",
+            SystemVariant::Omp70 => "OMP-70",
+            SystemVariant::Omp95 => "OMP-95",
+        }
+    }
+
+    /// The five headline systems of the evaluation section.
+    pub const COMPARED: [SystemVariant; 5] = [
+        SystemVariant::Cause,
+        SystemVariant::Sisa,
+        SystemVariant::Arcane,
+        SystemVariant::Omp70,
+        SystemVariant::Omp95,
+    ];
+
+    pub fn by_name(name: &str) -> Option<SystemVariant> {
+        match name.to_ascii_lowercase().as_str() {
+            "cause" => Some(SystemVariant::Cause),
+            "cause-no-sc" | "cause_no_sc" => Some(SystemVariant::CauseNoSc),
+            "cause-u" | "cause_u" => Some(SystemVariant::CauseU),
+            "cause-c" | "cause_c" => Some(SystemVariant::CauseC),
+            "cause-rand" | "cause_rand" => Some(SystemVariant::CauseRandomReplace),
+            "sisa" => Some(SystemVariant::Sisa),
+            "arcane" => Some(SystemVariant::Arcane),
+            "omp-70" | "omp70" => Some(SystemVariant::Omp70),
+            "omp-95" | "omp95" => Some(SystemVariant::Omp95),
+            _ => None,
+        }
+    }
+
+    /// Pruning schedule of this system, given the config's δ for CAUSE.
+    pub fn schedule(&self, cfg: &ExperimentConfig) -> PruneSchedule {
+        match self {
+            SystemVariant::Cause
+            | SystemVariant::CauseNoSc
+            | SystemVariant::CauseU
+            | SystemVariant::CauseC
+            | SystemVariant::CauseRandomReplace => {
+                PruneSchedule::Iterative { keep: cfg.prune_keep, steps: 4 }
+            }
+            SystemVariant::Sisa | SystemVariant::Arcane => PruneSchedule::None,
+            SystemVariant::Omp70 => PruneSchedule::OneShot { keep: 0.3 },
+            SystemVariant::Omp95 => PruneSchedule::OneShot { keep: 0.05 },
+        }
+    }
+
+    fn partitioner(&self, cfg: &ExperimentConfig) -> Box<dyn Partitioner> {
+        match self {
+            SystemVariant::Cause
+            | SystemVariant::CauseNoSc
+            | SystemVariant::CauseRandomReplace => {
+                Box::new(Ucdp::new(cfg.shards, cfg.seed ^ 0x0c0de))
+            }
+            SystemVariant::CauseU | SystemVariant::Sisa | SystemVariant::Omp70
+            | SystemVariant::Omp95 => Box::new(Uniform::new(cfg.shards)),
+            SystemVariant::CauseC | SystemVariant::Arcane => {
+                Box::new(ClassBased::new(cfg.dataset.classes))
+            }
+        }
+    }
+
+    fn replacement(&self, cfg: &ExperimentConfig) -> Box<dyn ReplacementPolicy> {
+        match self {
+            SystemVariant::Cause
+            | SystemVariant::CauseNoSc
+            | SystemVariant::CauseU
+            | SystemVariant::CauseC => Box::new(FiboR::new()),
+            SystemVariant::CauseRandomReplace => {
+                Box::new(RandomReplace::new(cfg.seed ^ 0x7a7d))
+            }
+            SystemVariant::Sisa
+            | SystemVariant::Arcane
+            | SystemVariant::Omp70
+            | SystemVariant::Omp95 => Box::new(NoReplace),
+        }
+    }
+
+    fn shard_controller(&self, cfg: &ExperimentConfig) -> ShardController {
+        match self {
+            SystemVariant::Cause
+            | SystemVariant::CauseU
+            | SystemVariant::CauseC
+            | SystemVariant::CauseRandomReplace => {
+                ShardController::new(cfg.shards, cfg.sc_gamma, cfg.sc_p)
+            }
+            _ => ShardController::disabled(cfg.shards),
+        }
+    }
+
+    /// Build the engine with an explicit trainer (PJRT or cost).
+    pub fn build_with_trainer(
+        &self,
+        cfg: &ExperimentConfig,
+        trainer: Box<dyn Trainer>,
+        eval: EvalPolicy,
+    ) -> Result<Engine> {
+        cfg.validate()?;
+        let slots =
+            ((cfg.memory_bytes / trainer.checkpoint_bytes().max(1)) as usize).max(1);
+        let store = ModelStore::new(slots, self.replacement(cfg));
+        Ok(Engine::new(
+            cfg.clone(),
+            self.partitioner(cfg),
+            self.shard_controller(cfg),
+            store,
+            trainer,
+            self.schedule(cfg),
+            eval,
+        ))
+    }
+
+    /// Build with the accounting backend (RSN / energy experiments).
+    pub fn build_cost(&self, cfg: &ExperimentConfig) -> Result<Engine> {
+        let trainer = CostTrainer::new(cfg.model, self.schedule(cfg));
+        self.build_with_trainer(cfg, Box::new(trainer), EvalPolicy::Never)
+    }
+}
+
+/// Convenience façade used by the examples: a ready-to-run CAUSE system.
+pub struct CauseSystem;
+
+impl CauseSystem {
+    /// CAUSE with the paper's default configuration (cost backend).
+    pub fn default_engine(cfg: &ExperimentConfig) -> Result<Engine> {
+        SystemVariant::Cause.build_cost(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn name_lookup() {
+        for v in SystemVariant::COMPARED {
+            assert_eq!(SystemVariant::by_name(v.display()), Some(v));
+        }
+        assert!(SystemVariant::by_name("bogus").is_none());
+    }
+
+    #[test]
+    fn schedules_match_table6() {
+        let cfg = ExperimentConfig::default();
+        assert_eq!(SystemVariant::Sisa.schedule(&cfg), PruneSchedule::None);
+        assert_eq!(
+            SystemVariant::Omp95.schedule(&cfg),
+            PruneSchedule::OneShot { keep: 0.05 }
+        );
+        match SystemVariant::Cause.schedule(&cfg) {
+            PruneSchedule::Iterative { keep, .. } => assert!((keep - 0.3).abs() < 1e-12),
+            other => panic!("CAUSE should prune iteratively, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn cause_fits_more_checkpoints_than_sisa() {
+        let cfg = ExperimentConfig::default();
+        let cause = SystemVariant::Cause.build_cost(&cfg).unwrap();
+        let sisa = SystemVariant::Sisa.build_cost(&cfg).unwrap();
+        assert!(
+            cause.store().capacity() > sisa.store().capacity() * 2,
+            "CAUSE {} vs SISA {}",
+            cause.store().capacity(),
+            sisa.store().capacity()
+        );
+    }
+
+    #[test]
+    fn build_validates_config() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.shards = 0;
+        assert!(SystemVariant::Cause.build_cost(&cfg).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Dataset descriptors shaped like the paper's corpora.
+
+/// Static description of a dataset family.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DatasetSpec {
+    pub name: &'static str,
+    pub classes: usize,
+    /// Total training samples in the paper's corpus.
+    pub train_size: u64,
+    /// Test samples (paper's split).
+    pub test_size: u64,
+    /// Flattened feature dimension (32x32x3 for all three corpora).
+    pub features: usize,
+    /// Class separability of the synthetic stand-in (higher = easier).
+    /// Calibrated so relative accuracy across corpora matches the paper
+    /// (SVHN easiest, CIFAR-100 hardest — Fig. 10).
+    pub separability: f64,
+}
+
+pub const CIFAR10: DatasetSpec = DatasetSpec {
+    name: "cifar10",
+    classes: 10,
+    train_size: 50_000,
+    test_size: 10_000,
+    features: 3072,
+    separability: 1.0,
+};
+
+pub const SVHN: DatasetSpec = DatasetSpec {
+    name: "svhn",
+    classes: 10,
+    train_size: 604_388,
+    test_size: 26_032,
+    features: 3072,
+    separability: 1.6,
+};
+
+pub const CIFAR100: DatasetSpec = DatasetSpec {
+    name: "cifar100",
+    classes: 100,
+    train_size: 50_000,
+    test_size: 10_000,
+    features: 3072,
+    separability: 0.6,
+};
+
+impl DatasetSpec {
+    pub fn by_name(name: &str) -> Option<&'static DatasetSpec> {
+        match name {
+            "cifar10" => Some(&CIFAR10),
+            "svhn" => Some(&SVHN),
+            "cifar100" => Some(&CIFAR100),
+            _ => None,
+        }
+    }
+
+    /// A copy scaled to `total` training samples (used by the real-training
+    /// experiments, which run at reduced scale on the CPU PJRT client).
+    pub fn scaled(&self, total: u64) -> DatasetSpec {
+        DatasetSpec { train_size: total, test_size: (total / 5).max(64), ..self.clone() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_works() {
+        assert_eq!(DatasetSpec::by_name("cifar10").unwrap().classes, 10);
+        assert_eq!(DatasetSpec::by_name("cifar100").unwrap().classes, 100);
+        assert_eq!(DatasetSpec::by_name("svhn").unwrap().train_size, 604_388);
+        assert!(DatasetSpec::by_name("mnist").is_none());
+    }
+
+    #[test]
+    fn scaled_preserves_shape() {
+        let s = CIFAR10.scaled(4000);
+        assert_eq!(s.train_size, 4000);
+        assert_eq!(s.classes, 10);
+        assert_eq!(s.features, 3072);
+    }
+}

@@ -1,0 +1,20 @@
+//! Data substrate: dataset catalog, synthetic per-user edge populations,
+//! and learn/unlearn request traces.
+//!
+//! The paper evaluates on synthetic *imbalanced user datasets* derived from
+//! CIFAR-10 / CIFAR-100 / SVHN ("randomly shuffling data categories and
+//! quantities to model heterogeneous user data"). This module rebuilds that
+//! generator: users with log-normal sizes and Dirichlet label skew, data
+//! arriving over training rounds, plus Bernoulli(ρ_u) unlearning requests.
+//!
+//! Blocks can be *materialized* into actual feature tensors (class-prototype
+//! Gaussians shaped like 32×32×3 images) for the real-training experiments;
+//! the RSN/energy sweeps only need the counts.
+
+pub mod catalog;
+pub mod dataset;
+pub mod trace;
+
+pub use catalog::{DatasetSpec, CIFAR10, CIFAR100, SVHN};
+pub use dataset::{BlockId, DataBlock, EdgePopulation, PopulationConfig, UserId};
+pub use trace::{RequestTrace, TraceConfig, UnlearnRequest};

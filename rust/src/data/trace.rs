@@ -1,0 +1,226 @@
+//! Unlearning request traces: who asks to forget what, and when.
+//!
+//! The paper's workload: each round, each user raises an unlearning request
+//! with probability ρ_u, asking to remove "a randomly generated subset of
+//! their data"; the device serves requests first-come-first-served. A
+//! request spans the user's *history* (several past blocks) — this is
+//! exactly the case where UCDP's user-keyed placement confines the retrain
+//! to one shard while uniform/class partitions scatter it.
+
+use crate::data::dataset::{BlockId, EdgePopulation, UserId};
+use crate::prng::Rng;
+
+/// One unlearning request: remove `samples` from each listed block.
+#[derive(Clone, Debug)]
+pub struct UnlearnRequest {
+    /// Round *after* which the request arrives (1-based).
+    pub round: u32,
+    pub user: UserId,
+    /// (block, samples to remove) — already clamped to remaining samples.
+    pub parts: Vec<(BlockId, u64)>,
+}
+
+impl UnlearnRequest {
+    pub fn total_samples(&self) -> u64 {
+        self.parts.iter().map(|(_, n)| n).sum()
+    }
+}
+
+/// Trace generation knobs.
+///
+/// Requests are *recency-biased*: the paper's time-slot semantics ("users
+/// can specify requests to delete data from certain periods or specific
+/// time slots", each training round being one slot). A request targets the
+/// user's current-round capture with probability `block_incl_prob`, and
+/// with probability `age_decay` additionally reaches one random older slot
+/// — the expensive case on which the replacement policies differ.
+#[derive(Clone, Debug)]
+pub struct TraceConfig {
+    /// Per-user per-round probability of raising a request (ρ_u).
+    pub unlearn_prob: f64,
+    /// Probability the user's current-round block is included.
+    pub block_incl_prob: f64,
+    /// Probability the request also reaches one random older time slot.
+    pub age_decay: f64,
+    /// Fraction of a block's samples removed, drawn uniform in this range.
+    pub frac_range: (f64, f64),
+    pub seed: u64,
+}
+
+impl TraceConfig {
+    pub fn paper_default(seed: u64) -> Self {
+        Self {
+            unlearn_prob: 0.1,
+            block_incl_prob: 0.9,
+            age_decay: 0.05,
+            frac_range: (0.1, 0.5),
+            seed,
+        }
+    }
+
+    pub fn with_prob(mut self, p: f64) -> Self {
+        self.unlearn_prob = p;
+        self
+    }
+}
+
+/// The full FCFS request trace over a population.
+#[derive(Clone, Debug)]
+pub struct RequestTrace {
+    /// requests[r] = requests arriving after round r+1 finished training.
+    rounds: Vec<Vec<UnlearnRequest>>,
+}
+
+impl RequestTrace {
+    /// Generate deterministically. Removal amounts are tracked so repeated
+    /// requests never remove more than a block holds.
+    pub fn generate(pop: &EdgePopulation, cfg: &TraceConfig) -> Self {
+        let mut rng = Rng::new(cfg.seed);
+        let mut remaining: std::collections::BTreeMap<BlockId, u64> = Default::default();
+        let mut rounds = Vec::with_capacity(pop.rounds() as usize);
+        for r in 1..=pop.rounds() {
+            for b in pop.blocks_at(r) {
+                remaining.insert(b.id, b.samples);
+            }
+            let mut reqs = Vec::new();
+            for u in 0..pop.cfg.users {
+                let user = UserId(u as u32);
+                if !rng.chance(cfg.unlearn_prob) {
+                    continue;
+                }
+                let blocks = pop.user_blocks(user, r);
+                let mut parts = Vec::new();
+                let include = |b: &crate::data::dataset::DataBlock,
+                                   rng: &mut Rng,
+                                   remaining: &mut std::collections::BTreeMap<BlockId, u64>,
+                                   parts: &mut Vec<(BlockId, u64)>| {
+                    let left = *remaining.get(&b.id).unwrap_or(&0);
+                    if left == 0 {
+                        return;
+                    }
+                    let (lo, hi) = cfg.frac_range;
+                    let frac = lo + (hi - lo) * rng.f64();
+                    let take = ((b.samples as f64 * frac).round() as u64).clamp(1, left);
+                    *remaining.get_mut(&b.id).unwrap() -= take;
+                    parts.push((b.id, take));
+                };
+                // Primary target: the current time slot's capture.
+                for b in blocks.iter().filter(|b| b.round == r) {
+                    if rng.chance(cfg.block_incl_prob) {
+                        include(b, &mut rng, &mut remaining, &mut parts);
+                    }
+                }
+                // Occasionally (age_decay) the request reaches one random
+                // older time slot — the expensive case the replacement
+                // policies differ on.
+                let old: Vec<_> = blocks.iter().filter(|b| b.round < r).collect();
+                if !old.is_empty() && rng.chance(cfg.age_decay) {
+                    let pick = rng.range(0, old.len());
+                    include(old[pick], &mut rng, &mut remaining, &mut parts);
+                }
+                if !parts.is_empty() {
+                    reqs.push(UnlearnRequest { round: r, user, parts });
+                }
+            }
+            rounds.push(reqs);
+        }
+        Self { rounds }
+    }
+
+    /// Requests arriving after `round` (1-based), FCFS order.
+    pub fn at(&self, round: u32) -> &[UnlearnRequest] {
+        &self.rounds[(round - 1) as usize]
+    }
+
+    pub fn total_requests(&self) -> usize {
+        self.rounds.iter().map(|r| r.len()).sum()
+    }
+
+    pub fn total_unlearned_samples(&self) -> u64 {
+        self.rounds.iter().flatten().map(|r| r.total_samples()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::catalog::CIFAR10;
+    use crate::data::dataset::{EdgePopulation, PopulationConfig};
+
+    fn pop(seed: u64) -> EdgePopulation {
+        EdgePopulation::generate(PopulationConfig {
+            spec: CIFAR10.scaled(10_000),
+            users: 30,
+            rounds: 6,
+            size_sigma: 0.8,
+            label_alpha: 0.5,
+            arrival_prob: 0.7,
+            seed,
+        })
+    }
+
+    #[test]
+    fn never_removes_more_than_block_holds() {
+        let p = pop(1);
+        // High probabilities to force repeated removals from the same block.
+        let t = RequestTrace::generate(
+            &p,
+            &TraceConfig {
+                unlearn_prob: 0.9,
+                block_incl_prob: 0.9,
+                age_decay: 0.8,
+                frac_range: (0.3, 0.9),
+                seed: 2,
+            },
+        );
+        let mut removed: std::collections::BTreeMap<BlockId, u64> = Default::default();
+        for r in 1..=6 {
+            for req in t.at(r) {
+                assert!(req.round == r);
+                for (b, n) in &req.parts {
+                    *removed.entry(*b).or_default() += n;
+                    let block = p.block(*b).unwrap();
+                    assert!(block.round <= r, "request references future block");
+                    assert!(
+                        removed[b] <= block.samples,
+                        "block {b:?} over-removed {} > {}",
+                        removed[b],
+                        block.samples
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn request_rate_tracks_probability() {
+        let p = pop(3);
+        let lo = RequestTrace::generate(&p, &TraceConfig::paper_default(4));
+        let hi =
+            RequestTrace::generate(&p, &TraceConfig::paper_default(4).with_prob(0.5));
+        assert!(hi.total_requests() > lo.total_requests() * 2);
+    }
+
+    #[test]
+    fn deterministic() {
+        let p = pop(5);
+        let a = RequestTrace::generate(&p, &TraceConfig::paper_default(6));
+        let b = RequestTrace::generate(&p, &TraceConfig::paper_default(6));
+        assert_eq!(a.total_requests(), b.total_requests());
+        assert_eq!(a.total_unlearned_samples(), b.total_unlearned_samples());
+    }
+
+    #[test]
+    fn requests_span_multiple_blocks() {
+        let p = pop(7);
+        let t = RequestTrace::generate(
+            &p,
+            &TraceConfig { unlearn_prob: 1.0, block_incl_prob: 0.9, age_decay: 0.9, frac_range: (0.1, 0.5), seed: 8 },
+        );
+        let multi = (1..=6)
+            .flat_map(|r| t.at(r))
+            .filter(|req| req.parts.len() > 1)
+            .count();
+        assert!(multi > 0, "no multi-block requests generated");
+    }
+}

@@ -1,0 +1,183 @@
+//! Shared plumbing for the experiment modules.
+
+use std::cell::RefCell;
+use std::path::PathBuf;
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::EvalPolicy;
+use crate::coordinator::system::SystemVariant;
+use crate::data::dataset::{EdgePopulation, PopulationConfig};
+use crate::data::trace::{RequestTrace, TraceConfig};
+use crate::metrics::RunMetrics;
+use crate::runtime::Runtime;
+use crate::training::{PjrtTrainer, PjrtTrainerConfig};
+
+/// Population matching a config (paper §5.1 defaults otherwise).
+pub fn population(cfg: &ExperimentConfig) -> EdgePopulation {
+    EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.clone(),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.7,
+        seed: cfg.seed,
+    })
+}
+
+/// Request trace matching a config.
+pub fn trace(cfg: &ExperimentConfig, pop: &EdgePopulation) -> RequestTrace {
+    RequestTrace::generate(
+        pop,
+        &TraceConfig::paper_default(cfg.seed ^ 0x7ace).with_prob(cfg.unlearn_prob),
+    )
+}
+
+/// Run one system on the accounting backend; returns its metrics.
+pub fn run_cost(v: SystemVariant, cfg: &ExperimentConfig) -> Result<RunMetrics> {
+    let pop = population(cfg);
+    let tr = trace(cfg, &pop);
+    let mut engine = v.build_cost(cfg)?;
+    engine.run_trace(&pop, &tr)?;
+    Ok(engine.metrics.clone())
+}
+
+/// Cost run with an explicit trace configuration (workload ablations).
+pub fn run_cost_with_trace(
+    v: SystemVariant,
+    cfg: &ExperimentConfig,
+    tcfg: &TraceConfig,
+) -> Result<RunMetrics> {
+    let pop = population(cfg);
+    let tr = RequestTrace::generate(&pop, tcfg);
+    let mut engine = v.build_cost(cfg)?;
+    engine.run_trace(&pop, &tr)?;
+    Ok(engine.metrics.clone())
+}
+
+/// Artifact directory: `$CAUSE_ARTIFACTS` or `<repo>/artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("CAUSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
+thread_local! {
+    static RUNTIME: RefCell<Option<Option<Rc<Runtime>>>> = const { RefCell::new(None) };
+}
+
+/// Per-thread PJRT runtime (the `xla` handles are not `Send`); `None` when
+/// artifacts are missing — real experiments then report "SKIPPED".
+pub fn runtime() -> Option<Rc<Runtime>> {
+    RUNTIME.with(|cell| {
+        cell.borrow_mut()
+            .get_or_insert_with(|| {
+                let dir = artifacts_dir();
+                if !dir.join("manifest.txt").exists() {
+                    eprintln!(
+                        "NOTE: no artifacts at {} — real-training experiments skipped \
+                         (run `make artifacts`)",
+                        dir.display()
+                    );
+                    return None;
+                }
+                match Runtime::new(&dir) {
+                    Ok(rt) => Some(Rc::new(rt)),
+                    Err(e) => {
+                        eprintln!("NOTE: PJRT runtime unavailable: {e:#}");
+                        None
+                    }
+                }
+            })
+            .clone()
+    })
+}
+
+/// Reduced-scale config for real-training accuracy runs: the proxy corpus
+/// is shrunk so a full system run finishes in seconds on the CPU client.
+pub fn real_cfg(base: &ExperimentConfig, corpus: u64, users: usize, rounds: u32) -> ExperimentConfig {
+    let mut cfg = base.clone();
+    cfg.users = users;
+    cfg.rounds = rounds;
+    cfg.dataset = cfg.dataset.scaled(corpus);
+    cfg
+}
+
+/// Run one system with the real PJRT backend; returns (metrics, accuracy).
+pub fn run_real(
+    v: SystemVariant,
+    cfg: &ExperimentConfig,
+    rt: Rc<Runtime>,
+    variant: &str,
+    max_epochs: u32,
+) -> Result<(RunMetrics, Option<f64>)> {
+    let pop = std::sync::Arc::new(population(cfg));
+    let tr = trace(cfg, &pop);
+    let trainer = PjrtTrainer::new(
+        rt,
+        pop.clone(),
+        PjrtTrainerConfig {
+            variant: variant.to_string(),
+            max_epochs,
+            lr: 0.05,
+            test_samples: 256,
+            seed: cfg.seed,
+        },
+        cfg.shards,
+        v.schedule(cfg).final_keep(),
+    )?;
+    let mut engine = v.build_with_trainer(cfg, Box::new(trainer), EvalPolicy::FinalRound)?;
+    engine.run_trace(&pop, &tr)?;
+    let acc = engine.metrics.final_accuracy();
+    Ok((engine.metrics.clone(), acc))
+}
+
+/// Render a float cell.
+pub fn f(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+/// Render an integer cell.
+pub fn n(v: u64) -> String {
+    v.to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cost_run_produces_rsn() {
+        let cfg = ExperimentConfig {
+            users: 20,
+            rounds: 4,
+            unlearn_prob: 0.3,
+            ..Default::default()
+        };
+        let m = run_cost(SystemVariant::Cause, &cfg).unwrap();
+        assert_eq!(m.rsn_by_round.len(), 4);
+        assert!(m.total_requests() > 0);
+    }
+
+    #[test]
+    fn cause_beats_sisa_on_rsn_at_default_scale() {
+        // The paper's headline: CAUSE retrains far fewer samples.
+        let cfg = ExperimentConfig {
+            users: 40,
+            rounds: 6,
+            unlearn_prob: 0.3,
+            ..Default::default()
+        };
+        let cause = run_cost(SystemVariant::Cause, &cfg).unwrap();
+        let sisa = run_cost(SystemVariant::Sisa, &cfg).unwrap();
+        assert!(
+            cause.total_rsn() < sisa.total_rsn(),
+            "CAUSE {} !< SISA {}",
+            cause.total_rsn(),
+            sisa.total_rsn()
+        );
+    }
+}

@@ -1,0 +1,81 @@
+//! §4.4 remark — FiboR vs random replacement under the default setup.
+//! The paper reports 143,226 retrained samples with FiboR vs 154,193 with
+//! random replacement (~7% advantage).
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::experiments::{common, Scale};
+use crate::util::Table;
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let mut t = Table::new(
+        "§4.4 remark: FiboR vs random replacement (total RSN, default config)",
+        &["replacement", "total_rsn", "warm_retrains", "scratch_retrains"],
+    );
+    // Average random over several seeds (its temporal sparsity is unstable —
+    // exactly the paper's point). Memory is tightened and old-slot requests
+    // boosted so the replacement policy actually decides outcomes.
+    let seeds = scale.pick(2u64, 5u64);
+    let cfg0 = ExperimentConfig {
+        users: scale.pick(30, 100),
+        rounds: scale.pick(5, 10),
+        unlearn_prob: 0.3,
+        ..Default::default()
+    }
+    .with_memory_gb(0.5);
+    let tcfg = crate::data::trace::TraceConfig {
+        age_decay: 0.35,
+        ..crate::data::trace::TraceConfig::paper_default(cfg0.seed ^ 0x7ace)
+    }
+    .with_prob(cfg0.unlearn_prob);
+
+    let fib = common::run_cost_with_trace(SystemVariant::Cause, &cfg0, &tcfg)?;
+    t.row(vec![
+        "fibor".into(),
+        fib.total_rsn().to_string(),
+        fib.warm_retrains.to_string(),
+        fib.scratch_retrains.to_string(),
+    ]);
+
+    let mut rsn = 0u64;
+    let mut warm = 0u64;
+    let mut scratch = 0u64;
+    for s in 0..seeds {
+        let cfg = cfg0.clone().with_seed(cfg0.seed + s * 101);
+        let m = common::run_cost_with_trace(SystemVariant::CauseRandomReplace, &cfg, &tcfg)?;
+        rsn += m.total_rsn();
+        warm += m.warm_retrains;
+        scratch += m.scratch_retrains;
+    }
+    t.row(vec![
+        format!("random (avg of {seeds})"),
+        (rsn / seeds).to_string(),
+        (warm / seeds).to_string(),
+        (scratch / seeds).to_string(),
+    ]);
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_reports_both_policies() {
+        let tables = run(Scale::Smoke).unwrap();
+        assert_eq!(tables[0].rows.len(), 2);
+        let fib: u64 = tables[0].rows[0][1].parse().unwrap();
+        let rnd: u64 = tables[0].rows[1][1].parse().unwrap();
+        assert!(fib > 0 && rnd > 0);
+        // The paper reports a ~7% FiboR advantage; on our workload the two
+        // jump strategies are close, with random sometimes ahead at smoke
+        // scale (recorded as a deviation in EXPERIMENTS.md). This test only
+        // guards against a pathological regression of either policy.
+        assert!(
+            (fib as f64) <= (rnd as f64) * 1.6 && (rnd as f64) <= (fib as f64) * 1.6,
+            "policies diverged: FiboR {fib} vs random {rnd}"
+        );
+    }
+}

@@ -1,0 +1,116 @@
+//! Fig. 2 — the motivating pilot: retraining time and energy are linear in
+//! the number of retrained samples.
+//!
+//! (a) is *measured* on this testbed: the proxy model retrains on
+//! B × corpus samples through PJRT and we report wall seconds.
+//! (b) uses the calibrated energy model (linear by the paper's own finding;
+//! the figure documents the slope per backbone).
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::config::profiles::ALL_MODELS;
+use crate::data::catalog::CIFAR10;
+use crate::data::dataset::{EdgePopulation, PopulationConfig};
+use crate::energy::EnergyModel;
+use crate::experiments::{common, Scale};
+use crate::runtime::TrainSession;
+use crate::util::Table;
+
+pub const RATIOS: [f64; 5] = [0.2, 0.4, 0.6, 0.8, 1.0];
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let mut out = Vec::new();
+
+    // (a) measured retrain seconds vs ratio on the PJRT proxy.
+    if let Some(rt) = common::runtime() {
+        let corpus = scale.pick(600u64, 3000u64);
+        let pop = EdgePopulation::generate(PopulationConfig {
+            spec: CIFAR10.scaled(corpus),
+            users: 10,
+            rounds: 1,
+            size_sigma: 0.5,
+            label_alpha: 1.0,
+            arrival_prob: 1.0,
+            seed: 2,
+        });
+        let mut t = Table::new(
+            format!("Fig 2a (measured): retrain seconds vs ratio B (corpus={corpus})"),
+            &["ratio", "samples", "seconds", "secs_per_sample"],
+        );
+        // Materialize the whole round once.
+        let blocks: Vec<_> = pop.blocks_at(1).to_vec();
+        for ratio in RATIOS {
+            let mut sess = TrainSession::init(rt.clone(), "mobilenetv2_c10", 3)?;
+            let budget = (corpus as f64 * ratio) as u64;
+            let mut used = 0u64;
+            let t0 = Instant::now();
+            'outer: for b in &blocks {
+                let take = (b.samples).min(budget - used);
+                if take == 0 {
+                    break 'outer;
+                }
+                let (xs, ys) = pop.materialize(b, take as usize);
+                let bs = sess.batch_size();
+                let fd = sess.feature_dim();
+                let mut r = 0;
+                while r < ys.len() {
+                    let chunk = bs.min(ys.len() - r);
+                    sess.step(&xs[r * fd..(r + chunk) * fd], &ys[r..r + chunk], 0.05)?;
+                    r += chunk;
+                }
+                used += take;
+                if used >= budget {
+                    break;
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            t.row(vec![
+                common::f(ratio, 1),
+                used.to_string(),
+                common::f(secs, 3),
+                common::f(secs / used.max(1) as f64 * 1e3, 4) + "ms",
+            ]);
+        }
+        out.push(t);
+    }
+
+    // (b) energy model slopes per backbone.
+    let mut e = Table::new(
+        "Fig 2b (model): retrain energy (J) vs ratio B, full CIFAR-10 corpus, 80 epochs",
+        &["model", "B=0.2", "B=0.4", "B=0.6", "B=0.8", "B=1.0", "J_per_sample_epoch"],
+    );
+    for m in &ALL_MODELS {
+        let em = EnergyModel::for_model(m);
+        let mut row = vec![m.name.to_string()];
+        for ratio in RATIOS {
+            let samples = (50_000.0 * ratio) as u64;
+            row.push(common::f(em.retrain_joules(samples, 80), 0));
+        }
+        row.push(common::f(em.joules_per_sample_epoch, 5));
+        e.row(row);
+    }
+    out.push(e);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_table_is_linear_in_ratio() {
+        let tables = run(Scale::Smoke).unwrap();
+        let e = tables.last().unwrap();
+        for row in &e.rows {
+            let b02: f64 = row[1].parse().unwrap();
+            let b10: f64 = row[5].parse().unwrap();
+            assert!(
+                (b10 / b02 - 5.0).abs() < 0.05,
+                "{}: not linear ({b02} vs {b10})",
+                row[0]
+            );
+        }
+    }
+}

@@ -1,0 +1,127 @@
+//! Fig. 5 — the motivating observation behind the shard controller:
+//! aggregated (majority-vote) accuracy falls as the shard count grows,
+//! on CIFAR-10 and SVHN. Real sharded training on the proxy model.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::coordinator::aggregate::{argmax, ensemble_accuracy};
+use crate::data::catalog::{DatasetSpec, CIFAR10, SVHN};
+use crate::data::dataset::{EdgePopulation, PopulationConfig};
+use crate::experiments::{common, Scale};
+use crate::runtime::{Runtime, TrainSession};
+use crate::util::Table;
+
+pub const SHARDS: [usize; 5] = [1, 2, 4, 8, 16];
+
+/// Train `s` sub-models on a uniform split and majority-vote on a test set.
+pub fn sharded_accuracy(
+    rt: Rc<Runtime>,
+    spec: &DatasetSpec,
+    corpus: u64,
+    s: usize,
+    epochs: u32,
+    variant: &str,
+    seed: u64,
+) -> Result<f64> {
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: spec.clone(),
+        users: 4 * s.max(2),
+        rounds: 1,
+        size_sigma: 0.3,
+        label_alpha: 5.0, // near-IID split: this figure isolates shard size
+        arrival_prob: 1.0,
+        seed,
+    });
+    let blocks: Vec<_> = pop.blocks_at(1).to_vec();
+    let (txs, tys) = pop.materialize_test(256, seed ^ 0x5eed);
+    let mut per_model = Vec::with_capacity(s);
+    for shard in 0..s {
+        let mut sess = TrainSession::init(rt.clone(), variant, seed + shard as u64)?;
+        // Round-robin block split (uniform sharding).
+        for _ in 0..epochs {
+            for b in blocks.iter().skip(shard).step_by(s) {
+                let take = (b.samples as usize).min((corpus as usize / s).max(32));
+                let (xs, ys) = pop.materialize(b, take);
+                let bs = sess.batch_size();
+                let fd = sess.feature_dim();
+                let mut r = 0;
+                while r < ys.len() {
+                    let chunk = bs.min(ys.len() - r);
+                    sess.step(&xs[r * fd..(r + chunk) * fd], &ys[r..r + chunk], 0.05)?;
+                    r += chunk;
+                }
+            }
+        }
+        // Collect labels on the shared test set.
+        let bs = sess.batch_size();
+        let fd = sess.feature_dim();
+        let mut labels = Vec::with_capacity(tys.len());
+        let mut r = 0;
+        while r < tys.len() {
+            let take = bs.min(tys.len() - r);
+            let logits = sess.logits(&txs[r * fd..(r + take) * fd], take)?;
+            labels.extend(logits.iter().map(|row| argmax(row)));
+            r += take;
+        }
+        per_model.push(labels);
+    }
+    Ok(ensemble_accuracy(&per_model, &tys, spec.classes))
+}
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let Some(rt) = common::runtime() else {
+        let mut t = Table::new("Fig 5: SKIPPED (no artifacts)", &["note"]);
+        t.row(vec!["run `make artifacts` first".into()]);
+        return Ok(vec![t]);
+    };
+    let corpus = scale.pick(1200u64, 4000u64);
+    let epochs = scale.pick(1, 3);
+    let datasets = [("cifar10", CIFAR10), ("svhn", SVHN)];
+    let mut t = Table::new(
+        format!("Fig 5: majority-vote accuracy vs shard count (corpus={corpus})"),
+        &["dataset", "S=1", "S=2", "S=4", "S=8", "S=16"],
+    );
+    for (name, spec) in datasets {
+        let spec = spec.scaled(corpus);
+        let mut row = vec![name.to_string()];
+        for s in SHARDS {
+            let acc = sharded_accuracy(
+                rt.clone(),
+                &spec,
+                corpus,
+                s,
+                epochs,
+                "mobilenetv2_c10",
+                41,
+            )?;
+            row.push(common::f(acc, 4));
+        }
+        t.row(row);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_declines_with_shards() {
+        let tables = run(Scale::Smoke).unwrap();
+        let t = &tables[0];
+        if t.title.contains("SKIPPED") {
+            return;
+        }
+        for row in &t.rows {
+            let s1: f64 = row[1].parse().unwrap();
+            let s16: f64 = row[5].parse().unwrap();
+            assert!(
+                s1 >= s16,
+                "{}: accuracy should fall from S=1 ({s1}) to S=16 ({s16})",
+                row[0]
+            );
+        }
+    }
+}

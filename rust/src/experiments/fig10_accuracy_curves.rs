@@ -1,0 +1,208 @@
+//! Fig. 10 / Fig. 18 — accuracy of a single sub-model over training
+//! epochs when its data shard comes from each system's partitioner
+//! (CAUSE / SISA / ARCANE / OMP-70 / OMP-95), on the proxy backbones.
+//!
+//! CAUSE's shard is produced by UCDP + SC (fewer, larger shards); SISA's
+//! by a uniform S-way split; ARCANE's by the class grouping (a single
+//! class range — the source of its collapse); OMP-x additionally one-shot
+//! prunes at rate x after training.
+
+use std::rc::Rc;
+
+use anyhow::Result;
+
+use crate::coordinator::aggregate::argmax;
+use crate::data::catalog::{DatasetSpec, CIFAR10, CIFAR100, SVHN};
+use crate::data::dataset::{EdgePopulation, PopulationConfig};
+use crate::experiments::{common, Scale};
+use crate::partition::{ClassBased, Partitioner, Ucdp, Uniform};
+use crate::runtime::{Runtime, TrainSession};
+use crate::shard_controller::ShardController;
+use crate::util::Table;
+
+struct Curve {
+    system: &'static str,
+    accs: Vec<f64>,
+}
+
+fn shard0_blocks(
+    pop: &EdgePopulation,
+    mut part: Box<dyn Partitioner>,
+    s_t: usize,
+) -> Vec<(crate::data::dataset::BlockId, u64)> {
+    let placements = part.assign(pop.blocks_at(1), s_t);
+    // Use the largest shard as "the" sub-model's shard.
+    let loads = crate::partition::shard_loads(&placements, s_t);
+    let shard = loads
+        .iter()
+        .enumerate()
+        .max_by_key(|(_, l)| **l)
+        .map(|(i, _)| i)
+        .unwrap_or(0);
+    placements
+        .into_iter()
+        .filter(|p| p.shard == shard)
+        .map(|p| (p.block, p.samples))
+        .collect()
+}
+
+#[allow(clippy::too_many_arguments)]
+fn train_curve(
+    rt: Rc<Runtime>,
+    pop: &EdgePopulation,
+    blocks: &[(crate::data::dataset::BlockId, u64)],
+    variant: &str,
+    epochs: u32,
+    prune_keep: Option<f32>,
+    txs: &[f32],
+    tys: &[f32],
+) -> Result<Vec<f64>> {
+    let mut sess = TrainSession::init(rt, variant, 23)?;
+    let mut accs = Vec::with_capacity(epochs as usize);
+    for e in 0..epochs {
+        for (id, samples) in blocks {
+            let Some(b) = pop.block(*id) else { continue };
+            let (xs, ys) = pop.materialize(b, *samples as usize);
+            let bs = sess.batch_size();
+            let fd = sess.feature_dim();
+            let mut r = 0;
+            while r < ys.len() {
+                let take = bs.min(ys.len() - r);
+                sess.step(&xs[r * fd..(r + take) * fd], &ys[r..r + take], 0.05)?;
+                r += take;
+            }
+        }
+        if let (Some(keep), true) = (prune_keep, e + 1 == epochs) {
+            sess.prune(keep)?; // OMP: one-shot at the end
+        }
+        // Accuracy after this epoch.
+        let bs = sess.batch_size();
+        let fd = sess.feature_dim();
+        let mut correct = 0usize;
+        let mut r = 0;
+        while r < tys.len() {
+            let take = bs.min(tys.len() - r);
+            let logits = sess.logits(&txs[r * fd..(r + take) * fd], take)?;
+            for (row, y) in logits.iter().zip(&tys[r..r + take]) {
+                if argmax(row) == *y as usize {
+                    correct += 1;
+                }
+            }
+            r += take;
+        }
+        accs.push(correct as f64 / tys.len() as f64);
+    }
+    Ok(accs)
+}
+
+fn combo_table(
+    rt: Rc<Runtime>,
+    title: &str,
+    spec: &DatasetSpec,
+    variant: &str,
+    scale: Scale,
+) -> Result<Table> {
+    let corpus = scale.pick(1200u64, 4000u64);
+    let epochs = scale.pick(2u32, 6u32);
+    let s = 4; // paper default shard count
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: spec.scaled(corpus),
+        users: 24,
+        rounds: 1,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 1.0,
+        seed: 31,
+    });
+    let (txs, tys) = pop.materialize_test(256, 77);
+
+    // Effective shard count CAUSE trains with at round 1 (SC shrinks S).
+    let s_cause = ShardController::new(s, 0.5, 0.5).shards_at(1);
+    let curves = [
+        ("CAUSE", shard0_blocks(&pop, Box::new(Ucdp::new(s, 9)), s_cause), None),
+        ("SISA", shard0_blocks(&pop, Box::new(Uniform::new(s)), s), None),
+        (
+            "ARCANE",
+            shard0_blocks(&pop, Box::new(ClassBased::new(spec.classes)), s),
+            None,
+        ),
+        ("OMP-70", shard0_blocks(&pop, Box::new(Uniform::new(s)), s), Some(0.3f32)),
+        ("OMP-95", shard0_blocks(&pop, Box::new(Uniform::new(s)), s), Some(0.05f32)),
+    ];
+
+    let mut results: Vec<Curve> = Vec::new();
+    for (system, blocks, keep) in curves {
+        let accs =
+            train_curve(rt.clone(), &pop, &blocks, variant, epochs, keep, &txs, &tys)?;
+        results.push(Curve { system, accs });
+    }
+
+    let mut header = vec!["system".to_string()];
+    header.extend((1..=epochs).map(|e| format!("ep{e}")));
+    let mut t = Table::new(title, &header.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for c in results {
+        let mut row = vec![c.system.to_string()];
+        row.extend(c.accs.iter().map(|a| common::f(*a, 4)));
+        t.row(row);
+    }
+    Ok(t)
+}
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let Some(rt) = common::runtime() else {
+        let mut t = Table::new("Fig 10: SKIPPED (no artifacts)", &["note"]);
+        t.row(vec!["run `make artifacts` first".into()]);
+        return Ok(vec![t]);
+    };
+    let combos: Vec<(&str, DatasetSpec, &str)> = match scale {
+        Scale::Smoke => vec![("mobilenetv2/cifar10", CIFAR10, "mobilenetv2_c10")],
+        Scale::Full => vec![
+            ("resnet34/cifar10", CIFAR10, "resnet34_c10"),
+            ("resnet34/svhn", SVHN, "resnet34_c10"),
+            ("vgg16/cifar100", CIFAR100, "vgg16_c100"),
+            ("mobilenetv2/cifar10", CIFAR10, "mobilenetv2_c10"),
+        ],
+    };
+    let mut out = Vec::new();
+    for (name, spec, variant) in combos {
+        out.push(combo_table(
+            rt.clone(),
+            &format!("Fig 10: accuracy over epochs — {name}"),
+            &spec,
+            variant,
+            scale,
+        )?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn curves_are_sane_and_heavy_pruning_hurts() {
+        let tables = run(Scale::Smoke).unwrap();
+        let t = &tables[0];
+        if t.title.contains("SKIPPED") {
+            return;
+        }
+        let last = |name: &str| -> f64 {
+            let row = t.rows.iter().find(|r| r[0] == name).unwrap();
+            row.last().unwrap().parse().unwrap()
+        };
+        // All five systems trained to something above chance.
+        for sys in ["CAUSE", "SISA", "ARCANE", "OMP-70", "OMP-95"] {
+            assert!(last(sys) > 0.10, "{sys} below chance: {}", last(sys));
+        }
+        // 95% one-shot pruning must cost accuracy vs CAUSE's RCMP
+        // (the robust smoke-scale comparison; CAUSE-vs-SISA/ARCANE margins
+        // are a full-scale claim recorded in EXPERIMENTS.md).
+        assert!(
+            last("CAUSE") > last("OMP-95"),
+            "CAUSE {} vs OMP-95 {}",
+            last("CAUSE"),
+            last("OMP-95")
+        );
+    }
+}

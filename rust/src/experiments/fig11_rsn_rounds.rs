@@ -1,0 +1,70 @@
+//! Fig. 11 — retrained sample number (cumulative) over 10 training rounds,
+//! CAUSE vs SISA / ARCANE / OMP-70 / OMP-95, default §5.1 configuration.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::experiments::{common, Scale};
+use crate::util::Table;
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let cfg = ExperimentConfig {
+        users: scale.pick(30, 100),
+        rounds: scale.pick(5, 10),
+        ..Default::default()
+    };
+    let mut header = vec!["system".to_string()];
+    header.extend((1..=cfg.rounds).map(|r| format!("t{r}")));
+    header.push("total".into());
+    let header_refs: Vec<&str> = header.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(
+        format!(
+            "Fig 11: cumulative RSN per round (model={}, S={}, rho_u={})",
+            cfg.model.name, cfg.shards, cfg.unlearn_prob
+        ),
+        &header_refs,
+    );
+    for v in SystemVariant::COMPARED {
+        let m = common::run_cost(v, &cfg)?;
+        let mut row = vec![v.display().to_string()];
+        row.extend(m.cumulative_rsn().iter().map(|x| x.to_string()));
+        row.push(m.total_rsn().to_string());
+        t.row(row);
+    }
+    Ok(vec![t])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cause_wins_and_rsn_grows_over_rounds() {
+        let tables = run(Scale::Smoke).unwrap();
+        let t = &tables[0];
+        let total_of = |name: &str| -> u64 {
+            t.rows
+                .iter()
+                .find(|r| r[0] == name)
+                .unwrap()
+                .last()
+                .unwrap()
+                .parse()
+                .unwrap()
+        };
+        let cause = total_of("CAUSE");
+        for other in ["SISA", "ARCANE", "OMP-70", "OMP-95"] {
+            assert!(
+                cause <= total_of(other),
+                "CAUSE {cause} vs {other} {}",
+                total_of(other)
+            );
+        }
+        // Cumulative series is nondecreasing.
+        let row = t.rows.iter().find(|r| r[0] == "CAUSE").unwrap();
+        let series: Vec<u64> =
+            row[1..row.len() - 1].iter().map(|c| c.parse().unwrap()).collect();
+        assert!(series.windows(2).all(|w| w[0] <= w[1]), "{series:?}");
+    }
+}

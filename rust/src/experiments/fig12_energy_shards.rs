@@ -1,0 +1,66 @@
+//! Fig. 12 — energy consumption vs shard count (S ∈ {1,2,4,8,16}) for all
+//! four backbone models, ρ_u = 0.3, five systems.
+
+use anyhow::Result;
+
+use crate::config::profiles::ALL_MODELS;
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::experiments::{common, Scale};
+use crate::util::Table;
+
+pub const SHARDS: [usize; 5] = [1, 2, 4, 8, 16];
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let models = scale.pick(&ALL_MODELS[..1], &ALL_MODELS[..]);
+    let mut out = Vec::new();
+    for model in models {
+        let mut t = Table::new(
+            format!("Fig 12: energy (J) vs shard count — {} (rho_u=0.3)", model.name),
+            &["system", "S=1", "S=2", "S=4", "S=8", "S=16"],
+        );
+        for v in SystemVariant::COMPARED {
+            let mut row = vec![v.display().to_string()];
+            for s in SHARDS {
+                let cfg = ExperimentConfig {
+                    users: scale.pick(30, 100),
+                    rounds: scale.pick(5, 10),
+                    unlearn_prob: 0.3,
+                    shards: s,
+                    model: *model,
+                    ..Default::default()
+                };
+                let m = common::run_cost(v, &cfg)?;
+                row.push(common::f(m.energy_joules, 0));
+            }
+            t.row(row);
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cause_energy_decreases_with_shards_others_increase() {
+        let tables = run(Scale::Smoke).unwrap();
+        let t = &tables[0];
+        let series = |name: &str| -> Vec<f64> {
+            let row = t.rows.iter().find(|r| r[0] == name).unwrap();
+            row[1..].iter().map(|c| c.parse().unwrap()).collect()
+        };
+        let cause = series("CAUSE");
+        let sisa = series("SISA");
+        // Trend check (paper Fig. 12): CAUSE at S=16 below CAUSE at S=1;
+        // SISA at S=16 above SISA at S=1.
+        assert!(cause[4] < cause[0], "CAUSE energy should fall with S: {cause:?}");
+        assert!(sisa[4] > sisa[0], "SISA energy should rise with S: {sisa:?}");
+        // CAUSE wins at S=16 against everyone.
+        for other in ["SISA", "ARCANE", "OMP-70", "OMP-95"] {
+            assert!(cause[4] < series(other)[4], "{other}");
+        }
+    }
+}

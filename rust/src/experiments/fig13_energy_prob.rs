@@ -1,0 +1,68 @@
+//! Fig. 13 — energy consumption vs unlearning probability
+//! (ρ_u ∈ {0.1..0.5}), S = 8, four models, five systems.
+
+use anyhow::Result;
+
+use crate::config::profiles::ALL_MODELS;
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::experiments::{common, Scale};
+use crate::util::Table;
+
+pub const PROBS: [f64; 5] = [0.1, 0.2, 0.3, 0.4, 0.5];
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let models = scale.pick(&ALL_MODELS[..1], &ALL_MODELS[..]);
+    let mut out = Vec::new();
+    for model in models {
+        let mut t = Table::new(
+            format!("Fig 13: energy (J) vs unlearning probability — {} (S=8)", model.name),
+            &["system", "p=0.1", "p=0.2", "p=0.3", "p=0.4", "p=0.5"],
+        );
+        for v in SystemVariant::COMPARED {
+            let mut row = vec![v.display().to_string()];
+            for p in PROBS {
+                let cfg = ExperimentConfig {
+                    users: scale.pick(30, 100),
+                    rounds: scale.pick(5, 10),
+                    unlearn_prob: p,
+                    shards: 8,
+                    model: *model,
+                    ..Default::default()
+                };
+                let m = common::run_cost(v, &cfg)?;
+                row.push(common::f(m.energy_joules, 0));
+            }
+            t.row(row);
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn energy_rises_with_probability_and_cause_wins() {
+        let tables = run(Scale::Smoke).unwrap();
+        let t = &tables[0];
+        for row in &t.rows {
+            let series: Vec<f64> = row[1..].iter().map(|c| c.parse().unwrap()).collect();
+            assert!(
+                series[4] > series[0],
+                "{}: energy should rise with rho_u: {series:?}",
+                row[0]
+            );
+        }
+        let get = |name: &str, i: usize| -> f64 {
+            t.rows.iter().find(|r| r[0] == name).unwrap()[1 + i].parse().unwrap()
+        };
+        for i in 0..5 {
+            for other in ["SISA", "ARCANE", "OMP-70", "OMP-95"] {
+                assert!(get("CAUSE", i) < get(other, i), "{other} at p index {i}");
+            }
+        }
+    }
+}

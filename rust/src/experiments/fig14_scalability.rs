@@ -1,0 +1,83 @@
+//! Fig. 14 — scalability in more restrictive scenarios:
+//! (a) RSN vs memory capacity 4.0 → 0.5 GB;
+//! (b) RSN vs unlearning probability 0.1 → 0.5.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::experiments::{common, Scale};
+use crate::util::Table;
+
+pub const MEMORY_GB: [f64; 4] = [4.0, 2.0, 1.0, 0.5];
+pub const PROBS: [f64; 5] = [0.1, 0.2, 0.3, 0.4, 0.5];
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let base = ExperimentConfig {
+        users: scale.pick(30, 100),
+        rounds: scale.pick(5, 10),
+        ..Default::default()
+    };
+
+    let mut a = Table::new(
+        "Fig 14a: total RSN vs memory capacity (GB)",
+        &["system", "4.0GB", "2.0GB", "1.0GB", "0.5GB"],
+    );
+    for v in SystemVariant::COMPARED {
+        let mut row = vec![v.display().to_string()];
+        for gb in MEMORY_GB {
+            let cfg = base.clone().with_memory_gb(gb);
+            row.push(common::run_cost(v, &cfg)?.total_rsn().to_string());
+        }
+        a.row(row);
+    }
+
+    let mut b = Table::new(
+        "Fig 14b: total RSN vs unlearning probability",
+        &["system", "p=0.1", "p=0.2", "p=0.3", "p=0.4", "p=0.5"],
+    );
+    for v in SystemVariant::COMPARED {
+        let mut row = vec![v.display().to_string()];
+        for p in PROBS {
+            let cfg = base.clone().with_unlearn_prob(p);
+            row.push(common::run_cost(v, &cfg)?.total_rsn().to_string());
+        }
+        b.row(row);
+    }
+    Ok(vec![a, b])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rsn_grows_as_memory_shrinks_and_cause_wins() {
+        let tables = run(Scale::Smoke).unwrap();
+        let a = &tables[0];
+        let series = |t: &Table, name: &str| -> Vec<u64> {
+            let row = t.rows.iter().find(|r| r[0] == name).unwrap();
+            row[1..].iter().map(|c| c.parse().unwrap()).collect()
+        };
+        for name in ["CAUSE", "SISA"] {
+            let s = series(a, name);
+            assert!(
+                s[3] >= s[0],
+                "{name}: RSN should not shrink as memory shrinks: {s:?}"
+            );
+        }
+        // CAUSE lowest at every memory point.
+        for i in 0..4 {
+            let cause = series(a, "CAUSE")[i];
+            for other in ["SISA", "ARCANE", "OMP-70", "OMP-95"] {
+                assert!(cause <= series(a, other)[i], "{other} at memory {i}");
+            }
+        }
+        // (b): RSN increases with probability.
+        let b = &tables[1];
+        for row in &b.rows {
+            let s: Vec<u64> = row[1..].iter().map(|c| c.parse().unwrap()).collect();
+            assert!(s[4] >= s[0], "{}: {s:?}", row[0]);
+        }
+    }
+}

@@ -1,0 +1,90 @@
+//! Fig. 15 — aggregated accuracy vs shard count for the five full systems
+//! (real training through the engine, reduced-scale corpus).
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::experiments::{common, Scale};
+use crate::util::Table;
+
+pub const SHARDS: [usize; 5] = [1, 2, 4, 8, 16];
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let Some(rt) = common::runtime() else {
+        let mut t = Table::new("Fig 15: SKIPPED (no artifacts)", &["note"]);
+        t.row(vec!["run `make artifacts` first".into()]);
+        return Ok(vec![t]);
+    };
+    let combos: Vec<(&str, &str)> = match scale {
+        Scale::Smoke => vec![("cifar10", "mobilenetv2_c10")],
+        Scale::Full => vec![
+            ("cifar10", "resnet34_c10"),
+            ("svhn", "resnet34_c10"),
+            ("cifar100", "vgg16_c100"),
+            ("cifar10", "mobilenetv2_c10"),
+        ],
+    };
+    let shards: &[usize] = scale.pick(&[1, 4, 16][..], &SHARDS[..]);
+    let mut out = Vec::new();
+    for (dataset, variant) in combos {
+        let mut header = vec!["system".to_string()];
+        header.extend(shards.iter().map(|s| format!("S={s}")));
+        let mut t = Table::new(
+            format!("Fig 15: accuracy vs shard count — {variant} on {dataset}"),
+            &header.iter().map(|s| s.as_str()).collect::<Vec<_>>(),
+        );
+        for v in SystemVariant::COMPARED {
+            let mut row = vec![v.display().to_string()];
+            for &s in shards {
+                let mut base = ExperimentConfig::default().with_shards(s);
+                base.apply("dataset", dataset)?;
+                let cfg = common::real_cfg(
+                    &base,
+                    scale.pick(1200, 4000),
+                    scale.pick(16, 40),
+                    scale.pick(2, 3),
+                );
+                let (_m, acc) =
+                    common::run_real(v, &cfg, rt.clone(), variant, scale.pick(1, 2))?;
+                row.push(common::f(acc.unwrap_or(0.0), 4));
+            }
+            t.row(row);
+        }
+        out.push(t);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accuracy_declines_with_shards_and_heavy_pruning_hurts() {
+        let tables = run(Scale::Smoke).unwrap();
+        let t = &tables[0];
+        if t.title.contains("SKIPPED") {
+            return;
+        }
+        let get = |name: &str, col: usize| -> f64 {
+            t.rows.iter().find(|r| r[0] == name).unwrap()[col].parse().unwrap()
+        };
+        let last_col = t.header.len() - 1;
+        // The sharding cost: every unpruned system loses accuracy from S=1
+        // to the largest S (paper Figs. 5/15).
+        for sys in ["SISA", "ARCANE"] {
+            assert!(
+                get(sys, 1) >= get(sys, last_col),
+                "{sys}: accuracy should fall with S"
+            );
+        }
+        // CAUSE's iterative pruning beats OMP-95's one-shot at S=1.
+        assert!(
+            get("CAUSE", 1) >= get("OMP-95", 1),
+            "CAUSE {} vs OMP-95 {}",
+            get("CAUSE", 1),
+            get("OMP-95", 1)
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Fig. 17 — ablation on the data-partition method:
+//! CAUSE (UCDP) vs CAUSE-U (uniform) vs CAUSE-C (class-based).
+//! (a) accuracy vs S (real training), (b) RSN vs S, (c) RSN vs ρ_u.
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::experiments::{common, Scale};
+use crate::util::Table;
+
+pub const SHARDS: [usize; 5] = [1, 2, 4, 8, 16];
+pub const PROBS: [f64; 5] = [0.1, 0.2, 0.3, 0.4, 0.5];
+
+const VARIANTS: [SystemVariant; 3] =
+    [SystemVariant::Cause, SystemVariant::CauseU, SystemVariant::CauseC];
+
+pub fn run(scale: Scale) -> Result<Vec<Table>> {
+    let mut out = Vec::new();
+
+    // (a) accuracy vs S — real PJRT training at reduced scale.
+    if let Some(rt) = common::runtime() {
+        let mut a = Table::new(
+            "Fig 17a: accuracy vs shard count (real training, proxy model)",
+            &["system", "S=1", "S=2", "S=4", "S=8", "S=16"],
+        );
+        let corpus = scale.pick(1200, 4000);
+        for v in VARIANTS {
+            let mut row = vec![v.display().to_string()];
+            for s in SHARDS {
+                let cfg = common::real_cfg(
+                    &ExperimentConfig::default().with_shards(s),
+                    corpus,
+                    scale.pick(16, 40),
+                    scale.pick(2, 3),
+                );
+                let (_m, acc) =
+                    common::run_real(v, &cfg, rt.clone(), "mobilenetv2_c10", scale.pick(1, 2))?;
+                row.push(common::f(acc.unwrap_or(0.0), 4));
+            }
+            a.row(row);
+        }
+        out.push(a);
+    }
+
+    // (b) RSN vs S.
+    let mut b = Table::new(
+        "Fig 17b: total RSN vs shard count",
+        &["system", "S=1", "S=2", "S=4", "S=8", "S=16"],
+    );
+    for v in VARIANTS {
+        let mut row = vec![v.display().to_string()];
+        for s in SHARDS {
+            let cfg = ExperimentConfig {
+                users: scale.pick(30, 100),
+                rounds: scale.pick(5, 10),
+                shards: s,
+                ..Default::default()
+            };
+            row.push(common::run_cost(v, &cfg)?.total_rsn().to_string());
+        }
+        b.row(row);
+    }
+    out.push(b);
+
+    // (c) RSN vs unlearning probability.
+    let mut c = Table::new(
+        "Fig 17c: total RSN vs unlearning probability (S=4)",
+        &["system", "p=0.1", "p=0.2", "p=0.3", "p=0.4", "p=0.5"],
+    );
+    for v in VARIANTS {
+        let mut row = vec![v.display().to_string()];
+        for p in PROBS {
+            let cfg = ExperimentConfig {
+                users: scale.pick(30, 100),
+                rounds: scale.pick(5, 10),
+                unlearn_prob: p,
+                ..Default::default()
+            };
+            row.push(common::run_cost(v, &cfg)?.total_rsn().to_string());
+        }
+        c.row(row);
+    }
+    out.push(c);
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ucdp_has_lowest_rsn_among_partitioners() {
+        let tables = run(Scale::Smoke).unwrap();
+        let b = tables
+            .iter()
+            .find(|t| t.title.starts_with("Fig 17b"))
+            .expect("RSN table");
+        let series = |name: &str| -> Vec<u64> {
+            let row = b.rows.iter().find(|r| r[0] == name).unwrap();
+            row[1..].iter().map(|c| c.parse().unwrap()).collect()
+        };
+        let cause = series("CAUSE");
+        let cause_u = series("CAUSE-U");
+        let cause_c = series("CAUSE-C");
+        // At large S the partitioning difference dominates.
+        assert!(cause[4] <= cause_u[4], "{cause:?} vs U {cause_u:?}");
+        assert!(cause[4] <= cause_c[4], "{cause:?} vs C {cause_c:?}");
+        // CAUSE's RSN falls with S; the uniform/class variants never
+        // improve with S (they rise outright once memory binds).
+        assert!(cause[4] < cause[0]);
+        assert!(cause_u[4] >= cause[4] && cause_c[4] >= cause[4]);
+    }
+}

@@ -1,0 +1,93 @@
+//! Experiment harness: one module per paper table/figure.
+//!
+//! Every experiment returns [`util::Table`]s shaped like the paper's
+//! artifact and is reachable three ways: `cause repro <id>` (CLI), the
+//! bench target of the same name, and the integration tests (reduced
+//! parameters via [`Scale`]).
+
+pub mod common;
+pub mod fig02_retrain_ratio;
+pub mod fig05_shards_accuracy;
+pub mod fig10_accuracy_curves;
+pub mod fig11_rsn_rounds;
+pub mod fig12_energy_shards;
+pub mod fig13_energy_prob;
+pub mod fig14_scalability;
+pub mod fig15_shard_accuracy;
+pub mod fig16_shard_rsn;
+pub mod fig17_partition_ablation;
+pub mod fibor_vs_random;
+pub mod table2_pruning;
+pub mod table3_sc;
+
+use crate::util::Table;
+
+/// How hard to run an experiment.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scale {
+    /// Integration-test scale: seconds.
+    Smoke,
+    /// Paper-shaped runs: the default for `cause repro`.
+    Full,
+}
+
+impl Scale {
+    pub fn from_env() -> Scale {
+        match std::env::var("CAUSE_SCALE").as_deref() {
+            Ok("smoke") => Scale::Smoke,
+            _ => Scale::Full,
+        }
+    }
+
+    /// Pick between smoke/full values.
+    pub fn pick<T>(&self, smoke: T, full: T) -> T {
+        match self {
+            Scale::Smoke => smoke,
+            Scale::Full => full,
+        }
+    }
+}
+
+/// Registry: experiment id -> runner. Used by the CLI and benches.
+pub fn run(id: &str, scale: Scale) -> anyhow::Result<Vec<Table>> {
+    match id {
+        "fig2" | "fig02" => fig02_retrain_ratio::run(scale),
+        "table2" => table2_pruning::run(scale),
+        "fig5" | "fig05" => fig05_shards_accuracy::run(scale),
+        "table3" => table3_sc::run(scale),
+        "fig10" | "fig18" => fig10_accuracy_curves::run(scale),
+        "fig11" => fig11_rsn_rounds::run(scale),
+        "fig12" => fig12_energy_shards::run(scale),
+        "fig13" => fig13_energy_prob::run(scale),
+        "fig14" => fig14_scalability::run(scale),
+        "fig15" => fig15_shard_accuracy::run(scale),
+        "fig16" => fig16_shard_rsn::run(scale),
+        "fig17" => fig17_partition_ablation::run(scale),
+        "fibor" => fibor_vs_random::run(scale),
+        other => anyhow::bail!(
+            "unknown experiment '{other}'; have: fig2 table2 fig5 table3 fig10 fig11 \
+             fig12 fig13 fig14 fig15 fig16 fig17 fibor"
+        ),
+    }
+}
+
+/// All experiment ids (CLI `repro all`).
+pub const ALL: [&str; 13] = [
+    "fig2", "table2", "fig5", "table3", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "fig16", "fig17", "fibor",
+];
+
+/// Write experiment tables to `results/<id>.json` and print them.
+pub fn report(id: &str, tables: &[Table]) -> anyhow::Result<()> {
+    use crate::util::Json;
+    let mut arr = Vec::new();
+    for t in tables {
+        println!("{}", t.render());
+        arr.push(t.to_json());
+    }
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let j = Json::obj().set("experiment", id).set("tables", Json::Arr(arr));
+    std::fs::write(dir.join(format!("{id}.json")), j.to_pretty())?;
+    Ok(())
+}

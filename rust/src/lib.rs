@@ -1,0 +1,44 @@
+//! # CAUSE — Constraint-aware Adaptive Exact Unlearning System at the network Edge
+//!
+//! A production-grade reproduction of *"Edge Unlearning is Not 'on Edge'! An
+//! Adaptive Exact Unlearning System on Resource-Constrained Devices"*
+//! (Xia et al., 2024) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the Rust coordinator: user-centered data
+//!   partitioning (UCDP), Fibonacci-based sub-model replacement (FiboR), the
+//!   EWMA shard controller (SC), pruning-aware memory accounting (RCMP),
+//!   the exact-unlearning engine, baselines (SISA / ARCANE / OMP), an edge
+//!   device simulator (memory + energy), and the experiment harness that
+//!   regenerates every table and figure in the paper.
+//! * **Layer 2 (build-time Python, `python/compile/model.py`)** — JAX
+//!   forward/backward for the edge models (MLP / CNN proxies), lowered once
+//!   to HLO text by `python/compile/aot.py`.
+//! * **Layer 1 (build-time Python, `python/compile/kernels/`)** — Pallas
+//!   kernels for the fused dense layers and magnitude pruning, invoked from
+//!   the Layer-2 graph so they lower into the same HLO artifact.
+//!
+//! Python never runs on the request path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`runtime` module) and drives training,
+//! pruning and inference natively.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod energy;
+pub mod experiments;
+pub mod memory;
+pub mod metrics;
+pub mod partition;
+pub mod prng;
+pub mod pruning;
+pub mod replacement;
+pub mod runtime;
+pub mod shard_controller;
+pub mod sim;
+pub mod testkit;
+pub mod training;
+pub mod unlearning;
+pub mod util;
+
+pub use config::ExperimentConfig;
+pub use coordinator::system::{CauseSystem, SystemVariant};

@@ -1,0 +1,155 @@
+//! `cause` — the CAUSE coordinator CLI.
+//!
+//! Subcommands:
+//!   repro <id>|all     regenerate a paper table/figure (see DESIGN.md index)
+//!   run [key=value..]  run one system over a generated trace and report
+//!   info               artifact + runtime information
+//!
+//! The argument parser is hand-rolled (no clap in the offline registry).
+
+use std::process::ExitCode;
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::experiments::{self, Scale};
+
+fn usage() -> &'static str {
+    "cause — Constraint-aware Adaptive Exact Unlearning System at the network Edge
+
+USAGE:
+    cause repro <experiment>|all [--smoke]
+    cause run [--system <name>] [--config <file>] [key=value ...]
+    cause info
+
+EXPERIMENTS (see DESIGN.md per-experiment index):
+    fig2 table2 fig5 table3 fig10 fig11 fig12 fig13 fig14 fig15 fig16 fig17 fibor
+
+SYSTEMS:
+    cause cause-no-sc cause-u cause-c cause-rand sisa arcane omp-70 omp-95
+
+CONFIG KEYS (key=value):
+    seed users rounds epochs_per_round shards memory_gb unlearn_prob
+    sc_gamma sc_p prune_keep model dataset
+"
+}
+
+fn cmd_repro(args: &[String]) -> anyhow::Result<()> {
+    let smoke = args.iter().any(|a| a == "--smoke");
+    let scale = if smoke { Scale::Smoke } else { Scale::from_env() };
+    let ids: Vec<&str> = match args.iter().find(|a| !a.starts_with("--")) {
+        Some(id) if id == "all" => experiments::ALL.to_vec(),
+        Some(id) => vec![id.as_str()],
+        None => anyhow::bail!("repro needs an experiment id (or 'all')\n\n{}", usage()),
+    };
+    for id in ids {
+        eprintln!("--- running {id} ({scale:?}) ---");
+        let t0 = std::time::Instant::now();
+        let tables = experiments::run(id, scale)?;
+        experiments::report(id, &tables)?;
+        eprintln!("--- {id} done in {:.1}s ---\n", t0.elapsed().as_secs_f64());
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &[String]) -> anyhow::Result<()> {
+    let mut cfg = ExperimentConfig::default();
+    let mut system = SystemVariant::Cause;
+    let mut it = args.iter().peekable();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--system" => {
+                let name = it.next().ok_or_else(|| anyhow::anyhow!("--system needs a name"))?;
+                system = SystemVariant::by_name(name)
+                    .ok_or_else(|| anyhow::anyhow!("unknown system '{name}'"))?;
+            }
+            "--config" => {
+                let path = it.next().ok_or_else(|| anyhow::anyhow!("--config needs a path"))?;
+                cfg = ExperimentConfig::from_file(std::path::Path::new(path))?;
+            }
+            kv if kv.contains('=') => {
+                let (k, v) = kv.split_once('=').unwrap();
+                cfg.apply(k, v)?;
+            }
+            other => anyhow::bail!("unexpected argument '{other}'\n\n{}", usage()),
+        }
+    }
+    cfg.validate()?;
+
+    println!(
+        "running {} | model={} dataset={} S={} T={} users={} C_m={:.1}GB rho_u={}",
+        system.display(),
+        cfg.model.name,
+        cfg.dataset.name,
+        cfg.shards,
+        cfg.rounds,
+        cfg.users,
+        cfg.memory_bytes as f64 / (1u64 << 30) as f64,
+        cfg.unlearn_prob
+    );
+    let pop = cause::experiments::common::population(&cfg);
+    let trace = cause::experiments::common::trace(&cfg, &pop);
+    let mut engine = system.build_cost(&cfg)?;
+    engine.run_trace(&pop, &trace)?;
+    let m = engine.metrics.clone();
+    println!("{}", m.to_json().to_pretty());
+    println!(
+        "total RSN {}  energy {:.0} J  requests {}  store: {} stored / {} replaced / {} rejected",
+        m.total_rsn(),
+        m.energy_joules,
+        m.total_requests(),
+        m.ckpts_stored,
+        m.ckpts_replaced,
+        m.ckpts_rejected
+    );
+    Ok(())
+}
+
+fn cmd_info() -> anyhow::Result<()> {
+    let dir = cause::experiments::common::artifacts_dir();
+    println!("artifact dir: {}", dir.display());
+    match cause::runtime::ArtifactManifest::load(&dir) {
+        Ok(m) => {
+            println!("artifacts: {}", m.artifacts.len());
+            for (name, a) in &m.artifacts {
+                println!(
+                    "  {:<32} file={} inputs={} outputs={} params={}",
+                    name,
+                    a.file.display(),
+                    a.inputs.len(),
+                    a.outputs.len(),
+                    a.meta.get("param_count").map(|s| s.as_str()).unwrap_or("?")
+                );
+            }
+        }
+        Err(e) => println!("no manifest ({e}); run `make artifacts`"),
+    }
+    match cause::runtime::Runtime::new(&dir) {
+        Ok(rt) => println!("PJRT platform: {}", rt.platform()),
+        Err(e) => println!("PJRT unavailable: {e:#}"),
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let result = match args.first().map(|s| s.as_str()) {
+        Some("repro") => cmd_repro(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("info") => cmd_info(),
+        Some("--help") | Some("-h") | None => {
+            print!("{}", usage());
+            Ok(())
+        }
+        Some(other) => {
+            eprintln!("unknown command '{other}'\n\n{}", usage());
+            return ExitCode::FAILURE;
+        }
+    };
+    match result {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,5 @@
+//! Device memory accounting: the checkpoint (sub-model) store.
+
+pub mod store;
+
+pub use store::{Checkpoint, CheckpointId, ModelStore, StoreEvent, StoreStats};

@@ -1,0 +1,273 @@
+//! The sub-model checkpoint store — the paper's normalized memory
+//! (`N_mem` slots) plus the replacement machinery of Algorithm 2.
+//!
+//! Slots hold checkpoints of shard lineages at specific rounds. While free
+//! slots remain, new checkpoints are stored directly (Algorithm 2 lines
+//! 5–7); once full, the configured [`ReplacementPolicy`] picks the victim
+//! slot (lines 9–11) or rejects the store (the no-replacement baselines).
+//!
+//! The store also implements Algorithm 3 line 11: when an unlearning
+//! request invalidates checkpoints (they contain the unlearned data), they
+//! are deleted in place, freeing slots.
+
+use crate::replacement::ReplacementPolicy;
+use crate::runtime::HostTensor;
+
+/// Unique checkpoint id (monotonic per store).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct CheckpointId(pub u64);
+
+/// A stored sub-model checkpoint.
+#[derive(Clone, Debug)]
+pub struct Checkpoint {
+    pub id: CheckpointId,
+    /// Shard lineage this checkpoint belongs to.
+    pub lineage: usize,
+    /// Training round after which it was taken (1-based).
+    pub round: u32,
+    /// Number of lineage *segments* (rounds of data) covered — a checkpoint
+    /// covers a contiguous prefix of its lineage's training history.
+    pub covered_segments: u32,
+    /// Stored (pruned) size in bytes.
+    pub size_bytes: u64,
+    /// Actual parameters when running with the PJRT trainer; None in the
+    /// pure-accounting path.
+    pub params: Option<Vec<HostTensor>>,
+}
+
+/// Outcome of a store attempt.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreEvent {
+    /// Stored into a free slot.
+    Stored { slot: usize },
+    /// Evicted the previous occupant of `slot`.
+    Replaced { slot: usize, evicted: CheckpointId },
+    /// Dropped (no-replacement policy and memory full).
+    Rejected,
+}
+
+/// Cumulative counters for reporting.
+#[derive(Clone, Debug, Default)]
+pub struct StoreStats {
+    pub stored: u64,
+    pub replaced: u64,
+    pub rejected: u64,
+    pub invalidated: u64,
+}
+
+/// The checkpoint store: `capacity` normalized slots.
+pub struct ModelStore {
+    slots: Vec<Option<Checkpoint>>,
+    policy: Box<dyn ReplacementPolicy>,
+    next_id: u64,
+    stats: StoreStats,
+}
+
+impl ModelStore {
+    /// `capacity` = N_mem (the paper normalizes memory by sub-model size).
+    pub fn new(capacity: usize, policy: Box<dyn ReplacementPolicy>) -> Self {
+        assert!(capacity >= 1, "store needs at least one slot");
+        Self { slots: vec![None; capacity], policy, next_id: 0, stats: StoreStats::default() }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn occupied(&self) -> usize {
+        self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    pub fn stats(&self) -> &StoreStats {
+        &self.stats
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.policy.name()
+    }
+
+    /// Allocate an id for a checkpoint (ids are store-scoped).
+    pub fn next_id(&mut self) -> CheckpointId {
+        let id = CheckpointId(self.next_id);
+        self.next_id += 1;
+        id
+    }
+
+    /// Store a checkpoint per Algorithm 2. Returns what happened.
+    pub fn store(&mut self, ckpt: Checkpoint) -> StoreEvent {
+        if let Some(free) = self.slots.iter().position(|s| s.is_none()) {
+            self.slots[free] = Some(ckpt);
+            self.stats.stored += 1;
+            return StoreEvent::Stored { slot: free };
+        }
+        match self.policy.victim(self.slots.len()) {
+            Some(slot) => {
+                let evicted = self.slots[slot].as_ref().expect("full store").id;
+                self.slots[slot] = Some(ckpt);
+                self.stats.stored += 1;
+                self.stats.replaced += 1;
+                StoreEvent::Replaced { slot, evicted }
+            }
+            None => {
+                self.stats.rejected += 1;
+                StoreEvent::Rejected
+            }
+        }
+    }
+
+    /// Newest stored checkpoint of `lineage` covering at most
+    /// `max_segments` segments (i.e. taken before the poisoned data) —
+    /// the retrain start point of Algorithm 3 line 8.
+    pub fn best_checkpoint(&self, lineage: usize, max_segments: u32) -> Option<&Checkpoint> {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|c| c.lineage == lineage && c.covered_segments <= max_segments)
+            .max_by_key(|c| c.covered_segments)
+    }
+
+    /// Latest checkpoint of a lineage regardless of coverage (warm start
+    /// for incremental training).
+    pub fn latest(&self, lineage: usize) -> Option<&Checkpoint> {
+        self.slots
+            .iter()
+            .flatten()
+            .filter(|c| c.lineage == lineage)
+            .max_by_key(|c| c.covered_segments)
+    }
+
+    /// Delete every checkpoint matching `pred` (Algorithm 3 line 11);
+    /// returns how many were removed.
+    pub fn invalidate(&mut self, mut pred: impl FnMut(&Checkpoint) -> bool) -> usize {
+        let mut n = 0;
+        for slot in &mut self.slots {
+            if slot.as_ref().map(&mut pred).unwrap_or(false) {
+                *slot = None;
+                n += 1;
+            }
+        }
+        self.stats.invalidated += n as u64;
+        n
+    }
+
+    /// Iterate stored checkpoints.
+    pub fn iter(&self) -> impl Iterator<Item = &Checkpoint> {
+        self.slots.iter().flatten()
+    }
+
+    /// Total bytes currently stored (diagnostics; capacity is slot-based).
+    pub fn stored_bytes(&self) -> u64 {
+        self.iter().map(|c| c.size_bytes).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::replacement::{FiboR, NoReplace};
+    use crate::testkit::forall_prefixes;
+
+    fn ckpt(id: u64, lineage: usize, round: u32, segs: u32) -> Checkpoint {
+        Checkpoint {
+            id: CheckpointId(id),
+            lineage,
+            round,
+            covered_segments: segs,
+            size_bytes: 100,
+            params: None,
+        }
+    }
+
+    #[test]
+    fn fills_free_slots_first() {
+        let mut st = ModelStore::new(3, Box::new(FiboR::new()));
+        assert_eq!(st.store(ckpt(0, 0, 1, 1)), StoreEvent::Stored { slot: 0 });
+        assert_eq!(st.store(ckpt(1, 1, 1, 1)), StoreEvent::Stored { slot: 1 });
+        assert_eq!(st.store(ckpt(2, 2, 1, 1)), StoreEvent::Stored { slot: 2 });
+        assert_eq!(st.occupied(), 3);
+        match st.store(ckpt(3, 0, 2, 2)) {
+            StoreEvent::Replaced { evicted, .. } => assert_eq!(evicted, CheckpointId(0)),
+            other => panic!("expected replacement, got {other:?}"),
+        }
+        assert_eq!(st.occupied(), 3);
+    }
+
+    #[test]
+    fn no_replace_rejects_when_full() {
+        let mut st = ModelStore::new(2, Box::new(NoReplace));
+        st.store(ckpt(0, 0, 1, 1));
+        st.store(ckpt(1, 0, 2, 2));
+        assert_eq!(st.store(ckpt(2, 0, 3, 3)), StoreEvent::Rejected);
+        assert_eq!(st.stats().rejected, 1);
+    }
+
+    #[test]
+    fn best_checkpoint_respects_coverage_bound() {
+        let mut st = ModelStore::new(4, Box::new(FiboR::new()));
+        st.store(ckpt(0, 0, 1, 1));
+        st.store(ckpt(1, 0, 2, 2));
+        st.store(ckpt(2, 0, 3, 3));
+        st.store(ckpt(3, 1, 3, 3));
+        // Unlearning data learned in segment 3 → need coverage <= 2.
+        let best = st.best_checkpoint(0, 2).unwrap();
+        assert_eq!(best.id, CheckpointId(1));
+        // Nothing early enough → None.
+        assert!(st.best_checkpoint(0, 0).is_none());
+        // Other lineage untouched.
+        assert_eq!(st.best_checkpoint(1, 3).unwrap().id, CheckpointId(3));
+    }
+
+    #[test]
+    fn invalidate_frees_slots_for_reuse() {
+        let mut st = ModelStore::new(2, Box::new(NoReplace));
+        st.store(ckpt(0, 0, 1, 1));
+        st.store(ckpt(1, 0, 2, 2));
+        assert_eq!(st.invalidate(|c| c.covered_segments >= 2), 1);
+        assert_eq!(st.occupied(), 1);
+        // Freed slot accepts a new checkpoint even under NoReplace.
+        assert!(matches!(st.store(ckpt(2, 0, 3, 1)), StoreEvent::Stored { .. }));
+    }
+
+    #[test]
+    fn prop_occupancy_never_exceeds_capacity() {
+        forall_prefixes(
+            0xF1B0,
+            60,
+            |rng, size| {
+                let n = 1 + (40.0 * size) as usize;
+                (0..n)
+                    .map(|i| {
+                        (
+                            i as u64,
+                            rng.range(0, 4),
+                            rng.range(1, 10) as u32,
+                            rng.chance(0.2),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            || ModelStore::new(5, Box::new(FiboR::new())),
+            |st, (id, lineage, round, invalidate)| {
+                if *invalidate {
+                    st.invalidate(|c| c.lineage == *lineage);
+                } else {
+                    st.store(ckpt(*id, *lineage, *round, *round));
+                }
+            },
+            |st| {
+                if st.occupied() > st.capacity() {
+                    return Err("over capacity".into());
+                }
+                // best_checkpoint coverage bound always honored.
+                for l in 0..4 {
+                    if let Some(c) = st.best_checkpoint(l, 3) {
+                        if c.covered_segments > 3 {
+                            return Err("coverage bound violated".into());
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

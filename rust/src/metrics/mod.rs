@@ -1,0 +1,112 @@
+//! Run metrics: everything the paper reports, accumulated per round.
+
+/// Metrics for one system run over a trace.
+#[derive(Clone, Debug, Default)]
+pub struct RunMetrics {
+    /// Retrained-sample number per round (the paper's RSN).
+    pub rsn_by_round: Vec<u64>,
+    /// Unlearning requests served per round.
+    pub requests_by_round: Vec<u64>,
+    /// Retrains started from a stored checkpoint vs from scratch.
+    pub warm_retrains: u64,
+    pub scratch_retrains: u64,
+    /// Lineages retrained in total (a request can touch several).
+    pub lineages_retrained: u64,
+    /// Energy consumed by unlearning work, joules.
+    pub energy_joules: f64,
+    /// Pruning passes executed.
+    pub prunes: u64,
+    /// Store events.
+    pub ckpts_stored: u64,
+    pub ckpts_replaced: u64,
+    pub ckpts_rejected: u64,
+    pub ckpts_invalidated: u64,
+    /// Ensemble accuracy per evaluation point (only with a real trainer).
+    pub accuracy_by_round: Vec<Option<f64>>,
+}
+
+impl RunMetrics {
+    pub fn total_rsn(&self) -> u64 {
+        self.rsn_by_round.iter().sum()
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.requests_by_round.iter().sum()
+    }
+
+    pub fn final_accuracy(&self) -> Option<f64> {
+        self.accuracy_by_round.iter().rev().flatten().next().copied()
+    }
+
+    /// Cumulative RSN after each round (Fig. 11's series).
+    pub fn cumulative_rsn(&self) -> Vec<u64> {
+        let mut acc = 0;
+        self.rsn_by_round
+            .iter()
+            .map(|r| {
+                acc += r;
+                acc
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        Json::obj()
+            .set("rsn_by_round", self.rsn_by_round.clone())
+            .set("total_rsn", self.total_rsn())
+            .set("requests", self.total_requests())
+            .set("warm_retrains", self.warm_retrains)
+            .set("scratch_retrains", self.scratch_retrains)
+            .set("lineages_retrained", self.lineages_retrained)
+            .set("energy_joules", self.energy_joules)
+            .set("prunes", self.prunes)
+            .set("ckpts_stored", self.ckpts_stored)
+            .set("ckpts_replaced", self.ckpts_replaced)
+            .set("ckpts_rejected", self.ckpts_rejected)
+            .set("ckpts_invalidated", self.ckpts_invalidated)
+            .set(
+                "accuracy_by_round",
+                Json::Arr(
+                    self.accuracy_by_round
+                        .iter()
+                        .map(|a| a.map(Json::Num).unwrap_or(Json::Null))
+                        .collect(),
+                ),
+            )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cumulative_and_totals() {
+        let m = RunMetrics {
+            rsn_by_round: vec![10, 20, 30],
+            requests_by_round: vec![1, 2, 3],
+            ..Default::default()
+        };
+        assert_eq!(m.total_rsn(), 60);
+        assert_eq!(m.cumulative_rsn(), vec![10, 30, 60]);
+        assert_eq!(m.total_requests(), 6);
+    }
+
+    #[test]
+    fn final_accuracy_skips_missing() {
+        let m = RunMetrics {
+            accuracy_by_round: vec![Some(0.5), None, Some(0.7), None],
+            ..Default::default()
+        };
+        assert_eq!(m.final_accuracy(), Some(0.7));
+        assert_eq!(RunMetrics::default().final_accuracy(), None);
+    }
+
+    #[test]
+    fn json_has_key_fields() {
+        let s = RunMetrics::default().to_json().to_string();
+        assert!(s.contains("total_rsn"));
+        assert!(s.contains("energy_joules"));
+    }
+}

@@ -1,0 +1,115 @@
+//! Class-based partitioning — the ARCANE baseline.
+//!
+//! ARCANE shards by label: classes are grouped into `s_t` contiguous groups
+//! and each sub-model trains on one group ("one-class classifiers" grouped
+//! when classes > shards). A mixed-class data block therefore *splits*
+//! across shards, and a user's unlearning request fans out to every shard
+//! holding any of their classes.
+
+use crate::data::dataset::DataBlock;
+use crate::partition::{Partitioner, Placement, ShardId};
+
+/// Class-range partitioner: class c → shard `c * s_t / classes`.
+pub struct ClassBased {
+    classes: usize,
+}
+
+impl ClassBased {
+    pub fn new(classes: usize) -> Self {
+        assert!(classes >= 1);
+        Self { classes }
+    }
+
+    pub fn shard_of_class(&self, class: usize, s_t: usize) -> ShardId {
+        class * s_t / self.classes
+    }
+}
+
+impl Partitioner for ClassBased {
+    fn name(&self) -> &'static str {
+        "class_based"
+    }
+
+    fn assign(&mut self, blocks: &[DataBlock], s_t: usize) -> Vec<Placement> {
+        assert!(s_t >= 1);
+        let mut out = Vec::new();
+        for b in blocks {
+            debug_assert_eq!(b.class_counts.len(), self.classes);
+            // Accumulate per-shard portions of this block.
+            let mut per_shard = vec![0u64; s_t];
+            for (class, count) in b.class_counts.iter().enumerate() {
+                per_shard[self.shard_of_class(class, s_t)] += count;
+            }
+            for (shard, samples) in per_shard.into_iter().enumerate() {
+                if samples > 0 {
+                    out.push(Placement { block: b.id, shard, samples });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::catalog::{CIFAR10, CIFAR100};
+    use crate::data::dataset::{EdgePopulation, PopulationConfig};
+    use crate::partition::coverage_ok;
+
+    fn pop(seed: u64) -> EdgePopulation {
+        EdgePopulation::generate(PopulationConfig {
+            spec: CIFAR10.scaled(10_000),
+            users: 30,
+            rounds: 4,
+            size_sigma: 0.8,
+            label_alpha: 0.5,
+            arrival_prob: 0.7,
+            seed,
+        })
+    }
+
+    #[test]
+    fn class_ranges_cover_all_shards() {
+        let cb = ClassBased::new(10);
+        for s_t in 1..=8 {
+            let mut hit = vec![false; s_t];
+            for c in 0..10 {
+                let s = cb.shard_of_class(c, s_t);
+                assert!(s < s_t);
+                hit[s] = true;
+            }
+            if s_t <= 10 {
+                assert!(hit.iter().all(|h| *h), "s_t={s_t} left shards empty");
+            }
+        }
+        // 100-class case (CIFAR-100 / ARCANE grouping).
+        let cb100 = ClassBased::new(CIFAR100.classes);
+        assert_eq!(cb100.shard_of_class(0, 4), 0);
+        assert_eq!(cb100.shard_of_class(99, 4), 3);
+    }
+
+    #[test]
+    fn splits_blocks_but_preserves_totals() {
+        let p = pop(1);
+        let mut cb = ClassBased::new(10);
+        for r in 1..=4 {
+            let placements = cb.assign(p.blocks_at(r), 4);
+            coverage_ok(p.blocks_at(r), &placements, 4).unwrap();
+        }
+    }
+
+    #[test]
+    fn mixed_class_blocks_scatter() {
+        let p = pop(2);
+        let mut cb = ClassBased::new(10);
+        let placements = cb.assign(p.blocks_at(1), 4);
+        // Some block should appear in more than one shard (non-IID but
+        // multi-class users).
+        let mut counts = std::collections::BTreeMap::new();
+        for pl in &placements {
+            *counts.entry(pl.block).or_insert(0) += 1;
+        }
+        assert!(counts.values().any(|c| *c > 1), "no block split across shards");
+    }
+}

@@ -1,0 +1,76 @@
+//! Data partitioning strategies: UCDP (the paper's), uniform (SISA) and
+//! class-based (ARCANE).
+//!
+//! A partitioner assigns each arriving [`DataBlock`] to one or more shard
+//! *lineages* (a block may split across shards only under the class-based
+//! scheme, where a mixed-class block scatters by label). Assignments are
+//! sticky: a partitioner sees each round's new blocks once and its internal
+//! state (e.g. UCDP's user → shard map) persists across rounds.
+
+pub mod class_based;
+pub mod ucdp;
+pub mod uniform;
+
+use crate::data::dataset::{BlockId, DataBlock};
+
+pub use class_based::ClassBased;
+pub use ucdp::Ucdp;
+pub use uniform::Uniform;
+
+/// A shard lineage index (0-based; lineage `s` persists across rounds).
+pub type ShardId = usize;
+
+/// One placement: `samples` of `block` assigned to `shard`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    pub block: BlockId,
+    pub shard: ShardId,
+    pub samples: u64,
+}
+
+/// A data-partition strategy.
+pub trait Partitioner: Send {
+    fn name(&self) -> &'static str;
+
+    /// Assign this round's new blocks to shards `0..s_t`.
+    ///
+    /// Every block's samples must be fully placed (the sum of placements
+    /// per block equals `block.samples`) — exact unlearning requires full
+    /// coverage. `s_t` may shrink between rounds (shard controller); it
+    /// never exceeds the initial shard count.
+    fn assign(&mut self, blocks: &[DataBlock], s_t: usize) -> Vec<Placement>;
+}
+
+/// Check the full-coverage contract (used by tests and debug assertions).
+pub fn coverage_ok(blocks: &[DataBlock], placements: &[Placement], s_t: usize) -> Result<(), String> {
+    use std::collections::BTreeMap;
+    let mut placed: BTreeMap<BlockId, u64> = BTreeMap::new();
+    for p in placements {
+        if p.shard >= s_t {
+            return Err(format!("placement {p:?} outside 0..{s_t}"));
+        }
+        if p.samples == 0 {
+            return Err(format!("zero-sample placement {p:?}"));
+        }
+        *placed.entry(p.block).or_default() += p.samples;
+    }
+    for b in blocks {
+        let got = placed.remove(&b.id).unwrap_or(0);
+        if got != b.samples {
+            return Err(format!("block {:?}: placed {got} of {} samples", b.id, b.samples));
+        }
+    }
+    if let Some((id, _)) = placed.into_iter().next() {
+        return Err(format!("placement for unknown block {id:?}"));
+    }
+    Ok(())
+}
+
+/// Per-shard sample totals of a placement set (balance diagnostics).
+pub fn shard_loads(placements: &[Placement], s_t: usize) -> Vec<u64> {
+    let mut loads = vec![0u64; s_t];
+    for p in placements {
+        loads[p.shard] += p.samples;
+    }
+    loads
+}

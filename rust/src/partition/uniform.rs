@@ -1,0 +1,114 @@
+//! Uniform partitioning — the SISA baseline.
+//!
+//! SISA assigns training *samples* to shards uniformly at random, so every
+//! arriving data block scatters across all active shards (near-equal
+//! portions). This keeps shards perfectly balanced but means a user's
+//! unlearning request — even for a single block — touches *every* shard
+//! holding a piece of it, which is exactly the fan-out CAUSE's UCDP avoids
+//! (and why SISA's RSN grows with the shard count in Figs. 14/16).
+
+use crate::data::dataset::DataBlock;
+use crate::partition::{Partitioner, Placement};
+use crate::prng::Rng;
+
+/// Sample-level uniform partitioner.
+pub struct Uniform {
+    rng: Rng,
+}
+
+impl Uniform {
+    pub fn new(max_shards: usize) -> Self {
+        // max_shards only fixes the RNG stream; assignment is per-call.
+        Self { rng: Rng::new(0x5150 ^ max_shards as u64) }
+    }
+}
+
+impl Partitioner for Uniform {
+    fn name(&self) -> &'static str {
+        "uniform"
+    }
+
+    fn assign(&mut self, blocks: &[DataBlock], s_t: usize) -> Vec<Placement> {
+        assert!(s_t >= 1);
+        let mut out = Vec::with_capacity(blocks.len() * s_t);
+        for b in blocks {
+            // Even split with the remainder scattered uniformly.
+            let base = b.samples / s_t as u64;
+            let rem = (b.samples % s_t as u64) as usize;
+            let mut extra = vec![0u64; s_t];
+            for _ in 0..rem {
+                extra[self.rng.below(s_t as u64) as usize] += 1;
+            }
+            for (shard, ex) in extra.iter().enumerate() {
+                let samples = base + ex;
+                if samples > 0 {
+                    out.push(Placement { block: b.id, shard, samples });
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::catalog::CIFAR10;
+    use crate::data::dataset::{EdgePopulation, PopulationConfig};
+    use crate::partition::{coverage_ok, shard_loads};
+
+    fn pop(seed: u64) -> EdgePopulation {
+        EdgePopulation::generate(PopulationConfig {
+            spec: CIFAR10.scaled(20_000),
+            users: 50,
+            rounds: 5,
+            size_sigma: 0.8,
+            label_alpha: 0.5,
+            arrival_prob: 0.7,
+            seed,
+        })
+    }
+
+    #[test]
+    fn covers_and_balances_tightly() {
+        let p = pop(1);
+        let mut part = Uniform::new(4);
+        let mut all = Vec::new();
+        for r in 1..=5 {
+            let placements = part.assign(p.blocks_at(r), 4);
+            coverage_ok(p.blocks_at(r), &placements, 4).unwrap();
+            all.extend(placements);
+        }
+        let loads = shard_loads(&all, 4);
+        let max = *loads.iter().max().unwrap() as f64;
+        let min = *loads.iter().min().unwrap().max(&1) as f64;
+        assert!(max / min < 1.05, "sample-level uniform must balance: {loads:?}");
+    }
+
+    #[test]
+    fn blocks_scatter_across_all_shards() {
+        let p = pop(2);
+        let mut part = Uniform::new(4);
+        let placements = part.assign(p.blocks_at(1), 4);
+        // Any reasonably-sized block must appear in all 4 shards.
+        for b in p.blocks_at(1) {
+            if b.samples >= 8 {
+                let shards: std::collections::BTreeSet<_> = placements
+                    .iter()
+                    .filter(|pl| pl.block == b.id)
+                    .map(|pl| pl.shard)
+                    .collect();
+                assert_eq!(shards.len(), 4, "block {:?} ({} samples)", b.id, b.samples);
+            }
+        }
+    }
+
+    #[test]
+    fn single_shard_is_identity() {
+        let p = pop(3);
+        let mut part = Uniform::new(1);
+        let placements = part.assign(p.blocks_at(1), 1);
+        assert_eq!(placements.len(), p.blocks_at(1).len());
+        coverage_ok(p.blocks_at(1), &placements, 1).unwrap();
+    }
+}

@@ -1,0 +1,129 @@
+//! Pruning schedules: RCMP (iterative prune-and-retrain) vs OMP (one-shot),
+//! plus the size accounting used by the cost path.
+//!
+//! The actual tensor pruning runs through the Layer-1 Pallas kernel (the
+//! `<variant>/prune` artifact); this module decides *when* and *how hard*
+//! to prune during a training run, and what the stored checkpoint size is.
+
+/// How a system prunes its sub-models.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PruneSchedule {
+    /// No pruning (SISA / ARCANE).
+    None,
+    /// RCMP: interleave pruning with training, stepping the keep fraction
+    /// geometrically from 1.0 down to `keep` over `steps` prune passes,
+    /// fine-tuning between passes (paper §4.2, Fig. 4).
+    Iterative { keep: f64, steps: u32 },
+    /// OMP: a single magnitude-prune at the end of training.
+    OneShot { keep: f64 },
+}
+
+impl PruneSchedule {
+    /// Final keep fraction of prunable weights.
+    pub fn final_keep(&self) -> f64 {
+        match self {
+            PruneSchedule::None => 1.0,
+            PruneSchedule::Iterative { keep, .. } | PruneSchedule::OneShot { keep } => *keep,
+        }
+    }
+
+    /// Keep fraction to apply after prune pass `i` (0-based) of `total`
+    /// passes in this training run. For `OneShot` only the last pass acts.
+    ///
+    /// The iterative (RCMP) schedule reaches the target keep one pass
+    /// *early* so the final pass fine-tunes the pruned structure; the very
+    /// last pass re-applies the target keep to refresh sparsity (plain-SGD
+    /// fine-tuning regrows pruned weights — they restart near zero, so the
+    /// refresh removes mostly the regrown mass: the paper's
+    /// prune-then-fine-tune loop of Fig. 4).
+    pub fn keep_at(&self, pass: u32, total_passes: u32) -> Option<f64> {
+        let total = total_passes.max(1);
+        match self {
+            PruneSchedule::None => None,
+            PruneSchedule::OneShot { keep } => {
+                (pass + 1 == total).then_some(*keep)
+            }
+            PruneSchedule::Iterative { keep, steps } => {
+                if total == 1 {
+                    return (pass == 0).then_some(*keep);
+                }
+                // Geometric descent over the last `steps` passes before the
+                // final fine-tune pass, then a sparsity refresh at the end.
+                let steps = (*steps).min(total - 1).max(1);
+                if pass + 1 == total {
+                    return Some(*keep); // refresh after fine-tune
+                }
+                let first_active = (total - 1) - steps;
+                if pass < first_active {
+                    return None;
+                }
+                let i = pass - first_active + 1; // 1..=steps
+                Some(keep.powf(i as f64 / steps as f64))
+            }
+        }
+    }
+
+    /// Number of prune kernel invocations a training run with
+    /// `total_passes` checkpoints will execute (energy accounting).
+    pub fn prune_ops(&self, total_passes: u32) -> u64 {
+        let total = total_passes.max(1);
+        (0..total).filter(|p| self.keep_at(*p, total).is_some()).count() as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_keep_values() {
+        assert_eq!(PruneSchedule::None.final_keep(), 1.0);
+        assert_eq!(PruneSchedule::OneShot { keep: 0.05 }.final_keep(), 0.05);
+        assert_eq!(PruneSchedule::Iterative { keep: 0.3, steps: 4 }.final_keep(), 0.3);
+    }
+
+    #[test]
+    fn one_shot_fires_only_at_end() {
+        let s = PruneSchedule::OneShot { keep: 0.3 };
+        assert_eq!(s.keep_at(0, 4), None);
+        assert_eq!(s.keep_at(2, 4), None);
+        assert_eq!(s.keep_at(3, 4), Some(0.3));
+        assert_eq!(s.prune_ops(4), 1);
+    }
+
+    #[test]
+    fn iterative_steps_down_geometrically_then_refreshes() {
+        let s = PruneSchedule::Iterative { keep: 0.3, steps: 3 };
+        let keeps: Vec<f64> = (0..5).filter_map(|p| s.keep_at(p, 5)).collect();
+        // 3 descending passes, a fine-tune gap, then the refresh pass.
+        assert_eq!(keeps.len(), 4);
+        assert!(keeps[0] > keeps[1] && keeps[1] > keeps[2]);
+        assert!((keeps[2] - 0.3).abs() < 1e-12);
+        assert!((keeps[3] - 0.3).abs() < 1e-12);
+        // Constant prune *fraction* per step (geometric schedule).
+        let r1 = keeps[1] / keeps[0];
+        let r2 = keeps[2] / keeps[1];
+        assert!((r1 - r2).abs() < 1e-9);
+        assert_eq!(s.prune_ops(5), 4);
+    }
+
+    #[test]
+    fn iterative_single_pass_prunes_once_at_target() {
+        let s = PruneSchedule::Iterative { keep: 0.3, steps: 10 };
+        assert_eq!(s.keep_at(0, 1), Some(0.3));
+        assert_eq!(s.prune_ops(1), 1);
+        // Two passes: descend to target at pass 0, refresh at pass 1.
+        let keeps: Vec<f64> = (0..2).filter_map(|p| s.keep_at(p, 2)).collect();
+        assert_eq!(keeps.len(), 2);
+        assert!((keeps[1] - 0.3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn none_never_fires() {
+        let s = PruneSchedule::None;
+        for p in 0..5 {
+            assert_eq!(s.keep_at(p, 5), None);
+        }
+        assert_eq!(s.prune_ops(5), 0);
+    }
+}

@@ -1,0 +1,201 @@
+//! FiboR — Fibonacci-based replacement (paper §4.4, Algorithm 2).
+//!
+//! The replacement index jumps by Fibonacci strides:
+//!
+//! ```text
+//! I_replace = [ I_replace + f(I_FiboR) % N_mem ] % N_mem
+//! ```
+//!
+//! where `f` is the *distinct-value* Fibonacci sequence 0, 1, 2, 3, 5, 8, 13…
+//! (standard Fibonacci with the duplicate 1 removed, i.e. f(0) = 0 and
+//! f(k) = F(k+1) for k ≥ 1). That is the only reading under which the
+//! paper's worked example (Fig. 8) checks out: with capacity 8, M9..M14
+//! replace slots 1, 2, 4, 7, then the slot holding M11, then the slot
+//! holding M13, leaving {M3, M5, M6, M8, M9, M10, M12, M14} in memory —
+//! reproduced in `paper_example` below.
+//!
+//! The cyclic, non-uniform visit pattern gives *temporal sparsity*: some
+//! slots are revisited rarely and keep old checkpoints alive (the paper's
+//! capacity-10 remark: a 60-step period in which some slots are replaced
+//! only 4 times vs the uniform 6), so for an arbitrary unlearning request
+//! a checkpoint near the retrain start point usually survives.
+//!
+//! Fibonacci values are maintained *mod N_mem* incrementally, so the state
+//! never overflows no matter how long the device runs.
+
+use crate::replacement::ReplacementPolicy;
+
+/// FiboR policy state.
+pub struct FiboR {
+    /// Current replacement index (0-based; the paper is 1-based).
+    i_replace: usize,
+    /// Next position k in the distinct-Fibonacci sequence (I_FiboR).
+    k: u64,
+    /// F(k) mod m and F(k+1) mod m for the current k (valid when k >= 1).
+    fa: u64,
+    fb: u64,
+    /// Modulus the (fa, fb) state is valid for; 0 = not initialized.
+    m: usize,
+}
+
+impl FiboR {
+    pub fn new() -> Self {
+        Self { i_replace: 0, k: 0, fa: 0, fb: 0, m: 0 }
+    }
+
+    /// Recompute (F(k) mod cap, F(k+1) mod cap) from scratch — only needed
+    /// when the store capacity changes mid-run (rare).
+    fn rebuild(&mut self, cap: usize) {
+        let (mut a, mut b) = (0u64, 1u64); // F(0), F(1)
+        for _ in 0..self.k {
+            let c = (a + b) % cap as u64;
+            a = b;
+            b = c;
+        }
+        self.fa = a;
+        self.fb = b;
+        self.m = cap;
+    }
+}
+
+impl Default for FiboR {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplacementPolicy for FiboR {
+    fn name(&self) -> &'static str {
+        "fibor"
+    }
+
+    fn victim(&mut self, capacity: usize) -> Option<usize> {
+        assert!(capacity > 0);
+        let cap64 = capacity as u64;
+        // Stride f(k) mod capacity.
+        let stride = if self.k == 0 {
+            0
+        } else {
+            if self.m != capacity {
+                self.rebuild(capacity);
+            }
+            (self.fb % cap64) as usize // f(k) = F(k+1)
+        };
+        // Advance to k+1, keeping (fa, fb) = (F(k), F(k+1)) mod capacity.
+        self.k += 1;
+        if self.k == 1 || self.m != capacity {
+            self.rebuild(capacity);
+        } else {
+            let c = (self.fa + self.fb) % cap64;
+            self.fa = self.fb;
+            self.fb = c;
+        }
+        self.i_replace = (self.i_replace + stride) % capacity;
+        Some(self.i_replace)
+    }
+
+    fn reset(&mut self) {
+        *self = FiboR::new();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The paper's Fig. 8 example: capacity 8, models M1..M8 fill memory,
+    /// then M9..M14 replace M1, M2, M4, M7, M11, M13 leaving
+    /// {M3, M5, M6, M8, M9, M10, M12, M14}.
+    #[test]
+    fn paper_example() {
+        let mut slots: Vec<u32> = (1..=8).collect(); // slot i holds M(i+1)
+        let mut fibor = FiboR::new();
+        for m in 9..=14u32 {
+            let v = fibor.victim(8).unwrap();
+            slots[v] = m;
+        }
+        let mut stored = slots.clone();
+        stored.sort_unstable();
+        assert_eq!(stored, vec![3, 5, 6, 8, 9, 10, 12, 14]);
+    }
+
+    /// Replacement order of the example, slot by slot (0-based).
+    #[test]
+    fn paper_example_victim_order() {
+        let mut fibor = FiboR::new();
+        let victims: Vec<usize> = (0..6).map(|_| fibor.victim(8).unwrap()).collect();
+        // M9->slot0 (M1), M10->slot1 (M2), M11->slot3 (M4), M12->slot6 (M7),
+        // M13->slot3 (M11), M14->slot3 (M13).
+        assert_eq!(victims, vec![0, 1, 3, 6, 3, 3]);
+    }
+
+    /// The paper's capacity-10 remark: the pattern repeats every 60
+    /// replacements (Pisano period of 10), and some slots are visited
+    /// less often than the uniform 6 (temporal sparsity).
+    #[test]
+    fn capacity_10_cycle_and_sparsity() {
+        let mut fibor = FiboR::new();
+        // Skip the k=0 zero-stride step so the cycle comparison starts in
+        // the periodic regime.
+        let _ = fibor.victim(10);
+        let first: Vec<usize> = (0..60).map(|_| fibor.victim(10).unwrap()).collect();
+        let second: Vec<usize> = (0..60).map(|_| fibor.victim(10).unwrap()).collect();
+        assert_eq!(first, second, "pattern must repeat with period 60");
+        let mut counts = [0usize; 10];
+        for v in &first {
+            counts[*v] += 1;
+        }
+        assert_eq!(counts.iter().sum::<usize>(), 60);
+        let min = counts.iter().min().unwrap();
+        assert!(*min < 6, "no temporally-sparse slot: {counts:?}");
+        // Every slot is eventually replaced ("sufficient mix of new models").
+        assert!(counts.iter().all(|c| *c > 0), "{counts:?}");
+    }
+
+    #[test]
+    fn strides_match_distinct_fibonacci() {
+        // f = 0, 1, 2, 3, 5, 8, 13, 21, ... mod capacity.
+        let mut fibor = FiboR::new();
+        let cap = 1000;
+        let mut pos = 0usize;
+        let expected = [0u64, 1, 2, 3, 5, 8, 13, 21, 34, 55, 89, 144, 233, 377, 610];
+        for f in expected {
+            let v = fibor.victim(cap).unwrap();
+            pos = (pos + (f as usize % cap)) % cap;
+            assert_eq!(v, pos);
+        }
+    }
+
+    #[test]
+    fn long_run_does_not_overflow_and_stays_in_range() {
+        let mut fibor = FiboR::new();
+        for _ in 0..100_000 {
+            let v = fibor.victim(7).unwrap();
+            assert!(v < 7);
+        }
+    }
+
+    #[test]
+    fn capacity_change_mid_run_is_consistent() {
+        // Run k steps at cap 8, switch to cap 5: strides must still follow
+        // f(k) mod 5 from the same global k.
+        let mut fibor = FiboR::new();
+        for _ in 0..4 {
+            fibor.victim(8);
+        }
+        // k = 4 now; f(4) = F(5) = 5 -> stride 0 mod 5; position carries over
+        // mod new capacity arithmetic.
+        let before = fibor.i_replace;
+        let v = fibor.victim(5).unwrap();
+        assert_eq!(v, before % 5);
+    }
+
+    #[test]
+    fn reset_restores_initial_sequence() {
+        let mut fibor = FiboR::new();
+        let a: Vec<usize> = (0..10).map(|_| fibor.victim(8).unwrap()).collect();
+        fibor.reset();
+        let b: Vec<usize> = (0..10).map(|_| fibor.victim(8).unwrap()).collect();
+        assert_eq!(a, b);
+    }
+}

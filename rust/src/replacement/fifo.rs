@@ -1,0 +1,61 @@
+//! FIFO replacement — the classic baseline the paper contrasts in Fig. 7.
+//!
+//! Victims cycle 0, 1, 2, …, N−1, 0, …: memory always holds the N newest
+//! sub-models. Good for unlearning *recent* data, catastrophic for old data
+//! (the original checkpoint is long gone → retrain from scratch).
+
+use crate::replacement::ReplacementPolicy;
+
+pub struct Fifo {
+    next: usize,
+}
+
+impl Fifo {
+    pub fn new() -> Self {
+        Self { next: 0 }
+    }
+}
+
+impl Default for Fifo {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ReplacementPolicy for Fifo {
+    fn name(&self) -> &'static str {
+        "fifo"
+    }
+
+    fn victim(&mut self, capacity: usize) -> Option<usize> {
+        assert!(capacity > 0);
+        let v = self.next % capacity;
+        self.next = (v + 1) % capacity;
+        Some(v)
+    }
+
+    fn reset(&mut self) {
+        self.next = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cycles_in_order() {
+        let mut f = Fifo::new();
+        let vs: Vec<usize> = (0..7).map(|_| f.victim(3).unwrap()).collect();
+        assert_eq!(vs, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn capacity_shrink_stays_in_range() {
+        let mut f = Fifo::new();
+        for _ in 0..5 {
+            f.victim(8);
+        }
+        assert!(f.victim(3).unwrap() < 3);
+    }
+}

@@ -1,0 +1,67 @@
+//! Sub-model replacement policies for the checkpoint store.
+//!
+//! When the device memory is full, a policy picks the slot whose checkpoint
+//! the newly trained sub-model overwrites. The paper contributes FiboR
+//! (Fibonacci-stride victim selection, Algorithm 2) and compares it against
+//! no-replacement (what SISA/ARCANE/OMP effectively do), FIFO, and random.
+
+pub mod fibor;
+pub mod fifo;
+pub mod random_policy;
+pub mod static_policy;
+
+pub use fibor::FiboR;
+pub use fifo::Fifo;
+pub use random_policy::RandomReplace;
+pub use static_policy::NoReplace;
+
+/// A victim-selection policy over `capacity` memory slots.
+///
+/// The store calls `victim` only when memory is full; a `None` means
+/// "drop the new checkpoint instead of evicting" (the no-replacement
+/// baselines). Policies are deliberately *stateless about contents* —
+/// exactly like the paper's Algorithm 2, which walks slot indices.
+pub trait ReplacementPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Slot to evict for the next incoming checkpoint, or `None` to reject.
+    fn victim(&mut self, capacity: usize) -> Option<usize>;
+
+    /// Reset internal counters (new run).
+    fn reset(&mut self);
+}
+
+/// Construct a policy by name (CLI / config use).
+pub fn by_name(name: &str, seed: u64) -> Option<Box<dyn ReplacementPolicy>> {
+    match name {
+        "fibor" => Some(Box::new(FiboR::new())),
+        "fifo" => Some(Box::new(Fifo::new())),
+        "random" => Some(Box::new(RandomReplace::new(seed))),
+        "none" | "static" => Some(Box::new(NoReplace)),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn by_name_resolves_all() {
+        for n in ["fibor", "fifo", "random", "none"] {
+            assert!(by_name(n, 1).is_some(), "{n}");
+        }
+        assert!(by_name("lru", 1).is_none());
+    }
+
+    #[test]
+    fn victims_always_in_range() {
+        for n in ["fibor", "fifo", "random"] {
+            let mut p = by_name(n, 2).unwrap();
+            for _ in 0..200 {
+                let v = p.victim(7).unwrap();
+                assert!(v < 7, "{n} produced victim {v}");
+            }
+        }
+    }
+}

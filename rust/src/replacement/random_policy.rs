@@ -1,0 +1,55 @@
+//! Random replacement — the "jump" strategy the paper's §4.4 remark
+//! compares FiboR against (unstable temporal sparsity).
+
+use crate::prng::Rng;
+use crate::replacement::ReplacementPolicy;
+
+pub struct RandomReplace {
+    rng: Rng,
+    seed: u64,
+}
+
+impl RandomReplace {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), seed }
+    }
+}
+
+impl ReplacementPolicy for RandomReplace {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn victim(&mut self, capacity: usize) -> Option<usize> {
+        assert!(capacity > 0);
+        Some(self.rng.below(capacity as u64) as usize)
+    }
+
+    fn reset(&mut self) {
+        self.rng = Rng::new(self.seed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn covers_all_slots_eventually() {
+        let mut p = RandomReplace::new(1);
+        let mut seen = [false; 6];
+        for _ in 0..300 {
+            seen[p.victim(6).unwrap()] = true;
+        }
+        assert!(seen.iter().all(|s| *s));
+    }
+
+    #[test]
+    fn reset_reproduces_stream() {
+        let mut p = RandomReplace::new(2);
+        let a: Vec<usize> = (0..10).map(|_| p.victim(5).unwrap()).collect();
+        p.reset();
+        let b: Vec<usize> = (0..10).map(|_| p.victim(5).unwrap()).collect();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,31 @@
+//! No-replacement — what SISA/ARCANE/OMP do once memory fills (Fig. 6):
+//! new sub-models are simply not stored.
+
+use crate::replacement::ReplacementPolicy;
+
+pub struct NoReplace;
+
+impl ReplacementPolicy for NoReplace {
+    fn name(&self) -> &'static str {
+        "none"
+    }
+
+    fn victim(&mut self, _capacity: usize) -> Option<usize> {
+        None
+    }
+
+    fn reset(&mut self) {}
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn never_evicts() {
+        let mut p = NoReplace;
+        for cap in 1..10 {
+            assert!(p.victim(cap).is_none());
+        }
+    }
+}

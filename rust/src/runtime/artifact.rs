@@ -1,0 +1,240 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` and the
+//! Rust runtime.
+//!
+//! `make artifacts` writes `artifacts/manifest.txt` in a deliberately tiny
+//! line format (no external parser dependencies are available offline):
+//!
+//! ```text
+//! # comment
+//! artifact <name>
+//! file <relative-hlo-file>
+//! input <tensor-name> f32 <d0>x<d1>x...   (scalar: "-")
+//! output <tensor-name> f32 <dims>
+//! meta <key> <value>
+//! end
+//! ```
+//!
+//! Rust uses the input specs to validate the literals it feeds each
+//! executable and the output specs to unpack result tuples.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+/// Shape/dtype of one tensor crossing the PJRT boundary.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct TensorSpec {
+    pub name: String,
+    /// Dimensions; empty = scalar.
+    pub dims: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn size_bytes(&self) -> usize {
+        self.element_count() * 4
+    }
+}
+
+/// One AOT-compiled computation: an HLO text file plus its signature.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    /// Fully-qualified name, e.g. `edge_mlp/train_step`.
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Free-form metadata (param_count, flops_per_example, ...).
+    pub meta: BTreeMap<String, String>,
+}
+
+impl ArtifactSpec {
+    /// Metadata value parsed as f64.
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.parse().ok())
+    }
+
+    /// Total bytes of all input tensors named `w*`/`b*` (the parameters).
+    pub fn param_bytes(&self) -> usize {
+        self.inputs
+            .iter()
+            .filter(|t| t.name.starts_with('w') || t.name.starts_with('b'))
+            .map(|t| t.size_bytes())
+            .sum()
+    }
+}
+
+/// Parsed `artifacts/manifest.txt`.
+#[derive(Clone, Debug, Default)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    /// Load `<dir>/manifest.txt`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.txt");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading manifest {}", path.display()))?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text; `dir` is where the HLO files live.
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let mut artifacts = BTreeMap::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let mut it = line.splitn(2, ' ');
+            let kw = it.next().unwrap_or("");
+            let rest = it.next().unwrap_or("").trim();
+            let err = |msg: &str| anyhow::anyhow!("manifest line {}: {}", lineno + 1, msg);
+            match kw {
+                "artifact" => {
+                    if cur.is_some() {
+                        bail!(err("nested artifact (missing 'end')"));
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: rest.to_string(),
+                        file: PathBuf::new(),
+                        inputs: vec![],
+                        outputs: vec![],
+                        meta: BTreeMap::new(),
+                    });
+                }
+                "file" => {
+                    cur.as_mut().ok_or_else(|| err("'file' outside artifact"))?.file =
+                        PathBuf::from(rest);
+                }
+                "input" | "output" => {
+                    let spec = parse_tensor_line(rest)
+                        .ok_or_else(|| err("bad tensor line (want '<name> f32 <dims|->')"))?;
+                    let a = cur.as_mut().ok_or_else(|| err("tensor outside artifact"))?;
+                    if kw == "input" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "meta" => {
+                    let mut kv = rest.splitn(2, ' ');
+                    let k = kv.next().unwrap_or("").to_string();
+                    let v = kv.next().unwrap_or("").trim().to_string();
+                    cur.as_mut().ok_or_else(|| err("'meta' outside artifact"))?.meta.insert(k, v);
+                }
+                "end" => {
+                    let a = cur.take().ok_or_else(|| err("'end' outside artifact"))?;
+                    if a.file.as_os_str().is_empty() {
+                        bail!(err("artifact missing 'file'"));
+                    }
+                    artifacts.insert(a.name.clone(), a);
+                }
+                other => bail!(err(&format!("unknown keyword '{other}'"))),
+            }
+        }
+        if cur.is_some() {
+            bail!("manifest ended inside an artifact block");
+        }
+        Ok(Self { dir, artifacts })
+    }
+
+    /// Look up an artifact, with a helpful error listing what exists.
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "artifact '{}' not in manifest (have: {})",
+                name,
+                self.artifacts.keys().cloned().collect::<Vec<_>>().join(", ")
+            )
+        })
+    }
+
+    /// Absolute path of an artifact's HLO file.
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+
+    /// Names of all artifacts for a given model variant (prefix match).
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<String> = self
+            .artifacts
+            .keys()
+            .filter_map(|k| k.split('/').next().map(|s| s.to_string()))
+            .collect();
+        v.dedup();
+        v
+    }
+}
+
+fn parse_tensor_line(rest: &str) -> Option<TensorSpec> {
+    let mut parts = rest.split_whitespace();
+    let name = parts.next()?.to_string();
+    let dtype = parts.next()?;
+    if dtype != "f32" {
+        return None;
+    }
+    let dims_s = parts.next()?;
+    let dims = if dims_s == "-" {
+        vec![]
+    } else {
+        dims_s.split('x').map(|d| d.parse::<usize>().ok()).collect::<Option<Vec<_>>>()?
+    };
+    Some(TensorSpec { name, dims })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+# manifest
+artifact edge_mlp/train_step
+file edge_mlp_train_step.hlo.txt
+input w1 f32 768x128
+input b1 f32 128
+input x f32 32x768
+input y f32 32
+output w1 f32 768x128
+output loss f32 -
+meta param_count 98432
+end
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let a = m.get("edge_mlp/train_step").unwrap();
+        assert_eq!(a.inputs.len(), 4);
+        assert_eq!(a.outputs.len(), 2);
+        assert_eq!(a.outputs[1].dims, Vec::<usize>::new());
+        assert_eq!(a.meta_f64("param_count"), Some(98432.0));
+        assert_eq!(m.hlo_path(a), PathBuf::from("/tmp/a/edge_mlp_train_step.hlo.txt"));
+        assert_eq!(a.inputs[0].size_bytes(), 768 * 128 * 4);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(ArtifactManifest::parse("bogus line", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("artifact a\nfile f\n", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("artifact a\nend\n", PathBuf::new()).is_err());
+        assert!(ArtifactManifest::parse("artifact a\ninput x f32 2y3\nend", PathBuf::new())
+            .is_err());
+    }
+
+    #[test]
+    fn missing_artifact_error_lists_names() {
+        let m = ArtifactManifest::parse(SAMPLE, PathBuf::new()).unwrap();
+        let e = m.get("nope").unwrap_err().to_string();
+        assert!(e.contains("edge_mlp/train_step"), "{e}");
+    }
+}

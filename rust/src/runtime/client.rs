@@ -1,0 +1,170 @@
+//! The PJRT runtime: one CPU client per process, one compiled executable per
+//! artifact, and a literal-in/literal-out execute wrapper with stats.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+use super::artifact::{ArtifactManifest, ArtifactSpec};
+use super::tensor::HostTensor;
+
+/// Cumulative execution statistics, used by the perf harness.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub compiles: u64,
+    pub executions: u64,
+    pub compile_secs: f64,
+    pub execute_secs: f64,
+    /// Host<->device literal conversion time.
+    pub transfer_secs: f64,
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// Per-thread PJRT runtime with an executable cache.
+///
+/// The `xla` crate's PJRT handles are `Rc`-based (single-threaded); share a
+/// `Runtime` within one thread via `Rc<Runtime>`. Interior mutability uses
+/// `RefCell` accordingly.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    manifest: ArtifactManifest,
+    cache: RefCell<HashMap<String, Rc<Compiled>>>,
+    stats: RefCell<RuntimeStats>,
+}
+
+impl Runtime {
+    /// Create a runtime over `artifacts/` (manifest + HLO files).
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = ArtifactManifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Self { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(RuntimeStats::default()) })
+    }
+
+    /// The artifact manifest backing this runtime.
+    pub fn manifest(&self) -> &ArtifactManifest {
+        &self.manifest
+    }
+
+    /// PJRT platform (e.g. "cpu") — handy for logs.
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Snapshot of cumulative stats.
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn compiled(&self, name: &str) -> Result<Rc<Compiled>> {
+        if let Some(c) = self.cache.borrow().get(name) {
+            return Ok(c.clone());
+        }
+        let spec = self.manifest.get(name)?.clone();
+        let path = self.manifest.hlo_path(&spec);
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact '{name}'"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_secs += dt;
+        }
+        let c = Rc::new(Compiled { exe, spec });
+        self.cache.borrow_mut().insert(name.to_string(), c.clone());
+        Ok(c)
+    }
+
+    /// Warm the executable cache for a list of artifacts (startup path).
+    pub fn precompile(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.compiled(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute artifact `name` with the given inputs; returns the flattened
+    /// output tuple as host tensors.
+    ///
+    /// Inputs are validated against the manifest signature so shape bugs
+    /// surface as readable errors instead of PJRT aborts.
+    pub fn execute(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let c = self.compiled(name)?;
+        if inputs.len() != c.spec.inputs.len() {
+            bail!(
+                "artifact '{}' expects {} inputs, got {}",
+                name,
+                c.spec.inputs.len(),
+                inputs.len()
+            );
+        }
+        for (i, (t, spec)) in inputs.iter().zip(&c.spec.inputs).enumerate() {
+            if t.dims != spec.dims {
+                bail!(
+                    "artifact '{}' input #{i} ('{}'): expected dims {:?}, got {:?}",
+                    name,
+                    spec.name,
+                    spec.dims,
+                    t.dims
+                );
+            }
+        }
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t1 = Instant::now();
+        let bufs = c
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing artifact '{name}'"))?;
+        let result = bufs[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of '{name}'"))?;
+        let t2 = Instant::now();
+
+        // aot.py lowers with return_tuple=True, so outputs are always a tuple.
+        let parts = result.to_tuple().context("unpacking result tuple")?;
+        if parts.len() != c.spec.outputs.len() {
+            bail!(
+                "artifact '{}' declared {} outputs but returned {}",
+                name,
+                c.spec.outputs.len(),
+                parts.len()
+            );
+        }
+        let outs: Vec<HostTensor> =
+            parts.iter().map(HostTensor::from_literal).collect::<Result<_>>()?;
+        let t3 = Instant::now();
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_secs += (t2 - t1).as_secs_f64();
+            s.transfer_secs += (t1 - t0).as_secs_f64() + (t3 - t2).as_secs_f64();
+        }
+        Ok(outs)
+    }
+}
+
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("platform", &self.platform())
+            .field("artifacts", &self.manifest.artifacts.len())
+            .finish()
+    }
+}

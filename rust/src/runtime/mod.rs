@@ -1,0 +1,28 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them natively.
+//!
+//! This is the only module that touches the `xla` crate. The interchange
+//! format with the build-time Python layer is **HLO text** (not serialized
+//! `HloModuleProto`): jax >= 0.5 emits protos with 64-bit instruction ids
+//! which xla_extension 0.5.1 rejects; the text parser reassigns ids and
+//! round-trips cleanly (see `python/compile/aot.py`).
+//!
+//! Layout:
+//! * [`client`] — process-wide PJRT CPU client plus an executable cache so
+//!   each artifact is compiled exactly once per process.
+//! * [`artifact`] — the artifact manifest (`artifacts/manifest.txt`) written
+//!   by `python/compile/aot.py`: artifact name -> HLO file, input/output
+//!   tensor specs.
+//! * [`tensor`] — host-side tensors (`HostTensor`) and conversions to/from
+//!   `xla::Literal`.
+//! * [`session`] — typed execution sessions: `TrainSession` (one train step
+//!   per call), `PredictSession`, `PruneSession`.
+
+pub mod artifact;
+pub mod client;
+pub mod session;
+pub mod tensor;
+
+pub use artifact::{ArtifactManifest, ArtifactSpec, TensorSpec};
+pub use client::{Runtime, RuntimeStats};
+pub use session::{PredictSession, PruneSession, TrainSession};
+pub use tensor::HostTensor;

@@ -1,0 +1,203 @@
+//! Typed execution sessions over the raw [`Runtime`].
+//!
+//! Artifact signatures (enforced by `python/compile/aot.py` and validated
+//! against the manifest here):
+//!
+//! * `<variant>/init`       : `[seed]                      -> [p_0 .. p_k]`
+//! * `<variant>/train_step` : `[p_0 .. p_k, x, y, lr]      -> [p_0 .. p_k, loss]`
+//! * `<variant>/predict`    : `[p_0 .. p_k, x]             -> [logits]`
+//! * `<variant>/prune`      : `[p_0 .. p_k, keep_frac]     -> [p_0 .. p_k]`
+//!
+//! `x` is `[batch, features]` f32, `y` is `[batch]` f32 class indices
+//! (cast to int inside the graph). All shapes are fixed at AOT time; the
+//! session pads the final partial batch and masks the padding out via the
+//! `y = -1` convention (the graph zero-weights negative labels).
+
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use super::client::Runtime;
+use super::tensor::HostTensor;
+
+/// Label value marking a padded (ignored) row in a train/eval batch.
+pub const PAD_LABEL: f32 = -1.0;
+
+/// A model variant's parameter state plus the handles to its artifacts.
+pub struct TrainSession {
+    rt: Rc<Runtime>,
+    variant: String,
+    params: Vec<HostTensor>,
+    batch: usize,
+    features: usize,
+    /// Cumulative examples processed by `step` (padding excluded).
+    pub examples_seen: u64,
+    /// Cumulative train steps.
+    pub steps: u64,
+}
+
+impl TrainSession {
+    /// Initialize parameters from the `<variant>/init` artifact.
+    pub fn init(rt: Rc<Runtime>, variant: &str, seed: u64) -> Result<Self> {
+        let name = format!("{variant}/init");
+        // f32 exactly represents integers < 2^24; aot.py folds the seed into
+        // a PRNG key. Keep seeds small to stay exact.
+        let seed_t = HostTensor::scalar((seed % (1 << 24)) as f32);
+        let params = rt.execute(&name, &[seed_t])?;
+        Self::from_params(rt, variant, params)
+    }
+
+    /// Wrap existing parameters (e.g. a checkpoint restored from the store).
+    pub fn from_params(rt: Rc<Runtime>, variant: &str, params: Vec<HostTensor>) -> Result<Self> {
+        let spec = rt.manifest().get(&format!("{variant}/train_step"))?;
+        let k = spec
+            .inputs
+            .len()
+            .checked_sub(3)
+            .context("train_step artifact must have params + x,y,lr inputs")?;
+        if params.len() != k {
+            bail!("variant '{variant}' expects {k} param tensors, got {}", params.len());
+        }
+        let x_spec = &spec.inputs[k];
+        if x_spec.dims.len() != 2 {
+            bail!("train_step x input must be rank 2, got {:?}", x_spec.dims);
+        }
+        Ok(Self {
+            batch: x_spec.dims[0],
+            features: x_spec.dims[1],
+            rt,
+            variant: variant.to_string(),
+            params,
+            examples_seen: 0,
+            steps: 0,
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    /// AOT batch size of this variant.
+    pub fn batch_size(&self) -> usize {
+        self.batch
+    }
+
+    /// Feature dimension of this variant.
+    pub fn feature_dim(&self) -> usize {
+        self.features
+    }
+
+    /// Borrow the current parameters.
+    pub fn params(&self) -> &[HostTensor] {
+        &self.params
+    }
+
+    /// Take ownership of the parameters (consumes the session).
+    pub fn into_params(self) -> Vec<HostTensor> {
+        self.params
+    }
+
+    /// Total bytes of the current (dense) parameter state.
+    pub fn param_bytes(&self) -> usize {
+        self.params.iter().map(|p| p.size_bytes()).sum()
+    }
+
+    /// Run one SGD step on a batch; returns the mean loss.
+    ///
+    /// `xs` is `examples x features` row-major and may contain fewer rows
+    /// than the AOT batch; the remainder is padded and masked.
+    pub fn step(&mut self, xs: &[f32], ys: &[f32], lr: f32) -> Result<f32> {
+        let rows = ys.len();
+        if rows == 0 || rows > self.batch {
+            bail!("step wants 1..={} rows, got {rows}", self.batch);
+        }
+        if xs.len() != rows * self.features {
+            bail!("xs len {} != rows {} * features {}", xs.len(), rows, self.features);
+        }
+        let mut xbuf = vec![0.0f32; self.batch * self.features];
+        xbuf[..xs.len()].copy_from_slice(xs);
+        let mut ybuf = vec![PAD_LABEL; self.batch];
+        ybuf[..rows].copy_from_slice(ys);
+
+        let mut inputs = self.params.clone();
+        inputs.push(HostTensor::new(xbuf, vec![self.batch, self.features])?);
+        inputs.push(HostTensor::new(ybuf, vec![self.batch])?);
+        inputs.push(HostTensor::scalar(lr));
+
+        let mut outs = self.rt.execute(&format!("{}/train_step", self.variant), &inputs)?;
+        let loss = outs
+            .pop()
+            .context("train_step returned no outputs")?
+            .as_scalar()
+            .context("train_step loss")?;
+        self.params = outs;
+        self.examples_seen += rows as u64;
+        self.steps += 1;
+        Ok(loss)
+    }
+
+    /// Magnitude-prune the weight matrices, keeping `keep_frac` of entries.
+    pub fn prune(&mut self, keep_frac: f32) -> Result<()> {
+        if !(0.0..=1.0).contains(&keep_frac) {
+            bail!("keep_frac must be in [0,1], got {keep_frac}");
+        }
+        let mut inputs = self.params.clone();
+        inputs.push(HostTensor::scalar(keep_frac));
+        self.params = self.rt.execute(&format!("{}/prune", self.variant), &inputs)?;
+        Ok(())
+    }
+
+    /// Logits for up to one AOT batch of examples.
+    pub fn logits(&self, xs: &[f32], rows: usize) -> Result<Vec<Vec<f32>>> {
+        PredictSession { rt: self.rt.clone(), variant: self.variant.clone() }
+            .logits(&self.params, xs, rows, self.batch, self.features)
+    }
+}
+
+/// Stateless prediction over explicit parameters.
+pub struct PredictSession {
+    pub rt: Rc<Runtime>,
+    pub variant: String,
+}
+
+impl PredictSession {
+    /// Compute logits for `rows` examples (padded to the AOT batch).
+    pub fn logits(
+        &self,
+        params: &[HostTensor],
+        xs: &[f32],
+        rows: usize,
+        batch: usize,
+        features: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        if rows == 0 || rows > batch {
+            bail!("logits wants 1..={batch} rows, got {rows}");
+        }
+        let mut xbuf = vec![0.0f32; batch * features];
+        xbuf[..rows * features].copy_from_slice(&xs[..rows * features]);
+        let mut inputs = params.to_vec();
+        inputs.push(HostTensor::new(xbuf, vec![batch, features])?);
+        let outs = self.rt.execute(&format!("{}/predict", self.variant), &inputs)?;
+        let logits = &outs[0];
+        if logits.dims.len() != 2 || logits.dims[0] != batch {
+            bail!("predict returned unexpected shape {:?}", logits.dims);
+        }
+        let classes = logits.dims[1];
+        Ok((0..rows).map(|r| logits.data[r * classes..(r + 1) * classes].to_vec()).collect())
+    }
+}
+
+/// Stateless pruning over explicit parameters (used by the checkpoint store
+/// when compressing a sub-model after training).
+pub struct PruneSession {
+    pub rt: Rc<Runtime>,
+    pub variant: String,
+}
+
+impl PruneSession {
+    pub fn prune(&self, params: &[HostTensor], keep_frac: f32) -> Result<Vec<HostTensor>> {
+        let mut inputs = params.to_vec();
+        inputs.push(HostTensor::scalar(keep_frac));
+        self.rt.execute(&format!("{}/prune", self.variant), &inputs)
+    }
+}

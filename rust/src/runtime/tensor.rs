@@ -1,0 +1,127 @@
+//! Host-side tensors and conversion to/from `xla::Literal`.
+
+use anyhow::{bail, Context, Result};
+
+/// A dense f32 tensor living on the host.
+///
+/// All model state crossing the PJRT boundary is f32 in this reproduction
+/// (the paper's edge models train in fp32 on the Jetson Orin Nano; bf16 is a
+/// TPU-side optimization discussed in DESIGN.md §Hardware-Adaptation).
+#[derive(Clone, Debug, PartialEq)]
+pub struct HostTensor {
+    /// Row-major data.
+    pub data: Vec<f32>,
+    /// Dimensions; empty means scalar.
+    pub dims: Vec<usize>,
+}
+
+impl HostTensor {
+    /// Create a tensor, checking that `data.len()` matches the shape.
+    pub fn new(data: Vec<f32>, dims: Vec<usize>) -> Result<Self> {
+        let expect: usize = dims.iter().product();
+        if data.len() != expect {
+            bail!(
+                "HostTensor shape mismatch: data len {} but dims {:?} imply {}",
+                data.len(),
+                dims,
+                expect
+            );
+        }
+        Ok(Self { data, dims })
+    }
+
+    /// A scalar tensor.
+    pub fn scalar(v: f32) -> Self {
+        Self { data: vec![v], dims: vec![] }
+    }
+
+    /// All-zeros tensor of the given shape.
+    pub fn zeros(dims: &[usize]) -> Self {
+        let n: usize = dims.iter().product();
+        Self { data: vec![0.0; n], dims: dims.to_vec() }
+    }
+
+    /// Fill with values produced by `f(flat_index)`.
+    pub fn from_fn(dims: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n: usize = dims.iter().product();
+        Self { data: (0..n).map(&mut f).collect(), dims: dims.to_vec() }
+    }
+
+    /// Number of elements.
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// True when the tensor holds no elements.
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Scalar value (errors unless exactly one element).
+    pub fn as_scalar(&self) -> Result<f32> {
+        if self.data.len() != 1 {
+            bail!("expected scalar, got {} elements (dims {:?})", self.data.len(), self.dims);
+        }
+        Ok(self.data[0])
+    }
+
+    /// Bytes occupied by the payload (f32).
+    pub fn size_bytes(&self) -> usize {
+        self.data.len() * std::mem::size_of::<f32>()
+    }
+
+    /// Count of non-zero entries — used by the pruning accounting tests.
+    pub fn nonzero_count(&self) -> usize {
+        self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Convert to an `xla::Literal` with this shape.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = xla::Literal::vec1(&self.data);
+        if self.dims.is_empty() {
+            // Scalar: reshape to rank-0.
+            lit.reshape(&[]).context("reshape to scalar literal")
+        } else {
+            let dims: Vec<i64> = self.dims.iter().map(|d| *d as i64).collect();
+            lit.reshape(&dims).context("reshape literal")
+        }
+    }
+
+    /// Build from an `xla::Literal` (f32 only).
+    pub fn from_literal(lit: &xla::Literal) -> Result<Self> {
+        let shape = lit.shape().context("literal shape")?;
+        let dims: Vec<usize> = match &shape {
+            xla::Shape::Array(a) => a.dims().iter().map(|d| *d as usize).collect(),
+            other => bail!("expected array literal, got {other:?}"),
+        };
+        let data = lit.to_vec::<f32>().context("literal to_vec<f32>")?;
+        Self::new(data, dims)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(HostTensor::new(vec![1.0, 2.0], vec![3]).is_err());
+        let t = HostTensor::new(vec![1.0, 2.0, 3.0, 4.0], vec![2, 2]).unwrap();
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.size_bytes(), 16);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = HostTensor::scalar(3.5);
+        assert_eq!(t.as_scalar().unwrap(), 3.5);
+        assert!(HostTensor::zeros(&[2]).as_scalar().is_err());
+    }
+
+    #[test]
+    fn from_fn_fills() {
+        let t = HostTensor::from_fn(&[2, 3], |i| i as f32);
+        assert_eq!(t.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(t.nonzero_count(), 5);
+    }
+}

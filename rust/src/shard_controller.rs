@@ -1,0 +1,126 @@
+//! Shard controller (SC): EWMA-style exponential decay of the shard count.
+//!
+//! Paper §4.5, equation (1):  S_t = γ·S + (1 − γ)·S·e^(−p·t)
+//!
+//! γ ∈ [0, 1] sets the floor (S_t → γ·S as t → ∞), p sets the decay rate;
+//! γ = 1 disables the controller (S_t ≡ S). The controller trades per-shard
+//! retrain cost (favors many shards) against replacement pressure and
+//! ensemble accuracy (favor few shards) as memory fills over time.
+
+/// The shard controller; rounds are 1-based as in the paper.
+#[derive(Clone, Copy, Debug)]
+pub struct ShardController {
+    /// Original shard count S.
+    pub s0: usize,
+    /// Floor fraction γ.
+    pub gamma: f64,
+    /// Decay rate p.
+    pub p: f64,
+    /// When false, S_t = S for all t (the CAUSE-No-SC ablation).
+    pub enabled: bool,
+}
+
+impl ShardController {
+    pub fn new(s0: usize, gamma: f64, p: f64) -> Self {
+        assert!(s0 >= 1, "shard count must be >= 1");
+        assert!((0.0..=1.0).contains(&gamma), "gamma in [0,1]");
+        assert!(p >= 0.0, "p >= 0");
+        Self { s0, gamma, p, enabled: true }
+    }
+
+    pub fn disabled(s0: usize) -> Self {
+        Self { s0, gamma: 1.0, p: 0.0, enabled: false }
+    }
+
+    /// Continuous S_t before rounding (useful for plots / tests).
+    pub fn value(&self, t: u32) -> f64 {
+        if !self.enabled {
+            return self.s0 as f64;
+        }
+        let s = self.s0 as f64;
+        self.gamma * s + (1.0 - self.gamma) * s * (-self.p * t as f64).exp()
+    }
+
+    /// Shard count for round `t` (1-based): rounded, clamped to [max(1,γS), S].
+    pub fn shards_at(&self, t: u32) -> usize {
+        let floor = ((self.gamma * self.s0 as f64).round() as usize).max(1);
+        (self.value(t).round() as usize).clamp(floor, self.s0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::testkit::forall;
+
+    #[test]
+    fn matches_formula() {
+        let sc = ShardController::new(16, 0.5, 0.5);
+        // S_1 = 0.5*16 + 0.5*16*e^-0.5 = 8 + 8*0.6065 = 12.85
+        assert!((sc.value(1) - 12.852).abs() < 0.01);
+        assert_eq!(sc.shards_at(1), 13);
+    }
+
+    #[test]
+    fn monotonically_decreasing_to_gamma_floor() {
+        let sc = ShardController::new(16, 0.5, 0.5);
+        let mut prev = usize::MAX;
+        for t in 1..=30 {
+            let s = sc.shards_at(t);
+            assert!(s <= prev, "not decreasing at t={t}");
+            prev = s;
+        }
+        assert_eq!(sc.shards_at(30), 8); // γ·S
+    }
+
+    #[test]
+    fn gamma_one_is_constant() {
+        let sc = ShardController::new(8, 1.0, 0.7);
+        for t in 1..=20 {
+            assert_eq!(sc.shards_at(t), 8);
+        }
+    }
+
+    #[test]
+    fn disabled_is_constant() {
+        let sc = ShardController::disabled(4);
+        for t in 1..=20 {
+            assert_eq!(sc.shards_at(t), 4);
+        }
+    }
+
+    #[test]
+    fn never_below_one_even_with_tiny_gamma() {
+        let sc = ShardController::new(4, 0.0, 2.0);
+        for t in 1..=50 {
+            assert!(sc.shards_at(t) >= 1);
+        }
+    }
+
+    #[test]
+    fn prop_bounds_hold_for_random_params() {
+        forall(
+            0xCA05E,
+            300,
+            |rng, _| {
+                (
+                    rng.range(1, 64),
+                    rng.f64(),
+                    rng.f64() * 3.0,
+                    rng.range(1, 40) as u32,
+                )
+            },
+            |(s0, gamma, p, t)| {
+                let sc = ShardController::new(*s0, *gamma, *p);
+                let st = sc.shards_at(*t);
+                if st < 1 || st > *s0 {
+                    return Err(format!("S_t={st} outside [1, {s0}]"));
+                }
+                if sc.shards_at(t + 1) > st {
+                    return Err("S_t increased over time".into());
+                }
+                Ok(())
+            },
+        );
+    }
+}

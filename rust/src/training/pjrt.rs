@@ -1,0 +1,275 @@
+//! The real backend: trains the AOT proxy models through PJRT.
+//!
+//! Each lineage owns a [`TrainSession`] over the configured artifact
+//! variant. Blocks are materialized from the synthetic population, stepped
+//! through `<variant>/train_step`, pruned through `<variant>/prune` per the
+//! schedule, and evaluated with `<variant>/predict` + majority vote.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::aggregate::{argmax, ensemble_accuracy};
+use crate::data::dataset::{BlockId, EdgePopulation};
+use crate::pruning::PruneSchedule;
+use crate::runtime::{HostTensor, Runtime, TrainSession};
+use crate::training::{TrainOutcome, Trainer};
+
+/// Knobs for the PJRT backend.
+#[derive(Clone, Debug)]
+pub struct PjrtTrainerConfig {
+    /// Artifact variant, e.g. `"mobilenetv2_c10"`.
+    pub variant: String,
+    /// Epoch cap per training run (the paper's 80 epochs on a Jetson maps
+    /// to a handful on the CPU-interpret proxy — documented in DESIGN.md).
+    pub max_epochs: u32,
+    /// SGD learning rate fed to the train-step artifact.
+    pub lr: f32,
+    /// Held-out test set size for `evaluate`.
+    pub test_samples: usize,
+    /// Base seed for per-lineage initialization.
+    pub seed: u64,
+}
+
+impl Default for PjrtTrainerConfig {
+    fn default() -> Self {
+        Self {
+            variant: "mobilenetv2_c10".into(),
+            max_epochs: 3,
+            lr: 0.05,
+            test_samples: 256,
+            seed: 7,
+        }
+    }
+}
+
+/// Real-training backend.
+pub struct PjrtTrainer {
+    rt: Rc<Runtime>,
+    pop: Arc<EdgePopulation>,
+    cfg: PjrtTrainerConfig,
+    sessions: Vec<Option<TrainSession>>,
+    /// Cached test set (features, labels).
+    test: Option<(Vec<f32>, Vec<f32>)>,
+    /// Dense parameter bytes of one model (from the manifest).
+    dense_bytes: u64,
+    /// Final keep fraction currently configured (sizes checkpoints).
+    keep_hint: f64,
+}
+
+impl PjrtTrainer {
+    pub fn new(
+        rt: Rc<Runtime>,
+        pop: Arc<EdgePopulation>,
+        cfg: PjrtTrainerConfig,
+        max_lineages: usize,
+        final_keep: f64,
+    ) -> Result<Self> {
+        let spec = rt.manifest().get(&format!("{}/train_step", cfg.variant))?;
+        let dense_bytes = spec.param_bytes().max(
+            spec.inputs
+                .iter()
+                .filter(|t| t.name.starts_with('p'))
+                .map(|t| t.size_bytes())
+                .sum(),
+        ) as u64;
+        let mut sessions = Vec::new();
+        sessions.resize_with(max_lineages, || None);
+        Ok(Self { rt, pop, cfg, sessions, test: None, dense_bytes, keep_hint: final_keep })
+    }
+
+    fn session(&mut self, lineage: usize) -> Result<&mut TrainSession> {
+        if self.sessions[lineage].is_none() {
+            let seed = self.cfg.seed.wrapping_add(lineage as u64 * 1000 + 1);
+            self.sessions[lineage] =
+                Some(TrainSession::init(self.rt.clone(), &self.cfg.variant, seed)?);
+        }
+        Ok(self.sessions[lineage].as_mut().unwrap())
+    }
+
+    /// Sparse checkpoint size: CSR-ish value+index per nonzero.
+    fn sparse_bytes(params: &[HostTensor]) -> u64 {
+        params
+            .iter()
+            .map(|p| {
+                if p.dims.len() == 2 && p.len() >= 1024 {
+                    (p.nonzero_count() * 8) as u64
+                } else {
+                    p.size_bytes() as u64
+                }
+            })
+            .sum()
+    }
+
+    /// One epoch over the blocks: materialize and step in AOT batches.
+    /// With `mask_keep`, the sparsity pattern is re-applied after every
+    /// step — masked fine-tuning, the recovery phase of RCMP's
+    /// prune-and-retrain loop (plain SGD would regrow pruned weights).
+    fn epoch(
+        &mut self,
+        lineage: usize,
+        blocks: &[(BlockId, u64)],
+        mask_keep: Option<f32>,
+    ) -> Result<f32> {
+        let pop = self.pop.clone();
+        let lr = self.cfg.lr;
+        let mut last_loss = 0.0;
+        for (block_id, samples) in blocks {
+            if *samples == 0 {
+                continue;
+            }
+            let Some(block) = pop.block(*block_id) else { continue };
+            let (xs, ys) = pop.materialize(block, *samples as usize);
+            let sess = self.session(lineage)?;
+            let bs = sess.batch_size();
+            let fd = sess.feature_dim();
+            let rows = ys.len();
+            let mut r = 0;
+            let mut steps_since_mask = 0u32;
+            while r < rows {
+                let take = bs.min(rows - r);
+                last_loss = sess.step(&xs[r * fd..(r + take) * fd], &ys[r..r + take], lr)?;
+                r += take;
+                steps_since_mask += 1;
+                // Re-apply the sparsity pattern every few steps: weight
+                // regrowth over <8 SGD steps is negligible and this keeps
+                // the prune kernel off the per-step critical path
+                // (EXPERIMENTS.md §Perf-L3).
+                if let (Some(keep), true) = (mask_keep, steps_since_mask >= 8 || r >= rows) {
+                    sess.prune(keep)?;
+                    steps_since_mask = 0;
+                }
+            }
+        }
+        Ok(last_loss)
+    }
+}
+
+impl Trainer for PjrtTrainer {
+    fn reset(&mut self, lineage: usize, params: Option<&[HostTensor]>) -> Result<()> {
+        match params {
+            Some(p) => {
+                self.sessions[lineage] = Some(TrainSession::from_params(
+                    self.rt.clone(),
+                    &self.cfg.variant,
+                    p.to_vec(),
+                )?);
+            }
+            None => {
+                let seed = self.cfg.seed.wrapping_add(lineage as u64 * 1000 + 1);
+                self.sessions[lineage] =
+                    Some(TrainSession::init(self.rt.clone(), &self.cfg.variant, seed)?);
+            }
+        }
+        Ok(())
+    }
+
+    fn run(
+        &mut self,
+        lineage: usize,
+        blocks: &[(BlockId, u64)],
+        epochs: u32,
+        schedule: PruneSchedule,
+    ) -> Result<TrainOutcome> {
+        self.keep_hint = schedule.final_keep();
+        let epochs = epochs.min(self.cfg.max_epochs).max(1);
+        let mut prune_ops = 0;
+        match schedule {
+            PruneSchedule::None | PruneSchedule::OneShot { .. } => {
+                // Dense training; OMP's single magnitude-prune happens at
+                // snapshot time (one-shot, no recovery — Table 6).
+                for _ in 0..epochs {
+                    self.epoch(lineage, blocks, None)?;
+                }
+                if matches!(schedule, PruneSchedule::OneShot { .. }) {
+                    prune_ops = 1;
+                }
+            }
+            PruneSchedule::Iterative { keep, .. } => {
+                // RCMP (Fig. 4): a first *dense* epoch (never prune
+                // untrained weights — magnitudes carry no signal yet),
+                // sparsity stepped down between subsequent epochs, then a
+                // final *masked* fine-tune epoch at the target keep so the
+                // stored model is both sparse and recovered.
+                self.epoch(lineage, blocks, None)?;
+                for pass in 1..epochs.saturating_sub(1) {
+                    self.epoch(lineage, blocks, None)?;
+                    if let Some(k) = schedule.keep_at(pass, epochs) {
+                        self.session(lineage)?
+                            .prune(k as f32)
+                            .context("prune pass")?;
+                        prune_ops += 1;
+                    }
+                }
+                self.session(lineage)?
+                    .prune(keep as f32)
+                    .context("target prune")?;
+                prune_ops += 1;
+                if epochs > 1 {
+                    self.epoch(lineage, blocks, Some(keep as f32))?;
+                }
+            }
+        }
+        Ok(TrainOutcome { prune_ops })
+    }
+
+    fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Vec<HostTensor>>)> {
+        // RCMP stores the *compressed* sub-model: prune a copy at the
+        // configured keep fraction (the working model keeps training dense).
+        let keep = self.keep_hint as f32;
+        let rt = self.rt.clone();
+        let variant = self.cfg.variant.clone();
+        let sess = self.session(lineage)?;
+        let params = if keep < 1.0 {
+            crate::runtime::PruneSession { rt, variant }.prune(sess.params(), keep)?
+        } else {
+            sess.params().to_vec()
+        };
+        Ok((Self::sparse_bytes(&params), Some(params)))
+    }
+
+    fn checkpoint_bytes(&self) -> u64 {
+        // Slot size: dense bytes scaled by the configured keep fraction
+        // (matches what snapshot() will produce after pruning converges).
+        ((self.dense_bytes as f64) * (0.15 + 0.85 * self.keep_hint)).max(1.0) as u64
+    }
+
+    fn evaluate(&mut self, lineages: &[usize]) -> Result<Option<f64>> {
+        if lineages.is_empty() {
+            return Ok(Some(0.0));
+        }
+        if self.test.is_none() {
+            self.test = Some(
+                self.pop.materialize_test(self.cfg.test_samples, self.cfg.seed ^ 0x7e57),
+            );
+        }
+        let (xs, ys) = self.test.clone().unwrap();
+        let classes = self.pop.cfg.spec.classes;
+        let mut per_model = Vec::with_capacity(lineages.len());
+        for &l in lineages {
+            // Evaluate the *deployed* sub-model — i.e. the compressed
+            // parameters the device actually stores (Table 2 measures
+            // pruned-model accuracy).
+            let (_bytes, params) = self.snapshot(l)?;
+            let params = params.expect("pjrt snapshot always has params");
+            let sess = self.session(l)?;
+            let (bs, fd) = (sess.batch_size(), sess.feature_dim());
+            let predict = crate::runtime::PredictSession {
+                rt: self.rt.clone(),
+                variant: self.cfg.variant.clone(),
+            };
+            let mut labels = Vec::with_capacity(ys.len());
+            let mut r = 0;
+            while r < ys.len() {
+                let take = bs.min(ys.len() - r);
+                let logits =
+                    predict.logits(&params, &xs[r * fd..(r + take) * fd], take, bs, fd)?;
+                labels.extend(logits.iter().map(|row| argmax(row)));
+                r += take;
+            }
+            per_model.push(labels);
+        }
+        Ok(Some(ensemble_accuracy(&per_model, &ys, classes)))
+    }
+}

@@ -1,0 +1,7 @@
+//! The unlearning *service*: a queue-fronted façade over the engine, the
+//! shape a deployment embeds (examples use it; experiments drive the
+//! engine directly for determinism).
+
+pub mod service;
+
+pub use service::{ServiceReport, UnlearningService};

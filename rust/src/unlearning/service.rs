@@ -1,0 +1,219 @@
+//! Queue-fronted unlearning service.
+//!
+//! Wraps an [`Engine`] with the request lifecycle a real edge deployment
+//! needs: FCFS queueing, per-request receipts (RSN, latency estimate,
+//! energy), optional battery gating (satellite mode: defer retraining when
+//! the state of charge cannot cover it), and a service log.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use crate::coordinator::engine::Engine;
+use crate::data::dataset::EdgePopulation;
+use crate::data::trace::UnlearnRequest;
+use crate::energy::EnergyModel;
+use crate::sim::Battery;
+
+/// Receipt for one served unlearning request.
+#[derive(Clone, Debug)]
+pub struct ServiceReport {
+    pub user: u32,
+    pub round: u32,
+    pub rsn: u64,
+    pub lineages_retrained: usize,
+    /// Estimated device seconds for the retrain (profile-based).
+    pub est_seconds: f64,
+    /// Estimated joules for the retrain.
+    pub est_joules: f64,
+    /// Deferred because the battery could not cover the retrain.
+    pub deferred: bool,
+}
+
+/// FCFS unlearning service over an engine.
+pub struct UnlearningService {
+    engine: Engine,
+    queue: VecDeque<UnlearnRequest>,
+    energy: EnergyModel,
+    battery: Option<Battery>,
+    pub log: Vec<ServiceReport>,
+}
+
+impl UnlearningService {
+    pub fn new(engine: Engine) -> Self {
+        let energy = EnergyModel::for_model(&engine.cfg.model);
+        Self { engine, queue: VecDeque::new(), energy, battery: None, log: vec![] }
+    }
+
+    /// Enable battery gating (energy-harvesting deployments).
+    pub fn with_battery(mut self, battery: Battery) -> Self {
+        self.battery = Some(battery);
+        self
+    }
+
+    pub fn engine(&self) -> &Engine {
+        &self.engine
+    }
+
+    pub fn engine_mut(&mut self) -> &mut Engine {
+        &mut self.engine
+    }
+
+    pub fn battery(&self) -> Option<&Battery> {
+        self.battery.as_ref()
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Run one training round (new data arrival).
+    pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
+        self.engine.run_round(pop)?;
+        Ok(())
+    }
+
+    /// Enqueue a request (FCFS).
+    pub fn submit(&mut self, req: UnlearnRequest) {
+        self.queue.push_back(req);
+    }
+
+    /// Serve queued requests in order. With a battery, a request whose
+    /// estimated energy exceeds the charge is deferred (stays at the queue
+    /// head) until `harvest` restores enough charge.
+    pub fn drain(&mut self) -> Result<usize> {
+        let mut served = 0;
+        while let Some(req) = self.queue.front().cloned() {
+            // Conservative pre-estimate: replaying all requested samples.
+            let est_rsn_hint = req.total_samples();
+            let est_j_hint = self
+                .energy
+                .retrain_joules(est_rsn_hint, self.engine.cfg.epochs_per_round);
+            if let Some(b) = &mut self.battery {
+                if !b.draw(est_j_hint) {
+                    self.log.push(ServiceReport {
+                        user: req.user.0,
+                        round: req.round,
+                        rsn: 0,
+                        lineages_retrained: 0,
+                        est_seconds: 0.0,
+                        est_joules: est_j_hint,
+                        deferred: true,
+                    });
+                    break; // FCFS: don't skip ahead of the deferred head.
+                }
+            }
+            let outcome = self.engine.process_request(&req)?;
+            let est_seconds = self
+                .engine
+                .cfg
+                .model
+                .train_secs(outcome.rsn, self.engine.cfg.epochs_per_round);
+            let est_joules = self
+                .energy
+                .retrain_joules(outcome.rsn, self.engine.cfg.epochs_per_round);
+            // Charge the actual cost difference (beyond the reservation).
+            if let Some(b) = &mut self.battery {
+                let delta = est_joules - est_j_hint;
+                if delta > 0.0 {
+                    let _ = b.draw(delta);
+                } else {
+                    b.charge_j = (b.charge_j - delta).min(b.capacity_j);
+                }
+            }
+            self.log.push(ServiceReport {
+                user: req.user.0,
+                round: req.round,
+                rsn: outcome.rsn,
+                lineages_retrained: outcome.lineages_retrained,
+                est_seconds,
+                est_joules,
+                deferred: false,
+            });
+            self.queue.pop_front();
+            served += 1;
+        }
+        Ok(served)
+    }
+
+    /// Advance harvest time (satellite mode).
+    pub fn harvest(&mut self, secs: f64) {
+        if let Some(b) = &mut self.battery {
+            b.harvest(secs);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::ExperimentConfig;
+    use crate::coordinator::system::SystemVariant;
+    use crate::data::catalog::CIFAR10;
+    use crate::data::dataset::PopulationConfig;
+    use crate::data::trace::{RequestTrace, TraceConfig};
+    use crate::sim::device::AI_CUBESAT;
+
+    fn setup() -> (UnlearningService, EdgePopulation, RequestTrace) {
+        let cfg = ExperimentConfig {
+            users: 20,
+            rounds: 4,
+            shards: 4,
+            ..Default::default()
+        };
+        let pop = EdgePopulation::generate(PopulationConfig {
+            spec: CIFAR10.scaled(8_000),
+            users: cfg.users,
+            rounds: cfg.rounds,
+            size_sigma: 0.8,
+            label_alpha: 0.5,
+            arrival_prob: 0.7,
+            seed: 11,
+        });
+        let trace = RequestTrace::generate(&pop, &TraceConfig::paper_default(12).with_prob(0.4));
+        let engine = SystemVariant::Cause.build_cost(&cfg).unwrap();
+        (UnlearningService::new(engine), pop, trace)
+    }
+
+    #[test]
+    fn fcfs_serves_all_on_mains() {
+        let (mut svc, pop, trace) = setup();
+        let mut submitted = 0;
+        for t in 1..=4 {
+            svc.ingest_round(&pop).unwrap();
+            for req in trace.at(t) {
+                svc.submit(req.clone());
+                submitted += 1;
+            }
+            svc.drain().unwrap();
+        }
+        assert_eq!(svc.pending(), 0);
+        assert_eq!(svc.log.iter().filter(|r| !r.deferred).count(), submitted);
+        assert!(svc.engine().metrics.total_rsn() > 0);
+    }
+
+    #[test]
+    fn battery_defers_until_harvest() {
+        let (mut svc, pop, trace) = setup();
+        let mut battery = Battery::new(&AI_CUBESAT);
+        battery.charge_j = 0.5; // almost empty
+        svc = UnlearningService::new(SystemVariant::Cause
+            .build_cost(&svc.engine().cfg.clone())
+            .unwrap())
+            .with_battery(battery);
+        svc.ingest_round(&pop).unwrap();
+        let req = trace
+            .at(1)
+            .first()
+            .cloned()
+            .unwrap_or_else(|| trace.at(2).first().cloned().expect("trace has requests"));
+        svc.submit(req);
+        svc.drain().unwrap();
+        assert_eq!(svc.pending(), 1, "request should be deferred");
+        assert!(svc.log.last().unwrap().deferred);
+        // Harvest a lot, then it goes through.
+        svc.harvest(1e6);
+        svc.drain().unwrap();
+        assert_eq!(svc.pending(), 0);
+    }
+}

@@ -1,0 +1,96 @@
+//! In-repo micro-benchmark harness (criterion is unavailable offline).
+//!
+//! Used by every `rust/benches/*.rs` target with `harness = false`:
+//!
+//! ```ignore
+//! let mut b = Bench::new("fig11");
+//! b.iter("cause_default", 20, || run_fig11_once());
+//! b.report();
+//! ```
+//!
+//! Measures wall time per iteration with warmup, prints mean ± std and
+//! percentiles, and honors `CAUSE_BENCH_FAST=1` (used by `make test`) to
+//! shrink iteration counts.
+
+use std::time::Instant;
+
+use super::stats::Summary;
+
+/// One named benchmark group.
+pub struct Bench {
+    name: String,
+    results: Vec<(String, Summary)>,
+}
+
+/// Prevent the optimizer from deleting a computed value.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self { name: name.into(), results: vec![] }
+    }
+
+    /// Effective iteration count after the fast-mode override.
+    pub fn iters(&self, requested: usize) -> usize {
+        if std::env::var("CAUSE_BENCH_FAST").is_ok() {
+            requested.min(3).max(1)
+        } else {
+            requested.max(1)
+        }
+    }
+
+    /// Time `f` for `iters` iterations (plus one warmup run).
+    pub fn iter<T>(&mut self, label: &str, iters: usize, mut f: impl FnMut() -> T) {
+        let iters = self.iters(iters);
+        black_box(f()); // warmup (also compiles PJRT executables etc.)
+        let mut samples = Vec::with_capacity(iters);
+        for _ in 0..iters {
+            let t0 = Instant::now();
+            black_box(f());
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        self.results.push((label.to_string(), Summary::of(&samples)));
+    }
+
+    /// Record an externally-measured sample set (e.g. per-step timings).
+    pub fn record(&mut self, label: &str, secs: &[f64]) {
+        self.results.push((label.to_string(), Summary::of(secs)));
+    }
+
+    /// Print the report; returns it for tee-ing into files.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!("bench group: {}\n", self.name));
+        for (label, s) in &self.results {
+            out.push_str(&format!(
+                "  {:<40} {:>10.3} ms ±{:>8.3}  (n={}, p95 {:.3} ms)\n",
+                label,
+                s.mean * 1e3,
+                s.std * 1e3,
+                s.n,
+                s.p95 * 1e3
+            ));
+        }
+        print!("{out}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        std::env::set_var("CAUSE_BENCH_FAST", "1");
+        let mut b = Bench::new("t");
+        b.iter("noop", 5, || 1 + 1);
+        let rep = b.report();
+        assert!(rep.contains("noop"));
+        std::env::remove_var("CAUSE_BENCH_FAST");
+    }
+}

@@ -1,0 +1,13 @@
+//! Infrastructure utilities built in-repo (the offline registry has no
+//! serde/criterion/prettytable): a tiny JSON writer, a fixed-width table
+//! renderer for the paper-style reports, summary statistics, and the
+//! micro-benchmark harness used by `cargo bench`.
+
+pub mod bench;
+pub mod json;
+pub mod stats;
+pub mod table;
+
+pub use json::Json;
+pub use stats::Summary;
+pub use table::Table;

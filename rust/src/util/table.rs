@@ -1,0 +1,121 @@
+//! Fixed-width table renderer for paper-style console reports.
+
+/// A simple column-aligned text table with a title, used by every
+/// experiment to print the same rows the paper reports.
+#[derive(Clone, Debug, Default)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, header: &[&str]) -> Self {
+        Self {
+            title: title.into(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: vec![],
+        }
+    }
+
+    /// Append a row (stringified cells).
+    pub fn row(&mut self, cells: Vec<String>) -> &mut Self {
+        assert_eq!(cells.len(), self.header.len(), "row width mismatch");
+        self.rows.push(cells);
+        self
+    }
+
+    /// Render with column alignment.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut width = vec![0usize; ncol];
+        for (i, h) in self.header.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("== {} ==\n", self.title));
+        }
+        let fmt_row = |cells: &[String], width: &[usize]| {
+            let mut line = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                if i > 0 {
+                    line.push_str("  ");
+                }
+                line.push_str(&format!("{:<w$}", c, w = width[i]));
+            }
+            line.trim_end().to_string()
+        };
+        out.push_str(&fmt_row(&self.header, &width));
+        out.push('\n');
+        out.push_str(&"-".repeat(width.iter().sum::<usize>() + 2 * (ncol - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &width));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Convert to a JSON object (header -> column arrays).
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::Json;
+        let mut obj = Json::obj().set("title", self.title.clone());
+        let mut rows = Vec::new();
+        for row in &self.rows {
+            let mut o = Json::obj();
+            for (h, c) in self.header.iter().zip(row) {
+                o = match c.parse::<f64>() {
+                    Ok(v) if v.is_finite() => o.set(h, v),
+                    _ => o.set(h, c.clone()),
+                };
+            }
+            rows.push(o);
+        }
+        obj = obj.set("rows", Json::Arr(rows));
+        obj
+    }
+}
+
+/// Format a float with `digits` decimal places (helper for experiment rows).
+pub fn fnum(v: f64, digits: usize) -> String {
+    format!("{v:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["sys", "rsn"]);
+        t.row(vec!["CAUSE".into(), "825".into()]);
+        t.row(vec!["SISA".into(), "12345".into()]);
+        let s = t.render();
+        assert!(s.contains("== demo =="));
+        assert!(s.lines().count() >= 4);
+        // Columns aligned: "sys" padded to len("CAUSE").
+        assert!(s.contains("CAUSE  825"), "{s}");
+    }
+
+    #[test]
+    #[should_panic]
+    fn row_width_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn json_conversion_types_numbers() {
+        let mut t = Table::new("x", &["sys", "rsn"]);
+        t.row(vec!["CAUSE".into(), "825".into()]);
+        let s = t.to_json().to_string();
+        assert!(s.contains("\"rsn\":825"), "{s}");
+        assert!(s.contains("\"sys\":\"CAUSE\""), "{s}");
+    }
+}

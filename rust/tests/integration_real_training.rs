@@ -1,0 +1,141 @@
+//! Integration: the full stack (engine + PJRT trainer) on a tiny real
+//! workload — skipped when `make artifacts` has not run.
+
+use std::rc::Rc;
+use std::sync::Arc;
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::engine::EvalPolicy;
+use cause::coordinator::system::SystemVariant;
+use cause::data::catalog::CIFAR10;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::runtime::Runtime;
+use cause::training::{PjrtTrainer, PjrtTrainerConfig};
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Rc::new(Runtime::new(dir).expect("runtime")))
+}
+
+fn tiny_setup(
+    rt: Rc<Runtime>,
+    v: SystemVariant,
+    seed: u64,
+) -> (cause::coordinator::Engine, Arc<EdgePopulation>, RequestTrace) {
+    let cfg = ExperimentConfig {
+        users: 10,
+        rounds: 3,
+        shards: 2,
+        unlearn_prob: 0.3,
+        dataset: CIFAR10.scaled(600),
+        seed,
+        ..Default::default()
+    };
+    let pop = Arc::new(EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.clone(),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.6,
+        label_alpha: 1.0,
+        arrival_prob: 0.9,
+        seed: cfg.seed,
+    }));
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig::paper_default(cfg.seed ^ 1).with_prob(cfg.unlearn_prob),
+    );
+    let trainer = PjrtTrainer::new(
+        rt,
+        pop.clone(),
+        PjrtTrainerConfig {
+            variant: "mobilenetv2_c10".into(),
+            max_epochs: 1,
+            lr: 0.05,
+            test_samples: 128,
+            seed: cfg.seed,
+        },
+        cfg.shards,
+        v.schedule(&cfg).final_keep(),
+    )
+    .expect("trainer");
+    let engine = v
+        .build_with_trainer(&cfg, Box::new(trainer), EvalPolicy::FinalRound)
+        .expect("engine");
+    (engine, pop, trace)
+}
+
+#[test]
+fn real_training_system_learns_and_unlearns() {
+    let Some(rt) = runtime() else { return };
+    let (mut engine, pop, trace) = tiny_setup(rt, SystemVariant::Cause, 3);
+    engine.run_trace(&pop, &trace).expect("trace run");
+    let m = &engine.metrics;
+    assert!(m.total_requests() > 0, "trace generated no requests");
+    assert!(m.total_rsn() > 0);
+    let acc = m.final_accuracy().expect("real trainer must report accuracy");
+    assert!(
+        acc > 0.15,
+        "ensemble accuracy {acc} not above chance (0.1 for 10 classes)"
+    );
+}
+
+#[test]
+fn cause_checkpoints_are_sparse_sisa_dense() {
+    let Some(rt) = runtime() else { return };
+    let (mut cause_engine, pop, trace) = tiny_setup(rt.clone(), SystemVariant::Cause, 5);
+    cause_engine.run_trace(&pop, &trace).unwrap();
+    let (mut sisa_engine, pop2, trace2) = tiny_setup(rt, SystemVariant::Sisa, 5);
+    sisa_engine.run_trace(&pop2, &trace2).unwrap();
+
+    let avg_bytes = |e: &cause::coordinator::Engine| {
+        let (n, total) = e
+            .store()
+            .iter()
+            .fold((0u64, 0u64), |(n, t), c| (n + 1, t + c.size_bytes));
+        total / n.max(1)
+    };
+    let cause_avg = avg_bytes(&cause_engine);
+    let sisa_avg = avg_bytes(&sisa_engine);
+    assert!(
+        (cause_avg as f64) < (sisa_avg as f64) * 0.6,
+        "RCMP checkpoints should be <60% of dense: {cause_avg} vs {sisa_avg}"
+    );
+    // And the stored params really are sparse tensors.
+    let ckpt = cause_engine.store().iter().next().expect("checkpoint");
+    let params = ckpt.params.as_ref().expect("real params");
+    let (nz, total) = params
+        .iter()
+        .filter(|p| p.dims.len() == 2 && p.len() >= 1024)
+        .fold((0usize, 0usize), |(nz, t), p| (nz + p.nonzero_count(), t + p.len()));
+    let frac = nz as f64 / total.max(1) as f64;
+    assert!(frac < 0.45, "prunable weights should be ~30% dense, got {frac}");
+}
+
+#[test]
+fn warm_start_resumes_from_checkpoint_params() {
+    let Some(rt) = runtime() else { return };
+    let (mut engine, pop, _trace) = tiny_setup(rt, SystemVariant::Cause, 7);
+    engine.run_round(&pop).unwrap();
+    engine.run_round(&pop).unwrap();
+    // Unlearn part of a round-2 block: must warm-start (round-1 checkpoint
+    // exists) and replay only the poisoned segment.
+    let block = pop.blocks_at(2)[0].clone();
+    let req = cause::data::trace::UnlearnRequest {
+        round: 2,
+        user: block.user,
+        parts: vec![(block.id, 1.max(block.samples / 3))],
+    };
+    let out = engine.process_request(&req).unwrap();
+    assert_eq!(out.scratch_starts, 0, "should warm start: {out:?}");
+    assert!(out.warm_starts >= 1);
+    // Replay is bounded by the affected lineage's segment-2 size.
+    let lineage_total: u64 = (0..engine.lineages().len())
+        .map(|l| engine.lineages().get(l).total_samples())
+        .sum();
+    assert!(out.rsn < lineage_total, "replay {} >= all data {}", out.rsn, lineage_total);
+}

@@ -1,0 +1,149 @@
+//! Integration: full system runs at paper scale on the accounting backend —
+//! the headline orderings and engine invariants across all eight presets.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::experiments::common;
+
+const ALL: [SystemVariant; 8] = [
+    SystemVariant::Cause,
+    SystemVariant::CauseNoSc,
+    SystemVariant::CauseU,
+    SystemVariant::CauseC,
+    SystemVariant::Sisa,
+    SystemVariant::Arcane,
+    SystemVariant::Omp70,
+    SystemVariant::Omp95,
+];
+
+fn paper_cfg() -> ExperimentConfig {
+    ExperimentConfig::default() // 100 users, T=10, S=4, 2 GB, rho_u=0.1
+}
+
+#[test]
+fn headline_ordering_cause_wins_rsn_and_energy() {
+    let cfg = paper_cfg();
+    let cause = common::run_cost(SystemVariant::Cause, &cfg).unwrap();
+    for other in [SystemVariant::Sisa, SystemVariant::Arcane, SystemVariant::Omp70] {
+        let m = common::run_cost(other, &cfg).unwrap();
+        assert!(
+            cause.total_rsn() < m.total_rsn(),
+            "CAUSE {} !< {} {}",
+            cause.total_rsn(),
+            other.display(),
+            m.total_rsn()
+        );
+        assert!(cause.energy_joules < m.energy_joules, "{}", other.display());
+    }
+}
+
+#[test]
+fn every_system_serves_every_request() {
+    let cfg = paper_cfg();
+    let pop = common::population(&cfg);
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig::paper_default(cfg.seed ^ 0x7ace).with_prob(cfg.unlearn_prob),
+    );
+    let expected = trace.total_requests() as u64;
+    for v in ALL {
+        let m = common::run_cost(v, &cfg).unwrap();
+        assert_eq!(m.total_requests(), expected, "{}", v.display());
+        assert!(m.total_rsn() > 0, "{} did no retraining", v.display());
+        assert_eq!(m.rsn_by_round.len(), cfg.rounds as usize);
+    }
+}
+
+#[test]
+fn store_never_exceeds_capacity_and_accounting_balances() {
+    let cfg = paper_cfg().with_memory_gb(0.5);
+    for v in ALL {
+        let pop = common::population(&cfg);
+        let trace = common::trace(&cfg, &pop);
+        let mut engine = v.build_cost(&cfg).unwrap();
+        engine.run_trace(&pop, &trace).unwrap();
+        let store = engine.store();
+        assert!(store.occupied() <= store.capacity(), "{}", v.display());
+        let m = &engine.metrics;
+        // Stored = placed into a slot; every replacement implies a store.
+        assert!(m.ckpts_replaced <= m.ckpts_stored, "{}", v.display());
+        // No-replacement systems never replace.
+        if matches!(
+            v,
+            SystemVariant::Sisa | SystemVariant::Arcane | SystemVariant::Omp70 | SystemVariant::Omp95
+        ) {
+            assert_eq!(m.ckpts_replaced, 0, "{}", v.display());
+        }
+    }
+}
+
+#[test]
+fn deterministic_across_runs() {
+    let cfg = paper_cfg();
+    for v in [SystemVariant::Cause, SystemVariant::Sisa] {
+        let a = common::run_cost(v, &cfg).unwrap();
+        let b = common::run_cost(v, &cfg).unwrap();
+        assert_eq!(a.total_rsn(), b.total_rsn(), "{}", v.display());
+        assert_eq!(a.rsn_by_round, b.rsn_by_round, "{}", v.display());
+        assert_eq!(a.energy_joules, b.energy_joules, "{}", v.display());
+    }
+}
+
+#[test]
+fn unlearned_samples_leave_the_lineages() {
+    let cfg = paper_cfg();
+    let pop = common::population(&cfg);
+    let trace = common::trace(&cfg, &pop);
+    let mut engine = SystemVariant::Cause.build_cost(&cfg).unwrap();
+    engine.run_trace(&pop, &trace).unwrap();
+    let removed = trace.total_unlearned_samples();
+    let held = engine.lineages().total_samples();
+    assert_eq!(
+        held + removed,
+        pop.total_samples(),
+        "sample conservation: held {held} + removed {removed} != total {}",
+        pop.total_samples()
+    );
+}
+
+#[test]
+fn memory_pressure_monotonically_hurts_no_replacement_systems() {
+    // Fig. 14a's mechanism: SISA's RSN grows as memory shrinks.
+    let rsn = |gb: f64| {
+        common::run_cost(SystemVariant::Sisa, &paper_cfg().with_memory_gb(gb))
+            .unwrap()
+            .total_rsn()
+    };
+    let large = rsn(4.0);
+    let small = rsn(0.5);
+    assert!(
+        small > large,
+        "SISA at 0.5GB ({small}) should exceed 4GB ({large})"
+    );
+}
+
+#[test]
+fn unlearn_probability_scales_rsn_for_all_systems() {
+    for v in [SystemVariant::Cause, SystemVariant::Sisa] {
+        let lo = common::run_cost(v, &paper_cfg().with_unlearn_prob(0.1)).unwrap();
+        let hi = common::run_cost(v, &paper_cfg().with_unlearn_prob(0.5)).unwrap();
+        assert!(
+            hi.total_rsn() > lo.total_rsn() * 2,
+            "{}: {} vs {}",
+            v.display(),
+            lo.total_rsn(),
+            hi.total_rsn()
+        );
+    }
+}
+
+#[test]
+fn pruned_systems_fit_more_checkpoints() {
+    let cfg = paper_cfg();
+    let cause = SystemVariant::Cause.build_cost(&cfg).unwrap();
+    let omp95 = SystemVariant::Omp95.build_cost(&cfg).unwrap();
+    let sisa = SystemVariant::Sisa.build_cost(&cfg).unwrap();
+    assert!(cause.store().capacity() > sisa.store().capacity() * 2);
+    assert!(omp95.store().capacity() > cause.store().capacity());
+}

@@ -1,0 +1,140 @@
+//! Integration test: the full python-AOT -> rust-PJRT round trip.
+//!
+//! Requires `make artifacts` to have produced `artifacts/manifest.txt`.
+//! Skips (with a loud message) when artifacts are missing so `cargo test`
+//! stays green on a fresh checkout; `make test` always builds them first.
+
+use std::rc::Rc;
+
+use cause::runtime::{PruneSession, Runtime, TrainSession};
+
+fn runtime() -> Option<Rc<Runtime>> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.txt").exists() {
+        eprintln!("SKIP runtime_roundtrip: no artifacts (run `make artifacts`)");
+        return None;
+    }
+    Some(Rc::new(Runtime::new(dir).expect("runtime")))
+}
+
+/// Deterministic pseudo-random training batch with learnable structure:
+/// class = sign pattern of the first feature block.
+fn toy_batch(n: usize, features: usize, seed: u64) -> (Vec<f32>, Vec<f32>) {
+    let mut state = seed.wrapping_mul(0x9e3779b97f4a7c15).wrapping_add(1);
+    let mut next = move || {
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state >> 11) as f32 / (1u64 << 53) as f32
+    };
+    let mut xs = vec![0.0f32; n * features];
+    let mut ys = vec![0.0f32; n];
+    for r in 0..n {
+        let class = r % 2;
+        ys[r] = class as f32;
+        for c in 0..features {
+            let base = if class == 0 { 0.5 } else { -0.5 };
+            xs[r * features + c] = base + 0.1 * (next() - 0.5);
+        }
+    }
+    (xs, ys)
+}
+
+#[test]
+fn train_predict_prune_roundtrip() {
+    let Some(rt) = runtime() else { return };
+    let variant = "mobilenetv2_c10";
+    if rt.manifest().get(&format!("{variant}/train_step")).is_err() {
+        eprintln!("SKIP: variant {variant} not lowered");
+        return;
+    }
+
+    let mut sess = TrainSession::init(rt.clone(), variant, 7).expect("init");
+    assert_eq!(sess.feature_dim(), 3072);
+    let (xs, ys) = toy_batch(sess.batch_size(), sess.feature_dim(), 42);
+
+    // Loss must drop substantially on a linearly-separable toy batch.
+    let first = sess.step(&xs, &ys, 0.05).expect("step");
+    let mut last = first;
+    for _ in 0..20 {
+        last = sess.step(&xs, &ys, 0.05).expect("step");
+    }
+    assert!(
+        last < first * 0.5,
+        "loss did not drop: first={first} last={last}"
+    );
+
+    // Predictions should now match the toy labels.
+    let logits = sess.logits(&xs, ys.len()).expect("logits");
+    let mut correct = 0;
+    for (row, y) in logits.iter().zip(&ys) {
+        let argmax = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        if argmax == *y as usize {
+            correct += 1;
+        }
+    }
+    assert!(
+        correct * 10 >= ys.len() * 9,
+        "accuracy too low: {correct}/{}",
+        ys.len()
+    );
+
+    // Pruning at keep=0.3 zeroes ~70% of the big weight matrices.
+    let before: usize = sess.params().iter().map(|p| p.nonzero_count()).sum();
+    sess.prune(0.3).expect("prune");
+    let after: usize = sess.params().iter().map(|p| p.nonzero_count()).sum();
+    assert!(
+        (after as f64) < (before as f64) * 0.45,
+        "prune did not sparsify: {before} -> {after}"
+    );
+
+    // Pruned model must still train (RCMP fine-tuning path).
+    let resumed = sess.step(&xs, &ys, 0.05).expect("step after prune");
+    assert!(resumed.is_finite());
+}
+
+#[test]
+fn padded_rows_do_not_change_training() {
+    let Some(rt) = runtime() else { return };
+    let variant = "mobilenetv2_c10";
+    if rt.manifest().get(&format!("{variant}/train_step")).is_err() {
+        return;
+    }
+    let mut a = TrainSession::init(rt.clone(), variant, 3).unwrap();
+    let mut b = TrainSession::init(rt.clone(), variant, 3).unwrap();
+    let full = a.batch_size();
+    let (xs, ys) = toy_batch(full, a.feature_dim(), 1);
+    let half = full / 2;
+
+    // Session A sees only `half` rows; session B sees the same rows —
+    // the padding convention must make them identical.
+    let la = a.step(&xs[..half * a.feature_dim()], &ys[..half], 0.1).unwrap();
+    let lb = b.step(&xs[..half * b.feature_dim()], &ys[..half], 0.1).unwrap();
+    assert!((la - lb).abs() < 1e-6);
+    for (pa, pb) in a.params().iter().zip(b.params()) {
+        assert_eq!(pa, pb);
+    }
+}
+
+#[test]
+fn stateless_prune_session_matches_member_prune() {
+    let Some(rt) = runtime() else { return };
+    let variant = "mobilenetv2_c10";
+    if rt.manifest().get(&format!("{variant}/prune")).is_err() {
+        return;
+    }
+    let sess = TrainSession::init(rt.clone(), variant, 11).unwrap();
+    let pruner = PruneSession { rt: rt.clone(), variant: variant.into() };
+    let pruned = pruner.prune(sess.params(), 0.5).unwrap();
+    let kept: usize = pruned.iter().map(|p| p.nonzero_count()).sum();
+    let total: usize = sess.params().iter().map(|p| p.len()).sum();
+    assert!(kept < total, "pruning kept everything");
+    // Idempotence: pruning an already-pruned model at the same rate is a no-op.
+    let again = pruner.prune(&pruned, 0.5).unwrap();
+    assert_eq!(pruned, again);
+}
