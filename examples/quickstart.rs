@@ -60,35 +60,44 @@ fn main() -> anyhow::Result<()> {
         for req in trace.at(t) {
             svc.submit(req.clone());
         }
-        let served = svc.drain()?;
+        // Batched drain: the round's requests are coalesced into one
+        // retrain plan per affected lineage (cfg.batch_policy, default
+        // Coalesce) instead of one retrain pass per request.
+        let windows_before = svc.batch_log.len();
+        let served = svc.drain_batched()?;
         let m = &svc.engine().metrics;
         println!(
-            "round {t}: served {served} requests | RSN this round {:>8} | \
-             store {}/{} slots",
+            "round {t}: served {served} requests in {} window(s) | \
+             RSN this round {:>8} | store {}/{} slots",
+            svc.batch_log.len() - windows_before,
             m.rsn_by_round.last().copied().unwrap_or(0),
             svc.engine().store().occupied(),
             svc.engine().store().capacity(),
         );
     }
 
-    // 4. Receipts: what each unlearning request cost.
-    println!("\nper-request receipts (first 5):");
-    for r in svc.log.iter().take(5) {
+    // 4. Receipts: what each batch window cost and what coalescing saved.
+    println!("\nper-window receipts (first 5):");
+    for b in svc.batch_log.iter().take(5) {
         println!(
-            "  user {:>3} @ round {}: RSN {:>7}, {} lineage(s) retrained, \
-             ~{:.1}s / {:.0} J on-device",
-            r.user, r.round, r.rsn, r.lineages_retrained, r.est_seconds, r.est_joules
+            "  {} request(s): RSN {:>7}, {} lineage(s) retrained \
+             ({} per-request retrains coalesced away), ~{:.1}s / {:.0} J on-device",
+            b.requests, b.rsn, b.lineages_retrained, b.retrains_coalesced,
+            b.est_seconds, b.est_joules
         );
     }
 
     let m = &svc.engine().metrics;
     println!(
         "\ntotals: RSN {} | energy {:.0} J | warm retrains {} | scratch {} | \
+         retrains coalesced {} over {} window(s) | \
          checkpoints stored {} (replaced {}, rejected {})",
         m.total_rsn(),
         m.energy_joules,
         m.warm_retrains,
         m.scratch_retrains,
+        m.retrains_coalesced,
+        m.batches,
         m.ckpts_stored,
         m.ckpts_replaced,
         m.ckpts_rejected

@@ -68,12 +68,14 @@ fn run_system(variant: SystemVariant) -> anyhow::Result<()> {
     let m = &svc.engine().metrics;
     println!(
         "  == {}: total RSN {} | energy {:.0} J (battery {:.0} J) | \
-         deferral events {} | brownouts {}\n",
+         deferral events {} ({} receipts) | brownouts {}\n",
         variant.display(),
         m.total_rsn(),
         m.energy_joules,
         AI_CUBESAT.battery_joules,
         deferred_total,
+        // One receipt per starvation episode (not per drain poll).
+        svc.log.iter().filter(|r| r.deferred).count(),
         svc.battery().map(|b| b.brownouts).unwrap_or(0)
     );
     Ok(())

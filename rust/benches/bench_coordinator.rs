@@ -10,7 +10,29 @@ use cause::data::dataset::{EdgePopulation, PopulationConfig};
 use cause::data::trace::{RequestTrace, TraceConfig};
 use cause::partition::{Partitioner, Ucdp, Uniform};
 use cause::replacement::{FiboR, ReplacementPolicy};
+use cause::unlearning::{BatchPlanner, BatchPolicy, UnlearningService};
 use cause::util::bench::{black_box, Bench};
+
+/// Run the burst workload through the service under one batch policy;
+/// returns (total RSN, requests served).
+fn run_burst(
+    cfg: &ExperimentConfig,
+    pop: &EdgePopulation,
+    trace: &RequestTrace,
+    policy: BatchPolicy,
+) -> (u64, usize) {
+    let engine = SystemVariant::Cause.build_cost(cfg).unwrap();
+    let mut svc = UnlearningService::new(engine).with_planner(BatchPlanner::new(policy, 0));
+    let mut served = 0;
+    for t in 1..=cfg.rounds {
+        svc.ingest_round(pop).unwrap();
+        for req in trace.at(t) {
+            svc.submit(req.clone());
+        }
+        served += svc.drain_batched().unwrap();
+    }
+    (svc.engine().metrics.total_rsn(), served)
+}
 
 fn main() {
     let mut b = Bench::new("coordinator-hot-paths");
@@ -71,6 +93,33 @@ fn main() {
             black_box(engine.metrics.total_rsn())
         });
     }
+
+    // Batched unlearning: the shared seeded same-round burst over few
+    // lineages (experiments::common::burst_workload — the same workload
+    // tests/batched_unlearning.rs asserts the strict inequality on). The
+    // coalescing win: one retrain per lineage per window instead of one
+    // per request.
+    let (burst_cfg, burst_pop, burst_trace) = cause::experiments::common::burst_workload();
+    let (fcfs_rsn, fcfs_served) =
+        run_burst(&burst_cfg, &burst_pop, &burst_trace, BatchPolicy::Fcfs);
+    let (coal_rsn, coal_served) =
+        run_burst(&burst_cfg, &burst_pop, &burst_trace, BatchPolicy::Coalesce);
+    println!(
+        "batched unlearning burst ({} requests / {} shards): \
+         FCFS RSN {} vs Coalesce RSN {} ({:.2}x fewer samples replayed)",
+        fcfs_served,
+        burst_cfg.shards,
+        fcfs_rsn,
+        coal_rsn,
+        fcfs_rsn as f64 / coal_rsn.max(1) as f64
+    );
+    assert_eq!(fcfs_served, coal_served);
+    b.iter("service_burst_fcfs", 10, || {
+        black_box(run_burst(&burst_cfg, &burst_pop, &burst_trace, BatchPolicy::Fcfs))
+    });
+    b.iter("service_burst_coalesce", 10, || {
+        black_box(run_burst(&burst_cfg, &burst_pop, &burst_trace, BatchPolicy::Coalesce))
+    });
 
     // Population + trace generation (dominates sweep setup cost).
     b.iter("population_generate_50k", 10, || {

@@ -6,6 +6,7 @@ pub mod profiles;
 use anyhow::{bail, Result};
 
 use crate::data::catalog::{DatasetSpec, CIFAR10};
+use crate::unlearning::batch::BatchPolicy;
 pub use profiles::ModelProfile;
 
 /// Everything a simulated run needs; defaults are the paper's §5.1 setup.
@@ -29,6 +30,11 @@ pub struct ExperimentConfig {
     pub sc_p: f64,
     /// Fraction of prunable weights KEPT by RCMP (paper δ=70% pruned → 0.3).
     pub prune_keep: f64,
+    /// Service batching: how the unlearning service merges queued requests
+    /// (the paper's FCFS baseline vs per-window retrain coalescing).
+    pub batch_policy: BatchPolicy,
+    /// Max requests coalesced per drain window (0 = the whole queue).
+    pub batch_window: usize,
     pub model: ModelProfile,
     pub dataset: DatasetSpec,
 }
@@ -46,6 +52,8 @@ impl Default for ExperimentConfig {
             sc_gamma: 0.5,
             sc_p: 0.5,
             prune_keep: 0.3,
+            batch_policy: BatchPolicy::Coalesce,
+            batch_window: 0,
             model: profiles::RESNET34,
             dataset: CIFAR10,
         }
@@ -83,6 +91,12 @@ impl ExperimentConfig {
         self
     }
 
+    pub fn with_batching(mut self, policy: BatchPolicy, window: usize) -> Self {
+        self.batch_policy = policy;
+        self.batch_window = window;
+        self
+    }
+
     /// Apply a `key = value` assignment (config file / CLI override).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
@@ -99,6 +113,11 @@ impl ExperimentConfig {
             "sc_gamma" => self.sc_gamma = v.parse()?,
             "sc_p" => self.sc_p = v.parse()?,
             "prune_keep" => self.prune_keep = v.parse()?,
+            "batch_window" => self.batch_window = v.parse()?,
+            "batch_policy" => {
+                self.batch_policy = BatchPolicy::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown batch policy '{v}'"))?
+            }
             "model" => {
                 self.model = ModelProfile::by_name(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown model '{v}'"))?
@@ -165,6 +184,8 @@ mod tests {
         assert_eq!(c.sc_gamma, 0.5);
         assert_eq!(c.sc_p, 0.5);
         assert!((c.prune_keep - 0.3).abs() < 1e-12);
+        assert_eq!(c.batch_policy, BatchPolicy::Coalesce);
+        assert_eq!(c.batch_window, 0);
         c.validate().unwrap();
     }
 
@@ -175,10 +196,15 @@ mod tests {
         c.apply("memory_gb", "0.5").unwrap();
         c.apply("model", "vgg16").unwrap();
         c.apply("dataset", "svhn").unwrap();
+        c.apply("batch_policy", "fcfs").unwrap();
+        c.apply("batch_window", "32").unwrap();
         assert_eq!(c.shards, 16);
         assert_eq!(c.memory_bytes, 512 * 1024 * 1024);
         assert_eq!(c.model.name, "vgg16");
         assert_eq!(c.dataset.name, "svhn");
+        assert_eq!(c.batch_policy, BatchPolicy::Fcfs);
+        assert_eq!(c.batch_window, 32);
+        assert!(c.apply("batch_policy", "lifo").is_err());
         assert!(c.apply("nope", "1").is_err());
     }
 

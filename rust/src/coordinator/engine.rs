@@ -20,21 +20,23 @@
 //!      and the retrained model is stored again via the policy (line 12);
 //!   5. RSN += samples replayed — the paper's headline metric.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 
 use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::lineage::LineageSet;
-use crate::data::dataset::EdgePopulation;
+use crate::data::dataset::{BlockId, EdgePopulation};
 use crate::data::trace::{RequestTrace, UnlearnRequest};
 use crate::energy::EnergyModel;
 use crate::memory::{Checkpoint, ModelStore, StoreEvent};
 use crate::metrics::RunMetrics;
 use crate::partition::Partitioner;
 use crate::pruning::PruneSchedule;
+use crate::runtime::HostTensor;
 use crate::shard_controller::ShardController;
-use crate::training::Trainer;
+use crate::training::{LineageWorker, TrainOutcome, Trainer};
+use crate::unlearning::batch::{BatchPlan, LineagePlan};
 
 /// When the engine measures ensemble accuracy (PJRT backend only).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -44,7 +46,7 @@ pub enum EvalPolicy {
     EveryRound,
 }
 
-/// Outcome of one unlearning request.
+/// Outcome of one unlearning request (or one coalesced batch window).
 #[derive(Clone, Debug, Default)]
 pub struct UnlearnOutcome {
     pub rsn: u64,
@@ -52,6 +54,94 @@ pub struct UnlearnOutcome {
     pub warm_starts: usize,
     pub scratch_starts: usize,
     pub ckpts_invalidated: usize,
+    /// Every `(lineage, covered_segments)` sub-model version this request
+    /// or batch invalidated (Alg. 3 line 11) — the exact-unlearning audit
+    /// trail the equivalence tests compare across service policies.
+    pub invalidated_versions: Vec<(usize, u32)>,
+}
+
+/// One step of a lineage's resolved retrain chain: clean one poisoned
+/// sub-model version (Alg. 3 lines 8, 11–12).
+struct ResolvedStep {
+    /// Coverage of the retrained clean version: poisoned segment + 1.
+    clean_cover: u32,
+    /// Checkpoint parameters to warm-start from; `None` when chained onto
+    /// the previous step's in-memory model or when starting from scratch.
+    warm_params: Option<Vec<HostTensor>>,
+    /// Continue from the previous step's retrained model — it already
+    /// covers more than any stored checkpoint below the poisoned segment,
+    /// so no trainer reset is needed.
+    chained: bool,
+    /// No usable checkpoint below the poisoned segment: full restart.
+    scratch: bool,
+    /// Replay set: live (block, samples) for the warm-start..clean range.
+    replay: Vec<(BlockId, u64)>,
+    /// Samples this step replays (the step's RSN contribution).
+    rsn: u64,
+}
+
+/// A lineage's full retrain chain for one request/batch.
+struct ResolvedChain {
+    lineage: usize,
+    steps: Vec<ResolvedStep>,
+}
+
+/// Resolve one lineage's merged poison set into a retrain chain against a
+/// snapshot of the store (Alg. 3 line 8 per poisoned version). Steps run
+/// in ascending segment order; step i+1 warm-starts from step i's
+/// retrained model unless the store holds a strictly newer checkpoint (a
+/// later sub-model version left in place, per the paper's retraining
+/// accounting). This matches the seed's FCFS per-step store lookups, minus
+/// the redundant re-reads — and when the refreshed checkpoint would have
+/// been rejected by a full no-replacement store, chaining onto the
+/// in-memory model replays strictly fewer samples with the same guarantee.
+fn resolve_chain(store: &ModelStore, lineages: &LineageSet, lp: &LineagePlan) -> ResolvedChain {
+    let mut steps = Vec::with_capacity(lp.segments.len());
+    let mut prev_clean: Option<u32> = None;
+    for &q in &lp.segments {
+        let clean_cover = q as u32 + 1;
+        let best = store
+            .best_checkpoint(lp.lineage, q as u32)
+            .map(|c| (c.covered_segments, c.params.clone()));
+        let (warm_cover, warm_params, chained, scratch) = match (best, prev_clean) {
+            (Some((cov, params)), Some(prev)) if cov > prev => (cov, params, false, false),
+            (_, Some(prev)) => (prev, None, true, false),
+            (Some((cov, params)), None) => (cov, params, false, false),
+            (None, None) => (0, None, false, true),
+        };
+        let replay = lineages.get(lp.lineage).replay_range(warm_cover, clean_cover);
+        let rsn = replay.iter().map(|(_, n)| n).sum();
+        steps.push(ResolvedStep { clean_cover, warm_params, chained, scratch, replay, rsn });
+        prev_clean = Some(clean_cover);
+    }
+    ResolvedChain { lineage: lp.lineage, steps }
+}
+
+/// Don't pay scoped-thread spawn/join for tiny plans: a plan must span
+/// several lineages *and* clean at least this many sub-model versions in
+/// total before the executor goes parallel. Typical FCFS requests (one or
+/// two lineages, one poisoned segment each) stay serial on the `run_trace`
+/// hot path; coalesced burst windows cross the bar.
+const PARALLEL_MIN_VERSIONS: usize = 3;
+
+/// Run one resolved chain through an off-thread [`LineageWorker`].
+fn run_chain(
+    worker: &mut dyn LineageWorker,
+    chain: &ResolvedChain,
+    epochs: u32,
+    schedule: PruneSchedule,
+) -> Result<Vec<TrainOutcome>> {
+    chain
+        .steps
+        .iter()
+        .map(|step| {
+            if step.replay.is_empty() {
+                Ok(TrainOutcome::default())
+            } else {
+                worker.run(&step.replay, epochs, schedule)
+            }
+        })
+        .collect()
 }
 
 /// Outcome of one training round.
@@ -215,108 +305,183 @@ impl Engine {
         Ok(())
     }
 
-    /// Serve one unlearning request (Algorithm 3 lines 7–12).
-    pub fn process_request(&mut self, req: &UnlearnRequest) -> Result<UnlearnOutcome> {
-        let mut outcome = UnlearnOutcome::default();
-
-        // 1. Remove the samples and collect each affected lineage's
-        //    poisoned segment indices.
-        let mut poisoned: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
+    /// Remove a request's samples from the lineage bookkeeping and report
+    /// which `lineage → segments` were poisoned (Alg. 3 lines 7, 9–10).
+    /// Pure poison collection: no retraining happens here, so a batch
+    /// window can merge several requests' poison sets before replaying.
+    pub fn collect_poison(&mut self, req: &UnlearnRequest) -> BTreeMap<usize, BTreeSet<usize>> {
+        let mut poisoned: BTreeMap<usize, BTreeSet<usize>> = BTreeMap::new();
         for (block, n) in &req.parts {
             for (seg_ref, removed) in self.lineages.remove_samples(*block, *n) {
                 if removed == 0 {
                     continue;
                 }
-                let segs = poisoned.entry(seg_ref.lineage).or_default();
-                if !segs.contains(&seg_ref.segment) {
-                    segs.push(seg_ref.segment);
-                }
+                poisoned.entry(seg_ref.lineage).or_default().insert(seg_ref.segment);
             }
         }
+        poisoned
+    }
 
-        // 2. For every poisoned sub-model version, retrain from the newest
-        //    surviving checkpoint that predates it (Alg. 3 line 8: "the
-        //    sub-model most closely to the unlearned data before D_r is
-        //    learned"), replaying through the poisoned segment. Later
-        //    sub-model versions stay in place — the paper's retraining
-        //    accounting (see DESIGN.md §Key-decisions).
-        for (lineage, mut segs) in poisoned {
-            segs.sort_unstable();
-            outcome.lineages_retrained += 1;
-            let mut last_clean_cover = 0;
-            for q in segs {
-                let max_cover = q as u32; // checkpoint must cover < segment q
-                let clean_cover = q as u32 + 1; // retrained version's coverage
-                let best = self
-                    .store
-                    .best_checkpoint(lineage, max_cover)
-                    .map(|c| (c.covered_segments, c.params.clone()));
+    /// Execute a batch plan: one retrain chain per affected lineage
+    /// (Alg. 3 lines 8–12 per poisoned version). When the backend hands
+    /// out [`LineageWorker`]s (the cost model does; PJRT's thread-local
+    /// handles keep it serial) and the plan is big enough, chains are
+    /// resolved against a store snapshot and the independent lineages
+    /// retrain in parallel via `std::thread::scope`. Store mutation and
+    /// metric accounting always stay on this thread.
+    ///
+    /// Round-slot metrics (`rsn_by_round` / `requests_by_round`) are the
+    /// caller's job via [`RunMetrics::record_requests`], since only the
+    /// caller knows how many requests the plan merged.
+    pub fn execute_plan(&mut self, plan: &BatchPlan) -> Result<UnlearnOutcome> {
+        let mut outcome = UnlearnOutcome::default();
+        if plan.is_empty() {
+            return Ok(outcome);
+        }
+        let epochs = self.cfg.epochs_per_round;
+        let schedule = self.schedule;
+        let parallel = plan.lineages.len() > 1
+            && plan.lineages.iter().map(|l| l.segments.len()).sum::<usize>()
+                >= PARALLEL_MIN_VERSIONS;
 
-                // Algorithm 3 line 11: delete the sub-model version that
-                // learned the unlearned data; the retrained clean model
-                // replaces it.
-                outcome.ckpts_invalidated += self.store.invalidate(|c| {
-                    c.lineage == lineage && c.covered_segments == clean_cover
-                });
-
-                let (covered, warm_params) = match best {
-                    Some((cov, params)) => {
-                        outcome.warm_starts += 1;
-                        (cov, params)
-                    }
+        // All-or-nothing worker collection: the parallel path needs every
+        // affected lineage to retrain off-thread.
+        let mut workers: Vec<Box<dyn LineageWorker>> = Vec::new();
+        let use_workers = parallel && {
+            let mut all = true;
+            for lp in &plan.lineages {
+                match self.trainer.worker(lp.lineage) {
+                    Some(w) => workers.push(w),
                     None => {
-                        outcome.scratch_starts += 1;
-                        (0, None)
+                        all = false;
+                        break;
                     }
-                };
-                let replay =
-                    self.lineages.get(lineage).replay_range(covered, clean_cover);
-                let rsn: u64 = replay.iter().map(|(_, n)| n).sum();
-                outcome.rsn += rsn;
-
-                self.trainer.reset(lineage, warm_params.as_deref())?;
-                if !replay.is_empty() {
-                    let out = self.trainer.run(
-                        lineage,
-                        &replay,
-                        self.cfg.epochs_per_round,
-                        self.schedule,
-                    )?;
-                    self.metrics.prunes += out.prune_ops;
-                    self.metrics.energy_joules += self.energy.prune_joules(out.prune_ops);
                 }
-                // Algorithm 3 line 12: store the retrained sub-model with
-                // its true coverage (clean through segment q).
-                self.store_snapshot_with_coverage(lineage, self.round, clean_cover)?;
-                last_clean_cover = last_clean_cover.max(clean_cover);
             }
-            // Serving continuity: the deployed sub-model stays the newest
-            // version (the paper keeps later sub-model versions in place —
-            // see DESIGN.md §Key-decisions); the retrain above refreshed
-            // the *poisoned* version's checkpoint.
-            let newest = self
-                .store
-                .latest(lineage)
-                .filter(|c| c.covered_segments > last_clean_cover)
-                .map(|c| c.params.clone());
-            if let Some(params) = newest {
-                self.trainer.reset(lineage, params.as_deref())?;
+            if !all {
+                workers.clear();
+            }
+            all
+        };
+
+        if use_workers {
+            // Resolve every chain up front against the unmutated store
+            // (cheap, read-only — not worth a thread per lookup), then run
+            // independent lineages' retrains on scoped threads.
+            let chains: Vec<ResolvedChain> = plan
+                .lineages
+                .iter()
+                .map(|lp| resolve_chain(&self.store, &self.lineages, lp))
+                .collect();
+            let results: Vec<Result<Vec<TrainOutcome>>> = std::thread::scope(|s| {
+                let handles: Vec<_> = chains
+                    .iter()
+                    .zip(workers.iter_mut())
+                    .map(|(chain, worker)| {
+                        s.spawn(move || run_chain(&mut **worker, chain, epochs, schedule))
+                    })
+                    .collect();
+                handles
+                    .into_iter()
+                    .map(|h| h.join().expect("retrain thread panicked"))
+                    .collect()
+            });
+            for (chain, result) in chains.iter().zip(results) {
+                let outs = result?;
+                outcome.lineages_retrained += 1;
+                let mut last_clean = 0;
+                for (step, out) in chain.steps.iter().zip(&outs) {
+                    self.trainer.absorb(chain.lineage, step.rsn, epochs, out);
+                    self.apply_step(chain.lineage, step, out, &mut outcome)?;
+                    last_clean = last_clean.max(step.clean_cover);
+                }
+                self.restore_serving_model(chain.lineage, last_clean)?;
+            }
+        } else {
+            // Serial: resolve and execute one lineage at a time against the
+            // live store — the seed's FCFS order (each chain sees earlier
+            // chains' store updates), and only one lineage's warm-start
+            // parameter clones are held at a time, which matters for the
+            // PJRT backend on the memory-constrained devices the paper
+            // targets. The per-step order is reset → run → store, so the
+            // PJRT snapshot captures each step's model before the next
+            // step moves it.
+            for lp in &plan.lineages {
+                let chain = resolve_chain(&self.store, &self.lineages, lp);
+                outcome.lineages_retrained += 1;
+                let mut last_clean = 0;
+                for step in &chain.steps {
+                    if !step.chained {
+                        self.trainer.reset(chain.lineage, step.warm_params.as_deref())?;
+                    }
+                    let out = if step.replay.is_empty() {
+                        TrainOutcome::default()
+                    } else {
+                        self.trainer.run(chain.lineage, &step.replay, epochs, schedule)?
+                    };
+                    self.apply_step(chain.lineage, step, &out, &mut outcome)?;
+                    last_clean = last_clean.max(step.clean_cover);
+                }
+                self.restore_serving_model(chain.lineage, last_clean)?;
             }
         }
 
-        // 3. Account.
-        self.metrics.energy_joules +=
-            self.energy.retrain_joules(outcome.rsn, self.cfg.epochs_per_round);
-        if let Some(last) = self.metrics.rsn_by_round.last_mut() {
-            *last += outcome.rsn;
-        }
-        if let Some(last) = self.metrics.requests_by_round.last_mut() {
-            *last += 1;
-        }
+        // Alg. 3 accounting: retrain energy is linear in replayed samples.
+        self.metrics.energy_joules += self.energy.retrain_joules(outcome.rsn, epochs);
         self.metrics.warm_retrains += outcome.warm_starts as u64;
         self.metrics.scratch_retrains += outcome.scratch_starts as u64;
         self.metrics.lineages_retrained += outcome.lineages_retrained as u64;
         self.metrics.ckpts_invalidated += outcome.ckpts_invalidated as u64;
+        Ok(outcome)
+    }
+
+    /// Store-side effects of one executed retrain step: delete the
+    /// poisoned sub-model version (Alg. 3 line 11), account the training
+    /// outcome, and store the retrained model with its true coverage
+    /// (line 12).
+    fn apply_step(
+        &mut self,
+        lineage: usize,
+        step: &ResolvedStep,
+        out: &TrainOutcome,
+        outcome: &mut UnlearnOutcome,
+    ) -> Result<()> {
+        outcome.ckpts_invalidated += self
+            .store
+            .invalidate(|c| c.lineage == lineage && c.covered_segments == step.clean_cover);
+        outcome.invalidated_versions.push((lineage, step.clean_cover));
+        if step.scratch {
+            outcome.scratch_starts += 1;
+        } else {
+            outcome.warm_starts += 1;
+        }
+        outcome.rsn += step.rsn;
+        self.metrics.prunes += out.prune_ops;
+        self.metrics.energy_joules += self.energy.prune_joules(out.prune_ops);
+        self.store_snapshot_with_coverage(lineage, self.round, step.clean_cover)
+    }
+
+    /// Serving continuity: the deployed sub-model stays the newest version
+    /// (the paper keeps later sub-model versions in place — DESIGN.md
+    /// §Key-decisions); the retrain refreshed the *poisoned* versions.
+    fn restore_serving_model(&mut self, lineage: usize, last_clean: u32) -> Result<()> {
+        let newest = self
+            .store
+            .latest(lineage)
+            .filter(|c| c.covered_segments > last_clean)
+            .map(|c| c.params.clone());
+        if let Some(params) = newest {
+            self.trainer.reset(lineage, params.as_deref())?;
+        }
+        Ok(())
+    }
+
+    /// Serve one unlearning request (Algorithm 3 lines 7–12): a
+    /// single-request plan through the shared batch machinery.
+    pub fn process_request(&mut self, req: &UnlearnRequest) -> Result<UnlearnOutcome> {
+        let plan = BatchPlan::collect(self, std::slice::from_ref(req));
+        let outcome = self.execute_plan(&plan)?;
+        self.metrics.record_requests(1, outcome.rsn);
         Ok(outcome)
     }
 

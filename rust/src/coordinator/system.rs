@@ -22,6 +22,7 @@ use crate::pruning::PruneSchedule;
 use crate::replacement::{FiboR, NoReplace, RandomReplace, ReplacementPolicy};
 use crate::shard_controller::ShardController;
 use crate::training::{CostTrainer, Trainer};
+use crate::unlearning::{BatchPlanner, BatchPolicy, UnlearningService};
 
 /// The systems compared throughout §5 of the paper.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
@@ -163,6 +164,32 @@ impl SystemVariant {
         let trainer = CostTrainer::new(cfg.model, self.schedule(cfg));
         self.build_with_trainer(cfg, Box::new(trainer), EvalPolicy::Never)
     }
+
+    /// Service batching policy for this system: the CAUSE family honors
+    /// the config's policy (coalescing by default); the baselines stay
+    /// strictly FCFS — that is their papers' service model, and keeping
+    /// them there makes the RSN comparison a like-for-like reproduction.
+    pub fn batch_policy(&self, cfg: &ExperimentConfig) -> BatchPolicy {
+        match self {
+            SystemVariant::Cause
+            | SystemVariant::CauseNoSc
+            | SystemVariant::CauseU
+            | SystemVariant::CauseC
+            | SystemVariant::CauseRandomReplace => cfg.batch_policy,
+            SystemVariant::Sisa
+            | SystemVariant::Arcane
+            | SystemVariant::Omp70
+            | SystemVariant::Omp95 => BatchPolicy::Fcfs,
+        }
+    }
+
+    /// Build the queue-fronted unlearning service for this system (cost
+    /// backend), with the batch planner this system should run.
+    pub fn build_service(&self, cfg: &ExperimentConfig) -> Result<UnlearningService> {
+        let engine = self.build_cost(cfg)?;
+        let planner = BatchPlanner::new(self.batch_policy(cfg), cfg.batch_window);
+        Ok(UnlearningService::new(engine).with_planner(planner))
+    }
 }
 
 /// Convenience façade used by the examples: a ready-to-run CAUSE system.
@@ -219,5 +246,17 @@ mod tests {
         let mut cfg = ExperimentConfig::default();
         cfg.shards = 0;
         assert!(SystemVariant::Cause.build_cost(&cfg).is_err());
+    }
+
+    #[test]
+    fn baselines_stay_fcfs() {
+        let cfg = ExperimentConfig::default(); // batch_policy = Coalesce
+        assert_eq!(SystemVariant::Cause.batch_policy(&cfg), BatchPolicy::Coalesce);
+        assert_eq!(SystemVariant::Sisa.batch_policy(&cfg), BatchPolicy::Fcfs);
+        assert_eq!(SystemVariant::Arcane.batch_policy(&cfg), BatchPolicy::Fcfs);
+        let svc = SystemVariant::Cause.build_service(&cfg).unwrap();
+        assert_eq!(svc.planner().policy, BatchPolicy::Coalesce);
+        let svc = SystemVariant::Omp70.build_service(&cfg).unwrap();
+        assert_eq!(svc.planner().policy, BatchPolicy::Fcfs);
     }
 }

@@ -45,6 +45,34 @@ pub fn run_cost(v: SystemVariant, cfg: &ExperimentConfig) -> Result<RunMetrics> 
     Ok(engine.metrics.clone())
 }
 
+/// The seeded burst workload the batched-unlearning comparison is pinned
+/// on: many same-round requests (users × ρ_u = 0.9) over at most `shards`
+/// lineages, with memory sized so the store never evicts — replacement
+/// order then cannot blur the FCFS-vs-Coalesce RSN comparison. Shared by
+/// `tests/batched_unlearning.rs` and `benches/bench_coordinator.rs` so the
+/// asserted and the printed numbers describe the same workload.
+pub fn burst_workload() -> (ExperimentConfig, EdgePopulation, RequestTrace) {
+    let cfg = ExperimentConfig {
+        users: 24,
+        rounds: 3,
+        shards: 4,
+        unlearn_prob: 0.9,
+        ..Default::default()
+    }
+    .with_memory_gb(8.0);
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.scaled(12_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.8,
+        seed: 21,
+    });
+    let trace = RequestTrace::generate(&pop, &TraceConfig::paper_default(22).with_prob(0.9));
+    (cfg, pop, trace)
+}
+
 /// Cost run with an explicit trace configuration (workload ablations).
 pub fn run_cost_with_trace(
     v: SystemVariant,

@@ -39,6 +39,8 @@ pub mod testkit;
 pub mod training;
 pub mod unlearning;
 pub mod util;
+pub mod xla;
 
 pub use config::ExperimentConfig;
 pub use coordinator::system::{CauseSystem, SystemVariant};
+pub use unlearning::{BatchPlanner, BatchPolicy, UnlearningService};

@@ -29,7 +29,7 @@ SYSTEMS:
 
 CONFIG KEYS (key=value):
     seed users rounds epochs_per_round shards memory_gb unlearn_prob
-    sc_gamma sc_p prune_keep model dataset
+    sc_gamma sc_p prune_keep batch_policy batch_window model dataset
 "
 }
 

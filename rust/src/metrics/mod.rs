@@ -21,11 +21,33 @@ pub struct RunMetrics {
     pub ckpts_replaced: u64,
     pub ckpts_rejected: u64,
     pub ckpts_invalidated: u64,
+    /// Batched-service counters: drain windows executed and the requests
+    /// they served (zero when the engine is driven strictly FCFS).
+    pub batches: u64,
+    pub batched_requests: u64,
+    /// Per-request lineage retrains avoided by coalescing: a lineage
+    /// poisoned by k requests in one window retrains once, saving k-1.
+    pub retrains_coalesced: u64,
     /// Ensemble accuracy per evaluation point (only with a real trainer).
     pub accuracy_by_round: Vec<Option<f64>>,
 }
 
 impl RunMetrics {
+    /// Account `served` requests totalling `rsn` replayed samples into the
+    /// current round slot. Requests served before any training round open
+    /// a round-0 slot instead of silently vanishing (the engine previously
+    /// dropped both the RSN and the request count in that case).
+    pub fn record_requests(&mut self, served: u64, rsn: u64) {
+        if self.rsn_by_round.is_empty() {
+            self.rsn_by_round.push(0);
+        }
+        if self.requests_by_round.is_empty() {
+            self.requests_by_round.push(0);
+        }
+        *self.rsn_by_round.last_mut().expect("slot just ensured") += rsn;
+        *self.requests_by_round.last_mut().expect("slot just ensured") += served;
+    }
+
     pub fn total_rsn(&self) -> u64 {
         self.rsn_by_round.iter().sum()
     }
@@ -65,6 +87,9 @@ impl RunMetrics {
             .set("ckpts_replaced", self.ckpts_replaced)
             .set("ckpts_rejected", self.ckpts_rejected)
             .set("ckpts_invalidated", self.ckpts_invalidated)
+            .set("batches", self.batches)
+            .set("batched_requests", self.batched_requests)
+            .set("retrains_coalesced", self.retrains_coalesced)
             .set(
                 "accuracy_by_round",
                 Json::Arr(
@@ -108,5 +133,22 @@ mod tests {
         let s = RunMetrics::default().to_json().to_string();
         assert!(s.contains("total_rsn"));
         assert!(s.contains("energy_joules"));
+        assert!(s.contains("retrains_coalesced"));
+    }
+
+    #[test]
+    fn record_requests_opens_round0_slot() {
+        let mut m = RunMetrics::default();
+        // Request before any training round: must not vanish.
+        m.record_requests(1, 0);
+        assert_eq!(m.total_requests(), 1);
+        assert_eq!(m.rsn_by_round.len(), 1);
+        // Subsequent rounds append their own slots as usual.
+        m.rsn_by_round.push(0);
+        m.requests_by_round.push(0);
+        m.record_requests(2, 70);
+        assert_eq!(m.total_requests(), 3);
+        assert_eq!(m.rsn_by_round, vec![0, 70]);
+        assert_eq!(m.requests_by_round, vec![1, 2]);
     }
 }

@@ -21,7 +21,11 @@ pub use static_policy::NoReplace;
 /// "drop the new checkpoint instead of evicting" (the no-replacement
 /// baselines). Policies are deliberately *stateless about contents* —
 /// exactly like the paper's Algorithm 2, which walks slot indices.
-pub trait ReplacementPolicy: Send {
+///
+/// `Sync` is required so the batch executor can resolve retrain chains
+/// against a shared `&ModelStore` from scoped threads (reads only; all
+/// mutation stays on the engine thread).
+pub trait ReplacementPolicy: Send + Sync {
     fn name(&self) -> &'static str;
 
     /// Slot to evict for the next incoming checkpoint, or `None` to reject.

@@ -11,6 +11,7 @@ use anyhow::{bail, Context, Result};
 
 use super::artifact::{ArtifactManifest, ArtifactSpec};
 use super::tensor::HostTensor;
+use crate::xla;
 
 /// Cumulative execution statistics, used by the perf harness.
 #[derive(Clone, Debug, Default)]

@@ -2,6 +2,8 @@
 
 use anyhow::{bail, Context, Result};
 
+use crate::xla;
+
 /// A dense f32 tensor living on the host.
 ///
 /// All model state crossing the PJRT boundary is f32 in this reproduction

@@ -82,6 +82,30 @@ impl Battery {
         }
     }
 
+    /// Would a `draw(joules)` succeed right now? (No brownout recorded.)
+    pub fn can_cover(&self, joules: f64) -> bool {
+        self.mains() || joules <= self.charge_j
+    }
+
+    /// Return over-reserved energy to the battery, clamped at capacity.
+    /// Negative refunds are ignored (use `draw` to spend); mains devices
+    /// have no charge state to refund.
+    pub fn refund(&mut self, joules: f64) {
+        if !self.mains() {
+            self.charge_j = (self.charge_j + joules.max(0.0)).min(self.capacity_j);
+        }
+    }
+
+    /// Deduct energy for work that has *already* run (post-hoc
+    /// settlement): unconditional, clamped at zero, and no brownout is
+    /// recorded — `draw` gates work that has not run yet. Debt beyond an
+    /// empty battery is forgiven (the simulation cannot un-run the work).
+    pub fn deduct(&mut self, joules: f64) {
+        if !self.mains() {
+            self.charge_j = (self.charge_j - joules.max(0.0)).max(0.0);
+        }
+    }
+
     /// State of charge in [0, 1] (1.0 when mains powered).
     pub fn soc(&self) -> f64 {
         if self.mains() {
@@ -130,5 +154,52 @@ mod tests {
         let mut b = Battery::new(&AI_CUBESAT);
         b.harvest(1e9);
         assert_eq!(b.charge_j, b.capacity_j);
+    }
+
+    #[test]
+    fn over_refund_clamps_at_capacity() {
+        let mut b = Battery::new(&AI_CUBESAT);
+        assert!(b.draw(1000.0));
+        // Refund far more than was drawn: charge must clamp, not overflow.
+        b.refund(1e9);
+        assert_eq!(b.charge_j, b.capacity_j);
+        // Refund of the exact over-reservation restores the difference.
+        assert!(b.draw(500.0));
+        b.refund(200.0);
+        assert!((b.charge_j - (b.capacity_j - 300.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn negative_refund_is_ignored() {
+        let mut b = Battery::new(&AI_CUBESAT);
+        assert!(b.draw(100.0));
+        let before = b.charge_j;
+        b.refund(-50.0);
+        assert_eq!(b.charge_j, before);
+    }
+
+    #[test]
+    fn deduct_clamps_at_zero_without_brownout() {
+        let mut b = Battery::new(&AI_CUBESAT);
+        b.deduct(100.0);
+        assert_eq!(b.charge_j, b.capacity_j - 100.0);
+        // Debt beyond empty is forgiven; no brownout for completed work.
+        b.deduct(1e12);
+        assert_eq!(b.charge_j, 0.0);
+        assert_eq!(b.brownouts, 0);
+        b.deduct(-5.0); // negative deductions ignored
+        assert_eq!(b.charge_j, 0.0);
+    }
+
+    #[test]
+    fn can_cover_matches_draw_without_side_effects() {
+        let b = Battery::new(&AI_CUBESAT);
+        assert!(b.can_cover(b.capacity_j));
+        assert!(!b.can_cover(b.capacity_j + 1.0));
+        assert_eq!(b.brownouts, 0, "can_cover must not record brownouts");
+        let mut mains = Battery::new(&JETSON_ORIN_NANO);
+        assert!(mains.can_cover(1e12));
+        mains.refund(1e12); // no-op on mains
+        assert!(mains.mains());
     }
 }

@@ -6,7 +6,7 @@ use crate::config::ModelProfile;
 use crate::data::dataset::BlockId;
 use crate::pruning::PruneSchedule;
 use crate::runtime::HostTensor;
-use crate::training::{TrainOutcome, Trainer};
+use crate::training::{LineageWorker, TrainOutcome, Trainer};
 
 /// Cost-model trainer over a paper-scale [`ModelProfile`].
 pub struct CostTrainer {
@@ -20,6 +20,22 @@ pub struct CostTrainer {
 impl CostTrainer {
     pub fn new(profile: ModelProfile, schedule: PruneSchedule) -> Self {
         Self { profile, keep: schedule.final_keep(), sample_epochs: 0 }
+    }
+}
+
+/// Off-thread mirror of [`CostTrainer::run`]: the cost model is a pure
+/// function of (samples, epochs, schedule), so the worker carries no state;
+/// the shared `sample_epochs` diagnostic is reconciled by `absorb`.
+struct CostWorker;
+
+impl LineageWorker for CostWorker {
+    fn run(
+        &mut self,
+        _blocks: &[(BlockId, u64)],
+        epochs: u32,
+        schedule: PruneSchedule,
+    ) -> Result<TrainOutcome> {
+        Ok(TrainOutcome { prune_ops: schedule.prune_ops(epochs.max(1)) })
     }
 }
 
@@ -52,6 +68,14 @@ impl Trainer for CostTrainer {
     fn evaluate(&mut self, _lineages: &[usize]) -> Result<Option<f64>> {
         Ok(None)
     }
+
+    fn worker(&self, _lineage: usize) -> Option<Box<dyn LineageWorker>> {
+        Some(Box::new(CostWorker))
+    }
+
+    fn absorb(&mut self, _lineage: usize, samples: u64, epochs: u32, _out: &TrainOutcome) {
+        self.sample_epochs += samples * epochs as u64;
+    }
 }
 
 #[cfg(test)]
@@ -75,5 +99,21 @@ mod tests {
         t.run(0, &[(BlockId(0), 100), (BlockId(1), 50)], 80, PruneSchedule::None).unwrap();
         assert_eq!(t.sample_epochs, 150 * 80);
         assert_eq!(t.evaluate(&[0]).unwrap(), None);
+    }
+
+    #[test]
+    fn worker_matches_serial_run() {
+        let schedule = PruneSchedule::Iterative { keep: 0.3, steps: 4 };
+        let mut serial = CostTrainer::new(RESNET34, schedule);
+        let blocks = [(BlockId(0), 120), (BlockId(1), 30)];
+        let direct = serial.run(0, &blocks, 80, schedule).unwrap();
+
+        let mut parallel = CostTrainer::new(RESNET34, schedule);
+        let mut w = parallel.worker(0).expect("cost backend supports workers");
+        let off = w.run(&blocks, 80, schedule).unwrap();
+        parallel.absorb(0, 150, 80, &off);
+
+        assert_eq!(direct.prune_ops, off.prune_ops);
+        assert_eq!(serial.sample_epochs, parallel.sample_epochs);
     }
 }

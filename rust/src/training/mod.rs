@@ -29,6 +29,24 @@ pub struct TrainOutcome {
     pub prune_ops: u64,
 }
 
+/// A `Send` worker that runs one lineage's retrain off-thread during a
+/// batched unlearning window. Workers are compute/accounting mirrors of the
+/// owning [`Trainer`]: they must not need the trainer's in-memory model
+/// state, and the engine folds their results back through
+/// [`Trainer::absorb`] on the owning thread. Backends whose per-lineage
+/// training is stateful and thread-local (PJRT: `Rc`-based handles) simply
+/// never hand out workers and the batch executor stays serial.
+pub trait LineageWorker: Send {
+    /// Train on `blocks` for `epochs`, applying `schedule` pruning passes;
+    /// mirrors [`Trainer::run`] for one lineage.
+    fn run(
+        &mut self,
+        blocks: &[(BlockId, u64)],
+        epochs: u32,
+        schedule: PruneSchedule,
+    ) -> Result<TrainOutcome>;
+}
+
 /// A training backend. `lineage` indices are the engine's shard lineages.
 pub trait Trainer {
     /// Reset the lineage's current model: `Some(params)` restores a stored
@@ -55,4 +73,16 @@ pub trait Trainer {
     /// Ensemble accuracy over the given lineages' current models
     /// (None when this backend cannot measure accuracy).
     fn evaluate(&mut self, lineages: &[usize]) -> Result<Option<f64>>;
+
+    /// A [`LineageWorker`] for off-thread retraining of `lineage` during a
+    /// batched unlearning window, when the backend supports it. The default
+    /// (`None`) keeps all training on the engine thread.
+    fn worker(&self, _lineage: usize) -> Option<Box<dyn LineageWorker>> {
+        None
+    }
+
+    /// Fold an off-thread worker's outcome back into backend accounting
+    /// (`samples` is the replay size the worker processed). Called exactly
+    /// once per worker run, on the engine thread.
+    fn absorb(&mut self, _lineage: usize, _samples: u64, _epochs: u32, _out: &TrainOutcome) {}
 }

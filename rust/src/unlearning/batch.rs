@@ -1,0 +1,236 @@
+//! Batched unlearning: request coalescing and retrain planning.
+//!
+//! The paper's service model is strictly FCFS: every request retrains each
+//! affected lineage on its own, so a burst of R same-window requests
+//! touching one lineage pays the replay cost R times. The batch subsystem
+//! drains the service queue in windows, merges all queued requests'
+//! poisoned `(lineage, segment)` sets, and emits **one retrain plan per
+//! lineage**: warm-start from the newest clean checkpoint below the
+//! *minimum* poisoned segment and replay forward once. Every poisoned
+//! sub-model version is still invalidated (Alg. 3 line 11), so the
+//! exact-unlearning guarantee is unchanged — only the redundant replays
+//! disappear.
+//!
+//! Layering: [`BatchPolicy`] is the config knob, [`BatchPlanner`] decides
+//! window sizes and builds [`BatchPlan`]s, and
+//! [`Engine::execute_plan`](crate::coordinator::engine::Engine::execute_plan)
+//! resolves and runs a plan (in parallel across lineages when the training
+//! backend supports off-thread workers).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::engine::Engine;
+use crate::data::trace::UnlearnRequest;
+
+/// How the service merges queued requests.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum BatchPolicy {
+    /// One request per window — the paper's service model.
+    Fcfs,
+    /// Merge a window's poison sets and retrain each lineage once.
+    #[default]
+    Coalesce,
+}
+
+impl BatchPolicy {
+    pub fn display(&self) -> &'static str {
+        match self {
+            BatchPolicy::Fcfs => "fcfs",
+            BatchPolicy::Coalesce => "coalesce",
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<BatchPolicy> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "fcfs" => Some(BatchPolicy::Fcfs),
+            "coalesce" | "batch" | "batched" => Some(BatchPolicy::Coalesce),
+            _ => None,
+        }
+    }
+}
+
+/// One lineage's merged retrain work for a window: the union of poisoned
+/// segment indices across every request, sorted ascending.
+#[derive(Clone, Debug)]
+pub struct LineagePlan {
+    pub lineage: usize,
+    /// Poisoned segment indices, sorted ascending, deduplicated.
+    pub segments: Vec<usize>,
+    /// How many of the window's requests poisoned this lineage.
+    pub requests_touching: usize,
+}
+
+/// A window's worth of unlearning work, coalesced per lineage.
+#[derive(Clone, Debug, Default)]
+pub struct BatchPlan {
+    /// One entry per affected lineage (ascending lineage index).
+    pub lineages: Vec<LineagePlan>,
+    /// Requests whose samples were removed into this plan.
+    pub requests: usize,
+}
+
+impl BatchPlan {
+    /// Remove the window's samples from the lineage bookkeeping (Alg. 3
+    /// line 7, once per request) and merge the resulting poison sets into
+    /// one plan. A lineage poisoned by several requests appears once, with
+    /// the union of their segments.
+    pub fn collect(engine: &mut Engine, reqs: &[UnlearnRequest]) -> BatchPlan {
+        let mut merged: BTreeMap<usize, (BTreeSet<usize>, usize)> = BTreeMap::new();
+        for req in reqs {
+            for (lineage, segs) in engine.collect_poison(req) {
+                let entry = merged.entry(lineage).or_default();
+                entry.0.extend(segs);
+                entry.1 += 1;
+            }
+        }
+        BatchPlan {
+            lineages: merged
+                .into_iter()
+                .map(|(lineage, (segs, requests_touching))| LineagePlan {
+                    lineage,
+                    segments: segs.into_iter().collect(),
+                    requests_touching,
+                })
+                .collect(),
+            requests: reqs.len(),
+        }
+    }
+
+    /// No lineage was poisoned (requests targeted already-forgotten data).
+    pub fn is_empty(&self) -> bool {
+        self.lineages.is_empty()
+    }
+
+    /// Per-request lineage retrains avoided by merging: a lineage touched
+    /// by k requests retrains once instead of k times.
+    pub fn coalesced_retrains(&self) -> u64 {
+        self.lineages
+            .iter()
+            .map(|l| l.requests_touching.saturating_sub(1) as u64)
+            .sum()
+    }
+
+    /// Merge another plan's poison sets into this one. Used by the service
+    /// to carry an *unexecuted* plan over to the next window after an
+    /// engine error: the failed window's samples are already removed from
+    /// the lineage bookkeeping (so its requests cannot be re-queued — a
+    /// second `collect` would remove additional never-requested samples);
+    /// the poison and the request count travel in the plan instead, and
+    /// are served/accounted when a window finally executes.
+    pub fn merge(&mut self, other: BatchPlan) {
+        self.requests += other.requests;
+        for olp in other.lineages {
+            match self.lineages.iter_mut().find(|l| l.lineage == olp.lineage) {
+                Some(lp) => {
+                    for q in olp.segments {
+                        if !lp.segments.contains(&q) {
+                            lp.segments.push(q);
+                        }
+                    }
+                    lp.segments.sort_unstable();
+                    lp.requests_touching += olp.requests_touching;
+                }
+                None => self.lineages.push(olp),
+            }
+        }
+        self.lineages.sort_by_key(|l| l.lineage);
+    }
+}
+
+/// Plans service windows: how many queued requests to merge per batch.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPlanner {
+    pub policy: BatchPolicy,
+    /// Max requests merged per window; 0 = drain the whole queue at once.
+    /// Ignored under [`BatchPolicy::Fcfs`].
+    pub window: usize,
+}
+
+impl BatchPlanner {
+    pub fn new(policy: BatchPolicy, window: usize) -> Self {
+        Self { policy, window }
+    }
+
+    /// Planner matching an experiment config's batch knobs.
+    pub fn from_config(cfg: &ExperimentConfig) -> Self {
+        Self::new(cfg.batch_policy, cfg.batch_window)
+    }
+
+    /// Requests to drain into the next window given the queue depth.
+    pub fn window_size(&self, queued: usize) -> usize {
+        match self.policy {
+            BatchPolicy::Fcfs => queued.min(1),
+            BatchPolicy::Coalesce if self.window == 0 => queued,
+            BatchPolicy::Coalesce => queued.min(self.window),
+        }
+    }
+
+    /// Collect one window's merged plan (see [`BatchPlan::collect`]).
+    pub fn plan(&self, engine: &mut Engine, window: &[UnlearnRequest]) -> BatchPlan {
+        BatchPlan::collect(engine, window)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [BatchPolicy::Fcfs, BatchPolicy::Coalesce] {
+            assert_eq!(BatchPolicy::by_name(p.display()), Some(p));
+        }
+        assert_eq!(BatchPolicy::by_name("batched"), Some(BatchPolicy::Coalesce));
+        assert!(BatchPolicy::by_name("lifo").is_none());
+    }
+
+    #[test]
+    fn window_sizes_respect_policy() {
+        let fcfs = BatchPlanner::new(BatchPolicy::Fcfs, 0);
+        assert_eq!(fcfs.window_size(9), 1);
+        assert_eq!(fcfs.window_size(0), 0);
+
+        let unbounded = BatchPlanner::new(BatchPolicy::Coalesce, 0);
+        assert_eq!(unbounded.window_size(9), 9);
+
+        let capped = BatchPlanner::new(BatchPolicy::Coalesce, 4);
+        assert_eq!(capped.window_size(9), 4);
+        assert_eq!(capped.window_size(3), 3);
+    }
+
+    #[test]
+    fn merge_unions_poison_sets() {
+        let mut a = BatchPlan {
+            lineages: vec![LineagePlan { lineage: 0, segments: vec![1], requests_touching: 1 }],
+            requests: 2,
+        };
+        let b = BatchPlan {
+            lineages: vec![
+                LineagePlan { lineage: 0, segments: vec![3, 1], requests_touching: 2 },
+                LineagePlan { lineage: 5, segments: vec![0], requests_touching: 1 },
+            ],
+            requests: 3,
+        };
+        a.merge(b);
+        assert_eq!(a.requests, 5, "carried-over requests are counted when served");
+        assert_eq!(a.lineages.len(), 2);
+        assert_eq!(a.lineages[0].segments, vec![1, 3]);
+        assert_eq!(a.lineages[0].requests_touching, 3);
+        assert_eq!(a.lineages[1].lineage, 5);
+    }
+
+    #[test]
+    fn coalesced_retrains_counts_merges() {
+        let plan = BatchPlan {
+            lineages: vec![
+                LineagePlan { lineage: 0, segments: vec![1, 3], requests_touching: 4 },
+                LineagePlan { lineage: 2, segments: vec![0], requests_touching: 1 },
+            ],
+            requests: 5,
+        };
+        assert_eq!(plan.coalesced_retrains(), 3);
+        assert!(!plan.is_empty());
+        assert!(BatchPlan::default().is_empty());
+    }
+}

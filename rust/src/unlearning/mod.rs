@@ -1,7 +1,10 @@
 //! The unlearning *service*: a queue-fronted façade over the engine, the
 //! shape a deployment embeds (examples use it; experiments drive the
-//! engine directly for determinism).
+//! engine directly for determinism), plus the batched request-coalescing
+//! subsystem that turns R same-window retrains of a lineage into one.
 
+pub mod batch;
 pub mod service;
 
-pub use service::{ServiceReport, UnlearningService};
+pub use batch::{BatchPlan, BatchPlanner, BatchPolicy, LineagePlan};
+pub use service::{BatchReport, ServiceReport, UnlearningService};

@@ -1,9 +1,17 @@
 //! Queue-fronted unlearning service.
 //!
 //! Wraps an [`Engine`] with the request lifecycle a real edge deployment
-//! needs: FCFS queueing, per-request receipts (RSN, latency estimate,
-//! energy), optional battery gating (satellite mode: defer retraining when
-//! the state of charge cannot cover it), and a service log.
+//! needs: queueing, per-request and per-batch receipts (RSN, latency
+//! estimate, energy), optional battery gating (satellite mode: defer
+//! retraining when the state of charge cannot cover it), and a service log.
+//!
+//! Two drain modes:
+//! * [`UnlearningService::drain`] — strictly FCFS, one retrain pass per
+//!   request (the paper's service model).
+//! * [`UnlearningService::drain_batched`] — windows of queued requests are
+//!   merged by the configured [`BatchPlanner`], so a lineage poisoned by R
+//!   requests in one window replays once instead of R times, and
+//!   independent lineages retrain in parallel when the backend allows.
 
 use std::collections::VecDeque;
 
@@ -14,6 +22,7 @@ use crate::data::dataset::EdgePopulation;
 use crate::data::trace::UnlearnRequest;
 use crate::energy::EnergyModel;
 use crate::sim::Battery;
+use crate::unlearning::batch::BatchPlanner;
 
 /// Receipt for one served unlearning request.
 #[derive(Clone, Debug)]
@@ -30,24 +39,70 @@ pub struct ServiceReport {
     pub deferred: bool,
 }
 
-/// FCFS unlearning service over an engine.
+/// Receipt for one served (or deferred) batch window.
+#[derive(Clone, Debug)]
+pub struct BatchReport {
+    /// Requests merged into this window (0 for a deferral receipt).
+    pub requests: usize,
+    pub rsn: u64,
+    pub lineages_retrained: usize,
+    /// Per-request lineage retrains avoided by coalescing this window.
+    pub retrains_coalesced: u64,
+    /// Estimated device seconds for the window's retraining.
+    pub est_seconds: f64,
+    /// Estimated joules for the window's retraining.
+    pub est_joules: f64,
+    /// Deferred because the battery could not cover even one request.
+    pub deferred: bool,
+}
+
+/// Queue-fronted unlearning service over an engine.
 pub struct UnlearningService {
     engine: Engine,
     queue: VecDeque<UnlearnRequest>,
     energy: EnergyModel,
     battery: Option<Battery>,
+    planner: BatchPlanner,
+    /// One deferral receipt per episode: set when the queue head defers,
+    /// cleared when anything is served (or the head changes by serving).
+    head_deferral_logged: bool,
+    /// Poison collected for a window whose execution failed: its samples
+    /// are already removed from the lineages, so the plan is carried over
+    /// and merged into the next executed window (exactness is preserved
+    /// across engine errors).
+    carryover: Option<crate::unlearning::batch::BatchPlan>,
+    /// Per-request receipts (FCFS drains).
     pub log: Vec<ServiceReport>,
+    /// Per-window receipts (batched drains).
+    pub batch_log: Vec<BatchReport>,
 }
 
 impl UnlearningService {
     pub fn new(engine: Engine) -> Self {
         let energy = EnergyModel::for_model(&engine.cfg.model);
-        Self { engine, queue: VecDeque::new(), energy, battery: None, log: vec![] }
+        let planner = BatchPlanner::from_config(&engine.cfg);
+        Self {
+            engine,
+            queue: VecDeque::new(),
+            energy,
+            battery: None,
+            planner,
+            head_deferral_logged: false,
+            carryover: None,
+            log: vec![],
+            batch_log: vec![],
+        }
     }
 
     /// Enable battery gating (energy-harvesting deployments).
     pub fn with_battery(mut self, battery: Battery) -> Self {
         self.battery = Some(battery);
+        self
+    }
+
+    /// Override the batch planner (policy + window) from the config's.
+    pub fn with_planner(mut self, planner: BatchPlanner) -> Self {
+        self.planner = planner;
         self
     }
 
@@ -63,6 +118,10 @@ impl UnlearningService {
         self.battery.as_ref()
     }
 
+    pub fn planner(&self) -> &BatchPlanner {
+        &self.planner
+    }
+
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
@@ -73,35 +132,70 @@ impl UnlearningService {
         Ok(())
     }
 
-    /// Enqueue a request (FCFS).
+    /// Enqueue a request (FCFS order preserved).
     pub fn submit(&mut self, req: UnlearnRequest) {
         self.queue.push_back(req);
     }
 
-    /// Serve queued requests in order. With a battery, a request whose
-    /// estimated energy exceeds the charge is deferred (stays at the queue
-    /// head) until `harvest` restores enough charge.
+    /// Conservative energy pre-estimate for the first `w` queued requests:
+    /// replaying every requested sample.
+    fn window_hint_joules(&self, w: usize) -> f64 {
+        let rsn_hint: u64 = self.queue.iter().take(w).map(|r| r.total_samples()).sum();
+        self.energy.retrain_joules(rsn_hint, self.engine.cfg.epochs_per_round)
+    }
+
+    /// Log at most one deferral receipt per episode (a stuck head polled
+    /// by many drain calls previously produced one receipt per call,
+    /// inflating deferral counts in the satellite scenario).
+    fn log_deferral(&mut self, user: u32, round: u32, est_joules: f64) {
+        if self.head_deferral_logged {
+            return;
+        }
+        self.head_deferral_logged = true;
+        self.log.push(ServiceReport {
+            user,
+            round,
+            rsn: 0,
+            lineages_retrained: 0,
+            est_seconds: 0.0,
+            est_joules,
+            deferred: true,
+        });
+    }
+
+    /// Serve queued requests strictly FCFS. With a battery, a request
+    /// whose estimated energy exceeds the charge is deferred (stays at the
+    /// queue head) until `harvest` restores enough charge.
     pub fn drain(&mut self) -> Result<usize> {
-        let mut served = 0;
+        // A plan carried over from a failed batched window must not be
+        // stranded when the caller switches to FCFS drains: flush it
+        // first (its samples are already removed from the lineages).
+        let mut served = if self.carryover.is_some() {
+            self.execute_window(Vec::new(), 0.0)?
+        } else {
+            0
+        };
         while let Some(req) = self.queue.front().cloned() {
             // Conservative pre-estimate: replaying all requested samples.
-            let est_rsn_hint = req.total_samples();
-            let est_j_hint = self
-                .energy
-                .retrain_joules(est_rsn_hint, self.engine.cfg.epochs_per_round);
-            if let Some(b) = &mut self.battery {
-                if !b.draw(est_j_hint) {
-                    self.log.push(ServiceReport {
-                        user: req.user.0,
-                        round: req.round,
-                        rsn: 0,
-                        lineages_retrained: 0,
-                        est_seconds: 0.0,
-                        est_joules: est_j_hint,
-                        deferred: true,
-                    });
-                    break; // FCFS: don't skip ahead of the deferred head.
+            let est_j_hint = self.window_hint_joules(1);
+            let starved = match &self.battery {
+                Some(b) => !b.can_cover(est_j_hint),
+                None => false,
+            };
+            if starved {
+                // One brownout per starvation episode (a refused draw),
+                // not one per drain() poll of the same stuck head.
+                if !self.head_deferral_logged {
+                    if let Some(b) = &mut self.battery {
+                        let _ = b.draw(est_j_hint);
+                    }
                 }
+                self.log_deferral(req.user.0, req.round, est_j_hint);
+                break; // FCFS: don't skip ahead of the deferred head.
+            }
+            if let Some(b) = &mut self.battery {
+                let drawn = b.draw(est_j_hint);
+                debug_assert!(drawn, "covered by the can_cover probe above");
             }
             let outcome = self.engine.process_request(&req)?;
             let est_seconds = self
@@ -112,15 +206,7 @@ impl UnlearningService {
             let est_joules = self
                 .energy
                 .retrain_joules(outcome.rsn, self.engine.cfg.epochs_per_round);
-            // Charge the actual cost difference (beyond the reservation).
-            if let Some(b) = &mut self.battery {
-                let delta = est_joules - est_j_hint;
-                if delta > 0.0 {
-                    let _ = b.draw(delta);
-                } else {
-                    b.charge_j = (b.charge_j - delta).min(b.capacity_j);
-                }
-            }
+            self.settle_energy(est_joules, est_j_hint);
             self.log.push(ServiceReport {
                 user: req.user.0,
                 round: req.round,
@@ -131,9 +217,145 @@ impl UnlearningService {
                 deferred: false,
             });
             self.queue.pop_front();
+            self.head_deferral_logged = false;
             served += 1;
         }
         Ok(served)
+    }
+
+    /// Serve queued requests in coalesced windows per the configured
+    /// [`BatchPlanner`]: each window's poison sets are merged so a lineage
+    /// touched by R requests replays once instead of R times. Returns the
+    /// number of requests served. With a battery, the window shrinks to
+    /// the affordable prefix; when even one request is unaffordable the
+    /// queue defers (one receipt per episode) until `harvest`.
+    pub fn drain_batched(&mut self) -> Result<usize> {
+        let mut served = 0;
+        loop {
+            let mut w = self.planner.window_size(self.queue.len());
+            if w == 0 {
+                // Flush a carried-over plan even when no new requests
+                // arrive — its samples are already removed, so its poison
+                // must still be replayed (and its requests counted).
+                if self.carryover.is_some() {
+                    served += self.execute_window(Vec::new(), 0.0)?;
+                }
+                break;
+            }
+            let mut hint_j = 0.0;
+            if let Some(b) = &self.battery {
+                // One forward pass over the queue finds the affordable
+                // prefix (per-request hints are non-negative, so prefix
+                // cost is monotone — no need to re-sum per candidate).
+                let epochs = self.engine.cfg.epochs_per_round;
+                let mut affordable = 0;
+                let mut prefix = 0.0;
+                for req in self.queue.iter().take(w) {
+                    let next =
+                        prefix + self.energy.retrain_joules(req.total_samples(), epochs);
+                    if !b.can_cover(next) {
+                        break;
+                    }
+                    prefix = next;
+                    affordable += 1;
+                }
+                w = affordable;
+                hint_j = prefix;
+            }
+            if self.battery.is_some() && w == 0 {
+                let head_hint = self.window_hint_joules(1);
+                if !self.head_deferral_logged {
+                    self.head_deferral_logged = true;
+                    // Record the episode's brownout (the refused draw),
+                    // matching drain()'s per-episode accounting.
+                    if let Some(b) = &mut self.battery {
+                        let _ = b.draw(head_hint);
+                    }
+                    self.batch_log.push(BatchReport {
+                        requests: 0,
+                        rsn: 0,
+                        lineages_retrained: 0,
+                        retrains_coalesced: 0,
+                        est_seconds: 0.0,
+                        est_joules: head_hint,
+                        deferred: true,
+                    });
+                }
+                break;
+            }
+            if let Some(b) = &mut self.battery {
+                let drawn = b.draw(hint_j);
+                debug_assert!(drawn, "window was sized to the affordable prefix");
+            }
+
+            let window: Vec<UnlearnRequest> = self.queue.drain(..w).collect();
+            served += self.execute_window(window, hint_j)?;
+        }
+        Ok(served)
+    }
+
+    /// Plan (merging any carried-over poison), execute, and account one
+    /// batch window. On engine error the merged plan — samples already
+    /// removed, request counts included — is stashed for a later window
+    /// and the energy reservation is released; the requests are NOT
+    /// re-queued, since re-collecting them would remove additional,
+    /// never-requested samples. Returns the number of requests served.
+    fn execute_window(&mut self, window: Vec<UnlearnRequest>, hint_j: f64) -> Result<usize> {
+        let mut plan = self.planner.plan(&mut self.engine, &window);
+        if let Some(prev) = self.carryover.take() {
+            plan.merge(prev);
+        }
+        let coalesced = plan.coalesced_retrains();
+        let window_requests = plan.requests;
+        let outcome = match self.engine.execute_plan(&plan) {
+            Ok(outcome) => outcome,
+            Err(e) => {
+                if let Some(b) = &mut self.battery {
+                    b.refund(hint_j);
+                }
+                self.carryover = Some(plan);
+                return Err(e);
+            }
+        };
+        self.engine.metrics.record_requests(window_requests as u64, outcome.rsn);
+        self.engine.metrics.batches += 1;
+        self.engine.metrics.batched_requests += window_requests as u64;
+        self.engine.metrics.retrains_coalesced += coalesced;
+
+        let est_seconds = self
+            .engine
+            .cfg
+            .model
+            .train_secs(outcome.rsn, self.engine.cfg.epochs_per_round);
+        let est_joules = self
+            .energy
+            .retrain_joules(outcome.rsn, self.engine.cfg.epochs_per_round);
+        self.settle_energy(est_joules, hint_j);
+        self.batch_log.push(BatchReport {
+            requests: window_requests,
+            rsn: outcome.rsn,
+            lineages_retrained: outcome.lineages_retrained,
+            retrains_coalesced: coalesced,
+            est_seconds,
+            est_joules,
+            deferred: false,
+        });
+        self.head_deferral_logged = false;
+        Ok(window_requests)
+    }
+
+    /// Settle the battery against the actual retrain cost: deduct the
+    /// overrun beyond the reservation (the work already ran — no gating,
+    /// no brownout), or refund the over-reserved part.
+    fn settle_energy(&mut self, actual_joules: f64, reserved_joules: f64) {
+        if let Some(b) = &mut self.battery {
+            let delta = actual_joules - reserved_joules;
+            if delta > 0.0 {
+                b.deduct(delta);
+            } else {
+                b.refund(-delta);
+            }
+        }
     }
 
     /// Advance harvest time (satellite mode).
@@ -153,6 +375,7 @@ mod tests {
     use crate::data::dataset::PopulationConfig;
     use crate::data::trace::{RequestTrace, TraceConfig};
     use crate::sim::device::AI_CUBESAT;
+    use crate::unlearning::batch::BatchPolicy;
 
     fn setup() -> (UnlearningService, EdgePopulation, RequestTrace) {
         let cfg = ExperimentConfig {
@@ -193,6 +416,29 @@ mod tests {
     }
 
     #[test]
+    fn batched_serves_all_and_coalesces() {
+        let (mut svc, pop, trace) = setup();
+        svc = svc.with_planner(BatchPlanner::new(BatchPolicy::Coalesce, 0));
+        let mut submitted = 0;
+        for t in 1..=4 {
+            svc.ingest_round(&pop).unwrap();
+            for req in trace.at(t) {
+                svc.submit(req.clone());
+                submitted += 1;
+            }
+            svc.drain_batched().unwrap();
+        }
+        assert_eq!(svc.pending(), 0);
+        let m = &svc.engine().metrics;
+        assert_eq!(m.total_requests(), submitted as u64);
+        assert_eq!(m.batched_requests, submitted as u64);
+        // One window per round with pending work.
+        assert!(m.batches >= 1 && m.batches <= 4, "batches {}", m.batches);
+        let batch_requests: usize = svc.batch_log.iter().map(|b| b.requests).sum();
+        assert_eq!(batch_requests, submitted);
+    }
+
+    #[test]
     fn battery_defers_until_harvest() {
         let (mut svc, pop, trace) = setup();
         let mut battery = Battery::new(&AI_CUBESAT);
@@ -215,5 +461,75 @@ mod tests {
         svc.harvest(1e6);
         svc.drain().unwrap();
         assert_eq!(svc.pending(), 0);
+    }
+
+    #[test]
+    fn deferral_logged_once_per_episode() {
+        let (mut svc, pop, trace) = setup();
+        let mut battery = Battery::new(&AI_CUBESAT);
+        battery.charge_j = 0.5;
+        svc = UnlearningService::new(SystemVariant::Cause
+            .build_cost(&svc.engine().cfg.clone())
+            .unwrap())
+            .with_battery(battery);
+        svc.ingest_round(&pop).unwrap();
+        let req = trace
+            .at(1)
+            .first()
+            .cloned()
+            .unwrap_or_else(|| trace.at(2).first().cloned().expect("trace has requests"));
+        svc.submit(req);
+        // Polling a starving queue repeatedly must not inflate the count.
+        for _ in 0..5 {
+            svc.drain().unwrap();
+        }
+        assert_eq!(svc.log.iter().filter(|r| r.deferred).count(), 1);
+        svc.harvest(1e6);
+        svc.drain().unwrap();
+        assert_eq!(svc.pending(), 0);
+        // A fresh starvation episode logs again.
+        let req2 = trace
+            .at(2)
+            .first()
+            .cloned()
+            .unwrap_or_else(|| trace.at(3).first().cloned().expect("trace has requests"));
+        if let Some(b) = &mut svc.battery {
+            b.charge_j = 0.0;
+        }
+        svc.submit(req2);
+        for _ in 0..3 {
+            svc.drain().unwrap();
+        }
+        assert_eq!(svc.log.iter().filter(|r| r.deferred).count(), 2);
+    }
+
+    #[test]
+    fn batched_battery_defers_and_recovers() {
+        let (mut svc, pop, trace) = setup();
+        let mut battery = Battery::new(&AI_CUBESAT);
+        battery.charge_j = 0.5;
+        svc = UnlearningService::new(SystemVariant::Cause
+            .build_cost(&svc.engine().cfg.clone())
+            .unwrap())
+            .with_battery(battery)
+            .with_planner(BatchPlanner::new(BatchPolicy::Coalesce, 0));
+        svc.ingest_round(&pop).unwrap();
+        let mut submitted = 0;
+        for req in trace.at(1).iter().chain(trace.at(2)).take(4) {
+            svc.submit(req.clone());
+            submitted += 1;
+        }
+        assert!(submitted > 0, "trace produced no requests");
+        for _ in 0..4 {
+            svc.drain_batched().unwrap();
+        }
+        assert_eq!(svc.pending(), submitted, "all requests should defer");
+        assert_eq!(svc.batch_log.iter().filter(|b| b.deferred).count(), 1);
+        svc.harvest(1e7);
+        svc.drain_batched().unwrap();
+        assert_eq!(svc.pending(), 0);
+        // Battery never exceeds capacity after refunds.
+        let b = svc.battery().unwrap();
+        assert!(b.charge_j <= b.capacity_j);
     }
 }

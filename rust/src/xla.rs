@@ -1,0 +1,165 @@
+//! Offline stub of the `xla` (xla_extension) PJRT bindings.
+//!
+//! The real deployment links the `xla` crate for PJRT execution of the
+//! AOT-compiled HLO artifacts. That crate is not in the offline registry,
+//! so this module mirrors the exact API surface `runtime/` consumes:
+//! everything compiles and the pure-host pieces ([`Literal`] payloads)
+//! behave faithfully, while the device-side entry points
+//! ([`PjRtClient::cpu`], [`HloModuleProto::from_text_file`]) fail with a
+//! clear message. The accounting backend — every RSN / energy /
+//! scalability experiment and the whole batched-unlearning service — never
+//! touches PJRT and is fully functional; to light up the accuracy
+//! experiments, replace this module with `use xla;` re-exports once the
+//! real crate is linkable (see DESIGN.md §Runtime).
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+/// Error message for every device-side entry point.
+const UNAVAILABLE: &str = "PJRT backend unavailable: this build uses the offline `xla` stub \
+     (the xla_extension bindings are not in the offline registry)";
+
+/// Host-side literal: an f32 payload with a shape, mirroring `xla::Literal`
+/// closely enough for the `HostTensor` conversions to round-trip.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Literal {
+    data: Vec<f32>,
+    dims: Vec<i64>,
+}
+
+impl Literal {
+    /// Rank-1 literal over a host slice.
+    pub fn vec1(data: &[f32]) -> Self {
+        Self { data: data.to_vec(), dims: vec![data.len() as i64] }
+    }
+
+    /// Reshape without moving data (element counts must match; an empty
+    /// `dims` is a rank-0 scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Self> {
+        let expect: i64 = dims.iter().product();
+        if expect != self.data.len() as i64 {
+            bail!(
+                "reshape to {:?} incompatible with {} elements",
+                dims,
+                self.data.len()
+            );
+        }
+        Ok(Self { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    /// The literal's shape.
+    pub fn shape(&self) -> Result<Shape> {
+        Ok(Shape::Array(ArrayShape { dims: self.dims.clone() }))
+    }
+
+    /// Copy out the payload (f32 only in this reproduction).
+    pub fn to_vec<T: From<f32>>(&self) -> Result<Vec<T>> {
+        Ok(self.data.iter().map(|v| T::from(*v)).collect())
+    }
+
+    /// Flatten a tuple literal. Stub literals are never tuples — tuples
+    /// only arise from device execution, which the stub cannot perform.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// Mirror of `xla::Shape` (only the array case is constructed host-side).
+#[derive(Clone, Debug)]
+pub enum Shape {
+    Array(ArrayShape),
+    Tuple(Vec<Shape>),
+}
+
+/// Dimensions of an array shape.
+#[derive(Clone, Debug)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Parsed HLO module (device-side only; the stub cannot parse).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// An XLA computation wrapping a parsed module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> Self {
+        XlaComputation
+    }
+}
+
+/// A compiled, loaded PJRT executable.
+pub struct PjRtLoadedExecutable;
+
+impl PjRtLoadedExecutable {
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// A device buffer handle returned by execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+/// The process-wide PJRT client. Construction fails in the stub, so no
+/// downstream method is ever reached at runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<Self> {
+        bail!(UNAVAILABLE)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "offline-stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        bail!(UNAVAILABLE)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_reshape_roundtrip() {
+        let l = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        match r.shape().unwrap() {
+            Shape::Array(a) => assert_eq!(a.dims(), &[2, 2]),
+            other => panic!("expected array shape, got {other:?}"),
+        }
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(l.reshape(&[3, 3]).is_err());
+        // Empty dims = rank-0 scalar.
+        assert!(Literal::vec1(&[5.0]).reshape(&[]).is_ok());
+    }
+
+    #[test]
+    fn device_entry_points_fail_loudly() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("nope.hlo.txt").is_err());
+        assert!(Literal::vec1(&[0.0]).to_tuple().is_err());
+    }
+}

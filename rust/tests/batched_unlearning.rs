@@ -1,0 +1,231 @@
+//! Integration: batched request coalescing vs FCFS — the equivalence and
+//! accounting guarantees of the batch subsystem.
+//!
+//! * On a seeded burst trace (≥ 8 same-round requests over ≤ 4 lineages),
+//!   `Coalesce` yields *strictly* lower total RSN than FCFS while
+//!   invalidating the identical set of poisoned sub-model versions.
+//! * `run_trace` total RSN equals the sum of per-request outcomes
+//!   (property-tested over random small configurations).
+//! * Requests served before any training round are still accounted.
+
+use std::collections::BTreeSet;
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig, UnlearnRequest};
+use cause::experiments::common;
+use cause::unlearning::{BatchPlan, BatchPlanner, BatchPolicy, UnlearningService};
+
+/// The shared seeded burst: many same-round requests over ≤ `shards`
+/// lineages, eviction-free store (see `experiments::common::burst_workload`
+/// — the bench prints the same workload this file asserts on).
+fn burst_setup() -> (ExperimentConfig, EdgePopulation, RequestTrace) {
+    common::burst_workload()
+}
+
+/// The round with the most requests (the burst the batch subsystem targets).
+fn burst_round(trace: &RequestTrace, rounds: u32) -> u32 {
+    (1..=rounds).max_by_key(|r| trace.at(*r).len()).expect("at least one round")
+}
+
+#[test]
+fn coalesce_strictly_beats_fcfs_on_burst_with_identical_invalidation() {
+    let (cfg, pop, trace) = burst_setup();
+    let burst = burst_round(&trace, cfg.rounds);
+    let requests: Vec<UnlearnRequest> = trace.at(burst).to_vec();
+    assert!(
+        requests.len() >= 8,
+        "seeded burst too small: {} requests (need ≥ 8 over ≤ {} lineages)",
+        requests.len(),
+        cfg.shards
+    );
+
+    // FCFS: one retrain pass per request, in arrival order.
+    let mut fcfs = SystemVariant::Cause.build_cost(&cfg).unwrap();
+    for _ in 1..=burst {
+        fcfs.run_round(&pop).unwrap();
+    }
+    let mut fcfs_rsn = 0u64;
+    let mut fcfs_invalidated: BTreeSet<(usize, u32)> = BTreeSet::new();
+    for req in &requests {
+        let out = fcfs.process_request(req).unwrap();
+        fcfs_rsn += out.rsn;
+        fcfs_invalidated.extend(out.invalidated_versions.iter().copied());
+    }
+
+    // Coalesce: the whole burst merged into one plan.
+    let mut coal = SystemVariant::Cause.build_cost(&cfg).unwrap();
+    for _ in 1..=burst {
+        coal.run_round(&pop).unwrap();
+    }
+    let stale_ids: BTreeSet<_> = coal.store().iter().map(|c| c.id).collect();
+    let plan = BatchPlan::collect(&mut coal, &requests);
+    assert!(
+        plan.coalesced_retrains() > 0,
+        "burst of {} requests over ≤ {} lineages must merge retrains",
+        requests.len(),
+        cfg.shards
+    );
+    let out = coal.execute_plan(&plan).unwrap();
+    coal.metrics.record_requests(requests.len() as u64, out.rsn);
+    let coal_invalidated: BTreeSet<(usize, u32)> =
+        out.invalidated_versions.iter().copied().collect();
+
+    // Headline: strictly fewer samples replayed, same versions purged.
+    assert!(
+        out.rsn < fcfs_rsn,
+        "coalesce RSN {} must be strictly below FCFS RSN {fcfs_rsn}",
+        out.rsn
+    );
+    assert_eq!(
+        coal_invalidated, fcfs_invalidated,
+        "both policies must invalidate the identical poisoned versions"
+    );
+
+    // Exact-unlearning audit: no pre-batch checkpoint of a poisoned
+    // version survives in the store (survivors at those coverages are the
+    // freshly retrained replacements).
+    for c in coal.store().iter() {
+        if coal_invalidated.contains(&(c.lineage, c.covered_segments)) {
+            assert!(
+                !stale_ids.contains(&c.id),
+                "stale poisoned checkpoint survived: lineage {} cover {}",
+                c.lineage,
+                c.covered_segments
+            );
+        }
+    }
+
+    // Both engines accounted every request.
+    assert_eq!(fcfs.metrics.total_requests(), requests.len() as u64);
+    assert_eq!(coal.metrics.total_requests(), requests.len() as u64);
+}
+
+#[test]
+fn service_drain_batched_beats_fcfs_drain_end_to_end() {
+    let (cfg, pop, trace) = burst_setup();
+
+    let run = |policy: BatchPolicy| -> u64 {
+        let engine = SystemVariant::Cause.build_cost(&cfg).unwrap();
+        let mut svc =
+            UnlearningService::new(engine).with_planner(BatchPlanner::new(policy, 0));
+        for t in 1..=cfg.rounds {
+            svc.ingest_round(&pop).unwrap();
+            for req in trace.at(t) {
+                svc.submit(req.clone());
+            }
+            svc.drain_batched().unwrap();
+        }
+        assert_eq!(svc.pending(), 0);
+        assert_eq!(
+            svc.engine().metrics.total_requests(),
+            trace.total_requests() as u64
+        );
+        svc.engine().metrics.total_rsn()
+    };
+
+    let fcfs_rsn = run(BatchPolicy::Fcfs);
+    let coal_rsn = run(BatchPolicy::Coalesce);
+    assert!(
+        coal_rsn < fcfs_rsn,
+        "coalesced service RSN {coal_rsn} must be strictly below FCFS {fcfs_rsn}"
+    );
+}
+
+#[test]
+fn request_before_any_round_is_accounted_not_dropped() {
+    let (cfg, pop, trace) = burst_setup();
+    let req = trace.at(1).first().cloned().expect("burst trace has requests");
+
+    let mut engine = SystemVariant::Cause.build_cost(&cfg).unwrap();
+    // Served before any training round: nothing to retrain, but the
+    // request must land in the round-0 metrics slot (previously both the
+    // count and RSN silently vanished).
+    let out = engine.process_request(&req).unwrap();
+    assert_eq!(out.rsn, 0);
+    assert_eq!(engine.metrics.total_requests(), 1);
+    assert_eq!(engine.metrics.rsn_by_round.len(), 1);
+
+    // Later rounds still open their own slots.
+    engine.run_round(&pop).unwrap();
+    assert_eq!(engine.metrics.rsn_by_round.len(), 2);
+    engine.process_request(&req).unwrap();
+    assert_eq!(engine.metrics.total_requests(), 2);
+}
+
+#[test]
+fn prop_run_trace_rsn_equals_sum_of_request_outcomes() {
+    use cause::testkit::forall;
+
+    forall(
+        0xBA7C4,
+        12,
+        |rng, size| {
+            let users = 6 + (14.0 * size) as usize;
+            let rounds = 1 + rng.range(0, 4) as u32;
+            let prob = 0.2 + 0.5 * rng.f64();
+            let seed = rng.next_u64() % 1_000_000;
+            (users, rounds, prob, seed)
+        },
+        |(users, rounds, prob, seed)| {
+            let cfg = ExperimentConfig {
+                users: *users,
+                rounds: *rounds,
+                shards: 4,
+                unlearn_prob: *prob,
+                seed: *seed,
+                ..Default::default()
+            };
+            let pop = EdgePopulation::generate(PopulationConfig {
+                spec: cfg.dataset.scaled(6_000),
+                users: cfg.users,
+                rounds: cfg.rounds,
+                size_sigma: 0.8,
+                label_alpha: 0.5,
+                arrival_prob: 0.7,
+                seed: cfg.seed,
+            });
+            let trace = RequestTrace::generate(
+                &pop,
+                &TraceConfig::paper_default(cfg.seed ^ 0x7ace).with_prob(cfg.unlearn_prob),
+            );
+
+            // Twin A: the engine's own trace driver.
+            let mut auto = SystemVariant::Cause.build_cost(&cfg).unwrap();
+            auto.run_trace(&pop, &trace).unwrap();
+
+            // Twin B: manual loop accumulating per-request outcomes.
+            let mut manual = SystemVariant::Cause.build_cost(&cfg).unwrap();
+            let mut sum = 0u64;
+            let mut served = 0u64;
+            for t in 1..=cfg.rounds.min(pop.rounds()) {
+                manual.run_round(&pop).unwrap();
+                for req in trace.at(t) {
+                    sum += manual.process_request(req).unwrap().rsn;
+                    served += 1;
+                }
+            }
+
+            if auto.metrics.total_rsn() != sum {
+                return Err(format!(
+                    "run_trace RSN {} != sum of outcomes {sum}",
+                    auto.metrics.total_rsn()
+                ));
+            }
+            if auto.metrics.total_requests() != served {
+                return Err(format!(
+                    "run_trace requests {} != served {served}",
+                    auto.metrics.total_requests()
+                ));
+            }
+            if manual.metrics.total_rsn() != sum {
+                return Err(format!(
+                    "engine metrics RSN {} != sum of its own outcomes {sum}",
+                    manual.metrics.total_rsn()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
