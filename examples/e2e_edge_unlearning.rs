@@ -204,6 +204,7 @@ fn main() -> anyhow::Result<()> {
     let req = cause::data::trace::UnlearnRequest {
         round: 2,
         user,
+        arrival_tick: 2,
         parts: vec![(block, pop_c.block(block).unwrap().samples / 2)],
     };
     let out = engine.process_request(&req)?;

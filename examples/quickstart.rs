@@ -102,5 +102,25 @@ fn main() -> anyhow::Result<()> {
         m.ckpts_replaced,
         m.ckpts_rejected
     );
+
+    // 5. Latency receipts: every served request records its queueing delay
+    // (service-clock ticks) and whether the configured SLO was met. Under
+    // the default Coalesce policy there is no SLO — switch to the
+    // deadline-aware scheduler with `batch_policy = deadline` plus
+    // `batch_slo = <ticks>` (config file / CLI) or
+    // `ExperimentConfig::with_slo(ticks)`: the service then holds a window
+    // open only while every queued request can still meet its SLO, so
+    // coalescing is maximized subject to a per-request latency bound.
+    // `batch_slo = 0` degenerates to the paper's FCFS service model;
+    // `batch_slo = inf` to whole-queue coalescing at flush time.
+    let delays = m.queue_delay_summary();
+    println!(
+        "latency: {} receipts | queueing delay p50 {:.1} / p99 {:.1} ticks | \
+         {} SLO violations",
+        m.latency.len(),
+        delays.p50,
+        delays.p99,
+        m.slo_violations()
+    );
     Ok(())
 }

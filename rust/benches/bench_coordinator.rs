@@ -12,6 +12,86 @@ use cause::partition::{Partitioner, Ucdp, Uniform};
 use cause::replacement::{FiboR, ReplacementPolicy};
 use cause::unlearning::{BatchPlanner, BatchPolicy, UnlearningService};
 use cause::util::bench::{black_box, Bench};
+use cause::util::Json;
+
+/// One point of the SLO sweep: service-level latency vs coalescing win.
+struct SloPoint {
+    label: String,
+    slo: Option<u64>,
+    requests: u64,
+    rsn: u64,
+    lineages_retrained: u64,
+    retrains_coalesced: u64,
+    queue_p50: f64,
+    queue_p99: f64,
+    slo_violations: u64,
+}
+
+impl SloPoint {
+    fn retrains_per_request(&self) -> f64 {
+        self.lineages_retrained as f64 / self.requests.max(1) as f64
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj()
+            .set("label", self.label.as_str())
+            .set(
+                "slo",
+                self.slo.map(|s| Json::Num(s as f64)).unwrap_or(Json::Null),
+            )
+            .set("requests", self.requests)
+            .set("rsn", self.rsn)
+            .set("lineages_retrained", self.lineages_retrained)
+            .set("retrains_coalesced", self.retrains_coalesced)
+            .set("retrains_per_request", self.retrains_per_request())
+            .set("queue_p50", self.queue_p50)
+            .set("queue_p99", self.queue_p99)
+            .set("slo_violations", self.slo_violations)
+    }
+}
+
+/// Drive the burst workload with one-tick request inter-arrivals: each
+/// request is submitted, the service drains (a deadline policy holds the
+/// window while every queued request still has SLO slack), and the clock
+/// advances one tick. Stragglers are flushed at end of run.
+fn run_slo_point(
+    cfg: &ExperimentConfig,
+    pop: &EdgePopulation,
+    trace: &RequestTrace,
+    label: &str,
+    policy: BatchPolicy,
+) -> SloPoint {
+    let engine = SystemVariant::Cause.build_cost(cfg).unwrap();
+    let mut svc = UnlearningService::new(engine).with_planner(BatchPlanner::new(policy, 0));
+    for t in 1..=cfg.rounds {
+        // The service is polled at every tick the clock reaches (each
+        // advance and each round ingest), so a deadline window can close
+        // exactly at its SLO bound, never past it.
+        svc.ingest_round(pop).unwrap();
+        svc.drain_batched().unwrap();
+        for req in trace.at(t) {
+            svc.submit(req.clone());
+            svc.drain_batched().unwrap();
+            svc.advance(1);
+            svc.drain_batched().unwrap();
+        }
+    }
+    svc.flush_batched().unwrap();
+    assert_eq!(svc.pending(), 0, "{label}: queue must drain");
+    let m = &svc.engine().metrics;
+    let delays = m.queue_delay_summary();
+    SloPoint {
+        label: label.to_string(),
+        slo: policy.slo(),
+        requests: m.total_requests(),
+        rsn: m.total_rsn(),
+        lineages_retrained: m.lineages_retrained,
+        retrains_coalesced: m.retrains_coalesced,
+        queue_p50: delays.p50,
+        queue_p99: delays.p99,
+        slo_violations: m.slo_violations(),
+    }
+}
 
 /// Run the burst workload through the service under one batch policy;
 /// returns (total RSN, requests served).
@@ -121,6 +201,74 @@ fn main() {
         black_box(run_burst(&burst_cfg, &burst_pop, &burst_trace, BatchPolicy::Coalesce))
     });
 
+    // Deadline SLO sweep: per-request latency (queueing delay, ticks) vs
+    // the coalescing win, on the same burst workload with one-tick
+    // inter-arrivals. FCFS is the slo=0 degenerate point; growing the SLO
+    // trades bounded queueing delay for strictly fewer lineage retrains
+    // per request.
+    let fcfs_point =
+        run_slo_point(&burst_cfg, &burst_pop, &burst_trace, "fcfs", BatchPolicy::Fcfs);
+    let mut sweep = vec![fcfs_point];
+    for slo in [0u64, 1, 2, 4, 8] {
+        let label = format!("deadline_slo{slo}");
+        sweep.push(run_slo_point(
+            &burst_cfg,
+            &burst_pop,
+            &burst_trace,
+            &label,
+            BatchPolicy::Deadline { slo_ticks: slo },
+        ));
+    }
+    println!("\nSLO sweep (burst workload, 1 req/tick):");
+    println!(
+        "  {:<16} {:>9} {:>10} {:>10} {:>12} {:>9} {:>9} {:>6}",
+        "policy", "requests", "retrains", "coalesced", "retrain/req", "p50", "p99", "viol"
+    );
+    for p in &sweep {
+        println!(
+            "  {:<16} {:>9} {:>10} {:>10} {:>12.3} {:>9.1} {:>9.1} {:>6}",
+            p.label,
+            p.requests,
+            p.lineages_retrained,
+            p.retrains_coalesced,
+            p.retrains_per_request(),
+            p.queue_p50,
+            p.queue_p99,
+            p.slo_violations
+        );
+    }
+    let fcfs = &sweep[0];
+    for p in &sweep[1..] {
+        let slo = p.slo.expect("sweep points are deadline policies");
+        assert_eq!(p.requests, fcfs.requests, "{}: all requests served", p.label);
+        assert_eq!(p.slo_violations, 0, "{}: deadline policy met its SLO", p.label);
+        assert!(
+            p.queue_p99 <= slo as f64,
+            "{}: p99 queueing delay {} exceeds SLO {slo}",
+            p.label,
+            p.queue_p99
+        );
+        assert!(
+            p.lineages_retrained <= fcfs.lineages_retrained,
+            "{}: deadline must never retrain more than FCFS",
+            p.label
+        );
+    }
+    // slo=0 IS the FCFS service model (equal point of the frontier)...
+    assert_eq!(sweep[1].lineages_retrained, fcfs.lineages_retrained);
+    assert_eq!(sweep[1].rsn, fcfs.rsn);
+    assert_eq!(sweep[1].queue_p99, fcfs.queue_p99);
+    // ...and any real slack strictly dominates FCFS on retrains/request.
+    let widest = sweep.last().expect("sweep is non-empty");
+    assert!(
+        widest.lineages_retrained < fcfs.lineages_retrained,
+        "slo={} must coalesce strictly below FCFS ({} vs {})",
+        widest.slo.unwrap_or(0),
+        widest.lineages_retrained,
+        fcfs.lineages_retrained
+    );
+    assert!(widest.retrains_coalesced > 0);
+
     // Population + trace generation (dominates sweep setup cost).
     b.iter("population_generate_50k", 10, || {
         let pop = EdgePopulation::generate(PopulationConfig {
@@ -136,4 +284,38 @@ fn main() {
     });
 
     b.report();
+
+    // Machine-readable summary for the CI bench-regression gate
+    // (`bench_gate` compares it against the committed BENCH_baseline.json:
+    // coalescing must not drop, p99 queueing delay must not grow > 20%).
+    // Only deterministic workload counters go in — never wall-clock times.
+    let gate_point = sweep
+        .iter()
+        .find(|p| p.label == "deadline_slo4")
+        .expect("sweep contains the slo=4 gate point");
+    let summary = Json::obj()
+        .set("bench", "coordinator")
+        .set(
+            "burst",
+            Json::obj()
+                .set("requests", fcfs_served)
+                .set("fcfs_rsn", fcfs_rsn)
+                .set("coalesce_rsn", coal_rsn),
+        )
+        .set("slo_sweep", Json::Arr(sweep.iter().map(|p| p.to_json()).collect()))
+        .set(
+            "gate",
+            Json::obj()
+                .set("retrains_coalesced", gate_point.retrains_coalesced)
+                .set("p99_queue_delay", gate_point.queue_p99),
+        );
+    // Cargo runs bench binaries with cwd = the package root (rust/), but
+    // CI's upload and gate steps read the file from the workspace root —
+    // anchor the default there instead of relying on the cwd.
+    let out_path = std::env::var("CAUSE_BENCH_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_coordinator.json").to_string()
+    });
+    std::fs::write(&out_path, summary.to_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("\nwrote {out_path}");
 }

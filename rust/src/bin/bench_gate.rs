@@ -1,0 +1,172 @@
+//! `bench_gate` — CI bench-regression gate.
+//!
+//! Compares the machine-readable summary `bench_coordinator` wrote
+//! (`BENCH_coordinator.json`) against the committed `BENCH_baseline.json`
+//! and fails (exit 1) when the scheduler regresses:
+//!
+//! * `gate.retrains_coalesced` drops below the baseline (the coalescing
+//!   win shrank), or
+//! * `gate.p99_queue_delay` grows more than 20% over the baseline (the
+//!   latency SLO frontier moved the wrong way).
+//!
+//! Both values are deterministic workload counters (never wall-clock), so
+//! the gate is stable across runner hardware.
+//!
+//! A baseline with `"bootstrap": true` passes unconditionally and prints
+//! the block to commit as the pinned baseline — used to seed the gate on a
+//! branch whose workload changed intentionally.
+//!
+//! ```bash
+//! cargo run --release --bin bench_gate -- BENCH_baseline.json BENCH_coordinator.json
+//! ```
+
+use std::process::ExitCode;
+
+use cause::util::Json;
+
+/// Allowed relative growth of p99 queueing delay before the gate fails.
+const P99_TOLERANCE: f64 = 0.20;
+
+fn load(path: &str) -> Result<Json, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("reading {path}: {e}"))?;
+    Json::parse(&text).map_err(|e| format!("parsing {path}: {e}"))
+}
+
+fn gate_value(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
+    doc.at(&["gate", key])
+        .and_then(Json::as_f64)
+        .ok_or_else(|| format!("{path}: missing numeric field gate.{key}"))
+}
+
+fn run(baseline_path: &str, current_path: &str) -> Result<(), String> {
+    let baseline = load(baseline_path)?;
+    let current = load(current_path)?;
+
+    let cur_coalesced = gate_value(&current, current_path, "retrains_coalesced")?;
+    let cur_p99 = gate_value(&current, current_path, "p99_queue_delay")?;
+
+    if baseline.get("bootstrap").and_then(Json::as_bool) == Some(true) {
+        println!(
+            "bench_gate: baseline {baseline_path} is in bootstrap mode — \
+             pin it by committing:\n{}",
+            Json::obj()
+                .set(
+                    "gate",
+                    Json::obj()
+                        .set("retrains_coalesced", cur_coalesced)
+                        .set("p99_queue_delay", cur_p99),
+                )
+                .to_pretty()
+        );
+        return Ok(());
+    }
+
+    let base_coalesced = gate_value(&baseline, baseline_path, "retrains_coalesced")?;
+    let base_p99 = gate_value(&baseline, baseline_path, "p99_queue_delay")?;
+
+    println!(
+        "bench_gate: retrains_coalesced {base_coalesced} -> {cur_coalesced}, \
+         p99_queue_delay {base_p99} -> {cur_p99}"
+    );
+
+    let mut failures = Vec::new();
+    if cur_coalesced < base_coalesced {
+        failures.push(format!(
+            "retrains_coalesced dropped: {cur_coalesced} < baseline {base_coalesced}"
+        ));
+    }
+    let p99_limit = base_p99 * (1.0 + P99_TOLERANCE);
+    if cur_p99 > p99_limit + 1e-9 {
+        failures.push(format!(
+            "p99 queueing delay grew >{:.0}%: {cur_p99} > {p99_limit:.3} \
+             (baseline {base_p99})",
+            P99_TOLERANCE * 100.0
+        ));
+    }
+    if failures.is_empty() {
+        println!("bench_gate: OK");
+        Ok(())
+    } else {
+        Err(failures.join("; "))
+    }
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let (baseline, current) = match args.as_slice() {
+        [b, c] => (b.as_str(), c.as_str()),
+        _ => {
+            eprintln!("usage: bench_gate <BENCH_baseline.json> <BENCH_coordinator.json>");
+            return ExitCode::FAILURE;
+        }
+    };
+    match run(baseline, current) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("bench_gate: FAIL: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_tmp(name: &str, text: &str) -> String {
+        let dir = std::env::temp_dir().join("cause_bench_gate_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(name);
+        std::fs::write(&p, text).unwrap();
+        p.to_string_lossy().into_owned()
+    }
+
+    fn doc(coalesced: f64, p99: f64) -> String {
+        Json::obj()
+            .set(
+                "gate",
+                Json::obj()
+                    .set("retrains_coalesced", coalesced)
+                    .set("p99_queue_delay", p99),
+            )
+            .to_pretty()
+    }
+
+    #[test]
+    fn passes_on_equal_and_improved() {
+        let base = write_tmp("base.json", &doc(40.0, 4.0));
+        let same = write_tmp("same.json", &doc(40.0, 4.0));
+        let better = write_tmp("better.json", &doc(55.0, 3.0));
+        assert!(run(&base, &same).is_ok());
+        assert!(run(&base, &better).is_ok());
+        // Within the 20% latency tolerance.
+        let near = write_tmp("near.json", &doc(40.0, 4.8));
+        assert!(run(&base, &near).is_ok());
+    }
+
+    #[test]
+    fn fails_on_regressions() {
+        let base = write_tmp("base2.json", &doc(40.0, 4.0));
+        let fewer = write_tmp("fewer.json", &doc(39.0, 4.0));
+        let slower = write_tmp("slower.json", &doc(40.0, 4.81));
+        assert!(run(&base, &fewer).is_err());
+        assert!(run(&base, &slower).is_err());
+        assert!(run("/nonexistent.json", &base).is_err());
+        let junk = write_tmp("junk.json", "not json");
+        assert!(run(&junk, &base).is_err());
+    }
+
+    #[test]
+    fn bootstrap_baseline_always_passes() {
+        let boot = write_tmp(
+            "boot.json",
+            &Json::obj().set("bootstrap", true).to_pretty(),
+        );
+        let cur = write_tmp("cur.json", &doc(12.0, 2.0));
+        assert!(run(&boot, &cur).is_ok());
+        // Bootstrap still requires a well-formed current summary.
+        let junk = write_tmp("junk2.json", "{}");
+        assert!(run(&boot, &junk).is_err());
+    }
+}

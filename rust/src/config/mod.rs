@@ -31,12 +31,27 @@ pub struct ExperimentConfig {
     /// Fraction of prunable weights KEPT by RCMP (paper δ=70% pruned → 0.3).
     pub prune_keep: f64,
     /// Service batching: how the unlearning service merges queued requests
-    /// (the paper's FCFS baseline vs per-window retrain coalescing).
+    /// (the paper's FCFS baseline, per-window retrain coalescing, or
+    /// deadline-aware coalescing under a latency SLO).
     pub batch_policy: BatchPolicy,
     /// Max requests coalesced per drain window (0 = the whole queue).
     pub batch_window: usize,
+    /// Latency SLO for `batch_policy = deadline`, service-clock ticks: the
+    /// max queueing delay any request may incur before its window closes.
+    /// `0` degenerates to FCFS, `u64::MAX` (config value `inf`) to
+    /// whole-queue coalescing at flush time. Ignored by other policies.
+    pub batch_slo: u64,
     pub model: ModelProfile,
     pub dataset: DatasetSpec,
+}
+
+/// Parse a `batch_slo` value: a tick count, or `inf`/`max`/`none` for an
+/// unbounded SLO (coalesce until an explicit flush).
+fn parse_slo(v: &str) -> Result<u64> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "inf" | "max" | "none" => Ok(u64::MAX),
+        n => Ok(n.parse()?),
+    }
 }
 
 impl Default for ExperimentConfig {
@@ -54,6 +69,7 @@ impl Default for ExperimentConfig {
             prune_keep: 0.3,
             batch_policy: BatchPolicy::Coalesce,
             batch_window: 0,
+            batch_slo: 0,
             model: profiles::RESNET34,
             dataset: CIFAR10,
         }
@@ -97,6 +113,14 @@ impl ExperimentConfig {
         self
     }
 
+    /// Switch to the deadline-aware batch policy with this latency SLO
+    /// (service-clock ticks).
+    pub fn with_slo(mut self, slo_ticks: u64) -> Self {
+        self.batch_slo = slo_ticks;
+        self.batch_policy = BatchPolicy::Deadline { slo_ticks };
+        self
+    }
+
     /// Apply a `key = value` assignment (config file / CLI override).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
@@ -115,8 +139,22 @@ impl ExperimentConfig {
             "prune_keep" => self.prune_keep = v.parse()?,
             "batch_window" => self.batch_window = v.parse()?,
             "batch_policy" => {
-                self.batch_policy = BatchPolicy::by_name(v)
-                    .ok_or_else(|| anyhow::anyhow!("unknown batch policy '{v}'"))?
+                let policy = BatchPolicy::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown batch policy '{v}'"))?;
+                // `deadline` binds the configured SLO regardless of
+                // whether batch_slo was assigned before or after.
+                self.batch_policy = match policy {
+                    BatchPolicy::Deadline { .. } => {
+                        BatchPolicy::Deadline { slo_ticks: self.batch_slo }
+                    }
+                    other => other,
+                };
+            }
+            "batch_slo" => {
+                self.batch_slo = parse_slo(v)?;
+                if let BatchPolicy::Deadline { .. } = self.batch_policy {
+                    self.batch_policy = BatchPolicy::Deadline { slo_ticks: self.batch_slo };
+                }
             }
             "model" => {
                 self.model = ModelProfile::by_name(v)
@@ -186,6 +224,7 @@ mod tests {
         assert!((c.prune_keep - 0.3).abs() < 1e-12);
         assert_eq!(c.batch_policy, BatchPolicy::Coalesce);
         assert_eq!(c.batch_window, 0);
+        assert_eq!(c.batch_slo, 0);
         c.validate().unwrap();
     }
 
@@ -206,6 +245,33 @@ mod tests {
         assert_eq!(c.batch_window, 32);
         assert!(c.apply("batch_policy", "lifo").is_err());
         assert!(c.apply("nope", "1").is_err());
+    }
+
+    #[test]
+    fn batch_slo_binds_in_either_order() {
+        // slo first, then policy.
+        let mut c = ExperimentConfig::default();
+        c.apply("batch_slo", "5").unwrap();
+        c.apply("batch_policy", "deadline").unwrap();
+        assert_eq!(c.batch_policy, BatchPolicy::Deadline { slo_ticks: 5 });
+        // policy first, then slo.
+        let mut c = ExperimentConfig::default();
+        c.apply("batch_policy", "deadline").unwrap();
+        c.apply("batch_slo", "3").unwrap();
+        assert_eq!(c.batch_policy, BatchPolicy::Deadline { slo_ticks: 3 });
+        // `inf` = unbounded (coalesce-at-flush degenerate point).
+        c.apply("batch_slo", "inf").unwrap();
+        assert_eq!(c.batch_policy, BatchPolicy::Deadline { slo_ticks: u64::MAX });
+        assert!(c.apply("batch_slo", "soon").is_err());
+        // Non-deadline policies leave the knob parked but recorded.
+        let mut c = ExperimentConfig::default();
+        c.apply("batch_slo", "9").unwrap();
+        assert_eq!(c.batch_policy, BatchPolicy::Coalesce);
+        assert_eq!(c.batch_slo, 9);
+        // Builder shorthand.
+        let c = ExperimentConfig::default().with_slo(4);
+        assert_eq!(c.batch_policy, BatchPolicy::Deadline { slo_ticks: 4 });
+        c.validate().unwrap();
     }
 
     #[test]

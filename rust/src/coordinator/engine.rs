@@ -58,6 +58,28 @@ pub struct UnlearnOutcome {
     /// or batch invalidated (Alg. 3 line 11) — the exact-unlearning audit
     /// trail the equivalence tests compare across service policies.
     pub invalidated_versions: Vec<(usize, u32)>,
+    /// Per retrain step: `(lineage, coverage warm-started from)` — the
+    /// resolved warm-start chain, the witness the serial-vs-parallel
+    /// parity tests compare (0 = from scratch).
+    pub warm_covers: Vec<(usize, u32)>,
+}
+
+/// How [`Engine::execute_plan`] schedules a plan's lineage chains.
+/// Resolution semantics are identical either way (one [`ChainResolver`]
+/// pass against the plan-time store snapshot); the mode only picks the
+/// execution strategy — so `Serial` and `Parallel` produce the same RSN,
+/// warm-start chains, and invalidation set for the same plan.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum ExecMode {
+    /// Parallel when the backend hands out workers and the plan is big
+    /// enough to amortize thread spawn; serial otherwise.
+    #[default]
+    Auto,
+    /// Always on the engine thread.
+    Serial,
+    /// Parallel whenever the backend supports workers (regardless of plan
+    /// size); falls back to serial when it does not.
+    Parallel,
 }
 
 /// One step of a lineage's resolved retrain chain: clean one poisoned
@@ -65,6 +87,8 @@ pub struct UnlearnOutcome {
 struct ResolvedStep {
     /// Coverage of the retrained clean version: poisoned segment + 1.
     clean_cover: u32,
+    /// Coverage of the model this step starts from (0 = scratch).
+    warm_cover: u32,
     /// Checkpoint parameters to warm-start from; `None` when chained onto
     /// the previous step's in-memory model or when starting from scratch.
     warm_params: Option<Vec<HostTensor>>,
@@ -86,35 +110,69 @@ struct ResolvedChain {
     steps: Vec<ResolvedStep>,
 }
 
-/// Resolve one lineage's merged poison set into a retrain chain against a
-/// snapshot of the store (Alg. 3 line 8 per poisoned version). Steps run
-/// in ascending segment order; step i+1 warm-starts from step i's
-/// retrained model unless the store holds a strictly newer checkpoint (a
-/// later sub-model version left in place, per the paper's retraining
-/// accounting). This matches the seed's FCFS per-step store lookups, minus
-/// the redundant re-reads — and when the refreshed checkpoint would have
-/// been rejected by a full no-replacement store, chaining onto the
-/// in-memory model replays strictly fewer samples with the same guarantee.
-fn resolve_chain(store: &ModelStore, lineages: &LineageSet, lp: &LineagePlan) -> ResolvedChain {
-    let mut steps = Vec::with_capacity(lp.segments.len());
-    let mut prev_clean: Option<u32> = None;
-    for &q in &lp.segments {
-        let clean_cover = q as u32 + 1;
-        let best = store
-            .best_checkpoint(lp.lineage, q as u32)
-            .map(|c| (c.covered_segments, c.params.clone()));
-        let (warm_cover, warm_params, chained, scratch) = match (best, prev_clean) {
-            (Some((cov, params)), Some(prev)) if cov > prev => (cov, params, false, false),
-            (_, Some(prev)) => (prev, None, true, false),
-            (Some((cov, params)), None) => (cov, params, false, false),
-            (None, None) => (0, None, false, true),
-        };
-        let replay = lineages.get(lp.lineage).replay_range(warm_cover, clean_cover);
-        let rsn = replay.iter().map(|(_, n)| n).sum();
-        steps.push(ResolvedStep { clean_cover, warm_params, chained, scratch, replay, rsn });
-        prev_clean = Some(clean_cover);
+/// Resolves lineage plans into retrain chains against a store snapshot
+/// taken at plan time (Alg. 3 line 8 per poisoned version). Both the
+/// serial and the parallel executor resolve through this single type, so
+/// they warm-start identically for the same plan — a plan's chains never
+/// see the store mutations (retrained-checkpoint stores, evictions) made
+/// while executing *other* chains of the same plan. Steps run in ascending
+/// segment order; step i+1 warm-starts from step i's retrained model
+/// unless the snapshot holds a strictly newer checkpoint (a later
+/// sub-model version left in place, per the paper's retraining
+/// accounting). When the refreshed checkpoint would have been rejected by
+/// a full no-replacement store, chaining onto the in-memory model replays
+/// strictly fewer samples with the same guarantee.
+pub(crate) struct ChainResolver<'a> {
+    store: &'a ModelStore,
+    lineages: &'a LineageSet,
+}
+
+impl<'a> ChainResolver<'a> {
+    fn new(store: &'a ModelStore, lineages: &'a LineageSet) -> Self {
+        Self { store, lineages }
     }
-    ResolvedChain { lineage: lp.lineage, steps }
+
+    /// Resolve one lineage's chain. `with_params` clones the warm-start
+    /// checkpoint parameters for execution; cost probes skip the clone.
+    fn resolve(&self, lp: &LineagePlan, with_params: bool) -> ResolvedChain {
+        let mut steps = Vec::with_capacity(lp.segments.len());
+        let mut prev_clean: Option<u32> = None;
+        for &q in &lp.segments {
+            let clean_cover = q as u32 + 1;
+            let best = self.store.best_checkpoint(lp.lineage, q as u32).map(|c| {
+                (c.covered_segments, if with_params { c.params.clone() } else { None })
+            });
+            let (warm_cover, warm_params, chained, scratch) = match (best, prev_clean) {
+                (Some((cov, params)), Some(prev)) if cov > prev => {
+                    (cov, params, false, false)
+                }
+                (_, Some(prev)) => (prev, None, true, false),
+                (Some((cov, params)), None) => (cov, params, false, false),
+                (None, None) => (0, None, false, true),
+            };
+            let replay =
+                self.lineages.get(lp.lineage).replay_range(warm_cover, clean_cover);
+            let rsn = replay.iter().map(|(_, n)| n).sum();
+            steps.push(ResolvedStep {
+                clean_cover,
+                warm_cover,
+                warm_params,
+                chained,
+                scratch,
+                replay,
+                rsn,
+            });
+            prev_clean = Some(clean_cover);
+        }
+        ResolvedChain { lineage: lp.lineage, steps }
+    }
+
+    /// Samples the lineage's chain would replay, without cloning any
+    /// warm-start parameters — the true coalesced retrain cost the
+    /// battery admission gate reserves against.
+    fn rsn(&self, lp: &LineagePlan) -> u64 {
+        self.resolve(lp, false).steps.iter().map(|s| s.rsn).sum()
+    }
 }
 
 /// Don't pay scoped-thread spawn/join for tiny plans: a plan must span
@@ -166,6 +224,7 @@ pub struct Engine {
     pub metrics: RunMetrics,
     round: u32,
     eval: EvalPolicy,
+    exec_mode: ExecMode,
     /// Lineages that ever received data (eligible for serving/eval).
     active: Vec<bool>,
 }
@@ -195,12 +254,23 @@ impl Engine {
             metrics: RunMetrics::default(),
             round: 0,
             eval,
+            exec_mode: ExecMode::Auto,
             active: vec![false; max],
         }
     }
 
     pub fn round(&self) -> u32 {
         self.round
+    }
+
+    /// Force the plan executor's scheduling strategy (tests and the
+    /// serial/parallel parity suite; deployments keep [`ExecMode::Auto`]).
+    pub fn set_exec_mode(&mut self, mode: ExecMode) {
+        self.exec_mode = mode;
+    }
+
+    pub fn exec_mode(&self) -> ExecMode {
+        self.exec_mode
     }
 
     pub fn store(&self) -> &ModelStore {
@@ -322,13 +392,28 @@ impl Engine {
         poisoned
     }
 
+    /// True replay cost of a plan, per lineage, in the plan's lineage
+    /// order: the samples each lineage's resolved chain will replay given
+    /// the current store. One read-only resolution pass — this is the
+    /// merged-cost probe the service's battery admission reserves against
+    /// (a lineage touched by R requests is costed once, not R times), and
+    /// it equals exactly what [`Engine::execute_plan`] will replay if run
+    /// next (the resolver is shared, the cost model is deterministic).
+    pub fn plan_lineage_rsn(&self, plan: &BatchPlan) -> Vec<u64> {
+        let resolver = ChainResolver::new(&self.store, &self.lineages);
+        plan.lineages.iter().map(|lp| resolver.rsn(lp)).collect()
+    }
+
     /// Execute a batch plan: one retrain chain per affected lineage
-    /// (Alg. 3 lines 8–12 per poisoned version). When the backend hands
-    /// out [`LineageWorker`]s (the cost model does; PJRT's thread-local
-    /// handles keep it serial) and the plan is big enough, chains are
-    /// resolved against a store snapshot and the independent lineages
-    /// retrain in parallel via `std::thread::scope`. Store mutation and
-    /// metric accounting always stay on this thread.
+    /// (Alg. 3 lines 8–12 per poisoned version). Every chain is resolved
+    /// up front by one [`ChainResolver`] against the plan-time store
+    /// snapshot — the serial and the parallel executor therefore produce
+    /// identical warm-start chains, RSN, and invalidation sets; the
+    /// [`ExecMode`] only decides whether independent lineages retrain on
+    /// scoped threads (backend [`LineageWorker`]s; the cost model has
+    /// them, PJRT's thread-local handles keep it serial) or on this
+    /// thread. Store mutation and metric accounting always stay on this
+    /// thread.
     ///
     /// Round-slot metrics (`rsn_by_round` / `requests_by_round`) are the
     /// caller's job via [`RunMetrics::record_requests`], since only the
@@ -340,9 +425,15 @@ impl Engine {
         }
         let epochs = self.cfg.epochs_per_round;
         let schedule = self.schedule;
-        let parallel = plan.lineages.len() > 1
-            && plan.lineages.iter().map(|l| l.segments.len()).sum::<usize>()
-                >= PARALLEL_MIN_VERSIONS;
+        let parallel = match self.exec_mode {
+            ExecMode::Serial => false,
+            ExecMode::Parallel => true,
+            ExecMode::Auto => {
+                plan.lineages.len() > 1
+                    && plan.lineages.iter().map(|l| l.segments.len()).sum::<usize>()
+                        >= PARALLEL_MIN_VERSIONS
+            }
+        };
 
         // All-or-nothing worker collection: the parallel path needs every
         // affected lineage to retrain off-thread.
@@ -364,15 +455,17 @@ impl Engine {
             all
         };
 
+        // One resolution pass for both executors (cheap, read-only). The
+        // warm-start parameter clones for all lineages are held for the
+        // plan's duration; per-lineage peak memory matters less than
+        // resolution parity here, and the accounting backend stores no
+        // parameters at all.
+        let resolver = ChainResolver::new(&self.store, &self.lineages);
+        let chains: Vec<ResolvedChain> =
+            plan.lineages.iter().map(|lp| resolver.resolve(lp, true)).collect();
+
         if use_workers {
-            // Resolve every chain up front against the unmutated store
-            // (cheap, read-only — not worth a thread per lookup), then run
-            // independent lineages' retrains on scoped threads.
-            let chains: Vec<ResolvedChain> = plan
-                .lineages
-                .iter()
-                .map(|lp| resolve_chain(&self.store, &self.lineages, lp))
-                .collect();
+            // Independent lineages' retrains run on scoped threads.
             let results: Vec<Result<Vec<TrainOutcome>>> = std::thread::scope(|s| {
                 let handles: Vec<_> = chains
                     .iter()
@@ -398,16 +491,11 @@ impl Engine {
                 self.restore_serving_model(chain.lineage, last_clean)?;
             }
         } else {
-            // Serial: resolve and execute one lineage at a time against the
-            // live store — the seed's FCFS order (each chain sees earlier
-            // chains' store updates), and only one lineage's warm-start
-            // parameter clones are held at a time, which matters for the
-            // PJRT backend on the memory-constrained devices the paper
-            // targets. The per-step order is reset → run → store, so the
-            // PJRT snapshot captures each step's model before the next
-            // step moves it.
-            for lp in &plan.lineages {
-                let chain = resolve_chain(&self.store, &self.lineages, lp);
+            // Serial: execute the pre-resolved chains one lineage at a
+            // time on this thread. The per-step order is reset → run →
+            // store, so the PJRT snapshot captures each step's model
+            // before the next step moves it.
+            for chain in &chains {
                 outcome.lineages_retrained += 1;
                 let mut last_clean = 0;
                 for step in &chain.steps {
@@ -450,6 +538,7 @@ impl Engine {
             .store
             .invalidate(|c| c.lineage == lineage && c.covered_segments == step.clean_cover);
         outcome.invalidated_versions.push((lineage, step.clean_cover));
+        outcome.warm_covers.push((lineage, step.warm_cover));
         if step.scratch {
             outcome.scratch_starts += 1;
         } else {

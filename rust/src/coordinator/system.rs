@@ -259,4 +259,20 @@ mod tests {
         let svc = SystemVariant::Omp70.build_service(&cfg).unwrap();
         assert_eq!(svc.planner().policy, BatchPolicy::Fcfs);
     }
+
+    #[test]
+    fn baselines_stay_fcfs_under_deadline_config() {
+        // A deadline SLO is a CAUSE service feature; the baseline papers'
+        // FCFS service model stays pinned for like-for-like RSN numbers.
+        let cfg = ExperimentConfig::default().with_slo(4);
+        assert_eq!(
+            SystemVariant::Cause.batch_policy(&cfg),
+            BatchPolicy::Deadline { slo_ticks: 4 }
+        );
+        for v in [SystemVariant::Sisa, SystemVariant::Arcane, SystemVariant::Omp95] {
+            assert_eq!(v.batch_policy(&cfg), BatchPolicy::Fcfs);
+        }
+        let svc = SystemVariant::Cause.build_service(&cfg).unwrap();
+        assert_eq!(svc.planner().policy.slo(), Some(4));
+    }
 }

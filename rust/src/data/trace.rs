@@ -16,6 +16,14 @@ pub struct UnlearnRequest {
     /// Round *after* which the request arrives (1-based).
     pub round: u32,
     pub user: UserId,
+    /// Logical arrival time on the service clock (ticks). Trace generation
+    /// stamps the arrival round; [`UnlearningService::submit`] re-stamps
+    /// with its own clock so queueing-delay receipts are measured against
+    /// one consistent timeline. The deadline-aware batch planner closes a
+    /// window before `arrival_tick + slo_ticks` passes.
+    ///
+    /// [`UnlearningService::submit`]: crate::unlearning::UnlearningService::submit
+    pub arrival_tick: u64,
     /// (block, samples to remove) — already clamped to remaining samples.
     pub parts: Vec<(BlockId, u64)>,
 }
@@ -119,7 +127,12 @@ impl RequestTrace {
                     include(old[pick], &mut rng, &mut remaining, &mut parts);
                 }
                 if !parts.is_empty() {
-                    reqs.push(UnlearnRequest { round: r, user, parts });
+                    reqs.push(UnlearnRequest {
+                        round: r,
+                        user,
+                        arrival_tick: r as u64,
+                        parts,
+                    });
                 }
             }
             rounds.push(reqs);

@@ -29,7 +29,14 @@ SYSTEMS:
 
 CONFIG KEYS (key=value):
     seed users rounds epochs_per_round shards memory_gb unlearn_prob
-    sc_gamma sc_p prune_keep batch_policy batch_window model dataset
+    sc_gamma sc_p prune_keep batch_policy batch_window batch_slo model dataset
+
+BATCHING:
+    batch_policy = fcfs | coalesce | deadline
+    batch_slo    = latency SLO in service ticks for 'deadline' (0 ≡ fcfs,
+                   'inf' ≡ coalesce-at-flush); per-request queueing-delay
+                   receipts land in the metrics JSON (queue_delay_p50/p99,
+                   slo_violations)
 "
 }
 

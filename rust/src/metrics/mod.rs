@@ -1,4 +1,22 @@
-//! Run metrics: everything the paper reports, accumulated per round.
+//! Run metrics: everything the paper reports, accumulated per round, plus
+//! the service-level latency receipts the deadline-aware batch scheduler
+//! is judged by (queueing delay vs retrains coalesced).
+
+use crate::util::Summary;
+
+/// Per-request latency receipt stamped by the unlearning service when the
+/// request's batch window executes. `queued_ticks` is the service-clock
+/// delay between arrival and service; `slo_met` records whether the
+/// configured deadline policy honored its bound (always true for policies
+/// that promise none).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyReceipt {
+    pub user: u32,
+    /// Round the request targeted (trace bookkeeping, not the serve time).
+    pub round: u32,
+    pub queued_ticks: u64,
+    pub slo_met: bool,
+}
 
 /// Metrics for one system run over a trace.
 #[derive(Clone, Debug, Default)]
@@ -28,6 +46,9 @@ pub struct RunMetrics {
     /// Per-request lineage retrains avoided by coalescing: a lineage
     /// poisoned by k requests in one window retrains once, saving k-1.
     pub retrains_coalesced: u64,
+    /// Per-request queueing-delay receipts (service drains only; empty
+    /// when the engine is driven directly).
+    pub latency: Vec<LatencyReceipt>,
     /// Ensemble accuracy per evaluation point (only with a real trainer).
     pub accuracy_by_round: Vec<Option<f64>>,
 }
@@ -46,6 +67,23 @@ impl RunMetrics {
         }
         *self.rsn_by_round.last_mut().expect("slot just ensured") += rsn;
         *self.requests_by_round.last_mut().expect("slot just ensured") += served;
+    }
+
+    /// Record one served request's queueing-delay receipt.
+    pub fn record_latency(&mut self, receipt: LatencyReceipt) {
+        self.latency.push(receipt);
+    }
+
+    /// Distribution of queueing delays (ticks) across latency receipts.
+    pub fn queue_delay_summary(&self) -> Summary {
+        let delays: Vec<f64> =
+            self.latency.iter().map(|r| r.queued_ticks as f64).collect();
+        Summary::of(&delays)
+    }
+
+    /// Requests served past their latency SLO.
+    pub fn slo_violations(&self) -> u64 {
+        self.latency.iter().filter(|r| !r.slo_met).count() as u64
     }
 
     pub fn total_rsn(&self) -> u64 {
@@ -74,6 +112,7 @@ impl RunMetrics {
 
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
+        let delays = self.queue_delay_summary();
         Json::obj()
             .set("rsn_by_round", self.rsn_by_round.clone())
             .set("total_rsn", self.total_rsn())
@@ -90,6 +129,10 @@ impl RunMetrics {
             .set("batches", self.batches)
             .set("batched_requests", self.batched_requests)
             .set("retrains_coalesced", self.retrains_coalesced)
+            .set("queue_delay_p50", delays.p50)
+            .set("queue_delay_p99", delays.p99)
+            .set("slo_violations", self.slo_violations())
+            .set("latency_receipts", self.latency.len())
             .set(
                 "accuracy_by_round",
                 Json::Arr(
@@ -134,6 +177,27 @@ mod tests {
         assert!(s.contains("total_rsn"));
         assert!(s.contains("energy_joules"));
         assert!(s.contains("retrains_coalesced"));
+        assert!(s.contains("queue_delay_p99"));
+        assert!(s.contains("slo_violations"));
+    }
+
+    #[test]
+    fn latency_receipts_aggregate() {
+        let mut m = RunMetrics::default();
+        assert_eq!(m.queue_delay_summary().n, 0);
+        for (q, met) in [(0u64, true), (2, true), (4, false), (4, false)] {
+            m.record_latency(LatencyReceipt {
+                user: 1,
+                round: 1,
+                queued_ticks: q,
+                slo_met: met,
+            });
+        }
+        let s = m.queue_delay_summary();
+        assert_eq!(s.n, 4);
+        assert_eq!(s.max, 4.0);
+        assert!(s.p50 <= s.p99);
+        assert_eq!(m.slo_violations(), 2);
     }
 
     #[test]

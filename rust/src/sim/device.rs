@@ -106,6 +106,24 @@ impl Battery {
         }
     }
 
+    /// Settle a reservation against the actual cost of work that already
+    /// ran: deduct the overrun beyond `reserved_j` (no gating, no brownout
+    /// — the work cannot be un-run) or refund the over-reserved remainder.
+    /// Both directions clamp (`[0, capacity]`), so a window that was split
+    /// for battery reasons — where only the *executed* lineages' merged
+    /// cost was ever reserved — can never refund energy it did not draw:
+    /// the unexecuted lineages' share was left in the battery, not drawn
+    /// and refunded, closing the under-refund edge of hint-based
+    /// reservations.
+    pub fn settle(&mut self, actual_j: f64, reserved_j: f64) {
+        let delta = actual_j - reserved_j;
+        if delta > 0.0 {
+            self.deduct(delta);
+        } else {
+            self.refund(-delta);
+        }
+    }
+
     /// State of charge in [0, 1] (1.0 when mains powered).
     pub fn soc(&self) -> f64 {
         if self.mains() {
@@ -189,6 +207,31 @@ mod tests {
         assert_eq!(b.brownouts, 0);
         b.deduct(-5.0); // negative deductions ignored
         assert_eq!(b.charge_j, 0.0);
+    }
+
+    #[test]
+    fn settle_clamps_both_directions() {
+        let mut b = Battery::new(&AI_CUBESAT);
+        // Reserve 1000 J, actual cost 400 J: the 600 J difference returns.
+        assert!(b.draw(1000.0));
+        b.settle(400.0, 1000.0);
+        assert!((b.charge_j - (b.capacity_j - 400.0)).abs() < 1e-9);
+        // Reserve 100 J, actual 250 J: the 150 J overrun is deducted
+        // without a brownout (the work already ran).
+        assert!(b.draw(100.0));
+        b.settle(250.0, 100.0);
+        assert!((b.charge_j - (b.capacity_j - 650.0)).abs() < 1e-9);
+        assert_eq!(b.brownouts, 0);
+
+        // Refund clamp: settling a huge over-reservation cannot push the
+        // charge past capacity (a split window must not mint energy from
+        // the unexecuted share).
+        b.settle(0.0, 1e12);
+        assert_eq!(b.charge_j, b.capacity_j);
+        // Deduct clamp: a huge overrun empties the battery, no further.
+        b.settle(1e12, 0.0);
+        assert_eq!(b.charge_j, 0.0);
+        assert_eq!(b.brownouts, 0);
     }
 
     #[test]

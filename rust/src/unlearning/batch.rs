@@ -31,6 +31,18 @@ pub enum BatchPolicy {
     /// Merge a window's poison sets and retrain each lineage once.
     #[default]
     Coalesce,
+    /// Deadline-aware coalescing: keep accumulating requests while the
+    /// oldest queued request can still meet its latency SLO, and close the
+    /// window (serving everything queued, coalesced) the moment waiting any
+    /// longer would violate it. `Fcfs` and `Coalesce` are the degenerate
+    /// points of this policy: `slo_ticks = 0` leaves no slack to wait, so
+    /// every request is served in its own immediate window (the paper's
+    /// FCFS model); `slo_ticks = u64::MAX` never closes on a deadline, so
+    /// the whole queue coalesces into one window at flush time.
+    Deadline {
+        /// Max queueing delay (service-clock ticks) any request may incur.
+        slo_ticks: u64,
+    },
 }
 
 impl BatchPolicy {
@@ -38,13 +50,26 @@ impl BatchPolicy {
         match self {
             BatchPolicy::Fcfs => "fcfs",
             BatchPolicy::Coalesce => "coalesce",
+            BatchPolicy::Deadline { .. } => "deadline",
         }
     }
 
+    /// Parse a policy name. `deadline` gets `slo_ticks = 0`; the config
+    /// layer rebinds it to the configured `batch_slo`.
     pub fn by_name(name: &str) -> Option<BatchPolicy> {
         match name.trim().to_ascii_lowercase().as_str() {
             "fcfs" => Some(BatchPolicy::Fcfs),
             "coalesce" | "batch" | "batched" => Some(BatchPolicy::Coalesce),
+            "deadline" | "slo" => Some(BatchPolicy::Deadline { slo_ticks: 0 }),
+            _ => None,
+        }
+    }
+
+    /// The latency SLO this policy promises, if any. Receipts mark
+    /// `slo_met` against this bound; policies without one always meet it.
+    pub fn slo(&self) -> Option<u64> {
+        match self {
+            BatchPolicy::Deadline { slo_ticks } => Some(*slo_ticks),
             _ => None,
         }
     }
@@ -157,12 +182,42 @@ impl BatchPlanner {
         Self::new(cfg.batch_policy, cfg.batch_window)
     }
 
-    /// Requests to drain into the next window given the queue depth.
+    /// Requests to drain into the next window given the queue depth,
+    /// ignoring deadline pressure (legacy entry point; under
+    /// [`BatchPolicy::Deadline`] it never closes a window — use
+    /// [`BatchPlanner::window_size_at`] with the oldest request's age).
     pub fn window_size(&self, queued: usize) -> usize {
+        self.window_size_at(queued, None)
+    }
+
+    /// Requests to drain into the next window. `oldest_age` is the current
+    /// queueing delay of the queue head (`now - arrival_tick`), `None` when
+    /// the queue is empty. One code path covers the whole policy spectrum:
+    ///
+    /// * `Fcfs` — one request per window, always.
+    /// * `Coalesce` — everything queued (capped by `window`), always.
+    /// * `Deadline { slo_ticks: 0 }` — zero slack: one request per
+    ///   window, immediately (≡ `Fcfs`).
+    /// * `Deadline { slo_ticks }` — hold (return 0) while the oldest
+    ///   request's age is below its SLO; once serving can no longer be
+    ///   postponed, close the window over everything queued (capped by
+    ///   `window`). `slo_ticks = u64::MAX` never closes (≡ `Coalesce`
+    ///   deferred to an explicit flush).
+    pub fn window_size_at(&self, queued: usize, oldest_age: Option<u64>) -> usize {
         match self.policy {
-            BatchPolicy::Fcfs => queued.min(1),
+            BatchPolicy::Fcfs | BatchPolicy::Deadline { slo_ticks: 0 } => queued.min(1),
             BatchPolicy::Coalesce if self.window == 0 => queued,
             BatchPolicy::Coalesce => queued.min(self.window),
+            BatchPolicy::Deadline { slo_ticks } => match oldest_age {
+                Some(age) if age >= slo_ticks => {
+                    if self.window == 0 {
+                        queued
+                    } else {
+                        queued.min(self.window)
+                    }
+                }
+                _ => 0,
+            },
         }
     }
 
@@ -178,11 +233,26 @@ mod tests {
 
     #[test]
     fn policy_names_roundtrip() {
-        for p in [BatchPolicy::Fcfs, BatchPolicy::Coalesce] {
+        for p in [
+            BatchPolicy::Fcfs,
+            BatchPolicy::Coalesce,
+            BatchPolicy::Deadline { slo_ticks: 0 },
+        ] {
             assert_eq!(BatchPolicy::by_name(p.display()), Some(p));
         }
         assert_eq!(BatchPolicy::by_name("batched"), Some(BatchPolicy::Coalesce));
+        assert_eq!(
+            BatchPolicy::by_name("slo"),
+            Some(BatchPolicy::Deadline { slo_ticks: 0 })
+        );
         assert!(BatchPolicy::by_name("lifo").is_none());
+    }
+
+    #[test]
+    fn slo_accessor_only_on_deadline() {
+        assert_eq!(BatchPolicy::Fcfs.slo(), None);
+        assert_eq!(BatchPolicy::Coalesce.slo(), None);
+        assert_eq!(BatchPolicy::Deadline { slo_ticks: 7 }.slo(), Some(7));
     }
 
     #[test]
@@ -197,6 +267,29 @@ mod tests {
         let capped = BatchPlanner::new(BatchPolicy::Coalesce, 4);
         assert_eq!(capped.window_size(9), 4);
         assert_eq!(capped.window_size(3), 3);
+    }
+
+    #[test]
+    fn deadline_window_closes_exactly_at_slo() {
+        let d = BatchPlanner::new(BatchPolicy::Deadline { slo_ticks: 3 }, 0);
+        // Below the SLO the planner holds; at/over the bound it flushes.
+        assert_eq!(d.window_size_at(5, Some(0)), 0);
+        assert_eq!(d.window_size_at(5, Some(2)), 0);
+        assert_eq!(d.window_size_at(5, Some(3)), 5);
+        assert_eq!(d.window_size_at(5, Some(9)), 5);
+        assert_eq!(d.window_size_at(0, None), 0);
+        // Legacy entry point carries no deadline pressure: always holds.
+        assert_eq!(d.window_size(5), 0);
+
+        // The cap still applies when a deadline closes the window.
+        let capped = BatchPlanner::new(BatchPolicy::Deadline { slo_ticks: 3 }, 2);
+        assert_eq!(capped.window_size_at(5, Some(4)), 2);
+
+        // Degenerate points: slo=0 ≡ FCFS, slo=∞ never closes.
+        let zero = BatchPlanner::new(BatchPolicy::Deadline { slo_ticks: 0 }, 0);
+        assert_eq!(zero.window_size_at(5, Some(0)), 1);
+        let inf = BatchPlanner::new(BatchPolicy::Deadline { slo_ticks: u64::MAX }, 0);
+        assert_eq!(inf.window_size_at(5, Some(1_000_000)), 0);
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! The unlearning *service*: a queue-fronted façade over the engine, the
 //! shape a deployment embeds (examples use it; experiments drive the
 //! engine directly for determinism), plus the batched request-coalescing
-//! subsystem that turns R same-window retrains of a lineage into one.
+//! subsystem that turns R same-window retrains of a lineage into one —
+//! optionally deadline-aware ([`BatchPolicy::Deadline`]): coalescing is
+//! maximized subject to a per-request queueing-delay SLO, with FCFS and
+//! whole-queue coalescing as the SLO = 0 / SLO = ∞ degenerate points.
 
 pub mod batch;
 pub mod service;

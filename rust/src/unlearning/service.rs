@@ -1,17 +1,30 @@
 //! Queue-fronted unlearning service.
 //!
 //! Wraps an [`Engine`] with the request lifecycle a real edge deployment
-//! needs: queueing, per-request and per-batch receipts (RSN, latency
-//! estimate, energy), optional battery gating (satellite mode: defer
-//! retraining when the state of charge cannot cover it), and a service log.
+//! needs: a service clock (ticks), queueing, per-request and per-batch
+//! receipts (RSN, latency estimate, energy, queueing delay), optional
+//! battery gating (satellite mode: defer retraining when the state of
+//! charge cannot cover it), and a service log.
 //!
 //! Two drain modes:
 //! * [`UnlearningService::drain`] — strictly FCFS, one retrain pass per
 //!   request (the paper's service model).
 //! * [`UnlearningService::drain_batched`] — windows of queued requests are
-//!   merged by the configured [`BatchPlanner`], so a lineage poisoned by R
-//!   requests in one window replays once instead of R times, and
-//!   independent lineages retrain in parallel when the backend allows.
+//!   merged by the configured [`BatchPlanner`]. Under
+//!   [`BatchPolicy::Deadline`](crate::unlearning::BatchPolicy::Deadline)
+//!   the planner holds the queue while every request can still meet its
+//!   latency SLO and closes the window at the last admissible tick, so
+//!   coalescing is maximized *subject to* the per-request deadline.
+//!
+//! Battery admission is **merged-cost aware**: a window's already-merged
+//! `(lineage, segment)` poison set is costed through the engine's own
+//! chain resolver (one read-only pass), so the reservation equals the true
+//! coalesced retrain cost rather than the sum of conservative per-request
+//! hints — the old hint-sum gate under-coalesced exactly when coalescing
+//! paid most. On insufficient charge the plan splits at lineage
+//! granularity: the affordable lineage prefix executes now, the rest is
+//! carried over (its samples are already removed from the bookkeeping, so
+//! only the replay work waits for harvest).
 
 use std::collections::VecDeque;
 
@@ -21,11 +34,12 @@ use crate::coordinator::engine::Engine;
 use crate::data::dataset::EdgePopulation;
 use crate::data::trace::UnlearnRequest;
 use crate::energy::EnergyModel;
+use crate::metrics::LatencyReceipt;
 use crate::sim::Battery;
-use crate::unlearning::batch::BatchPlanner;
+use crate::unlearning::batch::{BatchPlan, BatchPlanner};
 
 /// Receipt for one served unlearning request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct ServiceReport {
     pub user: u32,
     pub round: u32,
@@ -40,7 +54,7 @@ pub struct ServiceReport {
 }
 
 /// Receipt for one served (or deferred) batch window.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct BatchReport {
     /// Requests merged into this window (0 for a deferral receipt).
     pub requests: usize,
@@ -48,12 +62,33 @@ pub struct BatchReport {
     pub lineages_retrained: usize,
     /// Per-request lineage retrains avoided by coalescing this window.
     pub retrains_coalesced: u64,
+    /// Queueing delay of the window's oldest request at serve time, ticks.
+    pub oldest_queued_ticks: u64,
     /// Estimated device seconds for the window's retraining.
     pub est_seconds: f64,
     /// Estimated joules for the window's retraining.
     pub est_joules: f64,
-    /// Deferred because the battery could not cover even one request.
+    /// Deferred because the battery could not cover even one lineage.
     pub deferred: bool,
+}
+
+/// Receipt bookkeeping for a request whose poison travels in a plan: what
+/// the latency receipt needs once the plan finally executes.
+#[derive(Clone, Copy, Debug)]
+struct ReqMeta {
+    user: u32,
+    round: u32,
+    arrival_tick: u64,
+}
+
+/// Battery admission verdict for one window's merged plan.
+enum Admission {
+    /// The whole plan is affordable; reserve this much.
+    Granted { reserve_j: f64 },
+    /// Only a lineage prefix is affordable; `defer` holds the rest.
+    Split { defer: BatchPlan, reserve_j: f64 },
+    /// Not even the first lineage is affordable right now.
+    Starved { probe_j: f64 },
 }
 
 /// Queue-fronted unlearning service over an engine.
@@ -63,14 +98,20 @@ pub struct UnlearningService {
     energy: EnergyModel,
     battery: Option<Battery>,
     planner: BatchPlanner,
+    /// Logical service clock, ticks. [`UnlearningService::ingest_round`]
+    /// advances it by one; drivers may interleave finer-grained
+    /// [`UnlearningService::advance`] calls between submissions.
+    now_tick: u64,
     /// One deferral receipt per episode: set when the queue head defers,
     /// cleared when anything is served (or the head changes by serving).
     head_deferral_logged: bool,
-    /// Poison collected for a window whose execution failed: its samples
-    /// are already removed from the lineages, so the plan is carried over
-    /// and merged into the next executed window (exactness is preserved
-    /// across engine errors).
-    carryover: Option<crate::unlearning::batch::BatchPlan>,
+    /// Poison collected for a window that could not (fully) execute — an
+    /// engine error, or lineages beyond the affordable battery prefix.
+    /// Its samples are already removed from the lineages, so the plan is
+    /// carried over and merged into the next executed window (exactness
+    /// is preserved across errors and brownouts); the metas keep the
+    /// latency receipts of requests not yet accounted.
+    carryover: Option<(BatchPlan, Vec<ReqMeta>)>,
     /// Per-request receipts (FCFS drains).
     pub log: Vec<ServiceReport>,
     /// Per-window receipts (batched drains).
@@ -87,6 +128,7 @@ impl UnlearningService {
             energy,
             battery: None,
             planner,
+            now_tick: 0,
             head_deferral_logged: false,
             carryover: None,
             log: vec![],
@@ -122,23 +164,58 @@ impl UnlearningService {
         &self.planner
     }
 
+    /// Requests still waiting in the queue (not yet planned).
     pub fn pending(&self) -> usize {
         self.queue.len()
     }
 
-    /// Run one training round (new data arrival).
+    /// Requests whose samples are already removed but whose replay work is
+    /// parked in the carryover plan (battery-starved or after an engine
+    /// error), awaiting a future window.
+    pub fn carryover_requests(&self) -> usize {
+        self.carryover.as_ref().map_or(0, |(p, _)| p.requests)
+    }
+
+    /// Lineages with replay work parked in the carryover plan. A window
+    /// split for battery reasons parks its unfunded share with
+    /// `requests = 0` (the executed prefix already served and accounted
+    /// every request), so shutdown loops must poll *this* — not
+    /// [`UnlearningService::carryover_requests`] — to know whether
+    /// poisoned versions still await retraining.
+    pub fn carryover_lineages(&self) -> usize {
+        self.carryover.as_ref().map_or(0, |(p, _)| p.lineages.len())
+    }
+
+    /// Current service-clock time, ticks.
+    pub fn now(&self) -> u64 {
+        self.now_tick
+    }
+
+    /// Advance the service clock (fine-grained arrival modelling; round
+    /// ingestion advances it by one tick on its own).
+    pub fn advance(&mut self, ticks: u64) {
+        self.now_tick = self.now_tick.saturating_add(ticks);
+    }
+
+    /// Run one training round (new data arrival); advances the clock.
     pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
+        self.now_tick = self.now_tick.saturating_add(1);
         self.engine.run_round(pop)?;
         Ok(())
     }
 
-    /// Enqueue a request (FCFS order preserved).
+    /// Enqueue a request (FCFS order preserved), stamping its arrival on
+    /// the service clock — queueing-delay receipts and the deadline
+    /// planner both measure against this stamp.
     pub fn submit(&mut self, req: UnlearnRequest) {
+        let mut req = req;
+        req.arrival_tick = self.now_tick;
         self.queue.push_back(req);
     }
 
     /// Conservative energy pre-estimate for the first `w` queued requests:
-    /// replaying every requested sample.
+    /// replaying every requested sample (FCFS drains only; batched drains
+    /// reserve the resolver's true merged cost instead).
     fn window_hint_joules(&self, w: usize) -> f64 {
         let rsn_hint: u64 = self.queue.iter().take(w).map(|r| r.total_samples()).sum();
         self.energy.retrain_joules(rsn_hint, self.engine.cfg.epochs_per_round)
@@ -171,7 +248,7 @@ impl UnlearningService {
         // stranded when the caller switches to FCFS drains: flush it
         // first (its samples are already removed from the lineages).
         let mut served = if self.carryover.is_some() {
-            self.execute_window(Vec::new(), 0.0)?
+            self.execute_window(Vec::new())?
         } else {
             0
         };
@@ -206,7 +283,17 @@ impl UnlearningService {
             let est_joules = self
                 .energy
                 .retrain_joules(outcome.rsn, self.engine.cfg.epochs_per_round);
-            self.settle_energy(est_joules, est_j_hint);
+            if let Some(b) = &mut self.battery {
+                b.settle(est_joules, est_j_hint);
+            }
+            let queued_ticks = self.now_tick.saturating_sub(req.arrival_tick);
+            let slo = self.planner.policy.slo();
+            self.engine.metrics.record_latency(LatencyReceipt {
+                user: req.user.0,
+                round: req.round,
+                queued_ticks,
+                slo_met: slo.map_or(true, |s| queued_ticks <= s),
+            });
             self.log.push(ServiceReport {
                 user: req.user.0,
                 round: req.round,
@@ -225,102 +312,188 @@ impl UnlearningService {
 
     /// Serve queued requests in coalesced windows per the configured
     /// [`BatchPlanner`]: each window's poison sets are merged so a lineage
-    /// touched by R requests replays once instead of R times. Returns the
-    /// number of requests served. With a battery, the window shrinks to
-    /// the affordable prefix; when even one request is unaffordable the
-    /// queue defers (one receipt per episode) until `harvest`.
+    /// touched by R requests replays once instead of R times. Under a
+    /// deadline policy, windows close exactly when the oldest queued
+    /// request's SLO leaves no more slack. Returns the number of requests
+    /// served. With a battery, admission reserves the true merged plan
+    /// cost and splits the plan at lineage granularity when only a prefix
+    /// is affordable (one deferral receipt per starvation episode).
     pub fn drain_batched(&mut self) -> Result<usize> {
+        self.drain_windows(false)
+    }
+
+    /// Serve everything queued regardless of deadline slack (end of run /
+    /// device shutdown): the whole queue coalesces into one window, which
+    /// is where `Deadline { slo_ticks: u64::MAX }` meets `Coalesce`.
+    pub fn flush_batched(&mut self) -> Result<usize> {
+        self.drain_windows(true)
+    }
+
+    fn drain_windows(&mut self, flush: bool) -> Result<usize> {
         let mut served = 0;
         loop {
-            let mut w = self.planner.window_size(self.queue.len());
+            let oldest_age = self
+                .queue
+                .front()
+                .map(|r| self.now_tick.saturating_sub(r.arrival_tick));
+            let w = if flush {
+                self.queue.len()
+            } else {
+                self.planner.window_size_at(self.queue.len(), oldest_age)
+            };
             if w == 0 {
-                // Flush a carried-over plan even when no new requests
-                // arrive — its samples are already removed, so its poison
-                // must still be replayed (and its requests counted).
+                // Flush a carried-over plan even when no window opens —
+                // its samples are already removed, so its poison must
+                // still be replayed (and its requests counted).
                 if self.carryover.is_some() {
-                    served += self.execute_window(Vec::new(), 0.0)?;
+                    served += self.execute_window(Vec::new())?;
                 }
                 break;
             }
-            let mut hint_j = 0.0;
-            if let Some(b) = &self.battery {
-                // One forward pass over the queue finds the affordable
-                // prefix (per-request hints are non-negative, so prefix
-                // cost is monotone — no need to re-sum per candidate).
-                let epochs = self.engine.cfg.epochs_per_round;
-                let mut affordable = 0;
-                let mut prefix = 0.0;
-                for req in self.queue.iter().take(w) {
-                    let next =
-                        prefix + self.energy.retrain_joules(req.total_samples(), epochs);
-                    if !b.can_cover(next) {
-                        break;
-                    }
-                    prefix = next;
-                    affordable += 1;
-                }
-                w = affordable;
-                hint_j = prefix;
+            let window: Vec<UnlearnRequest> = self.queue.drain(..w).collect();
+            let n = self.execute_window(window)?;
+            served += n;
+            if n == 0 && self.carryover.is_some() {
+                // Battery-starved: the window's plan is parked; draining
+                // further windows would only park more unfunded work.
+                break;
             }
-            if self.battery.is_some() && w == 0 {
-                let head_hint = self.window_hint_joules(1);
+        }
+        Ok(served)
+    }
+
+    /// Battery admission for a window's merged plan: cost each lineage's
+    /// resolved chain (the true coalesced replay, one read-only resolver
+    /// pass) and keep the affordable prefix. Splitting happens at lineage
+    /// granularity — requests are never dropped, their unfunded lineage
+    /// work is deferred instead.
+    fn admit(&self, plan: &mut BatchPlan) -> Admission {
+        let Some(b) = self.battery.as_ref().filter(|b| !b.mains()) else {
+            return Admission::Granted { reserve_j: 0.0 };
+        };
+        let epochs = self.engine.cfg.epochs_per_round;
+        let costs: Vec<f64> = self
+            .engine
+            .plan_lineage_rsn(plan)
+            .into_iter()
+            .map(|rsn| self.energy.retrain_joules(rsn, epochs))
+            .collect();
+        let mut reserve_j = 0.0;
+        let mut take = 0;
+        for &c in &costs {
+            if b.can_cover(reserve_j + c) {
+                reserve_j += c;
+                take += 1;
+            } else {
+                break;
+            }
+        }
+        if take == plan.lineages.len() {
+            Admission::Granted { reserve_j }
+        } else if take == 0 {
+            Admission::Starved { probe_j: costs.first().copied().unwrap_or(0.0) }
+        } else {
+            let deferred = plan.lineages.split_off(take);
+            Admission::Split {
+                defer: BatchPlan { lineages: deferred, requests: 0 },
+                reserve_j,
+            }
+        }
+    }
+
+    /// Plan (merging any carried-over poison), admit against the battery,
+    /// execute, and account one batch window. Unaffordable lineages — or
+    /// the whole plan, on an engine error — are stashed for a later
+    /// window with the energy reservation released; the requests are NOT
+    /// re-queued, since re-collecting them would remove additional,
+    /// never-requested samples. Returns the number of requests served.
+    fn execute_window(&mut self, window: Vec<UnlearnRequest>) -> Result<usize> {
+        let mut metas: Vec<ReqMeta> = Vec::with_capacity(window.len());
+        if let Some((_, prev_metas)) = &self.carryover {
+            // Carried-over requests arrived first; receipts keep order.
+            metas.extend(prev_metas.iter().copied());
+        }
+        metas.extend(window.iter().map(|r| ReqMeta {
+            user: r.user.0,
+            round: r.round,
+            arrival_tick: r.arrival_tick,
+        }));
+        let mut plan = self.planner.plan(&mut self.engine, &window);
+        if let Some((prev_plan, _)) = self.carryover.take() {
+            plan.merge(prev_plan);
+        }
+
+        let admission = self.admit(&mut plan);
+        let (reserve_j, defer) = match admission {
+            Admission::Granted { reserve_j } => (reserve_j, None),
+            Admission::Split { defer, reserve_j } => (reserve_j, Some(defer)),
+            Admission::Starved { probe_j } => {
                 if !self.head_deferral_logged {
                     self.head_deferral_logged = true;
-                    // Record the episode's brownout (the refused draw),
-                    // matching drain()'s per-episode accounting.
+                    // Record the episode's brownout (the refused draw).
                     if let Some(b) = &mut self.battery {
-                        let _ = b.draw(head_hint);
+                        let _ = b.draw(probe_j);
                     }
                     self.batch_log.push(BatchReport {
                         requests: 0,
                         rsn: 0,
                         lineages_retrained: 0,
                         retrains_coalesced: 0,
+                        oldest_queued_ticks: 0,
                         est_seconds: 0.0,
-                        est_joules: head_hint,
+                        est_joules: probe_j,
                         deferred: true,
                     });
                 }
-                break;
+                self.carryover = Some((plan, metas));
+                return Ok(0);
             }
-            if let Some(b) = &mut self.battery {
-                let drawn = b.draw(hint_j);
-                debug_assert!(drawn, "window was sized to the affordable prefix");
-            }
+        };
 
-            let window: Vec<UnlearnRequest> = self.queue.drain(..w).collect();
-            served += self.execute_window(window, hint_j)?;
+        if let Some(b) = &mut self.battery {
+            let drawn = b.draw(reserve_j);
+            debug_assert!(drawn, "admission sized the reservation to the charge");
         }
-        Ok(served)
-    }
 
-    /// Plan (merging any carried-over poison), execute, and account one
-    /// batch window. On engine error the merged plan — samples already
-    /// removed, request counts included — is stashed for a later window
-    /// and the energy reservation is released; the requests are NOT
-    /// re-queued, since re-collecting them would remove additional,
-    /// never-requested samples. Returns the number of requests served.
-    fn execute_window(&mut self, window: Vec<UnlearnRequest>, hint_j: f64) -> Result<usize> {
-        let mut plan = self.planner.plan(&mut self.engine, &window);
-        if let Some(prev) = self.carryover.take() {
-            plan.merge(prev);
-        }
         let coalesced = plan.coalesced_retrains();
         let window_requests = plan.requests;
+        debug_assert_eq!(window_requests, metas.len(), "one meta per merged request");
         let outcome = match self.engine.execute_plan(&plan) {
             Ok(outcome) => outcome,
             Err(e) => {
                 if let Some(b) = &mut self.battery {
-                    b.refund(hint_j);
+                    b.refund(reserve_j);
                 }
-                self.carryover = Some(plan);
+                // Re-join the deferred share so nothing is stranded.
+                if let Some(d) = defer {
+                    plan.merge(d);
+                }
+                self.carryover = Some((plan, metas));
                 return Err(e);
             }
         };
+        // The executed share serves (and accounts) the window's requests;
+        // any battery-deferred lineage share replays later via carryover.
+        if let Some(d) = defer {
+            self.carryover = Some((d, Vec::new()));
+        }
         self.engine.metrics.record_requests(window_requests as u64, outcome.rsn);
         self.engine.metrics.batches += 1;
         self.engine.metrics.batched_requests += window_requests as u64;
         self.engine.metrics.retrains_coalesced += coalesced;
+
+        let slo = self.planner.policy.slo();
+        let mut oldest_queued = 0u64;
+        for m in &metas {
+            let queued_ticks = self.now_tick.saturating_sub(m.arrival_tick);
+            oldest_queued = oldest_queued.max(queued_ticks);
+            self.engine.metrics.record_latency(LatencyReceipt {
+                user: m.user,
+                round: m.round,
+                queued_ticks,
+                slo_met: slo.map_or(true, |s| queued_ticks <= s),
+            });
+        }
 
         let est_seconds = self
             .engine
@@ -330,32 +503,21 @@ impl UnlearningService {
         let est_joules = self
             .energy
             .retrain_joules(outcome.rsn, self.engine.cfg.epochs_per_round);
-        self.settle_energy(est_joules, hint_j);
+        if let Some(b) = &mut self.battery {
+            b.settle(est_joules, reserve_j);
+        }
         self.batch_log.push(BatchReport {
             requests: window_requests,
             rsn: outcome.rsn,
             lineages_retrained: outcome.lineages_retrained,
             retrains_coalesced: coalesced,
+            oldest_queued_ticks: oldest_queued,
             est_seconds,
             est_joules,
             deferred: false,
         });
         self.head_deferral_logged = false;
         Ok(window_requests)
-    }
-
-    /// Settle the battery against the actual retrain cost: deduct the
-    /// overrun beyond the reservation (the work already ran — no gating,
-    /// no brownout), or refund the over-reserved part.
-    fn settle_energy(&mut self, actual_joules: f64, reserved_joules: f64) {
-        if let Some(b) = &mut self.battery {
-            let delta = actual_joules - reserved_joules;
-            if delta > 0.0 {
-                b.deduct(delta);
-            } else {
-                b.refund(-delta);
-            }
-        }
     }
 
     /// Advance harvest time (satellite mode).
@@ -413,6 +575,10 @@ mod tests {
         assert_eq!(svc.pending(), 0);
         assert_eq!(svc.log.iter().filter(|r| !r.deferred).count(), submitted);
         assert!(svc.engine().metrics.total_rsn() > 0);
+        // Every served request left a latency receipt; same-tick service
+        // means zero queueing delay under this driver.
+        assert_eq!(svc.engine().metrics.latency.len(), submitted);
+        assert_eq!(svc.engine().metrics.slo_violations(), 0);
     }
 
     #[test]
@@ -436,6 +602,61 @@ mod tests {
         assert!(m.batches >= 1 && m.batches <= 4, "batches {}", m.batches);
         let batch_requests: usize = svc.batch_log.iter().map(|b| b.requests).sum();
         assert_eq!(batch_requests, submitted);
+        assert_eq!(m.latency.len(), submitted);
+    }
+
+    #[test]
+    fn deadline_holds_then_closes_at_slo() {
+        let (mut svc, pop, trace) = setup();
+        svc = svc.with_planner(BatchPlanner::new(
+            BatchPolicy::Deadline { slo_ticks: 2 },
+            0,
+        ));
+        svc.ingest_round(&pop).unwrap();
+        svc.ingest_round(&pop).unwrap();
+        let mut submitted = 0;
+        for req in trace.at(1).iter().chain(trace.at(2)) {
+            svc.submit(req.clone());
+            submitted += 1;
+        }
+        assert!(submitted >= 2, "trace produced too few requests");
+        // Age 0 and 1: the planner holds the whole queue.
+        assert_eq!(svc.drain_batched().unwrap(), 0);
+        svc.advance(1);
+        assert_eq!(svc.drain_batched().unwrap(), 0);
+        assert_eq!(svc.pending(), submitted);
+        // Age 2 == SLO: the window closes over everything queued.
+        svc.advance(1);
+        assert_eq!(svc.drain_batched().unwrap(), submitted);
+        assert_eq!(svc.pending(), 0);
+        let m = &svc.engine().metrics;
+        assert_eq!(m.batches, 1, "one coalesced window at the deadline");
+        assert_eq!(m.latency.len(), submitted);
+        assert!(m.latency.iter().all(|r| r.queued_ticks == 2 && r.slo_met));
+    }
+
+    #[test]
+    fn flush_serves_infinite_slo_queue() {
+        let (mut svc, pop, trace) = setup();
+        svc = svc.with_planner(BatchPlanner::new(
+            BatchPolicy::Deadline { slo_ticks: u64::MAX },
+            0,
+        ));
+        let mut submitted = 0;
+        for t in 1..=4 {
+            svc.ingest_round(&pop).unwrap();
+            for req in trace.at(t) {
+                svc.submit(req.clone());
+                submitted += 1;
+            }
+            assert_eq!(svc.drain_batched().unwrap(), 0, "infinite SLO never closes");
+        }
+        assert_eq!(svc.pending(), submitted);
+        // Flush: the whole queue coalesces into one window (the Coalesce
+        // degenerate point).
+        assert_eq!(svc.flush_batched().unwrap(), submitted);
+        assert_eq!(svc.pending(), 0);
+        assert_eq!(svc.engine().metrics.batches, 1);
     }
 
     #[test]
@@ -513,6 +734,8 @@ mod tests {
             .unwrap())
             .with_battery(battery)
             .with_planner(BatchPlanner::new(BatchPolicy::Coalesce, 0));
+        // Two rounds ingested so every submitted request poisons live data.
+        svc.ingest_round(&pop).unwrap();
         svc.ingest_round(&pop).unwrap();
         let mut submitted = 0;
         for req in trace.at(1).iter().chain(trace.at(2)).take(4) {
@@ -523,11 +746,19 @@ mod tests {
         for _ in 0..4 {
             svc.drain_batched().unwrap();
         }
-        assert_eq!(svc.pending(), submitted, "all requests should defer");
+        // Merged-cost admission: the plan is collected (samples removed,
+        // queue empty) but parked unfunded — requests are not yet served.
+        assert_eq!(svc.pending(), 0);
+        assert_eq!(svc.carryover_requests(), submitted);
+        assert_eq!(svc.engine().metrics.total_requests(), 0);
         assert_eq!(svc.batch_log.iter().filter(|b| b.deferred).count(), 1);
         svc.harvest(1e7);
         svc.drain_batched().unwrap();
-        assert_eq!(svc.pending(), 0);
+        assert_eq!(svc.carryover_requests(), 0);
+        assert_eq!(svc.engine().metrics.total_requests(), submitted as u64);
+        let served: usize =
+            svc.batch_log.iter().filter(|b| !b.deferred).map(|b| b.requests).sum();
+        assert_eq!(served, submitted);
         // Battery never exceeds capacity after refunds.
         let b = svc.battery().unwrap();
         assert!(b.charge_j <= b.capacity_j);

@@ -10,6 +10,7 @@ pub struct Summary {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 impl Summary {
@@ -34,6 +35,7 @@ impl Summary {
             max: sorted[n - 1],
             p50: pct(0.50),
             p95: pct(0.95),
+            p99: pct(0.99),
         }
     }
 }
@@ -42,8 +44,8 @@ impl std::fmt::Display for Summary {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "n={} mean={:.6} std={:.6} min={:.6} p50={:.6} p95={:.6} max={:.6}",
-            self.n, self.mean, self.std, self.min, self.p50, self.p95, self.max
+            "n={} mean={:.6} std={:.6} min={:.6} p50={:.6} p95={:.6} p99={:.6} max={:.6}",
+            self.n, self.mean, self.std, self.min, self.p50, self.p95, self.p99, self.max
         )
     }
 }
@@ -73,7 +75,10 @@ mod tests {
         let xs: Vec<f64> = (0..100).map(|i| i as f64).collect();
         let s = Summary::of(&xs);
         assert!(s.p50 <= s.p95);
+        assert!(s.p95 <= s.p99);
+        assert!(s.p99 <= s.max);
         assert!((s.p50 - 50.0).abs() <= 1.0);
         assert!((s.p95 - 94.0).abs() <= 1.5);
+        assert!((s.p99 - 98.0).abs() <= 1.5);
     }
 }

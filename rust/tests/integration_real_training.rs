@@ -128,6 +128,7 @@ fn warm_start_resumes_from_checkpoint_params() {
     let req = cause::data::trace::UnlearnRequest {
         round: 2,
         user: block.user,
+        arrival_tick: 2,
         parts: vec![(block.id, 1.max(block.samples / 3))],
     };
     let out = engine.process_request(&req).unwrap();
