@@ -1,0 +1,283 @@
+//! bench_scale — planner-throughput macro-bench.
+//!
+//! CAUSE's planner (plan → price → execute) is on the hot path once
+//! batching coalesces requests: every deadline window is priced by the
+//! chain resolver once per admission retry. This bench grows a large
+//! state (hundreds of rounds, eviction-heavy store, bursty coalesced
+//! windows) and measures:
+//!
+//! 1. **Probe microsection** — `Engine::plan_lineage_rsn` (index-backed:
+//!    store coverage index + lineage prefix sums, allocation-free) against
+//!    the compiled-in naive-scan oracle `Engine::resolve_plan_naive`
+//!    (O(slots) store scans + materialized replay vectors — the pre-index
+//!    planner). Asserts byte-identical pricing and a ≥ 5x speedup.
+//! 2. **End-to-end requests/sec** — the full plan→price→execute loop over
+//!    the bursty workload, priced indexed vs naive (PRICINGS_PER_WINDOW
+//!    models the admission retries a held deadline window pays). Asserts
+//!    identical execution receipts and an indexed throughput gain.
+//!
+//! Writes `BENCH_scale.json`; `gate.probe_speedup` (a same-machine ratio,
+//! so it is stable across runner hardware unlike absolute wall-clock) is
+//! checked by `bench_gate` against the committed `BENCH_baseline.json`.
+
+use std::time::Instant;
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::coordinator::Engine;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::unlearning::BatchPlan;
+use cause::util::bench::{black_box, Bench};
+use cause::util::Json;
+
+/// Admission retries a held window is priced through (deadline policies
+/// re-price on every drain poll while the window holds; battery splits add
+/// more). Applied to both pricing paths in the end-to-end drive.
+const PRICINGS_PER_WINDOW: usize = 8;
+
+fn fast() -> bool {
+    std::env::var("CAUSE_BENCH_FAST").is_ok()
+}
+
+/// Hundreds of rounds, 8 lineages, a store small enough to evict
+/// constantly, and a request trace heavy enough that every round's window
+/// coalesces several requests. `age_decay` is turned up so requests keep
+/// reaching old time slots: under an evicting store the checkpoint below
+/// an old poisoned segment is usually gone, so chains replay long segment
+/// ranges — the regime where scan-based pricing materializes thousands of
+/// placements per probe and the indices matter.
+fn workload() -> (ExperimentConfig, EdgePopulation, RequestTrace) {
+    let rounds: u32 = if fast() { 120 } else { 240 };
+    let cfg = ExperimentConfig {
+        users: 160,
+        rounds,
+        shards: 8,
+        unlearn_prob: 0.5,
+        ..Default::default()
+    }
+    .with_memory_gb(1.0); // ~30 slots for 8 lineages x `rounds` checkpoints
+    let pop = EdgePopulation::generate(PopulationConfig {
+        // Large sample pool so repeatedly-hit blocks never fully deplete
+        // (depleted blocks would thin the late-round bursts out).
+        spec: cfg.dataset.scaled(400_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.7,
+        seed: 0x5ca1e,
+    });
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig {
+            unlearn_prob: cfg.unlearn_prob,
+            block_incl_prob: 0.9,
+            age_decay: 0.9,
+            frac_range: (0.1, 0.5),
+            seed: 0x5ca1e ^ 0x7ace,
+        },
+    );
+    (cfg, pop, trace)
+}
+
+/// Evolve an engine through the whole trace, serving requests FCFS up to
+/// `rounds - holdout`, then merge the held-out bursts into coalesced
+/// window plans. Collection removes their samples, so pricing the
+/// returned plans afterwards is read-only and repeatable.
+fn build_probe_state(
+    cfg: &ExperimentConfig,
+    pop: &EdgePopulation,
+    trace: &RequestTrace,
+    holdout: u32,
+) -> (Engine, Vec<BatchPlan>) {
+    let mut engine = SystemVariant::Cause.build_cost(cfg).unwrap();
+    let serve_through = cfg.rounds - holdout;
+    for t in 1..=cfg.rounds {
+        engine.run_round(pop).unwrap();
+        if t <= serve_through {
+            for req in trace.at(t) {
+                engine.process_request(req).unwrap();
+            }
+        }
+    }
+    let held: Vec<_> = (serve_through + 1..=cfg.rounds)
+        .flat_map(|t| trace.at(t).iter().cloned())
+        .collect();
+    let plans: Vec<BatchPlan> = held
+        .chunks(16)
+        .map(|w| BatchPlan::collect(&mut engine, w))
+        .filter(|p| !p.is_empty())
+        .collect();
+    (engine, plans)
+}
+
+/// The bursty coalesced-window service loop: per round, merge the round's
+/// burst into one plan, price it PRICINGS_PER_WINDOW times (indexed or
+/// naive), execute. Returns (secs, requests served, total RSN).
+fn e2e_drive(
+    cfg: &ExperimentConfig,
+    pop: &EdgePopulation,
+    trace: &RequestTrace,
+    naive_pricing: bool,
+) -> (f64, u64, u64) {
+    let mut engine = SystemVariant::Cause.build_cost(cfg).unwrap();
+    let t0 = Instant::now();
+    for t in 1..=cfg.rounds {
+        engine.run_round(pop).unwrap();
+        let reqs = trace.at(t);
+        if reqs.is_empty() {
+            continue;
+        }
+        let plan = BatchPlan::collect(&mut engine, reqs);
+        for _ in 0..PRICINGS_PER_WINDOW {
+            let priced: u64 = if naive_pricing {
+                engine.resolve_plan_naive(&plan).lineage_rsn.iter().sum()
+            } else {
+                engine.plan_lineage_rsn(&plan).iter().sum()
+            };
+            black_box(priced);
+        }
+        let outcome = engine.execute_plan(&plan).unwrap();
+        engine.metrics.record_requests(reqs.len() as u64, outcome.rsn);
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    (secs, engine.metrics.total_requests(), engine.metrics.total_rsn())
+}
+
+fn main() {
+    let mut b = Bench::new("planner-scale");
+    let (cfg, pop, trace) = workload();
+
+    // --- Probe microsection: indexed vs the naive-scan oracle ----------
+    let holdout = cfg.rounds / 6;
+    let (engine, plans) = build_probe_state(&cfg, &pop, &trace, holdout);
+    assert!(plans.len() >= 4, "workload produced too few probe windows");
+    let probes_per_pass = plans.len();
+
+    // Differential check first (outside the timed loops): the indexed
+    // probe must price every window exactly like the scan-based planner.
+    for plan in &plans {
+        let indexed = engine.plan_lineage_rsn(plan);
+        let naive = engine.resolve_plan_naive(plan);
+        assert_eq!(indexed, naive.lineage_rsn, "indexed probe diverged from scan oracle");
+    }
+
+    let idx_reps = if fast() { 30 } else { 300 };
+    let naive_reps = if fast() { 3 } else { 15 };
+    let mut checksum = 0u64;
+    let mut idx_samples = Vec::with_capacity(idx_reps);
+    for _ in 0..idx_reps {
+        let t0 = Instant::now();
+        let mut sum = 0u64;
+        for plan in &plans {
+            sum += engine.plan_lineage_rsn(plan).iter().sum::<u64>();
+        }
+        idx_samples.push(t0.elapsed().as_secs_f64());
+        checksum = checksum.wrapping_add(black_box(sum));
+    }
+    let mut naive_samples = Vec::with_capacity(naive_reps);
+    for _ in 0..naive_reps {
+        let t0 = Instant::now();
+        let mut sum = 0u64;
+        for plan in &plans {
+            sum += engine.resolve_plan_naive(plan).lineage_rsn.iter().sum::<u64>();
+        }
+        naive_samples.push(t0.elapsed().as_secs_f64());
+        checksum = checksum.wrapping_add(black_box(sum));
+    }
+    black_box(checksum);
+    b.record("probe_pass_indexed", &idx_samples);
+    b.record("probe_pass_naive", &naive_samples);
+
+    // Best-of-reps: the min pass is the least scheduler-noise-polluted
+    // measurement on both sides, keeping the gated ratio stable.
+    let idx_best = idx_samples.iter().fold(f64::INFINITY, |acc, &s| acc.min(s));
+    let naive_best = naive_samples.iter().fold(f64::INFINITY, |acc, &s| acc.min(s));
+    let idx_probe_secs = idx_best / probes_per_pass as f64;
+    let naive_probe_secs = naive_best / probes_per_pass as f64;
+    let speedup = naive_probe_secs / idx_probe_secs;
+    println!(
+        "plan-probe: indexed {:.0} ns vs naive {:.0} ns per merged-window probe \
+         ({speedup:.1}x over {probes_per_pass} windows)",
+        idx_probe_secs * 1e9,
+        naive_probe_secs * 1e9,
+    );
+
+    // --- End-to-end: bursty coalesced windows, priced both ways --------
+    // Best-of-2 interleaved drives per side: the min is the least
+    // noise-polluted run, so the throughput comparison below is robust on
+    // shared CI runners (a single unrepeated wall-clock sample is not).
+    let (idx_secs_a, idx_requests, idx_rsn) = e2e_drive(&cfg, &pop, &trace, false);
+    let (naive_secs_a, naive_requests, naive_rsn) = e2e_drive(&cfg, &pop, &trace, true);
+    let (idx_secs_b, _, idx_rsn_b) = e2e_drive(&cfg, &pop, &trace, false);
+    let (naive_secs_b, _, naive_rsn_b) = e2e_drive(&cfg, &pop, &trace, true);
+    assert_eq!(idx_requests, naive_requests, "both drives serve the same trace");
+    assert_eq!(idx_rsn, naive_rsn, "pricing path must not change execution receipts");
+    assert_eq!(idx_rsn, idx_rsn_b, "drives are deterministic");
+    assert_eq!(naive_rsn, naive_rsn_b, "drives are deterministic");
+    let idx_secs = idx_secs_a.min(idx_secs_b);
+    let naive_secs = naive_secs_a.min(naive_secs_b);
+    b.record("e2e_indexed", &[idx_secs_a, idx_secs_b]);
+    b.record("e2e_naive_pricing", &[naive_secs_a, naive_secs_b]);
+    let idx_rps = idx_requests as f64 / idx_secs;
+    let naive_rps = naive_requests as f64 / naive_secs;
+    println!(
+        "end-to-end ({idx_requests} requests, {} windows/round pricing x{PRICINGS_PER_WINDOW}): \
+         indexed {idx_rps:.0} req/s vs naive-priced {naive_rps:.0} req/s ({:.2}x)",
+        cfg.rounds,
+        idx_rps / naive_rps,
+    );
+
+    b.report();
+
+    // Machine-readable summary. `gate.probe_speedup` is a same-machine
+    // ratio (indexed vs naive on identical state), so the regression gate
+    // stays stable across runner hardware; absolute ns and req/s are
+    // informational only.
+    let summary = Json::obj()
+        .set("bench", "scale")
+        .set(
+            "workload",
+            Json::obj()
+                .set("rounds", cfg.rounds as u64)
+                .set("users", cfg.users)
+                .set("shards", cfg.shards)
+                .set("store_slots", engine.store().capacity())
+                .set("probe_windows", probes_per_pass),
+        )
+        .set(
+            "probe",
+            Json::obj()
+                .set("indexed_ns", idx_probe_secs * 1e9)
+                .set("naive_ns", naive_probe_secs * 1e9)
+                .set("speedup", speedup),
+        )
+        .set(
+            "e2e",
+            Json::obj()
+                .set("requests", idx_requests)
+                .set("indexed_rps", idx_rps)
+                .set("naive_rps", naive_rps)
+                .set("gain", idx_rps / naive_rps)
+                .set("pricings_per_window", PRICINGS_PER_WINDOW),
+        )
+        .set("gate", Json::obj().set("probe_speedup", speedup));
+    let out_path = std::env::var("CAUSE_BENCH_SCALE_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_scale.json").to_string()
+    });
+    std::fs::write(&out_path, summary.to_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("\nwrote {out_path}");
+
+    // Acceptance gates (after the report/JSON so failures are diagnosable).
+    assert!(
+        speedup >= 5.0,
+        "indexed probe must beat the naive scan oracle by >=5x, got {speedup:.2}x"
+    );
+    assert!(
+        idx_rps > naive_rps,
+        "indexed pricing must raise end-to-end throughput \
+         ({idx_rps:.0} vs {naive_rps:.0} req/s)"
+    );
+}

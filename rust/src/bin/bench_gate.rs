@@ -1,23 +1,29 @@
 //! `bench_gate` — CI bench-regression gate.
 //!
-//! Compares the machine-readable summary `bench_coordinator` wrote
-//! (`BENCH_coordinator.json`) against the committed `BENCH_baseline.json`
-//! and fails (exit 1) when the scheduler regresses:
+//! Compares the machine-readable summaries the benches wrote against the
+//! committed `BENCH_baseline.json` and fails (exit 1) when the scheduler
+//! or the planner regresses:
 //!
-//! * `gate.retrains_coalesced` drops below the baseline (the coalescing
-//!   win shrank), or
+//! * `gate.retrains_coalesced` (from `BENCH_coordinator.json`) drops below
+//!   the baseline (the coalescing win shrank), or
 //! * `gate.p99_queue_delay` grows more than 20% over the baseline (the
-//!   latency SLO frontier moved the wrong way).
+//!   latency SLO frontier moved the wrong way), or
+//! * `gate.probe_speedup` (from `BENCH_scale.json`, when given) drops more
+//!   than 20% below `scale.probe_speedup` in the baseline (the indexed
+//!   planner lost throughput against the compiled-in naive-scan oracle).
 //!
-//! Both values are deterministic workload counters (never wall-clock), so
-//! the gate is stable across runner hardware.
+//! The coordinator values are deterministic workload counters and the
+//! scale value is a same-machine ratio (indexed vs naive on identical
+//! state) — never absolute wall-clock — so the gate is stable across
+//! runner hardware.
 //!
 //! A baseline with `"bootstrap": true` passes unconditionally and prints
 //! the block to commit as the pinned baseline — used to seed the gate on a
 //! branch whose workload changed intentionally.
 //!
 //! ```bash
-//! cargo run --release --bin bench_gate -- BENCH_baseline.json BENCH_coordinator.json
+//! cargo run --release --bin bench_gate -- \
+//!     BENCH_baseline.json BENCH_coordinator.json [BENCH_scale.json]
 //! ```
 
 use std::process::ExitCode;
@@ -26,6 +32,10 @@ use cause::util::Json;
 
 /// Allowed relative growth of p99 queueing delay before the gate fails.
 const P99_TOLERANCE: f64 = 0.20;
+
+/// Allowed relative drop of the planner probe speedup before the gate
+/// fails.
+const SPEEDUP_TOLERANCE: f64 = 0.20;
 
 fn load(path: &str) -> Result<Json, String> {
     let text =
@@ -39,25 +49,35 @@ fn gate_value(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
         .ok_or_else(|| format!("{path}: missing numeric field gate.{key}"))
 }
 
-fn run(baseline_path: &str, current_path: &str) -> Result<(), String> {
+fn run(
+    baseline_path: &str,
+    current_path: &str,
+    scale_path: Option<&str>,
+) -> Result<(), String> {
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
 
     let cur_coalesced = gate_value(&current, current_path, "retrains_coalesced")?;
     let cur_p99 = gate_value(&current, current_path, "p99_queue_delay")?;
+    let cur_speedup = match scale_path {
+        Some(p) => Some(gate_value(&load(p)?, p, "probe_speedup")?),
+        None => None,
+    };
 
     if baseline.get("bootstrap").and_then(Json::as_bool) == Some(true) {
+        let mut pin = Json::obj().set(
+            "gate",
+            Json::obj()
+                .set("retrains_coalesced", cur_coalesced)
+                .set("p99_queue_delay", cur_p99),
+        );
+        if let Some(s) = cur_speedup {
+            pin = pin.set("scale", Json::obj().set("probe_speedup", s));
+        }
         println!(
             "bench_gate: baseline {baseline_path} is in bootstrap mode — \
              pin it by committing:\n{}",
-            Json::obj()
-                .set(
-                    "gate",
-                    Json::obj()
-                        .set("retrains_coalesced", cur_coalesced)
-                        .set("p99_queue_delay", cur_p99),
-                )
-                .to_pretty()
+            pin.to_pretty()
         );
         return Ok(());
     }
@@ -84,6 +104,34 @@ fn run(baseline_path: &str, current_path: &str) -> Result<(), String> {
             P99_TOLERANCE * 100.0
         ));
     }
+
+    if let Some(cur_speedup) = cur_speedup {
+        match baseline.at(&["scale", "probe_speedup"]).and_then(Json::as_f64) {
+            Some(base_speedup) => {
+                println!(
+                    "bench_gate: probe_speedup {base_speedup:.2} -> {cur_speedup:.2}"
+                );
+                let floor = base_speedup * (1.0 - SPEEDUP_TOLERANCE);
+                if cur_speedup < floor - 1e-9 {
+                    failures.push(format!(
+                        "planner probe speedup dropped >{:.0}%: {cur_speedup:.2} < \
+                         {floor:.2} (baseline {base_speedup:.2})",
+                        SPEEDUP_TOLERANCE * 100.0
+                    ));
+                }
+            }
+            None => {
+                println!(
+                    "bench_gate: {baseline_path} has no scale.probe_speedup — pin it \
+                     by committing:\n{}",
+                    Json::obj()
+                        .set("scale", Json::obj().set("probe_speedup", cur_speedup))
+                        .to_pretty()
+                );
+            }
+        }
+    }
+
     if failures.is_empty() {
         println!("bench_gate: OK");
         Ok(())
@@ -94,14 +142,18 @@ fn run(baseline_path: &str, current_path: &str) -> Result<(), String> {
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (baseline, current) = match args.as_slice() {
-        [b, c] => (b.as_str(), c.as_str()),
+    let (baseline, current, scale) = match args.as_slice() {
+        [b, c] => (b.as_str(), c.as_str(), None),
+        [b, c, s] => (b.as_str(), c.as_str(), Some(s.as_str())),
         _ => {
-            eprintln!("usage: bench_gate <BENCH_baseline.json> <BENCH_coordinator.json>");
+            eprintln!(
+                "usage: bench_gate <BENCH_baseline.json> <BENCH_coordinator.json> \
+                 [<BENCH_scale.json>]"
+            );
             return ExitCode::FAILURE;
         }
     };
-    match run(baseline, current) {
+    match run(baseline, current, scale) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("bench_gate: FAIL: {e}");
@@ -133,16 +185,29 @@ mod tests {
             .to_pretty()
     }
 
+    fn doc_with_scale(coalesced: f64, p99: f64, speedup: f64) -> String {
+        Json::parse(&doc(coalesced, p99))
+            .unwrap()
+            .set("scale", Json::obj().set("probe_speedup", speedup))
+            .to_pretty()
+    }
+
+    fn scale_doc(speedup: f64) -> String {
+        Json::obj()
+            .set("gate", Json::obj().set("probe_speedup", speedup))
+            .to_pretty()
+    }
+
     #[test]
     fn passes_on_equal_and_improved() {
         let base = write_tmp("base.json", &doc(40.0, 4.0));
         let same = write_tmp("same.json", &doc(40.0, 4.0));
         let better = write_tmp("better.json", &doc(55.0, 3.0));
-        assert!(run(&base, &same).is_ok());
-        assert!(run(&base, &better).is_ok());
+        assert!(run(&base, &same, None).is_ok());
+        assert!(run(&base, &better, None).is_ok());
         // Within the 20% latency tolerance.
         let near = write_tmp("near.json", &doc(40.0, 4.8));
-        assert!(run(&base, &near).is_ok());
+        assert!(run(&base, &near, None).is_ok());
     }
 
     #[test]
@@ -150,11 +215,31 @@ mod tests {
         let base = write_tmp("base2.json", &doc(40.0, 4.0));
         let fewer = write_tmp("fewer.json", &doc(39.0, 4.0));
         let slower = write_tmp("slower.json", &doc(40.0, 4.81));
-        assert!(run(&base, &fewer).is_err());
-        assert!(run(&base, &slower).is_err());
-        assert!(run("/nonexistent.json", &base).is_err());
+        assert!(run(&base, &fewer, None).is_err());
+        assert!(run(&base, &slower, None).is_err());
+        assert!(run("/nonexistent.json", &base, None).is_err());
         let junk = write_tmp("junk.json", "not json");
-        assert!(run(&junk, &base).is_err());
+        assert!(run(&junk, &base, None).is_err());
+    }
+
+    #[test]
+    fn scale_gate_checks_probe_speedup() {
+        let base = write_tmp("base3.json", &doc_with_scale(40.0, 4.0, 10.0));
+        let cur = write_tmp("cur3.json", &doc(40.0, 4.0));
+        // Within tolerance (20% of 10.0 → floor 8.0) and above.
+        let ok = write_tmp("scale_ok.json", &scale_doc(8.5));
+        let better = write_tmp("scale_better.json", &scale_doc(30.0));
+        assert!(run(&base, &cur, Some(&ok)).is_ok());
+        assert!(run(&base, &cur, Some(&better)).is_ok());
+        // Below the floor: fail.
+        let bad = write_tmp("scale_bad.json", &scale_doc(7.9));
+        assert!(run(&base, &cur, Some(&bad)).is_err());
+        // Malformed scale summary: fail even though coordinator gates pass.
+        let junk = write_tmp("scale_junk.json", "{}");
+        assert!(run(&base, &cur, Some(&junk)).is_err());
+        // Baseline without a pinned scale value: informational pass.
+        let base_unpinned = write_tmp("base4.json", &doc(40.0, 4.0));
+        assert!(run(&base_unpinned, &cur, Some(&ok)).is_ok());
     }
 
     #[test]
@@ -164,9 +249,12 @@ mod tests {
             &Json::obj().set("bootstrap", true).to_pretty(),
         );
         let cur = write_tmp("cur.json", &doc(12.0, 2.0));
-        assert!(run(&boot, &cur).is_ok());
-        // Bootstrap still requires a well-formed current summary.
+        assert!(run(&boot, &cur, None).is_ok());
+        // Bootstrap still requires well-formed current summaries.
         let junk = write_tmp("junk2.json", "{}");
-        assert!(run(&boot, &junk).is_err());
+        assert!(run(&boot, &junk, None).is_err());
+        let scale = write_tmp("boot_scale.json", &scale_doc(12.5));
+        assert!(run(&boot, &cur, Some(&scale)).is_ok());
+        assert!(run(&boot, &cur, Some(&junk)).is_err());
     }
 }

@@ -19,8 +19,21 @@
 //!      checkpoint that predates the poison (line 8) — or from scratch —
 //!      and the retrained model is stored again via the policy (line 12);
 //!   5. RSN += samples replayed — the paper's headline metric.
+//!
+//! ## Planner complexity
+//!
+//! The plan→price→execute hot path runs on incremental indices: pricing a
+//! lineage's chain ([`Engine::plan_lineage_rsn`], the battery-admission
+//! probe the service calls once per window per admission retry) costs
+//! O(steps × log) — store lookups through the coverage index, replay
+//! sizes through the lineage prefix sums — and allocates nothing. Replay
+//! *sets* are materialized only when a plan actually executes.
+//! [`Engine::resolve_plan_naive`] keeps the original scan-based resolution
+//! alive as a differential oracle; the equivalence tests and `bench_scale`
+//! assert both paths produce byte-identical receipts.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Arc;
 
 use anyhow::Result;
 
@@ -91,7 +104,8 @@ struct ResolvedStep {
     warm_cover: u32,
     /// Checkpoint parameters to warm-start from; `None` when chained onto
     /// the previous step's in-memory model or when starting from scratch.
-    warm_params: Option<Vec<HostTensor>>,
+    /// A refcount clone of the stored checkpoint — never a tensor copy.
+    warm_params: Option<Arc<[HostTensor]>>,
     /// Continue from the previous step's retrained model — it already
     /// covers more than any stored checkpoint below the poisoned segment,
     /// so no trainer reset is needed.
@@ -122,9 +136,26 @@ struct ResolvedChain {
 /// accounting). When the refreshed checkpoint would have been rejected by
 /// a full no-replacement store, chaining onto the in-memory model replays
 /// strictly fewer samples with the same guarantee.
+///
+/// [`ChainResolver::rsn`] prices a chain without materializing anything:
+/// warm covers come from the store's coverage index, replay sizes from the
+/// lineage prefix sums — O(log) per step, zero allocation.
 pub(crate) struct ChainResolver<'a> {
     store: &'a ModelStore,
     lineages: &'a LineageSet,
+}
+
+/// The warm-start decision of Alg. 3 line 8 for one step: newest stored
+/// coverage below the poison, unless the previous step's in-memory model
+/// is newer (chained), or nothing usable exists (scratch).
+/// Returns (warm_cover, use_stored, chained, scratch).
+fn warm_choice(best: Option<u32>, prev_clean: Option<u32>) -> (u32, bool, bool, bool) {
+    match (best, prev_clean) {
+        (Some(cov), Some(prev)) if cov > prev => (cov, true, false, false),
+        (_, Some(prev)) => (prev, false, true, false),
+        (Some(cov), None) => (cov, true, false, false),
+        (None, None) => (0, false, false, true),
+    }
 }
 
 impl<'a> ChainResolver<'a> {
@@ -132,23 +163,20 @@ impl<'a> ChainResolver<'a> {
         Self { store, lineages }
     }
 
-    /// Resolve one lineage's chain. `with_params` clones the warm-start
-    /// checkpoint parameters for execution; cost probes skip the clone.
-    fn resolve(&self, lp: &LineagePlan, with_params: bool) -> ResolvedChain {
+    /// Resolve one lineage's chain for execution: materializes the replay
+    /// sets and clones the warm-start parameter *refcounts*.
+    fn resolve(&self, lp: &LineagePlan) -> ResolvedChain {
         let mut steps = Vec::with_capacity(lp.segments.len());
         let mut prev_clean: Option<u32> = None;
         for &q in &lp.segments {
             let clean_cover = q as u32 + 1;
-            let best = self.store.best_checkpoint(lp.lineage, q as u32).map(|c| {
-                (c.covered_segments, if with_params { c.params.clone() } else { None })
-            });
-            let (warm_cover, warm_params, chained, scratch) = match (best, prev_clean) {
-                (Some((cov, params)), Some(prev)) if cov > prev => {
-                    (cov, params, false, false)
-                }
-                (_, Some(prev)) => (prev, None, true, false),
-                (Some((cov, params)), None) => (cov, params, false, false),
-                (None, None) => (0, None, false, true),
+            let best = self.store.best_checkpoint(lp.lineage, q as u32);
+            let (warm_cover, use_stored, chained, scratch) =
+                warm_choice(best.map(|c| c.covered_segments), prev_clean);
+            let warm_params = if use_stored {
+                best.and_then(|c| c.params.clone())
+            } else {
+                None
             };
             let replay =
                 self.lineages.get(lp.lineage).replay_range(warm_cover, clean_cover);
@@ -167,12 +195,38 @@ impl<'a> ChainResolver<'a> {
         ResolvedChain { lineage: lp.lineage, steps }
     }
 
-    /// Samples the lineage's chain would replay, without cloning any
-    /// warm-start parameters — the true coalesced retrain cost the
-    /// battery admission gate reserves against.
+    /// Samples the lineage's chain would replay — the true coalesced
+    /// retrain cost the battery admission gate reserves against. Pure
+    /// index reads: no replay vectors, no parameter clones, no allocation.
     fn rsn(&self, lp: &LineagePlan) -> u64 {
-        self.resolve(lp, false).steps.iter().map(|s| s.rsn).sum()
+        let l = self.lineages.get(lp.lineage);
+        let mut prev_clean: Option<u32> = None;
+        let mut total = 0;
+        for &q in &lp.segments {
+            let clean_cover = q as u32 + 1;
+            let best =
+                self.store.best_checkpoint(lp.lineage, q as u32).map(|c| c.covered_segments);
+            let (warm_cover, _, _, _) = warm_choice(best, prev_clean);
+            total += l.replay_range_samples(warm_cover, clean_cover);
+            prev_clean = Some(clean_cover);
+        }
+        total
     }
+}
+
+/// Scan-resolved mirror of a plan's receipts, produced by
+/// [`Engine::resolve_plan_naive`] without the store coverage index or the
+/// lineage prefix sums — the differential oracle `bench_scale` and the
+/// planner-equivalence tests compare the indexed path against.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct NaivePlanResolution {
+    /// Per plan lineage, in plan order: samples its chain replays.
+    pub lineage_rsn: Vec<u64>,
+    /// Per retrain step: `(lineage, warm-start coverage)` (0 = scratch).
+    pub warm_covers: Vec<(usize, u32)>,
+    /// Per retrain step: `(lineage, cleaned coverage)` — the sub-model
+    /// versions execution will invalidate.
+    pub invalidated_versions: Vec<(usize, u32)>,
 }
 
 /// Don't pay scoped-thread spawn/join for tiny plans: a plan must span
@@ -227,6 +281,9 @@ pub struct Engine {
     exec_mode: ExecMode,
     /// Lineages that ever received data (eligible for serving/eval).
     active: Vec<bool>,
+    /// Sorted cache of the active lineage indices — kept incrementally so
+    /// `evaluate()` never re-collects the set.
+    active_list: Vec<usize>,
 }
 
 impl Engine {
@@ -256,6 +313,7 @@ impl Engine {
             eval,
             exec_mode: ExecMode::Auto,
             active: vec![false; max],
+            active_list: Vec::with_capacity(max),
         }
     }
 
@@ -281,13 +339,10 @@ impl Engine {
         &self.lineages
     }
 
-    pub fn active_lineages(&self) -> Vec<usize> {
-        self.active
-            .iter()
-            .enumerate()
-            .filter(|(_, a)| **a)
-            .map(|(i, _)| i)
-            .collect()
+    /// Lineages that ever received data, ascending. Served from an
+    /// incrementally maintained cache — no per-call allocation.
+    pub fn active_lineages(&self) -> &[usize] {
+        &self.active_list
     }
 
     /// Execute one training round over the population's new data.
@@ -306,7 +361,11 @@ impl Engine {
 
         let mut new_samples = 0;
         for &lineage in &touched {
-            self.active[lineage] = true;
+            if !self.active[lineage] {
+                self.active[lineage] = true;
+                let at = self.active_list.partition_point(|&l| l < lineage);
+                self.active_list.insert(at, lineage);
+            }
             let l = self.lineages.get(lineage);
             let covered = l.segment_count() - 1;
             let seg_blocks = l.replay_blocks(covered); // just the new segment
@@ -354,6 +413,16 @@ impl Engine {
         round: u32,
         covered_segments: u32,
     ) -> Result<()> {
+        if !self.store.would_accept() {
+            // A full no-replacement store would drop the checkpoint: skip
+            // the snapshot (no param clone, no prune pass) but keep the
+            // accounting and the id sequence identical to the
+            // store-then-reject path.
+            self.store.next_id();
+            self.store.record_rejection();
+            self.metrics.ckpts_rejected += 1;
+            return Ok(());
+        }
         let (size, params) = self.trainer.snapshot(lineage)?;
         let id = self.store.next_id();
         let ckpt = Checkpoint {
@@ -394,14 +463,46 @@ impl Engine {
 
     /// True replay cost of a plan, per lineage, in the plan's lineage
     /// order: the samples each lineage's resolved chain will replay given
-    /// the current store. One read-only resolution pass — this is the
-    /// merged-cost probe the service's battery admission reserves against
-    /// (a lineage touched by R requests is costed once, not R times), and
-    /// it equals exactly what [`Engine::execute_plan`] will replay if run
-    /// next (the resolver is shared, the cost model is deterministic).
+    /// the current store. One read-only, allocation-free index pass —
+    /// this is the merged-cost probe the service's battery admission
+    /// reserves against (a lineage touched by R requests is costed once,
+    /// not R times; the probe runs once per window per admission retry),
+    /// and it equals exactly what [`Engine::execute_plan`] will replay if
+    /// run next (the resolver is shared, the cost model is deterministic).
     pub fn plan_lineage_rsn(&self, plan: &BatchPlan) -> Vec<u64> {
         let resolver = ChainResolver::new(&self.store, &self.lineages);
         plan.lineages.iter().map(|lp| resolver.rsn(lp)).collect()
+    }
+
+    /// Resolve a plan the way the pre-index planner did — O(slots) store
+    /// scans and materialized replay vectors — and return the receipts
+    /// execution would produce. Differential oracle only: `bench_scale`
+    /// prices against it to measure the indexed speedup, and the
+    /// equivalence tests assert [`Engine::plan_lineage_rsn`] and
+    /// [`Engine::execute_plan`] match it byte for byte. Never called on a
+    /// hot path.
+    pub fn resolve_plan_naive(&self, plan: &BatchPlan) -> NaivePlanResolution {
+        let mut out = NaivePlanResolution::default();
+        for lp in &plan.lineages {
+            let mut prev_clean: Option<u32> = None;
+            let mut lineage_rsn = 0u64;
+            for &q in &lp.segments {
+                let clean_cover = q as u32 + 1;
+                let best = self
+                    .store
+                    .best_checkpoint_scan(lp.lineage, q as u32)
+                    .map(|c| c.covered_segments);
+                let (warm_cover, _, _, _) = warm_choice(best, prev_clean);
+                let replay =
+                    self.lineages.get(lp.lineage).replay_range(warm_cover, clean_cover);
+                lineage_rsn += replay.iter().map(|(_, n)| n).sum::<u64>();
+                out.warm_covers.push((lp.lineage, warm_cover));
+                out.invalidated_versions.push((lp.lineage, clean_cover));
+                prev_clean = Some(clean_cover);
+            }
+            out.lineage_rsn.push(lineage_rsn);
+        }
+        out
     }
 
     /// Execute a batch plan: one retrain chain per affected lineage
@@ -455,14 +556,13 @@ impl Engine {
             all
         };
 
-        // One resolution pass for both executors (cheap, read-only). The
-        // warm-start parameter clones for all lineages are held for the
-        // plan's duration; per-lineage peak memory matters less than
-        // resolution parity here, and the accounting backend stores no
-        // parameters at all.
+        // One resolution pass for both executors (read-only). Warm-start
+        // parameters are refcount clones of the stored checkpoints, so
+        // holding every chain for the plan's duration costs pointers, not
+        // tensors (the accounting backend stores no parameters at all).
         let resolver = ChainResolver::new(&self.store, &self.lineages);
         let chains: Vec<ResolvedChain> =
-            plan.lineages.iter().map(|lp| resolver.resolve(lp, true)).collect();
+            plan.lineages.iter().map(|lp| resolver.resolve(lp)).collect();
 
         if use_workers {
             // Independent lineages' retrains run on scoped threads.
@@ -553,6 +653,7 @@ impl Engine {
     /// Serving continuity: the deployed sub-model stays the newest version
     /// (the paper keeps later sub-model versions in place — DESIGN.md
     /// §Key-decisions); the retrain refreshed the *poisoned* versions.
+    /// Restoring clones a parameter refcount, not the tensors.
     fn restore_serving_model(&mut self, lineage: usize, last_clean: u32) -> Result<()> {
         let newest = self
             .store
@@ -576,8 +677,7 @@ impl Engine {
 
     /// Ensemble accuracy of the active lineages (real backend only).
     pub fn evaluate(&mut self) -> Result<Option<f64>> {
-        let active = self.active_lineages();
-        self.trainer.evaluate(&active)
+        self.trainer.evaluate(&self.active_list)
     }
 
     /// Drive the full trace: T rounds, serving each round's requests FCFS.
@@ -591,8 +691,107 @@ impl Engine {
             for req in trace.at(t) {
                 self.process_request(req)?;
             }
-            let _ = t;
         }
         Ok(&self.metrics)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::dataset::UserId;
+    use crate::memory::CheckpointId;
+    use crate::partition::Placement;
+    use crate::replacement::NoReplace;
+
+    /// Warm-start resolution must share checkpoint parameters by
+    /// refcount: resolving a chain adds `Arc` strong counts, never copies
+    /// tensor data (the acceptance criterion for zero-copy restores).
+    #[test]
+    fn warm_start_params_are_refcounted_not_cloned() {
+        let mut store = ModelStore::new(2, Box::new(NoReplace));
+        let params: Arc<[HostTensor]> = vec![HostTensor::zeros(&[32, 32])].into();
+        let id = store.next_id();
+        store.store(Checkpoint {
+            id,
+            lineage: 0,
+            round: 1,
+            covered_segments: 1,
+            size_bytes: 1,
+            params: Some(params.clone()),
+        });
+
+        let mut lineages = LineageSet::new(1);
+        lineages.add_round(
+            1,
+            &[Placement { block: BlockId(0), shard: 0, samples: 10 }],
+            |_| UserId(0),
+        );
+        lineages.add_round(
+            2,
+            &[Placement { block: BlockId(1), shard: 0, samples: 5 }],
+            |_| UserId(0),
+        );
+
+        let resolver = ChainResolver::new(&store, &lineages);
+        let lp = LineagePlan { lineage: 0, segments: vec![1], requests_touching: 1 };
+        let chain = resolver.resolve(&lp);
+        assert_eq!(chain.lineage, 0);
+        assert_eq!(chain.steps.len(), 1);
+        let wp = chain.steps[0].warm_params.as_ref().expect("warm start has params");
+        assert!(Arc::ptr_eq(wp, &params), "warm params must share, not copy");
+        // Strong counts: the store's copy, the test's handle, the chain's.
+        assert_eq!(Arc::strong_count(&params), 3);
+        assert_eq!(chain.steps[0].warm_cover, 1);
+        // The allocation-free probe prices the same chain identically.
+        assert_eq!(
+            resolver.rsn(&lp),
+            chain.steps.iter().map(|s| s.rsn).sum::<u64>()
+        );
+        assert_eq!(resolver.rsn(&lp), 5);
+    }
+
+    /// The indexed probe and the scan oracle agree on a handcrafted
+    /// multi-step chain (chained + stored warm starts mixed).
+    #[test]
+    fn indexed_probe_matches_naive_choice_logic() {
+        let mut store = ModelStore::new(4, Box::new(NoReplace));
+        for (round, cover) in [(1u32, 1u32), (3, 3)] {
+            let id = store.next_id();
+            store.store(Checkpoint {
+                id,
+                lineage: 0,
+                round,
+                covered_segments: cover,
+                size_bytes: 1,
+                params: None,
+            });
+        }
+        let mut lineages = LineageSet::new(1);
+        for r in 1..=4u32 {
+            lineages.add_round(
+                r,
+                &[Placement { block: BlockId(r as u64), shard: 0, samples: 10 * r as u64 }],
+                |_| UserId(0),
+            );
+        }
+        let resolver = ChainResolver::new(&store, &lineages);
+        // Poisoned segments 1 and 3: step 1 warm-starts from cover 1,
+        // step 2 from the stored cover-3 checkpoint (newer than the
+        // in-memory cover-2 model).
+        let lp = LineagePlan { lineage: 0, segments: vec![1, 3], requests_touching: 1 };
+        let chain = resolver.resolve(&lp);
+        let covers: Vec<u32> = chain.steps.iter().map(|s| s.warm_cover).collect();
+        assert_eq!(covers, vec![1, 3]);
+        // Step RSN: segments [1,2) = 20; segments [3,4) = 40.
+        assert_eq!(chain.steps[0].rsn, 20);
+        assert_eq!(chain.steps[1].rsn, 40);
+        assert_eq!(resolver.rsn(&lp), 60);
+        // max_by_key tie-break parity between index and scan.
+        assert_eq!(
+            store.best_checkpoint(0, 3).map(|c| c.id),
+            store.best_checkpoint_scan(0, 3).map(|c| c.id)
+        );
+        assert_eq!(store.best_checkpoint(0, 3).unwrap().id, CheckpointId(1));
     }
 }

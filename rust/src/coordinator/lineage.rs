@@ -7,10 +7,27 @@
 //! segment p invalidates every checkpoint covering p and restarts training
 //! from the newest stored checkpoint covering `< p` segments.
 //!
-//! The lineage set also maintains the block → (lineage, segment) index the
-//! engine uses to route unlearning requests, and the per-placement sample
-//! counts that shrink as data is removed (so RSN never counts samples that
-//! were already forgotten).
+//! The lineage set also maintains the block → (lineage, segment, slot)
+//! index the engine uses to route unlearning requests, and the
+//! per-placement sample counts that shrink as data is removed (so RSN
+//! never counts samples that were already forgotten).
+//!
+//! ## Complexity
+//!
+//! Sample totals are served from an incrementally maintained Fenwick tree
+//! of per-segment counts plus a cached lineage total, so the planner's
+//! pricing probes never walk segment lists:
+//!
+//! * [`Lineage::total_samples`] — O(1)
+//! * [`Lineage::replay_samples`] / [`Lineage::replay_range_samples`] —
+//!   O(log segments)
+//! * [`LineageSet::remove_samples`] — O(placements of the block), via the
+//!   slot index (no rescan of the segments' placement lists)
+//!
+//! [`Lineage::replay_blocks`] / [`Lineage::replay_range`] still materialize
+//! the actual replay set — they are execution-path only. The property
+//! tests below check every indexed quantity against a naive recomputation
+//! from the segment lists.
 
 use std::collections::BTreeMap;
 
@@ -47,26 +64,97 @@ pub struct SegmentRef {
     pub segment: usize,
 }
 
+/// One placement of a block: its segment plus the slot it occupies in the
+/// segment's placement list, so removal addresses it directly instead of
+/// rescanning the list.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementSlot {
+    pub seg: SegmentRef,
+    /// Index into the segment's `placements`.
+    pub slot: u32,
+}
+
+/// Fenwick (binary indexed) tree over per-segment sample counts: O(log n)
+/// prefix sums and point decrements, append-only positions — exactly the
+/// lineage lifecycle (segments are only ever appended; samples only ever
+/// shrink).
+#[derive(Clone, Debug, Default)]
+struct Fenwick {
+    /// 1-based implicit tree; `tree[i-1]` sums the `lowbit(i)` elements
+    /// ending at position i.
+    tree: Vec<u64>,
+}
+
+impl Fenwick {
+    fn len(&self) -> usize {
+        self.tree.len()
+    }
+
+    /// Append a new element holding `v`.
+    fn push(&mut self, v: u64) {
+        let idx = self.tree.len() + 1; // 1-based position of the new leaf
+        let lowbit = idx & idx.wrapping_neg();
+        // tree[idx] covers (idx - lowbit, idx]: the new value plus the
+        // already-built subtrees directly below it.
+        let mut val = v;
+        let mut j = idx - 1;
+        let stop = idx - lowbit;
+        while j > stop {
+            val += self.tree[j - 1];
+            j -= j & j.wrapping_neg();
+        }
+        self.tree.push(val);
+    }
+
+    /// Subtract `amount` from the element at 0-based `pos` (counts only
+    /// ever shrink, so no signed arithmetic is needed).
+    fn sub(&mut self, pos: usize, amount: u64) {
+        let mut i = pos + 1;
+        while i <= self.tree.len() {
+            self.tree[i - 1] -= amount;
+            i += i & i.wrapping_neg();
+        }
+    }
+
+    /// Sum of the first `n` elements (clamped to the current length).
+    fn prefix(&self, n: usize) -> u64 {
+        let mut i = n.min(self.tree.len());
+        let mut s = 0;
+        while i > 0 {
+            s += self.tree[i - 1];
+            i -= i & i.wrapping_neg();
+        }
+        s
+    }
+}
+
 /// One shard's training history.
 #[derive(Clone, Debug, Default)]
 pub struct Lineage {
-    pub segments: Vec<Segment>,
+    segments: Vec<Segment>,
+    /// Current per-segment sample counts, prefix-summable in O(log n).
+    seg_totals: Fenwick,
+    /// Cached sum over all segments (kept in lockstep with `seg_totals`).
+    total: u64,
 }
 
 impl Lineage {
-    /// Samples that must be replayed when retraining from a checkpoint
-    /// covering `covered` segments (i.e. segments `covered..`).
-    pub fn replay_samples(&self, covered: u32) -> u64 {
-        self.segments
-            .iter()
-            .skip(covered as usize)
-            .map(|s| s.samples())
-            .sum()
+    /// The segment history (read-only; all mutation goes through
+    /// [`LineageSet`] so the prefix sums stay consistent).
+    pub fn segments(&self) -> &[Segment] {
+        &self.segments
     }
 
-    /// Current total samples.
+    /// Samples that must be replayed when retraining from a checkpoint
+    /// covering `covered` segments (i.e. segments `covered..`).
+    /// O(log segments).
+    pub fn replay_samples(&self, covered: u32) -> u64 {
+        self.total - self.seg_totals.prefix(covered as usize)
+    }
+
+    /// Current total samples. O(1).
     pub fn total_samples(&self) -> u64 {
-        self.replay_samples(0)
+        self.total
     }
 
     pub fn segment_count(&self) -> u32 {
@@ -83,7 +171,9 @@ impl Lineage {
     /// This is the paper's retraining window: from the newest surviving
     /// checkpoint up to (and including) the poisoned segment — later
     /// sub-model versions are left in place (see DESIGN.md §Key-decisions
-    /// on the paper's retraining accounting).
+    /// on the paper's retraining accounting). Materializes the replay set;
+    /// execution-path only — cost probes use
+    /// [`Lineage::replay_range_samples`].
     pub fn replay_range(&self, covered: u32, through: u32) -> Vec<(BlockId, u64)> {
         self.segments
             .iter()
@@ -95,14 +185,11 @@ impl Lineage {
             .collect()
     }
 
-    /// Samples in segments `covered..through`.
+    /// Samples in segments `covered..through`. O(log segments).
     pub fn replay_range_samples(&self, covered: u32, through: u32) -> u64 {
-        self.segments
-            .iter()
-            .take(through as usize)
-            .skip(covered as usize)
-            .map(|s| s.samples())
-            .sum()
+        self.seg_totals
+            .prefix(through as usize)
+            .saturating_sub(self.seg_totals.prefix(covered as usize))
     }
 }
 
@@ -110,8 +197,12 @@ impl Lineage {
 #[derive(Clone, Debug)]
 pub struct LineageSet {
     lineages: Vec<Lineage>,
-    /// block -> all its placements (class-based partitioning splits blocks).
-    index: BTreeMap<BlockId, Vec<SegmentRef>>,
+    /// block -> all its placements (class-based partitioning splits
+    /// blocks), with the slot each occupies in its segment. Placements of
+    /// one block within the same segment are pushed consecutively by
+    /// `add_round` (a block is placed in exactly one round), which
+    /// `remove_samples` relies on when grouping.
+    index: BTreeMap<BlockId, Vec<PlacementSlot>>,
 }
 
 impl LineageSet {
@@ -150,43 +241,57 @@ impl LineageSet {
         let mut out = Vec::with_capacity(touched.len());
         for (lineage, placs) in touched {
             let seg_idx = self.lineages[lineage].segments.len();
-            for sp in &placs {
-                self.index
-                    .entry(sp.block)
-                    .or_default()
-                    .push(SegmentRef { lineage, segment: seg_idx });
+            for (slot, sp) in placs.iter().enumerate() {
+                self.index.entry(sp.block).or_default().push(PlacementSlot {
+                    seg: SegmentRef { lineage, segment: seg_idx },
+                    slot: slot as u32,
+                });
             }
-            self.lineages[lineage].segments.push(Segment { round, placements: placs });
+            let seg = Segment { round, placements: placs };
+            let seg_samples = seg.samples();
+            let l = &mut self.lineages[lineage];
+            l.segments.push(seg);
+            l.seg_totals.push(seg_samples);
+            l.total += seg_samples;
+            debug_assert_eq!(l.seg_totals.len(), l.segments.len());
             out.push(lineage);
         }
         out
     }
 
     /// All placements of a block.
-    pub fn placements_of(&self, block: BlockId) -> &[SegmentRef] {
+    pub fn placements_of(&self, block: BlockId) -> &[PlacementSlot] {
         self.index.get(&block).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     /// Remove `n` samples of `block` (distributed across its placements
     /// proportionally, largest-first for the remainder). Returns the
     /// affected (lineage, segment) pairs with the amount actually removed.
+    ///
+    /// Each placement entry reports its whole segment's holding of the
+    /// block as its size — the pre-index scan semantics, preserved exactly;
+    /// the slot index only replaces the placement-list rescans with direct
+    /// loads and keeps the prefix sums in lockstep.
     pub fn remove_samples(&mut self, block: BlockId, n: u64) -> Vec<(SegmentRef, u64)> {
         let refs = self.index.get(&block).cloned().unwrap_or_default();
         if refs.is_empty() || n == 0 {
             return vec![];
         }
-        // Current sizes of each placement of this block.
-        let mut sizes: Vec<u64> = refs
-            .iter()
-            .map(|r| {
-                self.lineages[r.lineage].segments[r.segment]
-                    .placements
-                    .iter()
-                    .filter(|p| p.block == block)
-                    .map(|p| p.samples)
-                    .sum()
-            })
-            .collect();
+        // Current size of each placement group of this block: consecutive
+        // entries sharing a segment report that segment's combined count.
+        let mut sizes: Vec<u64> = Vec::with_capacity(refs.len());
+        let mut i = 0;
+        while i < refs.len() {
+            let seg = refs[i].seg;
+            let mut j = i;
+            while j < refs.len() && refs[j].seg == seg {
+                j += 1;
+            }
+            let placements = &self.lineages[seg.lineage].segments[seg.segment].placements;
+            let sum: u64 = refs[i..j].iter().map(|r| placements[r.slot as usize].samples).sum();
+            sizes.resize(j, sum);
+            i = j;
+        }
         let total: u64 = sizes.iter().sum();
         let n = n.min(total);
         if n == 0 {
@@ -207,23 +312,37 @@ impl LineageSet {
             }
             oi += 1;
         }
-        // Apply.
+        // Apply: consume each entry's share from the block's slots of its
+        // segment in slot order (identical to the old placement-list walk).
         let mut out = Vec::new();
-        for (i, r) in refs.iter().enumerate() {
-            if take[i] == 0 {
-                continue;
+        let mut i = 0;
+        while i < refs.len() {
+            let seg = refs[i].seg;
+            let mut j = i;
+            while j < refs.len() && refs[j].seg == seg {
+                j += 1;
             }
-            let mut left = take[i];
-            for p in &mut self.lineages[r.lineage].segments[r.segment].placements {
-                if p.block == block && left > 0 {
+            for k in i..j {
+                if take[k] == 0 {
+                    continue;
+                }
+                let mut left = take[k];
+                let l = &mut self.lineages[seg.lineage];
+                for r in &refs[i..j] {
+                    if left == 0 {
+                        break;
+                    }
+                    let p = &mut l.segments[seg.segment].placements[r.slot as usize];
                     let cut = left.min(p.samples);
                     p.samples -= cut;
                     left -= cut;
                 }
+                debug_assert_eq!(left, 0);
+                l.seg_totals.sub(seg.segment, take[k]);
+                l.total -= take[k];
+                out.push((seg, take[k]));
             }
-            debug_assert_eq!(left, 0);
-            out.push((*r, take[i]));
-            sizes[i] -= take[i];
+            i = j;
         }
         out
     }
@@ -244,6 +363,21 @@ mod tests {
         Placement { block: BlockId(block), shard, samples }
     }
 
+    /// Naive recomputation of `replay_samples` from the segment lists.
+    fn scan_replay(l: &Lineage, covered: u32) -> u64 {
+        l.segments().iter().skip(covered as usize).map(|s| s.samples()).sum()
+    }
+
+    /// Naive recomputation of `replay_range_samples`.
+    fn scan_range(l: &Lineage, covered: u32, through: u32) -> u64 {
+        l.segments()
+            .iter()
+            .take(through as usize)
+            .skip(covered as usize)
+            .map(|s| s.samples())
+            .sum()
+    }
+
     #[test]
     fn add_round_builds_segments_and_index() {
         let mut ls = LineageSet::new(3);
@@ -257,6 +391,7 @@ mod tests {
         assert_eq!(ls.get(1).total_samples(), 0);
         assert_eq!(ls.get(2).total_samples(), 30);
         assert_eq!(ls.placements_of(BlockId(0)).len(), 1);
+        assert_eq!(ls.placements_of(BlockId(1))[0].slot, 1);
     }
 
     #[test]
@@ -271,6 +406,12 @@ mod tests {
         assert_eq!(l.replay_samples(1), 100);
         assert_eq!(l.replay_samples(3), 0);
         assert_eq!(l.replay_blocks(1), vec![(BlockId(1), 40), (BlockId(2), 60)]);
+        // Range queries, including degenerate and out-of-range bounds.
+        assert_eq!(l.replay_range_samples(0, 3), 200);
+        assert_eq!(l.replay_range_samples(1, 2), 40);
+        assert_eq!(l.replay_range_samples(2, 2), 0);
+        assert_eq!(l.replay_range_samples(3, 1), 0);
+        assert_eq!(l.replay_range_samples(1, 99), 100);
     }
 
     #[test]
@@ -338,6 +479,81 @@ mod tests {
                             "total {} != expected {expected}",
                             ls.total_samples()
                         ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    /// The indexed quantities (cached totals, Fenwick prefix sums) must
+    /// agree with a naive recomputation from the segment lists after any
+    /// interleaving of multi-round adds and removals.
+    #[test]
+    fn prop_prefix_sums_match_scan_under_interleaving() {
+        use crate::testkit::forall;
+        forall(
+            0xFE2C1C,
+            80,
+            |rng, size| {
+                let shards = rng.range(1, 4);
+                let rounds = 1 + (6.0 * size) as usize;
+                let mut next_block = 0u64;
+                // Per round: the new blocks placed, then some removals of
+                // any block placed so far.
+                let mut script: Vec<(Vec<(u64, usize, u64)>, Vec<(u64, u64)>)> = Vec::new();
+                for _ in 0..rounds {
+                    let adds: Vec<(u64, usize, u64)> = (0..rng.range(1, 5))
+                        .map(|_| {
+                            let b = next_block;
+                            next_block += 1;
+                            (b, rng.range(0, shards), rng.range(1, 120) as u64)
+                        })
+                        .collect();
+                    let removals: Vec<(u64, u64)> = (0..rng.range(0, 4))
+                        .map(|_| {
+                            (rng.range(0, next_block as usize) as u64,
+                             rng.range(0, 200) as u64)
+                        })
+                        .collect();
+                    script.push((adds, removals));
+                }
+                (shards, script)
+            },
+            |(shards, script)| {
+                let mut ls = LineageSet::new(*shards);
+                let check = |ls: &LineageSet| -> Result<(), String> {
+                    for li in 0..ls.len() {
+                        let l = ls.get(li);
+                        if l.total_samples() != scan_replay(l, 0) {
+                            return Err(format!("lineage {li}: cached total diverged"));
+                        }
+                        let n = l.segment_count();
+                        for c in 0..=n + 1 {
+                            if l.replay_samples(c) != scan_replay(l, c) {
+                                return Err(format!(
+                                    "lineage {li}: replay_samples({c}) diverged"
+                                ));
+                            }
+                            for t in c..=n + 1 {
+                                if l.replay_range_samples(c, t) != scan_range(l, c, t) {
+                                    return Err(format!(
+                                        "lineage {li}: replay_range_samples({c},{t}) diverged"
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                    Ok(())
+                };
+                for (round, (adds, removals)) in script.iter().enumerate() {
+                    let ps: Vec<Placement> =
+                        adds.iter().map(|(b, s, n)| place(*b, *s, *n)).collect();
+                    ls.add_round(round as u32 + 1, &ps, |_| UserId(0));
+                    check(&ls)?;
+                    for (b, n) in removals {
+                        ls.remove_samples(BlockId(*b), *n);
+                        check(&ls)?;
                     }
                 }
                 Ok(())

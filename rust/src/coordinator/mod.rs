@@ -6,6 +6,6 @@ pub mod engine;
 pub mod lineage;
 pub mod system;
 
-pub use engine::{Engine, ExecMode, RoundReport, UnlearnOutcome};
-pub use lineage::{Lineage, LineageSet, SegmentRef};
+pub use engine::{Engine, ExecMode, NaivePlanResolution, RoundReport, UnlearnOutcome};
+pub use lineage::{Lineage, LineageSet, PlacementSlot, SegmentRef};
 pub use system::{CauseSystem, SystemVariant};

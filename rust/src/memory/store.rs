@@ -9,6 +9,24 @@
 //! The store also implements Algorithm 3 line 11: when an unlearning
 //! request invalidates checkpoints (they contain the unlearned data), they
 //! are deleted in place, freeing slots.
+//!
+//! ## Complexity
+//!
+//! A secondary index ordered by `(lineage, coverage, slot)` is maintained
+//! by every mutation, so the planner's point lookups never scan the slot
+//! array:
+//!
+//! * [`ModelStore::best_checkpoint`] / [`ModelStore::latest`] — O(log n)
+//!   range queries (tie-broken exactly like the original scan: highest
+//!   coverage, then highest slot)
+//! * [`ModelStore::occupied`] — O(1) (free-slot set)
+//! * [`ModelStore::store`] — O(log n) (lowest free slot via the set)
+//!
+//! The `*_scan` twins keep the original linear scans alive as differential
+//! oracles for the property tests and `bench_scale`'s naive baseline.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
 
 use crate::replacement::ReplacementPolicy;
 use crate::runtime::HostTensor;
@@ -31,8 +49,9 @@ pub struct Checkpoint {
     /// Stored (pruned) size in bytes.
     pub size_bytes: u64,
     /// Actual parameters when running with the PJRT trainer; None in the
-    /// pure-accounting path.
-    pub params: Option<Vec<HostTensor>>,
+    /// pure-accounting path. Shared ownership: warm-start resolution and
+    /// serving restores clone the refcount, never the tensor data.
+    pub params: Option<Arc<[HostTensor]>>,
 }
 
 /// Outcome of a store attempt.
@@ -61,20 +80,41 @@ pub struct ModelStore {
     policy: Box<dyn ReplacementPolicy>,
     next_id: u64,
     stats: StoreStats,
+    /// Currently empty slots (lowest-first allocation, like the original
+    /// free-slot scan).
+    free: BTreeSet<usize>,
+    /// `(lineage, covered_segments, slot)` for every stored checkpoint.
+    /// The last element of a `(lineage, ..=coverage)` range is exactly the
+    /// checkpoint the original `max_by_key` scan selected.
+    by_cover: BTreeSet<(usize, u32, usize)>,
 }
 
 impl ModelStore {
     /// `capacity` = N_mem (the paper normalizes memory by sub-model size).
     pub fn new(capacity: usize, policy: Box<dyn ReplacementPolicy>) -> Self {
         assert!(capacity >= 1, "store needs at least one slot");
-        Self { slots: vec![None; capacity], policy, next_id: 0, stats: StoreStats::default() }
+        Self {
+            slots: vec![None; capacity],
+            policy,
+            next_id: 0,
+            stats: StoreStats::default(),
+            free: (0..capacity).collect(),
+            by_cover: BTreeSet::new(),
+        }
     }
 
     pub fn capacity(&self) -> usize {
         self.slots.len()
     }
 
+    /// Occupied slot count. O(1) via the free-slot set.
     pub fn occupied(&self) -> usize {
+        self.slots.len() - self.free.len()
+    }
+
+    /// Differential oracle for [`ModelStore::occupied`]: the original
+    /// linear count. Test/bench use only.
+    pub fn occupied_scan(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
@@ -93,16 +133,36 @@ impl ModelStore {
         id
     }
 
+    /// Would [`ModelStore::store`] accept a checkpoint right now (free
+    /// slot, or an evicting policy), or reject it (no-replacement policy
+    /// and memory full)? Read-only probe — lets the engine skip the
+    /// checkpoint snapshot entirely when the store would drop it anyway.
+    pub fn would_accept(&self) -> bool {
+        !self.free.is_empty() || self.policy.would_evict()
+    }
+
+    /// Account a rejection decided via [`ModelStore::would_accept`]
+    /// without materializing the checkpoint — keeps [`StoreStats`]
+    /// identical to a real `store` → [`StoreEvent::Rejected`] round-trip.
+    pub fn record_rejection(&mut self) {
+        self.stats.rejected += 1;
+    }
+
     /// Store a checkpoint per Algorithm 2. Returns what happened.
     pub fn store(&mut self, ckpt: Checkpoint) -> StoreEvent {
-        if let Some(free) = self.slots.iter().position(|s| s.is_none()) {
+        if let Some(free) = self.free.pop_first() {
+            self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, free));
             self.slots[free] = Some(ckpt);
             self.stats.stored += 1;
             return StoreEvent::Stored { slot: free };
         }
         match self.policy.victim(self.slots.len()) {
             Some(slot) => {
-                let evicted = self.slots[slot].as_ref().expect("full store").id;
+                let old = self.slots[slot].as_ref().expect("full store");
+                let evicted = old.id;
+                let old_key = (old.lineage, old.covered_segments, slot);
+                self.by_cover.remove(&old_key);
+                self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, slot));
                 self.slots[slot] = Some(ckpt);
                 self.stats.stored += 1;
                 self.stats.replaced += 1;
@@ -117,8 +177,22 @@ impl ModelStore {
 
     /// Newest stored checkpoint of `lineage` covering at most
     /// `max_segments` segments (i.e. taken before the poisoned data) —
-    /// the retrain start point of Algorithm 3 line 8.
+    /// the retrain start point of Algorithm 3 line 8. O(log n).
     pub fn best_checkpoint(&self, lineage: usize, max_segments: u32) -> Option<&Checkpoint> {
+        self.by_cover
+            .range((lineage, 0, 0)..=(lineage, max_segments, usize::MAX))
+            .next_back()
+            .map(|&(_, _, slot)| self.slots[slot].as_ref().expect("indexed slot occupied"))
+    }
+
+    /// Differential oracle for [`ModelStore::best_checkpoint`]: the
+    /// original O(slots) scan with identical tie-breaking (`max_by_key`
+    /// keeps the last maximum — the highest slot). Test/bench use only.
+    pub fn best_checkpoint_scan(
+        &self,
+        lineage: usize,
+        max_segments: u32,
+    ) -> Option<&Checkpoint> {
         self.slots
             .iter()
             .flatten()
@@ -127,8 +201,16 @@ impl ModelStore {
     }
 
     /// Latest checkpoint of a lineage regardless of coverage (warm start
-    /// for incremental training).
+    /// for incremental training). O(log n).
     pub fn latest(&self, lineage: usize) -> Option<&Checkpoint> {
+        self.by_cover
+            .range((lineage, 0, 0)..=(lineage, u32::MAX, usize::MAX))
+            .next_back()
+            .map(|&(_, _, slot)| self.slots[slot].as_ref().expect("indexed slot occupied"))
+    }
+
+    /// Differential oracle for [`ModelStore::latest`]. Test/bench use only.
+    pub fn latest_scan(&self, lineage: usize) -> Option<&Checkpoint> {
         self.slots
             .iter()
             .flatten()
@@ -140,9 +222,11 @@ impl ModelStore {
     /// returns how many were removed.
     pub fn invalidate(&mut self, mut pred: impl FnMut(&Checkpoint) -> bool) -> usize {
         let mut n = 0;
-        for slot in &mut self.slots {
-            if slot.as_ref().map(&mut pred).unwrap_or(false) {
-                *slot = None;
+        for (slot, s) in self.slots.iter_mut().enumerate() {
+            if s.as_ref().map(&mut pred).unwrap_or(false) {
+                let old = s.take().expect("checked above");
+                self.by_cover.remove(&(old.lineage, old.covered_segments, slot));
+                self.free.insert(slot);
                 n += 1;
             }
         }
@@ -178,6 +262,34 @@ mod tests {
         }
     }
 
+    /// Every indexed lookup must agree with its scan oracle.
+    fn assert_index_matches_scan(st: &ModelStore) -> Result<(), String> {
+        if st.occupied() != st.occupied_scan() {
+            return Err(format!(
+                "occupied {} != scan {}",
+                st.occupied(),
+                st.occupied_scan()
+            ));
+        }
+        for l in 0..5 {
+            for cover in 0..12 {
+                let idx = st.best_checkpoint(l, cover).map(|c| c.id);
+                let scan = st.best_checkpoint_scan(l, cover).map(|c| c.id);
+                if idx != scan {
+                    return Err(format!(
+                        "best_checkpoint({l},{cover}): index {idx:?} != scan {scan:?}"
+                    ));
+                }
+            }
+            let idx = st.latest(l).map(|c| c.id);
+            let scan = st.latest_scan(l).map(|c| c.id);
+            if idx != scan {
+                return Err(format!("latest({l}): index {idx:?} != scan {scan:?}"));
+            }
+        }
+        Ok(())
+    }
+
     #[test]
     fn fills_free_slots_first() {
         let mut st = ModelStore::new(3, Box::new(FiboR::new()));
@@ -190,6 +302,7 @@ mod tests {
             other => panic!("expected replacement, got {other:?}"),
         }
         assert_eq!(st.occupied(), 3);
+        assert_index_matches_scan(&st).unwrap();
     }
 
     #[test]
@@ -199,6 +312,35 @@ mod tests {
         st.store(ckpt(1, 0, 2, 2));
         assert_eq!(st.store(ckpt(2, 0, 3, 3)), StoreEvent::Rejected);
         assert_eq!(st.stats().rejected, 1);
+    }
+
+    #[test]
+    fn would_accept_predicts_store_outcome() {
+        // No-replacement: accepts while free, rejects when full, accepts
+        // again after invalidation frees a slot.
+        let mut st = ModelStore::new(2, Box::new(NoReplace));
+        assert!(st.would_accept());
+        st.store(ckpt(0, 0, 1, 1));
+        st.store(ckpt(1, 0, 2, 2));
+        assert!(!st.would_accept());
+        assert_eq!(st.store(ckpt(2, 0, 3, 3)), StoreEvent::Rejected);
+        st.invalidate(|c| c.covered_segments == 2);
+        assert!(st.would_accept());
+        assert!(matches!(st.store(ckpt(3, 0, 3, 3)), StoreEvent::Stored { .. }));
+        // Evicting policies always accept.
+        let mut st = ModelStore::new(1, Box::new(FiboR::new()));
+        st.store(ckpt(0, 0, 1, 1));
+        assert!(st.would_accept());
+        assert!(matches!(st.store(ckpt(1, 0, 2, 2)), StoreEvent::Replaced { .. }));
+    }
+
+    #[test]
+    fn record_rejection_mirrors_rejected_store() {
+        let mut st = ModelStore::new(1, Box::new(NoReplace));
+        st.store(ckpt(0, 0, 1, 1));
+        st.record_rejection();
+        assert_eq!(st.stats().rejected, 1);
+        assert_eq!(st.stats().stored, 1);
     }
 
     #[test]
@@ -215,6 +357,7 @@ mod tests {
         assert!(st.best_checkpoint(0, 0).is_none());
         // Other lineage untouched.
         assert_eq!(st.best_checkpoint(1, 3).unwrap().id, CheckpointId(3));
+        assert_index_matches_scan(&st).unwrap();
     }
 
     #[test]
@@ -226,6 +369,7 @@ mod tests {
         assert_eq!(st.occupied(), 1);
         // Freed slot accepts a new checkpoint even under NoReplace.
         assert!(matches!(st.store(ckpt(2, 0, 3, 1)), StoreEvent::Stored { .. }));
+        assert_index_matches_scan(&st).unwrap();
     }
 
     #[test]
@@ -251,7 +395,13 @@ mod tests {
                 if *invalidate {
                     st.invalidate(|c| c.lineage == *lineage);
                 } else {
-                    st.store(ckpt(*id, *lineage, *round, *round));
+                    let accepts = st.would_accept();
+                    let event = st.store(ckpt(*id, *lineage, *round, *round));
+                    assert_eq!(
+                        accepts,
+                        event != StoreEvent::Rejected,
+                        "would_accept disagreed with store()"
+                    );
                 }
             },
             |st| {
@@ -266,8 +416,46 @@ mod tests {
                         }
                     }
                 }
-                Ok(())
+                assert_index_matches_scan(st)
             },
+        );
+    }
+
+    /// Same interleaving property under a rejecting policy, so the index
+    /// is exercised across the store/reject/invalidate triangle.
+    #[test]
+    fn prop_index_matches_scan_under_no_replace() {
+        forall_prefixes(
+            0x1DE7,
+            60,
+            |rng, size| {
+                let n = 1 + (40.0 * size) as usize;
+                (0..n)
+                    .map(|i| {
+                        (
+                            i as u64,
+                            rng.range(0, 4),
+                            rng.range(1, 10) as u32,
+                            rng.chance(0.35),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            || ModelStore::new(3, Box::new(NoReplace)),
+            |st, (id, lineage, round, invalidate)| {
+                if *invalidate {
+                    st.invalidate(|c| c.lineage == *lineage);
+                } else {
+                    let accepts = st.would_accept();
+                    let event = st.store(ckpt(*id, *lineage, *round, *round));
+                    assert_eq!(
+                        accepts,
+                        event != StoreEvent::Rejected,
+                        "would_accept disagreed with store()"
+                    );
+                }
+            },
+            |st| assert_index_matches_scan(st),
         );
     }
 }

@@ -31,6 +31,15 @@ pub trait ReplacementPolicy: Send + Sync {
     /// Slot to evict for the next incoming checkpoint, or `None` to reject.
     fn victim(&mut self, capacity: usize) -> Option<usize>;
 
+    /// Whether a full store would evict (`true`) or reject (`false`) on
+    /// the next store attempt. Must agree with [`ReplacementPolicy::victim`]
+    /// returning `Some`/`None`, but must not advance policy state — it is
+    /// the read-only admission probe behind
+    /// [`ModelStore::would_accept`](crate::memory::ModelStore::would_accept).
+    fn would_evict(&self) -> bool {
+        true
+    }
+
     /// Reset internal counters (new run).
     fn reset(&mut self);
 }
@@ -62,6 +71,7 @@ mod tests {
     fn victims_always_in_range() {
         for n in ["fibor", "fifo", "random"] {
             let mut p = by_name(n, 2).unwrap();
+            assert!(p.would_evict(), "{n} is an evicting policy");
             for _ in 0..200 {
                 let v = p.victim(7).unwrap();
                 assert!(v < 7, "{n} produced victim {v}");

@@ -14,6 +14,10 @@ impl ReplacementPolicy for NoReplace {
         None
     }
 
+    fn would_evict(&self) -> bool {
+        false
+    }
+
     fn reset(&mut self) {}
 }
 
@@ -24,6 +28,7 @@ mod tests {
     #[test]
     fn never_evicts() {
         let mut p = NoReplace;
+        assert!(!p.would_evict());
         for cap in 1..10 {
             assert!(p.victim(cap).is_none());
         }

@@ -1,5 +1,7 @@
 //! The accounting backend: no numerics, paper-scale sizes.
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::config::ModelProfile;
@@ -57,7 +59,7 @@ impl Trainer for CostTrainer {
         Ok(TrainOutcome { prune_ops: schedule.prune_ops(epochs.max(1)) })
     }
 
-    fn snapshot(&mut self, _lineage: usize) -> Result<(u64, Option<Vec<HostTensor>>)> {
+    fn snapshot(&mut self, _lineage: usize) -> Result<(u64, Option<Arc<[HostTensor]>>)> {
         Ok((self.profile.pruned_bytes(self.keep), None))
     }
 

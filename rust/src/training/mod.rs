@@ -13,6 +13,8 @@
 pub mod cost;
 pub mod pjrt;
 
+use std::sync::Arc;
+
 use anyhow::Result;
 
 use crate::data::dataset::BlockId;
@@ -65,7 +67,10 @@ pub trait Trainer {
 
     /// Checkpoint payload of the lineage's current model:
     /// (stored size in bytes, parameters if this backend has them).
-    fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Vec<HostTensor>>)>;
+    /// Parameters are handed out under shared ownership so the store,
+    /// warm-start resolution, and serving restores clone refcounts, never
+    /// tensor data.
+    fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Arc<[HostTensor]>>)>;
 
     /// Size of one stored checkpoint — defines N_mem slot granularity.
     fn checkpoint_bytes(&self) -> u64;

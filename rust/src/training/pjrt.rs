@@ -214,7 +214,7 @@ impl Trainer for PjrtTrainer {
         Ok(TrainOutcome { prune_ops })
     }
 
-    fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Vec<HostTensor>>)> {
+    fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Arc<[HostTensor]>>)> {
         // RCMP stores the *compressed* sub-model: prune a copy at the
         // configured keep fraction (the working model keeps training dense).
         let keep = self.keep_hint as f32;
@@ -226,7 +226,7 @@ impl Trainer for PjrtTrainer {
         } else {
             sess.params().to_vec()
         };
-        Ok((Self::sparse_bytes(&params), Some(params)))
+        Ok((Self::sparse_bytes(&params), Some(params.into())))
     }
 
     fn checkpoint_bytes(&self) -> u64 {

@@ -1,0 +1,187 @@
+//! Differential equivalence: the index-accelerated planner vs the scan
+//! oracle it replaced.
+//!
+//! The engine's plan→price→execute path now runs on incremental indices
+//! (lineage prefix sums, store coverage index). These tests drive full
+//! eviction-heavy workloads and assert, window by window, that
+//!
+//! * `Engine::plan_lineage_rsn` prices every merged window exactly like
+//!   the scan-based resolver (`Engine::resolve_plan_naive`),
+//! * `Engine::execute_plan` produces byte-identical receipts (RSN,
+//!   warm-start chains, invalidated sub-model versions) to the naive
+//!   pre-resolution,
+//! * the store coverage index and the lineage prefix sums agree with
+//!   naive recomputation after every mutation.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::coordinator::Engine;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::unlearning::BatchPlan;
+
+fn workload(seed: u64) -> (ExperimentConfig, EdgePopulation, RequestTrace) {
+    let cfg = ExperimentConfig {
+        users: 30,
+        rounds: 12,
+        shards: 4,
+        unlearn_prob: 0.8,
+        seed,
+        ..Default::default()
+    }
+    // ~8 checkpoint slots for 4 lineages x 12 rounds: constant eviction.
+    .with_memory_gb(0.25);
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.scaled(10_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.8,
+        seed: cfg.seed,
+    });
+    // High age_decay: requests reach old time slots, so chains mix
+    // scratch starts, long replay ranges, and multi-step warm chaining —
+    // the resolution shapes where index and scan could diverge.
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig {
+            unlearn_prob: cfg.unlearn_prob,
+            block_incl_prob: 0.9,
+            age_decay: 0.5,
+            frac_range: (0.1, 0.5),
+            seed: cfg.seed ^ 0x7ace,
+        },
+    );
+    (cfg, pop, trace)
+}
+
+/// Every indexed structure must agree with its naive recomputation.
+fn assert_indices_match_scan(engine: &Engine) {
+    let store = engine.store();
+    assert_eq!(store.occupied(), store.occupied_scan(), "occupied counter diverged");
+    let shards = engine.lineages().len();
+    for l in 0..shards {
+        let max_cover = engine.lineages().get(l).segment_count() + 1;
+        for cover in 0..=max_cover {
+            assert_eq!(
+                store.best_checkpoint(l, cover).map(|c| c.id),
+                store.best_checkpoint_scan(l, cover).map(|c| c.id),
+                "best_checkpoint({l},{cover}) diverged from scan"
+            );
+        }
+        assert_eq!(
+            store.latest(l).map(|c| c.id),
+            store.latest_scan(l).map(|c| c.id),
+            "latest({l}) diverged from scan"
+        );
+
+        let lin = engine.lineages().get(l);
+        let scan_total: u64 = lin.segments().iter().map(|s| s.samples()).sum();
+        assert_eq!(lin.total_samples(), scan_total, "lineage {l}: cached total diverged");
+        let n = lin.segment_count();
+        for c in 0..=n {
+            let scan_suffix: u64 =
+                lin.segments().iter().skip(c as usize).map(|s| s.samples()).sum();
+            assert_eq!(
+                lin.replay_samples(c),
+                scan_suffix,
+                "lineage {l}: replay_samples({c}) diverged"
+            );
+            for t in c..=n {
+                let scan_range: u64 = lin
+                    .segments()
+                    .iter()
+                    .take(t as usize)
+                    .skip(c as usize)
+                    .map(|s| s.samples())
+                    .sum();
+                assert_eq!(
+                    lin.replay_range_samples(c, t),
+                    scan_range,
+                    "lineage {l}: replay_range_samples({c},{t}) diverged"
+                );
+            }
+        }
+    }
+}
+
+/// CAUSE under FiboR eviction: coalesced windows priced and executed by
+/// the indexed planner must match the scan oracle receipt for receipt.
+#[test]
+fn indexed_planner_matches_scan_oracle_under_eviction() {
+    let (cfg, pop, trace) = workload(37);
+    let mut engine = SystemVariant::Cause.build_cost(&cfg).unwrap();
+    let mut checked_windows = 0;
+    for t in 1..=cfg.rounds {
+        engine.run_round(&pop).unwrap();
+        assert_indices_match_scan(&engine);
+        let reqs: Vec<_> = trace.at(t).to_vec();
+        if reqs.is_empty() {
+            continue;
+        }
+        let plan = BatchPlan::collect(&mut engine, &reqs);
+        assert_indices_match_scan(&engine); // after sample removal
+        if plan.is_empty() {
+            continue;
+        }
+        // Price before executing: indexed probe == scan resolution.
+        let naive = engine.resolve_plan_naive(&plan);
+        let indexed_rsn = engine.plan_lineage_rsn(&plan);
+        assert_eq!(indexed_rsn, naive.lineage_rsn, "round {t}: probe diverged");
+
+        // Execute: receipts must equal the naive pre-resolution exactly.
+        let outcome = engine.execute_plan(&plan).unwrap();
+        assert_eq!(outcome.warm_covers, naive.warm_covers, "round {t}: warm chains");
+        assert_eq!(
+            outcome.invalidated_versions, naive.invalidated_versions,
+            "round {t}: invalidation receipts"
+        );
+        assert_eq!(
+            outcome.rsn,
+            naive.lineage_rsn.iter().sum::<u64>(),
+            "round {t}: total RSN"
+        );
+        engine.metrics.record_requests(reqs.len() as u64, outcome.rsn);
+        assert_indices_match_scan(&engine); // after invalidate + re-store
+        checked_windows += 1;
+    }
+    assert!(checked_windows >= 3, "workload produced too few windows");
+    // The eviction machinery was actually exercised.
+    assert!(engine.metrics.ckpts_replaced > 0, "store never evicted");
+    assert!(engine.metrics.ckpts_invalidated > 0, "no versions invalidated");
+    assert!(engine.metrics.total_rsn() > 0);
+}
+
+/// SISA (no-replacement, store fills and rejects): the `would_accept`
+/// probe skips doomed snapshots, and its accounting stays identical to
+/// the store-then-reject path while the planner equivalence holds.
+#[test]
+fn no_replacement_rejections_keep_receipts_identical() {
+    let (cfg, pop, trace) = workload(91);
+    let mut engine = SystemVariant::Sisa.build_cost(&cfg).unwrap();
+    for t in 1..=cfg.rounds {
+        engine.run_round(&pop).unwrap();
+        assert_indices_match_scan(&engine);
+        let reqs: Vec<_> = trace.at(t).to_vec();
+        if reqs.is_empty() {
+            continue;
+        }
+        let plan = BatchPlan::collect(&mut engine, &reqs);
+        if plan.is_empty() {
+            continue;
+        }
+        let naive = engine.resolve_plan_naive(&plan);
+        assert_eq!(engine.plan_lineage_rsn(&plan), naive.lineage_rsn);
+        let outcome = engine.execute_plan(&plan).unwrap();
+        assert_eq!(outcome.warm_covers, naive.warm_covers);
+        assert_eq!(outcome.invalidated_versions, naive.invalidated_versions);
+        engine.metrics.record_requests(reqs.len() as u64, outcome.rsn);
+        assert_indices_match_scan(&engine);
+    }
+    // The full store rejected snapshots (the probe path), and the engine
+    // metric mirrors the store's own counter exactly.
+    assert!(engine.metrics.ckpts_rejected > 0, "store never filled up");
+    assert_eq!(engine.metrics.ckpts_rejected, engine.store().stats().rejected);
+    assert_eq!(engine.store().stats().replaced, 0, "no-replacement must not evict");
+}
