@@ -136,5 +136,34 @@ fn main() -> anyhow::Result<()> {
     // `probe.speedup` (indexed vs scan pricing, same machine, gated >= 5x
     // in CI) and `e2e.gain` (requests/sec on a bursty coalesced-window
     // workload).
+
+    // 7. Compressed checkpoint memory: by default the store meters C_m in
+    // normalized slots (the paper's N_mem — what this demo printed above).
+    // Two knobs make bytes the actual currency instead:
+    //
+    //   memory_budget_bytes = 268435456   # C_m in bytes; flips the store
+    //                                     # to byte metering in one line
+    //   store_mode = bytes                # (or set the meter explicitly;
+    //                                     # `slots` restores the baseline)
+    //   codec = sparse                    # checkpoint payload codec:
+    //                                     # dense | sparse (default) | delta
+    //
+    // (equivalently `ExperimentConfig::with_byte_budget(bytes)` and
+    // `with_codec(CodecMode::...)`). Tensor-carrying backends then store
+    // each checkpoint as a bitmask+values sparse payload (dense fallback
+    // when sparsity doesn't pay; `delta` additionally diffs against the
+    // lineage's previous checkpoint), `Checkpoint::size_bytes` is the true
+    // encoded size, and admission/eviction evict exactly as many victims
+    // as those bytes require — so at keep=0.3 the same C_m holds ~3x the
+    // checkpoints and replays fewer samples. Decoding happens lazily
+    // through a per-plan cache: a checkpoint that warm-starts several
+    // retrain steps decodes once. The accounting backend used in this
+    // demo carries no tensors, so it keeps its paper-scale size formula.
+    // `cargo bench --bench bench_compress` writes BENCH_compress.json:
+    // `codec.keep30.ratio` (sparse compression at keep=0.3, gated >= 2x
+    // in CI), `codec.*.{encode,decode}_mbps` (throughput;
+    // `gate.decode_mbps` has a conservative floor), and `workload.*`
+    // (slot- vs byte-metered checkpoint counts and RSN on the same C_m —
+    // the byte meter must hold >=2x the checkpoints and cut RSN).
     Ok(())
 }

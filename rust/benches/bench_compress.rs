@@ -1,0 +1,288 @@
+//! bench_compress — checkpoint codec + byte-budget store macro-bench.
+//!
+//! Two sections:
+//!
+//! 1. **Codec microsection** — encode/decode throughput and compression
+//!    ratio of `TensorCodec` on ~1 MB parameter sets magnitude-masked at
+//!    keep ∈ {1.0, 0.3, 0.05} (the paper's dense / δ=70% / δ=95% points),
+//!    plus a delta-encoding point against a lightly-perturbed parent.
+//!    Round-trips are asserted bit-exact (`PartialEq`) before timing.
+//!    `gate.ratio` (keep=0.3 compression ratio, a deterministic function
+//!    of the seeded tensors) and `gate.decode_mbps` are checked by
+//!    `bench_gate` against the committed `BENCH_baseline.json`.
+//! 2. **Byte-budget workload** — the same C_m driven through a full
+//!    engine lifecycle twice with the tensor-carrying `HostTrainer` at
+//!    keep=0.3: once slot-metered (slots provisioned for the codec's
+//!    dense fallback — the paper's N_mem normalization), once
+//!    byte-metered (admission reasons in true encoded bytes). Asserts the
+//!    byte meter keeps ≥2x the checkpoints resident and converts them
+//!    into strictly lower RSN.
+//!
+//! Writes `BENCH_compress.json` for CI upload and the regression gate.
+
+use std::time::Instant;
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::engine::EvalPolicy;
+use cause::coordinator::system::SystemVariant;
+use cause::coordinator::Engine;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::memory::StoreMeter;
+use cause::prng::Rng;
+use cause::runtime::codec::{CodecMode, TensorCodec};
+use cause::runtime::HostTensor;
+use cause::training::host::dense_upper_bound;
+use cause::training::{HostTrainer, HostTrainerConfig};
+use cause::util::bench::{black_box, Bench};
+use cause::util::Json;
+
+fn fast() -> bool {
+    std::env::var("CAUSE_BENCH_FAST").is_ok()
+}
+
+/// ~1 MB of seeded random parameters, magnitude-masked to `keep`.
+fn synth_params(seed: u64, keep: f64) -> Vec<HostTensor> {
+    let mut rng = Rng::new(seed);
+    let mut params = vec![
+        HostTensor::from_fn(&[512, 512], |_| rng.f32() * 2.0 - 1.0),
+        HostTensor::from_fn(&[512], |_| rng.f32() * 2.0 - 1.0),
+    ];
+    for t in &mut params {
+        t.apply_mask(keep);
+    }
+    params
+}
+
+/// Time one codec point: (compression ratio, encode MB/s, decode MB/s).
+fn codec_point(b: &mut Bench, label: &str, keep: f64, reps: usize) -> (f64, f64, f64) {
+    let codec = TensorCodec::new(CodecMode::Sparse);
+    let params = synth_params(0xc0de ^ keep.to_bits(), keep);
+    let enc = codec.encode(&params, None);
+    assert_eq!(enc.decode(), params, "codec round-trip broke at keep={keep}");
+    let dense_mb = enc.dense_size_bytes() as f64 / (1 << 20) as f64;
+    let ratio = enc.dense_size_bytes() as f64 / enc.size_bytes() as f64;
+
+    let mut enc_samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        black_box(codec.encode(&params, None));
+        enc_samples.push(t0.elapsed().as_secs_f64());
+    }
+    let mut dec_samples = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        black_box(enc.decode());
+        dec_samples.push(t0.elapsed().as_secs_f64());
+    }
+    b.record(&format!("encode_{label}"), &enc_samples);
+    b.record(&format!("decode_{label}"), &dec_samples);
+    let best = |s: &[f64]| s.iter().fold(f64::INFINITY, |a, &x| a.min(x));
+    (ratio, dense_mb / best(&enc_samples), dense_mb / best(&dec_samples))
+}
+
+/// Drive one engine lifecycle with the host-tensor backend; returns
+/// (resident checkpoints, total RSN, stored bytes, seconds, requests).
+fn drive(
+    meter: StoreMeter,
+    budget: u64,
+    cfg: &ExperimentConfig,
+    pop: &EdgePopulation,
+    trace: &RequestTrace,
+) -> (usize, u64, u64, f64, u64) {
+    let mut cfg = cfg.clone();
+    cfg.store_meter = meter;
+    cfg.memory_bytes = budget;
+    let trainer = HostTrainer::new(
+        HostTrainerConfig {
+            shapes: vec![vec![96, 96], vec![96]],
+            seed: 19,
+            update_frac: 0.2,
+        },
+        cfg.shards,
+        SystemVariant::Cause.schedule(&cfg),
+    );
+    let mut engine: Engine = SystemVariant::Cause
+        .build_with_trainer(&cfg, Box::new(trainer), EvalPolicy::Never)
+        .expect("engine");
+    let t0 = Instant::now();
+    engine.run_trace(pop, trace).expect("trace run");
+    let secs = t0.elapsed().as_secs_f64();
+    (
+        engine.store().occupied(),
+        engine.metrics.total_rsn(),
+        engine.store().stored_bytes(),
+        secs,
+        engine.metrics.total_requests(),
+    )
+}
+
+fn main() {
+    let mut b = Bench::new("compress");
+    let reps = if fast() { 5 } else { 40 };
+
+    // --- 1. Codec microsection -----------------------------------------
+    let (ratio_dense, enc_dense, dec_dense) = codec_point(&mut b, "keep100", 1.0, reps);
+    let (ratio_30, enc_30, dec_30) = codec_point(&mut b, "keep30", 0.3, reps);
+    let (ratio_05, enc_05, dec_05) = codec_point(&mut b, "keep5", 0.05, reps);
+    println!(
+        "codec ratios: keep=1.0 {ratio_dense:.2}x | keep=0.3 {ratio_30:.2}x | \
+         keep=0.05 {ratio_05:.2}x (sparse bitmask+values, dense fallback)"
+    );
+    println!(
+        "codec throughput at keep=0.3: encode {enc_30:.0} MB/s, decode {dec_30:.0} MB/s"
+    );
+
+    // Delta point: a parent payload perturbed in 5% of entries.
+    let delta_codec = TensorCodec::new(CodecMode::Delta);
+    let parent_params = synth_params(0xde17a, 0.3);
+    let parent = std::sync::Arc::new(delta_codec.encode(&parent_params, None));
+    let mut child = parent_params.clone();
+    let mut rng = Rng::new(0xde17a ^ 1);
+    for t in &mut child {
+        let n = t.len();
+        for _ in 0..n / 20 {
+            let i = rng.below(n as u64) as usize;
+            t.data[i] += 0.5;
+        }
+    }
+    let delta_enc = delta_codec.encode(&child, Some(&parent));
+    assert_eq!(delta_enc.decode(), child, "delta round-trip broke");
+    let ratio_delta = delta_enc.dense_size_bytes() as f64 / delta_enc.size_bytes() as f64;
+    println!(
+        "delta vs 5%-perturbed parent: {ratio_delta:.2}x (is_delta: {})",
+        delta_enc.is_delta()
+    );
+
+    // --- 2. Byte-budget vs slot-mode workload at keep=0.3 --------------
+    let rounds: u32 = if fast() { 14 } else { 24 };
+    let cfg = ExperimentConfig {
+        users: 40,
+        rounds,
+        shards: 4,
+        unlearn_prob: 0.6,
+        prune_keep: 0.3,
+        seed: 0xbeef,
+        ..Default::default()
+    };
+    let shapes = vec![vec![96, 96], vec![96]];
+    // C_m = 6 dense-slot checkpoints: the slot meter provisions for the
+    // codec's dense fallback; the byte meter packs true encoded sizes.
+    let budget = 6 * dense_upper_bound(&shapes);
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.scaled(60_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.8,
+        seed: cfg.seed,
+    });
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig {
+            unlearn_prob: cfg.unlearn_prob,
+            block_incl_prob: 0.9,
+            age_decay: 0.7,
+            frac_range: (0.1, 0.5),
+            seed: cfg.seed ^ 0x7ace,
+        },
+    );
+
+    let (slot_ckpts, slot_rsn, slot_bytes, slot_secs, slot_reqs) =
+        drive(StoreMeter::Slots, budget, &cfg, &pop, &trace);
+    let (byte_ckpts, byte_rsn, byte_bytes, byte_secs, byte_reqs) =
+        drive(StoreMeter::Bytes, budget, &cfg, &pop, &trace);
+    b.record("e2e_slot_meter", &[slot_secs]);
+    b.record("e2e_byte_meter", &[byte_secs]);
+    assert_eq!(slot_reqs, byte_reqs, "both meters serve the same trace");
+    let ckpt_gain = byte_ckpts as f64 / slot_ckpts.max(1) as f64;
+    let rsn_cut = 1.0 - byte_rsn as f64 / slot_rsn.max(1) as f64;
+    println!(
+        "byte-budget workload (C_m = {budget} B, keep=0.3, {slot_reqs} requests): \
+         checkpoints {slot_ckpts} -> {byte_ckpts} ({ckpt_gain:.2}x), \
+         RSN {slot_rsn} -> {byte_rsn} (-{:.1}%), \
+         stored bytes {slot_bytes} -> {byte_bytes}",
+        rsn_cut * 100.0
+    );
+
+    b.report();
+
+    // Machine-readable summary. `gate.ratio` is a deterministic function
+    // of the seeded tensors (hardware-independent); `gate.decode_mbps` is
+    // wall-clock and gated only against a conservative floor.
+    let point = |ratio: f64, enc: f64, dec: f64| {
+        Json::obj()
+            .set("ratio", ratio)
+            .set("encode_mbps", enc)
+            .set("decode_mbps", dec)
+    };
+    let summary = Json::obj()
+        .set("bench", "compress")
+        .set(
+            "codec",
+            Json::obj()
+                .set("keep100", point(ratio_dense, enc_dense, dec_dense))
+                .set("keep30", point(ratio_30, enc_30, dec_30))
+                .set("keep5", point(ratio_05, enc_05, dec_05))
+                .set("delta_ratio", ratio_delta),
+        )
+        .set(
+            "workload",
+            Json::obj()
+                .set("rounds", cfg.rounds as u64)
+                .set("shards", cfg.shards)
+                .set("budget_bytes", budget)
+                .set("requests", slot_reqs)
+                .set(
+                    "slot",
+                    Json::obj()
+                        .set("checkpoints", slot_ckpts)
+                        .set("rsn", slot_rsn)
+                        .set("stored_bytes", slot_bytes),
+                )
+                .set(
+                    "byte",
+                    Json::obj()
+                        .set("checkpoints", byte_ckpts)
+                        .set("rsn", byte_rsn)
+                        .set("stored_bytes", byte_bytes),
+                )
+                .set("checkpoint_gain", ckpt_gain)
+                .set("rsn_cut", rsn_cut),
+        )
+        .set(
+            "gate",
+            Json::obj().set("ratio", ratio_30).set("decode_mbps", dec_30),
+        );
+    let out_path = std::env::var("CAUSE_BENCH_COMPRESS_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_compress.json").to_string()
+    });
+    std::fs::write(&out_path, summary.to_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("\nwrote {out_path}");
+
+    // Acceptance gates (after the report/JSON so failures are diagnosable).
+    assert!(
+        ratio_30 >= 2.0,
+        "keep=0.3 must compress >=2x, got {ratio_30:.2}x"
+    );
+    assert!(
+        ratio_05 > ratio_30 && ratio_30 > ratio_dense,
+        "compression must grow with sparsity: {ratio_dense:.2} / {ratio_30:.2} / {ratio_05:.2}"
+    );
+    assert!(
+        (0.95..=1.0).contains(&(1.0 / ratio_dense)),
+        "dense fallback must stay within header overhead of 1.0x, got {ratio_dense:.3}x"
+    );
+    assert!(
+        byte_ckpts >= 2 * slot_ckpts,
+        "byte meter must keep >=2x checkpoints resident: {byte_ckpts} vs {slot_ckpts}"
+    );
+    assert!(
+        byte_rsn < slot_rsn,
+        "byte meter must cut RSN: {byte_rsn} vs {slot_rsn}"
+    );
+    assert!(byte_bytes <= budget, "byte meter overran C_m");
+    assert!(dec_30 > 0.0 && enc_30 > 0.0);
+}

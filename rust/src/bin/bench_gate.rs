@@ -1,8 +1,8 @@
 //! `bench_gate` — CI bench-regression gate.
 //!
 //! Compares the machine-readable summaries the benches wrote against the
-//! committed `BENCH_baseline.json` and fails (exit 1) when the scheduler
-//! or the planner regresses:
+//! committed `BENCH_baseline.json` and fails (exit 1) when the scheduler,
+//! the planner, or the checkpoint codec regresses:
 //!
 //! * `gate.retrains_coalesced` (from `BENCH_coordinator.json`) drops below
 //!   the baseline (the coalescing win shrank), or
@@ -10,20 +10,33 @@
 //!   latency SLO frontier moved the wrong way), or
 //! * `gate.probe_speedup` (from `BENCH_scale.json`, when given) drops more
 //!   than 20% below `scale.probe_speedup` in the baseline (the indexed
-//!   planner lost throughput against the compiled-in naive-scan oracle).
+//!   planner lost throughput against the compiled-in naive-scan oracle), or
+//! * `gate.ratio` / `gate.decode_mbps` (from `BENCH_compress.json`, when
+//!   given) fall below the `compress.ratio` / `compress.decode_mbps`
+//!   floors in the baseline (the codec compresses or decodes worse than
+//!   the committed floor). The floors are conservative invariant-derived
+//!   values, so they are checked directly, without an extra tolerance.
 //!
-//! The coordinator values are deterministic workload counters and the
-//! scale value is a same-machine ratio (indexed vs naive on identical
-//! state) — never absolute wall-clock — so the gate is stable across
-//! runner hardware.
+//! The coordinator values are deterministic workload counters, the scale
+//! value is a same-machine ratio (indexed vs naive on identical state),
+//! and the compression ratio is a deterministic function of the bench's
+//! seeded tensors — so those gates are stable across runner hardware;
+//! only the decode-throughput floor is wall-clock, and it is pinned far
+//! below any plausible machine.
 //!
 //! A baseline with `"bootstrap": true` passes unconditionally and prints
 //! the block to commit as the pinned baseline — used to seed the gate on a
-//! branch whose workload changed intentionally.
+//! branch whose workload changed intentionally. On a fully **green** run
+//! the gate also prints the ready-to-commit tightened baseline: a
+//! tighten-only merge of the committed values with the run's artifacts
+//! (a run that merely passed within tolerance cannot loosen a floor, and
+//! the wall-clock decode floor is never auto-raised), so green main runs
+//! can ratchet the floors without hand-editing.
 //!
 //! ```bash
 //! cargo run --release --bin bench_gate -- \
-//!     BENCH_baseline.json BENCH_coordinator.json [BENCH_scale.json]
+//!     BENCH_baseline.json BENCH_coordinator.json \
+//!     [BENCH_scale.json [BENCH_compress.json]]
 //! ```
 
 use std::process::ExitCode;
@@ -49,35 +62,82 @@ fn gate_value(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
         .ok_or_else(|| format!("{path}: missing numeric field gate.{key}"))
 }
 
+/// Current gate values measured by this run's artifacts.
+struct Current {
+    coalesced: f64,
+    p99: f64,
+    speedup: Option<f64>,
+    compress: Option<(f64, f64)>, // (ratio, decode_mbps)
+}
+
+impl Current {
+    /// The baseline block these artifacts support — printed in bootstrap
+    /// mode and after a fully green run. A true ratchet: every value only
+    /// ever *tightens* relative to `baseline` (counters/ratios take the
+    /// better of committed vs measured, p99 the smaller), so committing
+    /// the block after a run that merely passed within tolerance cannot
+    /// decay the gates. The wall-clock decode floor is never raised
+    /// automatically: it keeps the committed floor, or suggests a 10x
+    /// headroom under the measured rate when none is pinned — a fast
+    /// runner must not pin a floor slower machines would fail.
+    fn pin_block(&self, baseline: &Json) -> Json {
+        let base = |path: &[&str]| baseline.at(path).and_then(Json::as_f64);
+        let coalesced = self
+            .coalesced
+            .max(base(&["gate", "retrains_coalesced"]).unwrap_or(self.coalesced));
+        let p99 = self.p99.min(base(&["gate", "p99_queue_delay"]).unwrap_or(self.p99));
+        let mut pin = Json::obj().set(
+            "gate",
+            Json::obj()
+                .set("retrains_coalesced", coalesced)
+                .set("p99_queue_delay", p99),
+        );
+        if let Some(s) = self.speedup {
+            let s = s.max(base(&["scale", "probe_speedup"]).unwrap_or(s));
+            pin = pin.set("scale", Json::obj().set("probe_speedup", s));
+        }
+        if let Some((ratio, mbps)) = self.compress {
+            let ratio = ratio.max(base(&["compress", "ratio"]).unwrap_or(ratio));
+            let mbps = base(&["compress", "decode_mbps"]).unwrap_or(mbps / 10.0);
+            pin = pin.set(
+                "compress",
+                Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
+            );
+        }
+        pin
+    }
+}
+
 fn run(
     baseline_path: &str,
     current_path: &str,
     scale_path: Option<&str>,
+    compress_path: Option<&str>,
 ) -> Result<(), String> {
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
 
-    let cur_coalesced = gate_value(&current, current_path, "retrains_coalesced")?;
-    let cur_p99 = gate_value(&current, current_path, "p99_queue_delay")?;
-    let cur_speedup = match scale_path {
-        Some(p) => Some(gate_value(&load(p)?, p, "probe_speedup")?),
-        None => None,
+    let cur = Current {
+        coalesced: gate_value(&current, current_path, "retrains_coalesced")?,
+        p99: gate_value(&current, current_path, "p99_queue_delay")?,
+        speedup: match scale_path {
+            Some(p) => Some(gate_value(&load(p)?, p, "probe_speedup")?),
+            None => None,
+        },
+        compress: match compress_path {
+            Some(p) => {
+                let doc = load(p)?;
+                Some((gate_value(&doc, p, "ratio")?, gate_value(&doc, p, "decode_mbps")?))
+            }
+            None => None,
+        },
     };
 
     if baseline.get("bootstrap").and_then(Json::as_bool) == Some(true) {
-        let mut pin = Json::obj().set(
-            "gate",
-            Json::obj()
-                .set("retrains_coalesced", cur_coalesced)
-                .set("p99_queue_delay", cur_p99),
-        );
-        if let Some(s) = cur_speedup {
-            pin = pin.set("scale", Json::obj().set("probe_speedup", s));
-        }
         println!(
             "bench_gate: baseline {baseline_path} is in bootstrap mode — \
              pin it by committing:\n{}",
-            pin.to_pretty()
+            cur.pin_block(&baseline).to_pretty()
         );
         return Ok(());
     }
@@ -86,26 +146,29 @@ fn run(
     let base_p99 = gate_value(&baseline, baseline_path, "p99_queue_delay")?;
 
     println!(
-        "bench_gate: retrains_coalesced {base_coalesced} -> {cur_coalesced}, \
-         p99_queue_delay {base_p99} -> {cur_p99}"
+        "bench_gate: retrains_coalesced {base_coalesced} -> {}, \
+         p99_queue_delay {base_p99} -> {}",
+        cur.coalesced, cur.p99
     );
 
     let mut failures = Vec::new();
-    if cur_coalesced < base_coalesced {
+    if cur.coalesced < base_coalesced {
         failures.push(format!(
-            "retrains_coalesced dropped: {cur_coalesced} < baseline {base_coalesced}"
+            "retrains_coalesced dropped: {} < baseline {base_coalesced}",
+            cur.coalesced
         ));
     }
     let p99_limit = base_p99 * (1.0 + P99_TOLERANCE);
-    if cur_p99 > p99_limit + 1e-9 {
+    if cur.p99 > p99_limit + 1e-9 {
         failures.push(format!(
-            "p99 queueing delay grew >{:.0}%: {cur_p99} > {p99_limit:.3} \
+            "p99 queueing delay grew >{:.0}%: {} > {p99_limit:.3} \
              (baseline {base_p99})",
-            P99_TOLERANCE * 100.0
+            P99_TOLERANCE * 100.0,
+            cur.p99
         ));
     }
 
-    if let Some(cur_speedup) = cur_speedup {
+    if let Some(cur_speedup) = cur.speedup {
         match baseline.at(&["scale", "probe_speedup"]).and_then(Json::as_f64) {
             Some(base_speedup) => {
                 println!(
@@ -132,8 +195,51 @@ fn run(
         }
     }
 
+    if let Some((cur_ratio, cur_mbps)) = cur.compress {
+        let base_ratio = baseline.at(&["compress", "ratio"]).and_then(Json::as_f64);
+        let base_mbps = baseline.at(&["compress", "decode_mbps"]).and_then(Json::as_f64);
+        match (base_ratio, base_mbps) {
+            (Some(ratio_floor), Some(mbps_floor)) => {
+                println!(
+                    "bench_gate: compress ratio floor {ratio_floor:.2} -> {cur_ratio:.2}, \
+                     decode floor {mbps_floor:.0} MB/s -> {cur_mbps:.0} MB/s"
+                );
+                if cur_ratio < ratio_floor - 1e-9 {
+                    failures.push(format!(
+                        "compression ratio fell below floor: {cur_ratio:.2} < {ratio_floor:.2}"
+                    ));
+                }
+                if cur_mbps < mbps_floor - 1e-9 {
+                    failures.push(format!(
+                        "decode throughput fell below floor: {cur_mbps:.0} < \
+                         {mbps_floor:.0} MB/s"
+                    ));
+                }
+            }
+            _ => {
+                println!(
+                    "bench_gate: {baseline_path} has no compress floors — pin them \
+                     by committing:\n{}",
+                    Json::obj()
+                        .set(
+                            "compress",
+                            Json::obj().set("ratio", cur_ratio).set("decode_mbps", cur_mbps),
+                        )
+                        .to_pretty()
+                );
+            }
+        }
+    }
+
     if failures.is_empty() {
         println!("bench_gate: OK");
+        // Green run: print the tightened baseline these artifacts support
+        // (tighten-only merge against the committed values), so a green
+        // main run can ratchet the floors by committing it verbatim.
+        println!(
+            "bench_gate: tightened baseline from this run (commit to ratchet):\n{}",
+            cur.pin_block(&baseline).to_pretty()
+        );
         Ok(())
     } else {
         Err(failures.join("; "))
@@ -142,18 +248,19 @@ fn run(
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (baseline, current, scale) = match args.as_slice() {
-        [b, c] => (b.as_str(), c.as_str(), None),
-        [b, c, s] => (b.as_str(), c.as_str(), Some(s.as_str())),
+    let (baseline, current, scale, compress) = match args.as_slice() {
+        [b, c] => (b.as_str(), c.as_str(), None, None),
+        [b, c, s] => (b.as_str(), c.as_str(), Some(s.as_str()), None),
+        [b, c, s, z] => (b.as_str(), c.as_str(), Some(s.as_str()), Some(z.as_str())),
         _ => {
             eprintln!(
                 "usage: bench_gate <BENCH_baseline.json> <BENCH_coordinator.json> \
-                 [<BENCH_scale.json>]"
+                 [<BENCH_scale.json> [<BENCH_compress.json>]]"
             );
             return ExitCode::FAILURE;
         }
     };
-    match run(baseline, current, scale) {
+    match run(baseline, current, scale, compress) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("bench_gate: FAIL: {e}");
@@ -192,9 +299,28 @@ mod tests {
             .to_pretty()
     }
 
+    fn doc_full(coalesced: f64, p99: f64, speedup: f64, ratio: f64, mbps: f64) -> String {
+        Json::parse(&doc_with_scale(coalesced, p99, speedup))
+            .unwrap()
+            .set(
+                "compress",
+                Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
+            )
+            .to_pretty()
+    }
+
     fn scale_doc(speedup: f64) -> String {
         Json::obj()
             .set("gate", Json::obj().set("probe_speedup", speedup))
+            .to_pretty()
+    }
+
+    fn compress_doc(ratio: f64, mbps: f64) -> String {
+        Json::obj()
+            .set(
+                "gate",
+                Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
+            )
             .to_pretty()
     }
 
@@ -203,11 +329,11 @@ mod tests {
         let base = write_tmp("base.json", &doc(40.0, 4.0));
         let same = write_tmp("same.json", &doc(40.0, 4.0));
         let better = write_tmp("better.json", &doc(55.0, 3.0));
-        assert!(run(&base, &same, None).is_ok());
-        assert!(run(&base, &better, None).is_ok());
+        assert!(run(&base, &same, None, None).is_ok());
+        assert!(run(&base, &better, None, None).is_ok());
         // Within the 20% latency tolerance.
         let near = write_tmp("near.json", &doc(40.0, 4.8));
-        assert!(run(&base, &near, None).is_ok());
+        assert!(run(&base, &near, None, None).is_ok());
     }
 
     #[test]
@@ -215,11 +341,11 @@ mod tests {
         let base = write_tmp("base2.json", &doc(40.0, 4.0));
         let fewer = write_tmp("fewer.json", &doc(39.0, 4.0));
         let slower = write_tmp("slower.json", &doc(40.0, 4.81));
-        assert!(run(&base, &fewer, None).is_err());
-        assert!(run(&base, &slower, None).is_err());
-        assert!(run("/nonexistent.json", &base, None).is_err());
+        assert!(run(&base, &fewer, None, None).is_err());
+        assert!(run(&base, &slower, None, None).is_err());
+        assert!(run("/nonexistent.json", &base, None, None).is_err());
         let junk = write_tmp("junk.json", "not json");
-        assert!(run(&junk, &base, None).is_err());
+        assert!(run(&junk, &base, None, None).is_err());
     }
 
     #[test]
@@ -229,17 +355,43 @@ mod tests {
         // Within tolerance (20% of 10.0 → floor 8.0) and above.
         let ok = write_tmp("scale_ok.json", &scale_doc(8.5));
         let better = write_tmp("scale_better.json", &scale_doc(30.0));
-        assert!(run(&base, &cur, Some(&ok)).is_ok());
-        assert!(run(&base, &cur, Some(&better)).is_ok());
+        assert!(run(&base, &cur, Some(&ok), None).is_ok());
+        assert!(run(&base, &cur, Some(&better), None).is_ok());
         // Below the floor: fail.
         let bad = write_tmp("scale_bad.json", &scale_doc(7.9));
-        assert!(run(&base, &cur, Some(&bad)).is_err());
+        assert!(run(&base, &cur, Some(&bad), None).is_err());
         // Malformed scale summary: fail even though coordinator gates pass.
         let junk = write_tmp("scale_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&junk)).is_err());
+        assert!(run(&base, &cur, Some(&junk), None).is_err());
         // Baseline without a pinned scale value: informational pass.
         let base_unpinned = write_tmp("base4.json", &doc(40.0, 4.0));
-        assert!(run(&base_unpinned, &cur, Some(&ok)).is_ok());
+        assert!(run(&base_unpinned, &cur, Some(&ok), None).is_ok());
+    }
+
+    #[test]
+    fn compress_gate_checks_floors() {
+        let base = write_tmp("base5.json", &doc_full(40.0, 4.0, 10.0, 2.0, 25.0));
+        let cur = write_tmp("cur5.json", &doc(40.0, 4.0));
+        let scale = write_tmp("scale5.json", &scale_doc(12.0));
+        // At or above both floors: pass.
+        let ok = write_tmp("comp_ok.json", &compress_doc(2.9, 400.0));
+        let exact = write_tmp("comp_exact.json", &compress_doc(2.0, 25.0));
+        assert!(run(&base, &cur, Some(&scale), Some(&ok)).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&exact)).is_ok());
+        // Ratio below the floor: fail (no extra tolerance on floors).
+        let thin = write_tmp("comp_thin.json", &compress_doc(1.9, 400.0));
+        assert!(run(&base, &cur, Some(&scale), Some(&thin)).is_err());
+        // Decode throughput below the floor: fail.
+        let slow = write_tmp("comp_slow.json", &compress_doc(2.9, 20.0));
+        assert!(run(&base, &cur, Some(&scale), Some(&slow)).is_err());
+        // Malformed compress summary: fail.
+        let junk = write_tmp("comp_junk.json", "{}");
+        assert!(run(&base, &cur, Some(&scale), Some(&junk)).is_err());
+        // Baseline without compress floors: informational pass.
+        let base_nofloor = write_tmp("base6.json", &doc_with_scale(40.0, 4.0, 10.0));
+        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&ok)).is_ok());
+        // Compress artifact without the scale artifact also works.
+        assert!(run(&base, &cur, None, Some(&ok)).is_ok());
     }
 
     #[test]
@@ -249,12 +401,60 @@ mod tests {
             &Json::obj().set("bootstrap", true).to_pretty(),
         );
         let cur = write_tmp("cur.json", &doc(12.0, 2.0));
-        assert!(run(&boot, &cur, None).is_ok());
+        assert!(run(&boot, &cur, None, None).is_ok());
         // Bootstrap still requires well-formed current summaries.
         let junk = write_tmp("junk2.json", "{}");
-        assert!(run(&boot, &junk, None).is_err());
+        assert!(run(&boot, &junk, None, None).is_err());
         let scale = write_tmp("boot_scale.json", &scale_doc(12.5));
-        assert!(run(&boot, &cur, Some(&scale)).is_ok());
-        assert!(run(&boot, &cur, Some(&junk)).is_err());
+        assert!(run(&boot, &cur, Some(&scale), None).is_ok());
+        assert!(run(&boot, &cur, Some(&junk), None).is_err());
+        let comp = write_tmp("boot_comp.json", &compress_doc(3.0, 500.0));
+        assert!(run(&boot, &cur, Some(&scale), Some(&comp)).is_ok());
+        assert!(run(&boot, &cur, Some(&scale), Some(&junk)).is_err());
+    }
+
+    #[test]
+    fn pin_block_only_tightens_and_never_pins_wall_clock() {
+        let at = |j: &Json, p: &[&str]| j.at(p).and_then(Json::as_f64);
+        let baseline =
+            Json::parse(&doc_full(40.0, 4.0, 10.0, 2.0, 25.0)).expect("baseline doc");
+        // A run that passed within tolerance (worse p99, lower speedup)
+        // must not loosen anything; genuine improvements do tighten.
+        let cur = Current {
+            coalesced: 55.0,          // better than 40 → ratchets up
+            p99: 4.8,                 // worse than 4.0 (within 20%) → stays 4.0
+            speedup: Some(8.5),       // worse than 10.0 (within 20%) → stays 10.0
+            compress: Some((2.8, 310.0)), // ratio better; mbps is wall-clock
+        };
+        let pin = cur.pin_block(&baseline);
+        assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
+        assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(4.0));
+        assert_eq!(at(&pin, &["scale", "probe_speedup"]), Some(10.0));
+        assert_eq!(at(&pin, &["compress", "ratio"]), Some(2.8));
+        // The decode floor is never raised from a measured wall-clock rate.
+        assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(25.0));
+        // Improvements in the latency/speedup direction do ratchet.
+        let better = Current {
+            coalesced: 40.0,
+            p99: 3.0,
+            speedup: Some(30.0),
+            compress: Some((1.5, 310.0)), // worse ratio → keeps the 2.0 floor
+        };
+        let pin = better.pin_block(&baseline);
+        assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(3.0));
+        assert_eq!(at(&pin, &["scale", "probe_speedup"]), Some(30.0));
+        assert_eq!(at(&pin, &["compress", "ratio"]), Some(2.0));
+        // No committed floors (bootstrap-style baseline): counters pin
+        // as measured, the wall-clock floor gets 10x headroom.
+        let boot = Json::obj().set("bootstrap", true);
+        let pin = cur.pin_block(&boot);
+        assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
+        assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(4.8));
+        assert_eq!(at(&pin, &["scale", "probe_speedup"]), Some(8.5));
+        assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(31.0));
+        // Sections not measured stay absent so they can't un-pin floors.
+        let sparse = Current { coalesced: 1.0, p99: 1.0, speedup: None, compress: None };
+        assert_eq!(sparse.pin_block(&boot).get("scale"), None);
+        assert_eq!(sparse.pin_block(&boot).get("compress"), None);
     }
 }

@@ -6,6 +6,8 @@ pub mod profiles;
 use anyhow::{bail, Result};
 
 use crate::data::catalog::{DatasetSpec, CIFAR10};
+use crate::memory::store::StoreMeter;
+use crate::runtime::codec::CodecMode;
 use crate::unlearning::batch::BatchPolicy;
 pub use profiles::ModelProfile;
 
@@ -41,6 +43,18 @@ pub struct ExperimentConfig {
     /// `0` degenerates to FCFS, `u64::MAX` (config value `inf`) to
     /// whole-queue coalescing at flush time. Ignored by other policies.
     pub batch_slo: u64,
+    /// How the checkpoint store meters C_m: `slots` (the paper's N_mem
+    /// normalization — the default, and what every baseline reproduces) or
+    /// `bytes` (admission/eviction reason in each checkpoint's true
+    /// encoded size, so pruned checkpoints really pack denser). The
+    /// `memory_budget_bytes` config key sets C_m and switches to `bytes`
+    /// in one assignment.
+    pub store_meter: StoreMeter,
+    /// Checkpoint payload codec for tensor-carrying backends: `dense`,
+    /// `sparse` (default — bitmask+values when it pays), or `delta`
+    /// (additionally diff against the lineage's previous payload). The
+    /// accounting backend stores no tensors and ignores this.
+    pub codec: CodecMode,
     pub model: ModelProfile,
     pub dataset: DatasetSpec,
 }
@@ -70,6 +84,8 @@ impl Default for ExperimentConfig {
             batch_policy: BatchPolicy::Coalesce,
             batch_window: 0,
             batch_slo: 0,
+            store_meter: StoreMeter::Slots,
+            codec: CodecMode::Sparse,
             model: profiles::RESNET34,
             dataset: CIFAR10,
         }
@@ -121,6 +137,20 @@ impl ExperimentConfig {
         self
     }
 
+    /// Meter the store in true bytes with this C_m (the
+    /// `memory_budget_bytes` config key).
+    pub fn with_byte_budget(mut self, bytes: u64) -> Self {
+        self.memory_bytes = bytes;
+        self.store_meter = StoreMeter::Bytes;
+        self
+    }
+
+    /// Select the checkpoint payload codec.
+    pub fn with_codec(mut self, codec: CodecMode) -> Self {
+        self.codec = codec;
+        self
+    }
+
     /// Apply a `key = value` assignment (config file / CLI override).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
@@ -155,6 +185,18 @@ impl ExperimentConfig {
                 if let BatchPolicy::Deadline { .. } = self.batch_policy {
                     self.batch_policy = BatchPolicy::Deadline { slo_ticks: self.batch_slo };
                 }
+            }
+            "store_mode" | "store_meter" => {
+                self.store_meter = StoreMeter::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown store mode '{v}'"))?
+            }
+            "memory_budget_bytes" => {
+                self.memory_bytes = v.parse()?;
+                self.store_meter = StoreMeter::Bytes;
+            }
+            "codec" => {
+                self.codec = CodecMode::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown codec '{v}'"))?
             }
             "model" => {
                 self.model = ModelProfile::by_name(v)
@@ -225,6 +267,35 @@ mod tests {
         assert_eq!(c.batch_policy, BatchPolicy::Coalesce);
         assert_eq!(c.batch_window, 0);
         assert_eq!(c.batch_slo, 0);
+        assert_eq!(c.store_meter, StoreMeter::Slots);
+        assert_eq!(c.codec, CodecMode::Sparse);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn store_and_codec_knobs() {
+        let mut c = ExperimentConfig::default();
+        c.apply("store_mode", "bytes").unwrap();
+        assert_eq!(c.store_meter, StoreMeter::Bytes);
+        c.apply("store_mode", "slots").unwrap();
+        assert_eq!(c.store_meter, StoreMeter::Slots);
+        // One-assignment byte budget: sets C_m and flips the meter.
+        c.apply("memory_budget_bytes", "1048576").unwrap();
+        assert_eq!(c.memory_bytes, 1 << 20);
+        assert_eq!(c.store_meter, StoreMeter::Bytes);
+        c.apply("codec", "delta").unwrap();
+        assert_eq!(c.codec, CodecMode::Delta);
+        c.apply("codec", "dense").unwrap();
+        assert_eq!(c.codec, CodecMode::Dense);
+        assert!(c.apply("codec", "gzip").is_err());
+        assert!(c.apply("store_mode", "pages").is_err());
+        // Builder shorthands.
+        let c = ExperimentConfig::default()
+            .with_byte_budget(2048)
+            .with_codec(CodecMode::Delta);
+        assert_eq!(c.memory_bytes, 2048);
+        assert_eq!(c.store_meter, StoreMeter::Bytes);
+        assert_eq!(c.codec, CodecMode::Delta);
         c.validate().unwrap();
     }
 

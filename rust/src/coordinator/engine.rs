@@ -42,10 +42,11 @@ use crate::coordinator::lineage::LineageSet;
 use crate::data::dataset::{BlockId, EdgePopulation};
 use crate::data::trace::{RequestTrace, UnlearnRequest};
 use crate::energy::EnergyModel;
-use crate::memory::{Checkpoint, ModelStore, StoreEvent};
+use crate::memory::{Checkpoint, CheckpointId, ModelStore, StoreEvent};
 use crate::metrics::RunMetrics;
 use crate::partition::Partitioner;
 use crate::pruning::PruneSchedule;
+use crate::runtime::codec::{DecodeCache, EncodedParams, TensorCodec};
 use crate::runtime::HostTensor;
 use crate::shard_controller::ShardController;
 use crate::training::{LineageWorker, TrainOutcome, Trainer};
@@ -102,10 +103,14 @@ struct ResolvedStep {
     clean_cover: u32,
     /// Coverage of the model this step starts from (0 = scratch).
     warm_cover: u32,
-    /// Checkpoint parameters to warm-start from; `None` when chained onto
+    /// Checkpoint payload to warm-start from; `None` when chained onto
     /// the previous step's in-memory model or when starting from scratch.
-    /// A refcount clone of the stored checkpoint — never a tensor copy.
-    warm_params: Option<Arc<[HostTensor]>>,
+    /// A refcount clone of the stored [`EncodedParams`] — never payload
+    /// bytes. Decoding is deferred to the executor, which goes through the
+    /// plan's [`DecodeCache`] right before the step resets the trainer, so
+    /// a checkpoint referenced several times decodes once and at most one
+    /// chain's tensors are dense in memory at a time.
+    warm_start: Option<(CheckpointId, Arc<EncodedParams>)>,
     /// Continue from the previous step's retrained model — it already
     /// covers more than any stored checkpoint below the poisoned segment,
     /// so no trainer reset is needed.
@@ -164,7 +169,9 @@ impl<'a> ChainResolver<'a> {
     }
 
     /// Resolve one lineage's chain for execution: materializes the replay
-    /// sets and clones the warm-start parameter *refcounts*.
+    /// sets and clones the warm-start *payload refcounts* — decoding is
+    /// deferred to the executor so resolution stays cheap and the dense
+    /// tensors of at most one chain exist at a time.
     fn resolve(&self, lp: &LineagePlan) -> ResolvedChain {
         let mut steps = Vec::with_capacity(lp.segments.len());
         let mut prev_clean: Option<u32> = None;
@@ -173,8 +180,8 @@ impl<'a> ChainResolver<'a> {
             let best = self.store.best_checkpoint(lp.lineage, q as u32);
             let (warm_cover, use_stored, chained, scratch) =
                 warm_choice(best.map(|c| c.covered_segments), prev_clean);
-            let warm_params = if use_stored {
-                best.and_then(|c| c.params.clone())
+            let warm_start = if use_stored {
+                best.and_then(|c| c.params.clone().map(|p| (c.id, p)))
             } else {
                 None
             };
@@ -184,7 +191,7 @@ impl<'a> ChainResolver<'a> {
             steps.push(ResolvedStep {
                 clean_cover,
                 warm_cover,
-                warm_params,
+                warm_start,
                 chained,
                 scratch,
                 replay,
@@ -275,6 +282,9 @@ pub struct Engine {
     trainer: Box<dyn Trainer>,
     schedule: PruneSchedule,
     energy: EnergyModel,
+    /// Checkpoint payload codec (applies only to tensor-carrying backends;
+    /// the accounting backend stores no tensors).
+    codec: TensorCodec,
     pub metrics: RunMetrics,
     round: u32,
     eval: EvalPolicy,
@@ -298,6 +308,7 @@ impl Engine {
         eval: EvalPolicy,
     ) -> Self {
         let energy = EnergyModel::for_model(&cfg.model);
+        let codec = TensorCodec::new(cfg.codec);
         let max = cfg.shards;
         Self {
             cfg,
@@ -308,6 +319,7 @@ impl Engine {
             trainer,
             schedule,
             energy,
+            codec,
             metrics: RunMetrics::default(),
             round: 0,
             eval,
@@ -423,21 +435,41 @@ impl Engine {
             self.metrics.ckpts_rejected += 1;
             return Ok(());
         }
-        let (size, params) = self.trainer.snapshot(lineage)?;
+        let (size_hint, params) = self.trainer.snapshot(lineage)?;
+        let (size_bytes, payload) = match params {
+            // Accounting backend: no tensors, the backend's paper-scale
+            // size formula stands.
+            None => (size_hint, None),
+            // Tensor-carrying backend: encode, and derive the stored size
+            // from the actual encoding — not from a profile formula. The
+            // delta base is the lineage's newest surviving payload
+            // (post-invalidation during unlearning, last round's
+            // checkpoint during training); the codec retains it by `Arc`
+            // only when delta blocks actually pay.
+            Some(p) => {
+                let parent = self.store.latest(lineage).and_then(|c| c.params.clone());
+                let enc = Arc::new(self.codec.encode(&p, parent.as_ref()));
+                (enc.size_bytes(), Some(enc))
+            }
+        };
         let id = self.store.next_id();
         let ckpt = Checkpoint {
             id,
             lineage,
             round,
             covered_segments,
-            size_bytes: size,
-            params,
+            size_bytes,
+            params: payload,
         };
         match self.store.store(ckpt) {
             StoreEvent::Stored { .. } => self.metrics.ckpts_stored += 1,
             StoreEvent::Replaced { .. } => {
                 self.metrics.ckpts_stored += 1;
                 self.metrics.ckpts_replaced += 1;
+            }
+            StoreEvent::Evicted { victims, .. } => {
+                self.metrics.ckpts_stored += 1;
+                self.metrics.ckpts_replaced += victims.len() as u64;
             }
             StoreEvent::Rejected => self.metrics.ckpts_rejected += 1,
         }
@@ -557,9 +589,16 @@ impl Engine {
         };
 
         // One resolution pass for both executors (read-only). Warm-start
-        // parameters are refcount clones of the stored checkpoints, so
+        // payloads are refcount clones of the stored checkpoints, so
         // holding every chain for the plan's duration costs pointers, not
         // tensors (the accounting backend stores no parameters at all).
+        // Decoding happens lazily below, through a per-plan cache: a
+        // checkpoint referenced several times while a chain executes
+        // (warm starts, the serving restore) decodes once, and the cache
+        // is released after each chain — checkpoints are lineage-scoped,
+        // so cross-chain reuse is impossible and peak decoded memory is
+        // one chain's, not the whole plan's.
+        let mut cache = DecodeCache::default();
         let resolver = ChainResolver::new(&self.store, &self.lineages);
         let chains: Vec<ResolvedChain> =
             plan.lineages.iter().map(|lp| resolver.resolve(lp)).collect();
@@ -588,7 +627,8 @@ impl Engine {
                     self.apply_step(chain.lineage, step, out, &mut outcome)?;
                     last_clean = last_clean.max(step.clean_cover);
                 }
-                self.restore_serving_model(chain.lineage, last_clean)?;
+                self.restore_serving_model(chain.lineage, last_clean, &mut cache)?;
+                cache.release();
             }
         } else {
             // Serial: execute the pre-resolved chains one lineage at a
@@ -600,7 +640,13 @@ impl Engine {
                 let mut last_clean = 0;
                 for step in &chain.steps {
                     if !step.chained {
-                        self.trainer.reset(chain.lineage, step.warm_params.as_deref())?;
+                        // Lazy decode: only now, on the step that actually
+                        // resets, does the payload become dense tensors.
+                        let decoded = step
+                            .warm_start
+                            .as_ref()
+                            .map(|(id, p)| cache.decoded(id.0, p));
+                        self.trainer.reset(chain.lineage, decoded.as_deref())?;
                     }
                     let out = if step.replay.is_empty() {
                         TrainOutcome::default()
@@ -610,7 +656,8 @@ impl Engine {
                     self.apply_step(chain.lineage, step, &out, &mut outcome)?;
                     last_clean = last_clean.max(step.clean_cover);
                 }
-                self.restore_serving_model(chain.lineage, last_clean)?;
+                self.restore_serving_model(chain.lineage, last_clean, &mut cache)?;
+                cache.release();
             }
         }
 
@@ -653,15 +700,23 @@ impl Engine {
     /// Serving continuity: the deployed sub-model stays the newest version
     /// (the paper keeps later sub-model versions in place — DESIGN.md
     /// §Key-decisions); the retrain refreshed the *poisoned* versions.
-    /// Restoring clones a parameter refcount, not the tensors.
-    fn restore_serving_model(&mut self, lineage: usize, last_clean: u32) -> Result<()> {
+    /// Restoring decodes through the plan's cache (at most once per
+    /// checkpoint per plan) and hands the trainer a refcount of the
+    /// decoded tensors, never a copy.
+    fn restore_serving_model(
+        &mut self,
+        lineage: usize,
+        last_clean: u32,
+        cache: &mut DecodeCache,
+    ) -> Result<()> {
         let newest = self
             .store
             .latest(lineage)
             .filter(|c| c.covered_segments > last_clean)
-            .map(|c| c.params.clone());
-        if let Some(params) = newest {
-            self.trainer.reset(lineage, params.as_deref())?;
+            .map(|c| (c.id, c.params.clone()));
+        if let Some((id, payload)) = newest {
+            let decoded = payload.map(|p| cache.decoded(id.0, &p));
+            self.trainer.reset(lineage, decoded.as_deref())?;
         }
         Ok(())
     }
@@ -703,22 +758,27 @@ mod tests {
     use crate::memory::CheckpointId;
     use crate::partition::Placement;
     use crate::replacement::NoReplace;
+    use crate::runtime::codec::CodecMode;
 
-    /// Warm-start resolution must share checkpoint parameters by
-    /// refcount: resolving a chain adds `Arc` strong counts, never copies
-    /// tensor data (the acceptance criterion for zero-copy restores).
+    /// Warm-start resolution shares checkpoint *payloads* by refcount
+    /// (never payload bytes), and the executor-side decode goes through
+    /// the plan cache exactly once per checkpoint — the decode-cached
+    /// successor of the zero-copy refcount criterion.
     #[test]
-    fn warm_start_params_are_refcounted_not_cloned() {
+    fn warm_start_shares_payload_refcounts_and_decodes_once() {
         let mut store = ModelStore::new(2, Box::new(NoReplace));
-        let params: Arc<[HostTensor]> = vec![HostTensor::zeros(&[32, 32])].into();
+        let tensors =
+            vec![HostTensor::from_fn(&[32, 32], |i| if i % 4 == 0 { 0.0 } else { i as f32 })];
+        let codec = TensorCodec::new(CodecMode::Sparse);
+        let payload = Arc::new(codec.encode(&tensors, None));
         let id = store.next_id();
         store.store(Checkpoint {
             id,
             lineage: 0,
             round: 1,
             covered_segments: 1,
-            size_bytes: 1,
-            params: Some(params.clone()),
+            size_bytes: payload.size_bytes(),
+            params: Some(payload.clone()),
         });
 
         let mut lineages = LineageSet::new(1);
@@ -738,12 +798,25 @@ mod tests {
         let chain = resolver.resolve(&lp);
         assert_eq!(chain.lineage, 0);
         assert_eq!(chain.steps.len(), 1);
-        let wp = chain.steps[0].warm_params.as_ref().expect("warm start has params");
-        assert!(Arc::ptr_eq(wp, &params), "warm params must share, not copy");
+        let (wid, enc) = chain.steps[0].warm_start.as_ref().expect("warm start has payload");
+        assert!(Arc::ptr_eq(enc, &payload), "payload must share, not copy");
         // Strong counts: the store's copy, the test's handle, the chain's.
-        assert_eq!(Arc::strong_count(&params), 3);
+        assert_eq!(Arc::strong_count(&payload), 3);
         assert_eq!(chain.steps[0].warm_cover, 1);
-        // The allocation-free probe prices the same chain identically.
+        // Executor-side decode: once per checkpoint per plan, shared by
+        // refcount afterwards; release() scopes the dense memory without
+        // losing the statistics.
+        let mut cache = DecodeCache::default();
+        let a = cache.decoded(wid.0, enc);
+        let b = cache.decoded(wid.0, enc);
+        assert_eq!(a.as_ref(), tensors.as_slice(), "decode must be exact");
+        assert!(Arc::ptr_eq(&a, &b), "per-plan cache must share decodes");
+        assert_eq!((cache.decodes, cache.hits), (1, 1));
+        cache.release();
+        assert_eq!(cache.decoded(wid.0, enc).as_ref(), tensors.as_slice());
+        assert_eq!(cache.decodes, 2);
+        // The allocation-free probe prices the same chain identically and
+        // never decodes anything.
         assert_eq!(
             resolver.rsn(&lp),
             chain.steps.iter().map(|s| s.rsn).sum::<u64>()

@@ -16,7 +16,7 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::engine::{Engine, EvalPolicy};
-use crate::memory::ModelStore;
+use crate::memory::{ModelStore, StoreMeter};
 use crate::partition::{ClassBased, Partitioner, Ucdp, Uniform};
 use crate::pruning::PruneSchedule;
 use crate::replacement::{FiboR, NoReplace, RandomReplace, ReplacementPolicy};
@@ -145,9 +145,20 @@ impl SystemVariant {
         eval: EvalPolicy,
     ) -> Result<Engine> {
         cfg.validate()?;
-        let slots =
-            ((cfg.memory_bytes / trainer.checkpoint_bytes().max(1)) as usize).max(1);
-        let store = ModelStore::new(slots, self.replacement(cfg));
+        let store = match cfg.store_meter {
+            // Paper baseline: C_m normalized to N_mem slots of one
+            // (worst-case) checkpoint each.
+            StoreMeter::Slots => {
+                let slots =
+                    ((cfg.memory_bytes / trainer.checkpoint_bytes().max(1)) as usize).max(1);
+                ModelStore::new(slots, self.replacement(cfg))
+            }
+            // Bytes are the currency: admission and eviction reason in
+            // each checkpoint's true encoded size.
+            StoreMeter::Bytes => {
+                ModelStore::with_byte_budget(cfg.memory_bytes.max(1), self.replacement(cfg))
+            }
+        };
         Ok(Engine::new(
             cfg.clone(),
             self.partitioner(cfg),

@@ -30,6 +30,7 @@ SYSTEMS:
 CONFIG KEYS (key=value):
     seed users rounds epochs_per_round shards memory_gb unlearn_prob
     sc_gamma sc_p prune_keep batch_policy batch_window batch_slo model dataset
+    store_mode memory_budget_bytes codec
 
 BATCHING:
     batch_policy = fcfs | coalesce | deadline
@@ -37,6 +38,13 @@ BATCHING:
                    'inf' ≡ coalesce-at-flush); per-request queueing-delay
                    receipts land in the metrics JSON (queue_delay_p50/p99,
                    slo_violations)
+
+MEMORY:
+    store_mode          = slots | bytes (slots = paper N_mem baseline;
+                          bytes = admission/eviction in true encoded bytes)
+    memory_budget_bytes = C_m in bytes; implies store_mode = bytes
+    codec               = dense | sparse | delta (checkpoint payload codec,
+                          tensor-carrying backends only)
 "
 }
 

@@ -1,5 +1,8 @@
-//! Device memory accounting: the checkpoint (sub-model) store.
+//! Device memory accounting: the checkpoint (sub-model) store, metered in
+//! normalized slots (paper baseline) or true encoded bytes.
 
 pub mod store;
 
-pub use store::{Checkpoint, CheckpointId, ModelStore, StoreEvent, StoreStats};
+pub use store::{
+    CapacityMode, Checkpoint, CheckpointId, ModelStore, StoreEvent, StoreMeter, StoreStats,
+};

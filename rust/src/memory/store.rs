@@ -1,14 +1,32 @@
-//! The sub-model checkpoint store — the paper's normalized memory
-//! (`N_mem` slots) plus the replacement machinery of Algorithm 2.
+//! The sub-model checkpoint store — the paper's memory budget C_m plus the
+//! replacement machinery of Algorithm 2, metered in **slots** (the paper's
+//! normalized N_mem, the default) or in **true bytes**.
 //!
 //! Slots hold checkpoints of shard lineages at specific rounds. While free
-//! slots remain, new checkpoints are stored directly (Algorithm 2 lines
+//! capacity remains, new checkpoints are stored directly (Algorithm 2 lines
 //! 5–7); once full, the configured [`ReplacementPolicy`] picks the victim
-//! slot (lines 9–11) or rejects the store (the no-replacement baselines).
+//! (lines 9–11) or rejects the store (the no-replacement baselines).
 //!
 //! The store also implements Algorithm 3 line 11: when an unlearning
 //! request invalidates checkpoints (they contain the unlearned data), they
-//! are deleted in place, freeing slots.
+//! are deleted in place, freeing capacity.
+//!
+//! ## Capacity modes
+//!
+//! * [`ModelStore::new`] — `capacity` = N_mem equal slots (the paper
+//!   normalizes memory by *dense* sub-model size). Semantics are byte-
+//!   identical to the pre-byte-mode store: every admission, eviction, and
+//!   rejection receipt is unchanged, which keeps the SISA/ARCANE/OMP
+//!   baselines exactly reproducible.
+//! * [`ModelStore::with_byte_budget`] — C_m in bytes. Admission reasons in
+//!   each checkpoint's true `size_bytes` (derived from the codec's actual
+//!   encoding): the policy evicts **as many victims as needed** to fit the
+//!   incoming checkpoint, so a keep=0.3 sparse-encoded model occupies ~1/3
+//!   of a dense one and the same C_m holds ~3x the checkpoints. The victim
+//!   policy ranks over the *resident* checkpoints (rank r → r-th occupied
+//!   slot); on a full uniform-size store that mapping is the identity, so
+//!   unit-size byte budgets replay slot mode byte for byte
+//!   (property-tested in `tests/compressed_store.rs`).
 //!
 //! ## Complexity
 //!
@@ -20,16 +38,19 @@
 //!   range queries (tie-broken exactly like the original scan: highest
 //!   coverage, then highest slot)
 //! * [`ModelStore::occupied`] — O(1) (free-slot set)
-//! * [`ModelStore::store`] — O(log n) (lowest free slot via the set)
+//! * [`ModelStore::stored_bytes`] — O(1) (a counter maintained by
+//!   store/evict/invalidate)
+//! * [`ModelStore::store`] — O(log n) (lowest free slot via the set), plus
+//!   O(occupied) per eviction in byte mode (victim-rank resolution)
 //!
 //! The `*_scan` twins keep the original linear scans alive as differential
-//! oracles for the property tests and `bench_scale`'s naive baseline.
+//! oracles for the property tests and the benches' naive baselines.
 
 use std::collections::BTreeSet;
 use std::sync::Arc;
 
 use crate::replacement::ReplacementPolicy;
-use crate::runtime::HostTensor;
+use crate::runtime::codec::EncodedParams;
 
 /// Unique checkpoint id (monotonic per store).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -46,27 +67,71 @@ pub struct Checkpoint {
     /// Number of lineage *segments* (rounds of data) covered — a checkpoint
     /// covers a contiguous prefix of its lineage's training history.
     pub covered_segments: u32,
-    /// Stored (pruned) size in bytes.
+    /// Stored size in bytes. For tensor-carrying backends this is the true
+    /// encoded payload size ([`EncodedParams::size_bytes`]); the accounting
+    /// backend supplies its paper-scale formula value.
     pub size_bytes: u64,
-    /// Actual parameters when running with the PJRT trainer; None in the
-    /// pure-accounting path. Shared ownership: warm-start resolution and
-    /// serving restores clone the refcount, never the tensor data.
-    pub params: Option<Arc<[HostTensor]>>,
+    /// Encoded parameters when running with a tensor-carrying trainer;
+    /// None in the pure-accounting path. Shared ownership: warm-start
+    /// resolution and serving restores clone the refcount and decode
+    /// through a per-plan cache, never copying payload bytes.
+    pub params: Option<Arc<EncodedParams>>,
+}
+
+/// How a store meters its capacity.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CapacityMode {
+    /// N_mem equal slots (paper baseline).
+    Slots(usize),
+    /// C_m true bytes.
+    Bytes(u64),
+}
+
+/// Config-level store metering choice; the budget value itself is the
+/// experiment's C_m (`memory_bytes`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StoreMeter {
+    /// C_m normalized to N_mem equal slots (the paper's accounting).
+    #[default]
+    Slots,
+    /// C_m metered in true encoded bytes.
+    Bytes,
+}
+
+impl StoreMeter {
+    pub fn by_name(name: &str) -> Option<StoreMeter> {
+        match name.to_ascii_lowercase().as_str() {
+            "slots" | "slot" => Some(StoreMeter::Slots),
+            "bytes" | "byte" => Some(StoreMeter::Bytes),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StoreMeter::Slots => "slots",
+            StoreMeter::Bytes => "bytes",
+        }
+    }
 }
 
 /// Outcome of a store attempt.
 #[derive(Clone, Debug, PartialEq, Eq)]
 pub enum StoreEvent {
-    /// Stored into a free slot.
+    /// Stored into free capacity.
     Stored { slot: usize },
-    /// Evicted the previous occupant of `slot`.
+    /// Evicted the previous occupant of `slot` (slot mode, and the
+    /// byte-mode case where one victim's slot is reused directly).
     Replaced { slot: usize, evicted: CheckpointId },
+    /// Byte mode: made room by evicting one or more victims, then stored
+    /// into `slot` (which need not be a victim's slot).
+    Evicted { slot: usize, victims: Vec<CheckpointId> },
     /// Dropped (no-replacement policy and memory full).
     Rejected,
 }
 
 /// Cumulative counters for reporting.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct StoreStats {
     pub stored: u64,
     pub replaced: u64,
@@ -74,12 +139,13 @@ pub struct StoreStats {
     pub invalidated: u64,
 }
 
-/// The checkpoint store: `capacity` normalized slots.
+/// The checkpoint store.
 pub struct ModelStore {
     slots: Vec<Option<Checkpoint>>,
     policy: Box<dyn ReplacementPolicy>,
     next_id: u64,
     stats: StoreStats,
+    mode: CapacityMode,
     /// Currently empty slots (lowest-first allocation, like the original
     /// free-slot scan).
     free: BTreeSet<usize>,
@@ -87,10 +153,14 @@ pub struct ModelStore {
     /// The last element of a `(lineage, ..=coverage)` range is exactly the
     /// checkpoint the original `max_by_key` scan selected.
     by_cover: BTreeSet<(usize, u32, usize)>,
+    /// Σ `size_bytes` over stored checkpoints — maintained by every
+    /// store/evict/invalidate so [`ModelStore::stored_bytes`] is O(1).
+    bytes: u64,
 }
 
 impl ModelStore {
-    /// `capacity` = N_mem (the paper normalizes memory by sub-model size).
+    /// Slot mode: `capacity` = N_mem (the paper normalizes memory by
+    /// sub-model size).
     pub fn new(capacity: usize, policy: Box<dyn ReplacementPolicy>) -> Self {
         assert!(capacity >= 1, "store needs at least one slot");
         Self {
@@ -98,13 +168,48 @@ impl ModelStore {
             policy,
             next_id: 0,
             stats: StoreStats::default(),
+            mode: CapacityMode::Slots(capacity),
             free: (0..capacity).collect(),
             by_cover: BTreeSet::new(),
+            bytes: 0,
         }
     }
 
+    /// Byte mode: admission, eviction, and `would_accept` reason in true
+    /// checkpoint bytes against `budget` = C_m. Slots are allocated on
+    /// demand and only bound diagnostics.
+    pub fn with_byte_budget(budget: u64, policy: Box<dyn ReplacementPolicy>) -> Self {
+        assert!(budget >= 1, "store needs a positive byte budget");
+        Self {
+            slots: Vec::new(),
+            policy,
+            next_id: 0,
+            stats: StoreStats::default(),
+            mode: CapacityMode::Bytes(budget),
+            free: BTreeSet::new(),
+            by_cover: BTreeSet::new(),
+            bytes: 0,
+        }
+    }
+
+    /// Slot-array length: the fixed N_mem in slot mode; in byte mode the
+    /// high-water mark of simultaneously resident checkpoints
+    /// (diagnostics — the byte budget is what binds).
     pub fn capacity(&self) -> usize {
         self.slots.len()
+    }
+
+    /// How this store meters capacity.
+    pub fn mode(&self) -> CapacityMode {
+        self.mode
+    }
+
+    /// The byte budget when metering bytes.
+    pub fn byte_budget(&self) -> Option<u64> {
+        match self.mode {
+            CapacityMode::Slots(_) => None,
+            CapacityMode::Bytes(b) => Some(b),
+        }
     }
 
     /// Occupied slot count. O(1) via the free-slot set.
@@ -116,6 +221,17 @@ impl ModelStore {
     /// linear count. Test/bench use only.
     pub fn occupied_scan(&self) -> usize {
         self.slots.iter().filter(|s| s.is_some()).count()
+    }
+
+    /// Total bytes currently stored. O(1) maintained counter.
+    pub fn stored_bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Differential oracle for [`ModelStore::stored_bytes`]: the original
+    /// full-slot scan. Test/bench use only.
+    pub fn stored_bytes_scan(&self) -> u64 {
+        self.iter().map(|c| c.size_bytes).sum()
     }
 
     pub fn stats(&self) -> &StoreStats {
@@ -134,11 +250,29 @@ impl ModelStore {
     }
 
     /// Would [`ModelStore::store`] accept a checkpoint right now (free
-    /// slot, or an evicting policy), or reject it (no-replacement policy
-    /// and memory full)? Read-only probe — lets the engine skip the
+    /// capacity, or an evicting policy), or reject it (no-replacement
+    /// policy and memory full)? Read-only probe — lets the engine skip the
     /// checkpoint snapshot entirely when the store would drop it anyway.
+    /// In byte mode the probe is size-free and therefore *conservative*:
+    /// it may say yes to a payload that turns out oversized, in which case
+    /// `store()` rejects with identical accounting (use
+    /// [`ModelStore::would_accept_bytes`] for a size-aware answer).
     pub fn would_accept(&self) -> bool {
-        !self.free.is_empty() || self.policy.would_evict()
+        match self.mode {
+            CapacityMode::Slots(_) => !self.free.is_empty() || self.policy.would_evict(),
+            CapacityMode::Bytes(budget) => self.policy.would_evict() || self.bytes < budget,
+        }
+    }
+
+    /// Size-aware admission probe: would `store()` accept a checkpoint of
+    /// `size` bytes right now? Slot mode ignores `size`.
+    pub fn would_accept_bytes(&self, size: u64) -> bool {
+        match self.mode {
+            CapacityMode::Slots(_) => self.would_accept(),
+            CapacityMode::Bytes(budget) => {
+                size <= budget && (self.policy.would_evict() || self.bytes + size <= budget)
+            }
+        }
     }
 
     /// Account a rejection decided via [`ModelStore::would_accept`]
@@ -150,8 +284,17 @@ impl ModelStore {
 
     /// Store a checkpoint per Algorithm 2. Returns what happened.
     pub fn store(&mut self, ckpt: Checkpoint) -> StoreEvent {
+        match self.mode {
+            CapacityMode::Slots(_) => self.store_slot(ckpt),
+            CapacityMode::Bytes(budget) => self.store_bytes(ckpt, budget),
+        }
+    }
+
+    /// Slot-mode admission — byte-identical to the pre-byte-mode store.
+    fn store_slot(&mut self, ckpt: Checkpoint) -> StoreEvent {
         if let Some(free) = self.free.pop_first() {
             self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, free));
+            self.bytes += ckpt.size_bytes;
             self.slots[free] = Some(ckpt);
             self.stats.stored += 1;
             return StoreEvent::Stored { slot: free };
@@ -161,8 +304,10 @@ impl ModelStore {
                 let old = self.slots[slot].as_ref().expect("full store");
                 let evicted = old.id;
                 let old_key = (old.lineage, old.covered_segments, slot);
+                self.bytes -= old.size_bytes;
                 self.by_cover.remove(&old_key);
                 self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, slot));
+                self.bytes += ckpt.size_bytes;
                 self.slots[slot] = Some(ckpt);
                 self.stats.stored += 1;
                 self.stats.replaced += 1;
@@ -173,6 +318,71 @@ impl ModelStore {
                 StoreEvent::Rejected
             }
         }
+    }
+
+    /// Byte-mode admission: evict as many victims as the budget requires.
+    fn store_bytes(&mut self, ckpt: Checkpoint, budget: u64) -> StoreEvent {
+        if ckpt.size_bytes > budget {
+            // Larger than all of C_m: no eviction set can ever fit it.
+            self.stats.rejected += 1;
+            return StoreEvent::Rejected;
+        }
+        let mut victims: Vec<(usize, CheckpointId)> = Vec::new();
+        while self.bytes + ckpt.size_bytes > budget {
+            let resident = self.occupied();
+            debug_assert!(resident > 0, "positive stored bytes imply occupancy");
+            let Some(rank) = self.policy.victim(resident) else {
+                // No-replacement policy: it rejects on the first call, so
+                // nothing has been evicted yet.
+                debug_assert!(victims.is_empty(), "policy flipped mid-eviction");
+                self.stats.rejected += 1;
+                return StoreEvent::Rejected;
+            };
+            let slot = self.nth_occupied(rank);
+            let old = self.slots[slot].take().expect("occupied rank maps to a full slot");
+            self.by_cover.remove(&(old.lineage, old.covered_segments, slot));
+            self.bytes -= old.size_bytes;
+            self.free.insert(slot);
+            victims.push((slot, old.id));
+        }
+        let slot = match self.free.pop_first() {
+            Some(s) => s,
+            None => {
+                self.slots.push(None);
+                self.slots.len() - 1
+            }
+        };
+        self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, slot));
+        self.bytes += ckpt.size_bytes;
+        self.slots[slot] = Some(ckpt);
+        self.stats.stored += 1;
+        self.stats.replaced += victims.len() as u64;
+        if victims.is_empty() {
+            StoreEvent::Stored { slot }
+        } else if victims.len() == 1 && victims[0].0 == slot {
+            // One victim whose slot is reused directly: the receipt is the
+            // slot path's, so unit-size byte budgets replay slot mode
+            // byte for byte.
+            StoreEvent::Replaced { slot, evicted: victims[0].1 }
+        } else {
+            StoreEvent::Evicted {
+                slot,
+                victims: victims.into_iter().map(|(_, id)| id).collect(),
+            }
+        }
+    }
+
+    /// Slot index of the `rank`-th resident checkpoint (ascending slot
+    /// order). On a full store this is the identity, matching the slot
+    /// path's policy semantics exactly.
+    fn nth_occupied(&self, rank: usize) -> usize {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.is_some())
+            .nth(rank)
+            .map(|(i, _)| i)
+            .expect("victim rank within occupancy")
     }
 
     /// Newest stored checkpoint of `lineage` covering at most
@@ -222,14 +432,17 @@ impl ModelStore {
     /// returns how many were removed.
     pub fn invalidate(&mut self, mut pred: impl FnMut(&Checkpoint) -> bool) -> usize {
         let mut n = 0;
+        let mut freed = 0u64;
         for (slot, s) in self.slots.iter_mut().enumerate() {
             if s.as_ref().map(&mut pred).unwrap_or(false) {
                 let old = s.take().expect("checked above");
                 self.by_cover.remove(&(old.lineage, old.covered_segments, slot));
+                freed += old.size_bytes;
                 self.free.insert(slot);
                 n += 1;
             }
         }
+        self.bytes -= freed;
         self.stats.invalidated += n as u64;
         n
     }
@@ -237,11 +450,6 @@ impl ModelStore {
     /// Iterate stored checkpoints.
     pub fn iter(&self) -> impl Iterator<Item = &Checkpoint> {
         self.slots.iter().flatten()
-    }
-
-    /// Total bytes currently stored (diagnostics; capacity is slot-based).
-    pub fn stored_bytes(&self) -> u64 {
-        self.iter().map(|c| c.size_bytes).sum()
     }
 }
 
@@ -252,12 +460,16 @@ mod tests {
     use crate::testkit::forall_prefixes;
 
     fn ckpt(id: u64, lineage: usize, round: u32, segs: u32) -> Checkpoint {
+        sized_ckpt(id, lineage, round, segs, 100)
+    }
+
+    fn sized_ckpt(id: u64, lineage: usize, round: u32, segs: u32, bytes: u64) -> Checkpoint {
         Checkpoint {
             id: CheckpointId(id),
             lineage,
             round,
             covered_segments: segs,
-            size_bytes: 100,
+            size_bytes: bytes,
             params: None,
         }
     }
@@ -269,6 +481,13 @@ mod tests {
                 "occupied {} != scan {}",
                 st.occupied(),
                 st.occupied_scan()
+            ));
+        }
+        if st.stored_bytes() != st.stored_bytes_scan() {
+            return Err(format!(
+                "stored_bytes {} != scan {}",
+                st.stored_bytes(),
+                st.stored_bytes_scan()
             ));
         }
         for l in 0..5 {
@@ -297,6 +516,7 @@ mod tests {
         assert_eq!(st.store(ckpt(1, 1, 1, 1)), StoreEvent::Stored { slot: 1 });
         assert_eq!(st.store(ckpt(2, 2, 1, 1)), StoreEvent::Stored { slot: 2 });
         assert_eq!(st.occupied(), 3);
+        assert_eq!(st.stored_bytes(), 300);
         match st.store(ckpt(3, 0, 2, 2)) {
             StoreEvent::Replaced { evicted, .. } => assert_eq!(evicted, CheckpointId(0)),
             other => panic!("expected replacement, got {other:?}"),
@@ -367,9 +587,80 @@ mod tests {
         st.store(ckpt(1, 0, 2, 2));
         assert_eq!(st.invalidate(|c| c.covered_segments >= 2), 1);
         assert_eq!(st.occupied(), 1);
+        assert_eq!(st.stored_bytes(), 100);
         // Freed slot accepts a new checkpoint even under NoReplace.
         assert!(matches!(st.store(ckpt(2, 0, 3, 1)), StoreEvent::Stored { .. }));
         assert_index_matches_scan(&st).unwrap();
+    }
+
+    #[test]
+    fn byte_budget_admits_by_size_not_count() {
+        let mut st = ModelStore::with_byte_budget(1000, Box::new(NoReplace));
+        assert_eq!(st.mode(), CapacityMode::Bytes(1000));
+        assert_eq!(st.byte_budget(), Some(1000));
+        for i in 0..10 {
+            assert!(st.would_accept_bytes(100));
+            assert_eq!(
+                st.store(sized_ckpt(i, 0, i as u32 + 1, i as u32 + 1, 100)),
+                StoreEvent::Stored { slot: i as usize }
+            );
+        }
+        // Budget exhausted: no-replacement rejects regardless of slots.
+        assert!(!st.would_accept_bytes(1));
+        assert!(!st.would_accept());
+        assert_eq!(st.store(sized_ckpt(10, 0, 11, 11, 1)), StoreEvent::Rejected);
+        assert_eq!(st.occupied(), 10);
+        assert_eq!(st.stored_bytes(), 1000);
+        // Invalidation frees bytes, not just slots.
+        st.invalidate(|c| c.covered_segments <= 2);
+        assert_eq!(st.stored_bytes(), 800);
+        assert!(st.would_accept_bytes(200));
+        assert!(!st.would_accept_bytes(201));
+        assert_index_matches_scan(&st).unwrap();
+    }
+
+    #[test]
+    fn byte_budget_evicts_as_many_victims_as_needed() {
+        let mut st = ModelStore::with_byte_budget(100, Box::new(FiboR::new()));
+        st.store(sized_ckpt(0, 0, 1, 1, 40));
+        st.store(sized_ckpt(1, 0, 2, 2, 40));
+        assert_eq!(st.stored_bytes(), 80);
+        // An 80-byte incomer must displace both residents.
+        match st.store(sized_ckpt(2, 0, 3, 3, 80)) {
+            StoreEvent::Evicted { victims, .. } => {
+                assert_eq!(victims.len(), 2);
+            }
+            other => panic!("expected multi-victim eviction, got {other:?}"),
+        }
+        assert_eq!(st.occupied(), 1);
+        assert_eq!(st.stored_bytes(), 80);
+        assert_eq!(st.stats().stored, 3);
+        assert_eq!(st.stats().replaced, 2);
+        // Oversized payloads are rejected outright, evicting nothing.
+        assert_eq!(st.store(sized_ckpt(3, 0, 4, 4, 101)), StoreEvent::Rejected);
+        assert_eq!(st.occupied(), 1);
+        assert!(!st.would_accept_bytes(101));
+        assert!(st.would_accept_bytes(100)); // evicting policy
+        assert_index_matches_scan(&st).unwrap();
+    }
+
+    #[test]
+    fn byte_budget_unit_sizes_replay_slot_mode() {
+        // With unit-size checkpoints and budget == slot count, the byte
+        // store must produce the slot store's exact receipts.
+        let mut slot = ModelStore::new(4, Box::new(FiboR::new()));
+        let mut byte = ModelStore::with_byte_budget(4, Box::new(FiboR::new()));
+        for i in 0..20u64 {
+            let a = slot.store(sized_ckpt(i, (i % 3) as usize, i as u32 + 1, i as u32 + 1, 1));
+            let b = byte.store(sized_ckpt(i, (i % 3) as usize, i as u32 + 1, i as u32 + 1, 1));
+            assert_eq!(a, b, "event diverged at store #{i}");
+        }
+        assert_eq!(slot.stats(), byte.stats());
+        assert_eq!(slot.occupied(), byte.occupied());
+        assert_eq!(slot.stored_bytes(), byte.stored_bytes());
+        for l in 0..3 {
+            assert_eq!(slot.latest(l).map(|c| c.id), byte.latest(l).map(|c| c.id));
+        }
     }
 
     #[test]
@@ -401,6 +692,10 @@ mod tests {
                         accepts,
                         event != StoreEvent::Rejected,
                         "would_accept disagreed with store()"
+                    );
+                    assert!(
+                        !matches!(event, StoreEvent::Evicted { .. }),
+                        "slot mode must never emit byte-mode receipts"
                     );
                 }
             },
@@ -456,6 +751,100 @@ mod tests {
                 }
             },
             |st| assert_index_matches_scan(st),
+        );
+    }
+
+    /// Byte mode under random sizes and interleavings: the O(1) byte
+    /// counter must track the scan oracle, the budget must never be
+    /// exceeded, and the size-aware probe must predict admission.
+    #[test]
+    fn prop_byte_mode_counter_matches_scan_and_budget_holds() {
+        const BUDGET: u64 = 250;
+        forall_prefixes(
+            0xB7E5,
+            60,
+            |rng, size| {
+                let n = 1 + (50.0 * size) as usize;
+                (0..n)
+                    .map(|i| {
+                        (
+                            i as u64,
+                            rng.range(0, 4),
+                            rng.range(1, 10) as u32,
+                            rng.range(1, 120) as u64, // checkpoint bytes
+                            rng.chance(0.25),
+                            // the policy is fixed per store; this picks
+                            // invalidation breadth instead
+                            rng.chance(0.5),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            || ModelStore::with_byte_budget(BUDGET, Box::new(FiboR::new())),
+            |st, (id, lineage, round, bytes, invalidate, wide)| {
+                if *invalidate {
+                    if *wide {
+                        st.invalidate(|c| c.lineage == *lineage);
+                    } else {
+                        st.invalidate(|c| c.lineage == *lineage && c.covered_segments == *round);
+                    }
+                } else {
+                    let accepts = st.would_accept_bytes(*bytes);
+                    let event = st.store(sized_ckpt(*id, *lineage, *round, *round, *bytes));
+                    assert_eq!(
+                        accepts,
+                        event != StoreEvent::Rejected,
+                        "would_accept_bytes disagreed with store() for {bytes} bytes"
+                    );
+                }
+            },
+            |st| {
+                if st.stored_bytes() > BUDGET {
+                    return Err(format!("over budget: {}", st.stored_bytes()));
+                }
+                assert_index_matches_scan(st)
+            },
+        );
+    }
+
+    /// Byte mode with a rejecting policy: the probe and the store must
+    /// agree even when admission depends on the incoming size.
+    #[test]
+    fn prop_byte_mode_no_replace_probe_agrees() {
+        const BUDGET: u64 = 120;
+        forall_prefixes(
+            0xB0B5,
+            50,
+            |rng, size| {
+                let n = 1 + (40.0 * size) as usize;
+                (0..n)
+                    .map(|i| {
+                        (
+                            i as u64,
+                            rng.range(0, 3),
+                            rng.range(1, 8) as u32,
+                            rng.range(1, 150) as u64,
+                            rng.chance(0.3),
+                        )
+                    })
+                    .collect::<Vec<_>>()
+            },
+            || ModelStore::with_byte_budget(BUDGET, Box::new(NoReplace)),
+            |st, (id, lineage, round, bytes, invalidate)| {
+                if *invalidate {
+                    st.invalidate(|c| c.lineage == *lineage);
+                } else {
+                    let accepts = st.would_accept_bytes(*bytes);
+                    let event = st.store(sized_ckpt(*id, *lineage, *round, *round, *bytes));
+                    assert_eq!(accepts, event != StoreEvent::Rejected);
+                }
+            },
+            |st| {
+                if st.stored_bytes() > BUDGET {
+                    return Err(format!("over budget: {}", st.stored_bytes()));
+                }
+                assert_index_matches_scan(st)
+            },
         );
     }
 }

@@ -1,0 +1,603 @@
+//! Sparse/delta tensor codec for checkpoint payloads.
+//!
+//! The paper's memory claim (§4.2, Table 2) is that pruning lets more
+//! sub-models fit in the device budget C_m. Before this codec the claim was
+//! only *accounted*: `Checkpoint` held dense `f32` tensors, so a keep=0.3
+//! pruned model occupied exactly as many real bytes as a dense one. Here
+//! the stored payload is an [`EncodedParams`] and the checkpoint's
+//! `size_bytes` is derived from the encoding, not from a profile formula —
+//! bytes become the store's actual currency.
+//!
+//! Per tensor the codec picks the cheapest representation:
+//!
+//! * **dense** — the raw row-major f32 payload. Always available; the
+//!   fallback when sparsity doesn't pay.
+//! * **sparse** — one bitmask bit per element (64 elements per `u64` word)
+//!   plus the non-zero values in index order. Pays once the tensor is
+//!   roughly 1/32 + ε sparse ([`CodecMode::Sparse`] and up).
+//! * **delta** — changed-entries-only against the lineage's previous
+//!   stored payload ([`CodecMode::Delta`] only): a bitmask of positions
+//!   whose f32 *bits* differ from the parent plus the new values. The
+//!   parent payload is pinned alive through an `Arc`; chain depth is
+//!   bounded by [`MAX_DELTA_DEPTH`] so decode cost and parent retention
+//!   stay O(1) per checkpoint no matter how long a lineage trains.
+//!
+//! ## Exactness
+//!
+//! Decode is bit-exact for dense and delta blocks. Sparse blocks
+//! canonicalize `-0.0` to `+0.0` (IEEE-equal: `-0.0 == 0.0`, so round
+//! trips satisfy `PartialEq` — see [`HostTensor::nonzero_count`]). NaN
+//! values round-trip bit-exactly through every block kind but fail
+//! `PartialEq` by IEEE definition; model parameters are finite.
+//!
+//! ## Accounting caveat (delta)
+//!
+//! A delta payload's [`EncodedParams::size_bytes`] charges only the bytes
+//! it *owns*; the pinned parent is accounted to the parent's own
+//! checkpoint. When the parent checkpoint is evicted from the store while
+//! deltas still reference it, its payload stays resident until the deltas
+//! die — bounded by [`MAX_DELTA_DEPTH`], and measurable through
+//! [`EncodedParams::retained_bytes`]. The default mode is
+//! [`CodecMode::Sparse`], which has no such retention.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::runtime::tensor::HostTensor;
+
+/// Fixed bytes charged per encoded payload (tensor count, parent link,
+/// chain depth).
+pub const PARAMS_HEADER_BYTES: u64 = 16;
+
+/// Fixed bytes charged per encoded tensor (representation tag plus
+/// element/value counts), on top of 8 bytes per dimension.
+pub const TENSOR_HEADER_BYTES: u64 = 16;
+
+/// Bound on delta chain length: a payload at this depth encodes
+/// self-contained (sparse/dense), so decoding any checkpoint touches at
+/// most `MAX_DELTA_DEPTH + 1` payloads.
+pub const MAX_DELTA_DEPTH: u32 = 3;
+
+/// Header bytes for a tensor with the given shape.
+fn header_bytes(dims: &[usize]) -> u64 {
+    TENSOR_HEADER_BYTES + 8 * dims.len() as u64
+}
+
+/// One tensor's encoded block.
+#[derive(Clone, Debug, PartialEq)]
+pub enum TensorBlock {
+    /// Raw row-major payload.
+    Dense { data: Vec<f32> },
+    /// Bit i set ⇔ element i is non-zero; `values` holds the non-zero
+    /// entries in index order.
+    Sparse { mask: Vec<u64>, values: Vec<f32> },
+    /// Bit i set ⇔ element i's f32 bits differ from the parent tensor;
+    /// `values` holds the changed entries in index order.
+    Delta { mask: Vec<u64>, values: Vec<f32> },
+}
+
+/// An encoded tensor: shape plus payload block.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncodedTensor {
+    pub dims: Vec<usize>,
+    pub block: TensorBlock,
+}
+
+/// Write `values` into `out` at the positions whose mask bit is set.
+fn scatter(mask: &[u64], values: &[f32], out: &mut [f32]) {
+    let mut vi = 0;
+    for (w, word) in mask.iter().enumerate() {
+        let mut bits = *word;
+        while bits != 0 {
+            let b = bits.trailing_zeros() as usize;
+            out[w * 64 + b] = values[vi];
+            vi += 1;
+            bits &= bits - 1;
+        }
+    }
+    debug_assert_eq!(vi, values.len(), "mask popcount must equal value count");
+}
+
+/// Bitmask + values of the non-zero entries (`-0.0` counts as zero and
+/// therefore canonicalizes to `+0.0` on decode).
+fn sparse_block(t: &HostTensor) -> (Vec<u64>, Vec<f32>) {
+    let mut mask = vec![0u64; t.len().div_ceil(64)];
+    let mut values = Vec::new();
+    for (i, v) in t.data.iter().enumerate() {
+        if *v != 0.0 {
+            mask[i / 64] |= 1u64 << (i % 64);
+            values.push(*v);
+        }
+    }
+    (mask, values)
+}
+
+/// Bitmask + values of the entries whose f32 bits differ from `parent`
+/// (bit-exact, so `-0.0` vs `0.0` counts as a change). `None` when the
+/// shapes disagree.
+fn delta_block(t: &HostTensor, parent: &HostTensor) -> Option<(Vec<u64>, Vec<f32>)> {
+    if t.dims != parent.dims {
+        return None;
+    }
+    let mut mask = vec![0u64; t.len().div_ceil(64)];
+    let mut values = Vec::new();
+    for (i, (v, p)) in t.data.iter().zip(&parent.data).enumerate() {
+        if v.to_bits() != p.to_bits() {
+            mask[i / 64] |= 1u64 << (i % 64);
+            values.push(*v);
+        }
+    }
+    Some((mask, values))
+}
+
+impl EncodedTensor {
+    /// Encoded size: header plus payload.
+    pub fn size_bytes(&self) -> u64 {
+        let payload = match &self.block {
+            TensorBlock::Dense { data } => 4 * data.len() as u64,
+            TensorBlock::Sparse { mask, values } | TensorBlock::Delta { mask, values } => {
+                8 * mask.len() as u64 + 4 * values.len() as u64
+            }
+        };
+        header_bytes(&self.dims) + payload
+    }
+
+    /// Size the same tensor would take encoded dense — the codec's
+    /// worst-case bound (`size_bytes() <= dense_size_bytes()` always).
+    pub fn dense_size_bytes(&self) -> u64 {
+        header_bytes(&self.dims) + 4 * self.dims.iter().product::<usize>() as u64
+    }
+
+    pub fn is_delta(&self) -> bool {
+        matches!(self.block, TensorBlock::Delta { .. })
+    }
+
+    /// Decode to a host tensor. `parent` is required iff the block is a
+    /// delta.
+    fn decode(&self, parent: Option<&HostTensor>) -> HostTensor {
+        let n: usize = self.dims.iter().product();
+        let data = match &self.block {
+            TensorBlock::Dense { data } => data.clone(),
+            TensorBlock::Sparse { mask, values } => {
+                let mut data = vec![0.0f32; n];
+                scatter(mask, values, &mut data);
+                data
+            }
+            TensorBlock::Delta { mask, values } => {
+                let p = parent.expect("delta block decoded without its parent");
+                debug_assert_eq!(p.dims, self.dims, "delta parent shape mismatch");
+                let mut data = p.data.clone();
+                scatter(mask, values, &mut data);
+                data
+            }
+        };
+        HostTensor { data, dims: self.dims.clone() }
+    }
+}
+
+/// A checkpoint's full encoded parameter payload.
+#[derive(Clone, Debug, PartialEq)]
+pub struct EncodedParams {
+    pub tensors: Vec<EncodedTensor>,
+    /// Delta base the `Delta` blocks diff against; `None` for
+    /// self-contained payloads.
+    parent: Option<Arc<EncodedParams>>,
+    /// Length of the parent chain under this payload (0 = self-contained).
+    depth: u32,
+}
+
+impl EncodedParams {
+    /// Bytes this payload owns (headers + blocks). A delta's pinned parent
+    /// is accounted to the parent's own checkpoint — see the module docs.
+    pub fn size_bytes(&self) -> u64 {
+        PARAMS_HEADER_BYTES + self.tensors.iter().map(|t| t.size_bytes()).sum::<u64>()
+    }
+
+    /// Bytes the same payload would take encoded dense (compression-ratio
+    /// denominator).
+    pub fn dense_size_bytes(&self) -> u64 {
+        PARAMS_HEADER_BYTES + self.tensors.iter().map(|t| t.dense_size_bytes()).sum::<u64>()
+    }
+
+    /// Bytes kept resident by this payload including pinned delta parents.
+    pub fn retained_bytes(&self) -> u64 {
+        self.size_bytes() + self.parent.as_ref().map_or(0, |p| p.retained_bytes())
+    }
+
+    /// Delta chain length under this payload.
+    pub fn delta_depth(&self) -> u32 {
+        self.depth
+    }
+
+    pub fn is_delta(&self) -> bool {
+        self.parent.is_some()
+    }
+
+    /// Decode the full parameter set (resolves the delta chain).
+    pub fn decode(&self) -> Vec<HostTensor> {
+        let parent = self.parent.as_ref().map(|p| p.decode());
+        self.tensors
+            .iter()
+            .enumerate()
+            .map(|(i, t)| t.decode(parent.as_ref().and_then(|ps| ps.get(i))))
+            .collect()
+    }
+}
+
+/// Which representations the codec may pick.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CodecMode {
+    /// Dense blocks only — the pre-codec representation, byte for byte.
+    Dense,
+    /// Best of sparse/dense per tensor (the default: self-contained
+    /// payloads, no cross-checkpoint retention).
+    #[default]
+    Sparse,
+    /// Best of delta/sparse/dense per tensor; deltas chain up to
+    /// [`MAX_DELTA_DEPTH`].
+    Delta,
+}
+
+impl CodecMode {
+    pub fn by_name(name: &str) -> Option<CodecMode> {
+        match name.to_ascii_lowercase().as_str() {
+            "dense" | "none" => Some(CodecMode::Dense),
+            "sparse" => Some(CodecMode::Sparse),
+            "delta" | "sparse-delta" | "sparse_delta" => Some(CodecMode::Delta),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            CodecMode::Dense => "dense",
+            CodecMode::Sparse => "sparse",
+            CodecMode::Delta => "delta",
+        }
+    }
+}
+
+/// The checkpoint payload codec. Stateless; cheap to copy.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TensorCodec {
+    pub mode: CodecMode,
+}
+
+impl TensorCodec {
+    pub fn new(mode: CodecMode) -> Self {
+        Self { mode }
+    }
+
+    /// Encode a parameter set. `parent` is the same lineage's previous
+    /// stored payload (the delta base candidate); it is consulted only in
+    /// [`CodecMode::Delta`], only when its chain is shallower than
+    /// [`MAX_DELTA_DEPTH`], and only when the tensor counts line up.
+    pub fn encode(
+        &self,
+        params: &[HostTensor],
+        parent: Option<&Arc<EncodedParams>>,
+    ) -> EncodedParams {
+        let parent = match self.mode {
+            CodecMode::Delta => parent
+                .filter(|p| p.depth < MAX_DELTA_DEPTH && p.tensors.len() == params.len()),
+            _ => None,
+        };
+        let parent_decoded = parent.map(|p| p.decode());
+        let mut tensors = Vec::with_capacity(params.len());
+        let mut used_delta = false;
+        for (i, t) in params.iter().enumerate() {
+            let enc =
+                self.encode_tensor(t, parent_decoded.as_ref().and_then(|ps| ps.get(i)));
+            used_delta |= enc.is_delta();
+            tensors.push(enc);
+        }
+        if used_delta {
+            let p = parent.expect("delta blocks imply a parent").clone();
+            EncodedParams { tensors, depth: p.depth + 1, parent: Some(p) }
+        } else {
+            EncodedParams { tensors, parent: None, depth: 0 }
+        }
+    }
+
+    /// Pick the cheapest block for one tensor. Ties prefer the simpler
+    /// representation (dense > sparse > delta), so a fully-dense tensor
+    /// always falls back to a plain payload.
+    fn encode_tensor(&self, t: &HostTensor, parent: Option<&HostTensor>) -> EncodedTensor {
+        let dense_payload = 4 * t.len() as u64;
+        let mut best: Option<(u64, TensorBlock)> = None;
+        if self.mode != CodecMode::Dense {
+            let (mask, values) = sparse_block(t);
+            let bytes = 8 * mask.len() as u64 + 4 * values.len() as u64;
+            if bytes < dense_payload {
+                best = Some((bytes, TensorBlock::Sparse { mask, values }));
+            }
+        }
+        if self.mode == CodecMode::Delta {
+            if let Some((mask, values)) = parent.and_then(|p| delta_block(t, p)) {
+                let bytes = 8 * mask.len() as u64 + 4 * values.len() as u64;
+                let beats_sparse = match &best {
+                    Some((b, _)) => bytes < *b,
+                    None => true,
+                };
+                if bytes < dense_payload && beats_sparse {
+                    best = Some((bytes, TensorBlock::Delta { mask, values }));
+                }
+            }
+        }
+        let block = match best {
+            Some((_, block)) => block,
+            None => TensorBlock::Dense { data: t.data.clone() },
+        };
+        EncodedTensor { dims: t.dims.clone(), block }
+    }
+}
+
+/// Per-plan decode cache: a checkpoint referenced several times while one
+/// plan executes (multi-step chains, serving restores) decodes once; every
+/// later use clones the `Arc`, never the tensors. Keyed by the caller —
+/// the engine uses the checkpoint id.
+#[derive(Debug, Default)]
+pub struct DecodeCache {
+    map: HashMap<u64, Arc<[HostTensor]>>,
+    /// Payload decodes performed (cache misses).
+    pub decodes: u64,
+    /// Lookups served without decoding.
+    pub hits: u64,
+}
+
+impl DecodeCache {
+    /// Decoded tensors for `enc`, decoding at most once per key.
+    pub fn decoded(&mut self, key: u64, enc: &EncodedParams) -> Arc<[HostTensor]> {
+        if let Some(hit) = self.map.get(&key) {
+            self.hits += 1;
+            return hit.clone();
+        }
+        self.decodes += 1;
+        let arc: Arc<[HostTensor]> = enc.decode().into();
+        self.map.insert(key, arc.clone());
+        arc
+    }
+
+    /// Drop the cached decodes but keep the counters — callers scope dense
+    /// tensor memory (the engine releases after every retrain chain, since
+    /// checkpoints are lineage-scoped and cannot be reused across chains)
+    /// without losing dedup statistics.
+    pub fn release(&mut self) {
+        self.map.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::testkit::forall;
+
+    fn roundtrip(mode: CodecMode, params: &[HostTensor]) {
+        let codec = TensorCodec::new(mode);
+        let enc = codec.encode(params, None);
+        assert_eq!(enc.decode(), params.to_vec(), "round-trip under {mode:?}");
+        assert!(
+            enc.size_bytes() <= enc.dense_size_bytes(),
+            "encoded {} > dense bound {}",
+            enc.size_bytes(),
+            enc.dense_size_bytes()
+        );
+    }
+
+    #[test]
+    fn handcrafted_shapes_roundtrip() {
+        let cases: Vec<Vec<HostTensor>> = vec![
+            vec![],
+            vec![HostTensor::scalar(3.5)],
+            vec![HostTensor::zeros(&[0])],
+            vec![HostTensor::zeros(&[7, 3])],
+            vec![HostTensor::from_fn(&[9], |i| i as f32 + 1.0)],
+            vec![
+                HostTensor::from_fn(&[65], |i| if i == 64 { 2.0 } else { 0.0 }),
+                HostTensor::from_fn(&[2, 2], |i| -(i as f32)),
+            ],
+        ];
+        for params in &cases {
+            for mode in [CodecMode::Dense, CodecMode::Sparse, CodecMode::Delta] {
+                roundtrip(mode, params);
+            }
+        }
+    }
+
+    #[test]
+    fn negative_zero_canonicalizes_but_stays_equal() {
+        let t = HostTensor { data: vec![-0.0, 1.0, 0.0, -0.0], dims: vec![4] };
+        let enc = TensorCodec::new(CodecMode::Sparse).encode(std::slice::from_ref(&t), None);
+        let dec = enc.decode();
+        // IEEE: -0.0 == 0.0, so PartialEq round-trips...
+        assert_eq!(dec[0], t);
+        // ...even though sparse decoding canonicalized the sign bit away.
+        assert_eq!(dec[0].data[0].to_bits(), 0.0f32.to_bits());
+        assert_eq!(dec[0].data[1], 1.0);
+    }
+
+    #[test]
+    fn sparse_pays_only_when_sparse_enough() {
+        let dense = HostTensor::from_fn(&[128], |i| i as f32 + 1.0);
+        let sparse = HostTensor::from_fn(&[128], |i| if i % 16 == 0 { 1.0 } else { 0.0 });
+        let codec = TensorCodec::new(CodecMode::Sparse);
+        let e_dense = codec.encode(std::slice::from_ref(&dense), None);
+        let e_sparse = codec.encode(std::slice::from_ref(&sparse), None);
+        assert!(matches!(e_dense.tensors[0].block, TensorBlock::Dense { .. }));
+        assert!(matches!(e_sparse.tensors[0].block, TensorBlock::Sparse { .. }));
+        assert!(e_sparse.size_bytes() < e_dense.size_bytes() / 2);
+    }
+
+    #[test]
+    fn delta_encodes_small_changes_and_decodes_bit_exact() {
+        let base = vec![HostTensor::from_fn(&[256], |i| (i as f32).sin())];
+        let codec = TensorCodec::new(CodecMode::Delta);
+        let parent = Arc::new(codec.encode(&base, None));
+        let mut child = base.clone();
+        child[0].data[17] = -0.0; // sign-bit-only change must be detected
+        child[0].data[200] = 9.25;
+        let enc = codec.encode(&child, Some(&parent));
+        assert!(enc.is_delta());
+        assert_eq!(enc.delta_depth(), 1);
+        match &enc.tensors[0].block {
+            TensorBlock::Delta { values, .. } => assert_eq!(values.len(), 2),
+            other => panic!("expected delta block, got {other:?}"),
+        }
+        let dec = enc.decode();
+        assert_eq!(dec[0].data[17].to_bits(), (-0.0f32).to_bits(), "bit-exact delta");
+        assert_eq!(dec, child);
+        assert!(enc.size_bytes() < parent.size_bytes() / 2);
+        assert_eq!(enc.retained_bytes(), enc.size_bytes() + parent.size_bytes());
+    }
+
+    #[test]
+    fn delta_chain_depth_is_bounded() {
+        let codec = TensorCodec::new(CodecMode::Delta);
+        let mut params = vec![HostTensor::from_fn(&[128], |i| (i as f32).cos())];
+        let mut parent = Arc::new(codec.encode(&params, None));
+        for step in 0..2 * MAX_DELTA_DEPTH {
+            params[0].data[(step as usize * 7) % 128] += 1.0;
+            let enc = Arc::new(codec.encode(&params, Some(&parent)));
+            assert_eq!(enc.decode(), params, "chain step {step}");
+            assert!(
+                enc.delta_depth() <= MAX_DELTA_DEPTH,
+                "depth {} exceeds cap",
+                enc.delta_depth()
+            );
+            parent = enc;
+        }
+        // Non-delta modes ignore the parent entirely.
+        let flat = TensorCodec::new(CodecMode::Sparse).encode(&params, Some(&parent));
+        assert!(!flat.is_delta());
+    }
+
+    #[test]
+    fn prop_roundtrip_and_size_bound_random_tensors() {
+        forall(
+            0xc0dec,
+            80,
+            |rng, size| {
+                let mode = match rng.range(0, 3) {
+                    0 => CodecMode::Dense,
+                    1 => CodecMode::Sparse,
+                    _ => CodecMode::Delta,
+                };
+                let n_tensors = rng.range(0, 4);
+                let params: Vec<HostTensor> = (0..n_tensors)
+                    .map(|_| {
+                        let dims: Vec<usize> = match rng.range(0, 4) {
+                            0 => vec![],                                  // scalar
+                            1 => vec![rng.range(0, 1 + (40.0 * size) as usize)],
+                            2 => vec![rng.range(1, 9), rng.range(0, 9)],
+                            _ => vec![rng.range(1, 5), rng.range(1, 5), rng.range(1, 5)],
+                        };
+                        let density = rng.f64(); // 0 = all-zero .. 1 = fully dense
+                        let mut r2 = rng.fork(7);
+                        HostTensor::from_fn(&dims, move |_| {
+                            if r2.f64() < density {
+                                r2.f32() * 4.0 - 2.0
+                            } else {
+                                0.0
+                            }
+                        })
+                    })
+                    .collect();
+                (mode, params)
+            },
+            |(mode, params)| {
+                let codec = TensorCodec::new(*mode);
+                let enc = codec.encode(params, None);
+                if enc.decode() != *params {
+                    return Err("round-trip mismatch".into());
+                }
+                if enc.size_bytes() > enc.dense_size_bytes() {
+                    return Err(format!(
+                        "encoded {} exceeds dense bound {}",
+                        enc.size_bytes(),
+                        enc.dense_size_bytes()
+                    ));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_delta_roundtrip_against_perturbed_parent() {
+        forall(
+            0xde17a,
+            60,
+            |rng, size| {
+                let n = 1 + (120.0 * size) as usize;
+                let mut r2 = rng.fork(3);
+                let base = HostTensor::from_fn(&[n], move |_| r2.f32() - 0.5);
+                let mut child = base.clone();
+                let changes = rng.range(0, n.min(16) + 1);
+                for _ in 0..changes {
+                    let i = rng.range(0, n);
+                    child.data[i] = rng.f32() * 8.0 - 4.0;
+                }
+                (base, child)
+            },
+            |(base, child)| {
+                let codec = TensorCodec::new(CodecMode::Delta);
+                let parent = Arc::new(codec.encode(std::slice::from_ref(base), None));
+                let enc = codec.encode(std::slice::from_ref(child), Some(&parent));
+                if enc.decode() != vec![child.clone()] {
+                    return Err("delta round-trip mismatch".into());
+                }
+                if enc.size_bytes() > enc.dense_size_bytes() {
+                    return Err("delta exceeded dense bound".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decode_cache_decodes_once_per_key() {
+        let codec = TensorCodec::new(CodecMode::Sparse);
+        let enc = codec.encode(&[HostTensor::from_fn(&[64], |i| i as f32)], None);
+        let mut cache = DecodeCache::default();
+        let a = cache.decoded(9, &enc);
+        let b = cache.decoded(9, &enc);
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.decodes, cache.hits), (1, 1));
+        let c = cache.decoded(10, &enc);
+        assert_eq!(cache.decodes, 2);
+        assert_eq!(a.as_ref(), c.as_ref());
+        // release() drops the memory but keeps the statistics.
+        cache.release();
+        let d = cache.decoded(9, &enc);
+        assert!(!Arc::ptr_eq(&a, &d), "released entries must re-decode");
+        assert_eq!((cache.decodes, cache.hits), (3, 1));
+    }
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for mode in [CodecMode::Dense, CodecMode::Sparse, CodecMode::Delta] {
+            assert_eq!(CodecMode::by_name(mode.name()), Some(mode));
+        }
+        assert_eq!(CodecMode::by_name("sparse-delta"), Some(CodecMode::Delta));
+        assert!(CodecMode::by_name("gzip").is_none());
+        assert_eq!(CodecMode::default(), CodecMode::Sparse);
+    }
+
+    /// Generator sanity: the property above must actually see empty,
+    /// all-zero and fully-dense tensors (guard against generator drift).
+    #[test]
+    fn generator_covers_degenerate_shapes() {
+        let mut rng = Rng::new(5);
+        let (mut saw_empty, mut saw_zero, mut saw_dense) = (false, false, false);
+        for _ in 0..400 {
+            let n = rng.range(0, 30);
+            let density = rng.f64();
+            let t = HostTensor::from_fn(&[n], |_| if rng.f64() < density { 1.0 } else { 0.0 });
+            saw_empty |= t.is_empty();
+            saw_zero |= !t.is_empty() && t.nonzero_count() == 0;
+            saw_dense |= !t.is_empty() && t.nonzero_count() == t.len();
+        }
+        assert!(saw_empty && saw_zero && saw_dense);
+    }
+}

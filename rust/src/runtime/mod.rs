@@ -14,15 +14,20 @@
 //!   tensor specs.
 //! * [`tensor`] — host-side tensors (`HostTensor`) and conversions to/from
 //!   `xla::Literal`.
+//! * [`codec`] — the sparse/delta checkpoint payload codec
+//!   (`TensorCodec` / `EncodedParams`) and the per-plan `DecodeCache`;
+//!   pure host code, no PJRT involvement.
 //! * [`session`] — typed execution sessions: `TrainSession` (one train step
 //!   per call), `PredictSession`, `PruneSession`.
 
 pub mod artifact;
 pub mod client;
+pub mod codec;
 pub mod session;
 pub mod tensor;
 
 pub use artifact::{ArtifactManifest, ArtifactSpec, TensorSpec};
 pub use client::{Runtime, RuntimeStats};
+pub use codec::{CodecMode, DecodeCache, EncodedParams, TensorCodec};
 pub use session::{PredictSession, PruneSession, TrainSession};
 pub use tensor::HostTensor;

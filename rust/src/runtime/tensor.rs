@@ -72,9 +72,59 @@ impl HostTensor {
         self.data.len() * std::mem::size_of::<f32>()
     }
 
-    /// Count of non-zero entries — used by the pruning accounting tests.
+    /// Count of non-zero entries — used by the pruning accounting tests
+    /// and the sparse codec. The `!= 0.0` comparison is IEEE-754: `-0.0 ==
+    /// 0.0`, so negative zero deliberately counts as zero (and the sparse
+    /// codec canonicalizes it to `+0.0` on decode, which stays
+    /// `PartialEq`-equal to the original).
     pub fn nonzero_count(&self) -> usize {
         self.data.iter().filter(|v| **v != 0.0).count()
+    }
+
+    /// Fraction of zero entries (0.0 for an empty tensor); `-0.0` counts
+    /// as zero, mirroring [`HostTensor::nonzero_count`].
+    pub fn sparsity(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        1.0 - self.nonzero_count() as f64 / self.data.len() as f64
+    }
+
+    /// Magnitude threshold below which pruning at `keep` zeroes an entry:
+    /// the k-th largest `|v|` where `k = ceil(keep * len)`, so keeping
+    /// every `|v| >= threshold` retains at least `keep * len` entries
+    /// (ties at the threshold are kept). `keep >= 1` returns 0.0 (keep
+    /// everything); `keep <= 0` returns +∞ (drop everything). Shared by
+    /// the host prune path and the codec so threshold semantics never
+    /// diverge.
+    pub fn magnitude_threshold(data: &[f32], keep: f64) -> f32 {
+        if data.is_empty() || keep >= 1.0 {
+            return 0.0;
+        }
+        if keep <= 0.0 {
+            return f32::INFINITY;
+        }
+        let k = ((keep * data.len() as f64).ceil() as usize).clamp(1, data.len());
+        let mut mags: Vec<f32> = data.iter().map(|v| v.abs()).collect();
+        // Selection, not a full sort: this sits on the prune-aware
+        // snapshot hot path (every tensor of every training run).
+        let (_, kth, _) = mags.select_nth_unstable_by(k - 1, |a, b| b.total_cmp(a));
+        *kth
+    }
+
+    /// Apply the magnitude mask for `keep` in place (zero every entry
+    /// whose `|v|` falls below [`HostTensor::magnitude_threshold`]).
+    /// Returns how many entries were zeroed.
+    pub fn apply_mask(&mut self, keep: f64) -> usize {
+        let threshold = Self::magnitude_threshold(&self.data, keep);
+        let mut zeroed = 0;
+        for v in &mut self.data {
+            if v.abs() < threshold && *v != 0.0 {
+                *v = 0.0;
+                zeroed += 1;
+            }
+        }
+        zeroed
     }
 
     /// Convert to an `xla::Literal` with this shape.
@@ -125,5 +175,49 @@ mod tests {
         let t = HostTensor::from_fn(&[2, 3], |i| i as f32);
         assert_eq!(t.data, vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
         assert_eq!(t.nonzero_count(), 5);
+    }
+
+    #[test]
+    fn negative_zero_counts_as_zero() {
+        let t = HostTensor { data: vec![-0.0, 0.0, 1.0], dims: vec![3] };
+        assert_eq!(t.nonzero_count(), 1);
+        assert!((t.sparsity() - 2.0 / 3.0).abs() < 1e-12);
+        assert_eq!(HostTensor::zeros(&[0]).sparsity(), 0.0);
+    }
+
+    #[test]
+    fn apply_mask_keeps_top_magnitudes() {
+        let mut t = HostTensor::new(vec![0.1, -4.0, 0.0, 2.0, -0.5, 3.0], vec![6]).unwrap();
+        // keep = 0.5 over 6 entries → keep the 3 largest magnitudes.
+        let zeroed = t.apply_mask(0.5);
+        assert_eq!(zeroed, 2); // 0.1 and -0.5; the existing 0.0 stays free
+        assert_eq!(t.data, vec![0.0, -4.0, 0.0, 2.0, 0.0, 3.0]);
+        assert_eq!(t.nonzero_count(), 3);
+        assert!((t.sparsity() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn apply_mask_edges() {
+        let mut t = HostTensor::new(vec![1.0, 2.0], vec![2]).unwrap();
+        assert_eq!(t.apply_mask(1.0), 0); // keep >= 1: no-op
+        assert_eq!(t.data, vec![1.0, 2.0]);
+        assert_eq!(t.apply_mask(0.0), 2); // keep <= 0: drop everything
+        assert_eq!(t.nonzero_count(), 0);
+        // Empty tensors and ties are safe.
+        assert_eq!(HostTensor::zeros(&[0]).apply_mask(0.5), 0);
+        let mut ties = HostTensor::new(vec![1.0, -1.0, 1.0, 1.0], vec![4]).unwrap();
+        // Threshold lands on the tie value: ties are kept, nothing zeroed.
+        assert_eq!(ties.apply_mask(0.5), 0);
+        assert_eq!(ties.nonzero_count(), 4);
+    }
+
+    #[test]
+    fn magnitude_threshold_matches_kth_largest() {
+        let data = [3.0f32, -7.0, 0.5, 2.0];
+        assert_eq!(HostTensor::magnitude_threshold(&data, 0.25), 7.0);
+        assert_eq!(HostTensor::magnitude_threshold(&data, 0.5), 3.0);
+        assert_eq!(HostTensor::magnitude_threshold(&data, 1.0), 0.0);
+        assert_eq!(HostTensor::magnitude_threshold(&data, 0.0), f32::INFINITY);
+        assert_eq!(HostTensor::magnitude_threshold(&[], 0.5), 0.0);
     }
 }

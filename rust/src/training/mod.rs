@@ -9,8 +9,13 @@
 //! * [`PjrtTrainer`] — real training through the AOT artifacts (Layer 1+2)
 //!   on the PJRT CPU client. Used for every accuracy experiment
 //!   (Table 2/3, Figs. 5, 10, 15, 17a) and the e2e example.
+//! * [`HostTrainer`] — real `HostTensor` parameters with deterministic
+//!   synthetic updates, no PJRT required. Drives the checkpoint codec,
+//!   prune-aware snapshots, and the byte-budget store offline
+//!   (`bench_compress`, `tests/compressed_store.rs`).
 
 pub mod cost;
+pub mod host;
 pub mod pjrt;
 
 use std::sync::Arc;
@@ -22,6 +27,7 @@ use crate::pruning::PruneSchedule;
 use crate::runtime::HostTensor;
 
 pub use cost::CostTrainer;
+pub use host::{HostTrainer, HostTrainerConfig};
 pub use pjrt::{PjrtTrainer, PjrtTrainerConfig};
 
 /// What a training run reports back for accounting.
@@ -66,10 +72,14 @@ pub trait Trainer {
     ) -> Result<TrainOutcome>;
 
     /// Checkpoint payload of the lineage's current model:
-    /// (stored size in bytes, parameters if this backend has them).
-    /// Parameters are handed out under shared ownership so the store,
-    /// warm-start resolution, and serving restores clone refcounts, never
-    /// tensor data.
+    /// (size hint in bytes, parameters if this backend has them).
+    /// Tensor-carrying backends apply the prune schedule's final magnitude
+    /// mask before handing tensors out (stored sparsity is real) and the
+    /// engine derives the true stored size from the codec's encoding — the
+    /// hint stands only for the accounting backend, whose paper-scale
+    /// formula *is* the size. Parameters are handed out under shared
+    /// ownership so encoding and restores clone refcounts, never tensor
+    /// data.
     fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Arc<[HostTensor]>>)>;
 
     /// Size of one stored checkpoint — defines N_mem slot granularity.

@@ -88,20 +88,6 @@ impl PjrtTrainer {
         Ok(self.sessions[lineage].as_mut().unwrap())
     }
 
-    /// Sparse checkpoint size: CSR-ish value+index per nonzero.
-    fn sparse_bytes(params: &[HostTensor]) -> u64 {
-        params
-            .iter()
-            .map(|p| {
-                if p.dims.len() == 2 && p.len() >= 1024 {
-                    (p.nonzero_count() * 8) as u64
-                } else {
-                    p.size_bytes() as u64
-                }
-            })
-            .sum()
-    }
-
     /// One epoch over the blocks: materialize and step in AOT batches.
     /// With `mask_keep`, the sparsity pattern is re-applied after every
     /// step — masked fine-tuning, the recovery phase of RCMP's
@@ -216,7 +202,10 @@ impl Trainer for PjrtTrainer {
 
     fn snapshot(&mut self, lineage: usize) -> Result<(u64, Option<Arc<[HostTensor]>>)> {
         // RCMP stores the *compressed* sub-model: prune a copy at the
-        // configured keep fraction (the working model keeps training dense).
+        // configured keep fraction through the Layer-1 kernel (the working
+        // model keeps training dense), so stored sparsity is real. The
+        // returned size is a dense hint only — the engine derives the true
+        // stored bytes from the codec's actual encoding of these tensors.
         let keep = self.keep_hint as f32;
         let rt = self.rt.clone();
         let variant = self.cfg.variant.clone();
@@ -226,7 +215,8 @@ impl Trainer for PjrtTrainer {
         } else {
             sess.params().to_vec()
         };
-        Ok((Self::sparse_bytes(&params), Some(params.into())))
+        let dense: u64 = params.iter().map(|p| p.size_bytes() as u64).sum();
+        Ok((dense, Some(params.into())))
     }
 
     fn checkpoint_bytes(&self) -> u64 {

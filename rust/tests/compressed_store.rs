@@ -1,0 +1,281 @@
+//! Byte-budget store semantics: differential equivalence against slot
+//! mode, and the compression win it exists for.
+//!
+//! * With unit-size checkpoints (or any uniform size that divides the
+//!   budget), byte metering must replay slot metering **receipt for
+//!   receipt** — events, stats, byte counters, index lookups. That is the
+//!   degenerate point proving the refactor changed no baseline behavior.
+//! * At keep=1.0 the cost backend's checkpoints are uniform dense-size, so
+//!   a whole engine run (CAUSE/FiboR and SISA/NoReplace) must produce
+//!   identical receipts under either meter.
+//! * At keep=0.3 with real tensors (`HostTrainer`), the byte meter must
+//!   hold ≥2x the checkpoints in the same C_m and replay fewer samples
+//!   (lower RSN) — the paper's Table 2 claim made real.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::engine::EvalPolicy;
+use cause::coordinator::system::SystemVariant;
+use cause::coordinator::Engine;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::memory::{ModelStore, StoreEvent, StoreMeter};
+use cause::memory::store::{CapacityMode, Checkpoint, CheckpointId};
+use cause::replacement::{FiboR, NoReplace};
+use cause::testkit::forall_prefixes;
+use cause::training::host::dense_upper_bound;
+use cause::training::{CostTrainer, HostTrainer, HostTrainerConfig, Trainer};
+
+fn unit_ckpt(id: u64, lineage: usize, round: u32) -> Checkpoint {
+    Checkpoint {
+        id: CheckpointId(id),
+        lineage,
+        round,
+        covered_segments: round,
+        size_bytes: 1,
+        params: None,
+    }
+}
+
+/// Unit-size byte budgets replay slot mode event for event under random
+/// store/invalidate interleavings, for both an evicting and a rejecting
+/// policy.
+#[test]
+fn prop_unit_size_byte_budget_replays_slot_mode() {
+    for (seed, evicting) in [(0x51u64, true), (0x52, false)] {
+        forall_prefixes(
+            seed,
+            40,
+            |rng, size| {
+                let n = 1 + (40.0 * size) as usize;
+                (0..n)
+                    .map(|i| {
+                        (i as u64, rng.range(0, 4), rng.range(1, 9) as u32, rng.chance(0.25))
+                    })
+                    .collect::<Vec<_>>()
+            },
+            move || {
+                let mk = move || -> Box<dyn cause::replacement::ReplacementPolicy> {
+                    if evicting {
+                        Box::new(FiboR::new())
+                    } else {
+                        Box::new(NoReplace)
+                    }
+                };
+                (ModelStore::new(4, mk()), ModelStore::with_byte_budget(4, mk()))
+            },
+            |(slot, byte), (id, lineage, round, invalidate)| {
+                if *invalidate {
+                    let a = slot.invalidate(|c| c.lineage == *lineage);
+                    let b = byte.invalidate(|c| c.lineage == *lineage);
+                    assert_eq!(a, b, "invalidation count diverged");
+                } else {
+                    let a = slot.store(unit_ckpt(*id, *lineage, *round));
+                    let b = byte.store(unit_ckpt(*id, *lineage, *round));
+                    assert_eq!(a, b, "store event diverged");
+                    assert!(
+                        !matches!(b, StoreEvent::Evicted { .. }),
+                        "uniform sizes must never need multi-victim receipts"
+                    );
+                }
+            },
+            |(slot, byte)| {
+                if slot.stats() != byte.stats() {
+                    return Err(format!(
+                        "stats diverged: {:?} vs {:?}",
+                        slot.stats(),
+                        byte.stats()
+                    ));
+                }
+                if slot.occupied() != byte.occupied() {
+                    return Err("occupancy diverged".into());
+                }
+                if slot.stored_bytes() != byte.stored_bytes() {
+                    return Err("byte counters diverged".into());
+                }
+                for l in 0..4 {
+                    for cover in 0..10 {
+                        if slot.best_checkpoint(l, cover).map(|c| c.id)
+                            != byte.best_checkpoint(l, cover).map(|c| c.id)
+                        {
+                            return Err(format!("best_checkpoint({l},{cover}) diverged"));
+                        }
+                    }
+                    if slot.latest(l).map(|c| c.id) != byte.latest(l).map(|c| c.id) {
+                        return Err(format!("latest({l}) diverged"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+fn workload(cfg: &ExperimentConfig) -> (EdgePopulation, RequestTrace) {
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.scaled(12_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.8,
+        seed: cfg.seed,
+    });
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig {
+            unlearn_prob: cfg.unlearn_prob,
+            block_incl_prob: 0.9,
+            age_decay: 0.6,
+            frac_range: (0.1, 0.5),
+            seed: cfg.seed ^ 0x7ace,
+        },
+    );
+    (pop, trace)
+}
+
+/// Full receipt comparison between two finished engines.
+fn assert_receipts_identical(a: &Engine, b: &Engine, label: &str) {
+    let (ma, mb) = (&a.metrics, &b.metrics);
+    assert_eq!(ma.rsn_by_round, mb.rsn_by_round, "{label}: rsn_by_round");
+    assert_eq!(ma.requests_by_round, mb.requests_by_round, "{label}: requests");
+    assert_eq!(ma.warm_retrains, mb.warm_retrains, "{label}: warm retrains");
+    assert_eq!(ma.scratch_retrains, mb.scratch_retrains, "{label}: scratch retrains");
+    assert_eq!(ma.lineages_retrained, mb.lineages_retrained, "{label}: lineages");
+    assert_eq!(ma.prunes, mb.prunes, "{label}: prune ops");
+    assert_eq!(ma.ckpts_stored, mb.ckpts_stored, "{label}: stored");
+    assert_eq!(ma.ckpts_replaced, mb.ckpts_replaced, "{label}: replaced");
+    assert_eq!(ma.ckpts_rejected, mb.ckpts_rejected, "{label}: rejected");
+    assert_eq!(ma.ckpts_invalidated, mb.ckpts_invalidated, "{label}: invalidated");
+    assert_eq!(ma.energy_joules, mb.energy_joules, "{label}: energy");
+    assert_eq!(a.store().stats(), b.store().stats(), "{label}: store stats");
+    assert_eq!(a.store().occupied(), b.store().occupied(), "{label}: occupancy");
+    assert_eq!(
+        a.store().stored_bytes(),
+        b.store().stored_bytes(),
+        "{label}: stored bytes"
+    );
+    for l in 0..a.cfg.shards {
+        assert_eq!(
+            a.store().latest(l).map(|c| (c.id, c.covered_segments)),
+            b.store().latest(l).map(|c| (c.id, c.covered_segments)),
+            "{label}: latest({l})"
+        );
+    }
+}
+
+/// keep=1.0 ⇒ every cost-backend checkpoint has the same (dense) size, so
+/// a byte budget of N x that size must replay the N-slot store exactly —
+/// across a whole engine lifecycle, for CAUSE (FiboR) and SISA
+/// (no-replacement).
+#[test]
+fn byte_meter_equals_slot_meter_at_keep_one() {
+    for variant in [SystemVariant::Cause, SystemVariant::Sisa] {
+        let mut base = ExperimentConfig {
+            users: 30,
+            rounds: 12,
+            shards: 4,
+            unlearn_prob: 0.6,
+            prune_keep: 1.0, // keep everything: uniform checkpoint sizes
+            seed: 23,
+            ..Default::default()
+        };
+        let unit = CostTrainer::new(base.model, variant.schedule(&base)).checkpoint_bytes();
+        base.memory_bytes = 6 * unit; // 6 slots' worth, exactly divisible
+        let (pop, trace) = workload(&base);
+
+        let mut slot_cfg = base.clone();
+        slot_cfg.store_meter = StoreMeter::Slots;
+        let mut byte_cfg = base.clone();
+        byte_cfg.store_meter = StoreMeter::Bytes;
+
+        let mut slot_engine = variant.build_cost(&slot_cfg).unwrap();
+        let mut byte_engine = variant.build_cost(&byte_cfg).unwrap();
+        assert_eq!(slot_engine.store().capacity(), 6);
+        assert_eq!(byte_engine.store().mode(), CapacityMode::Bytes(6 * unit));
+        slot_engine.run_trace(&pop, &trace).unwrap();
+        byte_engine.run_trace(&pop, &trace).unwrap();
+        assert_receipts_identical(&slot_engine, &byte_engine, variant.display());
+        // The workload actually exercised the capacity machinery.
+        let stats = slot_engine.store().stats();
+        assert!(
+            stats.replaced > 0 || stats.rejected > 0,
+            "{}: store never hit capacity",
+            variant.display()
+        );
+    }
+}
+
+fn host_engine(meter: StoreMeter, budget: u64, cfg: &ExperimentConfig) -> Engine {
+    let mut cfg = cfg.clone();
+    cfg.store_meter = meter;
+    cfg.memory_bytes = budget;
+    let trainer = HostTrainer::new(
+        HostTrainerConfig {
+            shapes: vec![vec![48, 48], vec![48]],
+            seed: 11,
+            update_frac: 0.2,
+        },
+        cfg.shards,
+        SystemVariant::Cause.schedule(&cfg),
+    );
+    SystemVariant::Cause
+        .build_with_trainer(&cfg, Box::new(trainer), EvalPolicy::Never)
+        .unwrap()
+}
+
+/// The tentpole claim, as a tier-1 test: at keep=0.3 with real tensors the
+/// byte-metered store keeps ≥2x the checkpoints of the slot-metered store
+/// in the same C_m, and converts them into strictly less replay (RSN).
+#[test]
+fn byte_meter_packs_2x_checkpoints_and_cuts_rsn_at_keep_03() {
+    let base = ExperimentConfig {
+        users: 30,
+        rounds: 16,
+        shards: 4,
+        unlearn_prob: 0.6,
+        prune_keep: 0.3,
+        seed: 41,
+        ..Default::default()
+    };
+    let shapes = vec![vec![48, 48], vec![48]];
+    // C_m = 6 dense-slot checkpoints; the slot meter provisions for the
+    // codec's dense fallback, the byte meter packs true encoded sizes.
+    let budget = 6 * dense_upper_bound(&shapes);
+    let (pop, trace) = workload(&base);
+
+    let mut slot_engine = host_engine(StoreMeter::Slots, budget, &base);
+    let mut byte_engine = host_engine(StoreMeter::Bytes, budget, &base);
+    assert_eq!(slot_engine.store().capacity(), 6);
+    slot_engine.run_trace(&pop, &trace).unwrap();
+    byte_engine.run_trace(&pop, &trace).unwrap();
+
+    // Same requests served either way; the store is the only difference.
+    assert_eq!(
+        slot_engine.metrics.total_requests(),
+        byte_engine.metrics.total_requests()
+    );
+    assert!(slot_engine.metrics.total_requests() > 0, "trace produced no requests");
+
+    let (slot_occ, byte_occ) = (slot_engine.store().occupied(), byte_engine.store().occupied());
+    assert!(
+        byte_occ >= 2 * slot_occ,
+        "byte meter should pack >=2x checkpoints: {byte_occ} vs {slot_occ}"
+    );
+    assert!(
+        byte_engine.store().stored_bytes() <= budget,
+        "byte meter overran C_m"
+    );
+    let (slot_rsn, byte_rsn) =
+        (slot_engine.metrics.total_rsn(), byte_engine.metrics.total_rsn());
+    assert!(
+        byte_rsn < slot_rsn,
+        "more resident checkpoints must cut replay: byte {byte_rsn} vs slot {slot_rsn}"
+    );
+    // Encoded checkpoints really are small: average stored size well under
+    // the dense slot size.
+    let avg = byte_engine.store().stored_bytes() / byte_occ.max(1) as u64;
+    assert!(
+        (avg as f64) < 0.5 * dense_upper_bound(&shapes) as f64,
+        "average encoded checkpoint {avg} not < half a dense slot"
+    );
+}

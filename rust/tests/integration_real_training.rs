@@ -105,9 +105,10 @@ fn cause_checkpoints_are_sparse_sisa_dense() {
         (cause_avg as f64) < (sisa_avg as f64) * 0.6,
         "RCMP checkpoints should be <60% of dense: {cause_avg} vs {sisa_avg}"
     );
-    // And the stored params really are sparse tensors.
+    // And the stored params really are sparse tensors (decode the codec
+    // payload back to host tensors to inspect them).
     let ckpt = cause_engine.store().iter().next().expect("checkpoint");
-    let params = ckpt.params.as_ref().expect("real params");
+    let params = ckpt.params.as_ref().expect("real params").decode();
     let (nz, total) = params
         .iter()
         .filter(|p| p.dims.len() == 2 && p.len() >= 1024)
