@@ -1,0 +1,232 @@
+//! bench_persist — durability macro-bench: write-ahead log append
+//! throughput, crash-recovery replay rate, and compaction ratio.
+//!
+//! Three sections:
+//!
+//! 1. **Live overhead** — a deterministic battery-gated workload run with
+//!    `durability = off` vs `log` vs `log+spill`; asserts the journaled
+//!    runs stay receipt-identical to the in-memory run (observation-only
+//!    journaling) and reports the wall-clock overhead.
+//! 2. **Log micro-rates** — re-appending the recorded run's frames to a
+//!    fresh log measures framing+fs append MB/s; recovering a fresh
+//!    service from the recorded log measures recovery events/s. Both are
+//!    wall-clock and gated only against conservative floors
+//!    (`gate.append_mbps`, `gate.recovery_events_per_s`).
+//! 3. **Compaction** — snapshot+truncate on the full log: reports the
+//!    bytes the compacted generation (snapshot + empty tail) occupies vs
+//!    the raw log (`compaction.ratio`) and that a reopen after compaction
+//!    replays zero events.
+//!
+//! Writes `BENCH_persist.json` for CI upload and the regression gate.
+
+use std::time::Instant;
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::catalog::CIFAR10;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::persist::frame::{scan_frames, LOG_MAGIC};
+use cause::persist::{Durability, DurabilityMode, EventLog, MemFs};
+use cause::sim::device::AI_CUBESAT;
+use cause::sim::Battery;
+use cause::util::bench::black_box;
+use cause::util::Json;
+use cause::UnlearningService;
+
+fn fast() -> bool {
+    std::env::var("CAUSE_BENCH_FAST").is_ok()
+}
+
+fn cfg() -> ExperimentConfig {
+    ExperimentConfig {
+        users: if fast() { 16 } else { 40 },
+        rounds: if fast() { 4 } else { 8 },
+        shards: 4,
+        unlearn_prob: 0.4,
+        ..Default::default()
+    }
+}
+
+fn inputs(cfg: &ExperimentConfig) -> (EdgePopulation, RequestTrace) {
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: CIFAR10.scaled(12_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.7,
+        seed: 77,
+    });
+    let trace =
+        RequestTrace::generate(&pop, &TraceConfig::paper_default(31).with_prob(cfg.unlearn_prob));
+    (pop, trace)
+}
+
+fn build(cfg: &ExperimentConfig) -> UnlearningService {
+    let engine = SystemVariant::Cause.build_cost(cfg).expect("engine");
+    let mut battery = Battery::new(&AI_CUBESAT);
+    // Partial charge so the battery-admission path (and possibly deferral/
+    // carryover events) is exercised by the journaled workload.
+    battery.charge_j = battery.capacity_j * 0.4;
+    UnlearningService::new(engine).with_battery(battery)
+}
+
+/// Drive the workload to completion; returns wall seconds.
+fn run(svc: &mut UnlearningService, pop: &EdgePopulation, trace: &RequestTrace) -> f64 {
+    let t0 = Instant::now();
+    let rounds = svc.engine().cfg.rounds;
+    for t in 1..=rounds {
+        svc.ingest_round(pop).expect("ingest");
+        for req in trace.at(t) {
+            svc.submit(req.clone());
+        }
+        svc.advance(1);
+        svc.drain_batched().expect("drain");
+        svc.harvest(5_000.0);
+        svc.drain_batched().expect("drain carryover");
+    }
+    svc.flush_batched().expect("flush");
+    t0.elapsed().as_secs_f64()
+}
+
+fn main() {
+    let cfg = cfg();
+    let (pop, trace) = inputs(&cfg);
+
+    // 1. Live overhead + receipt equivalence.
+    let mut baseline = build(&cfg);
+    let off_secs = run(&mut baseline, &pop, &trace);
+    let off_receipt = baseline.state_receipt();
+
+    let fs_log = MemFs::new();
+    let mut logged = build(&cfg);
+    logged
+        .attach_durability(Durability::mem(DurabilityMode::Log, fs_log.clone(), 0))
+        .expect("attach log");
+    let log_secs = run(&mut logged, &pop, &trace);
+    assert_eq!(logged.state_receipt(), off_receipt, "log must be observation-only");
+    assert!(logged.durability_error().is_none());
+    let events = logged.journal_events();
+
+    let fs_spill = MemFs::new();
+    let mut spilled = build(&cfg);
+    spilled
+        .attach_durability(Durability::mem(DurabilityMode::LogSpill, fs_spill.clone(), 0))
+        .expect("attach spill");
+    let spill_secs = run(&mut spilled, &pop, &trace);
+    assert_eq!(spilled.state_receipt(), off_receipt, "spill must be observation-only");
+    drop(logged);
+    drop(spilled);
+
+    let wal = fs_log.file("wal-0.log").expect("log written");
+    let (frames, _) = scan_frames(&wal, LOG_MAGIC);
+    assert_eq!(frames.len() as u64, events);
+    let log_bytes = wal.len() as u64;
+    println!(
+        "live workload: {} events, {} log bytes | off {:.3}s, log {:.3}s, \
+         log+spill {:.3}s",
+        events, log_bytes, off_secs, log_secs, spill_secs
+    );
+
+    // 2a. Append throughput: re-frame the recorded payloads into a fresh
+    // in-memory log (framing + CRC + fs append, no service work).
+    let reps = if fast() { 2 } else { 8 };
+    let mut appended_bytes = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        let opened = EventLog::open(Box::new(MemFs::new())).expect("fresh log");
+        let mut log = opened.log;
+        for f in &frames {
+            log.append_payload(f).expect("append");
+        }
+        appended_bytes += log.log_bytes();
+        black_box(log.next_seq());
+    }
+    let append_mbps = appended_bytes as f64 / 1e6 / t0.elapsed().as_secs_f64();
+
+    // 2b. Recovery rate: rebuild a fresh service from the recorded log.
+    let recover_once = || {
+        let mut svc = build(&cfg);
+        let report = svc
+            .attach_durability(Durability::mem(DurabilityMode::Log, fs_log.fork(), 0))
+            .expect("recover");
+        assert_eq!(report.events_replayed, events);
+        assert_eq!(svc.state_receipt(), off_receipt, "recovery must be exact");
+        svc
+    };
+    let t0 = Instant::now();
+    let mut replayed = 0u64;
+    for _ in 0..reps {
+        black_box(recover_once());
+        replayed += events;
+    }
+    let recovery_eps = replayed as f64 / t0.elapsed().as_secs_f64();
+    println!(
+        "log rates: append {:.1} MB/s, recovery {:.0} events/s ({} events x {} reps)",
+        append_mbps, recovery_eps, events, reps
+    );
+
+    // 3. Compaction: snapshot + truncate, then prove a reopen needs no
+    // tail replay and the state still matches.
+    let pre_bytes: u64 = fs_log.sizes().iter().map(|(_, s)| s).sum();
+    let fs_c = fs_log.fork();
+    let mut svc = build(&cfg);
+    svc.attach_durability(Durability::mem(DurabilityMode::Log, fs_c.clone(), 0))
+        .expect("recover for compaction");
+    svc.compact_now().expect("compact");
+    let post_bytes: u64 = fs_c.sizes().iter().map(|(_, s)| s).sum();
+    let compaction_ratio = pre_bytes as f64 / post_bytes.max(1) as f64;
+    drop(svc);
+    let mut reopened = build(&cfg);
+    let report = reopened
+        .attach_durability(Durability::mem(DurabilityMode::Log, fs_c, 0))
+        .expect("reopen");
+    assert!(report.snapshot_loaded);
+    assert_eq!(report.events_replayed, 0, "compaction materialized everything");
+    assert_eq!(reopened.state_receipt(), off_receipt);
+    println!(
+        "compaction: {} -> {} bytes ({:.2}x) | reopen replayed 0 events",
+        pre_bytes, post_bytes, compaction_ratio
+    );
+
+    let summary = Json::obj()
+        .set("bench", "persist")
+        .set(
+            "workload",
+            Json::obj()
+                .set("rounds", cfg.rounds as u64)
+                .set("users", cfg.users)
+                .set("events", events)
+                .set("log_bytes", log_bytes)
+                .set("off_secs", off_secs)
+                .set("log_secs", log_secs)
+                .set("spill_secs", spill_secs),
+        )
+        .set(
+            "compaction",
+            Json::obj()
+                .set("pre_bytes", pre_bytes)
+                .set("post_bytes", post_bytes)
+                .set("ratio", compaction_ratio),
+        )
+        .set(
+            "gate",
+            Json::obj()
+                .set("append_mbps", append_mbps)
+                .set("recovery_events_per_s", recovery_eps),
+        );
+    let out_path = std::env::var("CAUSE_BENCH_PERSIST_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_persist.json").to_string()
+    });
+    std::fs::write(&out_path, summary.to_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("\nwrote {out_path}");
+
+    // Acceptance gates (after the JSON so failures are diagnosable).
+    assert!(events > 0, "workload logged no events");
+    assert!(
+        compaction_ratio > 1.0,
+        "compaction must shrink a non-trivial log ({compaction_ratio:.2}x)"
+    );
+}

@@ -2,7 +2,7 @@
 //!
 //! Compares the machine-readable summaries the benches wrote against the
 //! committed `BENCH_baseline.json` and fails (exit 1) when the scheduler,
-//! the planner, or the checkpoint codec regresses:
+//! the planner, the checkpoint codec, or the durability layer regresses:
 //!
 //! * `gate.retrains_coalesced` (from `BENCH_coordinator.json`) drops below
 //!   the baseline (the coalescing win shrank), or
@@ -13,30 +13,33 @@
 //!   planner lost throughput against the compiled-in naive-scan oracle), or
 //! * `gate.ratio` / `gate.decode_mbps` (from `BENCH_compress.json`, when
 //!   given) fall below the `compress.ratio` / `compress.decode_mbps`
-//!   floors in the baseline (the codec compresses or decodes worse than
-//!   the committed floor). The floors are conservative invariant-derived
-//!   values, so they are checked directly, without an extra tolerance.
+//!   floors in the baseline, or
+//! * `gate.append_mbps` / `gate.recovery_events_per_s` (from
+//!   `BENCH_persist.json`, when given) fall below the `persist.*` floors —
+//!   the write-ahead log appends or crash recovery replays slower than the
+//!   committed floor. Floors are conservative invariant-derived values and
+//!   are checked directly, without an extra tolerance.
 //!
 //! The coordinator values are deterministic workload counters, the scale
 //! value is a same-machine ratio (indexed vs naive on identical state),
 //! and the compression ratio is a deterministic function of the bench's
-//! seeded tensors — so those gates are stable across runner hardware;
-//! only the decode-throughput floor is wall-clock, and it is pinned far
-//! below any plausible machine.
+//! seeded tensors — so those gates are stable across runner hardware; only
+//! the decode-throughput, append-throughput, and recovery-rate floors are
+//! wall-clock, and they are pinned far below any plausible machine.
 //!
-//! A baseline with `"bootstrap": true` passes unconditionally and prints
-//! the block to commit as the pinned baseline — used to seed the gate on a
-//! branch whose workload changed intentionally. On a fully **green** run
-//! the gate also prints the ready-to-commit tightened baseline: a
-//! tighten-only merge of the committed values with the run's artifacts
-//! (a run that merely passed within tolerance cannot loosen a floor, and
-//! the wall-clock decode floor is never auto-raised), so green main runs
-//! can ratchet the floors without hand-editing.
+//! A baseline with `"bootstrap": true` passes unconditionally. On every
+//! pass — bootstrap or green — the gate prints **one** ready-to-commit
+//! baseline document covering all four bench files
+//! (coordinator/scale/compress/persist): a tighten-only merge of the
+//! committed values with the run's artifacts (a run that merely passed
+//! within tolerance cannot loosen a floor, and wall-clock floors are never
+//! auto-raised), so green main runs ratchet the floors by committing it
+//! verbatim — no per-file fragments to stitch together.
 //!
 //! ```bash
 //! cargo run --release --bin bench_gate -- \
 //!     BENCH_baseline.json BENCH_coordinator.json \
-//!     [BENCH_scale.json [BENCH_compress.json]]
+//!     [BENCH_scale.json [BENCH_compress.json [BENCH_persist.json]]]
 //! ```
 
 use std::process::ExitCode;
@@ -68,18 +71,18 @@ struct Current {
     p99: f64,
     speedup: Option<f64>,
     compress: Option<(f64, f64)>, // (ratio, decode_mbps)
+    persist: Option<(f64, f64)>,  // (append_mbps, recovery_events_per_s)
 }
 
 impl Current {
-    /// The baseline block these artifacts support — printed in bootstrap
-    /// mode and after a fully green run. A true ratchet: every value only
-    /// ever *tightens* relative to `baseline` (counters/ratios take the
-    /// better of committed vs measured, p99 the smaller), so committing
-    /// the block after a run that merely passed within tolerance cannot
-    /// decay the gates. The wall-clock decode floor is never raised
-    /// automatically: it keeps the committed floor, or suggests a 10x
-    /// headroom under the measured rate when none is pinned — a fast
-    /// runner must not pin a floor slower machines would fail.
+    /// The single baseline document these artifacts support — printed on
+    /// every pass (bootstrap included), covering every measured section.
+    /// A true ratchet: counters/ratios take the better of committed vs
+    /// measured, p99 the smaller, and wall-clock floors (decode MB/s,
+    /// append MB/s, recovery events/s) are never raised automatically — a
+    /// fast runner must not pin a floor slower machines would fail; when
+    /// no floor is committed they get 10x headroom under the measured
+    /// rate.
     fn pin_block(&self, baseline: &Json) -> Json {
         let base = |path: &[&str]| baseline.at(path).and_then(Json::as_f64);
         let coalesced = self
@@ -104,6 +107,17 @@ impl Current {
                 Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
             );
         }
+        if let Some((append, recovery)) = self.persist {
+            let append = base(&["persist", "append_mbps"]).unwrap_or(append / 10.0);
+            let recovery =
+                base(&["persist", "recovery_events_per_s"]).unwrap_or(recovery / 10.0);
+            pin = pin.set(
+                "persist",
+                Json::obj()
+                    .set("append_mbps", append)
+                    .set("recovery_events_per_s", recovery),
+            );
+        }
         pin
     }
 }
@@ -113,6 +127,7 @@ fn run(
     current_path: &str,
     scale_path: Option<&str>,
     compress_path: Option<&str>,
+    persist_path: Option<&str>,
 ) -> Result<(), String> {
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
@@ -128,6 +143,16 @@ fn run(
             Some(p) => {
                 let doc = load(p)?;
                 Some((gate_value(&doc, p, "ratio")?, gate_value(&doc, p, "decode_mbps")?))
+            }
+            None => None,
+        },
+        persist: match persist_path {
+            Some(p) => {
+                let doc = load(p)?;
+                Some((
+                    gate_value(&doc, p, "append_mbps")?,
+                    gate_value(&doc, p, "recovery_events_per_s")?,
+                ))
             }
             None => None,
         },
@@ -183,15 +208,10 @@ fn run(
                     ));
                 }
             }
-            None => {
-                println!(
-                    "bench_gate: {baseline_path} has no scale.probe_speedup — pin it \
-                     by committing:\n{}",
-                    Json::obj()
-                        .set("scale", Json::obj().set("probe_speedup", cur_speedup))
-                        .to_pretty()
-                );
-            }
+            None => println!(
+                "bench_gate: {baseline_path} has no scale.probe_speedup — the \
+                 merged baseline below pins it"
+            ),
         }
     }
 
@@ -216,26 +236,50 @@ fn run(
                     ));
                 }
             }
-            _ => {
+            _ => println!(
+                "bench_gate: {baseline_path} has no compress floors — the merged \
+                 baseline below pins them"
+            ),
+        }
+    }
+
+    if let Some((cur_append, cur_recovery)) = cur.persist {
+        let base_append = baseline.at(&["persist", "append_mbps"]).and_then(Json::as_f64);
+        let base_recovery = baseline
+            .at(&["persist", "recovery_events_per_s"])
+            .and_then(Json::as_f64);
+        match (base_append, base_recovery) {
+            (Some(append_floor), Some(recovery_floor)) => {
                 println!(
-                    "bench_gate: {baseline_path} has no compress floors — pin them \
-                     by committing:\n{}",
-                    Json::obj()
-                        .set(
-                            "compress",
-                            Json::obj().set("ratio", cur_ratio).set("decode_mbps", cur_mbps),
-                        )
-                        .to_pretty()
+                    "bench_gate: persist append floor {append_floor:.1} -> \
+                     {cur_append:.1} MB/s, recovery floor {recovery_floor:.0} -> \
+                     {cur_recovery:.0} events/s"
                 );
+                if cur_append < append_floor - 1e-9 {
+                    failures.push(format!(
+                        "log append throughput fell below floor: {cur_append:.1} < \
+                         {append_floor:.1} MB/s"
+                    ));
+                }
+                if cur_recovery < recovery_floor - 1e-9 {
+                    failures.push(format!(
+                        "recovery replay rate fell below floor: {cur_recovery:.0} < \
+                         {recovery_floor:.0} events/s"
+                    ));
+                }
             }
+            _ => println!(
+                "bench_gate: {baseline_path} has no persist floors — the merged \
+                 baseline below pins them"
+            ),
         }
     }
 
     if failures.is_empty() {
         println!("bench_gate: OK");
-        // Green run: print the tightened baseline these artifacts support
-        // (tighten-only merge against the committed values), so a green
-        // main run can ratchet the floors by committing it verbatim.
+        // One ready-to-commit document covering every measured section
+        // (tighten-only merge against the committed values) — commit it
+        // verbatim to ratchet the floors.
         println!(
             "bench_gate: tightened baseline from this run (commit to ratchet):\n{}",
             cur.pin_block(&baseline).to_pretty()
@@ -248,19 +292,26 @@ fn run(
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (baseline, current, scale, compress) = match args.as_slice() {
-        [b, c] => (b.as_str(), c.as_str(), None, None),
-        [b, c, s] => (b.as_str(), c.as_str(), Some(s.as_str()), None),
-        [b, c, s, z] => (b.as_str(), c.as_str(), Some(s.as_str()), Some(z.as_str())),
+    let (baseline, current, scale, compress, persist) = match args.as_slice() {
+        [b, c] => (b.as_str(), c.as_str(), None, None, None),
+        [b, c, s] => (b.as_str(), c.as_str(), Some(s.as_str()), None, None),
+        [b, c, s, z] => (b.as_str(), c.as_str(), Some(s.as_str()), Some(z.as_str()), None),
+        [b, c, s, z, p] => (
+            b.as_str(),
+            c.as_str(),
+            Some(s.as_str()),
+            Some(z.as_str()),
+            Some(p.as_str()),
+        ),
         _ => {
             eprintln!(
                 "usage: bench_gate <BENCH_baseline.json> <BENCH_coordinator.json> \
-                 [<BENCH_scale.json> [<BENCH_compress.json>]]"
+                 [<BENCH_scale.json> [<BENCH_compress.json> [<BENCH_persist.json>]]]"
             );
             return ExitCode::FAILURE;
         }
     };
-    match run(baseline, current, scale, compress) {
+    match run(baseline, current, scale, compress, persist) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("bench_gate: FAIL: {e}");
@@ -309,6 +360,26 @@ mod tests {
             .to_pretty()
     }
 
+    fn doc_all(
+        coalesced: f64,
+        p99: f64,
+        speedup: f64,
+        ratio: f64,
+        mbps: f64,
+        append: f64,
+        recovery: f64,
+    ) -> String {
+        Json::parse(&doc_full(coalesced, p99, speedup, ratio, mbps))
+            .unwrap()
+            .set(
+                "persist",
+                Json::obj()
+                    .set("append_mbps", append)
+                    .set("recovery_events_per_s", recovery),
+            )
+            .to_pretty()
+    }
+
     fn scale_doc(speedup: f64) -> String {
         Json::obj()
             .set("gate", Json::obj().set("probe_speedup", speedup))
@@ -324,16 +395,27 @@ mod tests {
             .to_pretty()
     }
 
+    fn persist_doc(append: f64, recovery: f64) -> String {
+        Json::obj()
+            .set(
+                "gate",
+                Json::obj()
+                    .set("append_mbps", append)
+                    .set("recovery_events_per_s", recovery),
+            )
+            .to_pretty()
+    }
+
     #[test]
     fn passes_on_equal_and_improved() {
         let base = write_tmp("base.json", &doc(40.0, 4.0));
         let same = write_tmp("same.json", &doc(40.0, 4.0));
         let better = write_tmp("better.json", &doc(55.0, 3.0));
-        assert!(run(&base, &same, None, None).is_ok());
-        assert!(run(&base, &better, None, None).is_ok());
+        assert!(run(&base, &same, None, None, None).is_ok());
+        assert!(run(&base, &better, None, None, None).is_ok());
         // Within the 20% latency tolerance.
         let near = write_tmp("near.json", &doc(40.0, 4.8));
-        assert!(run(&base, &near, None, None).is_ok());
+        assert!(run(&base, &near, None, None, None).is_ok());
     }
 
     #[test]
@@ -341,11 +423,11 @@ mod tests {
         let base = write_tmp("base2.json", &doc(40.0, 4.0));
         let fewer = write_tmp("fewer.json", &doc(39.0, 4.0));
         let slower = write_tmp("slower.json", &doc(40.0, 4.81));
-        assert!(run(&base, &fewer, None, None).is_err());
-        assert!(run(&base, &slower, None, None).is_err());
-        assert!(run("/nonexistent.json", &base, None, None).is_err());
+        assert!(run(&base, &fewer, None, None, None).is_err());
+        assert!(run(&base, &slower, None, None, None).is_err());
+        assert!(run("/nonexistent.json", &base, None, None, None).is_err());
         let junk = write_tmp("junk.json", "not json");
-        assert!(run(&junk, &base, None, None).is_err());
+        assert!(run(&junk, &base, None, None, None).is_err());
     }
 
     #[test]
@@ -355,17 +437,17 @@ mod tests {
         // Within tolerance (20% of 10.0 → floor 8.0) and above.
         let ok = write_tmp("scale_ok.json", &scale_doc(8.5));
         let better = write_tmp("scale_better.json", &scale_doc(30.0));
-        assert!(run(&base, &cur, Some(&ok), None).is_ok());
-        assert!(run(&base, &cur, Some(&better), None).is_ok());
+        assert!(run(&base, &cur, Some(&ok), None, None).is_ok());
+        assert!(run(&base, &cur, Some(&better), None, None).is_ok());
         // Below the floor: fail.
         let bad = write_tmp("scale_bad.json", &scale_doc(7.9));
-        assert!(run(&base, &cur, Some(&bad), None).is_err());
+        assert!(run(&base, &cur, Some(&bad), None, None).is_err());
         // Malformed scale summary: fail even though coordinator gates pass.
         let junk = write_tmp("scale_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&junk), None).is_err());
+        assert!(run(&base, &cur, Some(&junk), None, None).is_err());
         // Baseline without a pinned scale value: informational pass.
         let base_unpinned = write_tmp("base4.json", &doc(40.0, 4.0));
-        assert!(run(&base_unpinned, &cur, Some(&ok), None).is_ok());
+        assert!(run(&base_unpinned, &cur, Some(&ok), None, None).is_ok());
     }
 
     #[test]
@@ -376,22 +458,50 @@ mod tests {
         // At or above both floors: pass.
         let ok = write_tmp("comp_ok.json", &compress_doc(2.9, 400.0));
         let exact = write_tmp("comp_exact.json", &compress_doc(2.0, 25.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&ok)).is_ok());
-        assert!(run(&base, &cur, Some(&scale), Some(&exact)).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&ok), None).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&exact), None).is_ok());
         // Ratio below the floor: fail (no extra tolerance on floors).
         let thin = write_tmp("comp_thin.json", &compress_doc(1.9, 400.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&thin)).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&thin), None).is_err());
         // Decode throughput below the floor: fail.
         let slow = write_tmp("comp_slow.json", &compress_doc(2.9, 20.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&slow)).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&slow), None).is_err());
         // Malformed compress summary: fail.
         let junk = write_tmp("comp_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&scale), Some(&junk)).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&junk), None).is_err());
         // Baseline without compress floors: informational pass.
         let base_nofloor = write_tmp("base6.json", &doc_with_scale(40.0, 4.0, 10.0));
-        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&ok)).is_ok());
+        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&ok), None).is_ok());
         // Compress artifact without the scale artifact also works.
-        assert!(run(&base, &cur, None, Some(&ok)).is_ok());
+        assert!(run(&base, &cur, None, Some(&ok), None).is_ok());
+    }
+
+    #[test]
+    fn persist_gate_checks_floors() {
+        let base =
+            write_tmp("base7.json", &doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0));
+        let cur = write_tmp("cur7.json", &doc(40.0, 4.0));
+        let scale = write_tmp("scale7.json", &scale_doc(12.0));
+        let comp = write_tmp("comp7.json", &compress_doc(2.9, 400.0));
+        // At/above both floors: pass.
+        let ok = write_tmp("pers_ok.json", &persist_doc(120.0, 90_000.0));
+        let exact = write_tmp("pers_exact.json", &persist_doc(20.0, 5000.0));
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&ok)).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&exact)).is_ok());
+        // Append below floor: fail.
+        let slow_append = write_tmp("pers_slow_a.json", &persist_doc(19.0, 90_000.0));
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_append)).is_err());
+        // Recovery below floor: fail.
+        let slow_rec = write_tmp("pers_slow_r.json", &persist_doc(120.0, 4000.0));
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_rec)).is_err());
+        // Malformed persist summary: fail.
+        let junk = write_tmp("pers_junk.json", "{}");
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&junk)).is_err());
+        // Baseline without persist floors: informational pass.
+        let base_nofloor = write_tmp("base8.json", &doc_full(40.0, 4.0, 10.0, 2.0, 25.0));
+        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&comp), Some(&ok)).is_ok());
+        // Persist artifact alone (no scale/compress) also works.
+        assert!(run(&base, &cur, None, None, Some(&ok)).is_ok());
     }
 
     #[test]
@@ -401,23 +511,26 @@ mod tests {
             &Json::obj().set("bootstrap", true).to_pretty(),
         );
         let cur = write_tmp("cur.json", &doc(12.0, 2.0));
-        assert!(run(&boot, &cur, None, None).is_ok());
+        assert!(run(&boot, &cur, None, None, None).is_ok());
         // Bootstrap still requires well-formed current summaries.
         let junk = write_tmp("junk2.json", "{}");
-        assert!(run(&boot, &junk, None, None).is_err());
+        assert!(run(&boot, &junk, None, None, None).is_err());
         let scale = write_tmp("boot_scale.json", &scale_doc(12.5));
-        assert!(run(&boot, &cur, Some(&scale), None).is_ok());
-        assert!(run(&boot, &cur, Some(&junk), None).is_err());
+        assert!(run(&boot, &cur, Some(&scale), None, None).is_ok());
+        assert!(run(&boot, &cur, Some(&junk), None, None).is_err());
         let comp = write_tmp("boot_comp.json", &compress_doc(3.0, 500.0));
-        assert!(run(&boot, &cur, Some(&scale), Some(&comp)).is_ok());
-        assert!(run(&boot, &cur, Some(&scale), Some(&junk)).is_err());
+        assert!(run(&boot, &cur, Some(&scale), Some(&comp), None).is_ok());
+        assert!(run(&boot, &cur, Some(&scale), Some(&junk), None).is_err());
+        let pers = write_tmp("boot_pers.json", &persist_doc(100.0, 50_000.0));
+        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers)).is_ok());
+        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&junk)).is_err());
     }
 
     #[test]
     fn pin_block_only_tightens_and_never_pins_wall_clock() {
         let at = |j: &Json, p: &[&str]| j.at(p).and_then(Json::as_f64);
-        let baseline =
-            Json::parse(&doc_full(40.0, 4.0, 10.0, 2.0, 25.0)).expect("baseline doc");
+        let baseline = Json::parse(&doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0))
+            .expect("baseline doc");
         // A run that passed within tolerance (worse p99, lower speedup)
         // must not loosen anything; genuine improvements do tighten.
         let cur = Current {
@@ -425,36 +538,45 @@ mod tests {
             p99: 4.8,                 // worse than 4.0 (within 20%) → stays 4.0
             speedup: Some(8.5),       // worse than 10.0 (within 20%) → stays 10.0
             compress: Some((2.8, 310.0)), // ratio better; mbps is wall-clock
+            persist: Some((500.0, 1_000_000.0)), // both wall-clock → floors stay
         };
         let pin = cur.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
         assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(4.0));
         assert_eq!(at(&pin, &["scale", "probe_speedup"]), Some(10.0));
         assert_eq!(at(&pin, &["compress", "ratio"]), Some(2.8));
-        // The decode floor is never raised from a measured wall-clock rate.
+        // Wall-clock floors are never raised from a measured rate.
         assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(25.0));
+        assert_eq!(at(&pin, &["persist", "append_mbps"]), Some(20.0));
+        assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(5000.0));
         // Improvements in the latency/speedup direction do ratchet.
         let better = Current {
             coalesced: 40.0,
             p99: 3.0,
             speedup: Some(30.0),
             compress: Some((1.5, 310.0)), // worse ratio → keeps the 2.0 floor
+            persist: None,
         };
         let pin = better.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(3.0));
         assert_eq!(at(&pin, &["scale", "probe_speedup"]), Some(30.0));
         assert_eq!(at(&pin, &["compress", "ratio"]), Some(2.0));
+        // Sections not measured stay absent so they can't un-pin floors.
+        assert_eq!(pin.get("persist"), None);
         // No committed floors (bootstrap-style baseline): counters pin
-        // as measured, the wall-clock floor gets 10x headroom.
+        // as measured, wall-clock floors get 10x headroom.
         let boot = Json::obj().set("bootstrap", true);
         let pin = cur.pin_block(&boot);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
         assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(4.8));
         assert_eq!(at(&pin, &["scale", "probe_speedup"]), Some(8.5));
         assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(31.0));
-        // Sections not measured stay absent so they can't un-pin floors.
-        let sparse = Current { coalesced: 1.0, p99: 1.0, speedup: None, compress: None };
+        assert_eq!(at(&pin, &["persist", "append_mbps"]), Some(50.0));
+        assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(100_000.0));
+        let sparse =
+            Current { coalesced: 1.0, p99: 1.0, speedup: None, compress: None, persist: None };
         assert_eq!(sparse.pin_block(&boot).get("scale"), None);
         assert_eq!(sparse.pin_block(&boot).get("compress"), None);
+        assert_eq!(sparse.pin_block(&boot).get("persist"), None);
     }
 }

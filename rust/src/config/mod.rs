@@ -7,6 +7,7 @@ use anyhow::{bail, Result};
 
 use crate::data::catalog::{DatasetSpec, CIFAR10};
 use crate::memory::store::StoreMeter;
+use crate::persist::DurabilityMode;
 use crate::runtime::codec::CodecMode;
 use crate::unlearning::batch::BatchPolicy;
 pub use profiles::ModelProfile;
@@ -55,6 +56,18 @@ pub struct ExperimentConfig {
     /// (additionally diff against the lineage's previous payload). The
     /// accounting backend stores no tensors and ignores this.
     pub codec: CodecMode,
+    /// Service durability: `off` (default — byte-identical to the
+    /// in-memory service), `log` (write-ahead event log, crash-consistent
+    /// recovery of all accounting state), or `log+spill` (additionally
+    /// spill checkpoint payload bytes so recovery restores store tensors
+    /// bit-exactly).
+    pub durability: DurabilityMode,
+    /// Directory for the write-ahead log / snapshots when `durability`
+    /// is not `off`.
+    pub persist_dir: String,
+    /// Auto-compact the event log after this many events accumulate in
+    /// the tail (0 = only on explicit `compact_now`).
+    pub compact_every: u64,
     pub model: ModelProfile,
     pub dataset: DatasetSpec,
 }
@@ -86,6 +99,9 @@ impl Default for ExperimentConfig {
             batch_slo: 0,
             store_meter: StoreMeter::Slots,
             codec: CodecMode::Sparse,
+            durability: DurabilityMode::Off,
+            persist_dir: "cause_persist".to_string(),
+            compact_every: 512,
             model: profiles::RESNET34,
             dataset: CIFAR10,
         }
@@ -151,6 +167,13 @@ impl ExperimentConfig {
         self
     }
 
+    /// Enable service durability (write-ahead log at `persist_dir`).
+    pub fn with_durability(mut self, mode: DurabilityMode, dir: impl Into<String>) -> Self {
+        self.durability = mode;
+        self.persist_dir = dir.into();
+        self
+    }
+
     /// Apply a `key = value` assignment (config file / CLI override).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
@@ -198,6 +221,17 @@ impl ExperimentConfig {
                 self.codec = CodecMode::by_name(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown codec '{v}'"))?
             }
+            "durability" => {
+                self.durability = DurabilityMode::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown durability mode '{v}'"))?
+            }
+            "persist_dir" => {
+                if v.is_empty() {
+                    bail!("persist_dir must not be empty");
+                }
+                self.persist_dir = v.to_string();
+            }
+            "compact_every" => self.compact_every = v.parse()?,
             "model" => {
                 self.model = ModelProfile::by_name(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown model '{v}'"))?
@@ -296,6 +330,32 @@ mod tests {
         assert_eq!(c.memory_bytes, 2048);
         assert_eq!(c.store_meter, StoreMeter::Bytes);
         assert_eq!(c.codec, CodecMode::Delta);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn durability_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.durability, DurabilityMode::Off);
+        assert_eq!(c.persist_dir, "cause_persist");
+        assert_eq!(c.compact_every, 512);
+        c.apply("durability", "log").unwrap();
+        assert_eq!(c.durability, DurabilityMode::Log);
+        c.apply("durability", "log+spill").unwrap();
+        assert_eq!(c.durability, DurabilityMode::LogSpill);
+        c.apply("durability", "off").unwrap();
+        assert_eq!(c.durability, DurabilityMode::Off);
+        assert!(c.apply("durability", "raid5").is_err());
+        c.apply("persist_dir", "/tmp/sat-7/wal").unwrap();
+        assert_eq!(c.persist_dir, "/tmp/sat-7/wal");
+        assert!(c.apply("persist_dir", "").is_err());
+        c.apply("compact_every", "64").unwrap();
+        assert_eq!(c.compact_every, 64);
+        assert!(c.apply("compact_every", "soon").is_err());
+        // Builder shorthand.
+        let c = ExperimentConfig::default().with_durability(DurabilityMode::Log, "d");
+        assert_eq!(c.durability, DurabilityMode::Log);
+        assert_eq!(c.persist_dir, "d");
         c.validate().unwrap();
     }
 

@@ -39,12 +39,14 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::lineage::LineageSet;
-use crate::data::dataset::{BlockId, EdgePopulation};
+use crate::data::dataset::{BlockId, EdgePopulation, UserId};
 use crate::data::trace::{RequestTrace, UnlearnRequest};
 use crate::energy::EnergyModel;
-use crate::memory::{Checkpoint, CheckpointId, ModelStore, StoreEvent};
+use crate::memory::{CapacityMode, Checkpoint, CheckpointId, ModelStore, StoreEvent, StoreStats};
 use crate::metrics::RunMetrics;
-use crate::partition::Partitioner;
+use crate::partition::{Partitioner, Placement};
+use crate::persist::event::{PlacementRecord, RoundRec, StoreEvRec, StoreOpRec};
+use crate::persist::snapshot::{SlotCkpt, StoreImage};
 use crate::pruning::PruneSchedule;
 use crate::runtime::codec::{DecodeCache, EncodedParams, TensorCodec};
 use crate::runtime::HostTensor;
@@ -270,6 +272,10 @@ pub struct RoundReport {
     pub shards_active: usize,
     pub lineages_trained: Vec<usize>,
     pub new_samples: u64,
+    /// This round's placements with the owning user — what the durability
+    /// journal records so recovery can replay `LineageSet::add_round`
+    /// without the population or the partitioner.
+    pub placements: Vec<(Placement, UserId)>,
 }
 
 /// The unlearning engine.
@@ -294,6 +300,12 @@ pub struct Engine {
     /// Sorted cache of the active lineage indices — kept incrementally so
     /// `evaluate()` never re-collects the set.
     active_list: Vec<usize>,
+    /// When on, every store mutation is recorded so the durability journal
+    /// can frame it into the current transition's event. Off by default —
+    /// `durability = off` leaves the engine byte-identical.
+    taping: bool,
+    /// Store mutations since the last [`Engine::take_tape`].
+    tape: Vec<StoreOpRec>,
 }
 
 impl Engine {
@@ -326,6 +338,8 @@ impl Engine {
             exec_mode: ExecMode::Auto,
             active: vec![false; max],
             active_list: Vec::with_capacity(max),
+            taping: false,
+            tape: Vec::new(),
         }
     }
 
@@ -373,11 +387,7 @@ impl Engine {
 
         let mut new_samples = 0;
         for &lineage in &touched {
-            if !self.active[lineage] {
-                self.active[lineage] = true;
-                let at = self.active_list.partition_point(|&l| l < lineage);
-                self.active_list.insert(at, lineage);
-            }
+            self.mark_active(lineage);
             let l = self.lineages.get(lineage);
             let covered = l.segment_count() - 1;
             let seg_blocks = l.replay_blocks(covered); // just the new segment
@@ -403,11 +413,19 @@ impl Engine {
         };
         self.metrics.accuracy_by_round.push(acc);
 
+        let placements = placements
+            .into_iter()
+            .map(|p| {
+                let user = pop.block(p.block).unwrap().user;
+                (p, user)
+            })
+            .collect();
         Ok(RoundReport {
             round: t,
             shards_active: s_t,
             lineages_trained: touched,
             new_samples,
+            placements,
         })
     }
 
@@ -430,9 +448,12 @@ impl Engine {
             // the snapshot (no param clone, no prune pass) but keep the
             // accounting and the id sequence identical to the
             // store-then-reject path.
-            self.store.next_id();
+            let id = self.store.next_id();
             self.store.record_rejection();
             self.metrics.ckpts_rejected += 1;
+            if self.taping {
+                self.tape.push(StoreOpRec::SkipReject { id: id.0 });
+            }
             return Ok(());
         }
         let (size_hint, params) = self.trainer.snapshot(lineage)?;
@@ -453,6 +474,7 @@ impl Engine {
             }
         };
         let id = self.store.next_id();
+        let payload_for_tape = if self.taping { payload.clone() } else { None };
         let ckpt = Checkpoint {
             id,
             lineage,
@@ -461,7 +483,8 @@ impl Engine {
             size_bytes,
             params: payload,
         };
-        match self.store.store(ckpt) {
+        let event = self.store.store(ckpt);
+        match &event {
             StoreEvent::Stored { .. } => self.metrics.ckpts_stored += 1,
             StoreEvent::Replaced { .. } => {
                 self.metrics.ckpts_stored += 1;
@@ -472,6 +495,17 @@ impl Engine {
                 self.metrics.ckpts_replaced += victims.len() as u64;
             }
             StoreEvent::Rejected => self.metrics.ckpts_rejected += 1,
+        }
+        if self.taping {
+            self.tape.push(StoreOpRec::Store {
+                id: id.0,
+                lineage: lineage as u64,
+                round,
+                covered: covered_segments,
+                size_bytes,
+                payload: payload_for_tape,
+                event: StoreEvRec::from_event(&event),
+            });
         }
         Ok(())
     }
@@ -681,9 +715,15 @@ impl Engine {
         out: &TrainOutcome,
         outcome: &mut UnlearnOutcome,
     ) -> Result<()> {
-        outcome.ckpts_invalidated += self
+        let invalidated = self
             .store
-            .invalidate(|c| c.lineage == lineage && c.covered_segments == step.clean_cover);
+            .invalidate_collect(|c| c.lineage == lineage && c.covered_segments == step.clean_cover);
+        outcome.ckpts_invalidated += invalidated.len();
+        if self.taping {
+            self.tape.push(StoreOpRec::Invalidate {
+                ids: invalidated.iter().map(|i| i.0).collect(),
+            });
+        }
         outcome.invalidated_versions.push((lineage, step.clean_cover));
         outcome.warm_covers.push((lineage, step.warm_cover));
         if step.scratch {
@@ -719,6 +759,196 @@ impl Engine {
             self.trainer.reset(lineage, decoded.as_deref())?;
         }
         Ok(())
+    }
+
+    // -- Durability glue (journal taping, replay, snapshots) ---------------
+
+    /// Enable/disable store-mutation taping (the durability journal frames
+    /// the tape into each transition's event). Off keeps every path
+    /// byte-identical to the pre-durability engine.
+    pub(crate) fn set_taping(&mut self, on: bool) {
+        self.taping = on;
+        if !on {
+            self.tape.clear();
+        }
+    }
+
+    /// Drain the store mutations recorded since the last call.
+    pub(crate) fn take_tape(&mut self) -> Vec<StoreOpRec> {
+        std::mem::take(&mut self.tape)
+    }
+
+    pub(crate) fn store_mut(&mut self) -> &mut ModelStore {
+        &mut self.store
+    }
+
+    /// Mark a lineage active, keeping the sorted cache consistent.
+    fn mark_active(&mut self, lineage: usize) {
+        if !self.active[lineage] {
+            self.active[lineage] = true;
+            let at = self.active_list.partition_point(|&l| l < lineage);
+            self.active_list.insert(at, lineage);
+        }
+    }
+
+    /// Partitioner counters for the durability journal/snapshot.
+    pub(crate) fn partitioner_state(&self) -> Vec<u64> {
+        self.partitioner.persist_state()
+    }
+
+    pub(crate) fn restore_partitioner_state(&mut self, state: &[u64]) {
+        self.partitioner.restore_state(state);
+    }
+
+    /// Replay one removal exactly as `collect_poison` performed it.
+    pub(crate) fn replay_remove(&mut self, block: u64, n: u64) {
+        let _ = self.lineages.remove_samples(BlockId(block), n);
+    }
+
+    /// Replay recorded store mutations (admissions with their exact
+    /// victim sets, probe-skipped rejections, invalidations). Engine
+    /// metrics are NOT touched here — the enclosing event carries them as
+    /// absolute post-values.
+    pub(crate) fn replay_store_ops(&mut self, ops: &[StoreOpRec]) {
+        for op in ops {
+            match op {
+                StoreOpRec::Store { event, .. } => {
+                    let ckpt = op.to_checkpoint().expect("Store op has a checkpoint");
+                    self.store.apply_store_record(ckpt, &event.to_event());
+                }
+                StoreOpRec::SkipReject { id } => self.store.apply_skipped_rejection(*id),
+                StoreOpRec::Invalidate { ids } => {
+                    // An empty id set is a recorded no-op (live
+                    // `invalidate_collect` found nothing and added 0).
+                    if !ids.is_empty() {
+                        let _ = self.store.invalidate(|c| ids.contains(&c.id.0));
+                    }
+                }
+            }
+        }
+    }
+
+    /// Replay one training round from its journal record: lineages,
+    /// active set, store admissions, the accuracy slot. Round-slot metrics
+    /// and scalar counters come from the event's absolute metric record
+    /// (applied by the service).
+    pub(crate) fn replay_round(&mut self, rec: &RoundRec) {
+        self.round = rec.round;
+        self.apply_recorded_placements(rec.round, &rec.placements);
+        self.replay_store_ops(&rec.store_ops);
+        self.metrics.accuracy_by_round.push(rec.accuracy);
+        self.restore_partitioner_state(&rec.partitioner_state);
+        self.store.restore_policy_state(&rec.policy_state);
+    }
+
+    /// Feed recorded placements through the real `add_round` so prefix
+    /// sums, the block index, and the active set come out identical.
+    fn apply_recorded_placements(&mut self, round: u32, placements: &[PlacementRecord]) {
+        let placed: Vec<Placement> = placements
+            .iter()
+            .map(|p| Placement {
+                block: BlockId(p.block),
+                shard: p.shard as usize,
+                samples: p.samples,
+            })
+            .collect();
+        let users: BTreeMap<BlockId, UserId> = placements
+            .iter()
+            .map(|p| (BlockId(p.block), UserId(p.user)))
+            .collect();
+        let touched = self.lineages.add_round(round, &placed, |b| users[&b]);
+        for lineage in touched {
+            self.mark_active(lineage);
+        }
+    }
+
+    /// Rebuild lineage state from a snapshot's per-round placements.
+    pub(crate) fn restore_rounds(&mut self, rounds: &[(u32, Vec<PlacementRecord>)]) {
+        for (round, placements) in rounds {
+            self.apply_recorded_placements(*round, placements);
+        }
+    }
+
+    pub(crate) fn set_round(&mut self, round: u32) {
+        self.round = round;
+    }
+
+    /// Snapshot the lineage history as per-round placement records with
+    /// *current* sample counts (unlearned data stays unlearned after the
+    /// rebuild). Rounds ascending; within a round, lineages ascending in
+    /// segment slot order — exactly the order `add_round` saw.
+    pub(crate) fn capture_rounds(&self) -> Vec<(u32, Vec<PlacementRecord>)> {
+        let mut rounds: BTreeMap<u32, Vec<PlacementRecord>> = BTreeMap::new();
+        for li in 0..self.lineages.len() {
+            for seg in self.lineages.get(li).segments() {
+                let recs = seg.placements.iter().map(|p| PlacementRecord {
+                    block: p.block.0,
+                    user: p.user.0,
+                    shard: li as u64,
+                    samples: p.samples,
+                });
+                rounds.entry(seg.round).or_default().extend(recs);
+            }
+        }
+        rounds.into_iter().collect()
+    }
+
+    /// Exact store state for a snapshot.
+    pub(crate) fn capture_store_image(&self) -> StoreImage {
+        let (mode_tag, mode_value) = match self.store.mode() {
+            CapacityMode::Slots(n) => (0u8, n as u64),
+            CapacityMode::Bytes(b) => (1u8, b),
+        };
+        let mut slots: Vec<Option<SlotCkpt>> = vec![None; self.store.capacity()];
+        for (slot, c) in self.store.slot_entries() {
+            slots[slot] = Some(SlotCkpt {
+                id: c.id.0,
+                lineage: c.lineage as u64,
+                round: c.round,
+                covered: c.covered_segments,
+                size_bytes: c.size_bytes,
+                payload: c.params.clone(),
+            });
+        }
+        let st = self.store.stats();
+        StoreImage {
+            mode_tag,
+            mode_value,
+            next_id: self.store.next_id_peek(),
+            stats: (st.stored, st.replaced, st.rejected, st.invalidated),
+            slots,
+            policy_state: self.store.policy_state(),
+        }
+    }
+
+    /// Restore the store from a snapshot (the service validates that the
+    /// engine was built with the same capacity mode).
+    pub(crate) fn restore_store_image(&mut self, img: &StoreImage) {
+        let slots: Vec<Option<Checkpoint>> = img
+            .slots
+            .iter()
+            .map(|s| {
+                s.as_ref().map(|c| Checkpoint {
+                    id: CheckpointId(c.id),
+                    lineage: c.lineage as usize,
+                    round: c.round,
+                    covered_segments: c.covered,
+                    size_bytes: c.size_bytes,
+                    params: c.payload.clone(),
+                })
+            })
+            .collect();
+        self.store.restore_slots(
+            slots,
+            img.next_id,
+            StoreStats {
+                stored: img.stats.0,
+                replaced: img.stats.1,
+                rejected: img.stats.2,
+                invalidated: img.stats.3,
+            },
+        );
+        self.store.restore_policy_state(&img.policy_state);
     }
 
     /// Serve one unlearning request (Algorithm 3 lines 7–12): a

@@ -18,6 +18,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::engine::{Engine, EvalPolicy};
 use crate::memory::{ModelStore, StoreMeter};
 use crate::partition::{ClassBased, Partitioner, Ucdp, Uniform};
+use crate::persist::{Durability, DurabilityMode};
 use crate::pruning::PruneSchedule;
 use crate::replacement::{FiboR, NoReplace, RandomReplace, ReplacementPolicy};
 use crate::shard_controller::ShardController;
@@ -195,11 +196,22 @@ impl SystemVariant {
     }
 
     /// Build the queue-fronted unlearning service for this system (cost
-    /// backend), with the batch planner this system should run.
+    /// backend), with the batch planner this system should run. When the
+    /// config enables durability, the service recovers whatever state
+    /// `persist_dir` holds (crash restart) and arms the write-ahead log
+    /// before returning.
     pub fn build_service(&self, cfg: &ExperimentConfig) -> Result<UnlearningService> {
         let engine = self.build_cost(cfg)?;
         let planner = BatchPlanner::new(self.batch_policy(cfg), cfg.batch_window);
-        Ok(UnlearningService::new(engine).with_planner(planner))
+        let mut svc = UnlearningService::new(engine).with_planner(planner);
+        if cfg.durability != DurabilityMode::Off {
+            svc.attach_durability(Durability::disk(
+                cfg.durability,
+                &cfg.persist_dir,
+                cfg.compact_every,
+            )?)?;
+        }
+        Ok(svc)
     }
 }
 

@@ -29,6 +29,7 @@ pub mod experiments;
 pub mod memory;
 pub mod metrics;
 pub mod partition;
+pub mod persist;
 pub mod prng;
 pub mod pruning;
 pub mod replacement;
@@ -43,4 +44,5 @@ pub mod xla;
 
 pub use config::ExperimentConfig;
 pub use coordinator::system::{CauseSystem, SystemVariant};
+pub use persist::{Durability, DurabilityMode};
 pub use unlearning::{BatchPlanner, BatchPolicy, UnlearningService};

@@ -30,7 +30,7 @@ SYSTEMS:
 CONFIG KEYS (key=value):
     seed users rounds epochs_per_round shards memory_gb unlearn_prob
     sc_gamma sc_p prune_keep batch_policy batch_window batch_slo model dataset
-    store_mode memory_budget_bytes codec
+    store_mode memory_budget_bytes codec durability persist_dir compact_every
 
 BATCHING:
     batch_policy = fcfs | coalesce | deadline
@@ -45,6 +45,19 @@ MEMORY:
     memory_budget_bytes = C_m in bytes; implies store_mode = bytes
     codec               = dense | sparse | delta (checkpoint payload codec,
                           tensor-carrying backends only)
+
+DURABILITY (service-level; reboots must not void the deletion guarantee):
+    durability    = off | log | log+spill
+                    off       = in-memory only (byte-identical baseline)
+                    log       = CRC-framed write-ahead event log; recovery
+                                replays snapshot+tail to the exact pre-crash
+                                accounting state (lineages, store, battery,
+                                queue, carryover, metrics)
+                    log+spill = log plus checkpoint payload spill — store
+                                tensors recover bit-exactly
+    persist_dir   = directory for MANIFEST.json / wal-*.log / snapshot-*.bin
+    compact_every = events between automatic snapshot+truncate compactions
+                    (0 = never; compaction bounds recovery time and log size)
 "
 }
 

@@ -28,6 +28,22 @@
 //!   unit-size byte budgets replay slot mode byte for byte
 //!   (property-tested in `tests/compressed_store.rs`).
 //!
+//! ## Delta-pinned parent accounting
+//!
+//! Byte accounting is *identity-keyed over payloads*, not a naive sum of
+//! `size_bytes`: every distinct [`EncodedParams`] reachable from a resident
+//! checkpoint — its own payload plus the parents its delta chain pins via
+//! `Arc` — is charged exactly once. While a delta's parent is itself
+//! resident this equals the old sum; when the parent's checkpoint is
+//! evicted but the payload stays pinned by a resident delta child, the
+//! parent's bytes **stay charged** until the last pinning child dies, so a
+//! long delta chain can never hold more real memory than
+//! `memory_budget_bytes` (this closes the PR 4 retention caveat; the
+//! eviction loop keeps evicting until the charged total — pins included —
+//! fits). Checkpoints without payloads (the accounting backend) charge
+//! their declared `size_bytes`, which also keeps slot-mode numbers
+//! unchanged.
+//!
 //! ## Complexity
 //!
 //! A secondary index ordered by `(lineage, coverage, slot)` is maintained
@@ -46,11 +62,11 @@
 //! The `*_scan` twins keep the original linear scans alive as differential
 //! oracles for the property tests and the benches' naive baselines.
 
-use std::collections::BTreeSet;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::Arc;
 
 use crate::replacement::ReplacementPolicy;
-use crate::runtime::codec::EncodedParams;
+use crate::runtime::codec::{payload_chain, EncodedParams};
 
 /// Unique checkpoint id (monotonic per store).
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -153,9 +169,15 @@ pub struct ModelStore {
     /// The last element of a `(lineage, ..=coverage)` range is exactly the
     /// checkpoint the original `max_by_key` scan selected.
     by_cover: BTreeSet<(usize, u32, usize)>,
-    /// Σ `size_bytes` over stored checkpoints — maintained by every
+    /// Bytes held by resident checkpoints *including delta-pinned parent
+    /// payloads*, each distinct payload charged once — maintained by every
     /// store/evict/invalidate so [`ModelStore::stored_bytes`] is O(1).
     bytes: u64,
+    /// Identity-keyed refcounts behind `bytes`: payload identity (the
+    /// `Arc` allocation address) → (owned bytes, resident chains that
+    /// reach it). A payload leaves the map — and stops being charged —
+    /// only when no resident checkpoint's chain reaches it any more.
+    charged: HashMap<usize, (u64, u32)>,
 }
 
 impl ModelStore {
@@ -172,6 +194,7 @@ impl ModelStore {
             free: (0..capacity).collect(),
             by_cover: BTreeSet::new(),
             bytes: 0,
+            charged: HashMap::new(),
         }
     }
 
@@ -189,6 +212,75 @@ impl ModelStore {
             free: BTreeSet::new(),
             by_cover: BTreeSet::new(),
             bytes: 0,
+            charged: HashMap::new(),
+        }
+    }
+
+    /// Charge one checkpoint's memory: its declared size when it carries
+    /// no payload, otherwise every payload its chain reaches that is not
+    /// already charged (identity-keyed, so shared parents count once).
+    fn charge_payload(&mut self, params: Option<&Arc<EncodedParams>>, size_bytes: u64) {
+        match params {
+            None => self.bytes += size_bytes,
+            Some(p) => {
+                for a in payload_chain(p) {
+                    let entry = self
+                        .charged
+                        .entry(Arc::as_ptr(&a) as usize)
+                        .or_insert((a.size_bytes(), 0));
+                    if entry.1 == 0 {
+                        self.bytes += entry.0;
+                    }
+                    entry.1 += 1;
+                }
+            }
+        }
+    }
+
+    fn charge(&mut self, ckpt: &Checkpoint) {
+        self.charge_payload(ckpt.params.as_ref(), ckpt.size_bytes);
+    }
+
+    /// Release one checkpoint's memory charge; a payload stays charged
+    /// while any other resident chain (a delta child pinning its parent)
+    /// still reaches it.
+    fn release(&mut self, ckpt: &Checkpoint) {
+        match &ckpt.params {
+            None => self.bytes -= ckpt.size_bytes,
+            Some(p) => {
+                for a in payload_chain(p) {
+                    let key = Arc::as_ptr(&a) as usize;
+                    let entry =
+                        self.charged.get_mut(&key).expect("released payload was charged");
+                    entry.1 -= 1;
+                    if entry.1 == 0 {
+                        self.bytes -= entry.0;
+                        self.charged.remove(&key);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Bytes admitting `ckpt` would add right now (payloads already
+    /// charged through a resident chain are free).
+    fn marginal_charge(&self, ckpt: &Checkpoint) -> u64 {
+        match &ckpt.params {
+            None => ckpt.size_bytes,
+            Some(p) => payload_chain(p)
+                .iter()
+                .filter(|a| !self.charged.contains_key(&(Arc::as_ptr(a) as usize)))
+                .map(|a| a.size_bytes())
+                .sum(),
+        }
+    }
+
+    /// Bytes `ckpt` would occupy in an otherwise empty store — its whole
+    /// chain. If this exceeds the budget, no eviction set can ever fit it.
+    fn standalone_charge(ckpt: &Checkpoint) -> u64 {
+        match &ckpt.params {
+            None => ckpt.size_bytes,
+            Some(p) => payload_chain(p).iter().map(|a| a.size_bytes()).sum(),
         }
     }
 
@@ -223,15 +315,33 @@ impl ModelStore {
         self.slots.iter().filter(|s| s.is_some()).count()
     }
 
-    /// Total bytes currently stored. O(1) maintained counter.
+    /// Total bytes currently held: every distinct payload reachable from a
+    /// resident checkpoint (delta-pinned parents included) charged once,
+    /// plus declared sizes of payloadless checkpoints. O(1) maintained
+    /// counter.
     pub fn stored_bytes(&self) -> u64 {
         self.bytes
     }
 
-    /// Differential oracle for [`ModelStore::stored_bytes`]: the original
-    /// full-slot scan. Test/bench use only.
+    /// Differential oracle for [`ModelStore::stored_bytes`]: a full scan
+    /// that re-derives the identity-deduplicated charge from the slots.
+    /// Test/bench use only.
     pub fn stored_bytes_scan(&self) -> u64 {
-        self.iter().map(|c| c.size_bytes).sum()
+        let mut seen: BTreeSet<usize> = BTreeSet::new();
+        let mut total = 0;
+        for c in self.iter() {
+            match &c.params {
+                None => total += c.size_bytes,
+                Some(p) => {
+                    for a in payload_chain(p) {
+                        if seen.insert(Arc::as_ptr(&a) as usize) {
+                            total += a.size_bytes();
+                        }
+                    }
+                }
+            }
+        }
+        total
     }
 
     pub fn stats(&self) -> &StoreStats {
@@ -294,20 +404,19 @@ impl ModelStore {
     fn store_slot(&mut self, ckpt: Checkpoint) -> StoreEvent {
         if let Some(free) = self.free.pop_first() {
             self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, free));
-            self.bytes += ckpt.size_bytes;
+            self.charge(&ckpt);
             self.slots[free] = Some(ckpt);
             self.stats.stored += 1;
             return StoreEvent::Stored { slot: free };
         }
         match self.policy.victim(self.slots.len()) {
             Some(slot) => {
-                let old = self.slots[slot].as_ref().expect("full store");
+                let old = self.slots[slot].take().expect("full store");
                 let evicted = old.id;
-                let old_key = (old.lineage, old.covered_segments, slot);
-                self.bytes -= old.size_bytes;
-                self.by_cover.remove(&old_key);
+                self.by_cover.remove(&(old.lineage, old.covered_segments, slot));
+                self.release(&old);
                 self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, slot));
-                self.bytes += ckpt.size_bytes;
+                self.charge(&ckpt);
                 self.slots[slot] = Some(ckpt);
                 self.stats.stored += 1;
                 self.stats.replaced += 1;
@@ -321,16 +430,21 @@ impl ModelStore {
     }
 
     /// Byte-mode admission: evict as many victims as the budget requires.
+    /// The loop reasons in *charged* bytes — a victim whose payload stays
+    /// pinned by a resident delta child frees nothing, so the loop keeps
+    /// evicting (occupancy strictly shrinks, and an empty store always
+    /// fits anything that passed the standalone precheck).
     fn store_bytes(&mut self, ckpt: Checkpoint, budget: u64) -> StoreEvent {
-        if ckpt.size_bytes > budget {
-            // Larger than all of C_m: no eviction set can ever fit it.
+        if Self::standalone_charge(&ckpt) > budget {
+            // Larger than all of C_m (chain included): no eviction set can
+            // ever fit it.
             self.stats.rejected += 1;
             return StoreEvent::Rejected;
         }
         let mut victims: Vec<(usize, CheckpointId)> = Vec::new();
-        while self.bytes + ckpt.size_bytes > budget {
+        while self.bytes + self.marginal_charge(&ckpt) > budget {
             let resident = self.occupied();
-            debug_assert!(resident > 0, "positive stored bytes imply occupancy");
+            debug_assert!(resident > 0, "empty store over budget despite precheck");
             let Some(rank) = self.policy.victim(resident) else {
                 // No-replacement policy: it rejects on the first call, so
                 // nothing has been evicted yet.
@@ -341,7 +455,7 @@ impl ModelStore {
             let slot = self.nth_occupied(rank);
             let old = self.slots[slot].take().expect("occupied rank maps to a full slot");
             self.by_cover.remove(&(old.lineage, old.covered_segments, slot));
-            self.bytes -= old.size_bytes;
+            self.release(&old);
             self.free.insert(slot);
             victims.push((slot, old.id));
         }
@@ -353,7 +467,7 @@ impl ModelStore {
             }
         };
         self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, slot));
-        self.bytes += ckpt.size_bytes;
+        self.charge(&ckpt);
         self.slots[slot] = Some(ckpt);
         self.stats.stored += 1;
         self.stats.replaced += victims.len() as u64;
@@ -430,26 +544,158 @@ impl ModelStore {
 
     /// Delete every checkpoint matching `pred` (Algorithm 3 line 11);
     /// returns how many were removed.
-    pub fn invalidate(&mut self, mut pred: impl FnMut(&Checkpoint) -> bool) -> usize {
-        let mut n = 0;
-        let mut freed = 0u64;
-        for (slot, s) in self.slots.iter_mut().enumerate() {
-            if s.as_ref().map(&mut pred).unwrap_or(false) {
-                let old = s.take().expect("checked above");
+    pub fn invalidate(&mut self, pred: impl FnMut(&Checkpoint) -> bool) -> usize {
+        self.invalidate_collect(pred).len()
+    }
+
+    /// [`ModelStore::invalidate`] returning the removed checkpoint ids —
+    /// the audit/durability layer records exactly which versions died.
+    pub fn invalidate_collect(
+        &mut self,
+        mut pred: impl FnMut(&Checkpoint) -> bool,
+    ) -> Vec<CheckpointId> {
+        let mut removed = Vec::new();
+        for slot in 0..self.slots.len() {
+            let matches = self.slots[slot].as_ref().map(&mut pred).unwrap_or(false);
+            if matches {
+                let old = self.slots[slot].take().expect("checked above");
                 self.by_cover.remove(&(old.lineage, old.covered_segments, slot));
-                freed += old.size_bytes;
+                self.release(&old);
                 self.free.insert(slot);
-                n += 1;
+                removed.push(old.id);
             }
         }
-        self.bytes -= freed;
-        self.stats.invalidated += n as u64;
-        n
+        self.stats.invalidated += removed.len() as u64;
+        removed
     }
 
     /// Iterate stored checkpoints.
     pub fn iter(&self) -> impl Iterator<Item = &Checkpoint> {
         self.slots.iter().flatten()
+    }
+
+    /// `(slot, checkpoint)` pairs in ascending slot order (durability
+    /// snapshots capture exact placement so recovery rebuilds the same
+    /// victim-rank geometry).
+    pub fn slot_entries(&self) -> impl Iterator<Item = (usize, &Checkpoint)> {
+        self.slots
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| s.as_ref().map(|c| (i, c)))
+    }
+
+    /// The next id [`ModelStore::next_id`] would hand out, without
+    /// allocating it (durability snapshots).
+    pub fn next_id_peek(&self) -> u64 {
+        self.next_id
+    }
+
+    /// Replacement-policy counters for durability snapshots.
+    pub fn policy_state(&self) -> Vec<u64> {
+        self.policy.persist_state()
+    }
+
+    /// Restore counters saved by [`ModelStore::policy_state`].
+    pub fn restore_policy_state(&mut self, state: &[u64]) {
+        self.policy.restore_state(state);
+    }
+
+    /// Replay one recorded admission (crash recovery): re-applies the
+    /// exact placement and victim set the live run produced — slots, the
+    /// coverage index, byte charges, stats, and the id sequence all end up
+    /// identical without consulting the policy (whose counters are
+    /// restored separately from the same journal entry).
+    pub(crate) fn apply_store_record(&mut self, ckpt: Checkpoint, event: &StoreEvent) {
+        self.next_id = self.next_id.max(ckpt.id.0 + 1);
+        match event {
+            StoreEvent::Rejected => self.stats.rejected += 1,
+            StoreEvent::Stored { slot } => {
+                self.place_at(*slot, ckpt);
+                self.stats.stored += 1;
+            }
+            StoreEvent::Replaced { slot, evicted } => {
+                self.remove_by_id(*evicted);
+                self.place_at(*slot, ckpt);
+                self.stats.stored += 1;
+                self.stats.replaced += 1;
+            }
+            StoreEvent::Evicted { slot, victims } => {
+                for v in victims {
+                    self.remove_by_id(*v);
+                }
+                self.place_at(*slot, ckpt);
+                self.stats.stored += 1;
+                self.stats.replaced += victims.len() as u64;
+            }
+        }
+    }
+
+    /// Account a rejection whose id was already allocated (replaying the
+    /// engine's probe-and-skip path).
+    pub(crate) fn apply_skipped_rejection(&mut self, id: u64) {
+        self.next_id = self.next_id.max(id + 1);
+        self.stats.rejected += 1;
+    }
+
+    /// Rebuild the store from a durability snapshot: exact slot layout,
+    /// id sequence, and cumulative stats. Byte charges and the coverage
+    /// index are re-derived from the slots.
+    pub(crate) fn restore_slots(
+        &mut self,
+        slots: Vec<Option<Checkpoint>>,
+        next_id: u64,
+        stats: StoreStats,
+    ) {
+        self.by_cover.clear();
+        self.free.clear();
+        self.charged.clear();
+        self.bytes = 0;
+        for (i, s) in slots.iter().enumerate() {
+            match s {
+                Some(c) => {
+                    self.by_cover.insert((c.lineage, c.covered_segments, i));
+                }
+                None => {
+                    self.free.insert(i);
+                }
+            }
+        }
+        let charges: Vec<(Option<Arc<EncodedParams>>, u64)> = slots
+            .iter()
+            .flatten()
+            .map(|c| (c.params.clone(), c.size_bytes))
+            .collect();
+        self.slots = slots;
+        for (params, size) in &charges {
+            self.charge_payload(params.as_ref(), *size);
+        }
+        self.next_id = next_id;
+        self.stats = stats;
+    }
+
+    fn remove_by_id(&mut self, id: CheckpointId) {
+        let slot = self
+            .slots
+            .iter()
+            .position(|s| s.as_ref().is_some_and(|c| c.id == id))
+            .expect("replayed victim is resident");
+        let old = self.slots[slot].take().expect("found above");
+        self.by_cover.remove(&(old.lineage, old.covered_segments, slot));
+        self.release(&old);
+        self.free.insert(slot);
+    }
+
+    fn place_at(&mut self, slot: usize, ckpt: Checkpoint) {
+        while self.slots.len() <= slot {
+            let i = self.slots.len();
+            self.slots.push(None);
+            self.free.insert(i);
+        }
+        debug_assert!(self.slots[slot].is_none(), "replayed slot occupied");
+        self.free.remove(&slot);
+        self.by_cover.insert((ckpt.lineage, ckpt.covered_segments, slot));
+        self.charge(&ckpt);
+        self.slots[slot] = Some(ckpt);
     }
 }
 
@@ -457,6 +703,8 @@ impl ModelStore {
 mod tests {
     use super::*;
     use crate::replacement::{FiboR, NoReplace};
+    use crate::runtime::codec::{CodecMode, TensorCodec};
+    use crate::runtime::HostTensor;
     use crate::testkit::forall_prefixes;
 
     fn ckpt(id: u64, lineage: usize, round: u32, segs: u32) -> Checkpoint {
@@ -661,6 +909,162 @@ mod tests {
         for l in 0..3 {
             assert_eq!(slot.latest(l).map(|c| c.id), byte.latest(l).map(|c| c.id));
         }
+    }
+
+    /// Build a delta chain: `payloads[0]` self-contained, each later
+    /// payload a delta against its predecessor. Returns the encoded
+    /// payloads (chain links pinned via `Arc`).
+    fn delta_chain(len: usize) -> Vec<Arc<EncodedParams>> {
+        let codec = TensorCodec::new(CodecMode::Delta);
+        let mut tensors = vec![HostTensor::from_fn(&[128], |i| (i as f32).sin() + 1.0)];
+        let mut out: Vec<Arc<EncodedParams>> = vec![Arc::new(codec.encode(&tensors, None))];
+        for step in 1..len {
+            tensors[0].data[(step * 11) % 128] += 1.0;
+            let enc = codec.encode(&tensors, Some(out.last().unwrap()));
+            out.push(Arc::new(enc));
+        }
+        out
+    }
+
+    fn payload_ckpt(id: u64, segs: u32, p: &Arc<EncodedParams>) -> Checkpoint {
+        Checkpoint {
+            id: CheckpointId(id),
+            lineage: 0,
+            round: segs,
+            covered_segments: segs,
+            size_bytes: p.size_bytes(),
+            params: Some(p.clone()),
+        }
+    }
+
+    /// The PR 4 retention caveat, closed: evicting a delta's parent keeps
+    /// the parent payload charged while the child pins it, so the charged
+    /// total equals real memory and the budget is honored by evicting
+    /// further instead of silently overshooting.
+    #[test]
+    fn delta_pinned_parents_count_against_budget() {
+        let chain = delta_chain(2);
+        let (p0, p1) = (&chain[0], &chain[1]);
+        assert!(p1.is_delta(), "chain link must be a delta");
+        let (s0, s1) = (p0.size_bytes(), p1.size_bytes());
+        assert!(s1 < s0, "delta must be cheaper than its parent here");
+
+        // Budget fits the parent + child chain plus a little slack, but
+        // not a second parent-sized payload on top.
+        let budget = s0 + s1 + 8;
+        let mut st = ModelStore::with_byte_budget(budget, Box::new(FiboR::new()));
+        assert!(matches!(st.store(payload_ckpt(0, 1, p0)), StoreEvent::Stored { .. }));
+        assert!(matches!(st.store(payload_ckpt(1, 2, p1)), StoreEvent::Stored { .. }));
+        // Shared chain: the child only added its own delta bytes.
+        assert_eq!(st.stored_bytes(), s0 + s1);
+        assert_eq!(st.stored_bytes(), st.stored_bytes_scan());
+
+        // An independent payload of the parent's size cannot fit by
+        // evicting only the parent's checkpoint: the child still pins the
+        // parent payload, so the store must evict the child too. Under the
+        // pre-fix accounting a single eviction would have "freed" s0 while
+        // the payload stayed resident — a real-memory overshoot.
+        let solo = delta_chain(1).remove(0);
+        match st.store(payload_ckpt(2, 3, &solo)) {
+            StoreEvent::Evicted { victims, .. } => {
+                assert_eq!(victims.len(), 2, "pinned parent forces a second eviction");
+            }
+            other => panic!("expected multi-victim eviction, got {other:?}"),
+        }
+        assert_eq!(st.stored_bytes(), solo.size_bytes());
+        assert_eq!(st.stored_bytes(), st.stored_bytes_scan());
+        assert!(st.stored_bytes() <= budget);
+    }
+
+    /// A long delta chain stored link by link can never overshoot the
+    /// byte budget: at every step the charged total (pinned parents
+    /// included) matches the dedup scan oracle and stays within C_m.
+    #[test]
+    fn long_delta_chain_cannot_overshoot_budget() {
+        let chain = delta_chain(8);
+        let budget = chain[0].size_bytes() * 2;
+        let mut st = ModelStore::with_byte_budget(budget, Box::new(FiboR::new()));
+        for (i, p) in chain.iter().enumerate() {
+            st.store(payload_ckpt(i as u64, i as u32 + 1, p));
+            assert!(
+                st.stored_bytes() <= budget,
+                "overshoot at link {i}: {} > {budget}",
+                st.stored_bytes()
+            );
+            assert_eq!(st.stored_bytes(), st.stored_bytes_scan(), "link {i}");
+            // The true retained memory (chains deduped) is the charge.
+            let retained: u64 = st.stored_bytes_scan();
+            assert_eq!(st.stored_bytes(), retained);
+        }
+        // Invalidation of a pinned parent keeps it charged until the
+        // pinning child dies.
+        let chain = delta_chain(2);
+        let budget = chain[0].size_bytes() + chain[1].size_bytes();
+        let mut st = ModelStore::with_byte_budget(budget, Box::new(NoReplace));
+        st.store(payload_ckpt(0, 1, &chain[0]));
+        st.store(payload_ckpt(1, 2, &chain[1]));
+        let full = st.stored_bytes();
+        st.invalidate(|c| c.covered_segments == 1); // parent checkpoint dies
+        assert_eq!(st.stored_bytes(), full, "pinned parent stays charged");
+        assert_eq!(st.stored_bytes(), st.stored_bytes_scan());
+        st.invalidate(|c| c.covered_segments == 2); // child dies → all freed
+        assert_eq!(st.stored_bytes(), 0);
+        assert_eq!(st.stored_bytes_scan(), 0);
+    }
+
+    /// Replaying recorded admissions (`apply_store_record`) reproduces the
+    /// live store byte for byte: slots, stats, bytes, index, id sequence.
+    #[test]
+    fn apply_store_record_mirrors_live_store() {
+        let mk = || ModelStore::with_byte_budget(350, Box::new(FiboR::new()));
+        let mut live = mk();
+        let mut replayed = mk();
+        for i in 0..20u64 {
+            let c = sized_ckpt(0, (i % 3) as usize, i as u32 + 1, i as u32 + 1, 60 + (i % 4) * 20);
+            let id = live.next_id();
+            let ckpt = Checkpoint { id, ..c.clone() };
+            let event = live.store(Checkpoint { id, ..c.clone() });
+            replayed.apply_store_record(ckpt, &event);
+            if i % 7 == 3 {
+                let ids = live.invalidate_collect(|k| k.covered_segments <= i as u32 / 2);
+                let removed =
+                    replayed.invalidate_collect(|k| ids.contains(&k.id));
+                assert_eq!(ids, removed, "invalidation set diverged at {i}");
+            }
+        }
+        assert_eq!(live.stats(), replayed.stats());
+        assert_eq!(live.occupied(), replayed.occupied());
+        assert_eq!(live.stored_bytes(), replayed.stored_bytes());
+        assert_eq!(live.next_id_peek(), replayed.next_id_peek());
+        let ids = |s: &ModelStore| -> Vec<(usize, u64)> {
+            s.slot_entries().map(|(slot, c)| (slot, c.id.0)).collect()
+        };
+        assert_eq!(ids(&live), ids(&replayed), "slot layout diverged");
+        for l in 0..3 {
+            for cover in 0..22 {
+                assert_eq!(
+                    live.best_checkpoint(l, cover).map(|c| c.id),
+                    replayed.best_checkpoint(l, cover).map(|c| c.id)
+                );
+            }
+        }
+        assert_index_matches_scan(&replayed).unwrap();
+    }
+
+    /// An incoming checkpoint whose *chain* exceeds C_m is rejected
+    /// outright, evicting nothing (the standalone precheck).
+    #[test]
+    fn oversized_chain_rejected_without_eviction() {
+        let chain = delta_chain(2);
+        let child_chain_bytes = chain[0].size_bytes() + chain[1].size_bytes();
+        let mut st =
+            ModelStore::with_byte_budget(child_chain_bytes - 1, Box::new(FiboR::new()));
+        // The child alone is small, but admitting it would pin its parent
+        // beyond the budget even in an empty store.
+        assert!(chain[1].size_bytes() < child_chain_bytes - 1);
+        assert_eq!(st.store(payload_ckpt(0, 2, &chain[1])), StoreEvent::Rejected);
+        assert_eq!(st.occupied(), 0);
+        assert_eq!(st.stats().rejected, 1);
     }
 
     #[test]

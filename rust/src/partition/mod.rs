@@ -39,6 +39,19 @@ pub trait Partitioner: Send {
     /// coverage. `s_t` may shrink between rounds (shard controller); it
     /// never exceeds the initial shard count.
     fn assign(&mut self, blocks: &[DataBlock], s_t: usize) -> Vec<Placement>;
+
+    /// Internal state as raw words, for durability snapshots (UCDP's
+    /// user → shard map, the uniform partitioner's RNG stream). Stateless
+    /// partitioners return an empty vec. Restoring the saved words into a
+    /// freshly built partitioner must make future `assign` calls place
+    /// exactly as the pre-crash instance would have.
+    fn persist_state(&self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Restore state saved by [`Partitioner::persist_state`]. Must accept
+    /// the empty vec (fresh state) and its own output.
+    fn restore_state(&mut self, _state: &[u64]) {}
 }
 
 /// Check the full-coverage contract (used by tests and debug assertions).

@@ -153,6 +153,46 @@ impl Partitioner for Ucdp {
         }
         out
     }
+
+    /// Layout: `[S, shard_size×S, shard_users×S, U, (user, shard)×U, rng×4]`.
+    fn persist_state(&self) -> Vec<u64> {
+        let s = self.shard_size.len();
+        let mut out = Vec::with_capacity(2 + 2 * s + 2 * self.assignment.len() + 4);
+        out.push(s as u64);
+        out.extend(self.shard_size.iter().copied());
+        out.extend(self.shard_users.iter().copied());
+        out.push(self.assignment.len() as u64);
+        for (u, shard) in &self.assignment {
+            out.push(u.0 as u64);
+            out.push(*shard as u64);
+        }
+        out.extend(self.rng.state());
+        out
+    }
+
+    fn restore_state(&mut self, state: &[u64]) {
+        let mut it = state.iter().copied();
+        let Some(shards) = it.next() else { return };
+        if shards as usize != self.shard_size.len() {
+            return; // built with a different shard count — keep fresh state
+        }
+        for v in self.shard_size.iter_mut() {
+            *v = it.next().unwrap_or(0);
+        }
+        for v in self.shard_users.iter_mut() {
+            *v = it.next().unwrap_or(0);
+        }
+        let users = it.next().unwrap_or(0);
+        self.assignment.clear();
+        for _ in 0..users {
+            let (Some(u), Some(s)) = (it.next(), it.next()) else { return };
+            self.assignment.insert(UserId(u as u32), s as usize);
+        }
+        let rng: Vec<u64> = it.collect();
+        if let [a, b, c, d] = rng[..] {
+            self.rng = Rng::from_state([a, b, c, d]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -173,6 +213,31 @@ mod tests {
             arrival_prob: 0.7,
             seed,
         })
+    }
+
+    /// Persist mid-run, restore into a fresh partitioner, and both must
+    /// place the remaining rounds identically (crash-recovery property).
+    #[test]
+    fn persist_state_continues_assignments() {
+        let p = pop(5, 40);
+        let mut live = Ucdp::new(4, 11);
+        for r in 1..=3 {
+            live.assign(p.blocks_at(r), 4);
+        }
+        let saved = live.persist_state();
+        let mut recovered = Ucdp::new(4, 11);
+        recovered.restore_state(&saved);
+        for r in 4..=6 {
+            assert_eq!(
+                live.assign(p.blocks_at(r), 4),
+                recovered.assign(p.blocks_at(r), 4),
+                "placements diverged at round {r}"
+            );
+        }
+        // Restoring the empty vec keeps fresh state usable.
+        let mut fresh = Ucdp::new(4, 11);
+        fresh.restore_state(&[]);
+        coverage_ok(p.blocks_at(1), &fresh.assign(p.blocks_at(1), 4), 4).unwrap();
     }
 
     #[test]

@@ -48,6 +48,16 @@ impl Partitioner for Uniform {
         }
         out
     }
+
+    fn persist_state(&self) -> Vec<u64> {
+        self.rng.state().to_vec()
+    }
+
+    fn restore_state(&mut self, state: &[u64]) {
+        if let [a, b, c, d] = *state {
+            self.rng = Rng::from_state([a, b, c, d]);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -100,6 +110,23 @@ mod tests {
                     .collect();
                 assert_eq!(shards.len(), 4, "block {:?} ({} samples)", b.id, b.samples);
             }
+        }
+    }
+
+    #[test]
+    fn persist_state_continues_scatter_stream() {
+        let p = pop(4);
+        let mut live = Uniform::new(4);
+        live.assign(p.blocks_at(1), 4);
+        let saved = live.persist_state();
+        let mut recovered = Uniform::new(4);
+        recovered.restore_state(&saved);
+        for r in 2..=5 {
+            assert_eq!(
+                live.assign(p.blocks_at(r), 4),
+                recovered.assign(p.blocks_at(r), 4),
+                "scatter diverged at round {r}"
+            );
         }
     }
 

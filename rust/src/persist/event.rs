@@ -1,0 +1,1267 @@
+//! Durable event records: every state transition of the unlearning
+//! service, in a self-contained binary form.
+//!
+//! One logical transition = one [`Event`] = one log frame, so recovery is
+//! always either pre-event or post-event state — never a torn mix. Events
+//! carry the transition's *inputs* where replay is deterministic (queue
+//! pops re-remove their own samples through the same proportional-split
+//! code) and *effects* where it is not re-derivable without the trainer
+//! (store admissions with their exact victim sets, scalar metric
+//! post-values, battery post-charge, receipt pushes, policy/partitioner
+//! counters). Checkpoint payload bytes ride along only in
+//! `durability = log+spill` mode, keyed by the payload's
+//! [`EncodedParams::uid`] so `Arc` sharing across a delta chain is
+//! re-established on replay.
+//!
+//! Scalar accumulators (energy joules, battery charge) are recorded as
+//! absolute post-transition values, not deltas — floating-point deltas do
+//! not re-add bit-exactly, absolute values do.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+use crate::memory::{Checkpoint, CheckpointId, StoreEvent};
+use crate::runtime::codec::{EncodedParams, EncodedTensor, TensorBlock};
+
+/// Decode result.
+pub type DecodeResult<T> = Result<T, String>;
+
+/// Little-endian byte writer for event payloads.
+#[derive(Default)]
+pub struct Enc {
+    pub buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.buf.push(v as u8);
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_bits().to_le_bytes());
+    }
+
+    pub fn words(&mut self, w: &[u64]) {
+        self.u64(w.len() as u64);
+        for v in w {
+            self.u64(*v);
+        }
+    }
+}
+
+/// Little-endian byte reader mirroring [`Enc`].
+pub struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn take(&mut self, n: usize) -> DecodeResult<&'a [u8]> {
+        let end = self.pos.checked_add(n).ok_or("length overflow")?;
+        let s = self.buf.get(self.pos..end).ok_or("truncated event payload")?;
+        self.pos = end;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> DecodeResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn bool(&mut self) -> DecodeResult<bool> {
+        match self.u8()? {
+            0 => Ok(false),
+            1 => Ok(true),
+            other => Err(format!("invalid bool byte {other}")),
+        }
+    }
+
+    pub fn u32(&mut self) -> DecodeResult<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    pub fn u64(&mut self) -> DecodeResult<u64> {
+        let b = self.take(8)?;
+        Ok(u64::from_le_bytes([b[0], b[1], b[2], b[3], b[4], b[5], b[6], b[7]]))
+    }
+
+    pub fn f64(&mut self) -> DecodeResult<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn f32(&mut self) -> DecodeResult<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_bits(u32::from_le_bytes([b[0], b[1], b[2], b[3]])))
+    }
+
+    /// Bounded element count: corrupt lengths must not allocate the moon.
+    pub fn count(&mut self) -> DecodeResult<usize> {
+        let n = self.u64()?;
+        if n > (1 << 32) {
+            return Err(format!("implausible element count {n}"));
+        }
+        Ok(n as usize)
+    }
+
+    pub fn words(&mut self) -> DecodeResult<Vec<u64>> {
+        let n = self.count()?;
+        let mut out = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            out.push(self.u64()?);
+        }
+        Ok(out)
+    }
+
+    pub fn finished(&self) -> DecodeResult<()> {
+        if self.pos == self.buf.len() {
+            Ok(())
+        } else {
+            Err(format!("{} trailing bytes", self.buf.len() - self.pos))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Leaf records
+// ---------------------------------------------------------------------------
+
+/// One queued unlearning request.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ReqRecord {
+    pub user: u32,
+    pub round: u32,
+    pub arrival_tick: u64,
+    /// (block id, samples to remove).
+    pub parts: Vec<(u64, u64)>,
+}
+
+impl ReqRecord {
+    fn encode(&self, e: &mut Enc) {
+        e.u32(self.user);
+        e.u32(self.round);
+        e.u64(self.arrival_tick);
+        e.u64(self.parts.len() as u64);
+        for (b, n) in &self.parts {
+            e.u64(*b);
+            e.u64(*n);
+        }
+    }
+
+    fn decode(d: &mut Dec) -> DecodeResult<ReqRecord> {
+        let user = d.u32()?;
+        let round = d.u32()?;
+        let arrival_tick = d.u64()?;
+        let n = d.count()?;
+        let mut parts = Vec::with_capacity(n.min(1 << 16));
+        for _ in 0..n {
+            parts.push((d.u64()?, d.u64()?));
+        }
+        Ok(ReqRecord { user, round, arrival_tick, parts })
+    }
+}
+
+/// Battery state after a transition (absolute, bit-exact).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatteryPost {
+    pub charge_j: f64,
+    pub brownouts: u64,
+}
+
+fn encode_battery(e: &mut Enc, b: &Option<BatteryPost>) {
+    match b {
+        None => e.bool(false),
+        Some(p) => {
+            e.bool(true);
+            e.f64(p.charge_j);
+            e.u64(p.brownouts);
+        }
+    }
+}
+
+fn decode_battery(d: &mut Dec) -> DecodeResult<Option<BatteryPost>> {
+    if d.bool()? {
+        Ok(Some(BatteryPost { charge_j: d.f64()?, brownouts: d.u64()? }))
+    } else {
+        Ok(None)
+    }
+}
+
+/// One block placement of a training round (post-partitioner).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlacementRecord {
+    pub block: u64,
+    pub user: u32,
+    pub shard: u64,
+    pub samples: u64,
+}
+
+/// Store-event shape of a recorded admission.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StoreEvRec {
+    Stored { slot: u64 },
+    Replaced { slot: u64, evicted: u64 },
+    Evicted { slot: u64, victims: Vec<u64> },
+    Rejected,
+}
+
+impl StoreEvRec {
+    pub fn from_event(e: &StoreEvent) -> StoreEvRec {
+        match e {
+            StoreEvent::Stored { slot } => StoreEvRec::Stored { slot: *slot as u64 },
+            StoreEvent::Replaced { slot, evicted } => {
+                StoreEvRec::Replaced { slot: *slot as u64, evicted: evicted.0 }
+            }
+            StoreEvent::Evicted { slot, victims } => StoreEvRec::Evicted {
+                slot: *slot as u64,
+                victims: victims.iter().map(|v| v.0).collect(),
+            },
+            StoreEvent::Rejected => StoreEvRec::Rejected,
+        }
+    }
+
+    pub fn to_event(&self) -> StoreEvent {
+        match self {
+            StoreEvRec::Stored { slot } => StoreEvent::Stored { slot: *slot as usize },
+            StoreEvRec::Replaced { slot, evicted } => StoreEvent::Replaced {
+                slot: *slot as usize,
+                evicted: CheckpointId(*evicted),
+            },
+            StoreEvRec::Evicted { slot, victims } => StoreEvent::Evicted {
+                slot: *slot as usize,
+                victims: victims.iter().map(|v| CheckpointId(*v)).collect(),
+            },
+            StoreEvRec::Rejected => StoreEvent::Rejected,
+        }
+    }
+
+    fn encode(&self, e: &mut Enc) {
+        match self {
+            StoreEvRec::Stored { slot } => {
+                e.u8(0);
+                e.u64(*slot);
+            }
+            StoreEvRec::Replaced { slot, evicted } => {
+                e.u8(1);
+                e.u64(*slot);
+                e.u64(*evicted);
+            }
+            StoreEvRec::Evicted { slot, victims } => {
+                e.u8(2);
+                e.u64(*slot);
+                e.words(victims);
+            }
+            StoreEvRec::Rejected => e.u8(3),
+        }
+    }
+
+    fn decode(d: &mut Dec) -> DecodeResult<StoreEvRec> {
+        Ok(match d.u8()? {
+            0 => StoreEvRec::Stored { slot: d.u64()? },
+            1 => StoreEvRec::Replaced { slot: d.u64()?, evicted: d.u64()? },
+            2 => StoreEvRec::Evicted { slot: d.u64()?, victims: d.words()? },
+            3 => StoreEvRec::Rejected,
+            t => return Err(format!("unknown store event tag {t}")),
+        })
+    }
+}
+
+/// One store mutation as the engine performed it.
+#[derive(Clone, Debug, PartialEq)]
+pub enum StoreOpRec {
+    /// A `store()` call: the checkpoint (payload attached in spill mode)
+    /// and the event the live store returned.
+    Store {
+        id: u64,
+        lineage: u64,
+        round: u32,
+        covered: u32,
+        size_bytes: u64,
+        payload: Option<Arc<EncodedParams>>,
+        event: StoreEvRec,
+    },
+    /// The engine's probe-and-skip rejection (id allocated, nothing
+    /// materialized).
+    SkipReject { id: u64 },
+    /// Checkpoint versions deleted by Alg. 3 line 11, by id.
+    Invalidate { ids: Vec<u64> },
+}
+
+impl StoreOpRec {
+    /// The checkpoint to replay for a `Store` op (`None` for the others).
+    pub fn to_checkpoint(&self) -> Option<Checkpoint> {
+        match self {
+            StoreOpRec::Store { id, lineage, round, covered, size_bytes, payload, .. } => {
+                Some(Checkpoint {
+                    id: CheckpointId(*id),
+                    lineage: *lineage as usize,
+                    round: *round,
+                    covered_segments: *covered,
+                    size_bytes: *size_bytes,
+                    params: payload.clone(),
+                })
+            }
+            _ => None,
+        }
+    }
+
+    fn encode(&self, e: &mut Enc, spill: bool) {
+        match self {
+            StoreOpRec::Store { id, lineage, round, covered, size_bytes, payload, event } => {
+                e.u8(0);
+                e.u64(*id);
+                e.u64(*lineage);
+                e.u32(*round);
+                e.u32(*covered);
+                e.u64(*size_bytes);
+                match payload {
+                    Some(p) if spill => {
+                        e.bool(true);
+                        encode_payload(e, p);
+                    }
+                    _ => e.bool(false),
+                }
+                event.encode(e);
+            }
+            StoreOpRec::SkipReject { id } => {
+                e.u8(1);
+                e.u64(*id);
+            }
+            StoreOpRec::Invalidate { ids } => {
+                e.u8(2);
+                e.words(ids);
+            }
+        }
+    }
+
+    fn decode(d: &mut Dec, dedup: &mut PayloadDedup) -> DecodeResult<StoreOpRec> {
+        Ok(match d.u8()? {
+            0 => {
+                let id = d.u64()?;
+                let lineage = d.u64()?;
+                let round = d.u32()?;
+                let covered = d.u32()?;
+                let size_bytes = d.u64()?;
+                let payload =
+                    if d.bool()? { Some(decode_payload(d, dedup)?) } else { None };
+                let event = StoreEvRec::decode(d)?;
+                StoreOpRec::Store { id, lineage, round, covered, size_bytes, payload, event }
+            }
+            1 => StoreOpRec::SkipReject { id: d.u64()? },
+            2 => StoreOpRec::Invalidate { ids: d.words()? },
+            t => return Err(format!("unknown store op tag {t}")),
+        })
+    }
+}
+
+fn encode_ops(e: &mut Enc, ops: &[StoreOpRec], spill: bool) {
+    e.u64(ops.len() as u64);
+    for op in ops {
+        op.encode(e, spill);
+    }
+}
+
+fn decode_ops(d: &mut Dec, dedup: &mut PayloadDedup) -> DecodeResult<Vec<StoreOpRec>> {
+    let n = d.count()?;
+    let mut out = Vec::with_capacity(n.min(1 << 12));
+    for _ in 0..n {
+        out.push(StoreOpRec::decode(d, dedup)?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Payload spill (EncodedParams ↔ bytes)
+// ---------------------------------------------------------------------------
+
+/// uid → reconstructed payload: chains spilled by several events share
+/// their parents again after replay (the identity-keyed byte accounting in
+/// the store depends on it).
+pub type PayloadDedup = HashMap<u64, Arc<EncodedParams>>;
+
+fn encode_tensor(e: &mut Enc, t: &EncodedTensor) {
+    e.u64(t.dims.len() as u64);
+    for d in &t.dims {
+        e.u64(*d as u64);
+    }
+    let (tag, mask, values): (u8, &[u64], &[f32]) = match &t.block {
+        TensorBlock::Dense { data } => (0, &[], data),
+        TensorBlock::Sparse { mask, values } => (1, mask, values),
+        TensorBlock::Delta { mask, values } => (2, mask, values),
+    };
+    e.u8(tag);
+    if tag != 0 {
+        e.words(mask);
+    }
+    e.u64(values.len() as u64);
+    for v in values {
+        e.f32(*v);
+    }
+}
+
+fn decode_tensor(d: &mut Dec) -> DecodeResult<EncodedTensor> {
+    let nd = d.count()?;
+    let mut dims = Vec::with_capacity(nd.min(16));
+    for _ in 0..nd {
+        dims.push(d.u64()? as usize);
+    }
+    let tag = d.u8()?;
+    let mask = if tag != 0 { d.words()? } else { Vec::new() };
+    let nv = d.count()?;
+    let mut values = Vec::with_capacity(nv.min(1 << 20));
+    for _ in 0..nv {
+        values.push(d.f32()?);
+    }
+    let block = match tag {
+        0 => TensorBlock::Dense { data: values },
+        1 => TensorBlock::Sparse { mask, values },
+        2 => TensorBlock::Delta { mask, values },
+        t => return Err(format!("unknown tensor block tag {t}")),
+    };
+    Ok(EncodedTensor { dims, block })
+}
+
+/// Serialize a payload with its full pinned parent chain, child first.
+pub(crate) fn encode_payload(e: &mut Enc, p: &Arc<EncodedParams>) {
+    let chain = crate::runtime::codec::payload_chain(p);
+    e.u64(chain.len() as u64);
+    for level in &chain {
+        e.u64(level.uid());
+        e.u64(level.tensors.len() as u64);
+        for t in &level.tensors {
+            encode_tensor(e, t);
+        }
+    }
+}
+
+/// Rebuild a payload chain, reusing payloads the dedup map already holds.
+pub(crate) fn decode_payload(d: &mut Dec, dedup: &mut PayloadDedup) -> DecodeResult<Arc<EncodedParams>> {
+    let levels = d.count()?;
+    if levels == 0 || levels > 64 {
+        return Err(format!("implausible payload chain length {levels}"));
+    }
+    let mut decoded: Vec<(u64, Vec<EncodedTensor>)> = Vec::with_capacity(levels);
+    for _ in 0..levels {
+        let uid = d.u64()?;
+        let nt = d.count()?;
+        let mut tensors = Vec::with_capacity(nt.min(256));
+        for _ in 0..nt {
+            tensors.push(decode_tensor(d)?);
+        }
+        decoded.push((uid, tensors));
+    }
+    // Link root-first so each child points at its (possibly shared) parent.
+    let mut cur: Option<Arc<EncodedParams>> = None;
+    for (uid, tensors) in decoded.into_iter().rev() {
+        if let Some(hit) = dedup.get(&uid) {
+            cur = Some(hit.clone());
+            continue;
+        }
+        let p = Arc::new(EncodedParams::from_parts(tensors, cur.clone(), uid));
+        dedup.insert(uid, p.clone());
+        cur = Some(p);
+    }
+    cur.ok_or_else(|| "empty payload chain".to_string())
+}
+
+// ---------------------------------------------------------------------------
+// Metric / receipt records
+// ---------------------------------------------------------------------------
+
+/// Absolute post-transition values of every scalar metric a transition can
+/// touch, plus the by-round slot count and last-slot values.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MetricsPost {
+    pub warm_retrains: u64,
+    pub scratch_retrains: u64,
+    pub lineages_retrained: u64,
+    pub prunes: u64,
+    pub energy_joules: f64,
+    pub ckpts_stored: u64,
+    pub ckpts_replaced: u64,
+    pub ckpts_rejected: u64,
+    pub ckpts_invalidated: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub retrains_coalesced: u64,
+    /// Length of `rsn_by_round` / `requests_by_round` after the
+    /// transition (a round opens a slot; a pre-round request opens slot 0).
+    pub round_slots: u64,
+    /// Last-slot values after the transition (0 when no slot exists).
+    pub rsn_last: u64,
+    pub requests_last: u64,
+}
+
+impl MetricsPost {
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.warm_retrains);
+        e.u64(self.scratch_retrains);
+        e.u64(self.lineages_retrained);
+        e.u64(self.prunes);
+        e.f64(self.energy_joules);
+        e.u64(self.ckpts_stored);
+        e.u64(self.ckpts_replaced);
+        e.u64(self.ckpts_rejected);
+        e.u64(self.ckpts_invalidated);
+        e.u64(self.batches);
+        e.u64(self.batched_requests);
+        e.u64(self.retrains_coalesced);
+        e.u64(self.round_slots);
+        e.u64(self.rsn_last);
+        e.u64(self.requests_last);
+    }
+
+    fn decode(d: &mut Dec) -> DecodeResult<MetricsPost> {
+        Ok(MetricsPost {
+            warm_retrains: d.u64()?,
+            scratch_retrains: d.u64()?,
+            lineages_retrained: d.u64()?,
+            prunes: d.u64()?,
+            energy_joules: d.f64()?,
+            ckpts_stored: d.u64()?,
+            ckpts_replaced: d.u64()?,
+            ckpts_rejected: d.u64()?,
+            ckpts_invalidated: d.u64()?,
+            batches: d.u64()?,
+            batched_requests: d.u64()?,
+            retrains_coalesced: d.u64()?,
+            round_slots: d.u64()?,
+            rsn_last: d.u64()?,
+            requests_last: d.u64()?,
+        })
+    }
+}
+
+/// One latency receipt pushed by the transition.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LatencyRecord {
+    pub user: u32,
+    pub round: u32,
+    pub queued_ticks: u64,
+    pub slo_met: bool,
+}
+
+impl LatencyRecord {
+    fn encode(&self, e: &mut Enc) {
+        e.u32(self.user);
+        e.u32(self.round);
+        e.u64(self.queued_ticks);
+        e.bool(self.slo_met);
+    }
+
+    fn decode(d: &mut Dec) -> DecodeResult<LatencyRecord> {
+        Ok(LatencyRecord {
+            user: d.u32()?,
+            round: d.u32()?,
+            queued_ticks: d.u64()?,
+            slo_met: d.bool()?,
+        })
+    }
+}
+
+/// Mirror of [`ServiceReport`](crate::unlearning::ServiceReport).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SvcReportRec {
+    pub user: u32,
+    pub round: u32,
+    pub rsn: u64,
+    pub lineages_retrained: u64,
+    pub est_seconds: f64,
+    pub est_joules: f64,
+    pub deferred: bool,
+}
+
+impl SvcReportRec {
+    fn encode(&self, e: &mut Enc) {
+        e.u32(self.user);
+        e.u32(self.round);
+        e.u64(self.rsn);
+        e.u64(self.lineages_retrained);
+        e.f64(self.est_seconds);
+        e.f64(self.est_joules);
+        e.bool(self.deferred);
+    }
+
+    fn decode(d: &mut Dec) -> DecodeResult<SvcReportRec> {
+        Ok(SvcReportRec {
+            user: d.u32()?,
+            round: d.u32()?,
+            rsn: d.u64()?,
+            lineages_retrained: d.u64()?,
+            est_seconds: d.f64()?,
+            est_joules: d.f64()?,
+            deferred: d.bool()?,
+        })
+    }
+}
+
+/// Mirror of [`BatchReport`](crate::unlearning::BatchReport).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatchReportRec {
+    pub requests: u64,
+    pub rsn: u64,
+    pub lineages_retrained: u64,
+    pub retrains_coalesced: u64,
+    pub oldest_queued_ticks: u64,
+    pub est_seconds: f64,
+    pub est_joules: f64,
+    pub deferred: bool,
+}
+
+impl BatchReportRec {
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.requests);
+        e.u64(self.rsn);
+        e.u64(self.lineages_retrained);
+        e.u64(self.retrains_coalesced);
+        e.u64(self.oldest_queued_ticks);
+        e.f64(self.est_seconds);
+        e.f64(self.est_joules);
+        e.bool(self.deferred);
+    }
+
+    fn decode(d: &mut Dec) -> DecodeResult<BatchReportRec> {
+        Ok(BatchReportRec {
+            requests: d.u64()?,
+            rsn: d.u64()?,
+            lineages_retrained: d.u64()?,
+            retrains_coalesced: d.u64()?,
+            oldest_queued_ticks: d.u64()?,
+            est_seconds: d.f64()?,
+            est_joules: d.f64()?,
+            deferred: d.bool()?,
+        })
+    }
+}
+
+/// Carryover plan state after a window transition: one entry per parked
+/// lineage — `(lineage, poisoned segments, requests touching)`.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct PlanRec {
+    pub lineages: Vec<(u64, Vec<u64>, u64)>,
+    pub requests: u64,
+}
+
+impl PlanRec {
+    fn encode(&self, e: &mut Enc) {
+        e.u64(self.lineages.len() as u64);
+        for (l, segs, touching) in &self.lineages {
+            e.u64(*l);
+            e.words(segs);
+            e.u64(*touching);
+        }
+        e.u64(self.requests);
+    }
+
+    fn decode(d: &mut Dec) -> DecodeResult<PlanRec> {
+        let n = d.count()?;
+        let mut lineages = Vec::with_capacity(n.min(1 << 12));
+        for _ in 0..n {
+            let l = d.u64()?;
+            let segs = d.words()?;
+            let touching = d.u64()?;
+            lineages.push((l, segs, touching));
+        }
+        Ok(PlanRec { lineages, requests: d.u64()? })
+    }
+}
+
+/// Receipt bookkeeping of a request travelling in a carryover plan.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MetaRec {
+    pub user: u32,
+    pub round: u32,
+    pub arrival_tick: u64,
+}
+
+pub(crate) fn encode_carryover(e: &mut Enc, c: &Option<(PlanRec, Vec<MetaRec>)>) {
+    match c {
+        None => e.bool(false),
+        Some((plan, metas)) => {
+            e.bool(true);
+            plan.encode(e);
+            e.u64(metas.len() as u64);
+            for m in metas {
+                e.u32(m.user);
+                e.u32(m.round);
+                e.u64(m.arrival_tick);
+            }
+        }
+    }
+}
+
+pub(crate) fn decode_carryover(d: &mut Dec) -> DecodeResult<Option<(PlanRec, Vec<MetaRec>)>> {
+    if !d.bool()? {
+        return Ok(None);
+    }
+    let plan = PlanRec::decode(d)?;
+    let n = d.count()?;
+    let mut metas = Vec::with_capacity(n.min(1 << 12));
+    for _ in 0..n {
+        metas.push(MetaRec { user: d.u32()?, round: d.u32()?, arrival_tick: d.u64()? });
+    }
+    Ok(Some((plan, metas)))
+}
+
+// ---------------------------------------------------------------------------
+// Transition records
+// ---------------------------------------------------------------------------
+
+/// One training round ([`UnlearningService::ingest_round`]): clock +1,
+/// recorded placements into the lineages, store admissions, metric posts.
+///
+/// [`UnlearningService::ingest_round`]: crate::unlearning::UnlearningService::ingest_round
+#[derive(Clone, Debug, PartialEq)]
+pub struct RoundRec {
+    pub round: u32,
+    pub placements: Vec<PlacementRecord>,
+    pub store_ops: Vec<StoreOpRec>,
+    /// The `accuracy_by_round` entry this round pushed.
+    pub accuracy: Option<f64>,
+    pub metrics: MetricsPost,
+    pub partitioner_state: Vec<u64>,
+    pub policy_state: Vec<u64>,
+}
+
+/// One FCFS-served (or newly deferred) request.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeRec {
+    /// The queue head was consumed (false for a deferral).
+    pub popped: bool,
+    pub store_ops: Vec<StoreOpRec>,
+    pub battery: Option<BatteryPost>,
+    pub metrics: MetricsPost,
+    pub latency: Option<LatencyRecord>,
+    pub report: SvcReportRec,
+    pub head_deferral_logged: bool,
+    pub policy_state: Vec<u64>,
+}
+
+/// One batched window transition: executed, starved-and-parked, or a
+/// carryover merge.
+#[derive(Clone, Debug, PartialEq)]
+pub struct WindowRec {
+    /// Requests popped from the queue front into this window.
+    pub drained: u64,
+    pub store_ops: Vec<StoreOpRec>,
+    pub battery: Option<BatteryPost>,
+    pub metrics: MetricsPost,
+    pub latency: Vec<LatencyRecord>,
+    pub report: Option<BatchReportRec>,
+    pub carryover: Option<(PlanRec, Vec<MetaRec>)>,
+    pub head_deferral_logged: bool,
+    pub policy_state: Vec<u64>,
+}
+
+/// A durable state transition of the unlearning service.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Event {
+    /// Service clock advanced by `ticks`.
+    Advance { ticks: u64 },
+    /// Battery harvested; absolute post-state.
+    Harvest { battery: Option<BatteryPost> },
+    /// Request accepted into the queue (log-before-ack).
+    Submit(ReqRecord),
+    Round(Box<RoundRec>),
+    Serve(Box<ServeRec>),
+    Window(Box<WindowRec>),
+}
+
+impl Event {
+    /// Encode with the log sequence number prepended. `spill` controls
+    /// whether checkpoint payload bytes ride along.
+    pub fn encode(&self, seq: u64, spill: bool) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(seq);
+        match self {
+            Event::Advance { ticks } => {
+                e.u8(0);
+                e.u64(*ticks);
+            }
+            Event::Harvest { battery } => {
+                e.u8(1);
+                encode_battery(&mut e, battery);
+            }
+            Event::Submit(r) => {
+                e.u8(2);
+                r.encode(&mut e);
+            }
+            Event::Round(r) => {
+                e.u8(3);
+                e.u32(r.round);
+                e.u64(r.placements.len() as u64);
+                for p in &r.placements {
+                    e.u64(p.block);
+                    e.u32(p.user);
+                    e.u64(p.shard);
+                    e.u64(p.samples);
+                }
+                encode_ops(&mut e, &r.store_ops, spill);
+                match r.accuracy {
+                    None => e.bool(false),
+                    Some(a) => {
+                        e.bool(true);
+                        e.f64(a);
+                    }
+                }
+                r.metrics.encode(&mut e);
+                e.words(&r.partitioner_state);
+                e.words(&r.policy_state);
+            }
+            Event::Serve(r) => {
+                e.u8(4);
+                e.bool(r.popped);
+                encode_ops(&mut e, &r.store_ops, spill);
+                encode_battery(&mut e, &r.battery);
+                r.metrics.encode(&mut e);
+                match &r.latency {
+                    None => e.bool(false),
+                    Some(l) => {
+                        e.bool(true);
+                        l.encode(&mut e);
+                    }
+                }
+                r.report.encode(&mut e);
+                e.bool(r.head_deferral_logged);
+                e.words(&r.policy_state);
+            }
+            Event::Window(r) => {
+                e.u8(5);
+                e.u64(r.drained);
+                encode_ops(&mut e, &r.store_ops, spill);
+                encode_battery(&mut e, &r.battery);
+                r.metrics.encode(&mut e);
+                e.u64(r.latency.len() as u64);
+                for l in &r.latency {
+                    l.encode(&mut e);
+                }
+                match &r.report {
+                    None => e.bool(false),
+                    Some(b) => {
+                        e.bool(true);
+                        b.encode(&mut e);
+                    }
+                }
+                encode_carryover(&mut e, &r.carryover);
+                e.bool(r.head_deferral_logged);
+                e.words(&r.policy_state);
+            }
+        }
+        e.buf
+    }
+
+    /// Decode one frame payload. Returns the sequence number and event;
+    /// spilled checkpoint payloads are re-linked through `dedup`.
+    pub fn decode(payload: &[u8], dedup: &mut PayloadDedup) -> DecodeResult<(u64, Event)> {
+        let mut d = Dec::new(payload);
+        let seq = d.u64()?;
+        let ev = match d.u8()? {
+            0 => Event::Advance { ticks: d.u64()? },
+            1 => Event::Harvest { battery: decode_battery(&mut d)? },
+            2 => Event::Submit(ReqRecord::decode(&mut d)?),
+            3 => {
+                let round = d.u32()?;
+                let n = d.count()?;
+                let mut placements = Vec::with_capacity(n.min(1 << 12));
+                for _ in 0..n {
+                    placements.push(PlacementRecord {
+                        block: d.u64()?,
+                        user: d.u32()?,
+                        shard: d.u64()?,
+                        samples: d.u64()?,
+                    });
+                }
+                let store_ops = decode_ops(&mut d, dedup)?;
+                let accuracy = if d.bool()? { Some(d.f64()?) } else { None };
+                let metrics = MetricsPost::decode(&mut d)?;
+                let partitioner_state = d.words()?;
+                let policy_state = d.words()?;
+                Event::Round(Box::new(RoundRec {
+                    round,
+                    placements,
+                    store_ops,
+                    accuracy,
+                    metrics,
+                    partitioner_state,
+                    policy_state,
+                }))
+            }
+            4 => {
+                let popped = d.bool()?;
+                let store_ops = decode_ops(&mut d, dedup)?;
+                let battery = decode_battery(&mut d)?;
+                let metrics = MetricsPost::decode(&mut d)?;
+                let latency =
+                    if d.bool()? { Some(LatencyRecord::decode(&mut d)?) } else { None };
+                let report = SvcReportRec::decode(&mut d)?;
+                let head_deferral_logged = d.bool()?;
+                let policy_state = d.words()?;
+                Event::Serve(Box::new(ServeRec {
+                    popped,
+                    store_ops,
+                    battery,
+                    metrics,
+                    latency,
+                    report,
+                    head_deferral_logged,
+                    policy_state,
+                }))
+            }
+            5 => {
+                let drained = d.u64()?;
+                let store_ops = decode_ops(&mut d, dedup)?;
+                let battery = decode_battery(&mut d)?;
+                let metrics = MetricsPost::decode(&mut d)?;
+                let n = d.count()?;
+                let mut latency = Vec::with_capacity(n.min(1 << 12));
+                for _ in 0..n {
+                    latency.push(LatencyRecord::decode(&mut d)?);
+                }
+                let report =
+                    if d.bool()? { Some(BatchReportRec::decode(&mut d)?) } else { None };
+                let carryover = decode_carryover(&mut d)?;
+                let head_deferral_logged = d.bool()?;
+                let policy_state = d.words()?;
+                Event::Window(Box::new(WindowRec {
+                    drained,
+                    store_ops,
+                    battery,
+                    metrics,
+                    latency,
+                    report,
+                    carryover,
+                    head_deferral_logged,
+                    policy_state,
+                }))
+            }
+            t => return Err(format!("unknown event tag {t}")),
+        };
+        d.finished()?;
+        Ok((seq, ev))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::runtime::codec::{CodecMode, TensorCodec};
+    use crate::runtime::HostTensor;
+    use crate::testkit::forall;
+
+    fn roundtrip(ev: &Event, seq: u64, spill: bool) -> Event {
+        let bytes = ev.encode(seq, spill);
+        let mut dedup = PayloadDedup::new();
+        let (got_seq, got) = Event::decode(&bytes, &mut dedup).expect("decode");
+        assert_eq!(got_seq, seq);
+        got
+    }
+
+    fn rand_metrics(rng: &mut Rng) -> MetricsPost {
+        MetricsPost {
+            warm_retrains: rng.below(100),
+            scratch_retrains: rng.below(100),
+            lineages_retrained: rng.below(100),
+            prunes: rng.below(1000),
+            energy_joules: rng.f64() * 1e4,
+            ckpts_stored: rng.below(500),
+            ckpts_replaced: rng.below(500),
+            ckpts_rejected: rng.below(500),
+            ckpts_invalidated: rng.below(500),
+            batches: rng.below(40),
+            batched_requests: rng.below(400),
+            retrains_coalesced: rng.below(400),
+            round_slots: rng.below(20),
+            rsn_last: rng.below(100_000),
+            requests_last: rng.below(50),
+        }
+    }
+
+    fn rand_ops(rng: &mut Rng) -> Vec<StoreOpRec> {
+        (0..rng.range(0, 4))
+            .map(|i| match rng.range(0, 3) {
+                0 => StoreOpRec::Store {
+                    id: i as u64 + rng.below(100),
+                    lineage: rng.below(8),
+                    round: rng.below(20) as u32,
+                    covered: rng.below(20) as u32,
+                    size_bytes: rng.below(1 << 20),
+                    payload: None,
+                    event: match rng.range(0, 4) {
+                        0 => StoreEvRec::Stored { slot: rng.below(16) },
+                        1 => StoreEvRec::Replaced {
+                            slot: rng.below(16),
+                            evicted: rng.below(100),
+                        },
+                        2 => StoreEvRec::Evicted {
+                            slot: rng.below(16),
+                            victims: (0..rng.range(1, 4)).map(|_| rng.below(100)).collect(),
+                        },
+                        _ => StoreEvRec::Rejected,
+                    },
+                },
+                1 => StoreOpRec::SkipReject { id: rng.below(1000) },
+                _ => StoreOpRec::Invalidate {
+                    ids: (0..rng.range(0, 5)).map(|_| rng.below(1000)).collect(),
+                },
+            })
+            .collect()
+    }
+
+    fn rand_event(rng: &mut Rng) -> Event {
+        match rng.range(0, 6) {
+            0 => Event::Advance { ticks: rng.below(1 << 30) },
+            1 => Event::Harvest {
+                battery: rng
+                    .chance(0.7)
+                    .then(|| BatteryPost { charge_j: rng.f64() * 7.2e4, brownouts: rng.below(9) }),
+            },
+            2 => Event::Submit(ReqRecord {
+                user: rng.below(1000) as u32,
+                round: rng.below(30) as u32,
+                arrival_tick: rng.below(1000),
+                parts: (0..rng.range(0, 6))
+                    .map(|_| (rng.below(10_000), rng.below(500)))
+                    .collect(),
+            }),
+            3 => Event::Round(Box::new(RoundRec {
+                round: rng.below(30) as u32,
+                placements: (0..rng.range(0, 8))
+                    .map(|_| PlacementRecord {
+                        block: rng.below(10_000),
+                        user: rng.below(1000) as u32,
+                        shard: rng.below(8),
+                        samples: rng.below(500),
+                    })
+                    .collect(),
+                store_ops: rand_ops(rng),
+                accuracy: rng.chance(0.3).then(|| rng.f64()),
+                metrics: rand_metrics(rng),
+                partitioner_state: (0..rng.range(0, 12)).map(|_| rng.next_u64()).collect(),
+                policy_state: (0..rng.range(0, 6)).map(|_| rng.next_u64()).collect(),
+            })),
+            4 => Event::Serve(Box::new(ServeRec {
+                popped: rng.chance(0.8),
+                store_ops: rand_ops(rng),
+                battery: rng
+                    .chance(0.5)
+                    .then(|| BatteryPost { charge_j: rng.f64() * 100.0, brownouts: rng.below(5) }),
+                metrics: rand_metrics(rng),
+                latency: rng.chance(0.8).then(|| LatencyRecord {
+                    user: rng.below(100) as u32,
+                    round: rng.below(20) as u32,
+                    queued_ticks: rng.below(50),
+                    slo_met: rng.chance(0.9),
+                }),
+                report: SvcReportRec {
+                    user: rng.below(100) as u32,
+                    round: rng.below(20) as u32,
+                    rsn: rng.below(100_000),
+                    lineages_retrained: rng.below(8),
+                    est_seconds: rng.f64() * 100.0,
+                    est_joules: rng.f64() * 1000.0,
+                    deferred: rng.chance(0.2),
+                },
+                head_deferral_logged: rng.chance(0.2),
+                policy_state: (0..rng.range(0, 6)).map(|_| rng.next_u64()).collect(),
+            })),
+            _ => Event::Window(Box::new(WindowRec {
+                drained: rng.below(20),
+                store_ops: rand_ops(rng),
+                battery: rng
+                    .chance(0.5)
+                    .then(|| BatteryPost { charge_j: rng.f64() * 100.0, brownouts: rng.below(5) }),
+                metrics: rand_metrics(rng),
+                latency: (0..rng.range(0, 5))
+                    .map(|_| LatencyRecord {
+                        user: rng.below(100) as u32,
+                        round: rng.below(20) as u32,
+                        queued_ticks: rng.below(50),
+                        slo_met: rng.chance(0.9),
+                    })
+                    .collect(),
+                report: rng.chance(0.8).then(|| BatchReportRec {
+                    requests: rng.below(20),
+                    rsn: rng.below(100_000),
+                    lineages_retrained: rng.below(8),
+                    retrains_coalesced: rng.below(20),
+                    oldest_queued_ticks: rng.below(60),
+                    est_seconds: rng.f64() * 100.0,
+                    est_joules: rng.f64() * 1000.0,
+                    deferred: rng.chance(0.2),
+                }),
+                carryover: rng.chance(0.4).then(|| {
+                    (
+                        PlanRec {
+                            lineages: (0..rng.range(1, 4))
+                                .map(|l| {
+                                    (
+                                        l as u64,
+                                        (0..rng.range(1, 5)).map(|_| rng.below(20)).collect(),
+                                        rng.below(5) + 1,
+                                    )
+                                })
+                                .collect(),
+                            requests: rng.below(10),
+                        },
+                        (0..rng.range(0, 4))
+                            .map(|_| MetaRec {
+                                user: rng.below(100) as u32,
+                                round: rng.below(20) as u32,
+                                arrival_tick: rng.below(100),
+                            })
+                            .collect(),
+                    )
+                }),
+                head_deferral_logged: rng.chance(0.2),
+                policy_state: (0..rng.range(0, 6)).map(|_| rng.next_u64()).collect(),
+            })),
+        }
+    }
+
+    #[test]
+    fn prop_events_roundtrip() {
+        forall(
+            0xE7E27,
+            150,
+            |rng, _| {
+                let seq = rng.next_u64();
+                (seq, rand_event(rng))
+            },
+            |(seq, ev)| {
+                let got = roundtrip(ev, *seq, false);
+                if got != *ev {
+                    return Err(format!("round-trip mismatch: {got:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn decode_rejects_garbage_and_trailing_bytes() {
+        let mut dedup = PayloadDedup::new();
+        assert!(Event::decode(b"", &mut dedup).is_err());
+        assert!(Event::decode(&[0; 8], &mut dedup).is_err()); // seq, no tag
+        let mut bytes = Event::Advance { ticks: 7 }.encode(3, false);
+        bytes.push(0);
+        assert!(Event::decode(&bytes, &mut dedup).is_err(), "trailing byte");
+        bytes.truncate(bytes.len() - 2);
+        assert!(Event::decode(&bytes, &mut dedup).is_err(), "truncated");
+        // Unknown tag.
+        let mut e = Enc::new();
+        e.u64(0);
+        e.u8(99);
+        assert!(Event::decode(&e.buf, &mut dedup).is_err());
+    }
+
+    /// Spilled payload chains re-establish `Arc` sharing across events:
+    /// two checkpoints whose deltas pinned the same parent share one
+    /// reconstructed parent allocation after decode.
+    #[test]
+    fn spilled_payload_chains_share_parents_on_decode() {
+        let codec = TensorCodec::new(CodecMode::Delta);
+        let base = vec![HostTensor::from_fn(&[96], |i| (i as f32).cos())];
+        let parent = Arc::new(codec.encode(&base, None));
+        let mut v1 = base.clone();
+        v1[0].data[3] = 5.0;
+        let child_a = Arc::new(codec.encode(&v1, Some(&parent)));
+        let mut v2 = base.clone();
+        v2[0].data[9] = -2.0;
+        let child_b = Arc::new(codec.encode(&v2, Some(&parent)));
+
+        let op = |p: &Arc<EncodedParams>, id: u64| StoreOpRec::Store {
+            id,
+            lineage: 0,
+            round: 1,
+            covered: 1,
+            size_bytes: p.size_bytes(),
+            payload: Some(p.clone()),
+            event: StoreEvRec::Stored { slot: id },
+        };
+        let ev_a = Event::Serve(Box::new(ServeRec {
+            popped: true,
+            store_ops: vec![op(&child_a, 0)],
+            battery: None,
+            metrics: MetricsPost::default(),
+            latency: None,
+            report: SvcReportRec {
+                user: 0,
+                round: 1,
+                rsn: 0,
+                lineages_retrained: 0,
+                est_seconds: 0.0,
+                est_joules: 0.0,
+                deferred: false,
+            },
+            head_deferral_logged: false,
+            policy_state: vec![],
+        }));
+        let ev_b = match &ev_a {
+            Event::Serve(r) => {
+                let mut r2 = (**r).clone();
+                r2.store_ops = vec![op(&child_b, 1)];
+                Event::Serve(Box::new(r2))
+            }
+            _ => unreachable!(),
+        };
+
+        let mut dedup = PayloadDedup::new();
+        let (_, got_a) = Event::decode(&ev_a.encode(0, true), &mut dedup).unwrap();
+        let (_, got_b) = Event::decode(&ev_b.encode(1, true), &mut dedup).unwrap();
+        let payload_of = |ev: &Event| match ev {
+            Event::Serve(r) => match &r.store_ops[0] {
+                StoreOpRec::Store { payload, .. } => payload.clone().unwrap(),
+                _ => panic!("expected store op"),
+            },
+            _ => panic!("expected serve"),
+        };
+        let (pa, pb) = (payload_of(&got_a), payload_of(&got_b));
+        assert_eq!(pa.decode(), v1, "payload A decodes bit-exact");
+        assert_eq!(pb.decode(), v2, "payload B decodes bit-exact");
+        let (parent_a, parent_b) =
+            (pa.parent().expect("delta").clone(), pb.parent().expect("delta").clone());
+        assert!(
+            Arc::ptr_eq(&parent_a, &parent_b),
+            "shared parent must be one allocation after recovery"
+        );
+        assert_eq!(parent_a.uid(), parent.uid());
+        assert_eq!(parent_a.decode(), base);
+        // Without spill the payload stays behind (log mode).
+        let mut dedup = PayloadDedup::new();
+        let (_, lean) = Event::decode(&ev_a.encode(0, false), &mut dedup).unwrap();
+        match &lean {
+            Event::Serve(r) => match &r.store_ops[0] {
+                StoreOpRec::Store { payload, size_bytes, .. } => {
+                    assert!(payload.is_none());
+                    assert_eq!(*size_bytes, child_a.size_bytes(), "size survives");
+                }
+                _ => panic!("expected store op"),
+            },
+            _ => panic!("expected serve"),
+        }
+    }
+}

@@ -1,0 +1,250 @@
+//! CRC-framed, length-prefixed binary framing for the write-ahead log.
+//!
+//! A persisted file is `magic (8 bytes) ‖ version (u32 LE) ‖ frames…`, and
+//! every frame is `len (u32 LE) ‖ crc32(payload) (u32 LE) ‖ payload`. The
+//! reader stops at the first incomplete or CRC-failing frame, so a crash
+//! that tears a write anywhere — header bytes, length prefix, mid-payload —
+//! degrades to "the log ends at the last fully committed frame". That is
+//! the whole crash-consistency story at this layer: a frame is either
+//! entirely in the log or not in it at all, and
+//! [`scan_frames`] is a pure function of the byte prefix, so truncating
+//! the file at *any* byte offset yields the same frames as truncating at
+//! the previous frame boundary (property-tested below and in
+//! `tests/durability.rs`).
+
+use std::sync::OnceLock;
+
+/// Magic prefix of a write-ahead log file.
+pub const LOG_MAGIC: &[u8; 8] = b"CAUSEWAL";
+
+/// Magic prefix of a state-snapshot file.
+pub const SNAP_MAGIC: &[u8; 8] = b"CAUSESNP";
+
+/// On-disk format version (bumped on incompatible layout changes).
+pub const FORMAT_VERSION: u32 = 1;
+
+/// Bytes of `magic ‖ version` at the start of every persisted file.
+pub const HEADER_LEN: usize = 12;
+
+/// Upper bound on a single frame's payload — corrupt length prefixes must
+/// not allocate unbounded memory.
+const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
+
+/// CRC-32 (IEEE 802.3, reflected) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    let mut c = !0u32;
+    for &b in bytes {
+        c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// File header for the given magic.
+pub fn header(magic: &[u8; 8]) -> Vec<u8> {
+    let mut h = magic.to_vec();
+    h.extend_from_slice(&FORMAT_VERSION.to_le_bytes());
+    h
+}
+
+/// Does `file` start with a valid header for `magic`?
+pub fn header_ok(file: &[u8], magic: &[u8; 8]) -> bool {
+    file.len() >= HEADER_LEN
+        && &file[..8] == magic
+        && file[8..12] == FORMAT_VERSION.to_le_bytes()
+}
+
+/// Wrap a payload into one frame.
+pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(8 + payload.len());
+    out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(payload);
+    out
+}
+
+fn read_u32(file: &[u8], at: usize) -> Option<u32> {
+    let b = file.get(at..at + 4)?;
+    Some(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+}
+
+/// Scan every complete frame of `file` (header included). Returns the
+/// frame payloads plus the byte length of the valid prefix (header +
+/// complete frames); anything beyond it is a torn tail to discard. A file
+/// whose header itself is torn or mismatched yields `(vec![], 0)`.
+pub fn scan_frames(file: &[u8], magic: &[u8; 8]) -> (Vec<Vec<u8>>, usize) {
+    if !header_ok(file, magic) {
+        return (Vec::new(), 0);
+    }
+    let mut frames = Vec::new();
+    let mut pos = HEADER_LEN;
+    loop {
+        let Some(len) = read_u32(file, pos) else { break };
+        if len > MAX_FRAME_LEN {
+            break;
+        }
+        let Some(crc) = read_u32(file, pos + 4) else { break };
+        let end = pos + 8 + len as usize;
+        let Some(payload) = file.get(pos + 8..end) else { break };
+        if crc32(payload) != crc {
+            break;
+        }
+        frames.push(payload.to_vec());
+        pos = end;
+    }
+    (frames, pos)
+}
+
+/// End offsets (within `file`) of every complete frame — the legal crash
+/// points the kill-point harness enumerates.
+pub fn frame_bounds(file: &[u8], magic: &[u8; 8]) -> Vec<usize> {
+    if !header_ok(file, magic) {
+        return Vec::new();
+    }
+    let mut bounds = Vec::new();
+    let mut pos = HEADER_LEN;
+    while let (Some(len), Some(crc)) = (read_u32(file, pos), read_u32(file, pos + 4)) {
+        if len > MAX_FRAME_LEN {
+            break;
+        }
+        let end = pos + 8 + len as usize;
+        match file.get(pos + 8..end) {
+            Some(payload) if crc32(payload) == crc => {
+                bounds.push(end);
+                pos = end;
+            }
+            _ => break,
+        }
+    }
+    bounds
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::testkit::forall;
+
+    #[test]
+    fn crc32_matches_known_vectors() {
+        // Standard IEEE test vectors.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414f_a339);
+    }
+
+    #[test]
+    fn frames_roundtrip() {
+        let mut file = header(LOG_MAGIC);
+        let payloads: Vec<Vec<u8>> =
+            vec![vec![], vec![7], vec![1, 2, 3], (0..=255u8).collect()];
+        for p in &payloads {
+            file.extend_from_slice(&encode_frame(p));
+        }
+        let (frames, valid) = scan_frames(&file, LOG_MAGIC);
+        assert_eq!(frames, payloads);
+        assert_eq!(valid, file.len());
+        assert_eq!(frame_bounds(&file, LOG_MAGIC).len(), payloads.len());
+        assert_eq!(*frame_bounds(&file, LOG_MAGIC).last().unwrap(), file.len());
+    }
+
+    #[test]
+    fn wrong_magic_or_version_is_empty() {
+        let file = header(SNAP_MAGIC);
+        assert_eq!(scan_frames(&file, LOG_MAGIC), (vec![], 0));
+        let mut bad = header(LOG_MAGIC);
+        bad[9] ^= 1; // corrupt the version
+        assert_eq!(scan_frames(&bad, LOG_MAGIC), (vec![], 0));
+        assert_eq!(scan_frames(b"CA", LOG_MAGIC), (vec![], 0));
+    }
+
+    #[test]
+    fn corrupt_byte_drops_tail_not_prefix() {
+        let mut file = header(LOG_MAGIC);
+        file.extend_from_slice(&encode_frame(b"first"));
+        let second_at = file.len();
+        file.extend_from_slice(&encode_frame(b"second"));
+        // Flip a payload byte of the second frame: frame 1 survives.
+        let mut torn = file.clone();
+        torn[second_at + 9] ^= 0xff;
+        let (frames, valid) = scan_frames(&torn, LOG_MAGIC);
+        assert_eq!(frames, vec![b"first".to_vec()]);
+        assert_eq!(valid, second_at);
+    }
+
+    #[test]
+    fn insane_length_prefix_is_torn_tail() {
+        let mut file = header(LOG_MAGIC);
+        file.extend_from_slice(&encode_frame(b"ok"));
+        let cut = file.len();
+        file.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd length
+        file.extend_from_slice(&[0; 32]);
+        let (frames, valid) = scan_frames(&file, LOG_MAGIC);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(valid, cut);
+    }
+
+    /// The framing invariant the whole durability design rests on:
+    /// truncating the file at ANY byte offset yields exactly the frames of
+    /// the last complete boundary at or before it — never a torn frame,
+    /// never a lost committed one.
+    #[test]
+    fn prop_truncation_at_every_byte_is_boundary_equivalent() {
+        forall(
+            0xF4A3E5,
+            25,
+            |rng: &mut Rng, size| {
+                let n = 1 + (6.0 * size) as usize;
+                (0..n)
+                    .map(|_| {
+                        let len = rng.range(0, 40);
+                        (0..len).map(|_| rng.below(256) as u8).collect::<Vec<u8>>()
+                    })
+                    .collect::<Vec<_>>()
+            },
+            |payloads| {
+                let mut file = header(LOG_MAGIC);
+                let mut bounds = vec![HEADER_LEN];
+                for p in payloads {
+                    file.extend_from_slice(&encode_frame(p));
+                    bounds.push(file.len());
+                }
+                for cut in 0..=file.len() {
+                    let (frames, valid) = scan_frames(&file[..cut], LOG_MAGIC);
+                    let expect_k = if cut < HEADER_LEN {
+                        0
+                    } else {
+                        bounds.iter().filter(|b| **b <= cut).count() - 1
+                    };
+                    if frames.len() != expect_k {
+                        return Err(format!(
+                            "cut {cut}: {} frames, expected {expect_k}",
+                            frames.len()
+                        ));
+                    }
+                    if frames.as_slice() != &payloads[..expect_k] {
+                        return Err(format!("cut {cut}: frame bytes diverged"));
+                    }
+                    if cut >= HEADER_LEN && valid != bounds[expect_k] {
+                        return Err(format!(
+                            "cut {cut}: valid prefix {valid} != boundary {}",
+                            bounds[expect_k]
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -1,0 +1,418 @@
+//! The append-only event log plus the manifest that names the current
+//! snapshot/log generation.
+//!
+//! Directory layout (inside one [`PersistFs`]):
+//!
+//! ```text
+//! MANIFEST.json        — {version, next_seq, snapshot, log}; atomic replace
+//! wal-<seq>.log        — header ‖ frames (one event per frame)
+//! snapshot-<seq>.bin   — header ‖ one frame holding the StateImage
+//! ```
+//!
+//! Compaction writes the new snapshot and a fresh empty log *first*, then
+//! commits by atomically replacing the manifest, then deletes the old
+//! generation. A crash anywhere in that sequence leaves a readable state:
+//! before the manifest commit the old generation is intact; after it the
+//! new one is; stale files are garbage, not corruption.
+
+use std::io;
+
+use crate::persist::frame::{
+    self, encode_frame, header, scan_frames, LOG_MAGIC, SNAP_MAGIC,
+};
+use crate::persist::PersistFs;
+use crate::util::Json;
+
+/// Manifest file name.
+pub const MANIFEST: &str = "MANIFEST.json";
+
+/// The committed generation pointer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Manifest {
+    pub version: u64,
+    /// Sequence number of the first event the current log may hold (=
+    /// events materialized into the snapshot).
+    pub next_seq: u64,
+    /// Snapshot file of this generation; `None` before the first
+    /// compaction.
+    pub snapshot: Option<String>,
+    /// Current write-ahead log file.
+    pub log: String,
+}
+
+impl Manifest {
+    fn fresh() -> Manifest {
+        Manifest { version: 1, next_seq: 0, snapshot: None, log: "wal-0.log".to_string() }
+    }
+
+    fn to_json(&self) -> Json {
+        let snap = match &self.snapshot {
+            Some(s) => Json::Str(s.clone()),
+            None => Json::Null,
+        };
+        Json::obj()
+            .set("version", self.version)
+            .set("next_seq", self.next_seq)
+            .set("snapshot", snap)
+            .set("log", self.log.as_str())
+    }
+
+    fn from_json(j: &Json) -> Result<Manifest, String> {
+        let num = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("manifest missing numeric '{k}'"))
+        };
+        let log = j
+            .get("log")
+            .and_then(Json::as_str)
+            .ok_or("manifest missing 'log'")?
+            .to_string();
+        let snapshot = match j.get("snapshot") {
+            Some(Json::Str(s)) => Some(s.clone()),
+            Some(Json::Null) | None => None,
+            Some(other) => return Err(format!("manifest 'snapshot' malformed: {other}")),
+        };
+        Ok(Manifest { version: num("version")? as u64, next_seq: num("next_seq")? as u64, snapshot, log })
+    }
+}
+
+/// What [`EventLog::open`] found on the filesystem.
+pub struct Opened {
+    pub log: EventLog,
+    /// The committed snapshot payload, if a compaction ever ran.
+    pub snapshot: Option<Vec<u8>>,
+    /// Complete event frames of the log tail, in order.
+    pub frames: Vec<Vec<u8>>,
+    /// Torn/corrupt bytes dropped (and repaired away) from the log tail.
+    pub torn_bytes: u64,
+}
+
+/// The append-only write-ahead log over a [`PersistFs`].
+pub struct EventLog {
+    fs: Box<dyn PersistFs>,
+    manifest: Manifest,
+    /// Current log file length in bytes (header included).
+    log_len: u64,
+    /// Sequence number of the next event to append.
+    next_seq: u64,
+    /// Events appended to the current log tail (resets on compaction).
+    events_in_log: u64,
+}
+
+impl EventLog {
+    /// Open (or initialize) the log inside `fs`, repairing any torn tail.
+    /// The caller replays `snapshot` + `frames`, then continues appending.
+    pub fn open(mut fs: Box<dyn PersistFs>) -> io::Result<Opened> {
+        let manifest = match fs.read(MANIFEST) {
+            Some(bytes) => {
+                let text = String::from_utf8(bytes)
+                    .map_err(|_| corrupt("manifest is not UTF-8"))?;
+                let json = Json::parse(&text)
+                    .map_err(|e| corrupt(&format!("manifest parse: {e}")))?;
+                Manifest::from_json(&json).map_err(|e| corrupt(&e))?
+            }
+            None => {
+                // Log file first, manifest second: a committed manifest
+                // must never name a file that does not exist (a crash
+                // between the two writes then simply re-initializes).
+                let m = Manifest::fresh();
+                fs.write(&m.log, &header(LOG_MAGIC))?;
+                fs.write(MANIFEST, (m.to_json().to_pretty() + "\n").as_bytes())?;
+                m
+            }
+        };
+
+        // Snapshot: one frame behind a snapshot header. A manifest that
+        // names a snapshot the filesystem lost (or that fails its CRC) is
+        // unrecoverable corruption — fail loudly rather than silently
+        // dropping materialized history.
+        let snapshot = match &manifest.snapshot {
+            None => None,
+            Some(name) => {
+                let bytes = fs
+                    .read(name)
+                    .ok_or_else(|| corrupt(&format!("snapshot '{name}' missing")))?;
+                let (mut frames, _) = scan_frames(&bytes, SNAP_MAGIC);
+                if frames.len() != 1 {
+                    return Err(corrupt(&format!(
+                        "snapshot '{name}' malformed ({} frames)",
+                        frames.len()
+                    )));
+                }
+                Some(frames.remove(0))
+            }
+        };
+
+        // Log tail: keep the valid frame prefix, repair the file if a torn
+        // tail (or a short/garbled header) is found. A manifest-named log
+        // that is *entirely missing* is loud corruption, like a missing
+        // snapshot: both init and compaction write the log file before
+        // committing the manifest that names it, so no crash can legally
+        // produce this state — silently starting empty would drop the
+        // whole acked event tail.
+        let raw = fs
+            .read(&manifest.log)
+            .ok_or_else(|| corrupt(&format!("log '{}' missing", manifest.log)))?;
+        let (frames, valid) = scan_frames(&raw, LOG_MAGIC);
+        let torn = raw.len() as u64 - valid as u64;
+        if torn > 0 || raw.is_empty() {
+            // Rewrite to the valid prefix (possibly just a fresh header —
+            // a first-write crash can tear even the file header).
+            let repaired =
+                if valid == 0 { header(LOG_MAGIC) } else { raw[..valid].to_vec() };
+            fs.write(&manifest.log, &repaired)?;
+        }
+        let log_len = match fs.read(&manifest.log) {
+            Some(b) => b.len() as u64,
+            None => frame::HEADER_LEN as u64,
+        };
+
+        let next_seq = manifest.next_seq + frames.len() as u64;
+        let events_in_log = frames.len() as u64;
+        Ok(Opened {
+            log: EventLog { fs, manifest, log_len, next_seq, events_in_log },
+            snapshot,
+            frames,
+            torn_bytes: torn,
+        })
+    }
+
+    /// Sequence number the next appended event must carry.
+    pub fn next_seq(&self) -> u64 {
+        self.next_seq
+    }
+
+    /// Events in the current log tail (since the last compaction).
+    pub fn events_in_log(&self) -> u64 {
+        self.events_in_log
+    }
+
+    /// Current log file size, bytes.
+    pub fn log_bytes(&self) -> u64 {
+        self.log_len
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Drop already-replayed frames the recovery pass rejected (sequence
+    /// mismatch / undecodable): rewrite the log to hold exactly `frames`.
+    pub fn rewrite(&mut self, frames: &[Vec<u8>]) -> io::Result<()> {
+        let mut file = header(LOG_MAGIC);
+        for f in frames {
+            file.extend_from_slice(&encode_frame(f));
+        }
+        self.fs.write(&self.manifest.log, &file)?;
+        self.log_len = file.len() as u64;
+        self.events_in_log = frames.len() as u64;
+        self.next_seq = self.manifest.next_seq + frames.len() as u64;
+        Ok(())
+    }
+
+    /// Append one event payload as a frame; the payload must carry
+    /// [`EventLog::next_seq`]. Durable once this returns `Ok`.
+    pub fn append_payload(&mut self, payload: &[u8]) -> io::Result<()> {
+        let framed = encode_frame(payload);
+        self.fs.append(&self.manifest.log, &framed)?;
+        self.log_len += framed.len() as u64;
+        self.next_seq += 1;
+        self.events_in_log += 1;
+        Ok(())
+    }
+
+    /// Write a new snapshot generation and truncate the log: snapshot
+    /// file + empty log first, manifest commit second, old-file cleanup
+    /// last (see the module docs for the crash analysis). Compacting an
+    /// already-empty tail whose snapshot exists is an idempotent no-op —
+    /// generation names are derived from `next_seq`, so re-running with no
+    /// new events would otherwise collide with the live generation.
+    pub fn compact(&mut self, snapshot_payload: &[u8]) -> io::Result<()> {
+        if self.events_in_log == 0 && self.manifest.snapshot.is_some() {
+            return Ok(()); // the current snapshot already materializes everything
+        }
+        let seq = self.next_seq;
+        let snap_name = format!("snapshot-{seq}.bin");
+        let log_name = format!("wal-{seq}.log");
+        let mut snap = header(SNAP_MAGIC);
+        snap.extend_from_slice(&encode_frame(snapshot_payload));
+        self.fs.write(&snap_name, &snap)?;
+        self.fs.write(&log_name, &header(LOG_MAGIC))?;
+
+        // Commit durably BEFORE mutating the in-memory manifest: if the
+        // manifest replace fails, `self` still describes the old (and
+        // still-governing) generation, so appends keep landing in a file
+        // recovery will actually read — the new-generation files are
+        // orphans, not data loss.
+        let next = Manifest {
+            version: self.manifest.version,
+            next_seq: seq,
+            snapshot: Some(snap_name),
+            log: log_name,
+        };
+        self.fs.write(MANIFEST, (next.to_json().to_pretty() + "\n").as_bytes())?;
+        let old = std::mem::replace(&mut self.manifest, next);
+
+        // Remove the previous generation — never the one just committed
+        // (a fresh-log compaction reuses the `wal-0.log` name).
+        if let Some(old_snap) = old.snapshot {
+            if self.manifest.snapshot.as_deref() != Some(old_snap.as_str()) {
+                self.fs.remove(&old_snap);
+            }
+        }
+        if old.log != self.manifest.log {
+            self.fs.remove(&old.log);
+        }
+        self.log_len = frame::HEADER_LEN as u64;
+        self.events_in_log = 0;
+        Ok(())
+    }
+}
+
+fn corrupt(msg: &str) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::MemFs;
+
+    fn open_mem(fs: &MemFs) -> Opened {
+        EventLog::open(Box::new(fs.clone())).expect("open")
+    }
+
+    #[test]
+    fn fresh_open_initializes_manifest_and_log() {
+        let fs = MemFs::new();
+        let opened = open_mem(&fs);
+        assert!(opened.snapshot.is_none());
+        assert!(opened.frames.is_empty());
+        assert_eq!(opened.torn_bytes, 0);
+        assert_eq!(opened.log.next_seq(), 0);
+        assert!(fs.file(MANIFEST).is_some());
+        assert_eq!(fs.file("wal-0.log").unwrap(), header(LOG_MAGIC));
+    }
+
+    #[test]
+    fn appends_survive_reopen_and_torn_tail_is_repaired() {
+        let fs = MemFs::new();
+        let mut opened = open_mem(&fs);
+        opened.log.append_payload(b"evt-0").unwrap();
+        opened.log.append_payload(b"evt-1").unwrap();
+        assert_eq!(opened.log.next_seq(), 2);
+
+        // Tear the second frame mid-payload.
+        let full = fs.file("wal-0.log").unwrap();
+        fs.put("wal-0.log", full[..full.len() - 2].to_vec());
+        let reopened = open_mem(&fs);
+        assert_eq!(reopened.frames, vec![b"evt-0".to_vec()]);
+        assert!(reopened.torn_bytes > 0);
+        assert_eq!(reopened.log.next_seq(), 1);
+        // The torn bytes were repaired away on disk.
+        let repaired = fs.file("wal-0.log").unwrap();
+        let (frames, valid) = scan_frames(&repaired, LOG_MAGIC);
+        assert_eq!(frames.len(), 1);
+        assert_eq!(valid, repaired.len());
+    }
+
+    #[test]
+    fn header_torn_on_first_write_recovers_to_empty() {
+        let fs = MemFs::new();
+        let _ = open_mem(&fs);
+        fs.put("wal-0.log", b"CAUS".to_vec()); // torn header
+        let reopened = open_mem(&fs);
+        assert!(reopened.frames.is_empty());
+        assert_eq!(fs.file("wal-0.log").unwrap(), header(LOG_MAGIC));
+        assert_eq!(reopened.log.next_seq(), 0);
+    }
+
+    #[test]
+    fn compaction_switches_generation_atomically() {
+        let fs = MemFs::new();
+        let mut opened = open_mem(&fs);
+        opened.log.append_payload(b"a").unwrap();
+        opened.log.append_payload(b"b").unwrap();
+        opened.log.compact(b"SNAPSHOT").unwrap();
+        assert_eq!(opened.log.events_in_log(), 0);
+        assert_eq!(opened.log.next_seq(), 2);
+        assert!(fs.file("wal-0.log").is_none(), "old generation removed");
+
+        let reopened = open_mem(&fs);
+        assert_eq!(reopened.snapshot.as_deref(), Some(b"SNAPSHOT".as_slice()));
+        assert!(reopened.frames.is_empty());
+        assert_eq!(reopened.log.next_seq(), 2);
+        assert_eq!(reopened.log.manifest().log, "wal-2.log");
+
+        // Post-compaction appends land in the new log.
+        let mut log = reopened.log;
+        log.append_payload(b"c").unwrap();
+        let reopened = open_mem(&fs);
+        assert_eq!(reopened.frames, vec![b"c".to_vec()]);
+        assert_eq!(reopened.log.next_seq(), 3);
+    }
+
+    #[test]
+    fn compaction_with_empty_tail_is_idempotent() {
+        let fs = MemFs::new();
+        let mut opened = open_mem(&fs);
+        opened.log.append_payload(b"a").unwrap();
+        opened.log.compact(b"S1").unwrap();
+        // No new events: compacting again must not eat the live snapshot.
+        opened.log.compact(b"S1-again").unwrap();
+        let reopened = open_mem(&fs);
+        assert_eq!(reopened.snapshot.as_deref(), Some(b"S1".as_slice()));
+        assert_eq!(reopened.log.next_seq(), 1);
+        // A fresh log (no snapshot, no events) can compact without
+        // destroying its own generation either.
+        let fs2 = MemFs::new();
+        let mut fresh = open_mem(&fs2);
+        fresh.log.compact(b"EMPTY").unwrap();
+        let reopened = open_mem(&fs2);
+        assert_eq!(reopened.snapshot.as_deref(), Some(b"EMPTY".as_slice()));
+        assert!(reopened.frames.is_empty());
+        let mut log = reopened.log;
+        log.append_payload(b"x").unwrap();
+        let reopened = open_mem(&fs2);
+        assert_eq!(reopened.frames, vec![b"x".to_vec()]);
+    }
+
+    #[test]
+    fn crash_before_manifest_commit_keeps_old_generation() {
+        let fs = MemFs::new();
+        let mut opened = open_mem(&fs);
+        opened.log.append_payload(b"a").unwrap();
+        // Simulate the compactor crashing after writing the new snapshot +
+        // log files but before the manifest replace: write them by hand.
+        let mut snap = header(SNAP_MAGIC);
+        snap.extend_from_slice(&encode_frame(b"HALF-DONE"));
+        fs.put("snapshot-1.bin", snap);
+        fs.put("wal-1.log", header(LOG_MAGIC));
+        let reopened = open_mem(&fs);
+        assert!(reopened.snapshot.is_none(), "old manifest still governs");
+        assert_eq!(reopened.frames, vec![b"a".to_vec()]);
+    }
+
+    #[test]
+    fn missing_snapshot_is_loud_corruption() {
+        let fs = MemFs::new();
+        let mut opened = open_mem(&fs);
+        opened.log.append_payload(b"a").unwrap();
+        opened.log.compact(b"S").unwrap();
+        fs.remove("snapshot-1.bin");
+        assert!(EventLog::open(Box::new(fs.clone())).is_err());
+    }
+
+    #[test]
+    fn rewrite_drops_rejected_frames() {
+        let fs = MemFs::new();
+        let mut opened = open_mem(&fs);
+        opened.log.append_payload(b"keep").unwrap();
+        opened.log.append_payload(b"drop").unwrap();
+        opened.log.rewrite(&[b"keep".to_vec()]).unwrap();
+        assert_eq!(opened.log.next_seq(), 1);
+        let reopened = open_mem(&fs);
+        assert_eq!(reopened.frames, vec![b"keep".to_vec()]);
+    }
+}

@@ -1,0 +1,296 @@
+//! Durable unlearning: write-ahead event log, snapshot + compaction, and
+//! crash-consistent recovery.
+//!
+//! Edge devices reboot — satellites in eclipse, battery-cycled IoT nodes —
+//! and before this subsystem a restart silently lost the lineage state,
+//! the checkpoint store, and the pending/carryover unlearning queue,
+//! voiding the right-to-be-forgotten guarantee the system exists to give.
+//! The persist layer makes every service state transition durable:
+//!
+//! * [`frame`] — CRC-framed, length-prefixed binary framing. A frame is
+//!   atomic by construction: a torn write degrades to "the log ends one
+//!   frame earlier", never to a corrupt state.
+//! * [`event`] — the transition records ([`Event`]): request submitted,
+//!   samples removed, retrain executed (with RSN + warm-start receipts),
+//!   checkpoint stored/evicted (payload bytes ride along in
+//!   `log+spill` mode), battery settle, window carryover.
+//! * [`log`] — the append-only [`EventLog`] plus the `MANIFEST.json`
+//!   committed atomically on compaction.
+//! * [`snapshot`] — the materialized [`StateImage`] a [`Compactor`] run
+//!   writes before truncating the log prefix.
+//! * [`recovery`] — replays snapshot + log tail into a freshly built
+//!   service, reconstructing `UnlearningService` / `Engine` /
+//!   `ModelStore` / `Lineage` / `Battery` state receipt-identically.
+//!
+//! ## Crash-consistency invariant
+//!
+//! One logical transition = one event = one frame. Recovery after a crash
+//! at *any* byte offset equals recovery at the last complete frame
+//! boundary, which is the post-state of event k (= the pre-state of event
+//! k+1) — never a torn hybrid. `durability = off` leaves every code path
+//! byte-identical to the in-memory service. Both properties are enforced
+//! by the kill-point harness in `tests/durability.rs`, driven by
+//! [`FailpointFs`](crate::testkit::FailpointFs).
+
+pub mod event;
+pub mod frame;
+pub mod log;
+pub mod recovery;
+pub mod snapshot;
+
+use std::collections::BTreeMap;
+use std::io;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+pub use event::Event;
+pub use log::{EventLog, Manifest};
+pub use recovery::RecoveryReport;
+pub use snapshot::StateImage;
+
+/// How much the service persists.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum DurabilityMode {
+    /// No persistence — byte-identical to the pre-durability service.
+    #[default]
+    Off,
+    /// Write-ahead log of every transition. Checkpoint *payloads* are not
+    /// spilled: after recovery the store's accounting (sizes, stats,
+    /// coverage) is exact but payload tensors are absent, so warm starts
+    /// degrade to cold resets on tensor-carrying backends until fresh
+    /// checkpoints accumulate. The accounting backend loses nothing.
+    /// Caveat: with the **delta** codec, the identity-keyed pinned-parent
+    /// byte charge cannot be re-derived without payloads, so
+    /// `stored_bytes` may under-count pinned parents after recovery — use
+    /// [`DurabilityMode::LogSpill`] with delta chains.
+    Log,
+    /// Log plus checkpoint payload spill: encoded payload bytes travel in
+    /// the events/snapshot, and recovery restores them bit-exactly
+    /// (delta-chain `Arc` sharing included).
+    LogSpill,
+}
+
+impl DurabilityMode {
+    pub fn by_name(name: &str) -> Option<DurabilityMode> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "off" | "none" => Some(DurabilityMode::Off),
+            "log" | "wal" => Some(DurabilityMode::Log),
+            "log+spill" | "log_spill" | "spill" => Some(DurabilityMode::LogSpill),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            DurabilityMode::Off => "off",
+            DurabilityMode::Log => "log",
+            DurabilityMode::LogSpill => "log+spill",
+        }
+    }
+
+    /// Payload bytes ride along in events and snapshots.
+    pub fn spills(&self) -> bool {
+        matches!(self, DurabilityMode::LogSpill)
+    }
+}
+
+/// The flat filesystem surface the persist layer needs. `write` must
+/// replace atomically (tmp + rename on disk), because the manifest commit
+/// rides on it; `append` may tear at any byte — frames absorb that.
+pub trait PersistFs: Send {
+    fn read(&self, name: &str) -> Option<Vec<u8>>;
+    fn write(&mut self, name: &str, bytes: &[u8]) -> io::Result<()>;
+    fn append(&mut self, name: &str, bytes: &[u8]) -> io::Result<()>;
+    fn remove(&mut self, name: &str);
+}
+
+/// In-memory [`PersistFs`] backed by a shared map: clones see the same
+/// files, which is how the kill-point tests hand a "crashed" device's disk
+/// to a fresh recovery instance.
+#[derive(Clone, Default)]
+pub struct MemFs {
+    files: Arc<Mutex<BTreeMap<String, Vec<u8>>>>,
+}
+
+impl MemFs {
+    pub fn new() -> MemFs {
+        MemFs::default()
+    }
+
+    /// Raw file contents (test inspection).
+    pub fn file(&self, name: &str) -> Option<Vec<u8>> {
+        self.files.lock().unwrap().get(name).cloned()
+    }
+
+    /// Replace a file's contents directly (test setup: truncated logs).
+    pub fn put(&self, name: &str, bytes: Vec<u8>) {
+        self.files.lock().unwrap().insert(name.to_string(), bytes);
+    }
+
+    /// Names and sizes of all files (compaction-ratio measurements).
+    pub fn sizes(&self) -> Vec<(String, u64)> {
+        self.files
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, v)| (k.clone(), v.len() as u64))
+            .collect()
+    }
+
+    /// Deep-copy the current contents into an independent MemFs — a
+    /// point-in-time disk image.
+    pub fn fork(&self) -> MemFs {
+        let copy = self.files.lock().unwrap().clone();
+        MemFs { files: Arc::new(Mutex::new(copy)) }
+    }
+}
+
+impl PersistFs for MemFs {
+    fn read(&self, name: &str) -> Option<Vec<u8>> {
+        self.file(name)
+    }
+
+    fn write(&mut self, name: &str, bytes: &[u8]) -> io::Result<()> {
+        self.put(name, bytes.to_vec());
+        Ok(())
+    }
+
+    fn append(&mut self, name: &str, bytes: &[u8]) -> io::Result<()> {
+        self.files
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .extend_from_slice(bytes);
+        Ok(())
+    }
+
+    fn remove(&mut self, name: &str) {
+        self.files.lock().unwrap().remove(name);
+    }
+}
+
+/// Real-directory [`PersistFs`]. `write` goes through a temp file + rename
+/// so the manifest commit is atomic on POSIX filesystems.
+pub struct DiskFs {
+    dir: PathBuf,
+}
+
+impl DiskFs {
+    /// Open (creating the directory if needed).
+    pub fn new(dir: impl AsRef<Path>) -> io::Result<DiskFs> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        Ok(DiskFs { dir: dir.as_ref().to_path_buf() })
+    }
+
+    fn path(&self, name: &str) -> PathBuf {
+        self.dir.join(name)
+    }
+}
+
+impl PersistFs for DiskFs {
+    fn read(&self, name: &str) -> Option<Vec<u8>> {
+        std::fs::read(self.path(name)).ok()
+    }
+
+    fn write(&mut self, name: &str, bytes: &[u8]) -> io::Result<()> {
+        let tmp = self.path(&format!("{name}.tmp"));
+        std::fs::write(&tmp, bytes)?;
+        std::fs::rename(&tmp, self.path(name))
+    }
+
+    fn append(&mut self, name: &str, bytes: &[u8]) -> io::Result<()> {
+        use std::io::Write as _;
+        let mut f = std::fs::OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(self.path(name))?;
+        f.write_all(bytes)?;
+        f.flush()
+    }
+
+    fn remove(&mut self, name: &str) {
+        let _ = std::fs::remove_file(self.path(name));
+    }
+}
+
+/// Everything [`UnlearningService::attach_durability`] needs: the mode,
+/// the backing filesystem, and the auto-compaction cadence.
+///
+/// [`UnlearningService::attach_durability`]: crate::unlearning::UnlearningService::attach_durability
+pub struct Durability {
+    pub mode: DurabilityMode,
+    pub fs: Box<dyn PersistFs>,
+    /// Auto-compact after this many events accumulate in the log tail
+    /// (0 = only on explicit `compact_now`).
+    pub compact_every: u64,
+}
+
+impl Durability {
+    /// Disk-backed durability rooted at `dir`.
+    pub fn disk(
+        mode: DurabilityMode,
+        dir: impl AsRef<Path>,
+        compact_every: u64,
+    ) -> io::Result<Durability> {
+        Ok(Durability { mode, fs: Box::new(DiskFs::new(dir)?), compact_every })
+    }
+
+    /// Memory-backed durability (tests, benches).
+    pub fn mem(mode: DurabilityMode, fs: MemFs, compact_every: u64) -> Durability {
+        Durability { mode, fs: Box::new(fs), compact_every }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_names_roundtrip() {
+        for m in [DurabilityMode::Off, DurabilityMode::Log, DurabilityMode::LogSpill] {
+            assert_eq!(DurabilityMode::by_name(m.name()), Some(m));
+        }
+        assert_eq!(DurabilityMode::by_name("spill"), Some(DurabilityMode::LogSpill));
+        assert_eq!(DurabilityMode::by_name("wal"), Some(DurabilityMode::Log));
+        assert!(DurabilityMode::by_name("raid").is_none());
+        assert!(DurabilityMode::LogSpill.spills());
+        assert!(!DurabilityMode::Log.spills());
+        assert_eq!(DurabilityMode::default(), DurabilityMode::Off);
+    }
+
+    #[test]
+    fn memfs_clones_share_and_forks_isolate() {
+        let fs = MemFs::new();
+        let mut handle: Box<dyn PersistFs> = Box::new(fs.clone());
+        handle.append("a.log", b"one").unwrap();
+        assert_eq!(fs.file("a.log").unwrap(), b"one");
+        let snap = fs.fork();
+        handle.append("a.log", b"two").unwrap();
+        assert_eq!(fs.file("a.log").unwrap(), b"onetwo");
+        assert_eq!(snap.file("a.log").unwrap(), b"one", "fork is point-in-time");
+        handle.write("a.log", b"x").unwrap();
+        assert_eq!(fs.file("a.log").unwrap(), b"x");
+        handle.remove("a.log");
+        assert!(fs.file("a.log").is_none());
+        assert!(handle.read("a.log").is_none());
+    }
+
+    #[test]
+    fn diskfs_roundtrips_in_tmpdir() {
+        let dir = std::env::temp_dir().join("cause_persist_diskfs_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut fs = DiskFs::new(&dir).unwrap();
+        assert!(fs.read("w.log").is_none());
+        fs.append("w.log", b"abc").unwrap();
+        fs.append("w.log", b"def").unwrap();
+        assert_eq!(fs.read("w.log").unwrap(), b"abcdef");
+        fs.write("m.json", b"{}").unwrap();
+        assert_eq!(fs.read("m.json").unwrap(), b"{}");
+        fs.write("m.json", b"{\"a\":1}").unwrap();
+        assert_eq!(fs.read("m.json").unwrap(), b"{\"a\":1}");
+        fs.remove("w.log");
+        assert!(fs.read("w.log").is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

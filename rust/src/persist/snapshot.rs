@@ -1,0 +1,558 @@
+//! Materialized state snapshots — what the [`Compactor`] writes so the log
+//! prefix can be truncated.
+//!
+//! A [`StateImage`] is a complete, self-contained picture of the service:
+//! clock, queue, carryover plan, battery, service/batch receipt logs,
+//! engine round + per-round placements (the lineages rebuild by replaying
+//! them through `LineageSet::add_round`, so prefix sums and the block
+//! index come out identical), the store's exact slot layout (+ payloads in
+//! spill mode), policy/partitioner counters, and the full metrics.
+//!
+//! Compaction is driven by
+//! [`UnlearningService::compact_now`](crate::unlearning::UnlearningService::compact_now),
+//! which captures the image, hands its bytes to [`EventLog::compact`]
+//! (snapshot + fresh log first, atomic manifest commit second), and keeps
+//! appending to the new generation.
+//!
+//! [`Compactor`]: crate::unlearning::UnlearningService::compact_now
+//! [`EventLog::compact`]: crate::persist::EventLog::compact
+
+use std::sync::Arc;
+
+use crate::persist::event::{
+    decode_carryover, decode_payload, encode_carryover, encode_payload, BatchReportRec,
+    Dec, DecodeResult, Enc, LatencyRecord, MetaRec, PayloadDedup, PlacementRecord,
+    PlanRec, ReqRecord, SvcReportRec,
+};
+use crate::runtime::codec::EncodedParams;
+
+/// One resident checkpoint in the snapshot.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SlotCkpt {
+    pub id: u64,
+    pub lineage: u64,
+    pub round: u32,
+    pub covered: u32,
+    pub size_bytes: u64,
+    pub payload: Option<Arc<EncodedParams>>,
+}
+
+/// The checkpoint store's exact state.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StoreImage {
+    /// 0 = slots(capacity), 1 = bytes(budget).
+    pub mode_tag: u8,
+    pub mode_value: u64,
+    pub next_id: u64,
+    /// (stored, replaced, rejected, invalidated).
+    pub stats: (u64, u64, u64, u64),
+    pub slots: Vec<Option<SlotCkpt>>,
+    pub policy_state: Vec<u64>,
+}
+
+/// The battery's full state (capacity included, so a recovered device in
+/// eclipse does not wake up fully charged).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct BatteryImage {
+    pub capacity_j: f64,
+    pub charge_j: f64,
+    pub harvest_watts: f64,
+    pub brownouts: u64,
+}
+
+/// Full run metrics.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct MetricsImage {
+    pub rsn_by_round: Vec<u64>,
+    pub requests_by_round: Vec<u64>,
+    pub warm_retrains: u64,
+    pub scratch_retrains: u64,
+    pub lineages_retrained: u64,
+    pub energy_joules: f64,
+    pub prunes: u64,
+    pub ckpts_stored: u64,
+    pub ckpts_replaced: u64,
+    pub ckpts_rejected: u64,
+    pub ckpts_invalidated: u64,
+    pub batches: u64,
+    pub batched_requests: u64,
+    pub retrains_coalesced: u64,
+    pub latency: Vec<LatencyRecord>,
+    pub accuracy_by_round: Vec<Option<f64>>,
+}
+
+/// Everything recovery needs to rebuild the service without the log
+/// prefix.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StateImage {
+    pub now_tick: u64,
+    pub head_deferral_logged: bool,
+    pub queue: Vec<ReqRecord>,
+    pub carryover: Option<(PlanRec, Vec<MetaRec>)>,
+    pub battery: Option<BatteryImage>,
+    pub svc_log: Vec<SvcReportRec>,
+    pub batch_log: Vec<BatchReportRec>,
+    pub round: u32,
+    /// Per training round: the placements it added (current sample counts,
+    /// so unlearned data stays unlearned after the rebuild).
+    pub rounds: Vec<(u32, Vec<PlacementRecord>)>,
+    pub partitioner_state: Vec<u64>,
+    pub store: StoreImage,
+    pub metrics: MetricsImage,
+}
+
+impl StateImage {
+    /// Serialize; `spill` controls whether checkpoint payloads ride along.
+    pub fn encode(&self, spill: bool) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.u64(self.now_tick);
+        e.bool(self.head_deferral_logged);
+
+        e.u64(self.queue.len() as u64);
+        for r in &self.queue {
+            e.u32(r.user);
+            e.u32(r.round);
+            e.u64(r.arrival_tick);
+            e.u64(r.parts.len() as u64);
+            for (b, n) in &r.parts {
+                e.u64(*b);
+                e.u64(*n);
+            }
+        }
+
+        encode_carryover(&mut e, &self.carryover);
+
+        match &self.battery {
+            None => e.bool(false),
+            Some(b) => {
+                e.bool(true);
+                e.f64(b.capacity_j);
+                e.f64(b.charge_j);
+                e.f64(b.harvest_watts);
+                e.u64(b.brownouts);
+            }
+        }
+
+        e.u64(self.svc_log.len() as u64);
+        for r in &self.svc_log {
+            e.u32(r.user);
+            e.u32(r.round);
+            e.u64(r.rsn);
+            e.u64(r.lineages_retrained);
+            e.f64(r.est_seconds);
+            e.f64(r.est_joules);
+            e.bool(r.deferred);
+        }
+        e.u64(self.batch_log.len() as u64);
+        for r in &self.batch_log {
+            e.u64(r.requests);
+            e.u64(r.rsn);
+            e.u64(r.lineages_retrained);
+            e.u64(r.retrains_coalesced);
+            e.u64(r.oldest_queued_ticks);
+            e.f64(r.est_seconds);
+            e.f64(r.est_joules);
+            e.bool(r.deferred);
+        }
+
+        e.u32(self.round);
+        e.u64(self.rounds.len() as u64);
+        for (round, placements) in &self.rounds {
+            e.u32(*round);
+            e.u64(placements.len() as u64);
+            for p in placements {
+                e.u64(p.block);
+                e.u32(p.user);
+                e.u64(p.shard);
+                e.u64(p.samples);
+            }
+        }
+        e.words(&self.partitioner_state);
+
+        e.u8(self.store.mode_tag);
+        e.u64(self.store.mode_value);
+        e.u64(self.store.next_id);
+        e.u64(self.store.stats.0);
+        e.u64(self.store.stats.1);
+        e.u64(self.store.stats.2);
+        e.u64(self.store.stats.3);
+        e.u64(self.store.slots.len() as u64);
+        for s in &self.store.slots {
+            match s {
+                None => e.bool(false),
+                Some(c) => {
+                    e.bool(true);
+                    e.u64(c.id);
+                    e.u64(c.lineage);
+                    e.u32(c.round);
+                    e.u32(c.covered);
+                    e.u64(c.size_bytes);
+                    match &c.payload {
+                        Some(p) if spill => {
+                            e.bool(true);
+                            encode_payload(&mut e, p);
+                        }
+                        _ => e.bool(false),
+                    }
+                }
+            }
+        }
+        e.words(&self.store.policy_state);
+
+        let m = &self.metrics;
+        e.words(&m.rsn_by_round);
+        e.words(&m.requests_by_round);
+        e.u64(m.warm_retrains);
+        e.u64(m.scratch_retrains);
+        e.u64(m.lineages_retrained);
+        e.f64(m.energy_joules);
+        e.u64(m.prunes);
+        e.u64(m.ckpts_stored);
+        e.u64(m.ckpts_replaced);
+        e.u64(m.ckpts_rejected);
+        e.u64(m.ckpts_invalidated);
+        e.u64(m.batches);
+        e.u64(m.batched_requests);
+        e.u64(m.retrains_coalesced);
+        e.u64(m.latency.len() as u64);
+        for l in &m.latency {
+            e.u32(l.user);
+            e.u32(l.round);
+            e.u64(l.queued_ticks);
+            e.bool(l.slo_met);
+        }
+        e.u64(m.accuracy_by_round.len() as u64);
+        for a in &m.accuracy_by_round {
+            match a {
+                None => e.bool(false),
+                Some(v) => {
+                    e.bool(true);
+                    e.f64(*v);
+                }
+            }
+        }
+        e.buf
+    }
+
+    /// Deserialize a snapshot payload.
+    pub fn decode(bytes: &[u8], dedup: &mut PayloadDedup) -> DecodeResult<StateImage> {
+        let mut d = Dec::new(bytes);
+        let now_tick = d.u64()?;
+        let head_deferral_logged = d.bool()?;
+
+        let nq = d.count()?;
+        let mut queue = Vec::with_capacity(nq.min(1 << 12));
+        for _ in 0..nq {
+            let user = d.u32()?;
+            let round = d.u32()?;
+            let arrival_tick = d.u64()?;
+            let np = d.count()?;
+            let mut parts = Vec::with_capacity(np.min(1 << 12));
+            for _ in 0..np {
+                parts.push((d.u64()?, d.u64()?));
+            }
+            queue.push(ReqRecord { user, round, arrival_tick, parts });
+        }
+
+        let carryover = decode_carryover(&mut d)?;
+
+        let battery = if d.bool()? {
+            Some(BatteryImage {
+                capacity_j: d.f64()?,
+                charge_j: d.f64()?,
+                harvest_watts: d.f64()?,
+                brownouts: d.u64()?,
+            })
+        } else {
+            None
+        };
+
+        let ns = d.count()?;
+        let mut svc_log = Vec::with_capacity(ns.min(1 << 14));
+        for _ in 0..ns {
+            svc_log.push(SvcReportRec {
+                user: d.u32()?,
+                round: d.u32()?,
+                rsn: d.u64()?,
+                lineages_retrained: d.u64()?,
+                est_seconds: d.f64()?,
+                est_joules: d.f64()?,
+                deferred: d.bool()?,
+            });
+        }
+        let nb = d.count()?;
+        let mut batch_log = Vec::with_capacity(nb.min(1 << 14));
+        for _ in 0..nb {
+            batch_log.push(BatchReportRec {
+                requests: d.u64()?,
+                rsn: d.u64()?,
+                lineages_retrained: d.u64()?,
+                retrains_coalesced: d.u64()?,
+                oldest_queued_ticks: d.u64()?,
+                est_seconds: d.f64()?,
+                est_joules: d.f64()?,
+                deferred: d.bool()?,
+            });
+        }
+
+        let round = d.u32()?;
+        let nr = d.count()?;
+        let mut rounds = Vec::with_capacity(nr.min(1 << 12));
+        for _ in 0..nr {
+            let r = d.u32()?;
+            let np = d.count()?;
+            let mut placements = Vec::with_capacity(np.min(1 << 12));
+            for _ in 0..np {
+                placements.push(PlacementRecord {
+                    block: d.u64()?,
+                    user: d.u32()?,
+                    shard: d.u64()?,
+                    samples: d.u64()?,
+                });
+            }
+            rounds.push((r, placements));
+        }
+        let partitioner_state = d.words()?;
+
+        let mode_tag = d.u8()?;
+        let mode_value = d.u64()?;
+        let next_id = d.u64()?;
+        let stats = (d.u64()?, d.u64()?, d.u64()?, d.u64()?);
+        let nslots = d.count()?;
+        let mut slots = Vec::with_capacity(nslots.min(1 << 14));
+        for _ in 0..nslots {
+            if d.bool()? {
+                let id = d.u64()?;
+                let lineage = d.u64()?;
+                let round = d.u32()?;
+                let covered = d.u32()?;
+                let size_bytes = d.u64()?;
+                let payload =
+                    if d.bool()? { Some(decode_payload(&mut d, dedup)?) } else { None };
+                slots.push(Some(SlotCkpt { id, lineage, round, covered, size_bytes, payload }));
+            } else {
+                slots.push(None);
+            }
+        }
+        let policy_state = d.words()?;
+        let store = StoreImage { mode_tag, mode_value, next_id, stats, slots, policy_state };
+
+        let rsn_by_round = d.words()?;
+        let requests_by_round = d.words()?;
+        let warm_retrains = d.u64()?;
+        let scratch_retrains = d.u64()?;
+        let lineages_retrained = d.u64()?;
+        let energy_joules = d.f64()?;
+        let prunes = d.u64()?;
+        let ckpts_stored = d.u64()?;
+        let ckpts_replaced = d.u64()?;
+        let ckpts_rejected = d.u64()?;
+        let ckpts_invalidated = d.u64()?;
+        let batches = d.u64()?;
+        let batched_requests = d.u64()?;
+        let retrains_coalesced = d.u64()?;
+        let nl = d.count()?;
+        let mut latency = Vec::with_capacity(nl.min(1 << 14));
+        for _ in 0..nl {
+            latency.push(LatencyRecord {
+                user: d.u32()?,
+                round: d.u32()?,
+                queued_ticks: d.u64()?,
+                slo_met: d.bool()?,
+            });
+        }
+        let na = d.count()?;
+        let mut accuracy_by_round = Vec::with_capacity(na.min(1 << 12));
+        for _ in 0..na {
+            accuracy_by_round.push(if d.bool()? { Some(d.f64()?) } else { None });
+        }
+        d.finished()?;
+
+        Ok(StateImage {
+            now_tick,
+            head_deferral_logged,
+            queue,
+            carryover,
+            battery,
+            svc_log,
+            batch_log,
+            round,
+            rounds,
+            partitioner_state,
+            store,
+            metrics: MetricsImage {
+                rsn_by_round,
+                requests_by_round,
+                warm_retrains,
+                scratch_retrains,
+                lineages_retrained,
+                energy_joules,
+                prunes,
+                ckpts_stored,
+                ckpts_replaced,
+                ckpts_rejected,
+                ckpts_invalidated,
+                batches,
+                batched_requests,
+                retrains_coalesced,
+                latency,
+                accuracy_by_round,
+            },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::codec::{CodecMode, TensorCodec};
+    use crate::runtime::HostTensor;
+
+    fn sample_image() -> StateImage {
+        StateImage {
+            now_tick: 42,
+            head_deferral_logged: true,
+            queue: vec![ReqRecord {
+                user: 7,
+                round: 3,
+                arrival_tick: 40,
+                parts: vec![(11, 25), (12, 4)],
+            }],
+            carryover: Some((
+                PlanRec { lineages: vec![(2, vec![0, 3], 2)], requests: 2 },
+                vec![MetaRec { user: 9, round: 2, arrival_tick: 39 }],
+            )),
+            battery: Some(BatteryImage {
+                capacity_j: 72_000.0,
+                charge_j: 1234.5,
+                harvest_watts: 4.0,
+                brownouts: 3,
+            }),
+            svc_log: vec![SvcReportRec {
+                user: 1,
+                round: 1,
+                rsn: 100,
+                lineages_retrained: 1,
+                est_seconds: 2.5,
+                est_joules: 37.5,
+                deferred: false,
+            }],
+            batch_log: vec![BatchReportRec {
+                requests: 4,
+                rsn: 900,
+                lineages_retrained: 2,
+                retrains_coalesced: 3,
+                oldest_queued_ticks: 5,
+                est_seconds: 20.0,
+                est_joules: 300.0,
+                deferred: false,
+            }],
+            round: 4,
+            rounds: vec![
+                (1, vec![PlacementRecord { block: 0, user: 1, shard: 0, samples: 90 }]),
+                (
+                    2,
+                    vec![
+                        PlacementRecord { block: 1, user: 2, shard: 1, samples: 50 },
+                        PlacementRecord { block: 2, user: 1, shard: 0, samples: 0 },
+                    ],
+                ),
+            ],
+            partitioner_state: vec![1, 2, 3],
+            store: StoreImage {
+                mode_tag: 1,
+                mode_value: 4096,
+                next_id: 9,
+                stats: (8, 2, 1, 3),
+                slots: vec![
+                    Some(SlotCkpt {
+                        id: 5,
+                        lineage: 0,
+                        round: 3,
+                        covered: 3,
+                        size_bytes: 700,
+                        payload: None,
+                    }),
+                    None,
+                    Some(SlotCkpt {
+                        id: 8,
+                        lineage: 1,
+                        round: 4,
+                        covered: 4,
+                        size_bytes: 650,
+                        payload: None,
+                    }),
+                ],
+                policy_state: vec![4, 5, 6, 7, 8],
+            },
+            metrics: MetricsImage {
+                rsn_by_round: vec![0, 100, 900, 0],
+                requests_by_round: vec![0, 1, 4, 0],
+                warm_retrains: 3,
+                scratch_retrains: 1,
+                lineages_retrained: 3,
+                energy_joules: 412.75,
+                prunes: 16,
+                ckpts_stored: 8,
+                ckpts_replaced: 2,
+                ckpts_rejected: 1,
+                ckpts_invalidated: 3,
+                batches: 2,
+                batched_requests: 5,
+                retrains_coalesced: 3,
+                latency: vec![LatencyRecord { user: 1, round: 1, queued_ticks: 0, slo_met: true }],
+                accuracy_by_round: vec![None, Some(0.71), None, None],
+            },
+        }
+    }
+
+    #[test]
+    fn image_roundtrips_without_spill() {
+        let img = sample_image();
+        let bytes = img.encode(false);
+        let mut dedup = PayloadDedup::new();
+        let got = StateImage::decode(&bytes, &mut dedup).expect("decode");
+        assert_eq!(got, img);
+    }
+
+    #[test]
+    fn image_roundtrips_with_spilled_payloads() {
+        let codec = TensorCodec::new(CodecMode::Sparse);
+        let tensors = vec![HostTensor::from_fn(&[40], |i| if i % 3 == 0 { i as f32 } else { 0.0 })];
+        let payload = Arc::new(codec.encode(&tensors, None));
+        let mut img = sample_image();
+        img.store.slots[0].as_mut().unwrap().payload = Some(payload.clone());
+        img.store.slots[0].as_mut().unwrap().size_bytes = payload.size_bytes();
+
+        let bytes = img.encode(true);
+        let mut dedup = PayloadDedup::new();
+        let got = StateImage::decode(&bytes, &mut dedup).expect("decode");
+        let got_payload =
+            got.store.slots[0].as_ref().unwrap().payload.as_ref().expect("spilled");
+        assert_eq!(got_payload.decode(), tensors, "payload bit-exact");
+        assert_eq!(got_payload.uid(), payload.uid());
+        assert_eq!(got, img);
+
+        // Without spill, payloads are dropped but sizes survive.
+        let lean = StateImage::decode(&img.encode(false), &mut PayloadDedup::new()).unwrap();
+        assert!(lean.store.slots[0].as_ref().unwrap().payload.is_none());
+        assert_eq!(
+            lean.store.slots[0].as_ref().unwrap().size_bytes,
+            payload.size_bytes()
+        );
+    }
+
+    #[test]
+    fn truncated_image_fails_loudly() {
+        let bytes = sample_image().encode(false);
+        for cut in [0, 1, 8, bytes.len() / 2, bytes.len() - 1] {
+            assert!(
+                StateImage::decode(&bytes[..cut], &mut PayloadDedup::new()).is_err(),
+                "cut {cut} must not decode"
+            );
+        }
+        let mut extra = bytes.clone();
+        extra.push(0);
+        assert!(StateImage::decode(&extra, &mut PayloadDedup::new()).is_err());
+    }
+}

@@ -30,6 +30,17 @@ impl Rng {
         Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9e3779b97f4a7c15))
     }
 
+    /// The generator's raw state words (durability snapshots).
+    pub fn state(&self) -> [u64; 4] {
+        self.s
+    }
+
+    /// Rebuild a generator from [`Rng::state`] so the stream continues
+    /// exactly where it left off (crash recovery of stateful components).
+    pub fn from_state(s: [u64; 4]) -> Rng {
+        Rng { s }
+    }
+
     /// Next raw 64 bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);

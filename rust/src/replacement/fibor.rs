@@ -97,6 +97,20 @@ impl ReplacementPolicy for FiboR {
     fn reset(&mut self) {
         *self = FiboR::new();
     }
+
+    fn persist_state(&self) -> Vec<u64> {
+        vec![self.i_replace as u64, self.k, self.fa, self.fb, self.m as u64]
+    }
+
+    fn restore_state(&mut self, state: &[u64]) {
+        if let [i_replace, k, fa, fb, m] = *state {
+            self.i_replace = i_replace as usize;
+            self.k = k;
+            self.fa = fa;
+            self.fb = fb;
+            self.m = m as usize;
+        }
+    }
 }
 
 #[cfg(test)]

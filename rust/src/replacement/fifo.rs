@@ -37,6 +37,16 @@ impl ReplacementPolicy for Fifo {
     fn reset(&mut self) {
         self.next = 0;
     }
+
+    fn persist_state(&self) -> Vec<u64> {
+        vec![self.next as u64]
+    }
+
+    fn restore_state(&mut self, state: &[u64]) {
+        if let [next] = *state {
+            self.next = next as usize;
+        }
+    }
 }
 
 #[cfg(test)]

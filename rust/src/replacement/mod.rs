@@ -42,6 +42,19 @@ pub trait ReplacementPolicy: Send + Sync {
 
     /// Reset internal counters (new run).
     fn reset(&mut self);
+
+    /// Internal counters as raw words, for durability snapshots. Stateless
+    /// policies return an empty vec. Paired with
+    /// [`ReplacementPolicy::restore_state`]: after a crash, restoring the
+    /// saved words must make the victim stream continue exactly where the
+    /// pre-crash run left off.
+    fn persist_state(&self) -> Vec<u64> {
+        Vec::new()
+    }
+
+    /// Restore counters saved by [`ReplacementPolicy::persist_state`].
+    /// Must accept the empty vec (fresh state) and its own output.
+    fn restore_state(&mut self, _state: &[u64]) {}
 }
 
 /// Construct a policy by name (CLI / config use).
@@ -65,6 +78,30 @@ mod tests {
             assert!(by_name(n, 1).is_some(), "{n}");
         }
         assert!(by_name("lru", 1).is_none());
+    }
+
+    /// Saving mid-stream and restoring into a fresh policy must continue
+    /// the exact victim sequence — the property crash recovery relies on.
+    #[test]
+    fn persist_state_continues_victim_stream() {
+        for n in ["fibor", "fifo", "random", "none"] {
+            let mut live = by_name(n, 9).unwrap();
+            for _ in 0..13 {
+                let _ = live.victim(7);
+            }
+            let saved = live.persist_state();
+            let mut recovered = by_name(n, 9).unwrap();
+            recovered.restore_state(&saved);
+            for step in 0..50 {
+                assert_eq!(
+                    live.victim(7),
+                    recovered.victim(7),
+                    "{n} diverged at step {step}"
+                );
+            }
+            // Restoring the empty vec (fresh state) is a no-op.
+            recovered.restore_state(&[]);
+        }
     }
 
     #[test]

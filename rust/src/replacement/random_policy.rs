@@ -28,6 +28,18 @@ impl ReplacementPolicy for RandomReplace {
     fn reset(&mut self) {
         self.rng = Rng::new(self.seed);
     }
+
+    fn persist_state(&self) -> Vec<u64> {
+        let s = self.rng.state();
+        vec![s[0], s[1], s[2], s[3], self.seed]
+    }
+
+    fn restore_state(&mut self, state: &[u64]) {
+        if let [a, b, c, d, seed] = *state {
+            self.rng = Rng::from_state([a, b, c, d]);
+            self.seed = seed;
+        }
+    }
 }
 
 #[cfg(test)]

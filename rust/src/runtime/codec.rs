@@ -41,9 +41,21 @@
 //! [`CodecMode::Sparse`], which has no such retention.
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::runtime::tensor::HostTensor;
+
+/// Process-wide payload identity source. Every [`EncodedParams`] gets a
+/// unique id at encode time; the durability layer serializes it so
+/// recovery can re-establish `Arc` sharing across a spilled delta chain
+/// (two checkpoints that shared a parent payload in memory share it again
+/// after replay — which keeps identity-based byte accounting stable).
+static NEXT_PAYLOAD_UID: AtomicU64 = AtomicU64::new(1);
+
+fn fresh_uid() -> u64 {
+    NEXT_PAYLOAD_UID.fetch_add(1, Ordering::Relaxed)
+}
 
 /// Fixed bytes charged per encoded payload (tensor count, parent link,
 /// chain depth).
@@ -176,7 +188,7 @@ impl EncodedTensor {
 }
 
 /// A checkpoint's full encoded parameter payload.
-#[derive(Clone, Debug, PartialEq)]
+#[derive(Clone, Debug)]
 pub struct EncodedParams {
     pub tensors: Vec<EncodedTensor>,
     /// Delta base the `Delta` blocks diff against; `None` for
@@ -184,6 +196,18 @@ pub struct EncodedParams {
     parent: Option<Arc<EncodedParams>>,
     /// Length of the parent chain under this payload (0 = self-contained).
     depth: u32,
+    /// Process-unique payload identity (see [`NEXT_PAYLOAD_UID`]).
+    uid: u64,
+}
+
+/// Payload equality is structural; the identity `uid` is deliberately
+/// excluded (a recovered payload equals the payload it was spilled from).
+impl PartialEq for EncodedParams {
+    fn eq(&self, other: &Self) -> bool {
+        self.tensors == other.tensors
+            && self.depth == other.depth
+            && self.parent == other.parent
+    }
 }
 
 impl EncodedParams {
@@ -213,6 +237,32 @@ impl EncodedParams {
         self.parent.is_some()
     }
 
+    /// Process-unique payload identity (stable across checkpoint spill +
+    /// recovery, so identity-keyed accounting replays exactly).
+    pub fn uid(&self) -> u64 {
+        self.uid
+    }
+
+    /// The pinned delta base, if any (chain walking: spill serialization
+    /// and pinned-parent byte accounting).
+    pub fn parent(&self) -> Option<&Arc<EncodedParams>> {
+        self.parent.as_ref()
+    }
+
+    /// Rebuild a payload from serialized parts (checkpoint spill
+    /// recovery). `uid` is the payload's original identity; the global uid
+    /// counter is bumped past it so payloads encoded after recovery can
+    /// never collide with recovered ones.
+    pub fn from_parts(
+        tensors: Vec<EncodedTensor>,
+        parent: Option<Arc<EncodedParams>>,
+        uid: u64,
+    ) -> EncodedParams {
+        NEXT_PAYLOAD_UID.fetch_max(uid.saturating_add(1), Ordering::Relaxed);
+        let depth = parent.as_ref().map_or(0, |p| p.depth + 1);
+        EncodedParams { tensors, parent, depth, uid }
+    }
+
     /// Decode the full parameter set (resolves the delta chain).
     pub fn decode(&self) -> Vec<HostTensor> {
         let parent = self.parent.as_ref().map(|p| p.decode());
@@ -222,6 +272,24 @@ impl EncodedParams {
             .map(|(i, t)| t.decode(parent.as_ref().and_then(|ps| ps.get(i))))
             .collect()
     }
+}
+
+/// A payload plus every parent its delta chain pins via `Arc`, child
+/// first. Shared by the store's identity-keyed byte accounting and the
+/// durability layer's payload spill — one walk, one semantics. Bounded by
+/// [`MAX_DELTA_DEPTH`], so it is O(1) per payload.
+pub fn payload_chain(p: &Arc<EncodedParams>) -> Vec<Arc<EncodedParams>> {
+    let mut cur = p.clone();
+    let mut out = vec![cur.clone()];
+    loop {
+        let next = match cur.parent() {
+            Some(n) => n.clone(),
+            None => break,
+        };
+        out.push(next.clone());
+        cur = next;
+    }
+    out
 }
 
 /// Which representations the codec may pick.
@@ -293,9 +361,9 @@ impl TensorCodec {
         }
         if used_delta {
             let p = parent.expect("delta blocks imply a parent").clone();
-            EncodedParams { tensors, depth: p.depth + 1, parent: Some(p) }
+            EncodedParams { tensors, depth: p.depth + 1, parent: Some(p), uid: fresh_uid() }
         } else {
-            EncodedParams { tensors, parent: None, depth: 0 }
+            EncodedParams { tensors, parent: None, depth: 0, uid: fresh_uid() }
         }
     }
 
@@ -572,6 +640,34 @@ mod tests {
         let d = cache.decoded(9, &enc);
         assert!(!Arc::ptr_eq(&a, &d), "released entries must re-decode");
         assert_eq!((cache.decodes, cache.hits), (3, 1));
+    }
+
+    #[test]
+    fn uids_are_unique_and_from_parts_preserves_structure() {
+        let codec = TensorCodec::new(CodecMode::Delta);
+        let base = vec![HostTensor::from_fn(&[64], |i| (i as f32).sin())];
+        let parent = Arc::new(codec.encode(&base, None));
+        let mut child = base.clone();
+        child[0].data[5] = 9.0;
+        let enc = codec.encode(&child, Some(&parent));
+        assert_ne!(enc.uid(), parent.uid(), "uids must be unique");
+        assert!(Arc::ptr_eq(enc.parent().expect("delta has parent"), &parent));
+        // Rebuild from parts (what checkpoint-spill recovery does): same
+        // structure, same uid, equal payload, bit-exact decode.
+        let rebuilt = EncodedParams::from_parts(
+            enc.tensors.clone(),
+            Some(parent.clone()),
+            enc.uid(),
+        );
+        assert_eq!(rebuilt, enc, "structural equality ignores nothing else");
+        assert_eq!(rebuilt.uid(), enc.uid());
+        assert_eq!(rebuilt.delta_depth(), enc.delta_depth());
+        assert_eq!(rebuilt.decode(), child);
+        // The uid floor was bumped: fresh encodes stay unique even after
+        // restoring a payload with a large recovered uid.
+        let restored = EncodedParams::from_parts(enc.tensors.clone(), None, 1 << 40);
+        let fresh = codec.encode(&base, None);
+        assert!(fresh.uid() > restored.uid(), "uid floor must advance");
     }
 
     #[test]

@@ -1,4 +1,6 @@
-//! In-repo property-testing helper (proptest is unavailable offline).
+//! In-repo property-testing helper (proptest is unavailable offline),
+//! plus [`FailpointFs`] — the deterministic kill-point crash injector for
+//! the durability subsystem.
 //!
 //! `forall(seed, cases, gen, prop)` draws `cases` random inputs from `gen`
 //! and checks `prop`; on failure it retries with progressively simpler
@@ -6,7 +8,90 @@
 //! with the failing seed + a Debug dump so the case is reproducible with
 //! `forall(seed, ..)`.
 
+use std::sync::{Arc, Mutex};
+
+use crate::persist::{MemFs, PersistFs};
 use crate::prng::Rng;
+
+/// A [`PersistFs`] that simulates power loss after a byte budget: once the
+/// budget is spent, nothing else ever reaches "disk". Appends are
+/// truncated at the exact budget boundary (a torn frame), atomic `write`s
+/// happen entirely or not at all, and removals stop — precisely the
+/// failure model a crash-consistent log must absorb. The kill-point
+/// harness in `tests/durability.rs` arms the budget at every byte offset
+/// of a recorded run and asserts recovery always lands on a frame
+/// boundary's state.
+#[derive(Clone)]
+pub struct FailpointFs {
+    inner: MemFs,
+    /// Remaining write bytes before the simulated power loss; `None` = no
+    /// failpoint armed (writes unrestricted).
+    budget: Arc<Mutex<Option<u64>>>,
+}
+
+impl FailpointFs {
+    /// Wrap `inner` with no failpoint armed.
+    pub fn new(inner: MemFs) -> FailpointFs {
+        FailpointFs { inner, budget: Arc::new(Mutex::new(None)) }
+    }
+
+    /// Arm (or disarm with `None`) the byte budget. Clones share it.
+    pub fn set_budget(&self, bytes: Option<u64>) {
+        *self.budget.lock().unwrap() = bytes;
+    }
+
+    /// Remaining budget, if armed.
+    pub fn remaining(&self) -> Option<u64> {
+        *self.budget.lock().unwrap()
+    }
+
+    /// The backing in-memory filesystem (what "survives the crash").
+    pub fn inner(&self) -> &MemFs {
+        &self.inner
+    }
+
+    /// Consume up to `want` bytes; returns how many may still be written.
+    fn consume(&self, want: u64) -> u64 {
+        let mut b = self.budget.lock().unwrap();
+        match *b {
+            None => want,
+            Some(left) => {
+                let grant = left.min(want);
+                *b = Some(left - grant);
+                grant
+            }
+        }
+    }
+}
+
+impl PersistFs for FailpointFs {
+    fn read(&self, name: &str) -> Option<Vec<u8>> {
+        self.inner.file(name)
+    }
+
+    fn write(&mut self, name: &str, bytes: &[u8]) -> std::io::Result<()> {
+        // Atomic replace: all-or-nothing under the budget.
+        let granted = self.consume(bytes.len() as u64);
+        if granted < bytes.len() as u64 {
+            return Ok(()); // power died before the rename committed
+        }
+        self.inner.write(name, bytes)
+    }
+
+    fn append(&mut self, name: &str, bytes: &[u8]) -> std::io::Result<()> {
+        let granted = self.consume(bytes.len() as u64) as usize;
+        if granted > 0 {
+            self.inner.append(name, &bytes[..granted])?;
+        }
+        Ok(())
+    }
+
+    fn remove(&mut self, name: &str) {
+        if self.consume(1) == 1 {
+            self.inner.remove(name);
+        }
+    }
+}
 
 /// Run a property over `cases` generated inputs.
 ///
@@ -63,6 +148,37 @@ pub fn forall_prefixes<E: std::fmt::Debug, S>(
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn failpoint_truncates_appends_at_the_budget() {
+        let mem = MemFs::new();
+        let mut fp = FailpointFs::new(mem.clone());
+        fp.append("w.log", b"abcdef").unwrap();
+        assert_eq!(mem.file("w.log").unwrap(), b"abcdef");
+
+        fp.set_budget(Some(4));
+        fp.append("w.log", b"ghijkl").unwrap(); // only 4 bytes land
+        assert_eq!(mem.file("w.log").unwrap(), b"abcdefghij");
+        assert_eq!(fp.remaining(), Some(0));
+        fp.append("w.log", b"mn").unwrap(); // nothing lands
+        assert_eq!(mem.file("w.log").unwrap(), b"abcdefghij");
+
+        // Atomic writes are all-or-nothing: with 0 budget the replace
+        // never happens; with enough budget it does.
+        fp.write("m.json", b"{}").unwrap();
+        assert!(mem.file("m.json").is_none());
+        fp.set_budget(Some(2));
+        fp.write("m.json", b"{}").unwrap();
+        assert_eq!(mem.file("m.json").unwrap(), b"{}");
+        // Removal after death is impossible.
+        fp.remove("m.json");
+        assert!(mem.file("m.json").is_some());
+        fp.set_budget(None);
+        fp.remove("m.json");
+        assert!(mem.file("m.json").is_none());
+        assert!(fp.read("w.log").is_some());
+        assert!(fp.inner().file("w.log").is_some());
+    }
 
     #[test]
     fn passes_valid_property() {

@@ -31,12 +31,21 @@ use std::collections::VecDeque;
 use anyhow::Result;
 
 use crate::coordinator::engine::Engine;
-use crate::data::dataset::EdgePopulation;
+use crate::data::dataset::{BlockId, EdgePopulation, UserId};
 use crate::data::trace::UnlearnRequest;
 use crate::energy::EnergyModel;
-use crate::metrics::LatencyReceipt;
+use crate::metrics::{LatencyReceipt, RunMetrics};
+use crate::persist::event::{
+    BatchReportRec, BatteryPost, Event, LatencyRecord, MetaRec, MetricsPost,
+    PlacementRecord, PlanRec, ReqRecord, RoundRec, ServeRec, SvcReportRec, WindowRec,
+};
+use crate::persist::log::EventLog;
+use crate::persist::recovery::{self, RecoveryReport};
+use crate::persist::snapshot::{BatteryImage, MetricsImage, StateImage};
+use crate::persist::{Durability, DurabilityMode};
 use crate::sim::Battery;
-use crate::unlearning::batch::{BatchPlan, BatchPlanner};
+use crate::unlearning::batch::{BatchPlan, BatchPlanner, LineagePlan};
+use crate::util::Json;
 
 /// Receipt for one served unlearning request.
 #[derive(Clone, Debug, PartialEq)]
@@ -81,6 +90,19 @@ struct ReqMeta {
     arrival_tick: u64,
 }
 
+/// Attached durability state: the armed write-ahead log plus the mode and
+/// auto-compaction cadence.
+struct Journal {
+    log: EventLog,
+    mode: DurabilityMode,
+    compact_every: u64,
+    /// First append/compaction error. Durable emission happens inside
+    /// infallible entry points (`submit`), so the error is stashed here
+    /// and surfaced by the next fallible call — nothing is silently
+    /// un-durable.
+    err: Option<String>,
+}
+
 /// Battery admission verdict for one window's merged plan.
 enum Admission {
     /// The whole plan is affordable; reserve this much.
@@ -89,6 +111,124 @@ enum Admission {
     Split { defer: BatchPlan, reserve_j: f64 },
     /// Not even the first lineage is affordable right now.
     Starved { probe_j: f64 },
+}
+
+fn req_rec_of(req: &UnlearnRequest) -> ReqRecord {
+    ReqRecord {
+        user: req.user.0,
+        round: req.round,
+        arrival_tick: req.arrival_tick,
+        parts: req.parts.iter().map(|(b, n)| (b.0, *n)).collect(),
+    }
+}
+
+fn req_from_rec(rec: &ReqRecord) -> UnlearnRequest {
+    UnlearnRequest {
+        round: rec.round,
+        user: UserId(rec.user),
+        arrival_tick: rec.arrival_tick,
+        parts: rec.parts.iter().map(|(b, n)| (BlockId(*b), *n)).collect(),
+    }
+}
+
+fn svc_rec_of(r: &ServiceReport) -> SvcReportRec {
+    SvcReportRec {
+        user: r.user,
+        round: r.round,
+        rsn: r.rsn,
+        lineages_retrained: r.lineages_retrained as u64,
+        est_seconds: r.est_seconds,
+        est_joules: r.est_joules,
+        deferred: r.deferred,
+    }
+}
+
+fn svc_from_rec(r: &SvcReportRec) -> ServiceReport {
+    ServiceReport {
+        user: r.user,
+        round: r.round,
+        rsn: r.rsn,
+        lineages_retrained: r.lineages_retrained as usize,
+        est_seconds: r.est_seconds,
+        est_joules: r.est_joules,
+        deferred: r.deferred,
+    }
+}
+
+fn batch_rec_of(r: &BatchReport) -> BatchReportRec {
+    BatchReportRec {
+        requests: r.requests as u64,
+        rsn: r.rsn,
+        lineages_retrained: r.lineages_retrained as u64,
+        retrains_coalesced: r.retrains_coalesced,
+        oldest_queued_ticks: r.oldest_queued_ticks,
+        est_seconds: r.est_seconds,
+        est_joules: r.est_joules,
+        deferred: r.deferred,
+    }
+}
+
+fn batch_from_rec(r: &BatchReportRec) -> BatchReport {
+    BatchReport {
+        requests: r.requests as usize,
+        rsn: r.rsn,
+        lineages_retrained: r.lineages_retrained as usize,
+        retrains_coalesced: r.retrains_coalesced,
+        oldest_queued_ticks: r.oldest_queued_ticks,
+        est_seconds: r.est_seconds,
+        est_joules: r.est_joules,
+        deferred: r.deferred,
+    }
+}
+
+fn carryover_rec_of(c: &Option<(BatchPlan, Vec<ReqMeta>)>) -> Option<(PlanRec, Vec<MetaRec>)> {
+    c.as_ref().map(|(plan, metas)| {
+        (
+            PlanRec {
+                lineages: plan
+                    .lineages
+                    .iter()
+                    .map(|lp| {
+                        (
+                            lp.lineage as u64,
+                            lp.segments.iter().map(|s| *s as u64).collect(),
+                            lp.requests_touching as u64,
+                        )
+                    })
+                    .collect(),
+                requests: plan.requests as u64,
+            },
+            metas
+                .iter()
+                .map(|m| MetaRec { user: m.user, round: m.round, arrival_tick: m.arrival_tick })
+                .collect(),
+        )
+    })
+}
+
+fn carryover_from_rec(
+    c: &Option<(PlanRec, Vec<MetaRec>)>,
+) -> Option<(BatchPlan, Vec<ReqMeta>)> {
+    c.as_ref().map(|(plan, metas)| {
+        (
+            BatchPlan {
+                lineages: plan
+                    .lineages
+                    .iter()
+                    .map(|(l, segs, touching)| LineagePlan {
+                        lineage: *l as usize,
+                        segments: segs.iter().map(|s| *s as usize).collect(),
+                        requests_touching: *touching as usize,
+                    })
+                    .collect(),
+                requests: plan.requests as usize,
+            },
+            metas
+                .iter()
+                .map(|m| ReqMeta { user: m.user, round: m.round, arrival_tick: m.arrival_tick })
+                .collect(),
+        )
+    })
 }
 
 /// Queue-fronted unlearning service over an engine.
@@ -116,6 +256,10 @@ pub struct UnlearningService {
     pub log: Vec<ServiceReport>,
     /// Per-window receipts (batched drains).
     pub batch_log: Vec<BatchReport>,
+    /// Durability journal ([`UnlearningService::attach_durability`]);
+    /// `None` keeps every code path byte-identical to the in-memory
+    /// service.
+    journal: Option<Journal>,
 }
 
 impl UnlearningService {
@@ -133,6 +277,7 @@ impl UnlearningService {
             carryover: None,
             log: vec![],
             batch_log: vec![],
+            journal: None,
         }
     }
 
@@ -195,22 +340,68 @@ impl UnlearningService {
     /// ingestion advances it by one tick on its own).
     pub fn advance(&mut self, ticks: u64) {
         self.now_tick = self.now_tick.saturating_add(ticks);
+        self.emit(|_| Event::Advance { ticks });
     }
 
     /// Run one training round (new data arrival); advances the clock.
     pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
+        self.check_journal()?;
         self.now_tick = self.now_tick.saturating_add(1);
-        self.engine.run_round(pop)?;
+        let report = match self.engine.run_round(pop) {
+            Ok(r) => r,
+            Err(e) => {
+                // A trainer failure mid-round leaves state the journal
+                // cannot frame as one transition: drop the partial tape
+                // and poison the journal — the live state has diverged
+                // from the log, so continuing to ack writes would be a
+                // silent durability lie (recovery replays to the last
+                // committed event).
+                let _ = self.engine.take_tape();
+                self.poison_journal(&format!("engine error mid-round: {e:#}"));
+                return Err(e);
+            }
+        };
+        let accuracy = self
+            .engine
+            .metrics
+            .accuracy_by_round
+            .last()
+            .copied()
+            .flatten();
+        self.emit(|svc| {
+            Event::Round(Box::new(RoundRec {
+                round: report.round,
+                placements: report
+                    .placements
+                    .iter()
+                    .map(|(p, u)| PlacementRecord {
+                        block: p.block.0,
+                        user: u.0,
+                        shard: p.shard as u64,
+                        samples: p.samples,
+                    })
+                    .collect(),
+                store_ops: svc.engine.take_tape(),
+                accuracy,
+                metrics: svc.metrics_post(),
+                partitioner_state: svc.engine.partitioner_state(),
+                policy_state: svc.engine.store().policy_state(),
+            }))
+        });
         Ok(())
     }
 
     /// Enqueue a request (FCFS order preserved), stamping its arrival on
     /// the service clock — queueing-delay receipts and the deadline
-    /// planner both measure against this stamp.
+    /// planner both measure against this stamp. With durability attached
+    /// the acceptance is logged before this returns (log-before-ack); an
+    /// append failure is surfaced by the next fallible call.
     pub fn submit(&mut self, req: UnlearnRequest) {
         let mut req = req;
         req.arrival_tick = self.now_tick;
+        let rec = req_rec_of(&req);
         self.queue.push_back(req);
+        self.emit(|_| Event::Submit(rec));
     }
 
     /// Conservative energy pre-estimate for the first `w` queued requests:
@@ -244,6 +435,7 @@ impl UnlearningService {
     /// whose estimated energy exceeds the charge is deferred (stays at the
     /// queue head) until `harvest` restores enough charge.
     pub fn drain(&mut self) -> Result<usize> {
+        self.check_journal()?;
         // A plan carried over from a failed batched window must not be
         // stranded when the caller switches to FCFS drains: flush it
         // first (its samples are already removed from the lineages).
@@ -266,15 +458,38 @@ impl UnlearningService {
                     if let Some(b) = &mut self.battery {
                         let _ = b.draw(est_j_hint);
                     }
+                    self.log_deferral(req.user.0, req.round, est_j_hint);
+                    self.emit(|svc| {
+                        Event::Serve(Box::new(ServeRec {
+                            popped: false,
+                            store_ops: svc.engine.take_tape(),
+                            battery: svc.battery_post(),
+                            metrics: svc.metrics_post(),
+                            latency: None,
+                            report: svc_rec_of(svc.log.last().expect("deferral logged")),
+                            head_deferral_logged: true,
+                            policy_state: svc.engine.store().policy_state(),
+                        }))
+                    });
                 }
-                self.log_deferral(req.user.0, req.round, est_j_hint);
                 break; // FCFS: don't skip ahead of the deferred head.
             }
             if let Some(b) = &mut self.battery {
                 let drawn = b.draw(est_j_hint);
                 debug_assert!(drawn, "covered by the can_cover probe above");
             }
-            let outcome = self.engine.process_request(&req)?;
+            let outcome = match self.engine.process_request(&req) {
+                Ok(o) => o,
+                Err(e) => {
+                    // Partial trainer failure: the tape cannot frame this
+                    // as one clean transition — drop it and poison the
+                    // journal (live state has diverged from the log;
+                    // recovery replays to the last committed event).
+                    let _ = self.engine.take_tape();
+                    self.poison_journal(&format!("engine error mid-serve: {e:#}"));
+                    return Err(e);
+                }
+            };
             let est_seconds = self
                 .engine
                 .cfg
@@ -305,6 +520,27 @@ impl UnlearningService {
             });
             self.queue.pop_front();
             self.head_deferral_logged = false;
+            self.emit(|svc| {
+                let last = {
+                    let l = svc.engine.metrics.latency.last().expect("receipt just recorded");
+                    LatencyRecord {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    }
+                };
+                Event::Serve(Box::new(ServeRec {
+                    popped: true,
+                    store_ops: svc.engine.take_tape(),
+                    battery: svc.battery_post(),
+                    metrics: svc.metrics_post(),
+                    latency: Some(last),
+                    report: svc_rec_of(svc.log.last().expect("report just pushed")),
+                    head_deferral_logged: false,
+                    policy_state: svc.engine.store().policy_state(),
+                }))
+            });
             served += 1;
         }
         Ok(served)
@@ -330,6 +566,7 @@ impl UnlearningService {
     }
 
     fn drain_windows(&mut self, flush: bool) -> Result<usize> {
+        self.check_journal()?;
         let mut served = 0;
         loop {
             let oldest_age = self
@@ -408,6 +645,7 @@ impl UnlearningService {
     /// re-queued, since re-collecting them would remove additional,
     /// never-requested samples. Returns the number of requests served.
     fn execute_window(&mut self, window: Vec<UnlearnRequest>) -> Result<usize> {
+        let drained = window.len() as u64;
         let mut metas: Vec<ReqMeta> = Vec::with_capacity(window.len());
         if let Some((_, prev_metas)) = &self.carryover {
             // Carried-over requests arrived first; receipts keep order.
@@ -428,7 +666,8 @@ impl UnlearningService {
             Admission::Granted { reserve_j } => (reserve_j, None),
             Admission::Split { defer, reserve_j } => (reserve_j, Some(defer)),
             Admission::Starved { probe_j } => {
-                if !self.head_deferral_logged {
+                let fresh_episode = !self.head_deferral_logged;
+                if fresh_episode {
                     self.head_deferral_logged = true;
                     // Record the episode's brownout (the refused draw).
                     if let Some(b) = &mut self.battery {
@@ -446,6 +685,23 @@ impl UnlearningService {
                     });
                 }
                 self.carryover = Some((plan, metas));
+                self.emit(|svc| {
+                    Event::Window(Box::new(WindowRec {
+                        drained,
+                        store_ops: svc.engine.take_tape(),
+                        battery: svc.battery_post(),
+                        metrics: svc.metrics_post(),
+                        latency: vec![],
+                        report: if fresh_episode {
+                            Some(batch_rec_of(svc.batch_log.last().expect("just pushed")))
+                        } else {
+                            None
+                        },
+                        carryover: carryover_rec_of(&svc.carryover),
+                        head_deferral_logged: svc.head_deferral_logged,
+                        policy_state: svc.engine.store().policy_state(),
+                    }))
+                });
                 return Ok(0);
             }
         };
@@ -469,6 +725,21 @@ impl UnlearningService {
                     plan.merge(d);
                 }
                 self.carryover = Some((plan, metas));
+                // The partially executed plan's store mutations are real:
+                // frame them so recovery lands on this exact state.
+                self.emit(|svc| {
+                    Event::Window(Box::new(WindowRec {
+                        drained,
+                        store_ops: svc.engine.take_tape(),
+                        battery: svc.battery_post(),
+                        metrics: svc.metrics_post(),
+                        latency: vec![],
+                        report: None,
+                        carryover: carryover_rec_of(&svc.carryover),
+                        head_deferral_logged: svc.head_deferral_logged,
+                        policy_state: svc.engine.store().policy_state(),
+                    }))
+                });
                 return Err(e);
             }
         };
@@ -517,6 +788,29 @@ impl UnlearningService {
             deferred: false,
         });
         self.head_deferral_logged = false;
+        self.emit(|svc| {
+            let receipts = &svc.engine.metrics.latency;
+            let latency = receipts[receipts.len() - window_requests..]
+                .iter()
+                .map(|l| LatencyRecord {
+                    user: l.user,
+                    round: l.round,
+                    queued_ticks: l.queued_ticks,
+                    slo_met: l.slo_met,
+                })
+                .collect();
+            Event::Window(Box::new(WindowRec {
+                drained,
+                store_ops: svc.engine.take_tape(),
+                battery: svc.battery_post(),
+                metrics: svc.metrics_post(),
+                latency,
+                report: Some(batch_rec_of(svc.batch_log.last().expect("just pushed"))),
+                carryover: carryover_rec_of(&svc.carryover),
+                head_deferral_logged: false,
+                policy_state: svc.engine.store().policy_state(),
+            }))
+        });
         Ok(window_requests)
     }
 
@@ -524,7 +818,509 @@ impl UnlearningService {
     pub fn harvest(&mut self, secs: f64) {
         if let Some(b) = &mut self.battery {
             b.harvest(secs);
+            let battery = Some(BatteryPost { charge_j: b.charge_j, brownouts: b.brownouts });
+            self.emit(|_| Event::Harvest { battery });
         }
+    }
+
+    // -- Durability --------------------------------------------------------
+
+    /// Attach a durability journal, first recovering whatever state the
+    /// backing filesystem holds (snapshot + write-ahead log tail, torn
+    /// writes repaired). Call this on a **freshly built** service — same
+    /// system variant, batch planner, and battery profile as the crashed
+    /// instance — before driving it; recovery then reconstructs the
+    /// pre-crash state receipt-identically and arms log-before-ack
+    /// journaling for everything that follows.
+    pub fn attach_durability(&mut self, d: Durability) -> Result<RecoveryReport> {
+        if d.mode == DurabilityMode::Off {
+            return Ok(RecoveryReport::default());
+        }
+        let (log, report) = recovery::recover(self, d.fs)
+            .map_err(|e| anyhow::anyhow!("durability recovery: {e}"))?;
+        self.engine.set_taping(true);
+        self.journal =
+            Some(Journal { log, mode: d.mode, compact_every: d.compact_every, err: None });
+        Ok(report)
+    }
+
+    /// The attached durability mode ([`DurabilityMode::Off`] when none).
+    pub fn durability_mode(&self) -> DurabilityMode {
+        self.journal.as_ref().map_or(DurabilityMode::Off, |j| j.mode)
+    }
+
+    /// First journal append/compaction failure, if any (surfaced as an
+    /// error by the next fallible entry point).
+    pub fn durability_error(&self) -> Option<&str> {
+        self.journal.as_ref().and_then(|j| j.err.as_deref())
+    }
+
+    /// Events currently in the log tail (0 without a journal).
+    pub fn journal_events(&self) -> u64 {
+        self.journal.as_ref().map_or(0, |j| j.log.events_in_log())
+    }
+
+    /// Write a snapshot of the full service state and truncate the log
+    /// prefix it materializes (the compactor; also triggered automatically
+    /// every `compact_every` events). A failed compaction poisons the
+    /// journal: the in-memory log position can no longer be trusted to
+    /// match the committed manifest, so further acks would lie.
+    pub fn compact_now(&mut self) -> Result<()> {
+        let Some(mut j) = self.journal.take() else {
+            return Ok(());
+        };
+        if let Some(e) = &j.err {
+            let msg = e.clone();
+            self.journal = Some(j);
+            return Err(anyhow::anyhow!("durability journal failed earlier: {msg}"));
+        }
+        let image = self.capture_image();
+        let bytes = image.encode(j.mode.spills());
+        let res = j.log.compact(&bytes);
+        if let Err(e) = &res {
+            j.err = Some(format!("compaction: {e}"));
+        }
+        self.journal = Some(j);
+        res.map_err(|e| anyhow::anyhow!("compaction: {e}"))
+    }
+
+    /// Record the first durability failure; everything after it is
+    /// refused (appends stop, fallible entry points error) — nothing is
+    /// silently un-durable.
+    fn poison_journal(&mut self, msg: &str) {
+        if let Some(j) = self.journal.as_mut() {
+            if j.err.is_none() {
+                j.err = Some(msg.to_string());
+            }
+        }
+    }
+
+    fn check_journal(&self) -> Result<()> {
+        match self.durability_error() {
+            Some(e) => Err(anyhow::anyhow!("durability journal failed earlier: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Build-and-append an event; the builder only runs when a journal is
+    /// attached, so `durability = off` pays nothing.
+    fn emit(&mut self, build: impl FnOnce(&mut Self) -> Event) {
+        match &self.journal {
+            // A poisoned journal must not keep appending: a failed append
+            // can leave a torn frame mid-file, and frames written after it
+            // would be invisible to recovery (scan stops at the tear) —
+            // acked-but-unrecoverable, the one thing the log must never do.
+            None => return,
+            Some(j) if j.err.is_some() => return,
+            Some(_) => {}
+        }
+        let ev = build(self);
+        self.append_event(ev);
+    }
+
+    fn append_event(&mut self, ev: Event) {
+        let due = {
+            let Some(j) = self.journal.as_mut() else { return };
+            let payload = ev.encode(j.log.next_seq(), j.mode.spills());
+            if let Err(e) = j.log.append_payload(&payload) {
+                if j.err.is_none() {
+                    j.err = Some(e.to_string());
+                }
+                return;
+            }
+            j.compact_every > 0 && j.log.events_in_log() >= j.compact_every
+        };
+        if due {
+            // compact_now stashes its own error into the journal.
+            let _ = self.compact_now();
+        }
+    }
+
+    /// Absolute post-transition metric record.
+    fn metrics_post(&self) -> MetricsPost {
+        let m = &self.engine.metrics;
+        MetricsPost {
+            warm_retrains: m.warm_retrains,
+            scratch_retrains: m.scratch_retrains,
+            lineages_retrained: m.lineages_retrained,
+            prunes: m.prunes,
+            energy_joules: m.energy_joules,
+            ckpts_stored: m.ckpts_stored,
+            ckpts_replaced: m.ckpts_replaced,
+            ckpts_rejected: m.ckpts_rejected,
+            ckpts_invalidated: m.ckpts_invalidated,
+            batches: m.batches,
+            batched_requests: m.batched_requests,
+            retrains_coalesced: m.retrains_coalesced,
+            round_slots: m.rsn_by_round.len() as u64,
+            rsn_last: m.rsn_by_round.last().copied().unwrap_or(0),
+            requests_last: m.requests_by_round.last().copied().unwrap_or(0),
+        }
+    }
+
+    fn battery_post(&self) -> Option<BatteryPost> {
+        self.battery
+            .as_ref()
+            .map(|b| BatteryPost { charge_j: b.charge_j, brownouts: b.brownouts })
+    }
+
+    fn apply_metrics_post(&mut self, p: &MetricsPost) {
+        let m = &mut self.engine.metrics;
+        m.warm_retrains = p.warm_retrains;
+        m.scratch_retrains = p.scratch_retrains;
+        m.lineages_retrained = p.lineages_retrained;
+        m.prunes = p.prunes;
+        m.energy_joules = p.energy_joules;
+        m.ckpts_stored = p.ckpts_stored;
+        m.ckpts_replaced = p.ckpts_replaced;
+        m.ckpts_rejected = p.ckpts_rejected;
+        m.ckpts_invalidated = p.ckpts_invalidated;
+        m.batches = p.batches;
+        m.batched_requests = p.batched_requests;
+        m.retrains_coalesced = p.retrains_coalesced;
+        while (m.rsn_by_round.len() as u64) < p.round_slots {
+            m.rsn_by_round.push(0);
+        }
+        while (m.requests_by_round.len() as u64) < p.round_slots {
+            m.requests_by_round.push(0);
+        }
+        if p.round_slots > 0 {
+            if let Some(last) = m.rsn_by_round.last_mut() {
+                *last = p.rsn_last;
+            }
+            if let Some(last) = m.requests_by_round.last_mut() {
+                *last = p.requests_last;
+            }
+        }
+    }
+
+    fn apply_battery_post(&mut self, post: &Option<BatteryPost>) {
+        if let (Some(b), Some(p)) = (self.battery.as_mut(), post) {
+            b.charge_j = p.charge_j;
+            b.brownouts = p.brownouts;
+        }
+    }
+
+    /// Replay one journaled transition (crash recovery). Mirrors exactly
+    /// what the live transition mutated: queue pops re-remove their own
+    /// samples through the real proportional-split code, store admissions
+    /// re-apply their recorded victim sets, scalars restore from absolute
+    /// post-values.
+    pub(crate) fn replay_event(&mut self, ev: &Event) {
+        match ev {
+            Event::Advance { ticks } => {
+                self.now_tick = self.now_tick.saturating_add(*ticks);
+            }
+            Event::Harvest { battery } => self.apply_battery_post(battery),
+            Event::Submit(rec) => self.queue.push_back(req_from_rec(rec)),
+            Event::Round(rec) => {
+                self.now_tick = self.now_tick.saturating_add(1);
+                self.engine.replay_round(rec);
+                self.apply_metrics_post(&rec.metrics);
+            }
+            Event::Serve(rec) => {
+                if rec.popped {
+                    if let Some(req) = self.queue.pop_front() {
+                        for (b, n) in &req.parts {
+                            self.engine.replay_remove(b.0, *n);
+                        }
+                    }
+                }
+                self.engine.replay_store_ops(&rec.store_ops);
+                self.apply_metrics_post(&rec.metrics);
+                if let Some(l) = &rec.latency {
+                    self.engine.metrics.record_latency(LatencyReceipt {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    });
+                }
+                self.log.push(svc_from_rec(&rec.report));
+                self.apply_battery_post(&rec.battery);
+                self.head_deferral_logged = rec.head_deferral_logged;
+                self.engine.store_mut().restore_policy_state(&rec.policy_state);
+            }
+            Event::Window(rec) => {
+                let n = (rec.drained as usize).min(self.queue.len());
+                let reqs: Vec<UnlearnRequest> = self.queue.drain(..n).collect();
+                for req in &reqs {
+                    for (b, cnt) in &req.parts {
+                        self.engine.replay_remove(b.0, *cnt);
+                    }
+                }
+                self.engine.replay_store_ops(&rec.store_ops);
+                self.apply_metrics_post(&rec.metrics);
+                for l in &rec.latency {
+                    self.engine.metrics.record_latency(LatencyReceipt {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    });
+                }
+                if let Some(b) = &rec.report {
+                    self.batch_log.push(batch_from_rec(b));
+                }
+                self.carryover = carryover_from_rec(&rec.carryover);
+                self.apply_battery_post(&rec.battery);
+                self.head_deferral_logged = rec.head_deferral_logged;
+                self.engine.store_mut().restore_policy_state(&rec.policy_state);
+            }
+        }
+    }
+
+    /// Materialize the full service state (the compactor's snapshot).
+    pub(crate) fn capture_image(&self) -> StateImage {
+        let m = &self.engine.metrics;
+        StateImage {
+            now_tick: self.now_tick,
+            head_deferral_logged: self.head_deferral_logged,
+            queue: self.queue.iter().map(req_rec_of).collect(),
+            carryover: carryover_rec_of(&self.carryover),
+            battery: self.battery.as_ref().map(|b| BatteryImage {
+                capacity_j: b.capacity_j,
+                charge_j: b.charge_j,
+                harvest_watts: b.harvest_watts,
+                brownouts: b.brownouts,
+            }),
+            svc_log: self.log.iter().map(svc_rec_of).collect(),
+            batch_log: self.batch_log.iter().map(batch_rec_of).collect(),
+            round: self.engine.round(),
+            rounds: self.engine.capture_rounds(),
+            partitioner_state: self.engine.partitioner_state(),
+            store: self.engine.capture_store_image(),
+            metrics: MetricsImage {
+                rsn_by_round: m.rsn_by_round.clone(),
+                requests_by_round: m.requests_by_round.clone(),
+                warm_retrains: m.warm_retrains,
+                scratch_retrains: m.scratch_retrains,
+                lineages_retrained: m.lineages_retrained,
+                energy_joules: m.energy_joules,
+                prunes: m.prunes,
+                ckpts_stored: m.ckpts_stored,
+                ckpts_replaced: m.ckpts_replaced,
+                ckpts_rejected: m.ckpts_rejected,
+                ckpts_invalidated: m.ckpts_invalidated,
+                batches: m.batches,
+                batched_requests: m.batched_requests,
+                retrains_coalesced: m.retrains_coalesced,
+                latency: m
+                    .latency
+                    .iter()
+                    .map(|l| LatencyRecord {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    })
+                    .collect(),
+                accuracy_by_round: m.accuracy_by_round.clone(),
+            },
+        }
+    }
+
+    /// Restore from a compaction snapshot (recovery, before log replay).
+    pub(crate) fn restore_image(&mut self, img: &StateImage) {
+        self.now_tick = img.now_tick;
+        self.head_deferral_logged = img.head_deferral_logged;
+        self.queue = img.queue.iter().map(req_from_rec).collect();
+        self.carryover = carryover_from_rec(&img.carryover);
+        if let Some(bi) = &img.battery {
+            self.battery = Some(Battery {
+                capacity_j: bi.capacity_j,
+                charge_j: bi.charge_j,
+                harvest_watts: bi.harvest_watts,
+                brownouts: bi.brownouts,
+            });
+        }
+        self.log = img.svc_log.iter().map(svc_from_rec).collect();
+        self.batch_log = img.batch_log.iter().map(batch_from_rec).collect();
+        self.engine.restore_rounds(&img.rounds);
+        self.engine.set_round(img.round);
+        self.engine.restore_partitioner_state(&img.partitioner_state);
+        self.engine.restore_store_image(&img.store);
+        self.engine.metrics = RunMetrics {
+            rsn_by_round: img.metrics.rsn_by_round.clone(),
+            requests_by_round: img.metrics.requests_by_round.clone(),
+            warm_retrains: img.metrics.warm_retrains,
+            scratch_retrains: img.metrics.scratch_retrains,
+            lineages_retrained: img.metrics.lineages_retrained,
+            energy_joules: img.metrics.energy_joules,
+            prunes: img.metrics.prunes,
+            ckpts_stored: img.metrics.ckpts_stored,
+            ckpts_replaced: img.metrics.ckpts_replaced,
+            ckpts_rejected: img.metrics.ckpts_rejected,
+            ckpts_invalidated: img.metrics.ckpts_invalidated,
+            batches: img.metrics.batches,
+            batched_requests: img.metrics.batched_requests,
+            retrains_coalesced: img.metrics.retrains_coalesced,
+            latency: img
+                .metrics
+                .latency
+                .iter()
+                .map(|l| LatencyReceipt {
+                    user: l.user,
+                    round: l.round,
+                    queued_ticks: l.queued_ticks,
+                    slo_met: l.slo_met,
+                })
+                .collect(),
+            accuracy_by_round: img.metrics.accuracy_by_round.clone(),
+        };
+    }
+
+    /// Deterministic, comparison-friendly digest of the full service
+    /// state: clock, queue, carryover, battery, lineage totals, store
+    /// layout/stats/bytes, receipt logs, and the metrics JSON. Two
+    /// services with equal receipts are observably identical — this is
+    /// what the kill-point crash tests compare between a recovered
+    /// instance and the uninterrupted in-memory run.
+    pub fn state_receipt(&self) -> Json {
+        let queue = Json::Arr(
+            self.queue
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("user", u64::from(r.user.0))
+                        .set("round", u64::from(r.round))
+                        .set("arrival", r.arrival_tick)
+                        .set(
+                            "parts",
+                            Json::Arr(
+                                r.parts
+                                    .iter()
+                                    .map(|(b, n)| Json::Arr(vec![Json::from(b.0), Json::from(*n)]))
+                                    .collect(),
+                            ),
+                        )
+                })
+                .collect(),
+        );
+        let carryover = match &self.carryover {
+            None => Json::Null,
+            Some((plan, metas)) => Json::obj()
+                .set("requests", plan.requests)
+                .set(
+                    "lineages",
+                    Json::Arr(
+                        plan.lineages
+                            .iter()
+                            .map(|lp| {
+                                Json::obj()
+                                    .set("lineage", lp.lineage)
+                                    .set(
+                                        "segments",
+                                        lp.segments.iter().map(|s| *s as u64).collect::<Vec<u64>>(),
+                                    )
+                                    .set("touching", lp.requests_touching)
+                            })
+                            .collect(),
+                    ),
+                )
+                .set(
+                    "metas",
+                    Json::Arr(
+                        metas
+                            .iter()
+                            .map(|m| {
+                                Json::Arr(vec![
+                                    Json::from(u64::from(m.user)),
+                                    Json::from(u64::from(m.round)),
+                                    Json::from(m.arrival_tick),
+                                ])
+                            })
+                            .collect(),
+                    ),
+                ),
+        };
+        let battery = match &self.battery {
+            None => Json::Null,
+            Some(b) => Json::obj()
+                .set("charge_j", b.charge_j)
+                .set("capacity_j", b.capacity_j)
+                .set("brownouts", b.brownouts),
+        };
+        let lineages = Json::Arr(
+            (0..self.engine.lineages().len())
+                .map(|l| {
+                    let lin = self.engine.lineages().get(l);
+                    Json::obj()
+                        .set("total", lin.total_samples())
+                        .set("segments", u64::from(lin.segment_count()))
+                })
+                .collect(),
+        );
+        let store = self.engine.store();
+        let stats = store.stats();
+        let resident = Json::Arr(
+            store
+                .slot_entries()
+                .map(|(slot, c)| {
+                    Json::Arr(vec![
+                        Json::from(slot),
+                        Json::from(c.id.0),
+                        Json::from(c.lineage),
+                        Json::from(u64::from(c.covered_segments)),
+                        Json::from(c.size_bytes),
+                    ])
+                })
+                .collect(),
+        );
+        let svc_log = Json::Arr(
+            self.log
+                .iter()
+                .map(|r| {
+                    Json::obj()
+                        .set("user", u64::from(r.user))
+                        .set("round", u64::from(r.round))
+                        .set("rsn", r.rsn)
+                        .set("lineages", r.lineages_retrained)
+                        .set("est_seconds", r.est_seconds)
+                        .set("est_joules", r.est_joules)
+                        .set("deferred", r.deferred)
+                })
+                .collect(),
+        );
+        let batch_log = Json::Arr(
+            self.batch_log
+                .iter()
+                .map(|b| {
+                    Json::obj()
+                        .set("requests", b.requests)
+                        .set("rsn", b.rsn)
+                        .set("lineages", b.lineages_retrained)
+                        .set("coalesced", b.retrains_coalesced)
+                        .set("oldest", b.oldest_queued_ticks)
+                        .set("est_seconds", b.est_seconds)
+                        .set("est_joules", b.est_joules)
+                        .set("deferred", b.deferred)
+                })
+                .collect(),
+        );
+        Json::obj()
+            .set("now", self.now_tick)
+            .set("head_deferral_logged", self.head_deferral_logged)
+            .set("queue", queue)
+            .set("carryover", carryover)
+            .set("battery", battery)
+            .set("lineages", lineages)
+            .set(
+                "store",
+                Json::obj()
+                    .set("occupied", store.occupied())
+                    .set("stored_bytes", store.stored_bytes())
+                    .set("next_id", store.next_id_peek())
+                    .set("stored", stats.stored)
+                    .set("replaced", stats.replaced)
+                    .set("rejected", stats.rejected)
+                    .set("invalidated", stats.invalidated)
+                    .set("resident", resident),
+            )
+            .set("svc_log", svc_log)
+            .set("batch_log", batch_log)
+            .set("engine_round", u64::from(self.engine.round()))
+            .set("metrics", self.engine.metrics.to_json())
     }
 }
 

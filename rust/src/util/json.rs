@@ -463,4 +463,142 @@ mod tests {
         assert!(Json::parse("true false").is_err());
         assert!(Json::parse("{\"a\":}").is_err());
     }
+
+    // -- Round-trip property tests ----------------------------------------
+    //
+    // The writer/parser pair now backs both the CI bench-gate baselines
+    // and the durability recovery manifest, so parse ∘ serialize must be
+    // the identity on everything the writer can emit — escape sequences,
+    // nested arrays/objects, and number edge cases included.
+
+    use crate::prng::Rng;
+    use crate::testkit::forall;
+
+    /// A random string exercising every escape class the writer handles:
+    /// quotes, backslashes, control characters, unicode.
+    fn rand_string(rng: &mut Rng, size: f64) -> String {
+        let len = rng.range(0, 2 + (24.0 * size) as usize);
+        (0..len)
+            .map(|_| match rng.range(0, 8) {
+                0 => '"',
+                1 => '\\',
+                2 => '\n',
+                3 => '\r',
+                4 => '\t',
+                5 => char::from_u32(rng.range(0, 0x20) as u32).unwrap(),
+                6 => char::from_u32(0x3b1 + rng.range(0, 24) as u32).unwrap(), // α..ω
+                _ => char::from_u32(0x20 + rng.range(0, 0x5f) as u32).unwrap(),
+            })
+            .collect()
+    }
+
+    /// Numbers across the writer's two formats (integer-rendered and
+    /// shortest-roundtrip float) plus signs, zero, and magnitude edges.
+    fn rand_number(rng: &mut Rng) -> f64 {
+        match rng.range(0, 7) {
+            0 => 0.0,
+            1 => rng.below(1 << 20) as f64 - (1 << 19) as f64, // small ints
+            2 => 1e15 - 1.0,                                   // integer-render bound
+            3 => 1e15 + 1.0,                                   // float-render bound
+            4 => (rng.f64() - 0.5) * 1e-9,                     // tiny fractions
+            5 => (rng.f64() - 0.5) * 1e18,                     // huge
+            _ => rng.f64() * 100.0 - 50.0,
+        }
+    }
+
+    fn rand_json(rng: &mut Rng, depth: usize, size: f64) -> Json {
+        let leaf_bias = if depth == 0 { 4 } else { 6 };
+        match rng.range(0, leaf_bias) {
+            0 => Json::Null,
+            1 => Json::Bool(rng.chance(0.5)),
+            2 => Json::Num(rand_number(rng)),
+            3 => Json::Str(rand_string(rng, size)),
+            4 => Json::Arr(
+                (0..rng.range(0, 2 + (4.0 * size) as usize))
+                    .map(|_| rand_json(rng, depth - 1, size))
+                    .collect(),
+            ),
+            _ => {
+                let mut obj = Json::obj();
+                for _ in 0..rng.range(0, 2 + (4.0 * size) as usize) {
+                    obj = obj.set(&rand_string(rng, size), rand_json(rng, depth - 1, size));
+                }
+                obj
+            }
+        }
+    }
+
+    #[test]
+    fn prop_parse_serialize_parse_roundtrips() {
+        forall(
+            0x15095,
+            200,
+            |rng, size| rand_json(rng, 3, size),
+            |j| {
+                for text in [j.to_string(), j.to_pretty()] {
+                    let once = Json::parse(&text)
+                        .map_err(|e| format!("parse failed on {text:?}: {e}"))?;
+                    if once != *j {
+                        return Err(format!("parse(serialize(j)) != j for {text:?}"));
+                    }
+                    // Serialization is a fixed point after one round trip.
+                    let again = Json::parse(&once.to_string())
+                        .map_err(|e| format!("reparse failed: {e}"))?;
+                    if again != once {
+                        return Err("parse ∘ serialize is not idempotent".into());
+                    }
+                    if once.to_string() != j.to_string() {
+                        return Err("serialization not canonical after reparse".into());
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_number_edge_cases_roundtrip() {
+        forall(
+            0xed6e5,
+            300,
+            |rng, _| rand_number(rng),
+            |x| {
+                let j = Json::Num(*x);
+                let parsed = Json::parse(&j.to_string())
+                    .map_err(|e| format!("parse {j}: {e}"))?;
+                if parsed != j {
+                    return Err(format!("number {x} did not round-trip: {parsed:?}"));
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn escape_and_nesting_edge_cases_roundtrip() {
+        let cases = vec![
+            Json::Str("".into()),
+            Json::Str("\u{0}\u{1}\u{1f}".into()),
+            Json::Str("\"\\\n\r\t/".into()),
+            Json::Str("κόσμε ✓ 💡".into()),
+            Json::Arr(vec![]),
+            Json::Arr(vec![Json::Arr(vec![Json::Arr(vec![Json::Null])])]),
+            Json::obj().set("", Json::obj().set("\"nested\nkey\"", vec![1u64, 2])),
+            Json::Num(-0.0), // writes "0"; IEEE equality keeps the round trip
+            Json::Num(f64::MIN),
+            Json::Num(f64::MAX),
+            Json::Num(5e-324), // smallest subnormal
+        ];
+        for j in &cases {
+            for text in [j.to_string(), j.to_pretty()] {
+                assert_eq!(&Json::parse(&text).unwrap(), j, "case {text:?}");
+            }
+        }
+        // Non-finite numbers degrade to null by design (JSON has no NaN).
+        assert_eq!(Json::parse(&Json::Num(f64::NAN).to_string()).unwrap(), Json::Null);
+        assert_eq!(
+            Json::parse(&Json::Num(f64::INFINITY).to_string()).unwrap(),
+            Json::Null
+        );
+    }
 }

@@ -1,0 +1,464 @@
+//! Kill-point crash-injection harness for the durability subsystem.
+//!
+//! The workload exercises everything the acceptance criteria name: FiboR
+//! eviction under a **byte-budget** store, deadline-free coalescing
+//! windows, and a **battery-split carryover window** (an affordable
+//! lineage prefix executes, the unfunded share parks). Against it we
+//! assert the crash-consistency invariant:
+//!
+//! * `durability = log` is receipt-identical to `durability = off` at
+//!   every operation boundary (journaling is observation-only);
+//! * crashing at **every byte offset** of the write-ahead log — injected
+//!   through [`FailpointFs`] — then recovering yields exactly the state of
+//!   the last complete frame boundary: the post-state of event k, never a
+//!   torn hybrid;
+//! * recovering at any operation boundary and driving the remaining
+//!   operations reproduces the uninterrupted run's final receipt byte for
+//!   byte (policy counters, partitioner RNG, id sequences all continue);
+//! * compaction (snapshot + log truncation) preserves receipts across a
+//!   reopen, and `log+spill` restores checkpoint payload tensors
+//!   bit-exactly.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::engine::EvalPolicy;
+use cause::coordinator::system::SystemVariant;
+use cause::data::catalog::CIFAR10;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::persist::frame::{frame_bounds, HEADER_LEN, LOG_MAGIC};
+use cause::persist::{Durability, DurabilityMode, MemFs, PersistFs as _};
+use cause::sim::device::AI_CUBESAT;
+use cause::sim::Battery;
+use cause::testkit::FailpointFs;
+use cause::training::{HostTrainer, HostTrainerConfig};
+use cause::runtime::codec::CodecMode;
+use cause::util::Json;
+use cause::UnlearningService;
+
+const WAL: &str = "wal-0.log";
+const MANIFEST: &str = "MANIFEST.json";
+
+/// One scripted service operation.
+#[derive(Clone, Copy, Debug)]
+enum Op {
+    Ingest,
+    SubmitAll(u32),
+    Advance(u64),
+    DrainBatched,
+    Harvest(f64),
+    Flush,
+}
+
+struct Workload {
+    cfg: ExperimentConfig,
+    pop: EdgePopulation,
+    trace: RequestTrace,
+    /// Initial battery charge (joules) — tuned so one window splits.
+    charge: f64,
+    ops: Vec<Op>,
+}
+
+fn script() -> Vec<Op> {
+    vec![
+        Op::Ingest,
+        Op::SubmitAll(1),
+        Op::DrainBatched,
+        Op::Ingest,
+        Op::SubmitAll(2),
+        Op::Advance(1),
+        Op::DrainBatched,
+        Op::Harvest(50_000.0),
+        Op::DrainBatched,
+        Op::Ingest,
+        Op::SubmitAll(3),
+        Op::Advance(2),
+        Op::DrainBatched,
+        Op::Harvest(50_000.0),
+        Op::Flush,
+    ]
+}
+
+fn base_cfg() -> ExperimentConfig {
+    let cfg = ExperimentConfig {
+        users: 10,
+        rounds: 3,
+        shards: 4,
+        unlearn_prob: 0.5,
+        ..Default::default()
+    };
+    // Byte-budget mode sized to ~3 cost-model checkpoints, so FiboR must
+    // evict through the byte-metered admission path.
+    let engine = SystemVariant::Cause.build_cost(&cfg).expect("probe engine");
+    let ckpt_bytes = cfg.memory_bytes / engine.store().capacity().max(1) as u64;
+    let budget = ckpt_bytes * 3 + ckpt_bytes / 2;
+    cfg.with_byte_budget(budget.max(1))
+}
+
+fn population(cfg: &ExperimentConfig) -> (EdgePopulation, RequestTrace) {
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: CIFAR10.scaled(6_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.7,
+        seed: 1101,
+    });
+    let trace =
+        RequestTrace::generate(&pop, &TraceConfig::paper_default(17).with_prob(cfg.unlearn_prob));
+    (pop, trace)
+}
+
+fn build(w: &Workload, durability: Option<Durability>) -> UnlearningService {
+    let engine = SystemVariant::Cause.build_cost(&w.cfg).expect("engine");
+    let mut battery = Battery::new(&AI_CUBESAT);
+    battery.charge_j = w.charge;
+    let mut svc = UnlearningService::new(engine).with_battery(battery);
+    if let Some(d) = durability {
+        svc.attach_durability(d).expect("attach durability");
+    }
+    svc
+}
+
+/// Apply one op; returns true when this drain observed a battery *split*
+/// (requests all accounted, but an unfunded lineage share parked).
+fn apply(svc: &mut UnlearningService, w: &Workload, op: &Op) -> bool {
+    match op {
+        Op::Ingest => {
+            svc.ingest_round(&w.pop).expect("ingest");
+        }
+        Op::SubmitAll(round) => {
+            for req in w.trace.at(*round) {
+                svc.submit(req.clone());
+            }
+        }
+        Op::Advance(t) => svc.advance(*t),
+        Op::DrainBatched => {
+            svc.drain_batched().expect("drain");
+            return svc.carryover_requests() == 0 && svc.carryover_lineages() > 0;
+        }
+        Op::Harvest(s) => svc.harvest(*s),
+        Op::Flush => {
+            svc.flush_batched().expect("flush");
+        }
+    }
+    false
+}
+
+/// Run the whole script in-memory; returns (receipts after each op
+/// including the initial state, split observed anywhere).
+fn run_reference(w: &Workload) -> (Vec<Json>, bool) {
+    let mut svc = build(w, None);
+    let mut receipts = vec![svc.state_receipt()];
+    let mut split = false;
+    for op in &w.ops {
+        split |= apply(&mut svc, w, op);
+        receipts.push(svc.state_receipt());
+    }
+    (receipts, split)
+}
+
+/// Find a charge that makes some window split at lineage granularity: an
+/// affordable prefix executes, the rest carries over. Costs are
+/// deterministic, so scanning fractions of the most expensive
+/// unconstrained window always lands on one when plans span >1 lineage.
+fn workload() -> Workload {
+    let cfg = base_cfg();
+    let (pop, trace) = population(&cfg);
+    let ops = script();
+    let probe = Workload { cfg: cfg.clone(), pop, trace, charge: AI_CUBESAT.battery_joules, ops };
+    let max_window_j = {
+        let mut svc = build(&probe, None);
+        for op in &probe.ops {
+            apply(&mut svc, &probe, op);
+        }
+        svc.batch_log
+            .iter()
+            .map(|b| b.est_joules)
+            .fold(0.0f64, f64::max)
+    };
+    assert!(max_window_j > 0.0, "workload executed no windows");
+    for step in 1..40 {
+        let charge = max_window_j * (step as f64) / 40.0;
+        let candidate = Workload { charge, ..clone_workload(&probe) };
+        let (_, split) = run_reference(&candidate);
+        if split {
+            return candidate;
+        }
+    }
+    panic!("no charge in the ladder produced a battery-split window");
+}
+
+fn clone_workload(w: &Workload) -> Workload {
+    let (pop, trace) = population(&w.cfg);
+    Workload { cfg: w.cfg.clone(), pop, trace, charge: w.charge, ops: w.ops.clone() }
+}
+
+fn mem_durability(fs: &MemFs) -> Durability {
+    Durability::mem(DurabilityMode::Log, fs.clone(), 0)
+}
+
+/// Recover a fresh service from the given disk image; returns the receipt
+/// and how many events replayed.
+fn recover(w: &Workload, fs: &MemFs) -> (Json, u64) {
+    let mut svc = build(w, None);
+    let report = svc
+        .attach_durability(mem_durability(fs))
+        .expect("recovery attach");
+    (svc.state_receipt(), report.events_replayed)
+}
+
+/// Disk image holding the manifest plus a byte-truncated log.
+fn truncated_image(full_manifest: &[u8], log_prefix: &[u8]) -> MemFs {
+    let fs = MemFs::new();
+    fs.put(MANIFEST, full_manifest.to_vec());
+    fs.put(WAL, log_prefix.to_vec());
+    fs
+}
+
+/// The acceptance-criteria harness: off ≡ log, kill-points at every frame
+/// boundary AND every torn-write byte offset, continuation equality.
+#[test]
+fn killpoints_at_every_byte_recover_to_boundary_states() {
+    let w = workload();
+    let (ref_receipts, split) = run_reference(&w);
+    assert!(split, "workload must exercise a battery-split carryover window");
+
+    // Durable run, capturing the log length at every op boundary. The
+    // journaled service must stay receipt-identical to the in-memory
+    // reference the whole way (durability = off is the baseline).
+    let fs = MemFs::new();
+    let mut durable = build(&w, Some(mem_durability(&fs)));
+    let mut op_log_len = vec![fs.file(WAL).expect("wal created").len()];
+    for (i, op) in w.ops.iter().enumerate() {
+        apply(&mut durable, &w, op);
+        assert_eq!(
+            durable.state_receipt(),
+            ref_receipts[i + 1],
+            "durability=log diverged from off at op {i} ({op:?})"
+        );
+        op_log_len.push(fs.file(WAL).unwrap().len());
+    }
+    assert!(durable.durability_error().is_none());
+    let full = fs.file(WAL).unwrap();
+    let manifest = fs.file(MANIFEST).unwrap();
+
+    // Clean-boundary recoveries: one per complete frame prefix.
+    let mut boundaries = vec![HEADER_LEN];
+    boundaries.extend(frame_bounds(&full, LOG_MAGIC));
+    assert!(boundaries.len() > 10, "workload should log a meaningful event count");
+    assert_eq!(*boundaries.last().unwrap(), full.len(), "no torn tail live");
+    let boundary_receipts: Vec<Json> = boundaries
+        .iter()
+        .enumerate()
+        .map(|(k, &end)| {
+            let (receipt, replayed) = recover(&w, &truncated_image(&manifest, &full[..end]));
+            assert_eq!(replayed, k as u64, "boundary {k} replay count");
+            receipt
+        })
+        .collect();
+
+    // Every op boundary must be a frame boundary whose recovered state is
+    // the live (== reference) state at that op.
+    for (i, &len) in op_log_len.iter().enumerate() {
+        let k = boundaries
+            .iter()
+            .position(|&b| b == len)
+            .unwrap_or_else(|| panic!("op {i} did not end on a frame boundary"));
+        assert_eq!(
+            boundary_receipts[k], ref_receipts[i],
+            "recovered state at op {i} differs from the live run"
+        );
+    }
+
+    // Kill-points: crash at EVERY byte offset (torn-write injection via
+    // FailpointFs), recover, and require exactly the pre-/post-event state
+    // of the last complete frame — never anything in between.
+    for cut in 0..=full.len() {
+        let k = boundaries.iter().filter(|&&b| b <= cut).count().saturating_sub(1);
+        // Re-write the prefix through a FailpointFs armed at `cut` bytes
+        // of log traffic: what lands is exactly full[..cut].
+        let mem = MemFs::new();
+        mem.put(MANIFEST, manifest.clone());
+        mem.put(WAL, full[..HEADER_LEN.min(cut)].to_vec());
+        let mut fp = FailpointFs::new(mem.clone());
+        fp.set_budget(Some(cut.saturating_sub(HEADER_LEN) as u64));
+        if cut > HEADER_LEN {
+            fp.append(WAL, &full[HEADER_LEN..]).unwrap();
+        }
+        assert_eq!(mem.file(WAL).unwrap(), full[..cut].to_vec(), "failpoint cut {cut}");
+
+        let (receipt, replayed) = recover(&w, &mem);
+        assert_eq!(replayed, k as u64, "cut {cut}: replay count");
+        assert_eq!(
+            receipt, boundary_receipts[k],
+            "cut {cut}: torn-write recovery must land on frame boundary {k}"
+        );
+    }
+}
+
+/// Recover at every op boundary, then drive the remaining ops: the final
+/// receipt must equal the uninterrupted run's (policy counters,
+/// partitioner RNG, and id sequences all continue exactly).
+#[test]
+fn recovery_then_continuation_matches_uninterrupted_run() {
+    let w = workload();
+    let (ref_receipts, _) = run_reference(&w);
+    let final_receipt = ref_receipts.last().unwrap();
+
+    let fs = MemFs::new();
+    let mut durable = build(&w, Some(mem_durability(&fs)));
+    let mut images = vec![fs.fork()];
+    for op in &w.ops {
+        apply(&mut durable, &w, op);
+        images.push(fs.fork());
+    }
+
+    for (i, image) in images.iter().enumerate() {
+        let mut svc = build(&w, None);
+        svc.attach_durability(mem_durability(image)).expect("recover");
+        assert_eq!(svc.state_receipt(), ref_receipts[i], "recovery at op {i}");
+        for op in &w.ops[i..] {
+            apply(&mut svc, &w, op);
+        }
+        assert_eq!(
+            svc.state_receipt(),
+            *final_receipt,
+            "continuation from op {i} diverged from the uninterrupted run"
+        );
+    }
+}
+
+/// Auto-compaction: snapshots + log truncation are receipt-invisible, and
+/// recovery from snapshot+tail equals recovery from the full log.
+#[test]
+fn compaction_is_receipt_invisible_and_bounds_the_log() {
+    let w = workload();
+    let (ref_receipts, _) = run_reference(&w);
+
+    let fs = MemFs::new();
+    let mut durable = build(&w, None);
+    durable
+        .attach_durability(Durability::mem(DurabilityMode::Log, fs.clone(), 4))
+        .expect("attach");
+    for (i, op) in w.ops.iter().enumerate() {
+        apply(&mut durable, &w, op);
+        assert_eq!(
+            durable.state_receipt(),
+            ref_receipts[i + 1],
+            "compacting journal diverged at op {i}"
+        );
+        assert!(
+            durable.journal_events() <= 4,
+            "auto-compaction must bound the tail (got {})",
+            durable.journal_events()
+        );
+    }
+    drop(durable);
+
+    let mut svc = build(&w, None);
+    let report = svc
+        .attach_durability(Durability::mem(DurabilityMode::Log, fs.clone(), 4))
+        .expect("recover");
+    assert!(report.snapshot_loaded, "compaction must have produced a snapshot");
+    assert!(report.events_replayed <= 4);
+    assert_eq!(svc.state_receipt(), *ref_receipts.last().unwrap());
+
+    // An explicit compaction right after recovery is also invisible.
+    svc.compact_now().expect("compact");
+    assert_eq!(svc.journal_events(), 0);
+    drop(svc);
+    let mut reopened = build(&w, None);
+    reopened
+        .attach_durability(Durability::mem(DurabilityMode::Log, fs, 4))
+        .expect("reopen");
+    assert_eq!(reopened.state_receipt(), *ref_receipts.last().unwrap());
+}
+
+/// `log+spill` restores checkpoint payload tensors bit-exactly (delta
+/// chains re-share parents, so identity-keyed byte accounting — pinned
+/// parents included — survives); plain `log` restores all accounting
+/// without payloads, which is exact for self-contained codecs (sparse:
+/// charged bytes == declared sizes). A delta codec without spill would
+/// under-count evicted-but-pinned parents after recovery, which is why
+/// the pairing below is the supported matrix.
+#[test]
+fn spill_recovers_checkpoint_payloads_bit_exactly() {
+    let shapes = vec![vec![24, 24], vec![24]];
+    let dense = cause::training::host::dense_upper_bound(&shapes);
+    let cfg_with = |codec: CodecMode| {
+        ExperimentConfig {
+            users: 8,
+            rounds: 3,
+            shards: 3,
+            unlearn_prob: 0.5,
+            ..Default::default()
+        }
+        .with_byte_budget(dense * 3)
+        .with_codec(codec)
+    };
+    let (pop, trace) = population(&cfg_with(CodecMode::Sparse));
+    let build_host = |cfg: &ExperimentConfig| {
+        let trainer = HostTrainer::new(
+            HostTrainerConfig { shapes: shapes.clone(), seed: 5, update_frac: 0.2 },
+            cfg.shards,
+            SystemVariant::Cause.schedule(cfg),
+        );
+        let engine = SystemVariant::Cause
+            .build_with_trainer(cfg, Box::new(trainer), EvalPolicy::Never)
+            .expect("host engine");
+        UnlearningService::new(engine)
+    };
+
+    for (codec, mode, expect_payloads) in [
+        (CodecMode::Delta, DurabilityMode::LogSpill, true),
+        (CodecMode::Sparse, DurabilityMode::Log, false),
+    ] {
+        let cfg = cfg_with(codec);
+        let fs = MemFs::new();
+        let mut svc = build_host(&cfg);
+        svc.attach_durability(Durability::mem(mode, fs.clone(), 0)).expect("attach");
+        for t in 1..=cfg.rounds {
+            svc.ingest_round(&pop).expect("ingest");
+            for req in trace.at(t) {
+                svc.submit(req.clone());
+            }
+            svc.drain_batched().expect("drain");
+        }
+        let live_receipt = svc.state_receipt();
+        let live_payloads: Vec<(u64, Option<Vec<cause::runtime::HostTensor>>)> = svc
+            .engine()
+            .store()
+            .iter()
+            .map(|c| (c.id.0, c.params.as_ref().map(|p| p.decode())))
+            .collect();
+        assert!(
+            live_payloads.iter().any(|(_, p)| p.is_some()),
+            "host workload must store real payloads"
+        );
+        drop(svc);
+
+        let mut recovered = build_host(&cfg);
+        recovered.attach_durability(Durability::mem(mode, fs, 0)).expect("recover");
+        assert_eq!(recovered.state_receipt(), live_receipt, "{mode:?} receipts");
+        let rec_payloads: Vec<(u64, Option<Vec<cause::runtime::HostTensor>>)> = recovered
+            .engine()
+            .store()
+            .iter()
+            .map(|c| (c.id.0, c.params.as_ref().map(|p| p.decode())))
+            .collect();
+        if expect_payloads {
+            assert_eq!(rec_payloads, live_payloads, "spilled payloads bit-exact");
+        } else {
+            assert_eq!(
+                rec_payloads.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+                live_payloads.iter().map(|(id, _)| *id).collect::<Vec<_>>(),
+                "log mode keeps the layout"
+            );
+            assert!(
+                rec_payloads.iter().all(|(_, p)| p.is_none()),
+                "log mode must not fabricate payloads"
+            );
+        }
+    }
+}
