@@ -216,5 +216,77 @@ fn main() -> anyhow::Result<()> {
          state receipt identical after the crash",
         logged, report.events_replayed, report.snapshot_loaded
     );
+
+    // 9. Fleet mode: one config knob shards the whole service.
+    //
+    //   fleet_workers = 2     # N shard workers, each with its own engine,
+    //                         # store, battery, planner and (with
+    //                         # durability) WAL under persist_dir/shard-<k>/
+    //
+    // `SystemVariant::build_fleet` promotes the UCDP user→shard map into a
+    // routing layer: every user's rounds and unlearning requests go to the
+    // shard worker holding their data (sticky — a shard-controller shrink
+    // only bumps the routing epoch, it never re-homes a known user), the
+    // workers price their batch windows locally, and battery admission is
+    // decided centrally from the quoted costs before any worker commits.
+    // Per-shard receipts, metrics, batch logs, and journals merge
+    // deterministically at the front-end. `cargo bench --bench bench_fleet`
+    // measures the 2-worker scaling ratio and the merge overhead
+    // (BENCH_fleet.json, gated in CI).
+    let cfg3 = ExperimentConfig {
+        users: 16,
+        rounds: 3,
+        shards: 4,
+        fleet_workers: 2,
+        ..Default::default()
+    };
+    let pop3 = common::population(&cfg3);
+    let trace3 = RequestTrace::generate(
+        &pop3,
+        &TraceConfig::paper_default(11).with_prob(0.4),
+    );
+    let mut fleet = SystemVariant::Cause.build_fleet(&cfg3)?;
+    let mut served = 0;
+    for t in 1..=cfg3.rounds {
+        fleet.ingest_round(&pop3)?;
+        for req in trace3.at(t) {
+            fleet.submit(req.clone());
+        }
+        served += fleet.drain_batched()?;
+    }
+    served += fleet.flush_batched()?;
+    println!(
+        "\nfleet: {} workers served {} requests | routing epoch {} | \
+         audit seeds {:?}",
+        fleet.workers(),
+        served,
+        fleet.epoch(),
+        fleet.shard_seeds().iter().map(|s| format!("{s:#x}")).collect::<Vec<_>>()
+    );
+
+    // The keystone invariant: fleet_workers = 1 replays the unsharded
+    // service byte-identically — same receipts, RSN, store stats — so
+    // turning the fleet on is never a semantic change, only a scale-out.
+    let cfg1 = ExperimentConfig { fleet_workers: 1, ..cfg3.clone() };
+    let mut one = SystemVariant::Cause.build_fleet(&cfg1)?;
+    let mut solo = SystemVariant::Cause.build_service(&cfg1)?;
+    for t in 1..=cfg1.rounds {
+        one.ingest_round(&pop3)?;
+        solo.ingest_round(&pop3)?;
+        for req in trace3.at(t) {
+            one.submit(req.clone());
+            solo.submit(req.clone());
+        }
+        one.drain_batched()?;
+        solo.drain_batched()?;
+    }
+    one.flush_batched()?;
+    solo.flush_batched()?;
+    assert_eq!(
+        one.state_receipt()?.to_pretty(),
+        solo.state_receipt().to_pretty(),
+        "fleet_workers=1 must replay the unsharded service byte-identically"
+    );
+    println!("fleet_workers=1 state receipt is byte-identical to the unsharded service");
     Ok(())
 }

@@ -18,14 +18,24 @@
 //!   `BENCH_persist.json`, when given) fall below the `persist.*` floors —
 //!   the write-ahead log appends or crash recovery replays slower than the
 //!   committed floor. Floors are conservative invariant-derived values and
-//!   are checked directly, without an extra tolerance.
+//!   are checked directly, without an extra tolerance. Or
+//! * `gate.scaling_2w` (from `BENCH_fleet.json`, when given) falls below
+//!   the `fleet.scaling_2w` floor (the 2-worker sharded fleet stopped
+//!   beating the single-worker service on the same machine), or
+//!   `gate.merge_overhead` grows above the `fleet.merge_overhead` ceiling
+//!   (merging per-shard receipts/metrics became comparable to re-running
+//!   the workload).
 //!
 //! The coordinator values are deterministic workload counters, the scale
 //! value is a same-machine ratio (indexed vs naive on identical state),
 //! and the compression ratio is a deterministic function of the bench's
 //! seeded tensors — so those gates are stable across runner hardware; only
 //! the decode-throughput, append-throughput, and recovery-rate floors are
-//! wall-clock, and they are pinned far below any plausible machine.
+//! wall-clock, and they are pinned far below any plausible machine. The
+//! fleet scaling value is a same-machine ratio too, but it additionally
+//! depends on the runner having ≥2 usable cores, so (like the wall-clock
+//! floors) it is never auto-raised by the ratchet; the merge-overhead
+//! ceiling is likewise never auto-lowered.
 //!
 //! A baseline with `"bootstrap": true` passes unconditionally. On every
 //! pass — bootstrap or green — the gate prints **one** ready-to-commit
@@ -39,7 +49,8 @@
 //! ```bash
 //! cargo run --release --bin bench_gate -- \
 //!     BENCH_baseline.json BENCH_coordinator.json \
-//!     [BENCH_scale.json [BENCH_compress.json [BENCH_persist.json]]]
+//!     [BENCH_scale.json [BENCH_compress.json [BENCH_persist.json \
+//!     [BENCH_fleet.json]]]]
 //! ```
 
 use std::process::ExitCode;
@@ -72,6 +83,7 @@ struct Current {
     speedup: Option<f64>,
     compress: Option<(f64, f64)>, // (ratio, decode_mbps)
     persist: Option<(f64, f64)>,  // (append_mbps, recovery_events_per_s)
+    fleet: Option<(f64, f64)>,    // (scaling_2w, merge_overhead)
 }
 
 impl Current {
@@ -118,6 +130,19 @@ impl Current {
                     .set("recovery_events_per_s", recovery),
             );
         }
+        if let Some((scaling, merge)) = self.fleet {
+            // Parallel scaling depends on the runner's free cores, so a
+            // many-core machine must not ratchet the floor to a ratio a
+            // 2-core runner cannot hit; a 1.25x headroom applies when no
+            // floor is committed. The merge ceiling is wall-clock-shaped
+            // (smaller is better) and is likewise never auto-tightened.
+            let scaling = base(&["fleet", "scaling_2w"]).unwrap_or(scaling / 1.25);
+            let merge = base(&["fleet", "merge_overhead"]).unwrap_or(merge * 10.0);
+            pin = pin.set(
+                "fleet",
+                Json::obj().set("scaling_2w", scaling).set("merge_overhead", merge),
+            );
+        }
         pin
     }
 }
@@ -128,6 +153,7 @@ fn run(
     scale_path: Option<&str>,
     compress_path: Option<&str>,
     persist_path: Option<&str>,
+    fleet_path: Option<&str>,
 ) -> Result<(), String> {
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
@@ -152,6 +178,16 @@ fn run(
                 Some((
                     gate_value(&doc, p, "append_mbps")?,
                     gate_value(&doc, p, "recovery_events_per_s")?,
+                ))
+            }
+            None => None,
+        },
+        fleet: match fleet_path {
+            Some(p) => {
+                let doc = load(p)?;
+                Some((
+                    gate_value(&doc, p, "scaling_2w")?,
+                    gate_value(&doc, p, "merge_overhead")?,
                 ))
             }
             None => None,
@@ -275,6 +311,36 @@ fn run(
         }
     }
 
+    if let Some((cur_scaling, cur_merge)) = cur.fleet {
+        let base_scaling = baseline.at(&["fleet", "scaling_2w"]).and_then(Json::as_f64);
+        let base_merge = baseline.at(&["fleet", "merge_overhead"]).and_then(Json::as_f64);
+        match (base_scaling, base_merge) {
+            (Some(scaling_floor), Some(merge_ceiling)) => {
+                println!(
+                    "bench_gate: fleet scaling floor {scaling_floor:.2}x -> \
+                     {cur_scaling:.2}x, merge ceiling {merge_ceiling:.2} -> \
+                     {cur_merge:.3}"
+                );
+                if cur_scaling < scaling_floor - 1e-9 {
+                    failures.push(format!(
+                        "2-worker fleet scaling fell below floor: {cur_scaling:.2}x < \
+                         {scaling_floor:.2}x"
+                    ));
+                }
+                if cur_merge > merge_ceiling + 1e-9 {
+                    failures.push(format!(
+                        "fleet receipt-merge overhead grew above ceiling: \
+                         {cur_merge:.3} > {merge_ceiling:.3}"
+                    ));
+                }
+            }
+            _ => println!(
+                "bench_gate: {baseline_path} has no fleet floors — the merged \
+                 baseline below pins them"
+            ),
+        }
+    }
+
     if failures.is_empty() {
         println!("bench_gate: OK");
         // One ready-to-commit document covering every measured section
@@ -292,26 +358,19 @@ fn run(
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (baseline, current, scale, compress, persist) = match args.as_slice() {
-        [b, c] => (b.as_str(), c.as_str(), None, None, None),
-        [b, c, s] => (b.as_str(), c.as_str(), Some(s.as_str()), None, None),
-        [b, c, s, z] => (b.as_str(), c.as_str(), Some(s.as_str()), Some(z.as_str()), None),
-        [b, c, s, z, p] => (
-            b.as_str(),
-            c.as_str(),
-            Some(s.as_str()),
-            Some(z.as_str()),
-            Some(p.as_str()),
-        ),
+    let (baseline, current, rest) = match args.as_slice() {
+        [b, c, rest @ ..] if rest.len() <= 4 => (b.as_str(), c.as_str(), rest),
         _ => {
             eprintln!(
                 "usage: bench_gate <BENCH_baseline.json> <BENCH_coordinator.json> \
-                 [<BENCH_scale.json> [<BENCH_compress.json> [<BENCH_persist.json>]]]"
+                 [<BENCH_scale.json> [<BENCH_compress.json> [<BENCH_persist.json> \
+                 [<BENCH_fleet.json>]]]]"
             );
             return ExitCode::FAILURE;
         }
     };
-    match run(baseline, current, scale, compress, persist) {
+    let opt = |i: usize| rest.get(i).map(String::as_str);
+    match run(baseline, current, opt(0), opt(1), opt(2), opt(3)) {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("bench_gate: FAIL: {e}");
@@ -406,16 +465,35 @@ mod tests {
             .to_pretty()
     }
 
+    fn doc_everything(scaling: f64, merge: f64) -> String {
+        Json::parse(&doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0))
+            .unwrap()
+            .set(
+                "fleet",
+                Json::obj().set("scaling_2w", scaling).set("merge_overhead", merge),
+            )
+            .to_pretty()
+    }
+
+    fn fleet_doc(scaling: f64, merge: f64) -> String {
+        Json::obj()
+            .set(
+                "gate",
+                Json::obj().set("scaling_2w", scaling).set("merge_overhead", merge),
+            )
+            .to_pretty()
+    }
+
     #[test]
     fn passes_on_equal_and_improved() {
         let base = write_tmp("base.json", &doc(40.0, 4.0));
         let same = write_tmp("same.json", &doc(40.0, 4.0));
         let better = write_tmp("better.json", &doc(55.0, 3.0));
-        assert!(run(&base, &same, None, None, None).is_ok());
-        assert!(run(&base, &better, None, None, None).is_ok());
+        assert!(run(&base, &same, None, None, None, None).is_ok());
+        assert!(run(&base, &better, None, None, None, None).is_ok());
         // Within the 20% latency tolerance.
         let near = write_tmp("near.json", &doc(40.0, 4.8));
-        assert!(run(&base, &near, None, None, None).is_ok());
+        assert!(run(&base, &near, None, None, None, None).is_ok());
     }
 
     #[test]
@@ -423,11 +501,11 @@ mod tests {
         let base = write_tmp("base2.json", &doc(40.0, 4.0));
         let fewer = write_tmp("fewer.json", &doc(39.0, 4.0));
         let slower = write_tmp("slower.json", &doc(40.0, 4.81));
-        assert!(run(&base, &fewer, None, None, None).is_err());
-        assert!(run(&base, &slower, None, None, None).is_err());
-        assert!(run("/nonexistent.json", &base, None, None, None).is_err());
+        assert!(run(&base, &fewer, None, None, None, None).is_err());
+        assert!(run(&base, &slower, None, None, None, None).is_err());
+        assert!(run("/nonexistent.json", &base, None, None, None, None).is_err());
         let junk = write_tmp("junk.json", "not json");
-        assert!(run(&junk, &base, None, None, None).is_err());
+        assert!(run(&junk, &base, None, None, None, None).is_err());
     }
 
     #[test]
@@ -437,17 +515,17 @@ mod tests {
         // Within tolerance (20% of 10.0 → floor 8.0) and above.
         let ok = write_tmp("scale_ok.json", &scale_doc(8.5));
         let better = write_tmp("scale_better.json", &scale_doc(30.0));
-        assert!(run(&base, &cur, Some(&ok), None, None).is_ok());
-        assert!(run(&base, &cur, Some(&better), None, None).is_ok());
+        assert!(run(&base, &cur, Some(&ok), None, None, None).is_ok());
+        assert!(run(&base, &cur, Some(&better), None, None, None).is_ok());
         // Below the floor: fail.
         let bad = write_tmp("scale_bad.json", &scale_doc(7.9));
-        assert!(run(&base, &cur, Some(&bad), None, None).is_err());
+        assert!(run(&base, &cur, Some(&bad), None, None, None).is_err());
         // Malformed scale summary: fail even though coordinator gates pass.
         let junk = write_tmp("scale_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&junk), None, None).is_err());
+        assert!(run(&base, &cur, Some(&junk), None, None, None).is_err());
         // Baseline without a pinned scale value: informational pass.
         let base_unpinned = write_tmp("base4.json", &doc(40.0, 4.0));
-        assert!(run(&base_unpinned, &cur, Some(&ok), None, None).is_ok());
+        assert!(run(&base_unpinned, &cur, Some(&ok), None, None, None).is_ok());
     }
 
     #[test]
@@ -458,22 +536,22 @@ mod tests {
         // At or above both floors: pass.
         let ok = write_tmp("comp_ok.json", &compress_doc(2.9, 400.0));
         let exact = write_tmp("comp_exact.json", &compress_doc(2.0, 25.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&ok), None).is_ok());
-        assert!(run(&base, &cur, Some(&scale), Some(&exact), None).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&ok), None, None).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&exact), None, None).is_ok());
         // Ratio below the floor: fail (no extra tolerance on floors).
         let thin = write_tmp("comp_thin.json", &compress_doc(1.9, 400.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&thin), None).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&thin), None, None).is_err());
         // Decode throughput below the floor: fail.
         let slow = write_tmp("comp_slow.json", &compress_doc(2.9, 20.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&slow), None).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&slow), None, None).is_err());
         // Malformed compress summary: fail.
         let junk = write_tmp("comp_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&scale), Some(&junk), None).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&junk), None, None).is_err());
         // Baseline without compress floors: informational pass.
         let base_nofloor = write_tmp("base6.json", &doc_with_scale(40.0, 4.0, 10.0));
-        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&ok), None).is_ok());
+        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&ok), None, None).is_ok());
         // Compress artifact without the scale artifact also works.
-        assert!(run(&base, &cur, None, Some(&ok), None).is_ok());
+        assert!(run(&base, &cur, None, Some(&ok), None, None).is_ok());
     }
 
     #[test]
@@ -486,22 +564,54 @@ mod tests {
         // At/above both floors: pass.
         let ok = write_tmp("pers_ok.json", &persist_doc(120.0, 90_000.0));
         let exact = write_tmp("pers_exact.json", &persist_doc(20.0, 5000.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&ok)).is_ok());
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&exact)).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&ok), None).is_ok());
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&exact), None).is_ok());
         // Append below floor: fail.
         let slow_append = write_tmp("pers_slow_a.json", &persist_doc(19.0, 90_000.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_append)).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_append), None).is_err());
         // Recovery below floor: fail.
         let slow_rec = write_tmp("pers_slow_r.json", &persist_doc(120.0, 4000.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_rec)).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_rec), None).is_err());
         // Malformed persist summary: fail.
         let junk = write_tmp("pers_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&junk)).is_err());
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&junk), None).is_err());
         // Baseline without persist floors: informational pass.
         let base_nofloor = write_tmp("base8.json", &doc_full(40.0, 4.0, 10.0, 2.0, 25.0));
-        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&comp), Some(&ok)).is_ok());
+        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&comp), Some(&ok), None).is_ok());
         // Persist artifact alone (no scale/compress) also works.
-        assert!(run(&base, &cur, None, None, Some(&ok)).is_ok());
+        assert!(run(&base, &cur, None, None, Some(&ok), None).is_ok());
+    }
+
+    #[test]
+    fn fleet_gate_checks_scaling_and_merge() {
+        let base = write_tmp("base9.json", &doc_everything(1.5, 0.5));
+        let cur = write_tmp("cur9.json", &doc(40.0, 4.0));
+        // At/above the scaling floor and under the merge ceiling: pass.
+        let ok = write_tmp("fleet_ok.json", &fleet_doc(1.8, 0.02));
+        let exact = write_tmp("fleet_exact.json", &fleet_doc(1.5, 0.5));
+        assert!(run(&base, &cur, None, None, None, Some(&ok)).is_ok());
+        assert!(run(&base, &cur, None, None, None, Some(&exact)).is_ok());
+        // Scaling below the floor: fail (no extra tolerance on floors).
+        let flat = write_tmp("fleet_flat.json", &fleet_doc(1.4, 0.02));
+        assert!(run(&base, &cur, None, None, None, Some(&flat)).is_err());
+        // Merge overhead above the ceiling: fail.
+        let heavy = write_tmp("fleet_heavy.json", &fleet_doc(1.8, 0.6));
+        assert!(run(&base, &cur, None, None, None, Some(&heavy)).is_err());
+        // Malformed fleet summary: fail even though the rest passes.
+        let junk = write_tmp("fleet_junk.json", "{}");
+        assert!(run(&base, &cur, None, None, None, Some(&junk)).is_err());
+        // Baseline without fleet floors: informational pass.
+        let base_nofloor =
+            write_tmp("base10.json", &doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0));
+        assert!(run(&base_nofloor, &cur, None, None, None, Some(&ok)).is_ok());
+        // The fleet artifact composes with the other positional artifacts.
+        let scale = write_tmp("scale9.json", &scale_doc(12.0));
+        let comp = write_tmp("comp9.json", &compress_doc(2.9, 400.0));
+        let pers = write_tmp("pers9.json", &persist_doc(120.0, 90_000.0));
+        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&ok)).is_ok());
+        assert!(
+            run(&base, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&flat)).is_err()
+        );
     }
 
     #[test]
@@ -511,26 +621,33 @@ mod tests {
             &Json::obj().set("bootstrap", true).to_pretty(),
         );
         let cur = write_tmp("cur.json", &doc(12.0, 2.0));
-        assert!(run(&boot, &cur, None, None, None).is_ok());
+        assert!(run(&boot, &cur, None, None, None, None).is_ok());
         // Bootstrap still requires well-formed current summaries.
         let junk = write_tmp("junk2.json", "{}");
-        assert!(run(&boot, &junk, None, None, None).is_err());
+        assert!(run(&boot, &junk, None, None, None, None).is_err());
         let scale = write_tmp("boot_scale.json", &scale_doc(12.5));
-        assert!(run(&boot, &cur, Some(&scale), None, None).is_ok());
-        assert!(run(&boot, &cur, Some(&junk), None, None).is_err());
+        assert!(run(&boot, &cur, Some(&scale), None, None, None).is_ok());
+        assert!(run(&boot, &cur, Some(&junk), None, None, None).is_err());
         let comp = write_tmp("boot_comp.json", &compress_doc(3.0, 500.0));
-        assert!(run(&boot, &cur, Some(&scale), Some(&comp), None).is_ok());
-        assert!(run(&boot, &cur, Some(&scale), Some(&junk), None).is_err());
+        assert!(run(&boot, &cur, Some(&scale), Some(&comp), None, None).is_ok());
+        assert!(run(&boot, &cur, Some(&scale), Some(&junk), None, None).is_err());
         let pers = write_tmp("boot_pers.json", &persist_doc(100.0, 50_000.0));
-        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers)).is_ok());
-        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&junk)).is_err());
+        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers), None).is_ok());
+        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&junk), None).is_err());
+        let fleet = write_tmp("boot_fleet.json", &fleet_doc(1.9, 0.01));
+        assert!(
+            run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&fleet)).is_ok()
+        );
+        assert!(
+            run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&junk)).is_err()
+        );
     }
 
     #[test]
     fn pin_block_only_tightens_and_never_pins_wall_clock() {
         let at = |j: &Json, p: &[&str]| j.at(p).and_then(Json::as_f64);
-        let baseline = Json::parse(&doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0))
-            .expect("baseline doc");
+        let baseline =
+            Json::parse(&doc_everything(1.5, 0.5)).expect("baseline doc");
         // A run that passed within tolerance (worse p99, lower speedup)
         // must not loosen anything; genuine improvements do tighten.
         let cur = Current {
@@ -539,6 +656,7 @@ mod tests {
             speedup: Some(8.5),       // worse than 10.0 (within 20%) → stays 10.0
             compress: Some((2.8, 310.0)), // ratio better; mbps is wall-clock
             persist: Some((500.0, 1_000_000.0)), // both wall-clock → floors stay
+            fleet: Some((1.9, 0.01)), // core-count dependent → floors stay
         };
         let pin = cur.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
@@ -549,6 +667,11 @@ mod tests {
         assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(25.0));
         assert_eq!(at(&pin, &["persist", "append_mbps"]), Some(20.0));
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(5000.0));
+        // Fleet scaling floor / merge ceiling keep their committed values
+        // even when this (possibly many-core, lightly loaded) run beat
+        // them.
+        assert_eq!(at(&pin, &["fleet", "scaling_2w"]), Some(1.5));
+        assert_eq!(at(&pin, &["fleet", "merge_overhead"]), Some(0.5));
         // Improvements in the latency/speedup direction do ratchet.
         let better = Current {
             coalesced: 40.0,
@@ -556,6 +679,7 @@ mod tests {
             speedup: Some(30.0),
             compress: Some((1.5, 310.0)), // worse ratio → keeps the 2.0 floor
             persist: None,
+            fleet: None,
         };
         let pin = better.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(3.0));
@@ -563,8 +687,10 @@ mod tests {
         assert_eq!(at(&pin, &["compress", "ratio"]), Some(2.0));
         // Sections not measured stay absent so they can't un-pin floors.
         assert_eq!(pin.get("persist"), None);
+        assert_eq!(pin.get("fleet"), None);
         // No committed floors (bootstrap-style baseline): counters pin
-        // as measured, wall-clock floors get 10x headroom.
+        // as measured, wall-clock floors get 10x headroom, the fleet
+        // scaling floor 1.25x headroom, the merge ceiling 10x headroom.
         let boot = Json::obj().set("bootstrap", true);
         let pin = cur.pin_block(&boot);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
@@ -573,10 +699,19 @@ mod tests {
         assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(31.0));
         assert_eq!(at(&pin, &["persist", "append_mbps"]), Some(50.0));
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(100_000.0));
-        let sparse =
-            Current { coalesced: 1.0, p99: 1.0, speedup: None, compress: None, persist: None };
+        assert_eq!(at(&pin, &["fleet", "scaling_2w"]), Some(1.9 / 1.25));
+        assert_eq!(at(&pin, &["fleet", "merge_overhead"]), Some(0.01 * 10.0));
+        let sparse = Current {
+            coalesced: 1.0,
+            p99: 1.0,
+            speedup: None,
+            compress: None,
+            persist: None,
+            fleet: None,
+        };
         assert_eq!(sparse.pin_block(&boot).get("scale"), None);
         assert_eq!(sparse.pin_block(&boot).get("compress"), None);
         assert_eq!(sparse.pin_block(&boot).get("persist"), None);
+        assert_eq!(sparse.pin_block(&boot).get("fleet"), None);
     }
 }

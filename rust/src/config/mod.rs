@@ -68,6 +68,12 @@ pub struct ExperimentConfig {
     /// Auto-compact the event log after this many events accumulate in
     /// the tail (0 = only on explicit `compact_now`).
     pub compact_every: u64,
+    /// Shard workers for the fleet service: 1 (default) runs the single
+    /// unsharded `UnlearningService` path byte-identically; N > 1 runs N
+    /// independent per-shard workers behind a UCDP routing front-end
+    /// (each with its own engine, store, battery, and — when durability
+    /// is on — its own WAL under `persist_dir/shard-<k>/`).
+    pub fleet_workers: usize,
     pub model: ModelProfile,
     pub dataset: DatasetSpec,
 }
@@ -102,6 +108,7 @@ impl Default for ExperimentConfig {
             durability: DurabilityMode::Off,
             persist_dir: "cause_persist".to_string(),
             compact_every: 512,
+            fleet_workers: 1,
             model: profiles::RESNET34,
             dataset: CIFAR10,
         }
@@ -174,6 +181,12 @@ impl ExperimentConfig {
         self
     }
 
+    /// Run the service as a sharded fleet with this many workers.
+    pub fn with_fleet_workers(mut self, workers: usize) -> Self {
+        self.fleet_workers = workers;
+        self
+    }
+
     /// Apply a `key = value` assignment (config file / CLI override).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
@@ -232,6 +245,7 @@ impl ExperimentConfig {
                 self.persist_dir = v.to_string();
             }
             "compact_every" => self.compact_every = v.parse()?,
+            "fleet_workers" => self.fleet_workers = v.parse()?,
             "model" => {
                 self.model = ModelProfile::by_name(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown model '{v}'"))?
@@ -278,6 +292,9 @@ impl ExperimentConfig {
         if self.sc_p < 0.0 {
             bail!("sc_p must be >= 0");
         }
+        if self.fleet_workers == 0 {
+            bail!("fleet_workers must be >= 1");
+        }
         Ok(())
     }
 }
@@ -303,6 +320,20 @@ mod tests {
         assert_eq!(c.batch_slo, 0);
         assert_eq!(c.store_meter, StoreMeter::Slots);
         assert_eq!(c.codec, CodecMode::Sparse);
+        assert_eq!(c.fleet_workers, 1, "default is the unsharded service");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fleet_workers_knob() {
+        let mut c = ExperimentConfig::default();
+        c.apply("fleet_workers", "4").unwrap();
+        assert_eq!(c.fleet_workers, 4);
+        assert!(c.apply("fleet_workers", "many").is_err());
+        c.fleet_workers = 0;
+        assert!(c.validate().is_err(), "0 workers is no fleet at all");
+        let c = ExperimentConfig::default().with_fleet_workers(2);
+        assert_eq!(c.fleet_workers, 2);
         c.validate().unwrap();
     }
 

@@ -16,6 +16,7 @@ use anyhow::Result;
 
 use crate::config::ExperimentConfig;
 use crate::coordinator::engine::{Engine, EvalPolicy};
+use crate::fleet::FleetService;
 use crate::memory::{ModelStore, StoreMeter};
 use crate::partition::{ClassBased, Partitioner, Ucdp, Uniform};
 use crate::persist::{Durability, DurabilityMode};
@@ -213,6 +214,46 @@ impl SystemVariant {
         }
         Ok(svc)
     }
+
+    /// Build the sharded fleet service: `cfg.fleet_workers` shard workers
+    /// (cost backend), each a full [`build_service`]-shaped stack — same
+    /// planner, its own engine seeded from
+    /// [`FleetService::derive_shard_seeds`] — behind the routing front
+    /// end. With durability enabled each shard journals under
+    /// `persist_dir/shard-<k>/` (a 1-worker fleet reuses `persist_dir`
+    /// itself, staying drop-in compatible with unsharded WALs).
+    ///
+    /// `fleet_workers = 1` builds a fleet that replays
+    /// [`build_service`]'s output byte-identically.
+    ///
+    /// [`build_service`]: SystemVariant::build_service
+    pub fn build_fleet(&self, cfg: &ExperimentConfig) -> Result<FleetService> {
+        cfg.validate()?;
+        let n = cfg.fleet_workers;
+        let seeds = FleetService::derive_shard_seeds(cfg.seed, n);
+        let variant = *self;
+        let policy = self.batch_policy(cfg);
+        let window = cfg.batch_window;
+        let builders = seeds
+            .iter()
+            .map(|&seed| {
+                let mut shard_cfg = cfg.clone();
+                shard_cfg.seed = seed;
+                // Durability is attached per-shard by the fleet below.
+                shard_cfg.durability = DurabilityMode::Off;
+                Box::new(move || {
+                    let engine = variant.build_cost(&shard_cfg)?;
+                    Ok(UnlearningService::new(engine)
+                        .with_planner(BatchPlanner::new(policy, window)))
+                }) as Box<dyn FnOnce() -> Result<UnlearningService> + Send>
+            })
+            .collect();
+        let mut fleet = FleetService::new(builders, cfg.seed)?;
+        if cfg.durability != DurabilityMode::Off {
+            fleet.attach_durability_disk(cfg.durability, &cfg.persist_dir, cfg.compact_every)?;
+        }
+        Ok(fleet)
+    }
 }
 
 /// Convenience façade used by the examples: a ready-to-run CAUSE system.
@@ -281,6 +322,23 @@ mod tests {
         assert_eq!(svc.planner().policy, BatchPolicy::Coalesce);
         let svc = SystemVariant::Omp70.build_service(&cfg).unwrap();
         assert_eq!(svc.planner().policy, BatchPolicy::Fcfs);
+    }
+
+    #[test]
+    fn build_fleet_validates_and_constructs() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.fleet_workers = 0;
+        assert!(SystemVariant::Cause.build_fleet(&cfg).is_err());
+        cfg.fleet_workers = 2;
+        let fleet = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+        assert_eq!(fleet.workers(), 2);
+        // Shard 0 runs the root seed; shard 1 a derived, distinct stream.
+        assert_eq!(fleet.shard_seeds()[0], cfg.seed);
+        assert_ne!(fleet.shard_seeds()[1], cfg.seed);
+        assert_eq!(
+            fleet.shard_seeds(),
+            FleetService::derive_shard_seeds(cfg.seed, 2).as_slice()
+        );
     }
 
     #[test]

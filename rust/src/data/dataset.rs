@@ -158,6 +158,32 @@ impl EdgePopulation {
         self.rounds.iter().flatten().map(|b| b.samples).sum()
     }
 
+    /// Restrict to blocks owned by users satisfying `keep` (fleet
+    /// sharding: each worker ingests only its shard's slice of the
+    /// population). Block ids, round numbers, and per-round ordering are
+    /// preserved, so an all-true predicate is the identity and the union
+    /// of disjoint filters replays the full population exactly.
+    pub fn filter_users(&self, keep: impl Fn(UserId) -> bool) -> EdgePopulation {
+        let rounds: Vec<Vec<DataBlock>> = self
+            .rounds
+            .iter()
+            .map(|blocks| blocks.iter().filter(|b| keep(b.user)).cloned().collect())
+            .collect();
+        let mut by_id = BTreeMap::new();
+        for (ri, blocks) in rounds.iter().enumerate() {
+            for (idx, b) in blocks.iter().enumerate() {
+                by_id.insert(b.id, (ri as u32 + 1, idx));
+            }
+        }
+        EdgePopulation {
+            cfg: self.cfg.clone(),
+            rounds,
+            by_id,
+            user_mix: self.user_mix.clone(),
+            proto_seed: self.proto_seed,
+        }
+    }
+
     pub fn rounds(&self) -> u32 {
         self.cfg.rounds
     }

@@ -1,0 +1,458 @@
+//! Sharded fleet service: N independent shard workers behind the
+//! unsharded [`UnlearningService`] surface.
+//!
+//! [`FleetService`] promotes UCDP's user→shard map to a front-end
+//! [`Router`] and runs one worker per shard, each owning a full service
+//! stack — engine, model store, battery, batch planner, and (when
+//! durability is on) its own write-ahead log under
+//! `persist_dir/shard-<k>/`. Submits and round ingests fan out over
+//! channels by the router's sticky assignment; batched drains run
+//! windows per-shard but admit battery energy centrally through a
+//! two-phase price-then-commit exchange; per-shard receipts merge into
+//! one fleet receipt with deterministic ordering given the routing seed.
+//!
+//! **Keystone invariant**: `fleet_workers = 1` replays the unsharded
+//! service byte-identically — same receipts, RSN, store stats, and
+//! journal. Worker 0 runs the root config seed, routing is a no-op over
+//! one shard, and admission verdicts come from the same
+//! [`admission_decide`] the standalone service calls inline, so every
+//! transition is the same function applied to the same state.
+//!
+//! Per-shard engine seeds derive deterministically from
+//! `(routing_seed, shard)` via the crate PRNG's fork discipline
+//! ([`FleetService::derive_shard_seeds`]), and surface in the fleet
+//! state receipt so recovery of any shard is seed-auditable.
+
+mod router;
+mod worker;
+
+pub use router::Router;
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::data::dataset::{EdgePopulation, UserId};
+use crate::data::trace::UnlearnRequest;
+use crate::metrics::RunMetrics;
+use crate::partition::ShardId;
+use crate::persist::recovery::RecoveryReport;
+use crate::persist::{Durability, DurabilityMode};
+use crate::prng::Rng;
+use crate::sim::Battery;
+use crate::unlearning::service::admission_decide;
+use crate::unlearning::{BatchReport, UnlearningService};
+use crate::util::Json;
+
+use worker::{Cmd, Reply, WorkerHandle};
+
+/// A fleet of shard workers behind the unsharded service surface.
+pub struct FleetService {
+    router: Router,
+    workers: Vec<WorkerHandle>,
+    events: Receiver<(usize, Reply)>,
+    seeds: Vec<u64>,
+    /// Fleet-level round counter (mirrors each worker's ingest count).
+    round: u32,
+}
+
+impl FleetService {
+    /// Derive the per-shard engine seeds from the routing seed. Shard 0
+    /// keeps the root seed itself — that is what makes a 1-worker fleet
+    /// byte-identical to an unsharded service built from the same config
+    /// — and every later shard gets an independent stream from the crate
+    /// PRNG's fork discipline (root stream advanced once per shard, so
+    /// the derivation is order-independent of fleet operations).
+    pub fn derive_shard_seeds(routing_seed: u64, workers: usize) -> Vec<u64> {
+        let mut root = Rng::new(routing_seed);
+        (0..workers)
+            .map(|k| if k == 0 { routing_seed } else { root.fork(k as u64).next_u64() })
+            .collect()
+    }
+
+    /// Spawn one worker per builder. Each closure runs *inside* its
+    /// worker thread (the engine's trainer is not `Send`), and must
+    /// construct the shard's full service — engine, planner, battery —
+    /// but **not** durability, which is attached per-shard afterwards.
+    /// `routing_seed` seeds the router's UCDP table and anchors
+    /// [`FleetService::shard_seeds`].
+    pub fn new(
+        builders: Vec<Box<dyn FnOnce() -> Result<UnlearningService> + Send>>,
+        routing_seed: u64,
+    ) -> Result<FleetService> {
+        if builders.is_empty() {
+            bail!("fleet needs at least one worker");
+        }
+        let n = builders.len();
+        let (event_tx, event_rx) = std::sync::mpsc::channel::<(usize, Reply)>();
+        let workers: Vec<WorkerHandle> = builders
+            .into_iter()
+            .enumerate()
+            .map(|(k, build)| worker::spawn(k, build, event_tx.clone()))
+            .collect();
+        drop(event_tx);
+        let fleet = FleetService {
+            router: Router::new(n, routing_seed),
+            workers,
+            events: event_rx,
+            seeds: FleetService::derive_shard_seeds(routing_seed, n),
+            round: 0,
+        };
+        // One Ready (or builder Err) per worker; first failure wins in
+        // shard order. Drop shuts the healthy workers down.
+        let ready = fleet.collect(|reply| match reply {
+            Reply::Ready => Ok(Ok(())),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?;
+        for (k, r) in ready.into_iter().enumerate() {
+            if let Err(e) = r {
+                return Err(anyhow!("fleet worker {k} failed to build: {e}"));
+            }
+        }
+        Ok(fleet)
+    }
+
+    /// Collect exactly one terminal reply per worker, answering
+    /// [`Reply::Quote`]s with centrally computed admission verdicts as
+    /// they arrive. `classify` returns `Ok(v)` for a terminal reply or
+    /// `Err(reply)` for an unexpected one. Results land in shard order.
+    fn collect<T>(&self, mut classify: impl FnMut(Reply) -> Result<T, Reply>) -> Result<Vec<T>> {
+        let n = self.workers.len();
+        let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+        let mut remaining = n;
+        while remaining > 0 {
+            let (k, reply) = self
+                .events
+                .recv()
+                .map_err(|_| anyhow!("fleet worker hung up"))?;
+            match reply {
+                Reply::Quote { costs, battery } => {
+                    let verdict = admission_decide(costs.as_deref(), battery.as_ref());
+                    self.workers[k]
+                        .grant
+                        .send(verdict)
+                        .map_err(|_| anyhow!("fleet worker {k} hung up awaiting grant"))?;
+                }
+                other => match classify(other) {
+                    Ok(v) => {
+                        debug_assert!(out[k].is_none(), "one terminal reply per worker");
+                        out[k] = Some(v);
+                        remaining -= 1;
+                    }
+                    Err(unexpected) => {
+                        bail!("unexpected reply from fleet worker {k}: {unexpected:?}")
+                    }
+                },
+            }
+        }
+        Ok(out.into_iter().map(|v| v.expect("all workers replied")).collect())
+    }
+
+    fn send(&self, k: usize, cmd: Cmd) {
+        self.workers[k].cmd.send(cmd).expect("fleet worker hung up");
+    }
+
+    /// Route and enqueue a request on its user's home shard (FCFS within
+    /// the shard, arrival stamped on the shard's service clock — which
+    /// all workers advance in lockstep).
+    pub fn submit(&mut self, req: UnlearnRequest) {
+        let k = self.router.route(req.user, req.total_samples());
+        self.send(k, Cmd::Submit(req));
+    }
+
+    /// Run one training round: route the round's blocks by user, hand
+    /// each worker its shard's slice of the population, and ingest on
+    /// every worker (possibly an empty slice — round counters advance in
+    /// lockstep fleet-wide).
+    pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
+        self.round += 1;
+        for b in pop.blocks_at(self.round) {
+            self.router.route(b.user, b.samples);
+        }
+        let n = self.workers.len();
+        for k in 0..n {
+            let slice = if n == 1 {
+                pop.clone()
+            } else {
+                pop.filter_users(|u| self.router.lookup(u) == Some(k))
+            };
+            self.send(k, Cmd::Ingest(Box::new(slice)));
+        }
+        let acks = self.collect(|reply| match reply {
+            Reply::Ingested => Ok(Ok(())),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?;
+        for (k, r) in acks.into_iter().enumerate() {
+            if let Err(e) = r {
+                return Err(anyhow!("fleet worker {k} ingest failed: {e}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Advance every shard's service clock (fleet clocks move in
+    /// lockstep).
+    pub fn advance(&mut self, ticks: u64) {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::Advance(ticks));
+        }
+    }
+
+    /// Advance harvest time on every shard's battery.
+    pub fn harvest(&mut self, secs: f64) {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::Harvest(secs));
+        }
+    }
+
+    /// Give every shard its own battery (clones of `battery` — each
+    /// worker draws from its own charge; admission stays centralized).
+    pub fn with_battery(self, battery: Battery) -> Self {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::SetBattery(battery.clone()));
+        }
+        self
+    }
+
+    /// Drain batched windows on every shard, admitting each priced
+    /// window centrally (two-phase price-then-commit). Returns the total
+    /// requests served across the fleet; on shard errors, the first in
+    /// shard order (after every shard has settled, so no replies are
+    /// left in flight).
+    pub fn drain_batched(&mut self) -> Result<usize> {
+        self.drain(false)
+    }
+
+    /// Drain everything queued regardless of deadline slack (end of run
+    /// / device shutdown), fleet-wide.
+    pub fn flush_batched(&mut self) -> Result<usize> {
+        self.drain(true)
+    }
+
+    fn drain(&mut self, flush: bool) -> Result<usize> {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::Drain { flush });
+        }
+        let results = self.collect(|reply| match reply {
+            Reply::Served(n) => Ok(Ok(n)),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?;
+        let mut served = 0;
+        for (k, r) in results.into_iter().enumerate() {
+            match r {
+                Ok(n) => served += n,
+                Err(e) => return Err(anyhow!("fleet worker {k} drain failed: {e}")),
+            }
+        }
+        Ok(served)
+    }
+
+    /// Attach one durability journal per shard (index = shard). Each
+    /// worker recovers whatever its filesystem holds, then arms
+    /// log-before-ack journaling.
+    pub fn attach_durability(&mut self, ds: Vec<Durability>) -> Result<Vec<RecoveryReport>> {
+        if ds.len() != self.workers.len() {
+            bail!(
+                "fleet has {} workers but {} durability journals",
+                self.workers.len(),
+                ds.len()
+            );
+        }
+        for (k, d) in ds.into_iter().enumerate() {
+            self.send(k, Cmd::AttachDurability(d));
+        }
+        let reports = self.collect(|reply| match reply {
+            Reply::Attached(r) => Ok(Ok(*r)),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?;
+        reports
+            .into_iter()
+            .enumerate()
+            .map(|(k, r)| r.map_err(|e| anyhow!("fleet worker {k} recovery failed: {e}")))
+            .collect()
+    }
+
+    /// Attach per-shard disk journals under `dir`. A single-worker fleet
+    /// uses `dir` itself — its WAL is drop-in compatible with (and can
+    /// recover) an unsharded service's persist dir; a real fleet
+    /// journals under `dir/shard-<k>/`.
+    pub fn attach_durability_disk(
+        &mut self,
+        mode: DurabilityMode,
+        dir: &str,
+        compact_every: u64,
+    ) -> Result<Vec<RecoveryReport>> {
+        let n = self.workers.len();
+        let ds = (0..n)
+            .map(|k| {
+                let shard_dir = if n == 1 {
+                    dir.to_string()
+                } else {
+                    format!("{dir}/shard-{k}")
+                };
+                Ok(Durability::disk(mode, shard_dir, compact_every)?)
+            })
+            .collect::<Result<Vec<Durability>>>()?;
+        self.attach_durability(ds)
+    }
+
+    /// Deterministic digest of the whole fleet. A 1-worker fleet returns
+    /// its only shard's receipt **verbatim** (the keystone equivalence:
+    /// byte-identical to [`UnlearningService::state_receipt`]); a real
+    /// fleet wraps per-shard receipts (shard order) with the routing
+    /// state — seed, epoch, active range, and the derived per-shard
+    /// engine seeds (hex, so full u64 precision survives JSON) for seed
+    /// auditing.
+    pub fn state_receipt(&self) -> Result<Json> {
+        let mut receipts = self.shard_receipts()?;
+        if receipts.len() == 1 {
+            return Ok(receipts.remove(0));
+        }
+        let routing = Json::obj()
+            .set("seed", format!("{:#018x}", self.router.seed()))
+            .set("epoch", self.router.epoch())
+            .set("active", self.router.active())
+            .set("workers", self.router.workers())
+            .set(
+                "shard_seeds",
+                Json::Arr(
+                    self.seeds
+                        .iter()
+                        .map(|s| Json::Str(format!("{s:#018x}")))
+                        .collect(),
+                ),
+            );
+        Ok(Json::obj()
+            .set("routing", routing)
+            .set("shards", Json::Arr(receipts)))
+    }
+
+    /// Per-shard state receipts in shard order.
+    pub fn shard_receipts(&self) -> Result<Vec<Json>> {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::Receipt);
+        }
+        let receipts = self.collect(|reply| match reply {
+            Reply::Receipt(j) => Ok(*j),
+            other => Err(other),
+        })?;
+        Ok(receipts)
+    }
+
+    /// Fleet-aggregate run metrics ([`RunMetrics::fleet_aggregate`] over
+    /// the shards in shard order; the identity for one worker).
+    pub fn metrics(&self) -> Result<RunMetrics> {
+        Ok(RunMetrics::fleet_aggregate(&self.shard_metrics()?))
+    }
+
+    /// Per-shard run metrics in shard order.
+    pub fn shard_metrics(&self) -> Result<Vec<RunMetrics>> {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::Metrics);
+        }
+        self.collect(|reply| match reply {
+            Reply::Metrics(m) => Ok(*m),
+            other => Err(other),
+        })
+    }
+
+    /// Per-window receipts, concatenated in shard order.
+    pub fn batch_log(&self) -> Result<Vec<BatchReport>> {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::BatchLog);
+        }
+        let logs = self.collect(|reply| match reply {
+            Reply::BatchLog(l) => Ok(l),
+            other => Err(other),
+        })?;
+        Ok(logs.into_iter().flatten().collect())
+    }
+
+    fn counts(&self) -> Result<Vec<(usize, usize, usize)>> {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::Counts);
+        }
+        self.collect(|reply| match reply {
+            Reply::Counts { pending, carryover_requests, carryover_lineages } => {
+                Ok((pending, carryover_requests, carryover_lineages))
+            }
+            other => Err(other),
+        })
+    }
+
+    /// Requests still queued across the fleet.
+    pub fn pending(&self) -> Result<usize> {
+        Ok(self.counts()?.iter().map(|c| c.0).sum())
+    }
+
+    /// Requests parked in carryover plans across the fleet.
+    pub fn carryover_requests(&self) -> Result<usize> {
+        Ok(self.counts()?.iter().map(|c| c.1).sum())
+    }
+
+    /// Lineages with parked replay work across the fleet (shutdown loops
+    /// poll this, exactly as for the unsharded service).
+    pub fn carryover_lineages(&self) -> Result<usize> {
+        Ok(self.counts()?.iter().map(|c| c.2).sum())
+    }
+
+    /// Events currently in the fleet's log tails (sum over shards).
+    pub fn journal_events(&self) -> Result<u64> {
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::JournalEvents);
+        }
+        let events = self.collect(|reply| match reply {
+            Reply::Events(n) => Ok(n),
+            other => Err(other),
+        })?;
+        Ok(events.iter().sum())
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Routing epoch (bumped by shard-range changes; see
+    /// [`Router::set_active`]).
+    pub fn epoch(&self) -> u64 {
+        self.router.epoch()
+    }
+
+    /// Narrow (or re-widen) the shard range offered to new users — the
+    /// routing-layer image of a shard-controller shrink. Existing users
+    /// keep routing to the shard holding their past data.
+    pub fn set_active_shards(&mut self, n: usize) {
+        self.router.set_active(n);
+    }
+
+    pub fn active_shards(&self) -> usize {
+        self.router.active()
+    }
+
+    /// The derived per-shard engine seeds (shard 0 = the routing seed).
+    pub fn shard_seeds(&self) -> &[u64] {
+        &self.seeds
+    }
+
+    /// A user's home shard, if they have ever been routed.
+    pub fn shard_of(&self, user: UserId) -> Option<ShardId> {
+        self.router.lookup(user)
+    }
+}
+
+impl Drop for FleetService {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.cmd.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(join) = w.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}

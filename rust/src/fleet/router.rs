@@ -1,0 +1,123 @@
+//! The fleet's routing layer: UCDP's user→shard map promoted from an
+//! engine-internal partitioner detail to the front door of the sharded
+//! service.
+//!
+//! The router owns its own [`Ucdp`] instance (seeded from the routing
+//! seed, independent of each worker engine's internal partitioner) and
+//! resolves every submit / round block through [`Ucdp::route`] — the
+//! sticky variant of the paper's Algorithm 1 greedy: a user's first
+//! appearance is placed on the θ̄-balancing shard, and every later
+//! appearance returns home regardless of how the active shard count has
+//! moved since. That stickiness is the fleet's locality invariant: a
+//! worker holds *all* of a user's past data, so an unlearning request
+//! never fans out across shards.
+//!
+//! Shard-controller shrink/re-home decisions surface here as **routing
+//! epoch bumps**: [`Router::set_active`] narrows (or re-widens) the shard
+//! range offered to *new* users and increments the epoch, while existing
+//! users keep routing to their frozen home shard. Receipts carry the
+//! epoch so merged fleet output is auditable against the routing history.
+
+use crate::data::dataset::UserId;
+use crate::partition::{ShardId, Ucdp};
+
+/// User→shard routing for a fleet of `workers` shard workers.
+pub struct Router {
+    table: Ucdp,
+    workers: usize,
+    /// Shards currently offered to new users (`1..=workers`).
+    active: usize,
+    /// Bumped on every active-range change (shrink or re-widen).
+    epoch: u64,
+    seed: u64,
+}
+
+impl Router {
+    pub fn new(workers: usize, seed: u64) -> Router {
+        Router {
+            table: Ucdp::new(workers, seed),
+            workers,
+            active: workers,
+            epoch: 0,
+            seed,
+        }
+    }
+
+    /// Route `size` samples of `user` to their home shard, creating the
+    /// assignment (θ̄-greedy over the active range) on first sight.
+    pub fn route(&mut self, user: UserId, size: u64) -> ShardId {
+        self.table.route(user, size, self.active)
+    }
+
+    /// The user's home shard, if they have ever been routed.
+    pub fn lookup(&self, user: UserId) -> Option<ShardId> {
+        self.table.shard_of(user)
+    }
+
+    /// Narrow (or re-widen) the shard range offered to new users; clamped
+    /// to `1..=workers`. Existing users keep their frozen home shard —
+    /// this is the routing-layer image of a shard-controller shrink, so a
+    /// change bumps the routing epoch.
+    pub fn set_active(&mut self, n: usize) {
+        let n = n.clamp(1, self.workers);
+        if n != self.active {
+            self.active = n;
+            self.epoch += 1;
+        }
+    }
+
+    pub fn active(&self) -> usize {
+        self.active
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn routes_stay_in_active_range_and_stick() {
+        let mut r = Router::new(4, 7);
+        let homes: Vec<ShardId> =
+            (0..16).map(|u| r.route(UserId(u), 100)).collect();
+        assert!(homes.iter().all(|&s| s < 4));
+        assert!(homes.iter().any(|&s| s > 0), "greedy should spread users");
+        // Shrink: old users keep their home, new users land in range.
+        assert_eq!(r.epoch(), 0);
+        r.set_active(2);
+        assert_eq!(r.epoch(), 1);
+        for u in 0..16 {
+            assert_eq!(r.route(UserId(u), 50), homes[u as usize]);
+        }
+        for u in 16..32 {
+            assert!(r.route(UserId(u), 100) < 2);
+        }
+        // No-op change does not bump the epoch; a real one does.
+        r.set_active(2);
+        assert_eq!(r.epoch(), 1);
+        r.set_active(4);
+        assert_eq!(r.epoch(), 2);
+    }
+
+    #[test]
+    fn set_active_clamps() {
+        let mut r = Router::new(3, 1);
+        r.set_active(0);
+        assert_eq!(r.active(), 1);
+        r.set_active(99);
+        assert_eq!(r.active(), 3);
+        assert_eq!(r.workers(), 3);
+    }
+}

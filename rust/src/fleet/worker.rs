@@ -1,0 +1,221 @@
+//! One shard worker: a thread that owns a full [`UnlearningService`]
+//! (engine, model store, battery, batch planner, and — when durability is
+//! on — its own write-ahead log) and drives it from a command channel.
+//!
+//! The engine's trainer is deliberately not `Send` (the PJRT backend is
+//! `Rc`-based), so the service is **constructed inside the worker
+//! thread** from a `Send` builder closure; only plain data crosses the
+//! channels.
+//!
+//! Batched drains run the same window lifecycle as the standalone
+//! service, but stage 2 (battery admission) is delegated to the fleet
+//! front-end: for every priced window the worker publishes a
+//! [`Reply::Quote`] (per-lineage costs + a battery snapshot) on the
+//! shared event channel and blocks on its grant channel for the
+//! [`Admission`] verdict, then commits. The front-end computes the
+//! verdict with [`admission_decide`](crate::unlearning::service) — the
+//! exact function the standalone service calls inline — which is what
+//! makes a 1-worker fleet byte-identical to the unsharded service.
+
+use std::sync::mpsc::{Receiver, Sender};
+use std::thread::JoinHandle;
+
+use anyhow::Result;
+
+use crate::data::dataset::EdgePopulation;
+use crate::data::trace::UnlearnRequest;
+use crate::metrics::RunMetrics;
+use crate::persist::recovery::RecoveryReport;
+use crate::persist::Durability;
+use crate::sim::Battery;
+use crate::unlearning::service::Admission;
+use crate::unlearning::{BatchReport, UnlearningService};
+use crate::util::Json;
+
+/// Commands the fleet front-end sends a shard worker. Processed strictly
+/// in order; queries are answered on the shared event channel tagged with
+/// the worker's shard index.
+pub(crate) enum Cmd {
+    /// Ingest one training round over this shard's slice of the
+    /// population (possibly empty — every worker ingests every round so
+    /// engine round counters stay aligned across the fleet).
+    Ingest(Box<EdgePopulation>),
+    Submit(UnlearnRequest),
+    Advance(u64),
+    Harvest(f64),
+    SetBattery(Battery),
+    /// Drain batched windows (`flush` = close everything regardless of
+    /// deadline slack), quoting each window to the front-end for
+    /// admission. Terminates with `Served` or `Err`.
+    Drain { flush: bool },
+    AttachDurability(Durability),
+    Receipt,
+    Metrics,
+    BatchLog,
+    Counts,
+    JournalEvents,
+    Shutdown,
+}
+
+/// Worker→front-end replies, tagged `(shard, Reply)` on the shared event
+/// channel.
+#[derive(Debug)]
+pub(crate) enum Reply {
+    /// Builder succeeded; the worker is serving commands.
+    Ready,
+    Ingested,
+    /// A priced window awaiting the front-end's admission verdict.
+    Quote { costs: Option<Vec<f64>>, battery: Option<Battery> },
+    /// Drain finished; total requests served.
+    Served(usize),
+    Receipt(Box<Json>),
+    Metrics(Box<RunMetrics>),
+    BatchLog(Vec<BatchReport>),
+    Counts { pending: usize, carryover_requests: usize, carryover_lineages: usize },
+    Attached(Box<RecoveryReport>),
+    Events(u64),
+    Err(String),
+}
+
+/// Front-end handle to one worker thread.
+pub(crate) struct WorkerHandle {
+    pub(crate) cmd: Sender<Cmd>,
+    /// Admission grants for in-flight quotes (stage 2 of the window
+    /// lifecycle).
+    pub(crate) grant: Sender<Admission>,
+    pub(crate) join: Option<JoinHandle<()>>,
+}
+
+/// Spawn shard worker `k`. The service is built inside the thread; the
+/// first event is `Ready` on success or `Err` with the builder failure.
+pub(crate) fn spawn(
+    k: usize,
+    build: Box<dyn FnOnce() -> Result<UnlearningService> + Send>,
+    events: Sender<(usize, Reply)>,
+) -> WorkerHandle {
+    let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<Cmd>();
+    let (grant_tx, grant_rx) = std::sync::mpsc::channel::<Admission>();
+    let join = std::thread::Builder::new()
+        .name(format!("fleet-shard-{k}"))
+        .spawn(move || run(k, build, cmd_rx, grant_rx, events))
+        .expect("spawn fleet worker thread");
+    WorkerHandle { cmd: cmd_tx, grant: grant_tx, join: Some(join) }
+}
+
+fn run(
+    k: usize,
+    build: Box<dyn FnOnce() -> Result<UnlearningService> + Send>,
+    cmds: Receiver<Cmd>,
+    grants: Receiver<Admission>,
+    events: Sender<(usize, Reply)>,
+) {
+    let mut svc = match build() {
+        Ok(svc) => {
+            let _ = events.send((k, Reply::Ready));
+            svc
+        }
+        Err(e) => {
+            let _ = events.send((k, Reply::Err(format!("{e:#}"))));
+            return;
+        }
+    };
+    while let Ok(cmd) = cmds.recv() {
+        let reply = match cmd {
+            Cmd::Ingest(pop) => Some(match svc.ingest_round(&pop) {
+                Ok(()) => Reply::Ingested,
+                Err(e) => Reply::Err(format!("{e:#}")),
+            }),
+            Cmd::Submit(req) => {
+                svc.submit(req);
+                None
+            }
+            Cmd::Advance(ticks) => {
+                svc.advance(ticks);
+                None
+            }
+            Cmd::Harvest(secs) => {
+                svc.harvest(secs);
+                None
+            }
+            Cmd::SetBattery(b) => {
+                svc = svc.with_battery(b);
+                None
+            }
+            Cmd::Drain { flush } => Some(match drain(&mut svc, flush, k, &events, &grants) {
+                Ok(served) => Reply::Served(served),
+                Err(e) => Reply::Err(format!("{e:#}")),
+            }),
+            Cmd::AttachDurability(d) => Some(match svc.attach_durability(d) {
+                Ok(report) => Reply::Attached(Box::new(report)),
+                Err(e) => Reply::Err(format!("{e:#}")),
+            }),
+            Cmd::Receipt => Some(Reply::Receipt(Box::new(svc.state_receipt()))),
+            Cmd::Metrics => Some(Reply::Metrics(Box::new(svc.engine().metrics.clone()))),
+            Cmd::BatchLog => Some(Reply::BatchLog(svc.batch_log.clone())),
+            Cmd::Counts => Some(Reply::Counts {
+                pending: svc.pending(),
+                carryover_requests: svc.carryover_requests(),
+                carryover_lineages: svc.carryover_lineages(),
+            }),
+            Cmd::JournalEvents => Some(Reply::Events(svc.journal_events())),
+            Cmd::Shutdown => break,
+        };
+        if let Some(reply) = reply {
+            if events.send((k, reply)).is_err() {
+                break; // front-end gone
+            }
+        }
+    }
+}
+
+/// The worker half of the batched drain: the standalone service's window
+/// loop with stage 2 (admission) swapped for a quote/grant exchange.
+fn drain(
+    svc: &mut UnlearningService,
+    flush: bool,
+    k: usize,
+    events: &Sender<(usize, Reply)>,
+    grants: &Receiver<Admission>,
+) -> Result<usize> {
+    svc.check_journal()?;
+    let mut served = 0;
+    loop {
+        let w = svc.next_window(flush);
+        if w == 0 {
+            // Flush a carried-over plan even when no window opens — its
+            // samples are already removed, so its poison must still be
+            // replayed (and its requests counted).
+            if svc.has_carryover() {
+                served += exchange(svc, Vec::new(), k, events, grants)?;
+            }
+            break;
+        }
+        let window = svc.take_window(w);
+        let n = exchange(svc, window, k, events, grants)?;
+        served += n;
+        if n == 0 && svc.has_carryover() {
+            // Battery-starved: the window's plan is parked; draining
+            // further windows would only park more unfunded work.
+            break;
+        }
+    }
+    Ok(served)
+}
+
+/// Price one window, quote it, await the grant, commit.
+fn exchange(
+    svc: &mut UnlearningService,
+    window: Vec<UnlearnRequest>,
+    k: usize,
+    events: &Sender<(usize, Reply)>,
+    grants: &Receiver<Admission>,
+) -> Result<usize> {
+    let pw = svc.price_window(window);
+    events
+        .send((k, Reply::Quote { costs: pw.costs.clone(), battery: svc.battery().cloned() }))
+        .map_err(|_| anyhow::anyhow!("fleet front-end hung up mid-quote"))?;
+    let admission = grants
+        .recv()
+        .map_err(|_| anyhow::anyhow!("fleet front-end hung up awaiting grant"))?;
+    svc.commit_window(pw, admission)
+}

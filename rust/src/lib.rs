@@ -26,6 +26,7 @@ pub mod coordinator;
 pub mod data;
 pub mod energy;
 pub mod experiments;
+pub mod fleet;
 pub mod memory;
 pub mod metrics;
 pub mod partition;
@@ -44,5 +45,6 @@ pub mod xla;
 
 pub use config::ExperimentConfig;
 pub use coordinator::system::{CauseSystem, SystemVariant};
+pub use fleet::FleetService;
 pub use persist::{Durability, DurabilityMode};
 pub use unlearning::{BatchPlanner, BatchPolicy, UnlearningService};

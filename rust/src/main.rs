@@ -31,6 +31,7 @@ CONFIG KEYS (key=value):
     seed users rounds epochs_per_round shards memory_gb unlearn_prob
     sc_gamma sc_p prune_keep batch_policy batch_window batch_slo model dataset
     store_mode memory_budget_bytes codec durability persist_dir compact_every
+    fleet_workers
 
 BATCHING:
     batch_policy = fcfs | coalesce | deadline
@@ -58,6 +59,17 @@ DURABILITY (service-level; reboots must not void the deletion guarantee):
     persist_dir   = directory for MANIFEST.json / wal-*.log / snapshot-*.bin
     compact_every = events between automatic snapshot+truncate compactions
                     (0 = never; compaction bounds recovery time and log size)
+
+FLEET (sharded service; `run` drives it when fleet_workers > 1):
+    fleet_workers = N shard workers, each with its own engine, store,
+                    battery, planner, and (with durability) WAL under
+                    persist_dir/shard-<k>/. Users route to shards via the
+                    UCDP map promoted to a routing layer: sticky (a user's
+                    requests always reach the shard holding their data;
+                    shard-controller shrinks only bump the routing epoch),
+                    with battery admission decided centrally per priced
+                    window. fleet_workers=1 replays the unsharded service
+                    byte-identically (receipts, RSN, store stats, journal).
 "
 }
 
@@ -116,9 +128,35 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
     );
     let pop = cause::experiments::common::population(&cfg);
     let trace = cause::experiments::common::trace(&cfg, &pop);
-    let mut engine = system.build_cost(&cfg)?;
-    engine.run_trace(&pop, &trace)?;
-    let m = engine.metrics.clone();
+    let m = if cfg.fleet_workers > 1 {
+        // Sharded service path: route each round's data and requests to
+        // the shard workers, drain batched windows per round, flush at
+        // the end of the trace.
+        let mut fleet = system.build_fleet(&cfg)?;
+        for t in 1..=cfg.rounds {
+            fleet.ingest_round(&pop)?;
+            for req in trace.at(t) {
+                fleet.submit(req.clone());
+            }
+            fleet.drain_batched()?;
+        }
+        fleet.flush_batched()?;
+        println!(
+            "fleet: {} workers, routing epoch {}, shard seeds {:?}",
+            fleet.workers(),
+            fleet.epoch(),
+            fleet
+                .shard_seeds()
+                .iter()
+                .map(|s| format!("{s:#x}"))
+                .collect::<Vec<_>>()
+        );
+        fleet.metrics()?
+    } else {
+        let mut engine = system.build_cost(&cfg)?;
+        engine.run_trace(&pop, &trace)?;
+        engine.metrics.clone()
+    };
     println!("{}", m.to_json().to_pretty());
     println!(
         "total RSN {}  energy {:.0} J  requests {}  store: {} stored / {} replaced / {} rejected",

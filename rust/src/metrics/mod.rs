@@ -110,6 +110,59 @@ impl RunMetrics {
             .collect()
     }
 
+    /// Merge per-shard run metrics into one fleet-level view, in shard
+    /// order (deterministic given the routing seed). Counters sum;
+    /// per-round series sum elementwise (shorter series are treated as
+    /// zero-padded); latency receipts concatenate shard-by-shard;
+    /// accuracy per round is the mean of the shards that measured one.
+    /// Aggregating a single shard is the identity.
+    pub fn fleet_aggregate(shards: &[RunMetrics]) -> RunMetrics {
+        if shards.len() == 1 {
+            return shards[0].clone();
+        }
+        let mut out = RunMetrics::default();
+        for m in shards {
+            for (i, v) in m.rsn_by_round.iter().enumerate() {
+                if out.rsn_by_round.len() <= i {
+                    out.rsn_by_round.push(0);
+                }
+                out.rsn_by_round[i] += v;
+            }
+            for (i, v) in m.requests_by_round.iter().enumerate() {
+                if out.requests_by_round.len() <= i {
+                    out.requests_by_round.push(0);
+                }
+                out.requests_by_round[i] += v;
+            }
+            out.warm_retrains += m.warm_retrains;
+            out.scratch_retrains += m.scratch_retrains;
+            out.lineages_retrained += m.lineages_retrained;
+            out.energy_joules += m.energy_joules;
+            out.prunes += m.prunes;
+            out.ckpts_stored += m.ckpts_stored;
+            out.ckpts_replaced += m.ckpts_replaced;
+            out.ckpts_rejected += m.ckpts_rejected;
+            out.ckpts_invalidated += m.ckpts_invalidated;
+            out.batches += m.batches;
+            out.batched_requests += m.batched_requests;
+            out.retrains_coalesced += m.retrains_coalesced;
+            out.latency.extend(m.latency.iter().cloned());
+        }
+        let acc_rounds = shards.iter().map(|m| m.accuracy_by_round.len()).max().unwrap_or(0);
+        for i in 0..acc_rounds {
+            let measured: Vec<f64> = shards
+                .iter()
+                .filter_map(|m| m.accuracy_by_round.get(i).copied().flatten())
+                .collect();
+            out.accuracy_by_round.push(if measured.is_empty() {
+                None
+            } else {
+                Some(measured.iter().sum::<f64>() / measured.len() as f64)
+            });
+        }
+        out
+    }
+
     pub fn to_json(&self) -> crate::util::Json {
         use crate::util::Json;
         let delays = self.queue_delay_summary();
@@ -198,6 +251,40 @@ mod tests {
         assert_eq!(s.max, 4.0);
         assert!(s.p50 <= s.p99);
         assert_eq!(m.slo_violations(), 2);
+    }
+
+    #[test]
+    fn fleet_aggregate_sums_and_identity() {
+        let a = RunMetrics {
+            rsn_by_round: vec![10, 20],
+            requests_by_round: vec![1, 2],
+            batches: 3,
+            energy_joules: 1.5,
+            accuracy_by_round: vec![Some(0.25), None],
+            latency: vec![LatencyReceipt { user: 1, round: 1, queued_ticks: 2, slo_met: true }],
+            ..Default::default()
+        };
+        let b = RunMetrics {
+            rsn_by_round: vec![5],
+            requests_by_round: vec![4],
+            batches: 1,
+            energy_joules: 0.5,
+            accuracy_by_round: vec![Some(0.75), Some(0.9)],
+            ..Default::default()
+        };
+        let f = RunMetrics::fleet_aggregate(&[a.clone(), b]);
+        assert_eq!(f.rsn_by_round, vec![15, 20]);
+        assert_eq!(f.requests_by_round, vec![5, 2]);
+        assert_eq!(f.batches, 4);
+        assert!((f.energy_joules - 2.0).abs() < 1e-12);
+        // Mean over shards that measured; pass-through when only one did.
+        assert_eq!(f.accuracy_by_round, vec![Some(0.5), Some(0.9)]);
+        assert_eq!(f.latency.len(), 1);
+        // Single shard aggregates to itself.
+        let id = RunMetrics::fleet_aggregate(&[a.clone()]);
+        assert_eq!(id.rsn_by_round, a.rsn_by_round);
+        assert_eq!(id.batches, a.batches);
+        assert_eq!(id.latency, a.latency);
     }
 
     #[test]

@@ -60,20 +60,47 @@ impl Ucdp {
     fn best_shard(&self, size: u64, s_t: usize) -> ShardId {
         let theta = self.theta_bar();
         let mut best = 0;
-        let mut best_score = f64::INFINITY;
+        // ⌊x − θ̄⌋₊ in the paper: deviation clamped at zero from below —
+        // prefer shards that stay under the mean; tie-break on total size.
+        // Lexicographic (over, size): the size tie-break stays u64-exact.
+        // (The old `over * 1e6 + size as f64` collapsed sizes past 2^53
+        // into one f64 value, making the tie-break arbitrary at scale.)
+        let mut best_key: Option<(f64, u64)> = None;
         for s in 0..s_t {
             let per_user =
                 (self.shard_size[s] + size) as f64 / (self.shard_users[s] + 1) as f64;
-            // ⌊x − θ̄⌋₊ in the paper: deviation clamped at zero from below —
-            // prefer shards that stay under the mean; tie-break on total size.
             let over = (per_user - theta).max(0.0);
-            let score = over * 1e6 + self.shard_size[s] as f64;
-            if score < best_score {
-                best_score = score;
+            let key = (over, self.shard_size[s]);
+            let better = match best_key {
+                None => true,
+                Some(bk) => key.0 < bk.0 || (key.0 == bk.0 && key.1 < bk.1),
+            };
+            if better {
+                best_key = Some(key);
                 best = s;
             }
         }
         best
+    }
+
+    /// Sticky routing step for the fleet front-end. An already-seen user
+    /// keeps their home shard even when it is frozen (>= s_t): the shard
+    /// holding their past data must keep serving their unlearning
+    /// requests (the locality invariant), so — unlike
+    /// [`Ucdp::assign`](Partitioner::assign)'s re-homing of frozen
+    /// shards' users for *future* data — routing never moves anyone.
+    /// Only the cumulative size statistic advances. A new user is placed
+    /// among the active shards by the same greedy step as Algorithm 1.
+    pub fn route(&mut self, user: UserId, size: u64, s_t: usize) -> ShardId {
+        if let Some(&s) = self.assignment.get(&user) {
+            self.shard_size[s] += size;
+            return s;
+        }
+        let s = self.best_shard(size, s_t);
+        self.assignment.insert(user, s);
+        self.shard_users[s] += 1;
+        self.shard_size[s] += size;
+        s
     }
 
     /// Re-home users of frozen shards (>= s_t) among the active shards.
@@ -303,6 +330,46 @@ mod tests {
         for r in 2..=6 {
             let placements = ucdp.assign(p.blocks_at(r), 2);
             coverage_ok(p.blocks_at(r), &placements, 2).unwrap();
+        }
+    }
+
+    /// Regression: with shard sizes past 2^53 the old f64 score
+    /// (`over * 1e6 + size as f64`) collapsed distinct sizes into one
+    /// value — (2^53) and (2^53 + 1) both convert to 9007199254740992.0 —
+    /// so the tie-break silently kept the *larger* shard (first index
+    /// wins a float tie). The lexicographic (over, size) key compares the
+    /// size leg in u64 and must pick the genuinely smaller shard.
+    #[test]
+    fn best_shard_tie_break_is_integer_exact_past_2_53() {
+        let mut ucdp = Ucdp::new(2, 1);
+        ucdp.shard_size = vec![(1u64 << 53) + 1, 1u64 << 53];
+        ucdp.shard_users = vec![1, 1];
+        // Both candidates sit under θ̄ (per_user = size/2 < θ̄ ≈ size), so
+        // `over` clamps to exactly 0.0 for both and the size leg decides.
+        assert_eq!(ucdp.best_shard(0, 2), 1, "u64 tie-break must pick the smaller shard");
+        // Sanity: the mirrored layout picks the other index.
+        let mut flipped = Ucdp::new(2, 1);
+        flipped.shard_size = vec![1u64 << 53, (1u64 << 53) + 1];
+        flipped.shard_users = vec![1, 1];
+        assert_eq!(flipped.best_shard(0, 2), 0);
+    }
+
+    /// Routing is sticky: `route` never moves an existing user, even when
+    /// the shard controller has frozen their home shard (s_t shrank), and
+    /// repeated routes agree with `shard_of`.
+    #[test]
+    fn route_is_sticky_across_shrink() {
+        let mut ucdp = Ucdp::new(8, 5);
+        let homes: Vec<ShardId> =
+            (0..20).map(|u| ucdp.route(UserId(u), 100 + u as u64, 8)).collect();
+        // Shrink to 2 active shards: existing users keep frozen homes.
+        for u in 0..20 {
+            assert_eq!(ucdp.route(UserId(u), 50, 2), homes[u as usize]);
+            assert_eq!(ucdp.shard_of(UserId(u)), Some(homes[u as usize]));
+        }
+        // New users after the shrink land only on active shards.
+        for u in 20..40 {
+            assert!(ucdp.route(UserId(u), 100, 2) < 2);
         }
     }
 

@@ -1,0 +1,365 @@
+//! Durability glue: journal attachment/recovery, log-before-ack event
+//! emission, replay of journaled transitions, and snapshot
+//! capture/restore (the compactor's image).
+
+use anyhow::Result;
+
+use crate::data::trace::UnlearnRequest;
+use crate::metrics::{LatencyReceipt, RunMetrics};
+use crate::persist::event::{BatteryPost, Event, LatencyRecord, MetricsPost};
+use crate::persist::recovery::{self, RecoveryReport};
+use crate::persist::snapshot::{BatteryImage, MetricsImage, StateImage};
+use crate::persist::{Durability, DurabilityMode};
+use crate::sim::Battery;
+
+use super::{
+    batch_from_rec, batch_rec_of, carryover_from_rec, carryover_rec_of, req_from_rec,
+    req_rec_of, svc_from_rec, svc_rec_of, Journal, UnlearningService,
+};
+
+impl UnlearningService {
+    /// Attach a durability journal, first recovering whatever state the
+    /// backing filesystem holds (snapshot + write-ahead log tail, torn
+    /// writes repaired). Call this on a **freshly built** service — same
+    /// system variant, batch planner, and battery profile as the crashed
+    /// instance — before driving it; recovery then reconstructs the
+    /// pre-crash state receipt-identically and arms log-before-ack
+    /// journaling for everything that follows.
+    pub fn attach_durability(&mut self, d: Durability) -> Result<RecoveryReport> {
+        if d.mode == DurabilityMode::Off {
+            return Ok(RecoveryReport::default());
+        }
+        let (log, report) = recovery::recover(self, d.fs)
+            .map_err(|e| anyhow::anyhow!("durability recovery: {e}"))?;
+        self.engine.set_taping(true);
+        self.journal =
+            Some(Journal { log, mode: d.mode, compact_every: d.compact_every, err: None });
+        Ok(report)
+    }
+
+    /// The attached durability mode ([`DurabilityMode::Off`] when none).
+    pub fn durability_mode(&self) -> DurabilityMode {
+        self.journal.as_ref().map_or(DurabilityMode::Off, |j| j.mode)
+    }
+
+    /// First journal append/compaction failure, if any (surfaced as an
+    /// error by the next fallible entry point).
+    pub fn durability_error(&self) -> Option<&str> {
+        self.journal.as_ref().and_then(|j| j.err.as_deref())
+    }
+
+    /// Events currently in the log tail (0 without a journal).
+    pub fn journal_events(&self) -> u64 {
+        self.journal.as_ref().map_or(0, |j| j.log.events_in_log())
+    }
+
+    /// Write a snapshot of the full service state and truncate the log
+    /// prefix it materializes (the compactor; also triggered automatically
+    /// every `compact_every` events). A failed compaction poisons the
+    /// journal: the in-memory log position can no longer be trusted to
+    /// match the committed manifest, so further acks would lie.
+    pub fn compact_now(&mut self) -> Result<()> {
+        let Some(mut j) = self.journal.take() else {
+            return Ok(());
+        };
+        if let Some(e) = &j.err {
+            let msg = e.clone();
+            self.journal = Some(j);
+            return Err(anyhow::anyhow!("durability journal failed earlier: {msg}"));
+        }
+        let image = self.capture_image();
+        let bytes = image.encode(j.mode.spills());
+        let res = j.log.compact(&bytes);
+        if let Err(e) = &res {
+            j.err = Some(format!("compaction: {e}"));
+        }
+        self.journal = Some(j);
+        res.map_err(|e| anyhow::anyhow!("compaction: {e}"))
+    }
+
+    /// Record the first durability failure; everything after it is
+    /// refused (appends stop, fallible entry points error) — nothing is
+    /// silently un-durable.
+    pub(super) fn poison_journal(&mut self, msg: &str) {
+        if let Some(j) = self.journal.as_mut() {
+            if j.err.is_none() {
+                j.err = Some(msg.to_string());
+            }
+        }
+    }
+
+    pub(crate) fn check_journal(&self) -> Result<()> {
+        match self.durability_error() {
+            Some(e) => Err(anyhow::anyhow!("durability journal failed earlier: {e}")),
+            None => Ok(()),
+        }
+    }
+
+    /// Build-and-append an event; the builder only runs when a journal is
+    /// attached, so `durability = off` pays nothing.
+    pub(super) fn emit(&mut self, build: impl FnOnce(&mut Self) -> Event) {
+        match &self.journal {
+            // A poisoned journal must not keep appending: a failed append
+            // can leave a torn frame mid-file, and frames written after it
+            // would be invisible to recovery (scan stops at the tear) —
+            // acked-but-unrecoverable, the one thing the log must never do.
+            None => return,
+            Some(j) if j.err.is_some() => return,
+            Some(_) => {}
+        }
+        let ev = build(self);
+        self.append_event(ev);
+    }
+
+    fn append_event(&mut self, ev: Event) {
+        let due = {
+            let Some(j) = self.journal.as_mut() else { return };
+            let payload = ev.encode(j.log.next_seq(), j.mode.spills());
+            if let Err(e) = j.log.append_payload(&payload) {
+                if j.err.is_none() {
+                    j.err = Some(e.to_string());
+                }
+                return;
+            }
+            j.compact_every > 0 && j.log.events_in_log() >= j.compact_every
+        };
+        if due {
+            // compact_now stashes its own error into the journal.
+            let _ = self.compact_now();
+        }
+    }
+
+    /// Absolute post-transition metric record.
+    pub(super) fn metrics_post(&self) -> MetricsPost {
+        let m = &self.engine.metrics;
+        MetricsPost {
+            warm_retrains: m.warm_retrains,
+            scratch_retrains: m.scratch_retrains,
+            lineages_retrained: m.lineages_retrained,
+            prunes: m.prunes,
+            energy_joules: m.energy_joules,
+            ckpts_stored: m.ckpts_stored,
+            ckpts_replaced: m.ckpts_replaced,
+            ckpts_rejected: m.ckpts_rejected,
+            ckpts_invalidated: m.ckpts_invalidated,
+            batches: m.batches,
+            batched_requests: m.batched_requests,
+            retrains_coalesced: m.retrains_coalesced,
+            round_slots: m.rsn_by_round.len() as u64,
+            rsn_last: m.rsn_by_round.last().copied().unwrap_or(0),
+            requests_last: m.requests_by_round.last().copied().unwrap_or(0),
+        }
+    }
+
+    pub(super) fn battery_post(&self) -> Option<BatteryPost> {
+        self.battery
+            .as_ref()
+            .map(|b| BatteryPost { charge_j: b.charge_j, brownouts: b.brownouts })
+    }
+
+    fn apply_metrics_post(&mut self, p: &MetricsPost) {
+        let m = &mut self.engine.metrics;
+        m.warm_retrains = p.warm_retrains;
+        m.scratch_retrains = p.scratch_retrains;
+        m.lineages_retrained = p.lineages_retrained;
+        m.prunes = p.prunes;
+        m.energy_joules = p.energy_joules;
+        m.ckpts_stored = p.ckpts_stored;
+        m.ckpts_replaced = p.ckpts_replaced;
+        m.ckpts_rejected = p.ckpts_rejected;
+        m.ckpts_invalidated = p.ckpts_invalidated;
+        m.batches = p.batches;
+        m.batched_requests = p.batched_requests;
+        m.retrains_coalesced = p.retrains_coalesced;
+        while (m.rsn_by_round.len() as u64) < p.round_slots {
+            m.rsn_by_round.push(0);
+        }
+        while (m.requests_by_round.len() as u64) < p.round_slots {
+            m.requests_by_round.push(0);
+        }
+        if p.round_slots > 0 {
+            if let Some(last) = m.rsn_by_round.last_mut() {
+                *last = p.rsn_last;
+            }
+            if let Some(last) = m.requests_by_round.last_mut() {
+                *last = p.requests_last;
+            }
+        }
+    }
+
+    fn apply_battery_post(&mut self, post: &Option<BatteryPost>) {
+        if let (Some(b), Some(p)) = (self.battery.as_mut(), post) {
+            b.charge_j = p.charge_j;
+            b.brownouts = p.brownouts;
+        }
+    }
+
+    /// Replay one journaled transition (crash recovery). Mirrors exactly
+    /// what the live transition mutated: queue pops re-remove their own
+    /// samples through the real proportional-split code, store admissions
+    /// re-apply their recorded victim sets, scalars restore from absolute
+    /// post-values.
+    pub(crate) fn replay_event(&mut self, ev: &Event) {
+        match ev {
+            Event::Advance { ticks } => {
+                self.now_tick = self.now_tick.saturating_add(*ticks);
+            }
+            Event::Harvest { battery } => self.apply_battery_post(battery),
+            Event::Submit(rec) => self.queue.push_back(req_from_rec(rec)),
+            Event::Round(rec) => {
+                self.now_tick = self.now_tick.saturating_add(1);
+                self.engine.replay_round(rec);
+                self.apply_metrics_post(&rec.metrics);
+            }
+            Event::Serve(rec) => {
+                if rec.popped {
+                    if let Some(req) = self.queue.pop_front() {
+                        for (b, n) in &req.parts {
+                            self.engine.replay_remove(b.0, *n);
+                        }
+                    }
+                }
+                self.engine.replay_store_ops(&rec.store_ops);
+                self.apply_metrics_post(&rec.metrics);
+                if let Some(l) = &rec.latency {
+                    self.engine.metrics.record_latency(LatencyReceipt {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    });
+                }
+                self.log.push(svc_from_rec(&rec.report));
+                self.apply_battery_post(&rec.battery);
+                self.head_deferral_logged = rec.head_deferral_logged;
+                self.engine.store_mut().restore_policy_state(&rec.policy_state);
+            }
+            Event::Window(rec) => {
+                let n = (rec.drained as usize).min(self.queue.len());
+                let reqs: Vec<UnlearnRequest> = self.queue.drain(..n).collect();
+                for req in &reqs {
+                    for (b, cnt) in &req.parts {
+                        self.engine.replay_remove(b.0, *cnt);
+                    }
+                }
+                self.engine.replay_store_ops(&rec.store_ops);
+                self.apply_metrics_post(&rec.metrics);
+                for l in &rec.latency {
+                    self.engine.metrics.record_latency(LatencyReceipt {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    });
+                }
+                if let Some(b) = &rec.report {
+                    self.batch_log.push(batch_from_rec(b));
+                }
+                self.carryover = carryover_from_rec(&rec.carryover);
+                self.apply_battery_post(&rec.battery);
+                self.head_deferral_logged = rec.head_deferral_logged;
+                self.engine.store_mut().restore_policy_state(&rec.policy_state);
+            }
+        }
+    }
+
+    /// Materialize the full service state (the compactor's snapshot).
+    pub(crate) fn capture_image(&self) -> StateImage {
+        let m = &self.engine.metrics;
+        StateImage {
+            now_tick: self.now_tick,
+            head_deferral_logged: self.head_deferral_logged,
+            queue: self.queue.iter().map(req_rec_of).collect(),
+            carryover: carryover_rec_of(&self.carryover),
+            battery: self.battery.as_ref().map(|b| BatteryImage {
+                capacity_j: b.capacity_j,
+                charge_j: b.charge_j,
+                harvest_watts: b.harvest_watts,
+                brownouts: b.brownouts,
+            }),
+            svc_log: self.log.iter().map(svc_rec_of).collect(),
+            batch_log: self.batch_log.iter().map(batch_rec_of).collect(),
+            round: self.engine.round(),
+            rounds: self.engine.capture_rounds(),
+            partitioner_state: self.engine.partitioner_state(),
+            store: self.engine.capture_store_image(),
+            metrics: MetricsImage {
+                rsn_by_round: m.rsn_by_round.clone(),
+                requests_by_round: m.requests_by_round.clone(),
+                warm_retrains: m.warm_retrains,
+                scratch_retrains: m.scratch_retrains,
+                lineages_retrained: m.lineages_retrained,
+                energy_joules: m.energy_joules,
+                prunes: m.prunes,
+                ckpts_stored: m.ckpts_stored,
+                ckpts_replaced: m.ckpts_replaced,
+                ckpts_rejected: m.ckpts_rejected,
+                ckpts_invalidated: m.ckpts_invalidated,
+                batches: m.batches,
+                batched_requests: m.batched_requests,
+                retrains_coalesced: m.retrains_coalesced,
+                latency: m
+                    .latency
+                    .iter()
+                    .map(|l| LatencyRecord {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    })
+                    .collect(),
+                accuracy_by_round: m.accuracy_by_round.clone(),
+            },
+        }
+    }
+
+    /// Restore from a compaction snapshot (recovery, before log replay).
+    pub(crate) fn restore_image(&mut self, img: &StateImage) {
+        self.now_tick = img.now_tick;
+        self.head_deferral_logged = img.head_deferral_logged;
+        self.queue = img.queue.iter().map(req_from_rec).collect();
+        self.carryover = carryover_from_rec(&img.carryover);
+        if let Some(bi) = &img.battery {
+            self.battery = Some(Battery {
+                capacity_j: bi.capacity_j,
+                charge_j: bi.charge_j,
+                harvest_watts: bi.harvest_watts,
+                brownouts: bi.brownouts,
+            });
+        }
+        self.log = img.svc_log.iter().map(svc_from_rec).collect();
+        self.batch_log = img.batch_log.iter().map(batch_from_rec).collect();
+        self.engine.restore_rounds(&img.rounds);
+        self.engine.set_round(img.round);
+        self.engine.restore_partitioner_state(&img.partitioner_state);
+        self.engine.restore_store_image(&img.store);
+        self.engine.metrics = RunMetrics {
+            rsn_by_round: img.metrics.rsn_by_round.clone(),
+            requests_by_round: img.metrics.requests_by_round.clone(),
+            warm_retrains: img.metrics.warm_retrains,
+            scratch_retrains: img.metrics.scratch_retrains,
+            lineages_retrained: img.metrics.lineages_retrained,
+            energy_joules: img.metrics.energy_joules,
+            prunes: img.metrics.prunes,
+            ckpts_stored: img.metrics.ckpts_stored,
+            ckpts_replaced: img.metrics.ckpts_replaced,
+            ckpts_rejected: img.metrics.ckpts_rejected,
+            ckpts_invalidated: img.metrics.ckpts_invalidated,
+            batches: img.metrics.batches,
+            batched_requests: img.metrics.batched_requests,
+            retrains_coalesced: img.metrics.retrains_coalesced,
+            latency: img
+                .metrics
+                .latency
+                .iter()
+                .map(|l| LatencyReceipt {
+                    user: l.user,
+                    round: l.round,
+                    queued_ticks: l.queued_ticks,
+                    slo_met: l.slo_met,
+                })
+                .collect(),
+            accuracy_by_round: img.metrics.accuracy_by_round.clone(),
+        };
+    }
+}

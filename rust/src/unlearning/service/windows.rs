@@ -1,0 +1,515 @@
+//! The window lifecycle: FCFS and batched drains, merged-cost battery
+//! admission, and window execution.
+//!
+//! The batched path is factored into three stages so a fleet front-end
+//! can interpose between pricing and commitment:
+//!
+//! 1. [`UnlearningService::price_window`] — plan the window (merging any
+//!    carried-over poison) and, when battery-gated, cost each lineage's
+//!    resolved chain through the engine (one read-only resolver pass).
+//!    Pricing is *destructive* (the planner's collect removes the
+//!    window's samples from the lineages), so a priced window must be
+//!    held and committed, never discarded.
+//! 2. [`admission_decide`] — a pure function of the per-lineage costs
+//!    and a battery view: grant the whole plan, grant an affordable
+//!    lineage prefix, or starve. The standalone service and the fleet
+//!    admission exchange both call exactly this function, which is what
+//!    makes `fleet_workers = 1` replay the unsharded service
+//!    byte-identically.
+//! 3. [`UnlearningService::commit_window`] — draw the reservation,
+//!    execute the granted share, park the deferred share as carryover,
+//!    and account receipts/latency/energy.
+//!
+//! [`UnlearningService::execute_window`] composes the three stages for
+//! the standalone service.
+
+use anyhow::Result;
+
+use crate::data::trace::UnlearnRequest;
+use crate::metrics::LatencyReceipt;
+use crate::persist::event::{Event, LatencyRecord, ServeRec, WindowRec};
+use crate::sim::Battery;
+use crate::unlearning::batch::BatchPlan;
+
+use super::{batch_rec_of, carryover_rec_of, svc_rec_of, BatchReport, ReqMeta, ServiceReport, UnlearningService};
+
+/// A planned-and-priced batch window, held between pricing and commit.
+/// Its samples are already removed from the lineage bookkeeping (the
+/// planner's collect is destructive), so the only valid next step is
+/// [`UnlearningService::commit_window`] — dropping it would strand
+/// poisoned versions.
+pub(crate) struct PricedWindow {
+    plan: BatchPlan,
+    metas: Vec<ReqMeta>,
+    drained: u64,
+    /// Per-lineage retrain joules when battery-gated; `None` on mains or
+    /// without a battery (admission is then unconditional).
+    pub(crate) costs: Option<Vec<f64>>,
+}
+
+/// Battery admission verdict for one priced window.
+#[derive(Clone, Copy, Debug)]
+pub(crate) enum Admission {
+    /// Execute `take` lineages (`None` = the whole plan) reserving
+    /// `reserve_j`; anything beyond the prefix is parked as carryover.
+    Granted { take: Option<usize>, reserve_j: f64 },
+    /// Not even the first lineage is affordable right now.
+    Starved { probe_j: f64 },
+}
+
+/// Battery admission for a priced window: keep the affordable lineage
+/// prefix of the costed plan. Splitting happens at lineage granularity —
+/// requests are never dropped, their unfunded lineage work is deferred
+/// instead. Pure in its inputs: the standalone service and the fleet's
+/// global admission exchange share this exact decision procedure.
+pub(crate) fn admission_decide(costs: Option<&[f64]>, battery: Option<&Battery>) -> Admission {
+    let (Some(costs), Some(b)) = (costs, battery.filter(|b| !b.mains())) else {
+        return Admission::Granted { take: None, reserve_j: 0.0 };
+    };
+    let mut reserve_j = 0.0;
+    let mut take = 0usize;
+    for &c in costs {
+        if b.can_cover(reserve_j + c) {
+            reserve_j += c;
+            take += 1;
+        } else {
+            break;
+        }
+    }
+    if take == costs.len() {
+        Admission::Granted { take: None, reserve_j }
+    } else if take == 0 {
+        Admission::Starved { probe_j: costs.first().copied().unwrap_or(0.0) }
+    } else {
+        Admission::Granted { take: Some(take), reserve_j }
+    }
+}
+
+impl UnlearningService {
+    /// Conservative energy pre-estimate for the first `w` queued requests:
+    /// replaying every requested sample (FCFS drains only; batched drains
+    /// reserve the resolver's true merged cost instead).
+    fn window_hint_joules(&self, w: usize) -> f64 {
+        let rsn_hint: u64 = self.queue.iter().take(w).map(|r| r.total_samples()).sum();
+        self.energy.retrain_joules(rsn_hint, self.engine.cfg.epochs_per_round)
+    }
+
+    /// Log at most one deferral receipt per episode (a stuck head polled
+    /// by many drain calls previously produced one receipt per call,
+    /// inflating deferral counts in the satellite scenario).
+    fn log_deferral(&mut self, user: u32, round: u32, est_joules: f64) {
+        if self.head_deferral_logged {
+            return;
+        }
+        self.head_deferral_logged = true;
+        self.log.push(ServiceReport {
+            user,
+            round,
+            rsn: 0,
+            lineages_retrained: 0,
+            est_seconds: 0.0,
+            est_joules,
+            deferred: true,
+        });
+    }
+
+    /// Serve queued requests strictly FCFS. With a battery, a request
+    /// whose estimated energy exceeds the charge is deferred (stays at the
+    /// queue head) until `harvest` restores enough charge.
+    pub fn drain(&mut self) -> Result<usize> {
+        self.check_journal()?;
+        // A plan carried over from a failed batched window must not be
+        // stranded when the caller switches to FCFS drains: flush it
+        // first (its samples are already removed from the lineages).
+        let mut served = if self.carryover.is_some() {
+            self.execute_window(Vec::new())?
+        } else {
+            0
+        };
+        while let Some(req) = self.queue.front().cloned() {
+            // Conservative pre-estimate: replaying all requested samples.
+            let est_j_hint = self.window_hint_joules(1);
+            let starved = match &self.battery {
+                Some(b) => !b.can_cover(est_j_hint),
+                None => false,
+            };
+            if starved {
+                // One brownout per starvation episode (a refused draw),
+                // not one per drain() poll of the same stuck head.
+                if !self.head_deferral_logged {
+                    if let Some(b) = &mut self.battery {
+                        let _ = b.draw(est_j_hint);
+                    }
+                    self.log_deferral(req.user.0, req.round, est_j_hint);
+                    self.emit(|svc| {
+                        Event::Serve(Box::new(ServeRec {
+                            popped: false,
+                            store_ops: svc.engine.take_tape(),
+                            battery: svc.battery_post(),
+                            metrics: svc.metrics_post(),
+                            latency: None,
+                            report: svc_rec_of(svc.log.last().expect("deferral logged")),
+                            head_deferral_logged: true,
+                            policy_state: svc.engine.store().policy_state(),
+                        }))
+                    });
+                }
+                break; // FCFS: don't skip ahead of the deferred head.
+            }
+            if let Some(b) = &mut self.battery {
+                let drawn = b.draw(est_j_hint);
+                debug_assert!(drawn, "covered by the can_cover probe above");
+            }
+            let outcome = match self.engine.process_request(&req) {
+                Ok(o) => o,
+                Err(e) => {
+                    // Partial trainer failure: the tape cannot frame this
+                    // as one clean transition — drop it and poison the
+                    // journal (live state has diverged from the log;
+                    // recovery replays to the last committed event).
+                    let _ = self.engine.take_tape();
+                    self.poison_journal(&format!("engine error mid-serve: {e:#}"));
+                    return Err(e);
+                }
+            };
+            let est_seconds = self
+                .engine
+                .cfg
+                .model
+                .train_secs(outcome.rsn, self.engine.cfg.epochs_per_round);
+            let est_joules = self
+                .energy
+                .retrain_joules(outcome.rsn, self.engine.cfg.epochs_per_round);
+            if let Some(b) = &mut self.battery {
+                b.settle(est_joules, est_j_hint);
+            }
+            let queued_ticks = self.now_tick.saturating_sub(req.arrival_tick);
+            let slo = self.planner.policy.slo();
+            self.engine.metrics.record_latency(LatencyReceipt {
+                user: req.user.0,
+                round: req.round,
+                queued_ticks,
+                slo_met: slo.map_or(true, |s| queued_ticks <= s),
+            });
+            self.log.push(ServiceReport {
+                user: req.user.0,
+                round: req.round,
+                rsn: outcome.rsn,
+                lineages_retrained: outcome.lineages_retrained,
+                est_seconds,
+                est_joules,
+                deferred: false,
+            });
+            self.queue.pop_front();
+            self.head_deferral_logged = false;
+            self.emit(|svc| {
+                let last = {
+                    let l = svc.engine.metrics.latency.last().expect("receipt just recorded");
+                    LatencyRecord {
+                        user: l.user,
+                        round: l.round,
+                        queued_ticks: l.queued_ticks,
+                        slo_met: l.slo_met,
+                    }
+                };
+                Event::Serve(Box::new(ServeRec {
+                    popped: true,
+                    store_ops: svc.engine.take_tape(),
+                    battery: svc.battery_post(),
+                    metrics: svc.metrics_post(),
+                    latency: Some(last),
+                    report: svc_rec_of(svc.log.last().expect("report just pushed")),
+                    head_deferral_logged: false,
+                    policy_state: svc.engine.store().policy_state(),
+                }))
+            });
+            served += 1;
+        }
+        Ok(served)
+    }
+
+    /// Serve queued requests in coalesced windows per the configured
+    /// [`BatchPlanner`](crate::unlearning::BatchPlanner): each window's
+    /// poison sets are merged so a lineage touched by R requests replays
+    /// once instead of R times. Under a deadline policy, windows close
+    /// exactly when the oldest queued request's SLO leaves no more slack.
+    /// Returns the number of requests served. With a battery, admission
+    /// reserves the true merged plan cost and splits the plan at lineage
+    /// granularity when only a prefix is affordable (one deferral receipt
+    /// per starvation episode).
+    pub fn drain_batched(&mut self) -> Result<usize> {
+        self.drain_windows(false)
+    }
+
+    /// Serve everything queued regardless of deadline slack (end of run /
+    /// device shutdown): the whole queue coalesces into one window, which
+    /// is where `Deadline { slo_ticks: u64::MAX }` meets `Coalesce`.
+    pub fn flush_batched(&mut self) -> Result<usize> {
+        self.drain_windows(true)
+    }
+
+    fn drain_windows(&mut self, flush: bool) -> Result<usize> {
+        self.check_journal()?;
+        let mut served = 0;
+        loop {
+            let w = self.next_window(flush);
+            if w == 0 {
+                // Flush a carried-over plan even when no window opens —
+                // its samples are already removed, so its poison must
+                // still be replayed (and its requests counted).
+                if self.has_carryover() {
+                    served += self.execute_window(Vec::new())?;
+                }
+                break;
+            }
+            let window = self.take_window(w);
+            let n = self.execute_window(window)?;
+            served += n;
+            if n == 0 && self.has_carryover() {
+                // Battery-starved: the window's plan is parked; draining
+                // further windows would only park more unfunded work.
+                break;
+            }
+        }
+        Ok(served)
+    }
+
+    /// The window the planner would close right now: the whole queue when
+    /// flushing, else the policy's choice given queue depth and the
+    /// oldest request's age. 0 means "hold".
+    pub(crate) fn next_window(&self, flush: bool) -> usize {
+        if flush {
+            self.queue.len()
+        } else {
+            let oldest_age = self
+                .queue
+                .front()
+                .map(|r| self.now_tick.saturating_sub(r.arrival_tick));
+            self.planner.window_size_at(self.queue.len(), oldest_age)
+        }
+    }
+
+    /// Pop the next `w` queued requests in FCFS order.
+    pub(crate) fn take_window(&mut self, w: usize) -> Vec<UnlearnRequest> {
+        self.queue.drain(..w).collect()
+    }
+
+    /// Whether a carried-over plan is parked awaiting a future window.
+    pub(crate) fn has_carryover(&self) -> bool {
+        self.carryover.is_some()
+    }
+
+    /// Stage 1: plan the window (merging any carried-over poison) and
+    /// price it per lineage when battery-gated. Destructive — see the
+    /// type docs on [`PricedWindow`].
+    pub(crate) fn price_window(&mut self, window: Vec<UnlearnRequest>) -> PricedWindow {
+        let drained = window.len() as u64;
+        let mut metas: Vec<ReqMeta> = Vec::with_capacity(window.len());
+        if let Some((_, prev_metas)) = &self.carryover {
+            // Carried-over requests arrived first; receipts keep order.
+            metas.extend(prev_metas.iter().copied());
+        }
+        metas.extend(window.iter().map(|r| ReqMeta {
+            user: r.user.0,
+            round: r.round,
+            arrival_tick: r.arrival_tick,
+        }));
+        let mut plan = self.planner.plan(&mut self.engine, &window);
+        if let Some((prev_plan, _)) = self.carryover.take() {
+            plan.merge(prev_plan);
+        }
+        let costs = match self.battery.as_ref().filter(|b| !b.mains()) {
+            None => None,
+            Some(_) => {
+                let epochs = self.engine.cfg.epochs_per_round;
+                Some(
+                    self.engine
+                        .plan_lineage_rsn(&plan)
+                        .into_iter()
+                        .map(|rsn| self.energy.retrain_joules(rsn, epochs))
+                        .collect(),
+                )
+            }
+        };
+        PricedWindow { plan, metas, drained, costs }
+    }
+
+    /// Stage 3: commit a priced window under an admission verdict.
+    /// Unaffordable lineages — or the whole plan, on an engine error —
+    /// are stashed for a later window with the energy reservation
+    /// released; the requests are NOT re-queued, since re-collecting them
+    /// would remove additional, never-requested samples. Returns the
+    /// number of requests served.
+    pub(crate) fn commit_window(&mut self, pw: PricedWindow, admission: Admission) -> Result<usize> {
+        let PricedWindow { mut plan, metas, drained, costs: _ } = pw;
+        let (reserve_j, defer) = match admission {
+            Admission::Granted { take, reserve_j } => {
+                let defer = match take {
+                    None => None,
+                    Some(t) => {
+                        let t = t.min(plan.lineages.len());
+                        (t < plan.lineages.len()).then(|| BatchPlan {
+                            lineages: plan.lineages.split_off(t),
+                            requests: 0,
+                        })
+                    }
+                };
+                (reserve_j, defer)
+            }
+            Admission::Starved { probe_j } => {
+                let fresh_episode = !self.head_deferral_logged;
+                if fresh_episode {
+                    self.head_deferral_logged = true;
+                    // Record the episode's brownout (the refused draw).
+                    if let Some(b) = &mut self.battery {
+                        let _ = b.draw(probe_j);
+                    }
+                    self.batch_log.push(BatchReport {
+                        requests: 0,
+                        rsn: 0,
+                        lineages_retrained: 0,
+                        retrains_coalesced: 0,
+                        oldest_queued_ticks: 0,
+                        est_seconds: 0.0,
+                        est_joules: probe_j,
+                        deferred: true,
+                    });
+                }
+                self.carryover = Some((plan, metas));
+                self.emit(|svc| {
+                    Event::Window(Box::new(WindowRec {
+                        drained,
+                        store_ops: svc.engine.take_tape(),
+                        battery: svc.battery_post(),
+                        metrics: svc.metrics_post(),
+                        latency: vec![],
+                        report: if fresh_episode {
+                            Some(batch_rec_of(svc.batch_log.last().expect("just pushed")))
+                        } else {
+                            None
+                        },
+                        carryover: carryover_rec_of(&svc.carryover),
+                        head_deferral_logged: svc.head_deferral_logged,
+                        policy_state: svc.engine.store().policy_state(),
+                    }))
+                });
+                return Ok(0);
+            }
+        };
+
+        if let Some(b) = &mut self.battery {
+            let drawn = b.draw(reserve_j);
+            debug_assert!(drawn, "admission sized the reservation to the charge");
+        }
+
+        let coalesced = plan.coalesced_retrains();
+        let window_requests = plan.requests;
+        debug_assert_eq!(window_requests, metas.len(), "one meta per merged request");
+        let outcome = match self.engine.execute_plan(&plan) {
+            Ok(outcome) => outcome,
+            Err(e) => {
+                if let Some(b) = &mut self.battery {
+                    b.refund(reserve_j);
+                }
+                // Re-join the deferred share so nothing is stranded.
+                if let Some(d) = defer {
+                    plan.merge(d);
+                }
+                self.carryover = Some((plan, metas));
+                // The partially executed plan's store mutations are real:
+                // frame them so recovery lands on this exact state.
+                self.emit(|svc| {
+                    Event::Window(Box::new(WindowRec {
+                        drained,
+                        store_ops: svc.engine.take_tape(),
+                        battery: svc.battery_post(),
+                        metrics: svc.metrics_post(),
+                        latency: vec![],
+                        report: None,
+                        carryover: carryover_rec_of(&svc.carryover),
+                        head_deferral_logged: svc.head_deferral_logged,
+                        policy_state: svc.engine.store().policy_state(),
+                    }))
+                });
+                return Err(e);
+            }
+        };
+        // The executed share serves (and accounts) the window's requests;
+        // any battery-deferred lineage share replays later via carryover.
+        if let Some(d) = defer {
+            self.carryover = Some((d, Vec::new()));
+        }
+        self.engine.metrics.record_requests(window_requests as u64, outcome.rsn);
+        self.engine.metrics.batches += 1;
+        self.engine.metrics.batched_requests += window_requests as u64;
+        self.engine.metrics.retrains_coalesced += coalesced;
+
+        let slo = self.planner.policy.slo();
+        let mut oldest_queued = 0u64;
+        for m in &metas {
+            let queued_ticks = self.now_tick.saturating_sub(m.arrival_tick);
+            oldest_queued = oldest_queued.max(queued_ticks);
+            self.engine.metrics.record_latency(LatencyReceipt {
+                user: m.user,
+                round: m.round,
+                queued_ticks,
+                slo_met: slo.map_or(true, |s| queued_ticks <= s),
+            });
+        }
+
+        let est_seconds = self
+            .engine
+            .cfg
+            .model
+            .train_secs(outcome.rsn, self.engine.cfg.epochs_per_round);
+        let est_joules = self
+            .energy
+            .retrain_joules(outcome.rsn, self.engine.cfg.epochs_per_round);
+        if let Some(b) = &mut self.battery {
+            b.settle(est_joules, reserve_j);
+        }
+        self.batch_log.push(BatchReport {
+            requests: window_requests,
+            rsn: outcome.rsn,
+            lineages_retrained: outcome.lineages_retrained,
+            retrains_coalesced: coalesced,
+            oldest_queued_ticks: oldest_queued,
+            est_seconds,
+            est_joules,
+            deferred: false,
+        });
+        self.head_deferral_logged = false;
+        self.emit(|svc| {
+            let receipts = &svc.engine.metrics.latency;
+            let latency = receipts[receipts.len() - window_requests..]
+                .iter()
+                .map(|l| LatencyRecord {
+                    user: l.user,
+                    round: l.round,
+                    queued_ticks: l.queued_ticks,
+                    slo_met: l.slo_met,
+                })
+                .collect();
+            Event::Window(Box::new(WindowRec {
+                drained,
+                store_ops: svc.engine.take_tape(),
+                battery: svc.battery_post(),
+                metrics: svc.metrics_post(),
+                latency,
+                report: Some(batch_rec_of(svc.batch_log.last().expect("just pushed"))),
+                carryover: carryover_rec_of(&svc.carryover),
+                head_deferral_logged: false,
+                policy_state: svc.engine.store().policy_state(),
+            }))
+        });
+        Ok(window_requests)
+    }
+
+    /// Plan, admit against the battery, execute, and account one batch
+    /// window (stages 1–3 composed for the standalone service).
+    pub(crate) fn execute_window(&mut self, window: Vec<UnlearnRequest>) -> Result<usize> {
+        let pw = self.price_window(window);
+        let admission = admission_decide(pw.costs.as_deref(), self.battery.as_ref());
+        self.commit_window(pw, admission)
+    }
+}

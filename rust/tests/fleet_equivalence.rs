@@ -1,0 +1,414 @@
+//! Fleet service equivalence and routing-locality properties.
+//!
+//! The keystone invariant of the sharded fleet: `fleet_workers = 1` must
+//! replay the unsharded [`UnlearningService`] **byte-identically** — the
+//! state receipt (queue, carryover, battery, lineages, store stats,
+//! receipt logs, metrics JSON), the journal event stream, and the WAL
+//! bytes on the backing filesystem — over a workload that exercises
+//! FiboR eviction, a byte-budget store, battery-split windows, and
+//! durability journaling all at once.
+//!
+//! Alongside it: the routing layer's locality invariant (a user frozen
+//! onto a shard keeps routing there across arbitrary grow/shrink
+//! sequences), the seed-derivation audit (per-shard engine seeds are a
+//! deterministic function of the routing seed, exposed in the fleet
+//! receipt), multi-worker conservation (every request served exactly
+//! once, fleet metrics = sum of shard metrics), and per-shard journal
+//! recovery.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::dataset::{EdgePopulation, PopulationConfig, UserId};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::fleet::{FleetService, Router};
+use cause::memory::StoreMeter;
+use cause::persist::{Durability, DurabilityMode, MemFs};
+use cause::sim::device::AI_CUBESAT;
+use cause::sim::Battery;
+use cause::testkit::forall;
+use cause::unlearning::UnlearningService;
+
+/// FiboR + byte-budget + battery-split workload (the acceptance shape):
+/// CAUSE under constant byte-metered eviction, with a battery small
+/// enough that some windows starve or split at lineage granularity.
+fn workload(seed: u64) -> (ExperimentConfig, EdgePopulation, RequestTrace) {
+    let mut cfg = ExperimentConfig {
+        users: 20,
+        rounds: 6,
+        shards: 4,
+        unlearn_prob: 0.7,
+        seed,
+        ..Default::default()
+    };
+    // Byte-metered C_m, sized for constant admission/eviction pressure.
+    cfg.memory_bytes = 64 * 1024;
+    cfg.store_meter = StoreMeter::Bytes;
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.scaled(8_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.8,
+        seed: cfg.seed,
+    });
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig {
+            unlearn_prob: cfg.unlearn_prob,
+            block_incl_prob: 0.8,
+            age_decay: 0.5,
+            frac_range: (0.1, 0.5),
+            seed: cfg.seed ^ 0xf1ee7,
+        },
+    );
+    (cfg, pop, trace)
+}
+
+/// A battery low enough to starve / split some windows but harvestable
+/// back to life between rounds.
+fn tight_battery(charge_j: f64) -> Battery {
+    let mut b = Battery::new(&AI_CUBESAT);
+    b.charge_j = charge_j;
+    b
+}
+
+/// The service surface the differential driver needs — implemented by
+/// both sides so each gets *exactly* the same schedule.
+trait Drive {
+    fn ingest(&mut self, pop: &EdgePopulation) -> Result<(), String>;
+    fn advance(&mut self, ticks: u64);
+    fn submit(&mut self, req: &cause::data::trace::UnlearnRequest);
+    fn drain(&mut self, flush: bool) -> Result<usize, String>;
+    fn harvest(&mut self, secs: f64);
+}
+
+impl Drive for UnlearningService {
+    fn ingest(&mut self, pop: &EdgePopulation) -> Result<(), String> {
+        self.ingest_round(pop).map_err(|e| format!("{e:#}"))
+    }
+    fn advance(&mut self, ticks: u64) {
+        UnlearningService::advance(self, ticks);
+    }
+    fn submit(&mut self, req: &cause::data::trace::UnlearnRequest) {
+        UnlearningService::submit(self, req.clone());
+    }
+    fn drain(&mut self, flush: bool) -> Result<usize, String> {
+        if flush { self.flush_batched() } else { self.drain_batched() }
+            .map_err(|e| format!("{e:#}"))
+    }
+    fn harvest(&mut self, secs: f64) {
+        UnlearningService::harvest(self, secs);
+    }
+}
+
+impl Drive for FleetService {
+    fn ingest(&mut self, pop: &EdgePopulation) -> Result<(), String> {
+        self.ingest_round(pop).map_err(|e| format!("{e:#}"))
+    }
+    fn advance(&mut self, ticks: u64) {
+        FleetService::advance(self, ticks);
+    }
+    fn submit(&mut self, req: &cause::data::trace::UnlearnRequest) {
+        FleetService::submit(self, req.clone());
+    }
+    fn drain(&mut self, flush: bool) -> Result<usize, String> {
+        if flush { self.flush_batched() } else { self.drain_batched() }
+            .map_err(|e| format!("{e:#}"))
+    }
+    fn harvest(&mut self, secs: f64) {
+        FleetService::harvest(self, secs);
+    }
+}
+
+/// Drive one side of the differential run: per round — ingest, clock
+/// skew, submits, batched drain, a harvest; then a flush, a big harvest,
+/// and a final drain to replay any battery-deferred carryover.
+fn drive(
+    side: &mut impl Drive,
+    rounds: u32,
+    pop: &EdgePopulation,
+    trace: &RequestTrace,
+) -> Result<usize, String> {
+    let mut served = 0;
+    for t in 1..=rounds {
+        side.ingest(pop)?;
+        side.advance(u64::from(t) % 3);
+        for req in trace.at(t) {
+            side.submit(req);
+        }
+        served += side.drain(false)?;
+        side.harvest(40.0);
+    }
+    served += side.drain(true)?;
+    side.harvest(1e7);
+    served += side.drain(false)?;
+    Ok(served)
+}
+
+/// Keystone: a 1-worker fleet replays the unsharded service
+/// byte-identically — receipts, metrics JSON, journal events, WAL bytes.
+#[test]
+fn fleet_of_one_replays_unsharded_byte_identically() {
+    forall(
+        0xf1ee7_0001,
+        5,
+        |rng, _size| (rng.next_u64(), 120.0 + (rng.next_u64() % 300) as f64),
+        |&(seed, charge)| {
+            let (mut cfg, pop, trace) = workload(seed);
+            cfg.fleet_workers = 1;
+
+            // Unsharded reference, journaling to its own MemFs.
+            let fs_ref = MemFs::new();
+            let mut svc = SystemVariant::Cause
+                .build_service(&cfg)
+                .map_err(|e| format!("build_service: {e:#}"))?
+                .with_battery(tight_battery(charge));
+            svc.attach_durability(Durability::mem(DurabilityMode::Log, fs_ref.clone(), 0))
+                .map_err(|e| format!("attach (unsharded): {e:#}"))?;
+
+            // 1-worker fleet, journaling to a parallel MemFs.
+            let fs_fleet = MemFs::new();
+            let mut fleet = SystemVariant::Cause
+                .build_fleet(&cfg)
+                .map_err(|e| format!("build_fleet: {e:#}"))?
+                .with_battery(tight_battery(charge));
+            fleet
+                .attach_durability(vec![Durability::mem(
+                    DurabilityMode::Log,
+                    fs_fleet.clone(),
+                    0,
+                )])
+                .map_err(|e| format!("attach (fleet): {e:#}"))?;
+
+            let served_ref = drive(&mut svc, cfg.rounds, &pop, &trace)?;
+            let served_fleet = drive(&mut fleet, cfg.rounds, &pop, &trace)?;
+
+            if served_ref != served_fleet {
+                return Err(format!("served diverged: {served_ref} vs {served_fleet}"));
+            }
+            let receipt_ref = svc.state_receipt().to_string();
+            let receipt_fleet = fleet
+                .state_receipt()
+                .map_err(|e| format!("fleet receipt: {e:#}"))?
+                .to_string();
+            if receipt_ref != receipt_fleet {
+                return Err(format!(
+                    "state receipts diverged:\n  unsharded: {receipt_ref}\n  fleet:     {receipt_fleet}"
+                ));
+            }
+            let m_ref = svc.engine().metrics.to_json().to_string();
+            let m_fleet = fleet
+                .metrics()
+                .map_err(|e| format!("fleet metrics: {e:#}"))?
+                .to_json()
+                .to_string();
+            if m_ref != m_fleet {
+                return Err(format!("metrics diverged:\n  {m_ref}\n  {m_fleet}"));
+            }
+            let ev_ref = svc.journal_events();
+            let ev_fleet =
+                fleet.journal_events().map_err(|e| format!("fleet events: {e:#}"))?;
+            if ev_ref != ev_fleet {
+                return Err(format!("journal events diverged: {ev_ref} vs {ev_fleet}"));
+            }
+            // WAL bytes: same file set, same contents.
+            let files_ref = fs_ref.sizes();
+            let files_fleet = fs_fleet.sizes();
+            if files_ref != files_fleet {
+                return Err(format!(
+                    "WAL file sets diverged: {files_ref:?} vs {files_fleet:?}"
+                ));
+            }
+            for (name, _) in &files_ref {
+                if fs_ref.file(name) != fs_fleet.file(name) {
+                    return Err(format!("WAL bytes diverged in {name}"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Multi-worker conservation: every submitted request is served exactly
+/// once somewhere, and the fleet aggregate equals the sum of the shards.
+#[test]
+fn two_worker_fleet_conserves_requests() {
+    let (mut cfg, pop, trace) = workload(91);
+    cfg.fleet_workers = 2;
+    let mut fleet = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    let mut submitted = 0usize;
+    for t in 1..=cfg.rounds {
+        fleet.ingest_round(&pop).unwrap();
+        for req in trace.at(t) {
+            // Locality: the request must route to the shard holding the
+            // user's ingested data.
+            let home = fleet.shard_of(req.user).expect("user was routed at ingest");
+            fleet.submit(req.clone());
+            assert_eq!(fleet.shard_of(req.user), Some(home));
+            submitted += 1;
+        }
+        fleet.drain_batched().unwrap();
+    }
+    let flushed = fleet.flush_batched().unwrap();
+    assert!(flushed <= submitted);
+    assert!(submitted > 0, "workload produced no requests");
+    assert_eq!(fleet.pending().unwrap(), 0);
+    assert_eq!(fleet.carryover_lineages().unwrap(), 0, "mains: nothing parked");
+
+    let shard_metrics = fleet.shard_metrics().unwrap();
+    assert_eq!(shard_metrics.len(), 2);
+    let total: u64 = shard_metrics.iter().map(|m| m.total_requests()).sum();
+    assert_eq!(total, submitted as u64, "each request served exactly once");
+    // Both shards did real work under this trace.
+    assert!(
+        shard_metrics.iter().all(|m| m.total_requests() > 0),
+        "routing sent every request to one shard: {:?}",
+        shard_metrics.iter().map(|m| m.total_requests()).collect::<Vec<_>>()
+    );
+    let fleet_m = fleet.metrics().unwrap();
+    assert_eq!(fleet_m.total_requests(), total);
+    assert_eq!(
+        fleet_m.total_rsn(),
+        shard_metrics.iter().map(|m| m.total_rsn()).sum::<u64>()
+    );
+    let batch_requests: usize =
+        fleet.batch_log().unwrap().iter().map(|b| b.requests).sum();
+    assert_eq!(batch_requests, submitted);
+}
+
+/// Satellite: per-shard seeds derive deterministically from the routing
+/// seed, shard 0 keeps the root seed, and the fleet receipt exposes the
+/// derivation for recovery audits.
+#[test]
+fn shard_seeds_are_derived_and_auditable() {
+    let seeds_a = FleetService::derive_shard_seeds(42, 4);
+    let seeds_b = FleetService::derive_shard_seeds(42, 4);
+    assert_eq!(seeds_a, seeds_b, "derivation must be deterministic");
+    assert_eq!(seeds_a[0], 42, "shard 0 runs the root seed");
+    let mut uniq = seeds_a.clone();
+    uniq.sort_unstable();
+    uniq.dedup();
+    assert_eq!(uniq.len(), 4, "shard seeds must be distinct: {seeds_a:?}");
+    // Prefix-stable: growing the fleet keeps existing shards' seeds.
+    assert_eq!(
+        FleetService::derive_shard_seeds(42, 2),
+        seeds_a[..2].to_vec(),
+        "derivation must be prefix-stable across fleet sizes"
+    );
+
+    let (mut cfg, pop, _trace) = workload(7);
+    cfg.seed = 42;
+    cfg.fleet_workers = 4;
+    let mut fleet = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    fleet.ingest_round(&pop).unwrap();
+    let receipt = fleet.state_receipt().unwrap().to_string();
+    for s in &seeds_a {
+        assert!(
+            receipt.contains(&format!("{s:#018x}")),
+            "fleet receipt must expose shard seed {s:#018x}"
+        );
+    }
+    assert!(receipt.contains("routing"), "fleet receipt carries routing state");
+    assert!(receipt.contains("epoch"), "fleet receipt carries the routing epoch");
+}
+
+/// Satellite: routing locality under shrink/re-home. Over random
+/// grow/shrink sequences, a user's first-assigned shard is their home
+/// forever — frozen-shard users still route to the shard holding their
+/// past data — and new users always land inside the active range.
+#[test]
+fn routing_stays_local_across_random_shrink_sequences() {
+    forall(
+        0xf1ee7_0002,
+        40,
+        |rng, size| {
+            let workers = 2 + (rng.next_u64() % 6) as usize; // 2..=7
+            let steps = 5 + (60.0 * size) as usize;
+            let ops: Vec<(u64, u64, u64)> = (0..steps)
+                .map(|_| (rng.next_u64() % 3, rng.next_u64() % 40, 1 + rng.next_u64() % 5000))
+                .collect();
+            (rng.next_u64(), workers, ops)
+        },
+        |&(seed, workers, ref ops)| {
+            let mut router = Router::new(workers, seed);
+            let mut homes: Vec<Option<usize>> = vec![None; 40];
+            for &(op, user, size) in ops {
+                match op {
+                    // Route traffic for a (possibly known) user.
+                    0 | 1 => {
+                        let u = UserId(user as u32);
+                        let s = router.route(u, size);
+                        match homes[user as usize] {
+                            None => {
+                                if s >= router.active() {
+                                    return Err(format!(
+                                        "new user {user} landed on shard {s}, outside \
+                                         active range {}",
+                                        router.active()
+                                    ));
+                                }
+                                homes[user as usize] = Some(s);
+                            }
+                            Some(home) => {
+                                if s != home {
+                                    return Err(format!(
+                                        "user {user} re-homed {home} -> {s} (epoch {})",
+                                        router.epoch()
+                                    ));
+                                }
+                            }
+                        }
+                        if router.lookup(u) != Some(s) {
+                            return Err(format!("lookup disagrees with route for {user}"));
+                        }
+                    }
+                    // Shrink or re-widen the active range.
+                    _ => router.set_active(1 + (size as usize % workers)),
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Per-shard journals recover independently: rebuild a 2-worker fleet
+/// from its shards' WALs and land on the identical fleet receipt.
+#[test]
+fn fleet_recovers_from_per_shard_journals() {
+    let (mut cfg, pop, trace) = workload(23);
+    cfg.fleet_workers = 2;
+    let fs0 = MemFs::new();
+    let fs1 = MemFs::new();
+    let mut fleet = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    fleet
+        .attach_durability(vec![
+            Durability::mem(DurabilityMode::Log, fs0.clone(), 0),
+            Durability::mem(DurabilityMode::Log, fs1.clone(), 0),
+        ])
+        .unwrap();
+    for t in 1..=cfg.rounds {
+        fleet.ingest_round(&pop).unwrap();
+        for req in trace.at(t) {
+            fleet.submit(req.clone());
+        }
+        fleet.drain_batched().unwrap();
+    }
+    fleet.flush_batched().unwrap();
+    let receipt_before = fleet.state_receipt().unwrap().to_string();
+    drop(fleet); // crash
+
+    let mut recovered = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    let reports = recovered
+        .attach_durability(vec![
+            Durability::mem(DurabilityMode::Log, fs0.fork(), 0),
+            Durability::mem(DurabilityMode::Log, fs1.fork(), 0),
+        ])
+        .unwrap();
+    assert!(reports.iter().all(|r| r.events_replayed > 0 || r.snapshot_loaded));
+    // The fleet receipt covers routing *config* (seed/epoch/active) and
+    // full per-shard state; sticky assignments live in each engine's
+    // recovered partitioner state, so no extra replay is needed here.
+    let receipt_after = recovered.state_receipt().unwrap().to_string();
+    assert_eq!(receipt_before, receipt_after, "per-shard recovery diverged");
+}
