@@ -288,5 +288,45 @@ fn main() -> anyhow::Result<()> {
         "fleet_workers=1 must replay the unsharded service byte-identically"
     );
     println!("fleet_workers=1 state receipt is byte-identical to the unsharded service");
+
+    // 10. Open-loop load harness: how much deletion traffic can this
+    // device actually sustain? `cause::load` drives a service with an
+    // *open-loop* arrival schedule — requests arrive on the scenario's
+    // clock whether or not the device kept up, the honest way to measure
+    // saturation — and records every queueing delay in a log-bucketed
+    // histogram (<=12.5% relative error per bucket, mergeable across
+    // fleet shards). The corpus ships six seeded scenarios (GDPR
+    // deletion storm, diurnal burst, heavy-tail user skew, satellite
+    // contact windows, IoT fleet churn, adversarial oldest-segment
+    // targeting), each an energy-bounded device on a harvest cycle; all
+    // arrivals, energy flows, and counters run on logical ticks, so the
+    // same seed reproduces the same report byte-for-byte. Per scenario,
+    // `cargo bench --bench bench_load` sweeps the offered rate for the
+    // highest rate at which every request met the SLO with no battery
+    // carryover, and writes BENCH_load.json —
+    // `gate.<scenario>_rps_at_slo` floors are ratcheted in CI by
+    // bench_gate. Here: one light run of the diurnal-burst scenario.
+    let scenarios = cause::load::corpus();
+    let sc = &scenarios[1]; // diurnal_burst
+    let run = cause::load::OpenLoopCfg {
+        offered_per_tick: 1.0,
+        ticks: 12,
+        tail_ticks: 64,
+        seed: 0x10ad,
+    };
+    let report = cause::load::run_open_loop(sc.as_ref(), &run)?;
+    println!(
+        "\nload [{}]: {} requests at {}/tick -> served {} | queueing delay \
+         p50 {} / p99 {} / p999 {} ticks | slo_ok={} | trace digest {:016x}",
+        sc.name(),
+        report.submitted,
+        run.offered_per_tick,
+        report.served,
+        report.p50(),
+        report.p99(),
+        report.p999(),
+        report.slo_ok,
+        report.trace_digest
+    );
     Ok(())
 }

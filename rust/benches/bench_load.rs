@@ -1,0 +1,134 @@
+//! bench_load — open-loop throughput-at-SLO across the scenario corpus.
+//!
+//! For every scenario in `cause::load::scenarios::corpus()`, sweep the
+//! offered arrival rate (requests per service tick) and record, per
+//! rate, the full log-bucketed queueing-delay histogram plus served /
+//! unserved counters. A rate *passes* when every submitted request was
+//! served, nothing stayed parked in battery carryover, and p99 queueing
+//! delay met the scenario's SLO; `<scenario>_rps_at_slo` is the highest
+//! passing rate — the measured sustainable deletion throughput of the
+//! energy-bounded device, in requests per logical tick.
+//!
+//! Unlike the other benches' wall-clock sections, every gated number
+//! here is a deterministic function of the seed: logical ticks, seeded
+//! arrivals, energy accounting. That means CI can ratchet the
+//! `load.<scenario>_rps_at_slo` floors exactly like `retrains_coalesced`
+//! (no tolerance needed), and the scenario-determinism tests can
+//! byte-compare the same reports this bench writes. The committed
+//! floors in `BENCH_baseline.json` sit at the lowest swept rate (0.5),
+//! which every scenario's harvest envelope covers by construction —
+//! tighten them from the merged baseline document `bench_gate` prints
+//! on green runs. `gate.p999_over_p50` is a histogram-sanity ceiling:
+//! the (+1-shifted) tail ratio at each scenario's best passing rate
+//! must stay bounded, or the histogram (or the scheduler's tail
+//! behavior) has regressed.
+//!
+//! Writes `BENCH_load.json` (override the path with
+//! `CAUSE_BENCH_LOAD_JSON`); `CAUSE_BENCH_FAST` shrinks ticks and the
+//! rate list for PR smoke runs without changing any scenario's shape.
+
+use std::time::Instant;
+
+use cause::load::{corpus, sweep, OpenLoopCfg};
+use cause::util::Json;
+
+fn fast() -> bool {
+    std::env::var("CAUSE_BENCH_FAST").is_ok()
+}
+
+fn main() {
+    // The lowest rate stays 0.5 in both modes — it is the committed
+    // floor, so even smoke runs must measure it.
+    let rates: Vec<f64> = if fast() {
+        vec![0.5, 2.0, 8.0]
+    } else {
+        vec![0.5, 1.0, 2.0, 4.0, 8.0]
+    };
+    let base = OpenLoopCfg {
+        offered_per_tick: 0.0, // set per sweep point
+        ticks: if fast() { 32 } else { 96 },
+        tail_ticks: if fast() { 192 } else { 256 },
+        seed: 0x10ad,
+    };
+
+    let mut scenarios_json = Json::obj();
+    let mut gate = Json::obj();
+    let mut floors = Vec::new();
+    let mut tail_ratio = 0.0f64;
+    let t0 = Instant::now();
+
+    for sc in corpus() {
+        let t1 = Instant::now();
+        let (rps_at_slo, reports) = sweep(sc.as_ref(), &rates, &base)
+            .unwrap_or_else(|e| panic!("{} sweep failed: {e:#}", sc.name()));
+        let secs = t1.elapsed().as_secs_f64();
+
+        // Histogram-sanity ratio at the best passing rate (the rate the
+        // floor certifies), worst across the corpus.
+        if let Some(best) = reports.iter().rev().find(|r| r.slo_ok) {
+            tail_ratio = tail_ratio.max(best.p999_over_p50());
+        }
+
+        let best = reports.iter().rev().find(|r| r.slo_ok);
+        println!(
+            "{:>20}: rps_at_slo {:>4} | best rate served {} reqs, p50/p99/p999 = \
+             {}/{}/{} ticks, {} violations | sweep {:.2}s",
+            sc.name(),
+            rps_at_slo,
+            best.map(|r| r.served).unwrap_or(0),
+            best.map(|r| r.p50()).unwrap_or(0),
+            best.map(|r| r.p99()).unwrap_or(0),
+            best.map(|r| r.p999()).unwrap_or(0),
+            best.map(|r| r.violations).unwrap_or(0),
+            secs
+        );
+
+        let rows: Vec<Json> = reports.iter().map(|r| r.to_json()).collect();
+        scenarios_json = scenarios_json.set(
+            sc.name(),
+            Json::obj()
+                .set("description", sc.description())
+                .set("knobs", sc.knobs())
+                .set("rps_at_slo", rps_at_slo)
+                .set("sweep", Json::Arr(rows))
+                .set("sweep_secs", secs), // informational; never gated
+        );
+        gate = gate.set(&format!("{}_rps_at_slo", sc.name()), rps_at_slo);
+        floors.push((sc.name(), rps_at_slo));
+    }
+    gate = gate.set("p999_over_p50", tail_ratio);
+
+    let summary = Json::obj()
+        .set("bench", "load")
+        .set(
+            "workload",
+            Json::obj()
+                .set("rates", rates.clone())
+                .set("ticks", base.ticks)
+                .set("tail_ticks", base.tail_ticks)
+                .set("seed", base.seed)
+                .set("fast", fast())
+                .set("total_secs", t0.elapsed().as_secs_f64()),
+        )
+        .set("scenarios", scenarios_json)
+        .set("gate", gate);
+
+    let out_path = std::env::var("CAUSE_BENCH_LOAD_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_load.json").to_string()
+    });
+    std::fs::write(&out_path, summary.to_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("\nwrote {out_path}");
+
+    // Sanity asserts (after the JSON so failures are diagnosable). The
+    // real floors live in BENCH_baseline.json via bench_gate; these only
+    // catch a bench that stopped measuring anything.
+    for (name, rps) in &floors {
+        assert!(
+            *rps >= rates[0],
+            "{name}: even the lowest swept rate {} missed its SLO (rps_at_slo {rps})",
+            rates[0]
+        );
+    }
+    assert!(tail_ratio > 0.0, "no passing run produced a tail ratio");
+}

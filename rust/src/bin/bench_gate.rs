@@ -2,57 +2,78 @@
 //!
 //! Compares the machine-readable summaries the benches wrote against the
 //! committed `BENCH_baseline.json` and fails (exit 1) when the scheduler,
-//! the planner, the checkpoint codec, or the durability layer regresses:
+//! the planner, the checkpoint codec, the durability layer, the sharded
+//! fleet, or the open-loop load harness regresses:
 //!
 //! * `gate.retrains_coalesced` (from `BENCH_coordinator.json`) drops below
 //!   the baseline (the coalescing win shrank), or
 //! * `gate.p99_queue_delay` grows more than 20% over the baseline (the
 //!   latency SLO frontier moved the wrong way), or
-//! * `gate.probe_speedup` (from `BENCH_scale.json`, when given) drops more
-//!   than 20% below `scale.probe_speedup` in the baseline (the indexed
-//!   planner lost throughput against the compiled-in naive-scan oracle), or
-//! * `gate.ratio` / `gate.decode_mbps` (from `BENCH_compress.json`, when
-//!   given) fall below the `compress.ratio` / `compress.decode_mbps`
-//!   floors in the baseline, or
+//! * `gate.probe_speedup` (from `BENCH_scale.json`) drops more than 20%
+//!   below `scale.probe_speedup` in the baseline (the indexed planner lost
+//!   throughput against the compiled-in naive-scan oracle), or
+//! * `gate.ratio` / `gate.decode_mbps` (from `BENCH_compress.json`) fall
+//!   below the `compress.*` floors, or
 //! * `gate.append_mbps` / `gate.recovery_events_per_s` (from
-//!   `BENCH_persist.json`, when given) fall below the `persist.*` floors —
-//!   the write-ahead log appends or crash recovery replays slower than the
+//!   `BENCH_persist.json`) fall below the `persist.*` floors — the
+//!   write-ahead log appends or crash recovery replays slower than the
 //!   committed floor. Floors are conservative invariant-derived values and
 //!   are checked directly, without an extra tolerance. Or
-//! * `gate.scaling_2w` (from `BENCH_fleet.json`, when given) falls below
-//!   the `fleet.scaling_2w` floor (the 2-worker sharded fleet stopped
-//!   beating the single-worker service on the same machine), or
-//!   `gate.merge_overhead` grows above the `fleet.merge_overhead` ceiling
-//!   (merging per-shard receipts/metrics became comparable to re-running
-//!   the workload).
+//! * `gate.scaling_2w` (from `BENCH_fleet.json`) falls below the
+//!   `fleet.scaling_2w` floor, or `gate.merge_overhead` grows above the
+//!   `fleet.merge_overhead` ceiling, or
+//! * any `load.<scenario>_rps_at_slo` floor (from `BENCH_load.json`) is
+//!   missed — the open-loop harness measured a lower sustainable
+//!   deletion throughput at SLO for that scenario — or the
+//!   `load.p999_over_p50` histogram-sanity ceiling is exceeded (the
+//!   latency tail at the certified rate blew out relative to the
+//!   median). The load numbers are deterministic logical-tick counters,
+//!   so the floors are checked exactly and ratchet like
+//!   `retrains_coalesced`.
 //!
-//! The coordinator values are deterministic workload counters, the scale
-//! value is a same-machine ratio (indexed vs naive on identical state),
-//! and the compression ratio is a deterministic function of the bench's
-//! seeded tensors — so those gates are stable across runner hardware; only
-//! the decode-throughput, append-throughput, and recovery-rate floors are
-//! wall-clock, and they are pinned far below any plausible machine. The
-//! fleet scaling value is a same-machine ratio too, but it additionally
-//! depends on the runner having ≥2 usable cores, so (like the wall-clock
-//! floors) it is never auto-raised by the ratchet; the merge-overhead
-//! ceiling is likewise never auto-lowered.
+//! **Every pinned baseline section must have a matching artifact.** If the
+//! baseline pins `scale`/`compress`/`persist`/`fleet`/`load` floors and
+//! the corresponding bench file is not supplied (or not discovered), the
+//! gate fails loudly instead of silently skipping the section — a
+//! forgotten CLI arg or a bench step that stopped producing its artifact
+//! must never turn a gate off.
 //!
-//! A baseline with `"bootstrap": true` passes unconditionally. On every
-//! pass — bootstrap or green — the gate prints **one** ready-to-commit
-//! baseline document covering all four bench files
-//! (coordinator/scale/compress/persist): a tighten-only merge of the
-//! committed values with the run's artifacts (a run that merely passed
-//! within tolerance cannot loosen a floor, and wall-clock floors are never
-//! auto-raised), so green main runs ratchet the floors by committing it
-//! verbatim — no per-file fragments to stitch together.
+//! Two invocation forms:
 //!
 //! ```bash
+//! # Auto-discovery (what CI uses): scan the baseline's directory for
+//! # BENCH_*.json files and classify each by its top-level "bench" field.
+//! cargo run --release --bin bench_gate -- BENCH_baseline.json
+//!
+//! # Positional (back-compatible): explicit artifact paths.
 //! cargo run --release --bin bench_gate -- \
 //!     BENCH_baseline.json BENCH_coordinator.json \
 //!     [BENCH_scale.json [BENCH_compress.json [BENCH_persist.json \
-//!     [BENCH_fleet.json]]]]
+//!     [BENCH_fleet.json [BENCH_load.json]]]]]
 //! ```
+//!
+//! The coordinator values are deterministic workload counters, the scale
+//! value is a same-machine ratio (indexed vs naive on identical state),
+//! the compression ratio is a deterministic function of the bench's
+//! seeded tensors, and the load section is fully deterministic — so those
+//! gates are stable across runner hardware; only the decode-throughput,
+//! append-throughput, and recovery-rate floors are wall-clock, and they
+//! are pinned far below any plausible machine. The fleet scaling value is
+//! a same-machine ratio too, but it additionally depends on the runner
+//! having ≥2 usable cores, so (like the wall-clock floors) it is never
+//! auto-raised by the ratchet; the merge-overhead ceiling is likewise
+//! never auto-lowered.
+//!
+//! A baseline with `"bootstrap": true` passes unconditionally. On every
+//! pass — bootstrap or green — the gate prints **one** ready-to-commit
+//! baseline document covering every measured section: a tighten-only
+//! merge of the committed values with the run's artifacts (a run that
+//! merely passed within tolerance cannot loosen a floor, and wall-clock
+//! floors are never auto-raised), so green main runs ratchet the floors
+//! by committing it verbatim — no per-file fragments to stitch together.
 
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::process::ExitCode;
 
 use cause::util::Json;
@@ -63,6 +84,12 @@ const P99_TOLERANCE: f64 = 0.20;
 /// Allowed relative drop of the planner probe speedup before the gate
 /// fails.
 const SPEEDUP_TOLERANCE: f64 = 0.20;
+
+/// Artifact kinds the gate understands, in positional-argument order.
+/// Each is both the value of an artifact's top-level `"bench"` field
+/// (for auto-discovery) and — except `coordinator`, whose floors live
+/// under `gate` — the baseline section name holding its floors.
+const KINDS: [&str; 6] = ["coordinator", "scale", "compress", "persist", "fleet", "load"];
 
 fn load(path: &str) -> Result<Json, String> {
     let text =
@@ -76,7 +103,23 @@ fn gate_value(doc: &Json, path: &str, key: &str) -> Result<f64, String> {
         .ok_or_else(|| format!("{path}: missing numeric field gate.{key}"))
 }
 
+/// The whole `gate` object of an artifact as a name → value map (the
+/// load artifact carries one dynamic key per scenario).
+fn gate_map(doc: &Json, path: &str) -> Result<BTreeMap<String, f64>, String> {
+    let Some(Json::Obj(m)) = doc.get("gate") else {
+        return Err(format!("{path}: missing gate object"));
+    };
+    m.iter()
+        .map(|(k, v)| {
+            v.as_f64()
+                .map(|x| (k.clone(), x))
+                .ok_or_else(|| format!("{path}: gate.{k} is not numeric"))
+        })
+        .collect()
+}
+
 /// Current gate values measured by this run's artifacts.
+#[derive(Clone)]
 struct Current {
     coalesced: f64,
     p99: f64,
@@ -84,6 +127,7 @@ struct Current {
     compress: Option<(f64, f64)>, // (ratio, decode_mbps)
     persist: Option<(f64, f64)>,  // (append_mbps, recovery_events_per_s)
     fleet: Option<(f64, f64)>,    // (scaling_2w, merge_overhead)
+    load: Option<BTreeMap<String, f64>>, // <scenario>_rps_at_slo + p999_over_p50
 }
 
 impl Current {
@@ -94,7 +138,10 @@ impl Current {
     /// append MB/s, recovery events/s) are never raised automatically — a
     /// fast runner must not pin a floor slower machines would fail; when
     /// no floor is committed they get 10x headroom under the measured
-    /// rate.
+    /// rate. The load section is deterministic in both directions:
+    /// `*_rps_at_slo` floors take the max of committed and measured, the
+    /// `p999_over_p50` ceiling the min, and committed keys the run did
+    /// not measure are kept so they cannot silently un-pin.
     fn pin_block(&self, baseline: &Json) -> Json {
         let base = |path: &[&str]| baseline.at(path).and_then(Json::as_f64);
         let coalesced = self
@@ -143,10 +190,42 @@ impl Current {
                 Json::obj().set("scaling_2w", scaling).set("merge_overhead", merge),
             );
         }
+        if let Some(measured) = &self.load {
+            let mut merged: BTreeMap<String, f64> = BTreeMap::new();
+            if let Some(Json::Obj(committed)) = baseline.get("load") {
+                for (k, v) in committed {
+                    if let Some(x) = v.as_f64() {
+                        merged.insert(k.clone(), x);
+                    }
+                }
+            }
+            for (k, &x) in measured {
+                merged
+                    .entry(k.clone())
+                    .and_modify(|c| {
+                        // Ceiling ratchets down, floors ratchet up — all
+                        // deterministic logical-tick numbers.
+                        let ceiling = k == "p999_over_p50";
+                        *c = if ceiling { c.min(x) } else { c.max(x) };
+                    })
+                    .or_insert(x);
+            }
+            let mut section = Json::obj();
+            for (k, x) in merged {
+                section = section.set(&k, x);
+            }
+            pin = pin.set("load", section);
+        }
         pin
     }
 }
 
+/// True when the baseline pins a non-empty numeric section under `name`.
+fn baseline_pins(baseline: &Json, name: &str) -> bool {
+    matches!(baseline.get(name), Some(Json::Obj(m)) if !m.is_empty())
+}
+
+#[allow(clippy::too_many_arguments)]
 fn run(
     baseline_path: &str,
     current_path: &str,
@@ -154,6 +233,7 @@ fn run(
     compress_path: Option<&str>,
     persist_path: Option<&str>,
     fleet_path: Option<&str>,
+    load_path: Option<&str>,
 ) -> Result<(), String> {
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
@@ -192,6 +272,10 @@ fn run(
             }
             None => None,
         },
+        load: match load_path {
+            Some(p) => Some(gate_map(&load(p)?, p)?),
+            None => None,
+        },
     };
 
     if baseline.get("bootstrap").and_then(Json::as_bool) == Some(true) {
@@ -213,6 +297,25 @@ fn run(
     );
 
     let mut failures = Vec::new();
+
+    // A pinned baseline section with no matching artifact is a hard
+    // failure: silently skipping a gate is exactly the brittleness this
+    // check exists to remove.
+    for (section, present) in [
+        ("scale", cur.speedup.is_some()),
+        ("compress", cur.compress.is_some()),
+        ("persist", cur.persist.is_some()),
+        ("fleet", cur.fleet.is_some()),
+        ("load", cur.load.is_some()),
+    ] {
+        if baseline_pins(&baseline, section) && !present {
+            failures.push(format!(
+                "baseline pins `{section}` floors but no matching bench artifact was \
+                 supplied or discovered — refusing to silently skip that gate"
+            ));
+        }
+    }
+
     if cur.coalesced < base_coalesced {
         failures.push(format!(
             "retrains_coalesced dropped: {} < baseline {base_coalesced}",
@@ -341,6 +444,59 @@ fn run(
         }
     }
 
+    if let Some(cur_load) = &cur.load {
+        match baseline.get("load") {
+            Some(Json::Obj(committed)) => {
+                for (key, v) in committed {
+                    let Some(pinned) = v.as_f64() else {
+                        failures.push(format!(
+                            "baseline load.{key} is not numeric — fix the baseline"
+                        ));
+                        continue;
+                    };
+                    let Some(&measured) = cur_load.get(key) else {
+                        failures.push(format!(
+                            "baseline pins load.{key} but the load artifact's gate \
+                             has no such key — a scenario disappeared from the corpus"
+                        ));
+                        continue;
+                    };
+                    if let Some(scenario) = key.strip_suffix("_rps_at_slo") {
+                        println!(
+                            "bench_gate: load {scenario} rps_at_slo floor {pinned} -> \
+                             {measured}"
+                        );
+                        if measured < pinned - 1e-9 {
+                            failures.push(format!(
+                                "open-loop throughput-at-SLO regressed for \
+                                 `{scenario}`: {measured} < floor {pinned} req/tick"
+                            ));
+                        }
+                    } else if key == "p999_over_p50" {
+                        println!(
+                            "bench_gate: load p999/p50 ceiling {pinned} -> {measured}"
+                        );
+                        if measured > pinned + 1e-9 {
+                            failures.push(format!(
+                                "latency-histogram tail ratio grew above ceiling: \
+                                 p999/p50 {measured} > {pinned}"
+                            ));
+                        }
+                    } else {
+                        failures.push(format!(
+                            "baseline load.{key} is neither a `*_rps_at_slo` floor \
+                             nor the `p999_over_p50` ceiling — unknown gate key"
+                        ));
+                    }
+                }
+            }
+            _ => println!(
+                "bench_gate: {baseline_path} has no load floors — the merged \
+                 baseline below pins them"
+            ),
+        }
+    }
+
     if failures.is_empty() {
         println!("bench_gate: OK");
         // One ready-to-commit document covering every measured section
@@ -356,21 +512,111 @@ fn run(
     }
 }
 
+/// Auto-discovery: scan the baseline's directory for `BENCH_*.json`
+/// files (excluding the baseline itself), classify each by its top-level
+/// `"bench"` field, and return artifact paths in [`KINDS`] order. Two
+/// files claiming the same kind is an error (stale artifacts must not
+/// race); files without a recognized `"bench"` field are skipped with a
+/// warning (figure/table outputs are not gate artifacts). A missing
+/// coordinator artifact is an error — the core gate can never be skipped.
+fn discover(baseline_path: &str) -> Result<[Option<String>; 6], String> {
+    let base = Path::new(baseline_path);
+    let dir = match base.parent() {
+        Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
+        _ => std::path::PathBuf::from("."),
+    };
+    let base_name = base.file_name().map(|n| n.to_string_lossy().into_owned());
+
+    let mut names: Vec<String> = std::fs::read_dir(&dir)
+        .map_err(|e| format!("scanning {}: {e}", dir.display()))?
+        .filter_map(|entry| {
+            let name = entry.ok()?.file_name().to_string_lossy().into_owned();
+            let is_artifact = name.starts_with("BENCH_")
+                && name.ends_with(".json")
+                && Some(&name) != base_name.as_ref();
+            is_artifact.then_some(name)
+        })
+        .collect();
+    names.sort(); // deterministic scan order
+
+    let mut slots: [Option<String>; 6] = Default::default();
+    for name in names {
+        let path = dir.join(&name).to_string_lossy().into_owned();
+        let doc = load(&path)?;
+        match doc.get("bench").and_then(Json::as_str) {
+            Some(kind) => match KINDS.iter().position(|k| *k == kind) {
+                Some(i) => {
+                    if let Some(prev) = &slots[i] {
+                        return Err(format!(
+                            "both {prev} and {path} claim bench kind `{kind}` — \
+                             remove the stale artifact"
+                        ));
+                    }
+                    slots[i] = Some(path);
+                }
+                None => println!(
+                    "bench_gate: skipping {path} (unrecognized bench kind `{kind}`)"
+                ),
+            },
+            None => println!(
+                "bench_gate: skipping {path} (no top-level \"bench\" field — not a \
+                 gate artifact)"
+            ),
+        }
+    }
+
+    if slots[0].is_none() {
+        return Err(format!(
+            "no BENCH_*.json next to {baseline_path} identifies itself as the \
+             coordinator artifact (\"bench\": \"coordinator\") — run \
+             bench_coordinator first"
+        ));
+    }
+    Ok(slots)
+}
+
+fn run_discovered(baseline_path: &str) -> Result<(), String> {
+    let slots = discover(baseline_path)?;
+    let opt = |i: usize| slots[i].as_deref();
+    println!(
+        "bench_gate: discovered artifacts: {}",
+        KINDS
+            .iter()
+            .enumerate()
+            .map(|(i, k)| format!("{k}={}", opt(i).unwrap_or("-")))
+            .collect::<Vec<_>>()
+            .join(" ")
+    );
+    run(
+        baseline_path,
+        slots[0].as_deref().expect("discover guarantees a coordinator artifact"),
+        opt(1),
+        opt(2),
+        opt(3),
+        opt(4),
+        opt(5),
+    )
+}
+
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
-    let (baseline, current, rest) = match args.as_slice() {
-        [b, c, rest @ ..] if rest.len() <= 4 => (b.as_str(), c.as_str(), rest),
+    let result = match args.as_slice() {
+        [baseline] => run_discovered(baseline),
+        [baseline, current, rest @ ..] if rest.len() <= 5 => {
+            let opt = |i: usize| rest.get(i).map(String::as_str);
+            run(baseline, current, opt(0), opt(1), opt(2), opt(3), opt(4))
+        }
         _ => {
             eprintln!(
-                "usage: bench_gate <BENCH_baseline.json> <BENCH_coordinator.json> \
-                 [<BENCH_scale.json> [<BENCH_compress.json> [<BENCH_persist.json> \
-                 [<BENCH_fleet.json>]]]]"
+                "usage: bench_gate <BENCH_baseline.json>   (auto-discover BENCH_*.json \
+                 siblings)\n   or: bench_gate <BENCH_baseline.json> \
+                 <BENCH_coordinator.json> [<BENCH_scale.json> [<BENCH_compress.json> \
+                 [<BENCH_persist.json> [<BENCH_fleet.json> [<BENCH_load.json>]]]]]"
             );
             return ExitCode::FAILURE;
         }
     };
-    let opt = |i: usize| rest.get(i).map(String::as_str);
-    match run(baseline, current, opt(0), opt(1), opt(2), opt(3)) {
+    match result {
         Ok(()) => ExitCode::SUCCESS,
         Err(e) => {
             eprintln!("bench_gate: FAIL: {e}");
@@ -383,12 +629,16 @@ fn main() -> ExitCode {
 mod tests {
     use super::*;
 
-    fn write_tmp(name: &str, text: &str) -> String {
-        let dir = std::env::temp_dir().join("cause_bench_gate_test");
+    fn write_in(dir_name: &str, name: &str, text: &str) -> String {
+        let dir = std::env::temp_dir().join("cause_bench_gate_test").join(dir_name);
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join(name);
         std::fs::write(&p, text).unwrap();
         p.to_string_lossy().into_owned()
+    }
+
+    fn write_tmp(name: &str, text: &str) -> String {
+        write_in("flat", name, text)
     }
 
     fn doc(coalesced: f64, p99: f64) -> String {
@@ -402,60 +652,63 @@ mod tests {
             .to_pretty()
     }
 
-    fn doc_with_scale(coalesced: f64, p99: f64, speedup: f64) -> String {
-        Json::parse(&doc(coalesced, p99))
-            .unwrap()
-            .set("scale", Json::obj().set("probe_speedup", speedup))
-            .to_pretty()
+    /// Baseline with `gate` plus one named floor section.
+    fn doc_with(section: &str, body: Json) -> String {
+        Json::parse(&doc(40.0, 4.0)).unwrap().set(section, body).to_pretty()
     }
 
-    fn doc_full(coalesced: f64, p99: f64, speedup: f64, ratio: f64, mbps: f64) -> String {
-        Json::parse(&doc_with_scale(coalesced, p99, speedup))
-            .unwrap()
-            .set(
-                "compress",
-                Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
-            )
-            .to_pretty()
+    fn scale_section() -> Json {
+        Json::obj().set("probe_speedup", 10.0)
     }
 
-    fn doc_all(
-        coalesced: f64,
-        p99: f64,
-        speedup: f64,
-        ratio: f64,
-        mbps: f64,
-        append: f64,
-        recovery: f64,
-    ) -> String {
-        Json::parse(&doc_full(coalesced, p99, speedup, ratio, mbps))
+    fn compress_section() -> Json {
+        Json::obj().set("ratio", 2.0).set("decode_mbps", 25.0)
+    }
+
+    fn persist_section() -> Json {
+        Json::obj().set("append_mbps", 20.0).set("recovery_events_per_s", 5000.0)
+    }
+
+    fn fleet_section() -> Json {
+        Json::obj().set("scaling_2w", 1.5).set("merge_overhead", 0.5)
+    }
+
+    fn load_section() -> Json {
+        Json::obj()
+            .set("gdpr_storm_rps_at_slo", 0.5)
+            .set("heavy_tail_rps_at_slo", 0.5)
+            .set("p999_over_p50", 64.0)
+    }
+
+    /// Baseline pinning every section.
+    fn doc_everything() -> String {
+        Json::parse(&doc(40.0, 4.0))
             .unwrap()
-            .set(
-                "persist",
-                Json::obj()
-                    .set("append_mbps", append)
-                    .set("recovery_events_per_s", recovery),
-            )
+            .set("scale", scale_section())
+            .set("compress", compress_section())
+            .set("persist", persist_section())
+            .set("fleet", fleet_section())
+            .set("load", load_section())
             .to_pretty()
     }
 
     fn scale_doc(speedup: f64) -> String {
         Json::obj()
+            .set("bench", "scale")
             .set("gate", Json::obj().set("probe_speedup", speedup))
             .to_pretty()
     }
 
     fn compress_doc(ratio: f64, mbps: f64) -> String {
         Json::obj()
-            .set(
-                "gate",
-                Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
-            )
+            .set("bench", "compress")
+            .set("gate", Json::obj().set("ratio", ratio).set("decode_mbps", mbps))
             .to_pretty()
     }
 
     fn persist_doc(append: f64, recovery: f64) -> String {
         Json::obj()
+            .set("bench", "persist")
             .set(
                 "gate",
                 Json::obj()
@@ -465,22 +718,33 @@ mod tests {
             .to_pretty()
     }
 
-    fn doc_everything(scaling: f64, merge: f64) -> String {
-        Json::parse(&doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0))
-            .unwrap()
+    fn fleet_doc(scaling: f64, merge: f64) -> String {
+        Json::obj()
+            .set("bench", "fleet")
             .set(
-                "fleet",
+                "gate",
                 Json::obj().set("scaling_2w", scaling).set("merge_overhead", merge),
             )
             .to_pretty()
     }
 
-    fn fleet_doc(scaling: f64, merge: f64) -> String {
+    fn load_doc(gdpr: f64, heavy: f64, tail_ratio: f64) -> String {
         Json::obj()
+            .set("bench", "load")
             .set(
                 "gate",
-                Json::obj().set("scaling_2w", scaling).set("merge_overhead", merge),
+                Json::obj()
+                    .set("gdpr_storm_rps_at_slo", gdpr)
+                    .set("heavy_tail_rps_at_slo", heavy)
+                    .set("p999_over_p50", tail_ratio),
             )
+            .to_pretty()
+    }
+
+    fn coordinator_doc(coalesced: f64, p99: f64) -> String {
+        Json::parse(&doc(coalesced, p99))
+            .unwrap()
+            .set("bench", "coordinator")
             .to_pretty()
     }
 
@@ -489,11 +753,11 @@ mod tests {
         let base = write_tmp("base.json", &doc(40.0, 4.0));
         let same = write_tmp("same.json", &doc(40.0, 4.0));
         let better = write_tmp("better.json", &doc(55.0, 3.0));
-        assert!(run(&base, &same, None, None, None, None).is_ok());
-        assert!(run(&base, &better, None, None, None, None).is_ok());
+        assert!(run(&base, &same, None, None, None, None, None).is_ok());
+        assert!(run(&base, &better, None, None, None, None, None).is_ok());
         // Within the 20% latency tolerance.
         let near = write_tmp("near.json", &doc(40.0, 4.8));
-        assert!(run(&base, &near, None, None, None, None).is_ok());
+        assert!(run(&base, &near, None, None, None, None, None).is_ok());
     }
 
     #[test]
@@ -501,155 +765,278 @@ mod tests {
         let base = write_tmp("base2.json", &doc(40.0, 4.0));
         let fewer = write_tmp("fewer.json", &doc(39.0, 4.0));
         let slower = write_tmp("slower.json", &doc(40.0, 4.81));
-        assert!(run(&base, &fewer, None, None, None, None).is_err());
-        assert!(run(&base, &slower, None, None, None, None).is_err());
-        assert!(run("/nonexistent.json", &base, None, None, None, None).is_err());
+        assert!(run(&base, &fewer, None, None, None, None, None).is_err());
+        assert!(run(&base, &slower, None, None, None, None, None).is_err());
+        assert!(run("/nonexistent.json", &base, None, None, None, None, None).is_err());
         let junk = write_tmp("junk.json", "not json");
-        assert!(run(&junk, &base, None, None, None, None).is_err());
+        assert!(run(&junk, &base, None, None, None, None, None).is_err());
     }
 
     #[test]
     fn scale_gate_checks_probe_speedup() {
-        let base = write_tmp("base3.json", &doc_with_scale(40.0, 4.0, 10.0));
+        let base = write_tmp("base3.json", &doc_with("scale", scale_section()));
         let cur = write_tmp("cur3.json", &doc(40.0, 4.0));
         // Within tolerance (20% of 10.0 → floor 8.0) and above.
         let ok = write_tmp("scale_ok.json", &scale_doc(8.5));
         let better = write_tmp("scale_better.json", &scale_doc(30.0));
-        assert!(run(&base, &cur, Some(&ok), None, None, None).is_ok());
-        assert!(run(&base, &cur, Some(&better), None, None, None).is_ok());
+        assert!(run(&base, &cur, Some(&ok), None, None, None, None).is_ok());
+        assert!(run(&base, &cur, Some(&better), None, None, None, None).is_ok());
         // Below the floor: fail.
         let bad = write_tmp("scale_bad.json", &scale_doc(7.9));
-        assert!(run(&base, &cur, Some(&bad), None, None, None).is_err());
+        assert!(run(&base, &cur, Some(&bad), None, None, None, None).is_err());
         // Malformed scale summary: fail even though coordinator gates pass.
         let junk = write_tmp("scale_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&junk), None, None, None).is_err());
+        assert!(run(&base, &cur, Some(&junk), None, None, None, None).is_err());
         // Baseline without a pinned scale value: informational pass.
         let base_unpinned = write_tmp("base4.json", &doc(40.0, 4.0));
-        assert!(run(&base_unpinned, &cur, Some(&ok), None, None, None).is_ok());
+        assert!(run(&base_unpinned, &cur, Some(&ok), None, None, None, None).is_ok());
     }
 
     #[test]
     fn compress_gate_checks_floors() {
-        let base = write_tmp("base5.json", &doc_full(40.0, 4.0, 10.0, 2.0, 25.0));
+        let base = write_tmp("base5.json", &doc_with("compress", compress_section()));
         let cur = write_tmp("cur5.json", &doc(40.0, 4.0));
-        let scale = write_tmp("scale5.json", &scale_doc(12.0));
         // At or above both floors: pass.
         let ok = write_tmp("comp_ok.json", &compress_doc(2.9, 400.0));
         let exact = write_tmp("comp_exact.json", &compress_doc(2.0, 25.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&ok), None, None).is_ok());
-        assert!(run(&base, &cur, Some(&scale), Some(&exact), None, None).is_ok());
+        assert!(run(&base, &cur, None, Some(&ok), None, None, None).is_ok());
+        assert!(run(&base, &cur, None, Some(&exact), None, None, None).is_ok());
         // Ratio below the floor: fail (no extra tolerance on floors).
         let thin = write_tmp("comp_thin.json", &compress_doc(1.9, 400.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&thin), None, None).is_err());
+        assert!(run(&base, &cur, None, Some(&thin), None, None, None).is_err());
         // Decode throughput below the floor: fail.
         let slow = write_tmp("comp_slow.json", &compress_doc(2.9, 20.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&slow), None, None).is_err());
+        assert!(run(&base, &cur, None, Some(&slow), None, None, None).is_err());
         // Malformed compress summary: fail.
         let junk = write_tmp("comp_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&scale), Some(&junk), None, None).is_err());
+        assert!(run(&base, &cur, None, Some(&junk), None, None, None).is_err());
         // Baseline without compress floors: informational pass.
-        let base_nofloor = write_tmp("base6.json", &doc_with_scale(40.0, 4.0, 10.0));
-        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&ok), None, None).is_ok());
-        // Compress artifact without the scale artifact also works.
-        assert!(run(&base, &cur, None, Some(&ok), None, None).is_ok());
+        let base_nofloor = write_tmp("base6.json", &doc(40.0, 4.0));
+        assert!(run(&base_nofloor, &cur, None, Some(&ok), None, None, None).is_ok());
     }
 
     #[test]
     fn persist_gate_checks_floors() {
-        let base =
-            write_tmp("base7.json", &doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0));
+        let base = write_tmp("base7.json", &doc_with("persist", persist_section()));
         let cur = write_tmp("cur7.json", &doc(40.0, 4.0));
-        let scale = write_tmp("scale7.json", &scale_doc(12.0));
-        let comp = write_tmp("comp7.json", &compress_doc(2.9, 400.0));
         // At/above both floors: pass.
         let ok = write_tmp("pers_ok.json", &persist_doc(120.0, 90_000.0));
         let exact = write_tmp("pers_exact.json", &persist_doc(20.0, 5000.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&ok), None).is_ok());
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&exact), None).is_ok());
+        assert!(run(&base, &cur, None, None, Some(&ok), None, None).is_ok());
+        assert!(run(&base, &cur, None, None, Some(&exact), None, None).is_ok());
         // Append below floor: fail.
         let slow_append = write_tmp("pers_slow_a.json", &persist_doc(19.0, 90_000.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_append), None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&slow_append), None, None).is_err());
         // Recovery below floor: fail.
         let slow_rec = write_tmp("pers_slow_r.json", &persist_doc(120.0, 4000.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&slow_rec), None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&slow_rec), None, None).is_err());
         // Malformed persist summary: fail.
         let junk = write_tmp("pers_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&junk), None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&junk), None, None).is_err());
         // Baseline without persist floors: informational pass.
-        let base_nofloor = write_tmp("base8.json", &doc_full(40.0, 4.0, 10.0, 2.0, 25.0));
-        assert!(run(&base_nofloor, &cur, Some(&scale), Some(&comp), Some(&ok), None).is_ok());
-        // Persist artifact alone (no scale/compress) also works.
-        assert!(run(&base, &cur, None, None, Some(&ok), None).is_ok());
+        let base_nofloor = write_tmp("base8.json", &doc(40.0, 4.0));
+        assert!(run(&base_nofloor, &cur, None, None, Some(&ok), None, None).is_ok());
     }
 
     #[test]
     fn fleet_gate_checks_scaling_and_merge() {
-        let base = write_tmp("base9.json", &doc_everything(1.5, 0.5));
+        let base = write_tmp("base9.json", &doc_with("fleet", fleet_section()));
         let cur = write_tmp("cur9.json", &doc(40.0, 4.0));
         // At/above the scaling floor and under the merge ceiling: pass.
         let ok = write_tmp("fleet_ok.json", &fleet_doc(1.8, 0.02));
         let exact = write_tmp("fleet_exact.json", &fleet_doc(1.5, 0.5));
-        assert!(run(&base, &cur, None, None, None, Some(&ok)).is_ok());
-        assert!(run(&base, &cur, None, None, None, Some(&exact)).is_ok());
+        assert!(run(&base, &cur, None, None, None, Some(&ok), None).is_ok());
+        assert!(run(&base, &cur, None, None, None, Some(&exact), None).is_ok());
         // Scaling below the floor: fail (no extra tolerance on floors).
         let flat = write_tmp("fleet_flat.json", &fleet_doc(1.4, 0.02));
-        assert!(run(&base, &cur, None, None, None, Some(&flat)).is_err());
+        assert!(run(&base, &cur, None, None, None, Some(&flat), None).is_err());
         // Merge overhead above the ceiling: fail.
         let heavy = write_tmp("fleet_heavy.json", &fleet_doc(1.8, 0.6));
-        assert!(run(&base, &cur, None, None, None, Some(&heavy)).is_err());
+        assert!(run(&base, &cur, None, None, None, Some(&heavy), None).is_err());
         // Malformed fleet summary: fail even though the rest passes.
         let junk = write_tmp("fleet_junk.json", "{}");
-        assert!(run(&base, &cur, None, None, None, Some(&junk)).is_err());
+        assert!(run(&base, &cur, None, None, None, Some(&junk), None).is_err());
         // Baseline without fleet floors: informational pass.
-        let base_nofloor =
-            write_tmp("base10.json", &doc_all(40.0, 4.0, 10.0, 2.0, 25.0, 20.0, 5000.0));
-        assert!(run(&base_nofloor, &cur, None, None, None, Some(&ok)).is_ok());
-        // The fleet artifact composes with the other positional artifacts.
-        let scale = write_tmp("scale9.json", &scale_doc(12.0));
-        let comp = write_tmp("comp9.json", &compress_doc(2.9, 400.0));
-        let pers = write_tmp("pers9.json", &persist_doc(120.0, 90_000.0));
-        assert!(run(&base, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&ok)).is_ok());
-        assert!(
-            run(&base, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&flat)).is_err()
+        let base_nofloor = write_tmp("base10.json", &doc(40.0, 4.0));
+        assert!(run(&base_nofloor, &cur, None, None, None, Some(&ok), None).is_ok());
+    }
+
+    #[test]
+    fn load_gate_checks_floors_and_ceiling() {
+        let base = write_tmp("base11.json", &doc_with("load", load_section()));
+        let cur = write_tmp("cur11.json", &doc(40.0, 4.0));
+        // At/above every floor and under the ceiling: pass.
+        let ok = write_tmp("load_ok.json", &load_doc(2.0, 0.5, 9.0));
+        let exact = write_tmp("load_exact.json", &load_doc(0.5, 0.5, 64.0));
+        assert!(run(&base, &cur, None, None, None, None, Some(&ok)).is_ok());
+        assert!(run(&base, &cur, None, None, None, None, Some(&exact)).is_ok());
+        // One scenario's throughput-at-SLO below its floor: fail.
+        let slow = write_tmp("load_slow.json", &load_doc(0.0, 2.0, 9.0));
+        assert!(run(&base, &cur, None, None, None, None, Some(&slow)).is_err());
+        // Tail ratio above the histogram-sanity ceiling: fail.
+        let tail = write_tmp("load_tail.json", &load_doc(2.0, 2.0, 65.0));
+        assert!(run(&base, &cur, None, None, None, None, Some(&tail)).is_err());
+        // A pinned scenario missing from the artifact's gate: fail loudly.
+        let missing = write_tmp(
+            "load_missing.json",
+            &Json::obj()
+                .set("bench", "load")
+                .set(
+                    "gate",
+                    Json::obj()
+                        .set("gdpr_storm_rps_at_slo", 2.0)
+                        .set("p999_over_p50", 9.0),
+                )
+                .to_pretty(),
         );
+        assert!(run(&base, &cur, None, None, None, None, Some(&missing)).is_err());
+        // An unknown key pinned in the baseline's load section: fail.
+        let base_bogus = write_tmp(
+            "base12.json",
+            &doc_with("load", load_section().set("bogus_knob", 1.0)),
+        );
+        let full = write_tmp(
+            "load_full.json",
+            &Json::obj()
+                .set("bench", "load")
+                .set(
+                    "gate",
+                    Json::obj()
+                        .set("gdpr_storm_rps_at_slo", 2.0)
+                        .set("heavy_tail_rps_at_slo", 2.0)
+                        .set("p999_over_p50", 9.0)
+                        .set("bogus_knob", 1.0),
+                )
+                .to_pretty(),
+        );
+        assert!(run(&base_bogus, &cur, None, None, None, None, Some(&full)).is_err());
+        // Malformed load summary: fail.
+        let junk = write_tmp("load_junk.json", "{}");
+        assert!(run(&base, &cur, None, None, None, None, Some(&junk)).is_err());
+        // Baseline without load floors: informational pass.
+        let base_nofloor = write_tmp("base13.json", &doc(40.0, 4.0));
+        assert!(run(&base_nofloor, &cur, None, None, None, None, Some(&ok)).is_ok());
+    }
+
+    #[test]
+    fn pinned_sections_without_artifacts_fail_loudly() {
+        // The brittleness fix: a baseline that pins floors must receive
+        // the matching artifact or the gate fails — no silent skips.
+        let base = write_tmp("base14.json", &doc_everything());
+        let cur = write_tmp("cur14.json", &doc(40.0, 4.0));
+        let err = run(&base, &cur, None, None, None, None, None).unwrap_err();
+        for section in ["scale", "compress", "persist", "fleet", "load"] {
+            assert!(err.contains(&format!("`{section}`")), "{section} not in: {err}");
+        }
+        // Supplying all artifacts clears it.
+        let scale = write_tmp("all_scale.json", &scale_doc(12.0));
+        let comp = write_tmp("all_comp.json", &compress_doc(2.9, 400.0));
+        let pers = write_tmp("all_pers.json", &persist_doc(120.0, 90_000.0));
+        let fleet = write_tmp("all_fleet.json", &fleet_doc(1.8, 0.02));
+        let load_a = write_tmp("all_load.json", &load_doc(2.0, 0.5, 9.0));
+        assert!(run(
+            &base,
+            &cur,
+            Some(&scale),
+            Some(&comp),
+            Some(&pers),
+            Some(&fleet),
+            Some(&load_a)
+        )
+        .is_ok());
+        // Dropping exactly one (e.g. the fleet artifact) fails again.
+        let err = run(
+            &base,
+            &cur,
+            Some(&scale),
+            Some(&comp),
+            Some(&pers),
+            None,
+            Some(&load_a),
+        )
+        .unwrap_err();
+        assert!(err.contains("`fleet`"), "{err}");
+        assert!(!err.contains("`scale`"), "{err}");
+    }
+
+    #[test]
+    fn discovery_classifies_by_bench_field() {
+        let base = write_in("disc1", "BENCH_baseline.json", &doc_everything());
+        write_in("disc1", "BENCH_coordinator.json", &coordinator_doc(41.0, 3.9));
+        write_in("disc1", "BENCH_scale.json", &scale_doc(12.0));
+        write_in("disc1", "BENCH_compress.json", &compress_doc(2.9, 400.0));
+        write_in("disc1", "BENCH_persist.json", &persist_doc(120.0, 90_000.0));
+        write_in("disc1", "BENCH_fleet.json", &fleet_doc(1.8, 0.02));
+        write_in("disc1", "BENCH_load.json", &load_doc(2.0, 0.5, 9.0));
+        // A figure output without a "bench" field is skipped, not fatal.
+        write_in("disc1", "BENCH_fig99.json", "{\"rows\": []}");
+        assert!(run_discovered(&base).is_ok());
+
+        // File names don't matter — classification is by the field.
+        let base = write_in("disc2", "BENCH_baseline.json", &doc(40.0, 4.0));
+        write_in("disc2", "BENCH_weird_name.json", &coordinator_doc(41.0, 3.9));
+        assert!(run_discovered(&base).is_ok());
+    }
+
+    #[test]
+    fn discovery_fails_without_coordinator_or_on_duplicates() {
+        // No artifact claims "coordinator": hard error.
+        let base = write_in("disc3", "BENCH_baseline.json", &doc(40.0, 4.0));
+        write_in("disc3", "BENCH_scale.json", &scale_doc(12.0));
+        let err = run_discovered(&base).unwrap_err();
+        assert!(err.contains("coordinator"), "{err}");
+
+        // Two files claiming the same kind: hard error naming both.
+        let base = write_in("disc4", "BENCH_baseline.json", &doc(40.0, 4.0));
+        write_in("disc4", "BENCH_coordinator.json", &coordinator_doc(41.0, 3.9));
+        write_in("disc4", "BENCH_scale.json", &scale_doc(12.0));
+        write_in("disc4", "BENCH_scale_stale.json", &scale_doc(11.0));
+        let err = run_discovered(&base).unwrap_err();
+        assert!(err.contains("claim bench kind `scale`"), "{err}");
+    }
+
+    #[test]
+    fn discovery_gates_regressions_like_positional_mode() {
+        // A regressing artifact discovered from disk must fail the same
+        // way it would when passed positionally.
+        let base = write_in(
+            "disc5",
+            "BENCH_baseline.json",
+            &doc_with("load", load_section()),
+        );
+        write_in("disc5", "BENCH_coordinator.json", &coordinator_doc(41.0, 3.9));
+        write_in("disc5", "BENCH_load.json", &load_doc(0.0, 2.0, 9.0));
+        let err = run_discovered(&base).unwrap_err();
+        assert!(err.contains("gdpr_storm"), "{err}");
     }
 
     #[test]
     fn bootstrap_baseline_always_passes() {
-        let boot = write_tmp(
-            "boot.json",
-            &Json::obj().set("bootstrap", true).to_pretty(),
-        );
+        let boot = write_tmp("boot.json", &Json::obj().set("bootstrap", true).to_pretty());
         let cur = write_tmp("cur.json", &doc(12.0, 2.0));
-        assert!(run(&boot, &cur, None, None, None, None).is_ok());
+        assert!(run(&boot, &cur, None, None, None, None, None).is_ok());
         // Bootstrap still requires well-formed current summaries.
         let junk = write_tmp("junk2.json", "{}");
-        assert!(run(&boot, &junk, None, None, None, None).is_err());
+        assert!(run(&boot, &junk, None, None, None, None, None).is_err());
         let scale = write_tmp("boot_scale.json", &scale_doc(12.5));
-        assert!(run(&boot, &cur, Some(&scale), None, None, None).is_ok());
-        assert!(run(&boot, &cur, Some(&junk), None, None, None).is_err());
-        let comp = write_tmp("boot_comp.json", &compress_doc(3.0, 500.0));
-        assert!(run(&boot, &cur, Some(&scale), Some(&comp), None, None).is_ok());
-        assert!(run(&boot, &cur, Some(&scale), Some(&junk), None, None).is_err());
-        let pers = write_tmp("boot_pers.json", &persist_doc(100.0, 50_000.0));
-        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers), None).is_ok());
-        assert!(run(&boot, &cur, Some(&scale), Some(&comp), Some(&junk), None).is_err());
-        let fleet = write_tmp("boot_fleet.json", &fleet_doc(1.9, 0.01));
-        assert!(
-            run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&fleet)).is_ok()
-        );
-        assert!(
-            run(&boot, &cur, Some(&scale), Some(&comp), Some(&pers), Some(&junk)).is_err()
-        );
+        assert!(run(&boot, &cur, Some(&scale), None, None, None, None).is_ok());
+        assert!(run(&boot, &cur, Some(&junk), None, None, None, None).is_err());
+        let load_a = write_tmp("boot_load.json", &load_doc(2.0, 0.5, 9.0));
+        assert!(run(&boot, &cur, None, None, None, None, Some(&load_a)).is_ok());
+        assert!(run(&boot, &cur, None, None, None, None, Some(&junk)).is_err());
     }
 
     #[test]
     fn pin_block_only_tightens_and_never_pins_wall_clock() {
         let at = |j: &Json, p: &[&str]| j.at(p).and_then(Json::as_f64);
-        let baseline =
-            Json::parse(&doc_everything(1.5, 0.5)).expect("baseline doc");
+        let baseline = Json::parse(&doc_everything()).expect("baseline doc");
         // A run that passed within tolerance (worse p99, lower speedup)
         // must not loosen anything; genuine improvements do tighten.
+        let mut load_measured = BTreeMap::new();
+        load_measured.insert("gdpr_storm_rps_at_slo".to_string(), 2.0); // better → up
+        load_measured.insert("heavy_tail_rps_at_slo".to_string(), 0.5); // equal → stays
+        load_measured.insert("p999_over_p50".to_string(), 9.0); // better → down
+        load_measured.insert("diurnal_burst_rps_at_slo".to_string(), 1.0); // new key
         let cur = Current {
             coalesced: 55.0,          // better than 40 → ratchets up
             p99: 4.8,                 // worse than 4.0 (within 20%) → stays 4.0
@@ -657,6 +1044,7 @@ mod tests {
             compress: Some((2.8, 310.0)), // ratio better; mbps is wall-clock
             persist: Some((500.0, 1_000_000.0)), // both wall-clock → floors stay
             fleet: Some((1.9, 0.01)), // core-count dependent → floors stay
+            load: Some(load_measured),
         };
         let pin = cur.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
@@ -672,6 +1060,21 @@ mod tests {
         // them.
         assert_eq!(at(&pin, &["fleet", "scaling_2w"]), Some(1.5));
         assert_eq!(at(&pin, &["fleet", "merge_overhead"]), Some(0.5));
+        // Load floors are deterministic: improvements ratchet up, the
+        // tail ceiling ratchets down, new scenarios pin as measured.
+        assert_eq!(at(&pin, &["load", "gdpr_storm_rps_at_slo"]), Some(2.0));
+        assert_eq!(at(&pin, &["load", "heavy_tail_rps_at_slo"]), Some(0.5));
+        assert_eq!(at(&pin, &["load", "p999_over_p50"]), Some(9.0));
+        assert_eq!(at(&pin, &["load", "diurnal_burst_rps_at_slo"]), Some(1.0));
+        // A worse load run cannot loosen the committed floors/ceiling.
+        let mut worse = BTreeMap::new();
+        worse.insert("gdpr_storm_rps_at_slo".to_string(), 0.0);
+        worse.insert("p999_over_p50".to_string(), 100.0);
+        let pin = Current { load: Some(worse), ..cur.clone() }.pin_block(&baseline);
+        assert_eq!(at(&pin, &["load", "gdpr_storm_rps_at_slo"]), Some(0.5));
+        assert_eq!(at(&pin, &["load", "p999_over_p50"]), Some(64.0));
+        // Committed keys the run didn't measure are kept (can't un-pin).
+        assert_eq!(at(&pin, &["load", "heavy_tail_rps_at_slo"]), Some(0.5));
         // Improvements in the latency/speedup direction do ratchet.
         let better = Current {
             coalesced: 40.0,
@@ -680,6 +1083,7 @@ mod tests {
             compress: Some((1.5, 310.0)), // worse ratio → keeps the 2.0 floor
             persist: None,
             fleet: None,
+            load: None,
         };
         let pin = better.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(3.0));
@@ -688,10 +1092,15 @@ mod tests {
         // Sections not measured stay absent so they can't un-pin floors.
         assert_eq!(pin.get("persist"), None);
         assert_eq!(pin.get("fleet"), None);
+        assert_eq!(pin.get("load"), None);
         // No committed floors (bootstrap-style baseline): counters pin
         // as measured, wall-clock floors get 10x headroom, the fleet
         // scaling floor 1.25x headroom, the merge ceiling 10x headroom.
         let boot = Json::obj().set("bootstrap", true);
+        let mut load_measured = BTreeMap::new();
+        load_measured.insert("gdpr_storm_rps_at_slo".to_string(), 2.0);
+        load_measured.insert("p999_over_p50".to_string(), 9.0);
+        let cur = Current { load: Some(load_measured), ..cur };
         let pin = cur.pin_block(&boot);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
         assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(4.8));
@@ -701,6 +1110,9 @@ mod tests {
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(100_000.0));
         assert_eq!(at(&pin, &["fleet", "scaling_2w"]), Some(1.9 / 1.25));
         assert_eq!(at(&pin, &["fleet", "merge_overhead"]), Some(0.01 * 10.0));
+        // Load keys pin as measured when nothing is committed.
+        assert_eq!(at(&pin, &["load", "gdpr_storm_rps_at_slo"]), Some(2.0));
+        assert_eq!(at(&pin, &["load", "p999_over_p50"]), Some(9.0));
         let sparse = Current {
             coalesced: 1.0,
             p99: 1.0,
@@ -708,10 +1120,12 @@ mod tests {
             compress: None,
             persist: None,
             fleet: None,
+            load: None,
         };
         assert_eq!(sparse.pin_block(&boot).get("scale"), None);
         assert_eq!(sparse.pin_block(&boot).get("compress"), None);
         assert_eq!(sparse.pin_block(&boot).get("persist"), None);
         assert_eq!(sparse.pin_block(&boot).get("fleet"), None);
+        assert_eq!(sparse.pin_block(&boot).get("load"), None);
     }
 }

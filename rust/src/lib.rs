@@ -27,6 +27,7 @@ pub mod data;
 pub mod energy;
 pub mod experiments;
 pub mod fleet;
+pub mod load;
 pub mod memory;
 pub mod metrics;
 pub mod partition;

@@ -1,0 +1,324 @@
+//! Log-linear latency histogram — full-distribution latency recording
+//! for the open-loop load harness.
+//!
+//! The service's own `queue_delay_summary` keeps every receipt and sorts
+//! on demand; fine for a few thousand receipts, wrong for an open-loop
+//! harness that may record millions of latencies across shards and wants
+//! to merge them without concatenating vectors. This histogram is the
+//! standard log-linear design (HdrHistogram's layout, cut down to what
+//! the harness needs): each power-of-two octave is split into
+//! `2^SUB_BITS` equal-width sub-buckets, so the relative width of any
+//! bucket is at most `2^-SUB_BITS` = 12.5% and every quantile estimate
+//! is within that of the true value. Values below `2^(SUB_BITS+1)` get
+//! exact unit buckets.
+//!
+//! Two properties the tests pin down (and `tests/load_scenarios.rs`
+//! relies on):
+//!
+//! * **Oracle agreement** — `quantile(q)` equals the upper bound of the
+//!   bucket holding the sorted oracle's rank-`ceil(q*n)` element, so the
+//!   estimate is never below the true quantile and at most one bucket
+//!   width (≤ 12.5% + 1) above it.
+//! * **Merge = interleave** — merging per-shard histograms is
+//!   bucket-wise addition, so the merged histogram is *identical* (not
+//!   just approximately equal) to recording the interleaved stream into
+//!   one histogram. This is what makes per-shard recording in the fleet
+//!   harness lossless.
+
+use crate::util::Json;
+
+/// Sub-bucket resolution: each octave is split into `2^SUB_BITS` equal
+/// sub-buckets, bounding relative bucket width at `2^-SUB_BITS` (12.5%).
+const SUB_BITS: u32 = 3;
+const SUB: u64 = 1 << SUB_BITS; // sub-buckets per octave
+
+/// Mergeable log-bucketed histogram of `u64` latencies (ticks).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct LatencyHistogram {
+    /// Bucket counts, indexed by [`bucket_of`]; grown on demand.
+    counts: Vec<u64>,
+    count: u64,
+    sum: u128,
+    max: u64,
+}
+
+/// Bucket index for a value. Values `< 2*SUB` are their own bucket
+/// (exact); above that, octave `o = floor(log2 v)` contributes `SUB`
+/// buckets of width `2^(o-SUB_BITS)` each.
+pub fn bucket_of(v: u64) -> usize {
+    if v < 2 * SUB {
+        return v as usize;
+    }
+    let o = 63 - v.leading_zeros() as u64; // o >= SUB_BITS + 1
+    let w = (v >> (o - SUB_BITS as u64)) - SUB; // 0..SUB within the octave
+    ((o - SUB_BITS as u64) * SUB + SUB + w) as usize
+}
+
+/// Inclusive `[lo, hi]` value range of bucket `i` — the inverse of
+/// [`bucket_of`]: every `v` with `bucket_of(v) == i` lies in the range,
+/// and both endpoints map back to `i`.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    if i < (2 * SUB) as usize {
+        return (i as u64, i as u64);
+    }
+    let k = (i as u64) - SUB;
+    let o = k / SUB + SUB_BITS as u64;
+    let w = k % SUB;
+    let lo = (SUB + w) << (o - SUB_BITS as u64);
+    let hi = lo + (1 << (o - SUB_BITS as u64)) - 1;
+    (lo, hi)
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: u64) {
+        let b = bucket_of(v);
+        if self.counts.len() <= b {
+            self.counts.resize(b + 1, 0);
+        }
+        self.counts[b] += 1;
+        self.count += 1;
+        self.sum += v as u128;
+        self.max = self.max.max(v);
+    }
+
+    /// Bucket-wise addition — the merged histogram equals recording both
+    /// streams (in any interleaving) into one histogram.
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        if self.counts.len() < other.counts.len() {
+            self.counts.resize(other.counts.len(), 0);
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            self.counts[i] += c;
+        }
+        self.count += other.count;
+        self.sum += other.sum;
+        self.max = self.max.max(other.max);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn max(&self) -> u64 {
+        self.max
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    /// Upper bound of the bucket holding the rank-`ceil(q*n)` element
+    /// (nearest-rank definition, ranks clamped to `[1, n]`). Never
+    /// underestimates the true quantile; overestimates by at most one
+    /// bucket width (12.5% relative, +1 absolute).
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_bounds(i).1.min(self.max);
+            }
+        }
+        self.max
+    }
+
+    /// Deterministic JSON: summary quantiles plus the non-empty buckets
+    /// as `[lower_bound, count]` rows (full distribution, mergeable by
+    /// re-recording).
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, c)| **c > 0)
+            .map(|(i, c)| Json::Arr(vec![Json::from(bucket_bounds(i).0), Json::from(*c)]))
+            .collect();
+        Json::obj()
+            .set("count", self.count)
+            .set("max", self.max)
+            .set("mean", self.mean())
+            .set("p50", self.quantile(0.50))
+            .set("p90", self.quantile(0.90))
+            .set("p99", self.quantile(0.99))
+            .set("p999", self.quantile(0.999))
+            .set("buckets", Json::Arr(buckets))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prng::Rng;
+    use crate::testkit::forall;
+
+    /// Nearest-rank oracle on a sorted copy of the raw samples.
+    fn oracle_quantile(sorted: &[u64], q: f64) -> u64 {
+        let n = sorted.len() as u64;
+        let rank = ((q * n as f64).ceil() as u64).clamp(1, n);
+        sorted[(rank - 1) as usize]
+    }
+
+    #[test]
+    fn bucket_of_and_bounds_are_inverse_on_edges() {
+        // Exact unit buckets below 2*SUB, then octave sub-buckets.
+        for v in 0..16u64 {
+            assert_eq!(bucket_of(v), v as usize, "unit bucket for {v}");
+            assert_eq!(bucket_bounds(v as usize), (v, v));
+        }
+        assert_eq!(bucket_of(16), 16);
+        assert_eq!(bucket_bounds(16), (16, 17));
+        assert_eq!(bucket_of(17), 16);
+        assert_eq!(bucket_of(18), 17);
+        // Every bucket's bounds map back to the bucket, and buckets tile
+        // the value line with no gaps.
+        let mut expect_lo = 0u64;
+        for i in 0..200usize {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(lo, expect_lo, "bucket {i} starts where {} ended", i.wrapping_sub(1));
+            assert!(hi >= lo);
+            assert_eq!(bucket_of(lo), i, "lo of bucket {i}");
+            assert_eq!(bucket_of(hi), i, "hi of bucket {i}");
+            expect_lo = hi + 1;
+        }
+        // Relative width bound: hi <= lo * (1 + 2^-SUB_BITS) for lo >= SUB.
+        for i in (2 * SUB) as usize..300 {
+            let (lo, hi) = bucket_bounds(i);
+            assert!(
+                (hi - lo + 1) * SUB <= lo,
+                "bucket {i} [{lo},{hi}] wider than lo/SUB"
+            );
+        }
+        // Huge values don't overflow the index math: u64::MAX lands in
+        // the last sub-bucket of the top octave, whose hi is u64::MAX.
+        let b = bucket_of(u64::MAX);
+        let (lo, hi) = bucket_bounds(b);
+        assert_eq!(hi, u64::MAX);
+        assert_eq!(bucket_of(lo), b);
+    }
+
+    /// Random sample per distribution shape; property checks below.
+    fn rand_samples(rng: &mut Rng, size: f64) -> Vec<u64> {
+        let n = 1 + (400.0 * size) as usize;
+        let shape = rng.range(0, 4);
+        (0..n)
+            .map(|_| match shape {
+                0 => rng.below(10),                              // tiny exact values
+                1 => rng.below(100_000),                         // uniform wide
+                2 => rng.log_normal(3.0, 2.0).round() as u64,    // heavy tail
+                _ => 1u64 << rng.range(0, 40),                   // octave edges
+            })
+            .collect()
+    }
+
+    #[test]
+    fn prop_quantiles_match_sorted_oracle_within_bucket_error() {
+        forall(
+            0x10ad1,
+            120,
+            rand_samples,
+            |samples| {
+                let mut h = LatencyHistogram::new();
+                for &v in samples {
+                    h.record(v);
+                }
+                let mut sorted = samples.clone();
+                sorted.sort_unstable();
+                if h.count() != samples.len() as u64 {
+                    return Err("count mismatch".into());
+                }
+                if h.max() != *sorted.last().unwrap() {
+                    return Err("max mismatch".into());
+                }
+                for &q in &[0.0, 0.01, 0.25, 0.5, 0.9, 0.99, 0.999, 1.0] {
+                    let est = h.quantile(q);
+                    let truth = oracle_quantile(&sorted, q);
+                    // Exact relationship: the estimate is the upper bound
+                    // of the oracle value's bucket (clamped to max).
+                    let expect = bucket_bounds(bucket_of(truth)).1.min(h.max());
+                    if est != expect {
+                        return Err(format!(
+                            "q={q}: est {est} != bucket-hi {expect} (oracle {truth})"
+                        ));
+                    }
+                    // Derived error bound: never below the truth, at most
+                    // one bucket width (12.5% + 1) above it.
+                    if est < truth {
+                        return Err(format!("q={q}: est {est} below oracle {truth}"));
+                    }
+                    if est as f64 > truth as f64 * (1.0 + 1.0 / SUB as f64) + 1.0 {
+                        return Err(format!(
+                            "q={q}: est {est} beyond bucket error bound of oracle {truth}"
+                        ));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_sharded_merge_equals_interleaved_recording() {
+        forall(
+            0x10ad2,
+            120,
+            |rng, size| {
+                let samples = rand_samples(rng, size);
+                let shards = 1 + rng.range(0, 4);
+                let assign: Vec<usize> =
+                    samples.iter().map(|_| rng.range(0, shards)).collect();
+                (samples, shards, assign)
+            },
+            |(samples, shards, assign)| {
+                // One histogram over the interleaved stream…
+                let mut whole = LatencyHistogram::new();
+                for &v in samples {
+                    whole.record(v);
+                }
+                // …vs per-shard histograms merged in shard order.
+                let mut per: Vec<LatencyHistogram> =
+                    (0..*shards).map(|_| LatencyHistogram::new()).collect();
+                for (&v, &s) in samples.iter().zip(assign) {
+                    per[s].record(v);
+                }
+                let mut merged = LatencyHistogram::new();
+                for h in &per {
+                    merged.merge(h);
+                }
+                // counts vectors may differ in trailing zeros; the JSON
+                // form (non-empty buckets + summary) must be identical.
+                if merged.to_json().to_string() != whole.to_json().to_string() {
+                    return Err(format!(
+                        "merged != interleaved:\n  merged {}\n  whole  {}",
+                        merged.to_json(),
+                        whole.to_json()
+                    ));
+                }
+                if merged.count() != whole.count() || merged.max() != whole.max() {
+                    return Err("merged count/max mismatch".into());
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn empty_histogram_is_zeroed() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.quantile(0.99), 0);
+        assert_eq!(h.max(), 0);
+        assert_eq!(h.mean(), 0.0);
+    }
+}

@@ -1,0 +1,697 @@
+//! Open-loop load harness: drive the unlearning service at a target
+//! request rate that does NOT slow down when the service falls behind.
+//!
+//! Every bench in this repo before this module was closed-loop — a
+//! deterministic trace submitted round by round, so the offered load
+//! implicitly waited for the service. That can never observe the thing
+//! CAUSE's throughput claims are about: what happens when deletion
+//! requests arrive *faster* than the energy envelope lets the device
+//! retrain. This harness separates the arrival process from service
+//! progress (chroma's load-crate shape: scenario trait objects, seeded
+//! randomness, skewed selectors):
+//!
+//! * a [`Scenario`] describes the workload — population shape, battery
+//!   and harvest schedule, per-tick arrival intensity, and how one
+//!   deletion request is drawn (skewed user/key selection) from the
+//!   remaining data;
+//! * [`run_open_loop`] replays it at an offered rate: each tick the
+//!   arrival schedule decides how many requests arrive (fractional
+//!   rates accumulate), they are submitted whether or not the service
+//!   kept up, the clock advances, harvest lands, and one batched drain
+//!   runs. A bounded tail then lets the service finish queued and
+//!   battery-parked work;
+//! * latencies land in a log-bucketed [`LatencyHistogram`] (per shard
+//!   in fleet mode, merged losslessly) rather than a p50/p99 pair;
+//! * [`sweep`] walks offered rates to find the max rate at which the
+//!   scenario still meets its SLO — the `rps_at_slo` number that
+//!   `BENCH_load.json` reports and `bench_gate` gates.
+//!
+//! Everything is deterministic: seeded [`Rng`], logical ticks (no wall
+//! clock), and an FNV-1a digest of the submitted request trace that
+//! tests assert byte-stable across runs.
+
+pub mod hist;
+pub mod scenarios;
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::ExperimentConfig;
+use crate::coordinator::system::SystemVariant;
+use crate::data::dataset::{BlockId, DataBlock, EdgePopulation, UserId};
+use crate::data::trace::UnlearnRequest;
+use crate::fleet::FleetService;
+use crate::prng::Rng;
+use crate::sim::Battery;
+use crate::unlearning::UnlearningService;
+use crate::util::Json;
+
+pub use hist::LatencyHistogram;
+pub use scenarios::corpus;
+
+// ---------------------------------------------------------------------
+// Request factory: sample-conserving deletion-request generation
+// ---------------------------------------------------------------------
+
+/// Draws deletion requests from a population while conserving samples:
+/// a block can never have more samples unlearned than it holds, matching
+/// the clamping in `RequestTrace::generate`. Scenarios use the query
+/// helpers for skewed selection (a user's live blocks, the globally
+/// oldest live block) and [`RequestFactory::take`] to consume.
+pub struct RequestFactory<'a> {
+    pop: &'a EdgePopulation,
+    remaining: BTreeMap<BlockId, u64>,
+    ingested: u32,
+}
+
+impl<'a> RequestFactory<'a> {
+    pub fn new(pop: &'a EdgePopulation) -> Self {
+        RequestFactory { pop, remaining: BTreeMap::new(), ingested: 0 }
+    }
+
+    /// Make the next training round's blocks available for deletion
+    /// requests. Returns `false` once every round is ingested.
+    pub fn ingest_round(&mut self) -> bool {
+        if self.ingested >= self.pop.rounds() {
+            return false;
+        }
+        self.ingested += 1;
+        for b in self.pop.blocks_at(self.ingested) {
+            self.remaining.insert(b.id, b.samples);
+        }
+        true
+    }
+
+    pub fn ingested_rounds(&self) -> u32 {
+        self.ingested
+    }
+
+    pub fn population(&self) -> &EdgePopulation {
+        self.pop
+    }
+
+    /// Samples still deletable in a block (0 if unknown or depleted).
+    pub fn remaining_of(&self, id: BlockId) -> u64 {
+        self.remaining.get(&id).copied().unwrap_or(0)
+    }
+
+    /// A user's ingested blocks that still hold deletable samples.
+    pub fn live_user_blocks(&self, user: UserId) -> Vec<(BlockId, u64)> {
+        self.pop
+            .user_blocks(user, self.ingested)
+            .into_iter()
+            .filter_map(|b| {
+                let left = self.remaining_of(b.id);
+                (left > 0).then_some((b.id, left))
+            })
+            .collect()
+    }
+
+    /// Total deletable samples a user still owns.
+    pub fn user_remaining(&self, user: UserId) -> u64 {
+        self.live_user_blocks(user).iter().map(|(_, n)| n).sum()
+    }
+
+    /// The oldest (earliest-round, then first-listed) block that still
+    /// holds deletable samples — the adversarial replay-maximizing
+    /// target, since deleting from it invalidates the longest suffix.
+    pub fn oldest_live_block(&self) -> Option<&DataBlock> {
+        (1..=self.ingested)
+            .flat_map(|r| self.pop.blocks_at(r))
+            .find(|b| self.remaining_of(b.id) > 0)
+    }
+
+    /// Consume `frac` of a block's *remaining* samples (at least 1,
+    /// clamped to what's left). `None` if the block is depleted.
+    pub fn take(&mut self, id: BlockId, frac: f64) -> Option<(BlockId, u64)> {
+        let left = self.remaining.get_mut(&id).filter(|l| **l > 0)?;
+        let n = ((*left as f64 * frac).round() as u64).clamp(1, *left);
+        *left -= n;
+        Some((id, n))
+    }
+}
+
+// ---------------------------------------------------------------------
+// Arrival schedule: open-loop, fractional, intensity-modulated
+// ---------------------------------------------------------------------
+
+/// Fractional-rate arrival accumulator. `due(rate, intensity)` returns
+/// how many requests arrive this tick; sub-unit rates accumulate so the
+/// long-run arrival count equals `sum(rate * intensity)` exactly (±1),
+/// independent of how fast the service drains — that's what makes the
+/// harness open-loop.
+#[derive(Clone, Debug, Default)]
+pub struct ArrivalSchedule {
+    carry: f64,
+}
+
+impl ArrivalSchedule {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn due(&mut self, offered_per_tick: f64, intensity: f64) -> u64 {
+        self.carry += (offered_per_tick * intensity).max(0.0);
+        let n = self.carry.floor();
+        self.carry -= n;
+        n as u64
+    }
+}
+
+// ---------------------------------------------------------------------
+// Scenario trait
+// ---------------------------------------------------------------------
+
+/// One workload in the corpus. Implementations must be deterministic
+/// functions of the tick and the passed-in [`Rng`] — no interior state
+/// that survives across runs — so the same seed replays byte-identically
+/// (asserted for every corpus member in `tests/load_scenarios.rs`).
+pub trait Scenario {
+    /// Stable identifier — also the `load.<name>_rps_at_slo` gate key.
+    fn name(&self) -> &'static str;
+
+    fn description(&self) -> &'static str;
+
+    /// Experiment shape (population size, shards, batching policy,
+    /// model). `fleet_workers > 1` makes the harness drive a
+    /// [`FleetService`] with per-shard latency histograms.
+    fn config(&self) -> ExperimentConfig;
+
+    /// Battery attached to the service (per worker in fleet mode).
+    /// Scenarios carry one so the energy envelope — not CPU — is the
+    /// saturating resource, as on the paper's devices.
+    fn battery(&self) -> Option<Battery>;
+
+    /// Harvest seconds landed after each tick (contact windows and
+    /// day/night cycles express themselves here).
+    fn harvest_secs(&self, tick: u64) -> f64;
+
+    /// Arrival-rate multiplier at a tick (diurnal shapes, bursts).
+    fn intensity(&self, _tick: u64) -> f64 {
+        1.0
+    }
+
+    /// Queueing-delay SLO in ticks: a run meets SLO iff every submitted
+    /// request is served, nothing stays parked, and p99 queueing delay
+    /// is within this bound.
+    fn slo_ticks(&self) -> u64;
+
+    /// Draw one deletion request. `None` means the scenario ran out of
+    /// deletable data (reported, and the run keeps going).
+    fn make_request(
+        &self,
+        factory: &mut RequestFactory,
+        rng: &mut Rng,
+    ) -> Option<UnlearnRequest>;
+
+    /// Per-tick hook into the service (fleet churn uses it to resize
+    /// the active shard set).
+    fn on_tick(&self, _tick: u64, _svc: &mut ServiceUnderTest) {}
+
+    /// Scenario knobs, echoed into `BENCH_load.json` for readers.
+    fn knobs(&self) -> Json {
+        Json::obj()
+    }
+
+    /// Population the scenario runs against; the default mirrors
+    /// `experiments::common::population`. Override to skew block sizes.
+    fn population(&self, cfg: &ExperimentConfig) -> EdgePopulation {
+        crate::experiments::common::population(cfg)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Service-under-test: one façade over single-node and fleet services
+// ---------------------------------------------------------------------
+
+/// The harness drives either service through one surface so scenarios
+/// don't care about the deployment shape. Fleet accessors are `Result`
+/// (they cross worker channels); the single-node arm wraps infallibly.
+pub enum ServiceUnderTest {
+    Single(Box<UnlearningService>),
+    Fleet(FleetService),
+}
+
+impl ServiceUnderTest {
+    /// Build from a scenario's config: `fleet_workers > 1` routes
+    /// through the sharded fleet, otherwise the single-node service.
+    pub fn build(cfg: &ExperimentConfig, battery: Option<Battery>) -> Result<Self> {
+        if cfg.fleet_workers > 1 {
+            let mut fleet = SystemVariant::Cause.build_fleet(cfg)?;
+            if let Some(b) = battery {
+                fleet = fleet.with_battery(b);
+            }
+            Ok(ServiceUnderTest::Fleet(fleet))
+        } else {
+            let mut svc = SystemVariant::Cause.build_service(cfg)?;
+            if let Some(b) = battery {
+                svc = svc.with_battery(b);
+            }
+            Ok(ServiceUnderTest::Single(Box::new(svc)))
+        }
+    }
+
+    pub fn submit(&mut self, req: UnlearnRequest) {
+        match self {
+            ServiceUnderTest::Single(s) => s.submit(req),
+            ServiceUnderTest::Fleet(f) => f.submit(req),
+        }
+    }
+
+    pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
+        match self {
+            ServiceUnderTest::Single(s) => s.ingest_round(pop),
+            ServiceUnderTest::Fleet(f) => f.ingest_round(pop),
+        }
+    }
+
+    pub fn advance(&mut self, ticks: u64) {
+        match self {
+            ServiceUnderTest::Single(s) => s.advance(ticks),
+            ServiceUnderTest::Fleet(f) => f.advance(ticks),
+        }
+    }
+
+    pub fn harvest(&mut self, secs: f64) {
+        match self {
+            ServiceUnderTest::Single(s) => s.harvest(secs),
+            ServiceUnderTest::Fleet(f) => f.harvest(secs),
+        }
+    }
+
+    pub fn drain_batched(&mut self) -> Result<usize> {
+        match self {
+            ServiceUnderTest::Single(s) => s.drain_batched(),
+            ServiceUnderTest::Fleet(f) => f.drain_batched(),
+        }
+    }
+
+    pub fn flush_batched(&mut self) -> Result<usize> {
+        match self {
+            ServiceUnderTest::Single(s) => s.flush_batched(),
+            ServiceUnderTest::Fleet(f) => f.flush_batched(),
+        }
+    }
+
+    pub fn pending(&self) -> Result<usize> {
+        match self {
+            ServiceUnderTest::Single(s) => Ok(s.pending()),
+            ServiceUnderTest::Fleet(f) => f.pending(),
+        }
+    }
+
+    pub fn carryover_requests(&self) -> Result<usize> {
+        match self {
+            ServiceUnderTest::Single(s) => Ok(s.carryover_requests()),
+            ServiceUnderTest::Fleet(f) => f.carryover_requests(),
+        }
+    }
+
+    pub fn carryover_lineages(&self) -> Result<usize> {
+        match self {
+            ServiceUnderTest::Single(s) => Ok(s.carryover_lineages()),
+            ServiceUnderTest::Fleet(f) => f.carryover_lineages(),
+        }
+    }
+
+    /// Resize the fleet's active shard set; no-op on the single service.
+    pub fn set_active_shards(&mut self, n: usize) {
+        if let ServiceUnderTest::Fleet(f) = self {
+            f.set_active_shards(n);
+        }
+    }
+
+    /// Per-shard latency histograms (one for the single service), plus
+    /// served-receipt count, SLO violations against `slo_ticks`, and
+    /// total retrain energy. Per-shard recording + lossless merge is the
+    /// property `hist` pins down.
+    pub fn latency_report(&mut self, slo_ticks: u64) -> Result<LatencyReportRaw> {
+        let per_shard: Vec<Vec<u64>> = match self {
+            ServiceUnderTest::Single(s) => {
+                vec![s.engine().metrics.latency.iter().map(|r| r.queued_ticks).collect()]
+            }
+            ServiceUnderTest::Fleet(f) => f
+                .shard_metrics()?
+                .iter()
+                .map(|m| m.latency.iter().map(|r| r.queued_ticks).collect())
+                .collect(),
+        };
+        let energy_joules = match self {
+            ServiceUnderTest::Single(s) => s.engine().metrics.energy_joules,
+            ServiceUnderTest::Fleet(f) => f.metrics()?.energy_joules,
+        };
+        let mut shard_hists = Vec::with_capacity(per_shard.len());
+        let mut served = 0u64;
+        let mut violations = 0u64;
+        for delays in &per_shard {
+            let mut h = LatencyHistogram::new();
+            for &d in delays {
+                h.record(d);
+                served += 1;
+                if d > slo_ticks {
+                    violations += 1;
+                }
+            }
+            shard_hists.push(h);
+        }
+        Ok(LatencyReportRaw { shard_hists, served, violations, energy_joules })
+    }
+}
+
+/// Raw latency data off the service: per-shard histograms + counters.
+pub struct LatencyReportRaw {
+    pub shard_hists: Vec<LatencyHistogram>,
+    pub served: u64,
+    pub violations: u64,
+    pub energy_joules: f64,
+}
+
+// ---------------------------------------------------------------------
+// Open-loop run
+// ---------------------------------------------------------------------
+
+/// Shape of one open-loop run (everything but the scenario).
+#[derive(Clone, Copy, Debug)]
+pub struct OpenLoopCfg {
+    /// Offered arrival rate, requests per tick (before intensity).
+    pub offered_per_tick: f64,
+    /// Ticks of open-loop arrivals.
+    pub ticks: u64,
+    /// Max extra ticks (with harvest) to let the service finish queued
+    /// and battery-parked work after arrivals stop. A scenario that
+    /// can't finish within the tail is saturated: `slo_ok = false`.
+    pub tail_ticks: u64,
+    /// Seed for the scenario's request-selection RNG.
+    pub seed: u64,
+}
+
+impl Default for OpenLoopCfg {
+    fn default() -> Self {
+        OpenLoopCfg { offered_per_tick: 1.0, ticks: 64, tail_ticks: 256, seed: 0x10ad }
+    }
+}
+
+/// Everything one open-loop run produced. `to_json` is deterministic
+/// (logical ticks only — no wall clock), which is what lets the
+/// determinism tests byte-compare reports and `bench_gate` ratchet
+/// `rps_at_slo` floors like any other deterministic counter.
+pub struct LoadReport {
+    pub scenario: String,
+    pub offered_per_tick: f64,
+    pub ticks: u64,
+    pub tail_used: u64,
+    pub submitted: u64,
+    pub served: u64,
+    pub unserved: u64,
+    pub exhausted: bool,
+    pub slo_ticks: u64,
+    pub violations: u64,
+    pub energy_joules: f64,
+    pub slo_ok: bool,
+    pub trace_digest: u64,
+    pub hist: LatencyHistogram,
+}
+
+impl LoadReport {
+    pub fn p50(&self) -> u64 {
+        self.hist.quantile(0.50)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.hist.quantile(0.99)
+    }
+
+    pub fn p999(&self) -> u64 {
+        self.hist.quantile(0.999)
+    }
+
+    /// Histogram-sanity tail ratio, +1-shifted so an all-zero-delay run
+    /// (p50 = 0) still yields a finite, comparable number.
+    pub fn p999_over_p50(&self) -> f64 {
+        (self.p999() + 1) as f64 / (self.p50() + 1) as f64
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("offered_per_tick", self.offered_per_tick)
+            .set("ticks", self.ticks)
+            .set("tail_used", self.tail_used)
+            .set("submitted", self.submitted)
+            .set("served", self.served)
+            .set("unserved", self.unserved)
+            .set("exhausted", self.exhausted)
+            .set("slo_ticks", self.slo_ticks)
+            .set("violations", self.violations)
+            .set("energy_joules", self.energy_joules)
+            .set("slo_ok", self.slo_ok)
+            .set("trace_digest", format!("{:016x}", self.trace_digest))
+            .set("p999_over_p50", self.p999_over_p50())
+            .set("hist", self.hist.to_json())
+    }
+}
+
+/// FNV-1a, folding a byte slice into a running digest.
+fn fnv_fold(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+fn fold_request(mut h: u64, req: &UnlearnRequest) -> u64 {
+    h = fnv_fold(h, &req.round.to_le_bytes());
+    h = fnv_fold(h, &req.user.0.to_le_bytes());
+    for (id, n) in &req.parts {
+        h = fnv_fold(h, &id.0.to_le_bytes());
+        h = fnv_fold(h, &n.to_le_bytes());
+    }
+    h
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Run one scenario open-loop at one offered rate.
+///
+/// Phases: (1) preload — every training round is ingested so the full
+/// lineage structure exists before load starts; (2) arrival — each tick
+/// the schedule emits `floor(rate * intensity + carry)` requests which
+/// are submitted regardless of service progress, then the clock ticks,
+/// harvest lands, the scenario's hook runs, and one batched drain
+/// executes whatever window closed; (3) tail — up to `tail_ticks` of
+/// harvest + flush to let queued and battery-parked work finish.
+pub fn run_open_loop(scenario: &dyn Scenario, run: &OpenLoopCfg) -> Result<LoadReport> {
+    let cfg = scenario.config();
+    let pop = scenario.population(&cfg);
+    let mut sut = ServiceUnderTest::build(&cfg, scenario.battery())?;
+    let mut factory = RequestFactory::new(&pop);
+
+    // Phase 1: preload all training rounds.
+    for _ in 0..pop.rounds() {
+        sut.ingest_round(&pop)?;
+        factory.ingest_round();
+    }
+
+    // Separate the request-selection stream per scenario so corpus
+    // members never share random decisions even under one seed.
+    let mut rng = Rng::new(fnv_fold(run.seed ^ FNV_OFFSET, scenario.name().as_bytes()));
+    let mut schedule = ArrivalSchedule::new();
+    let mut digest = FNV_OFFSET;
+    let mut submitted = 0u64;
+    let mut exhausted = false;
+
+    // Phase 2: open-loop arrivals.
+    for t in 0..run.ticks {
+        for _ in 0..schedule.due(run.offered_per_tick, scenario.intensity(t)) {
+            match scenario.make_request(&mut factory, &mut rng) {
+                Some(req) => {
+                    digest = fold_request(digest, &req);
+                    sut.submit(req);
+                    submitted += 1;
+                }
+                None => exhausted = true,
+            }
+        }
+        sut.advance(1);
+        let h = scenario.harvest_secs(t);
+        if h > 0.0 {
+            sut.harvest(h);
+        }
+        scenario.on_tick(t, &mut sut);
+        sut.drain_batched()?;
+    }
+
+    // Phase 3: bounded drain tail.
+    let mut tail_used = 0u64;
+    while tail_used < run.tail_ticks {
+        if sut.pending()? == 0
+            && sut.carryover_requests()? == 0
+            && sut.carryover_lineages()? == 0
+        {
+            break;
+        }
+        sut.advance(1);
+        let h = scenario.harvest_secs(run.ticks + tail_used);
+        if h > 0.0 {
+            sut.harvest(h);
+        }
+        sut.flush_batched()?;
+        tail_used += 1;
+    }
+
+    let slo_ticks = scenario.slo_ticks();
+    let raw = sut.latency_report(slo_ticks)?;
+    let mut hist = LatencyHistogram::new();
+    for h in &raw.shard_hists {
+        hist.merge(h);
+    }
+    let unserved = submitted.saturating_sub(raw.served);
+    let leftover_lineages = sut.carryover_lineages()?;
+    let slo_ok =
+        unserved == 0 && leftover_lineages == 0 && hist.quantile(0.99) <= slo_ticks;
+
+    Ok(LoadReport {
+        scenario: scenario.name().to_string(),
+        offered_per_tick: run.offered_per_tick,
+        ticks: run.ticks,
+        tail_used,
+        submitted,
+        served: raw.served,
+        unserved,
+        exhausted,
+        slo_ticks,
+        violations: raw.violations,
+        energy_joules: raw.energy_joules,
+        slo_ok,
+        trace_digest: digest,
+        hist,
+    })
+}
+
+/// Sweep offered rates (ascending) and report the highest rate at which
+/// the scenario still met its SLO, plus every per-rate report.
+pub fn sweep(
+    scenario: &dyn Scenario,
+    rates: &[f64],
+    base: &OpenLoopCfg,
+) -> Result<(f64, Vec<LoadReport>)> {
+    let mut rps_at_slo = 0.0f64;
+    let mut reports = Vec::with_capacity(rates.len());
+    for &rate in rates {
+        let report =
+            run_open_loop(scenario, &OpenLoopCfg { offered_per_tick: rate, ..*base })?;
+        if report.slo_ok {
+            rps_at_slo = rps_at_slo.max(rate);
+        }
+        reports.push(report);
+    }
+    Ok((rps_at_slo, reports))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::catalog::CIFAR10;
+    use crate::data::dataset::PopulationConfig;
+    use crate::testkit::forall;
+
+    #[test]
+    fn arrival_schedule_accumulates_fractional_rates() {
+        let mut s = ArrivalSchedule::new();
+        let half: Vec<u64> = (0..6).map(|_| s.due(0.5, 1.0)).collect();
+        assert_eq!(half, vec![0, 1, 0, 1, 0, 1]);
+        let mut s = ArrivalSchedule::new();
+        let mixed: Vec<u64> = (0..4).map(|_| s.due(2.5, 1.0)).collect();
+        assert_eq!(mixed, vec![2, 3, 2, 3]);
+        // Long-run conservation under varying intensity.
+        let mut s = ArrivalSchedule::new();
+        let mut total = 0u64;
+        let mut offered = 0.0;
+        for t in 0..1000u64 {
+            let intensity = 1.0 + 0.9 * ((t as f64) * 0.1).sin();
+            offered += 0.7 * intensity;
+            total += s.due(0.7, intensity);
+        }
+        assert!((total as f64 - offered).abs() <= 1.0, "{total} vs {offered}");
+    }
+
+    #[test]
+    fn prop_factory_conserves_samples() {
+        let pop = EdgePopulation::generate(PopulationConfig {
+            spec: CIFAR10.scaled(4_000),
+            users: 12,
+            rounds: 4,
+            size_sigma: 0.8,
+            label_alpha: 0.5,
+            arrival_prob: 0.8,
+            seed: 4242,
+        });
+        forall(
+            0x10ad3,
+            60,
+            |rng, size| {
+                let takes = 1 + (60.0 * size) as usize;
+                (0..takes).map(|_| (rng.below(1_000_000), rng.f64())).collect::<Vec<_>>()
+            },
+            |takes| {
+                let mut f = RequestFactory::new(&pop);
+                while f.ingest_round() {}
+                let all_blocks: Vec<BlockId> = (1..=pop.rounds())
+                    .flat_map(|r| pop.blocks_at(r).iter().map(|b| b.id))
+                    .collect();
+                let mut consumed: BTreeMap<BlockId, u64> = BTreeMap::new();
+                for &(pick, frac) in takes {
+                    let id = all_blocks[(pick % all_blocks.len() as u64) as usize];
+                    let before = f.remaining_of(id);
+                    match f.take(id, frac) {
+                        Some((tid, n)) => {
+                            if tid != id || n == 0 || n > before {
+                                return Err(format!(
+                                    "take({id:?}) returned {n} with {before} left"
+                                ));
+                            }
+                            *consumed.entry(id).or_insert(0) += n;
+                        }
+                        None if before != 0 => {
+                            return Err(format!("take refused live block {id:?}"));
+                        }
+                        None => {}
+                    }
+                }
+                for id in &all_blocks {
+                    let cap = pop.block(*id).unwrap().samples;
+                    let used = consumed.get(id).copied().unwrap_or(0);
+                    if used + f.remaining_of(*id) != cap {
+                        return Err(format!("block {id:?} leaked samples"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn factory_oldest_live_block_walks_rounds_in_order() {
+        let pop = EdgePopulation::generate(PopulationConfig {
+            spec: CIFAR10.scaled(2_000),
+            users: 6,
+            rounds: 3,
+            size_sigma: 0.5,
+            label_alpha: 0.5,
+            arrival_prob: 1.0,
+            seed: 7,
+        });
+        let mut f = RequestFactory::new(&pop);
+        while f.ingest_round() {}
+        // Deplete round 1 entirely; the oldest live block must move to
+        // round 2's first block.
+        for b in pop.blocks_at(1) {
+            assert!(f.take(b.id, 1.0).is_some());
+        }
+        let oldest = f.oldest_live_block().expect("rounds 2..3 still live");
+        assert_eq!(oldest.round, 2);
+        assert_eq!(oldest.id, pop.blocks_at(2)[0].id);
+    }
+}
