@@ -305,7 +305,10 @@ fn main() -> anyhow::Result<()> {
     // highest rate at which every request met the SLO with no battery
     // carryover, and writes BENCH_load.json —
     // `gate.<scenario>_rps_at_slo` floors are ratcheted in CI by
-    // bench_gate. Here: one light run of the diurnal-burst scenario.
+    // bench_gate (per bench mode: CAUSE_BENCH_FAST changes the swept
+    // grid, so the artifact is mode-stamped and only compared against
+    // same-mode floors). Here: one light run of the diurnal-burst
+    // scenario.
     let scenarios = cause::load::corpus();
     let sc = &scenarios[1]; // diurnal_burst
     let run = cause::load::OpenLoopCfg {

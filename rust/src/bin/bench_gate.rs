@@ -29,7 +29,12 @@
 //!   latency tail at the certified rate blew out relative to the
 //!   median). The load numbers are deterministic logical-tick counters,
 //!   so the floors are checked exactly and ratchet like
-//!   `retrains_coalesced`.
+//!   `retrains_coalesced` — but only within one bench mode:
+//!   `CAUSE_BENCH_FAST` changes bench_load's swept rate grid and tick
+//!   counts, so when the baseline's `load` section pins a `mode`
+//!   (`"fast"`/`"full"`), an artifact measured in the other mode fails
+//!   the gate with a re-pin instruction instead of comparing
+//!   incomparable numbers.
 //!
 //! **Every pinned baseline section must have a matching artifact.** If the
 //! baseline pins `scale`/`compress`/`persist`/`fleet`/`load` floors and
@@ -118,6 +123,16 @@ fn gate_map(doc: &Json, path: &str) -> Result<BTreeMap<String, f64>, String> {
         .collect()
 }
 
+/// The load artifact's gate payload. `mode` is bench_load's top-level
+/// `"mode"` field (`"fast"`/`"full"`): the swept rate grid and tick
+/// counts differ between modes, so the deterministic counters are only
+/// comparable to floors pinned in the same mode.
+#[derive(Clone)]
+struct LoadArtifact {
+    mode: Option<String>,
+    gate: BTreeMap<String, f64>, // <scenario>_rps_at_slo + p999_over_p50
+}
+
 /// Current gate values measured by this run's artifacts.
 #[derive(Clone)]
 struct Current {
@@ -127,7 +142,7 @@ struct Current {
     compress: Option<(f64, f64)>, // (ratio, decode_mbps)
     persist: Option<(f64, f64)>,  // (append_mbps, recovery_events_per_s)
     fleet: Option<(f64, f64)>,    // (scaling_2w, merge_overhead)
-    load: Option<BTreeMap<String, f64>>, // <scenario>_rps_at_slo + p999_over_p50
+    load: Option<LoadArtifact>,
 }
 
 impl Current {
@@ -141,7 +156,9 @@ impl Current {
     /// rate. The load section is deterministic in both directions:
     /// `*_rps_at_slo` floors take the max of committed and measured, the
     /// `p999_over_p50` ceiling the min, and committed keys the run did
-    /// not measure are kept so they cannot silently un-pin.
+    /// not measure are kept so they cannot silently un-pin. The printed
+    /// section also stamps the `mode` the numbers were measured in, so
+    /// future gate runs refuse cross-mode comparison.
     fn pin_block(&self, baseline: &Json) -> Json {
         let base = |path: &[&str]| baseline.at(path).and_then(Json::as_f64);
         let coalesced = self
@@ -199,7 +216,7 @@ impl Current {
                     }
                 }
             }
-            for (k, &x) in measured {
+            for (k, &x) in &measured.gate {
                 merged
                     .entry(k.clone())
                     .and_modify(|c| {
@@ -211,6 +228,16 @@ impl Current {
                     .or_insert(x);
             }
             let mut section = Json::obj();
+            // Stamp the mode the floors were measured in, so the next
+            // gate run refuses cross-mode comparison. pin_block only
+            // prints on a pass, where any pinned mode already matched.
+            if let Some(mode) = measured
+                .mode
+                .as_deref()
+                .or_else(|| baseline.at(&["load", "mode"]).and_then(Json::as_str))
+            {
+                section = section.set("mode", mode);
+            }
             for (k, x) in merged {
                 section = section.set(&k, x);
             }
@@ -273,7 +300,13 @@ fn run(
             None => None,
         },
         load: match load_path {
-            Some(p) => Some(gate_map(&load(p)?, p)?),
+            Some(p) => {
+                let doc = load(p)?;
+                Some(LoadArtifact {
+                    mode: doc.get("mode").and_then(Json::as_str).map(str::to_owned),
+                    gate: gate_map(&doc, p)?,
+                })
+            }
             None => None,
         },
     };
@@ -447,14 +480,48 @@ fn run(
     if let Some(cur_load) = &cur.load {
         match baseline.get("load") {
             Some(Json::Obj(committed)) => {
+                // Fast and full mode sweep different rate grids and tick
+                // counts, so cross-mode comparison is meaningless: fail
+                // loudly (never gate incomparable numbers, never skip
+                // silently) and don't bother with the per-key checks.
+                let pinned_mode = baseline.at(&["load", "mode"]).and_then(Json::as_str);
+                let mode_ok = match (pinned_mode, cur_load.mode.as_deref()) {
+                    (None, _) => true,
+                    (Some(pinned), Some(measured)) if pinned == measured => {
+                        println!("bench_gate: load mode `{measured}` matches baseline");
+                        true
+                    }
+                    (Some(pinned), Some(measured)) => {
+                        failures.push(format!(
+                            "load floors were pinned in `{pinned}` mode but the load \
+                             artifact was measured in `{measured}` mode — the swept \
+                             rate grid and tick counts differ across modes, so the \
+                             numbers are not comparable; re-run bench_load in \
+                             `{pinned}` mode (CI sets CAUSE_BENCH_FAST=1 → fast) or \
+                             re-pin load.* from a `{measured}`-mode merged baseline"
+                        ));
+                        false
+                    }
+                    (Some(pinned), None) => {
+                        failures.push(format!(
+                            "baseline pins load.mode = `{pinned}` but the load \
+                             artifact records no mode — re-run bench_load (its \
+                             summary carries a top-level \"mode\" field)"
+                        ));
+                        false
+                    }
+                };
                 for (key, v) in committed {
+                    if !mode_ok || key == "mode" {
+                        continue;
+                    }
                     let Some(pinned) = v.as_f64() else {
                         failures.push(format!(
                             "baseline load.{key} is not numeric — fix the baseline"
                         ));
                         continue;
                     };
-                    let Some(&measured) = cur_load.get(key) else {
+                    let Some(&measured) = cur_load.gate.get(key) else {
                         failures.push(format!(
                             "baseline pins load.{key} but the load artifact's gate \
                              has no such key — a scenario disappeared from the corpus"
@@ -516,9 +583,12 @@ fn run(
 /// files (excluding the baseline itself), classify each by its top-level
 /// `"bench"` field, and return artifact paths in [`KINDS`] order. Two
 /// files claiming the same kind is an error (stale artifacts must not
-/// race); files without a recognized `"bench"` field are skipped with a
-/// warning (figure/table outputs are not gate artifacts). A missing
-/// coordinator artifact is an error — the core gate can never be skipped.
+/// race); files without a recognized `"bench"` field — including files
+/// that fail to parse at all, like a truncated figure/table output — are
+/// skipped with a warning (they are not gate artifacts, and a broken
+/// *gate* artifact still fails loudly via the pinned-section check). A
+/// missing coordinator artifact is an error — the core gate can never be
+/// skipped.
 fn discover(baseline_path: &str) -> Result<[Option<String>; 6], String> {
     let base = Path::new(baseline_path);
     let dir = match base.parent() {
@@ -542,7 +612,19 @@ fn discover(baseline_path: &str) -> Result<[Option<String>; 6], String> {
     let mut slots: [Option<String>; 6] = Default::default();
     for name in names {
         let path = dir.join(&name).to_string_lossy().into_owned();
-        let doc = load(&path)?;
+        // An unreadable/unparsable sibling (e.g. a truncated figure or
+        // table output) cannot claim a bench kind, so it is skipped with
+        // a warning like any other non-gate artifact. If the broken file
+        // *was* a gate artifact, its baseline section fails loudly below
+        // via the pinned-section-without-artifact check — nothing is
+        // silently skipped.
+        let doc = match load(&path) {
+            Ok(doc) => doc,
+            Err(e) => {
+                println!("bench_gate: skipping {path} (unparsable — not a gate artifact): {e}");
+                continue;
+            }
+        };
         match doc.get("bench").and_then(Json::as_str) {
             Some(kind) => match KINDS.iter().position(|k| *k == kind) {
                 Some(i) => {
@@ -741,6 +823,14 @@ mod tests {
             .to_pretty()
     }
 
+    /// A load artifact stamped with the bench mode it was measured in.
+    fn load_doc_mode(mode: &str, gdpr: f64, heavy: f64, tail_ratio: f64) -> String {
+        Json::parse(&load_doc(gdpr, heavy, tail_ratio))
+            .unwrap()
+            .set("mode", mode)
+            .to_pretty()
+    }
+
     fn coordinator_doc(coalesced: f64, p99: f64) -> String {
         Json::parse(&doc(coalesced, p99))
             .unwrap()
@@ -919,6 +1009,57 @@ mod tests {
     }
 
     #[test]
+    fn load_gate_refuses_cross_mode_artifacts() {
+        let base = write_tmp(
+            "base_mode.json",
+            &doc_with("load", load_section().set("mode", "fast")),
+        );
+        let cur = write_tmp("cur_mode.json", &doc(40.0, 4.0));
+        // Same mode: gates normally — floors still fail on regressions.
+        let fast_ok =
+            write_tmp("load_fast_ok.json", &load_doc_mode("fast", 2.0, 0.5, 9.0));
+        assert!(run(&base, &cur, None, None, None, None, Some(&fast_ok)).is_ok());
+        let fast_bad =
+            write_tmp("load_fast_bad.json", &load_doc_mode("fast", 0.0, 2.0, 9.0));
+        assert!(run(&base, &cur, None, None, None, None, Some(&fast_bad)).is_err());
+        // Other mode: fails loudly even though every number beats its
+        // floor — fast and full sweep different rate grids.
+        let full =
+            write_tmp("load_full_mode.json", &load_doc_mode("full", 8.0, 8.0, 2.0));
+        let err = run(&base, &cur, None, None, None, None, Some(&full)).unwrap_err();
+        assert!(err.contains("`fast` mode"), "{err}");
+        // Artifact without a mode against a pinned mode: stale artifact,
+        // fail.
+        let unmoded = write_tmp("load_unmoded.json", &load_doc(8.0, 8.0, 2.0));
+        let err = run(&base, &cur, None, None, None, None, Some(&unmoded)).unwrap_err();
+        assert!(err.contains("records no mode"), "{err}");
+        // Baseline without a pinned mode gates any artifact (back-compat
+        // with pre-mode baselines).
+        let base_unmoded =
+            write_tmp("base_unmoded.json", &doc_with("load", load_section()));
+        assert!(run(&base_unmoded, &cur, None, None, None, None, Some(&full)).is_ok());
+    }
+
+    #[test]
+    fn discovery_skips_unparsable_siblings() {
+        // A truncated non-gate sibling (e.g. a half-written figure
+        // output) is skipped with a warning, not a hard error.
+        let base = write_in("disc6", "BENCH_baseline.json", &doc(40.0, 4.0));
+        write_in("disc6", "BENCH_coordinator.json", &coordinator_doc(41.0, 3.9));
+        write_in("disc6", "BENCH_fig_truncated.json", "{\"rows\": [");
+        assert!(run_discovered(&base).is_ok());
+
+        // But a broken *gate* artifact still fails loudly: the baseline
+        // pins load floors and no parsable artifact claims the load kind.
+        let base =
+            write_in("disc7", "BENCH_baseline.json", &doc_with("load", load_section()));
+        write_in("disc7", "BENCH_coordinator.json", &coordinator_doc(41.0, 3.9));
+        write_in("disc7", "BENCH_load.json", "{\"bench\": \"load\", ");
+        let err = run_discovered(&base).unwrap_err();
+        assert!(err.contains("`load`"), "{err}");
+    }
+
+    #[test]
     fn pinned_sections_without_artifacts_fail_loudly() {
         // The brittleness fix: a baseline that pins floors must receive
         // the matching artifact or the gate fails — no silent skips.
@@ -1044,7 +1185,10 @@ mod tests {
             compress: Some((2.8, 310.0)), // ratio better; mbps is wall-clock
             persist: Some((500.0, 1_000_000.0)), // both wall-clock → floors stay
             fleet: Some((1.9, 0.01)), // core-count dependent → floors stay
-            load: Some(load_measured),
+            load: Some(LoadArtifact {
+                mode: Some("fast".to_string()),
+                gate: load_measured,
+            }),
         };
         let pin = cur.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
@@ -1066,10 +1210,14 @@ mod tests {
         assert_eq!(at(&pin, &["load", "heavy_tail_rps_at_slo"]), Some(0.5));
         assert_eq!(at(&pin, &["load", "p999_over_p50"]), Some(9.0));
         assert_eq!(at(&pin, &["load", "diurnal_burst_rps_at_slo"]), Some(1.0));
+        // The measured mode is stamped so future runs refuse cross-mode
+        // comparison.
+        assert_eq!(pin.at(&["load", "mode"]).and_then(Json::as_str), Some("fast"));
         // A worse load run cannot loosen the committed floors/ceiling.
         let mut worse = BTreeMap::new();
         worse.insert("gdpr_storm_rps_at_slo".to_string(), 0.0);
         worse.insert("p999_over_p50".to_string(), 100.0);
+        let worse = LoadArtifact { mode: None, gate: worse };
         let pin = Current { load: Some(worse), ..cur.clone() }.pin_block(&baseline);
         assert_eq!(at(&pin, &["load", "gdpr_storm_rps_at_slo"]), Some(0.5));
         assert_eq!(at(&pin, &["load", "p999_over_p50"]), Some(64.0));
@@ -1100,6 +1248,8 @@ mod tests {
         let mut load_measured = BTreeMap::new();
         load_measured.insert("gdpr_storm_rps_at_slo".to_string(), 2.0);
         load_measured.insert("p999_over_p50".to_string(), 9.0);
+        let load_measured =
+            LoadArtifact { mode: Some("full".to_string()), gate: load_measured };
         let cur = Current { load: Some(load_measured), ..cur };
         let pin = cur.pin_block(&boot);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
@@ -1110,9 +1260,11 @@ mod tests {
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(100_000.0));
         assert_eq!(at(&pin, &["fleet", "scaling_2w"]), Some(1.9 / 1.25));
         assert_eq!(at(&pin, &["fleet", "merge_overhead"]), Some(0.01 * 10.0));
-        // Load keys pin as measured when nothing is committed.
+        // Load keys (and the measured mode) pin as measured when nothing
+        // is committed.
         assert_eq!(at(&pin, &["load", "gdpr_storm_rps_at_slo"]), Some(2.0));
         assert_eq!(at(&pin, &["load", "p999_over_p50"]), Some(9.0));
+        assert_eq!(pin.at(&["load", "mode"]).and_then(Json::as_str), Some("full"));
         let sparse = Current {
             coalesced: 1.0,
             p99: 1.0,

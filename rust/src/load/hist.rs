@@ -65,7 +65,10 @@ pub fn bucket_bounds(i: usize) -> (u64, u64) {
     let o = k / SUB + SUB_BITS as u64;
     let w = k % SUB;
     let lo = (SUB + w) << (o - SUB_BITS as u64);
-    let hi = lo + (1 << (o - SUB_BITS as u64)) - 1;
+    // Width-minus-one first: `lo + 2^(o-SUB_BITS)` overflows u64 for the
+    // top octave's last sub-bucket (lo = 15<<60), but `lo + (width - 1)`
+    // is at most u64::MAX.
+    let hi = lo + ((1u64 << (o - SUB_BITS as u64)) - 1);
     (lo, hi)
 }
 
