@@ -12,7 +12,12 @@
 //!    service from the recorded log measures recovery events/s. Both are
 //!    wall-clock and gated only against conservative floors
 //!    (`gate.append_mbps`, `gate.recovery_events_per_s`).
-//! 3. **Compaction** — snapshot+truncate on the full log: reports the
+//! 3. **Fsync modes** — the same frames through a real disk log with one
+//!    fsync barrier per append (`gate.append_mbps_fsync`, the worst-case
+//!    durable write floor), and the live workload under group commit:
+//!    `gate.group_commit_amortization` is events appended per barrier
+//!    issued — the factor the batched window amortizes durability by.
+//! 4. **Compaction** — snapshot+truncate on the full log: reports the
 //!    bytes the compacted generation (snapshot + empty tail) occupies vs
 //!    the raw log (`compaction.ratio`) and that a reopen after compaction
 //!    replays zero events.
@@ -27,7 +32,7 @@ use cause::data::catalog::CIFAR10;
 use cause::data::dataset::{EdgePopulation, PopulationConfig};
 use cause::data::trace::{RequestTrace, TraceConfig};
 use cause::persist::frame::{scan_frames, LOG_MAGIC};
-use cause::persist::{Durability, DurabilityMode, EventLog, MemFs};
+use cause::persist::{DiskFs, Durability, DurabilityMode, EventLog, FsyncPolicy, MemFs};
 use cause::sim::device::AI_CUBESAT;
 use cause::sim::Battery;
 use cause::util::bench::black_box;
@@ -167,7 +172,62 @@ fn main() {
         append_mbps, recovery_eps, events, reps
     );
 
-    // 3. Compaction: snapshot + truncate, then prove a reopen needs no
+    // 3a. Fsync append floor: the recorded frames through a real disk
+    // log with a barrier per append (`FsyncPolicy::Always`) — the
+    // worst-case durable write path. Bounded to a frame prefix so the
+    // section stays a few thousand barriers even on slow disks.
+    let fsync_frames = &frames[..frames.len().min(512)];
+    let dir = std::env::temp_dir().join(format!("cause_bench_fsync_{}", std::process::id()));
+    let mut fsync_bytes = 0u64;
+    let t0 = Instant::now();
+    {
+        std::fs::create_dir_all(&dir).expect("fsync bench dir");
+        let fs = DiskFs::new(&dir).expect("disk fs");
+        let opened = EventLog::open(Box::new(fs)).expect("fresh disk log");
+        let mut log = opened.log;
+        log.set_fsync(FsyncPolicy::Always);
+        for f in fsync_frames {
+            log.append_payload(f).expect("append+fsync");
+        }
+        fsync_bytes += log.log_bytes();
+        let (appended, fsyncs) = log.fsync_stats();
+        assert_eq!(appended, fsyncs, "Always = one barrier per append");
+        black_box(log.next_seq());
+    }
+    let append_mbps_fsync = fsync_bytes as f64 / 1e6 / t0.elapsed().as_secs_f64();
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // 3b. Group-commit amortization: the live workload again, now with
+    // one barrier per sealed commit scope (window drain / round ingest)
+    // instead of one per event. The ratio is the factor batching divides
+    // durability cost by — receipt-identical to the unsynced run.
+    let fs_gc = MemFs::new();
+    let mut gc = build(&cfg);
+    gc.attach_durability(
+        Durability::mem(DurabilityMode::Log, fs_gc.clone(), 0)
+            .with_fsync(FsyncPolicy::GroupCommit),
+    )
+    .expect("attach group-commit");
+    let gc_secs = run(&mut gc, &pop, &trace);
+    assert_eq!(gc.state_receipt(), off_receipt, "group commit must be observation-only");
+    assert!(gc.durability_error().is_none());
+    let (gc_appended, gc_fsyncs) = gc.journal_fsync_stats().expect("fsync stats");
+    assert_eq!(gc_appended, events, "same workload, same event count");
+    assert!(gc_fsyncs > 0, "commit scopes must seal");
+    let amortization = gc_appended as f64 / gc_fsyncs as f64;
+    drop(gc);
+    println!(
+        "fsync: always {:.2} MB/s ({} barriers) | group commit {} events / {} barriers \
+         = {:.1}x amortized ({:.3}s)",
+        append_mbps_fsync,
+        fsync_frames.len(),
+        gc_appended,
+        gc_fsyncs,
+        amortization,
+        gc_secs
+    );
+
+    // 4. Compaction: snapshot + truncate, then prove a reopen needs no
     // tail replay and the state still matches.
     let pre_bytes: u64 = fs_log.sizes().iter().map(|(_, s)| s).sum();
     let fs_c = fs_log.fork();
@@ -201,7 +261,8 @@ fn main() {
                 .set("log_bytes", log_bytes)
                 .set("off_secs", off_secs)
                 .set("log_secs", log_secs)
-                .set("spill_secs", spill_secs),
+                .set("spill_secs", spill_secs)
+                .set("group_commit_secs", gc_secs),
         )
         .set(
             "compaction",
@@ -214,6 +275,8 @@ fn main() {
             "gate",
             Json::obj()
                 .set("append_mbps", append_mbps)
+                .set("append_mbps_fsync", append_mbps_fsync)
+                .set("group_commit_amortization", amortization)
                 .set("recovery_events_per_s", recovery_eps),
         );
     let out_path = std::env::var("CAUSE_BENCH_PERSIST_JSON").unwrap_or_else(|_| {
@@ -228,5 +291,9 @@ fn main() {
     assert!(
         compaction_ratio > 1.0,
         "compaction must shrink a non-trivial log ({compaction_ratio:.2}x)"
+    );
+    assert!(
+        amortization >= 2.0,
+        "group commit must amortize barriers across the window ({amortization:.2}x)"
     );
 }

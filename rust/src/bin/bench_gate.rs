@@ -14,11 +14,14 @@
 //!   throughput against the compiled-in naive-scan oracle), or
 //! * `gate.ratio` / `gate.decode_mbps` (from `BENCH_compress.json`) fall
 //!   below the `compress.*` floors, or
-//! * `gate.append_mbps` / `gate.recovery_events_per_s` (from
-//!   `BENCH_persist.json`) fall below the `persist.*` floors — the
-//!   write-ahead log appends or crash recovery replays slower than the
-//!   committed floor. Floors are conservative invariant-derived values and
-//!   are checked directly, without an extra tolerance. Or
+//! * `gate.append_mbps` / `gate.append_mbps_fsync` /
+//!   `gate.group_commit_amortization` / `gate.recovery_events_per_s`
+//!   (from `BENCH_persist.json`) fall below the `persist.*` floors — the
+//!   write-ahead log appends (flush-only or with per-append fsync
+//!   barriers) or crash recovery replays slower than the committed
+//!   floor, or group commit stopped amortizing barriers across the
+//!   batched window. Floors are conservative invariant-derived values
+//!   and are checked directly, without an extra tolerance. Or
 //! * `gate.scaling_2w` (from `BENCH_fleet.json`) falls below the
 //!   `fleet.scaling_2w` floor, or `gate.merge_overhead` grows above the
 //!   `fleet.merge_overhead` ceiling, or
@@ -140,7 +143,9 @@ struct Current {
     p99: f64,
     speedup: Option<f64>,
     compress: Option<(f64, f64)>, // (ratio, decode_mbps)
-    persist: Option<(f64, f64)>,  // (append_mbps, recovery_events_per_s)
+    // (append_mbps, append_mbps_fsync, group_commit_amortization,
+    // recovery_events_per_s)
+    persist: Option<(f64, f64, f64, f64)>,
     fleet: Option<(f64, f64)>,    // (scaling_2w, merge_overhead)
     load: Option<LoadArtifact>,
 }
@@ -183,14 +188,22 @@ impl Current {
                 Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
             );
         }
-        if let Some((append, recovery)) = self.persist {
+        if let Some((append, fsync, amort, recovery)) = self.persist {
             let append = base(&["persist", "append_mbps"]).unwrap_or(append / 10.0);
+            let fsync = base(&["persist", "append_mbps_fsync"]).unwrap_or(fsync / 10.0);
+            // The amortization ratio is a deterministic counter ratio,
+            // but the fast/full bench modes run different workloads, so
+            // it is pinned with headroom and never auto-raised.
+            let amort =
+                base(&["persist", "group_commit_amortization"]).unwrap_or(amort / 2.0);
             let recovery =
                 base(&["persist", "recovery_events_per_s"]).unwrap_or(recovery / 10.0);
             pin = pin.set(
                 "persist",
                 Json::obj()
                     .set("append_mbps", append)
+                    .set("append_mbps_fsync", fsync)
+                    .set("group_commit_amortization", amort)
                     .set("recovery_events_per_s", recovery),
             );
         }
@@ -284,6 +297,8 @@ fn run(
                 let doc = load(p)?;
                 Some((
                     gate_value(&doc, p, "append_mbps")?,
+                    gate_value(&doc, p, "append_mbps_fsync")?,
+                    gate_value(&doc, p, "group_commit_amortization")?,
                     gate_value(&doc, p, "recovery_events_per_s")?,
                 ))
             }
@@ -415,7 +430,7 @@ fn run(
         }
     }
 
-    if let Some((cur_append, cur_recovery)) = cur.persist {
+    if let Some((cur_append, cur_fsync, cur_amort, cur_recovery)) = cur.persist {
         let base_append = baseline.at(&["persist", "append_mbps"]).and_then(Json::as_f64);
         let base_recovery = baseline
             .at(&["persist", "recovery_events_per_s"])
@@ -438,6 +453,39 @@ fn run(
                         "recovery replay rate fell below floor: {cur_recovery:.0} < \
                          {recovery_floor:.0} events/s"
                     ));
+                }
+                // The fsync-mode floors rode in later; a baseline that
+                // pins them gates them, one that doesn't gets them pinned
+                // by the merged document below.
+                if let Some(floor) = baseline
+                    .at(&["persist", "append_mbps_fsync"])
+                    .and_then(Json::as_f64)
+                {
+                    println!(
+                        "bench_gate: persist fsync-append floor {floor:.2} -> \
+                         {cur_fsync:.2} MB/s"
+                    );
+                    if cur_fsync < floor - 1e-9 {
+                        failures.push(format!(
+                            "fsync-mode append throughput fell below floor: \
+                             {cur_fsync:.2} < {floor:.2} MB/s"
+                        ));
+                    }
+                }
+                if let Some(floor) = baseline
+                    .at(&["persist", "group_commit_amortization"])
+                    .and_then(Json::as_f64)
+                {
+                    println!(
+                        "bench_gate: persist group-commit amortization floor \
+                         {floor:.1}x -> {cur_amort:.1}x"
+                    );
+                    if cur_amort < floor - 1e-9 {
+                        failures.push(format!(
+                            "group-commit amortization fell below floor: \
+                             {cur_amort:.1}x < {floor:.1}x events per barrier"
+                        ));
+                    }
                 }
             }
             _ => println!(
@@ -748,7 +796,11 @@ mod tests {
     }
 
     fn persist_section() -> Json {
-        Json::obj().set("append_mbps", 20.0).set("recovery_events_per_s", 5000.0)
+        Json::obj()
+            .set("append_mbps", 20.0)
+            .set("append_mbps_fsync", 0.05)
+            .set("group_commit_amortization", 2.0)
+            .set("recovery_events_per_s", 5000.0)
     }
 
     fn fleet_section() -> Json {
@@ -788,16 +840,22 @@ mod tests {
             .to_pretty()
     }
 
-    fn persist_doc(append: f64, recovery: f64) -> String {
+    fn persist_doc4(append: f64, fsync: f64, amort: f64, recovery: f64) -> String {
         Json::obj()
             .set("bench", "persist")
             .set(
                 "gate",
                 Json::obj()
                     .set("append_mbps", append)
+                    .set("append_mbps_fsync", fsync)
+                    .set("group_commit_amortization", amort)
                     .set("recovery_events_per_s", recovery),
             )
             .to_pretty()
+    }
+
+    fn persist_doc(append: f64, recovery: f64) -> String {
+        persist_doc4(append, 5.0, 8.0, recovery)
     }
 
     fn fleet_doc(scaling: f64, merge: f64) -> String {
@@ -920,6 +978,24 @@ mod tests {
         // Recovery below floor: fail.
         let slow_rec = write_tmp("pers_slow_r.json", &persist_doc(120.0, 4000.0));
         assert!(run(&base, &cur, None, None, Some(&slow_rec), None, None).is_err());
+        // Fsync-mode append below its floor: fail.
+        let slow_fsync =
+            write_tmp("pers_slow_f.json", &persist_doc4(120.0, 0.01, 8.0, 90_000.0));
+        assert!(run(&base, &cur, None, None, Some(&slow_fsync), None, None).is_err());
+        // Group commit stopped amortizing: fail.
+        let no_amort =
+            write_tmp("pers_no_amort.json", &persist_doc4(120.0, 5.0, 1.0, 90_000.0));
+        assert!(run(&base, &cur, None, None, Some(&no_amort), None, None).is_err());
+        // A legacy baseline without the fsync floors still gates the two
+        // classic floors and passes (the merged document pins the rest).
+        let base_legacy = write_tmp(
+            "base7_legacy.json",
+            &doc_with(
+                "persist",
+                Json::obj().set("append_mbps", 20.0).set("recovery_events_per_s", 5000.0),
+            ),
+        );
+        assert!(run(&base_legacy, &cur, None, None, Some(&slow_fsync), None, None).is_ok());
         // Malformed persist summary: fail.
         let junk = write_tmp("pers_junk.json", "{}");
         assert!(run(&base, &cur, None, None, Some(&junk), None, None).is_err());
@@ -1183,7 +1259,8 @@ mod tests {
             p99: 4.8,                 // worse than 4.0 (within 20%) → stays 4.0
             speedup: Some(8.5),       // worse than 10.0 (within 20%) → stays 10.0
             compress: Some((2.8, 310.0)), // ratio better; mbps is wall-clock
-            persist: Some((500.0, 1_000_000.0)), // both wall-clock → floors stay
+            // Wall-clock / mode-dependent → committed floors stay.
+            persist: Some((500.0, 80.0, 30.0, 1_000_000.0)),
             fleet: Some((1.9, 0.01)), // core-count dependent → floors stay
             load: Some(LoadArtifact {
                 mode: Some("fast".to_string()),
@@ -1198,6 +1275,8 @@ mod tests {
         // Wall-clock floors are never raised from a measured rate.
         assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(25.0));
         assert_eq!(at(&pin, &["persist", "append_mbps"]), Some(20.0));
+        assert_eq!(at(&pin, &["persist", "append_mbps_fsync"]), Some(0.05));
+        assert_eq!(at(&pin, &["persist", "group_commit_amortization"]), Some(2.0));
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(5000.0));
         // Fleet scaling floor / merge ceiling keep their committed values
         // even when this (possibly many-core, lightly loaded) run beat
@@ -1257,6 +1336,8 @@ mod tests {
         assert_eq!(at(&pin, &["scale", "probe_speedup"]), Some(8.5));
         assert_eq!(at(&pin, &["compress", "decode_mbps"]), Some(31.0));
         assert_eq!(at(&pin, &["persist", "append_mbps"]), Some(50.0));
+        assert_eq!(at(&pin, &["persist", "append_mbps_fsync"]), Some(8.0));
+        assert_eq!(at(&pin, &["persist", "group_commit_amortization"]), Some(15.0));
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(100_000.0));
         assert_eq!(at(&pin, &["fleet", "scaling_2w"]), Some(1.9 / 1.25));
         assert_eq!(at(&pin, &["fleet", "merge_overhead"]), Some(0.01 * 10.0));

@@ -7,7 +7,7 @@ use anyhow::{bail, Result};
 
 use crate::data::catalog::{DatasetSpec, CIFAR10};
 use crate::memory::store::StoreMeter;
-use crate::persist::DurabilityMode;
+use crate::persist::{DurabilityMode, FsyncPolicy};
 use crate::runtime::codec::CodecMode;
 use crate::unlearning::batch::BatchPolicy;
 pub use profiles::ModelProfile;
@@ -62,6 +62,20 @@ pub struct ExperimentConfig {
     /// spill checkpoint payload bytes so recovery restores store tensors
     /// bit-exactly).
     pub durability: DurabilityMode,
+    /// When the journal reaches the OS: `never` (default — fastest, an
+    /// OS crash may lose the page-cache tail), `always` (one fsync
+    /// barrier per event), or `group` (group commit: one barrier per
+    /// sealed batch window — the amortized middle ground). Config keys:
+    /// `fsync = never|always|group`, `fsync_group_commit = true`, or the
+    /// `durability = log+fsync` shorthand. Ignored when `durability` is
+    /// `off`.
+    pub fsync: FsyncPolicy,
+    /// Cross-shard log shipping (`ship_to_peer = true`): every fleet
+    /// shard streams its sealed WAL frames to an in-process peer replica
+    /// so a dead shard can be rebuilt by `failover` with zero
+    /// acknowledged obligations lost. Needs `durability != off`; a
+    /// 1-worker fleet has no peer and ignores the knob.
+    pub ship_to_peer: bool,
     /// Directory for the write-ahead log / snapshots when `durability`
     /// is not `off`.
     pub persist_dir: String,
@@ -87,6 +101,15 @@ fn parse_slo(v: &str) -> Result<u64> {
     }
 }
 
+/// Parse a boolean config value (`true`/`false`, `1`/`0`, `on`/`off`).
+fn parse_bool(v: &str) -> Result<bool> {
+    match v.trim().to_ascii_lowercase().as_str() {
+        "true" | "1" | "on" | "yes" => Ok(true),
+        "false" | "0" | "off" | "no" => Ok(false),
+        other => bail!("expected a boolean, got '{other}'"),
+    }
+}
+
 impl Default for ExperimentConfig {
     fn default() -> Self {
         Self {
@@ -106,6 +129,8 @@ impl Default for ExperimentConfig {
             store_meter: StoreMeter::Slots,
             codec: CodecMode::Sparse,
             durability: DurabilityMode::Off,
+            fsync: FsyncPolicy::Never,
+            ship_to_peer: false,
             persist_dir: "cause_persist".to_string(),
             compact_every: 512,
             fleet_workers: 1,
@@ -181,6 +206,18 @@ impl ExperimentConfig {
         self
     }
 
+    /// Choose when journal writes reach the OS (fsync barriers).
+    pub fn with_fsync(mut self, fsync: FsyncPolicy) -> Self {
+        self.fsync = fsync;
+        self
+    }
+
+    /// Stream every fleet shard's sealed WAL frames to a peer replica.
+    pub fn with_ship_to_peer(mut self, ship: bool) -> Self {
+        self.ship_to_peer = ship;
+        self
+    }
+
     /// Run the service as a sharded fleet with this many workers.
     pub fn with_fleet_workers(mut self, workers: usize) -> Self {
         self.fleet_workers = workers;
@@ -235,9 +272,30 @@ impl ExperimentConfig {
                     .ok_or_else(|| anyhow::anyhow!("unknown codec '{v}'"))?
             }
             "durability" => {
-                self.durability = DurabilityMode::by_name(v)
-                    .ok_or_else(|| anyhow::anyhow!("unknown durability mode '{v}'"))?
+                // `log+fsync` / `log+spill+fsync`: mode with per-event
+                // fsync barriers in one assignment.
+                let (mode, fsync) = match v.strip_suffix("+fsync") {
+                    Some(base) => (base, true),
+                    None => (v, false),
+                };
+                self.durability = DurabilityMode::by_name(mode)
+                    .ok_or_else(|| anyhow::anyhow!("unknown durability mode '{v}'"))?;
+                if fsync {
+                    self.fsync = FsyncPolicy::Always;
+                }
             }
+            "fsync" => {
+                self.fsync = FsyncPolicy::by_name(v)
+                    .ok_or_else(|| anyhow::anyhow!("unknown fsync policy '{v}'"))?
+            }
+            "fsync_group_commit" => {
+                if parse_bool(v)? {
+                    self.fsync = FsyncPolicy::GroupCommit;
+                } else if self.fsync == FsyncPolicy::GroupCommit {
+                    self.fsync = FsyncPolicy::Never;
+                }
+            }
+            "ship_to_peer" => self.ship_to_peer = parse_bool(v)?,
             "persist_dir" => {
                 if v.is_empty() {
                     bail!("persist_dir must not be empty");
@@ -387,6 +445,54 @@ mod tests {
         let c = ExperimentConfig::default().with_durability(DurabilityMode::Log, "d");
         assert_eq!(c.durability, DurabilityMode::Log);
         assert_eq!(c.persist_dir, "d");
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn fsync_and_shipping_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.fsync, FsyncPolicy::Never);
+        assert!(!c.ship_to_peer);
+        c.apply("fsync", "always").unwrap();
+        assert_eq!(c.fsync, FsyncPolicy::Always);
+        c.apply("fsync", "group").unwrap();
+        assert_eq!(c.fsync, FsyncPolicy::GroupCommit);
+        c.apply("fsync", "never").unwrap();
+        assert_eq!(c.fsync, FsyncPolicy::Never);
+        assert!(c.apply("fsync", "maybe").is_err());
+        // Dedicated group-commit toggle.
+        c.apply("fsync_group_commit", "true").unwrap();
+        assert_eq!(c.fsync, FsyncPolicy::GroupCommit);
+        c.apply("fsync_group_commit", "false").unwrap();
+        assert_eq!(c.fsync, FsyncPolicy::Never);
+        // Turning the toggle off leaves a non-group policy alone.
+        c.fsync = FsyncPolicy::Always;
+        c.apply("fsync_group_commit", "off").unwrap();
+        assert_eq!(c.fsync, FsyncPolicy::Always);
+        assert!(c.apply("fsync_group_commit", "sometimes").is_err());
+        // `durability = log+fsync` shorthand binds mode + barriers.
+        let mut c = ExperimentConfig::default();
+        c.apply("durability", "log+fsync").unwrap();
+        assert_eq!(c.durability, DurabilityMode::Log);
+        assert_eq!(c.fsync, FsyncPolicy::Always);
+        c.apply("durability", "log+spill+fsync").unwrap();
+        assert_eq!(c.durability, DurabilityMode::LogSpill);
+        // Plain re-assignment keeps the explicit fsync policy.
+        c.apply("durability", "log").unwrap();
+        assert_eq!(c.fsync, FsyncPolicy::Always);
+        assert!(c.apply("durability", "chrome+fsync").is_err());
+        // Shipping knob.
+        c.apply("ship_to_peer", "true").unwrap();
+        assert!(c.ship_to_peer);
+        c.apply("ship_to_peer", "0").unwrap();
+        assert!(!c.ship_to_peer);
+        assert!(c.apply("ship_to_peer", "maybe").is_err());
+        // Builder shorthands.
+        let c = ExperimentConfig::default()
+            .with_fsync(FsyncPolicy::GroupCommit)
+            .with_ship_to_peer(true);
+        assert_eq!(c.fsync, FsyncPolicy::GroupCommit);
+        assert!(c.ship_to_peer);
         c.validate().unwrap();
     }
 

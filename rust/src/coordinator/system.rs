@@ -206,11 +206,10 @@ impl SystemVariant {
         let planner = BatchPlanner::new(self.batch_policy(cfg), cfg.batch_window);
         let mut svc = UnlearningService::new(engine).with_planner(planner);
         if cfg.durability != DurabilityMode::Off {
-            svc.attach_durability(Durability::disk(
-                cfg.durability,
-                &cfg.persist_dir,
-                cfg.compact_every,
-            )?)?;
+            svc.attach_durability(
+                Durability::disk(cfg.durability, &cfg.persist_dir, cfg.compact_every)?
+                    .with_fsync(cfg.fsync),
+            )?;
         }
         Ok(svc)
     }
@@ -241,16 +240,25 @@ impl SystemVariant {
                 shard_cfg.seed = seed;
                 // Durability is attached per-shard by the fleet below.
                 shard_cfg.durability = DurabilityMode::Off;
+                // `Fn`, not `FnOnce`: failover reruns a shard's builder.
                 Box::new(move || {
                     let engine = variant.build_cost(&shard_cfg)?;
                     Ok(UnlearningService::new(engine)
                         .with_planner(BatchPlanner::new(policy, window)))
-                }) as Box<dyn FnOnce() -> Result<UnlearningService> + Send>
+                }) as Box<dyn Fn() -> Result<UnlearningService> + Send + Sync>
             })
             .collect();
         let mut fleet = FleetService::new(builders, cfg.seed)?;
         if cfg.durability != DurabilityMode::Off {
-            fleet.attach_durability_disk(cfg.durability, &cfg.persist_dir, cfg.compact_every)?;
+            fleet.attach_durability_disk(
+                cfg.durability,
+                &cfg.persist_dir,
+                cfg.compact_every,
+                cfg.fsync,
+            )?;
+            if cfg.ship_to_peer && n > 1 {
+                fleet.enable_log_shipping()?;
+            }
         }
         Ok(fleet)
     }

@@ -29,15 +29,20 @@ mod worker;
 pub use router::Router;
 
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::data::dataset::{EdgePopulation, UserId};
 use crate::data::trace::UnlearnRequest;
+use crate::load::LatencyHistogram;
 use crate::metrics::RunMetrics;
 use crate::partition::ShardId;
 use crate::persist::recovery::RecoveryReport;
-use crate::persist::{Durability, DurabilityMode};
+use crate::persist::ship::materialize_replica;
+use crate::persist::{
+    Durability, DurabilityMode, FsyncPolicy, ReplicaStore, ShipReceipt, ShipTransport,
+};
 use crate::prng::Rng;
 use crate::sim::Battery;
 use crate::unlearning::service::admission_decide;
@@ -46,14 +51,54 @@ use crate::util::Json;
 
 use worker::{Cmd, Reply, WorkerHandle};
 
+/// Consecutive shipping faults tolerated before a shard's shipping fails
+/// terminally (the journal itself is unaffected).
+const SHIP_RETRY_LIMIT: u32 = 8;
+
+/// A shared factory that rebuilds one shard's service from scratch —
+/// used at spawn and again by [`FleetService::failover`].
+type ShardFactory = Arc<dyn Fn() -> Result<UnlearningService> + Send + Sync>;
+
+/// Builds the shipping transport for one shard given the fleet's shared
+/// replica store.
+type TransportFactory = Arc<dyn Fn(usize, ReplicaStore) -> Box<dyn ShipTransport> + Send + Sync>;
+
+/// Log-shipping state the front-end keeps: the shared replica store (the
+/// fleet's "peer disks"), the transport recipe, and the retry budget —
+/// everything failover and re-enable need.
+struct Shipping {
+    store: ReplicaStore,
+    make: TransportFactory,
+    retry_limit: u32,
+}
+
 /// A fleet of shard workers behind the unsharded service surface.
 pub struct FleetService {
     router: Router,
     workers: Vec<WorkerHandle>,
+    /// Per-shard service factories, retained so failover can rebuild a
+    /// dead shard's worker from the same recipe.
+    factories: Vec<ShardFactory>,
     events: Receiver<(usize, Reply)>,
+    /// Kept (not just cloned into workers) so failover can hand the
+    /// replacement worker the same event channel.
+    event_tx: Sender<(usize, Reply)>,
     seeds: Vec<u64>,
     /// Fleet-level round counter (mirrors each worker's ingest count).
     round: u32,
+    /// Per-shard liveness; a dead shard parks commands until failover.
+    alive: Vec<bool>,
+    /// Fire-and-forget commands addressed to a dead shard, delivered in
+    /// arrival order once failover rebuilds it.
+    parked: Vec<Vec<Cmd>>,
+    /// Battery template ([`FleetService::with_battery`]), re-armed on the
+    /// replacement worker at failover.
+    battery: Option<Battery>,
+    /// Per-shard durability spec captured at attach time; failover
+    /// re-attaches the replacement with the same mode/fsync/cadence over
+    /// the materialized replica (the dead shard's local disk is lost).
+    dura_spec: Vec<Option<(DurabilityMode, FsyncPolicy, u64)>>,
+    shipping: Option<Shipping>,
 }
 
 impl FleetService {
@@ -74,29 +119,37 @@ impl FleetService {
     /// worker thread (the engine's trainer is not `Send`), and must
     /// construct the shard's full service — engine, planner, battery —
     /// but **not** durability, which is attached per-shard afterwards.
-    /// `routing_seed` seeds the router's UCDP table and anchors
-    /// [`FleetService::shard_seeds`].
+    /// Builders are `Fn` (rerunnable): failover rebuilds a dead shard's
+    /// worker from the same recipe. `routing_seed` seeds the router's
+    /// UCDP table and anchors [`FleetService::shard_seeds`].
     pub fn new(
-        builders: Vec<Box<dyn FnOnce() -> Result<UnlearningService> + Send>>,
+        builders: Vec<Box<dyn Fn() -> Result<UnlearningService> + Send + Sync>>,
         routing_seed: u64,
     ) -> Result<FleetService> {
         if builders.is_empty() {
             bail!("fleet needs at least one worker");
         }
         let n = builders.len();
+        let factories: Vec<ShardFactory> = builders.into_iter().map(ShardFactory::from).collect();
         let (event_tx, event_rx) = std::sync::mpsc::channel::<(usize, Reply)>();
-        let workers: Vec<WorkerHandle> = builders
-            .into_iter()
+        let workers: Vec<WorkerHandle> = factories
+            .iter()
             .enumerate()
-            .map(|(k, build)| worker::spawn(k, build, event_tx.clone()))
+            .map(|(k, build)| worker::spawn(k, build.clone(), event_tx.clone()))
             .collect();
-        drop(event_tx);
         let fleet = FleetService {
             router: Router::new(n, routing_seed),
             workers,
+            factories,
             events: event_rx,
+            event_tx,
             seeds: FleetService::derive_shard_seeds(routing_seed, n),
             round: 0,
+            alive: vec![true; n],
+            parked: (0..n).map(|_| Vec::new()).collect(),
+            battery: None,
+            dura_spec: vec![None; n],
+            shipping: None,
         };
         // One Ready (or builder Err) per worker; first failure wins in
         // shard order. Drop shuts the healthy workers down.
@@ -153,12 +206,34 @@ impl FleetService {
         self.workers[k].cmd.send(cmd).expect("fleet worker hung up");
     }
 
+    /// Fire-and-forget dispatch: a dead shard parks the command (in
+    /// arrival order) until failover rebuilds it.
+    fn dispatch(&mut self, k: usize, cmd: Cmd) {
+        if self.alive[k] {
+            self.send(k, cmd);
+        } else {
+            self.parked[k].push(cmd);
+        }
+    }
+
+    /// Fallible fleet operations refuse to run while any shard is dead —
+    /// a partial answer over a sharded obligation set would be a silent
+    /// lie. Recover the shard with [`FleetService::failover`] first.
+    fn ensure_all_alive(&self) -> Result<()> {
+        match self.alive.iter().position(|a| !a) {
+            None => Ok(()),
+            Some(k) => Err(anyhow!("fleet worker {k} is dead; recover it with failover({k})")),
+        }
+    }
+
     /// Route and enqueue a request on its user's home shard (FCFS within
     /// the shard, arrival stamped on the shard's service clock — which
-    /// all workers advance in lockstep).
+    /// all workers advance in lockstep). A dead home shard parks the
+    /// request; failover delivers it after recovery, so acceptance
+    /// ordering survives the shard's death.
     pub fn submit(&mut self, req: UnlearnRequest) {
         let k = self.router.route(req.user, req.total_samples());
-        self.send(k, Cmd::Submit(req));
+        self.dispatch(k, Cmd::Submit(req));
     }
 
     /// Run one training round: route the round's blocks by user, hand
@@ -166,6 +241,7 @@ impl FleetService {
     /// every worker (possibly an empty slice — round counters advance in
     /// lockstep fleet-wide).
     pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
+        self.ensure_all_alive()?;
         self.round += 1;
         for b in pop.blocks_at(self.round) {
             self.router.route(b.user, b.samples);
@@ -193,25 +269,29 @@ impl FleetService {
     }
 
     /// Advance every shard's service clock (fleet clocks move in
-    /// lockstep).
+    /// lockstep; a dead shard's ticks are parked and replayed in order at
+    /// failover, so its recovered clock catches up exactly).
     pub fn advance(&mut self, ticks: u64) {
         for k in 0..self.workers.len() {
-            self.send(k, Cmd::Advance(ticks));
+            self.dispatch(k, Cmd::Advance(ticks));
         }
     }
 
     /// Advance harvest time on every shard's battery.
     pub fn harvest(&mut self, secs: f64) {
         for k in 0..self.workers.len() {
-            self.send(k, Cmd::Harvest(secs));
+            self.dispatch(k, Cmd::Harvest(secs));
         }
     }
 
     /// Give every shard its own battery (clones of `battery` — each
     /// worker draws from its own charge; admission stays centralized).
-    pub fn with_battery(self, battery: Battery) -> Self {
+    /// The template is retained so failover re-arms the replacement
+    /// worker before recovery replays its log.
+    pub fn with_battery(mut self, battery: Battery) -> Self {
+        self.battery = Some(battery.clone());
         for k in 0..self.workers.len() {
-            self.send(k, Cmd::SetBattery(battery.clone()));
+            self.dispatch(k, Cmd::SetBattery(battery.clone()));
         }
         self
     }
@@ -232,6 +312,7 @@ impl FleetService {
     }
 
     fn drain(&mut self, flush: bool) -> Result<usize> {
+        self.ensure_all_alive()?;
         for k in 0..self.workers.len() {
             self.send(k, Cmd::Drain { flush });
         }
@@ -254,6 +335,7 @@ impl FleetService {
     /// worker recovers whatever its filesystem holds, then arms
     /// log-before-ack journaling.
     pub fn attach_durability(&mut self, ds: Vec<Durability>) -> Result<Vec<RecoveryReport>> {
+        self.ensure_all_alive()?;
         if ds.len() != self.workers.len() {
             bail!(
                 "fleet has {} workers but {} durability journals",
@@ -262,6 +344,9 @@ impl FleetService {
             );
         }
         for (k, d) in ds.into_iter().enumerate() {
+            // Failover re-attaches the replacement shard with the same
+            // spec (over a materialized replica — the dead disk is lost).
+            self.dura_spec[k] = Some((d.mode, d.fsync, d.compact_every));
             self.send(k, Cmd::AttachDurability(d));
         }
         let reports = self.collect(|reply| match reply {
@@ -285,6 +370,7 @@ impl FleetService {
         mode: DurabilityMode,
         dir: &str,
         compact_every: u64,
+        fsync: FsyncPolicy,
     ) -> Result<Vec<RecoveryReport>> {
         let n = self.workers.len();
         let ds = (0..n)
@@ -294,10 +380,266 @@ impl FleetService {
                 } else {
                     format!("{dir}/shard-{k}")
                 };
-                Ok(Durability::disk(mode, shard_dir, compact_every)?)
+                Ok(Durability::disk(mode, shard_dir, compact_every)?.with_fsync(fsync))
             })
             .collect::<Result<Vec<Durability>>>()?;
         self.attach_durability(ds)
+    }
+
+    /// Like [`FleetService::collect`] but for exactly one worker —
+    /// failover talks to the replacement shard while the rest of the
+    /// fleet is quiescent (every other exchange fully collects before
+    /// returning, so no stray replies can arrive here).
+    fn collect_one<T>(
+        &self,
+        k: usize,
+        mut classify: impl FnMut(Reply) -> Result<T, Reply>,
+    ) -> Result<T> {
+        loop {
+            let (kk, reply) =
+                self.events.recv().map_err(|_| anyhow!("fleet worker hung up"))?;
+            if kk != k {
+                bail!("unexpected reply from fleet worker {kk} while waiting on {k}");
+            }
+            match reply {
+                Reply::Quote { costs, battery } => {
+                    let verdict = admission_decide(costs.as_deref(), battery.as_ref());
+                    self.workers[k]
+                        .grant
+                        .send(verdict)
+                        .map_err(|_| anyhow!("fleet worker {k} hung up awaiting grant"))?;
+                }
+                other => {
+                    return classify(other)
+                        .map_err(|u| anyhow!("unexpected reply from fleet worker {k}: {u:?}"))
+                }
+            }
+        }
+    }
+
+    /// Enable cross-shard log shipping over the default in-process
+    /// transport: each shard streams its sealed WAL frames into a shared
+    /// [`ReplicaStore`] — shard `k`'s replica is conceptually hosted by
+    /// peer `(k + 1) % n` — so [`FleetService::failover`] can rebuild a
+    /// dead shard with zero acknowledged obligations lost. Requires
+    /// durability to be attached first.
+    pub fn enable_log_shipping(&mut self) -> Result<ReplicaStore> {
+        self.enable_log_shipping_with(|_, store| Box::new(store))
+    }
+
+    /// Like [`FleetService::enable_log_shipping`] but with a custom
+    /// transport per shard (fault-injection wrappers, etc.); `make` also
+    /// rebuilds the transport when failover re-enables shipping on a
+    /// recovered shard. Returns the shared replica store for inspection.
+    pub fn enable_log_shipping_with(
+        &mut self,
+        make: impl Fn(usize, ReplicaStore) -> Box<dyn ShipTransport> + Send + Sync + 'static,
+    ) -> Result<ReplicaStore> {
+        self.ensure_all_alive()?;
+        let store = ReplicaStore::new();
+        let make: TransportFactory = Arc::new(make);
+        for k in 0..self.workers.len() {
+            self.send(
+                k,
+                Cmd::EnableShipping {
+                    source: k,
+                    transport: make(k, store.clone()),
+                    retry_limit: SHIP_RETRY_LIMIT,
+                },
+            );
+        }
+        let acks = self.collect(|reply| match reply {
+            Reply::ShipEnabled => Ok(Ok(())),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?;
+        for (k, r) in acks.into_iter().enumerate() {
+            if let Err(e) = r {
+                return Err(anyhow!("fleet worker {k} failed to enable shipping: {e}"));
+            }
+        }
+        self.shipping =
+            Some(Shipping { store: store.clone(), make, retry_limit: SHIP_RETRY_LIMIT });
+        Ok(store)
+    }
+
+    /// Seal every shard's group-commit window (one fsync barrier each)
+    /// and give each shipper a flush opportunity. Drive this until
+    /// [`FleetService::shipping_states`] shows no pending frames to
+    /// guarantee the peers hold everything acknowledged so far.
+    pub fn sync_journals(&mut self) -> Result<()> {
+        self.ensure_all_alive()?;
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::SyncJournal);
+        }
+        let acks = self.collect(|reply| match reply {
+            Reply::Synced => Ok(Ok(())),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?;
+        for (k, r) in acks.into_iter().enumerate() {
+            if let Err(e) = r {
+                return Err(anyhow!("fleet worker {k} journal sync failed: {e}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-shard shipping receipts + journal next_seq, in shard order
+    /// (`None` receipt = shipping not enabled on that shard).
+    pub fn shipping_states(&self) -> Result<Vec<(Option<ShipReceipt>, u64)>> {
+        self.ensure_all_alive()?;
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::ShipState);
+        }
+        self.collect(|reply| match reply {
+            Reply::Shipping { receipt, log_seq } => Ok((receipt, log_seq)),
+            other => Err(other),
+        })
+    }
+
+    /// Compact every shard's journal (snapshot + log-prefix truncation).
+    pub fn compact_now(&mut self) -> Result<()> {
+        self.ensure_all_alive()?;
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::Compact);
+        }
+        let acks = self.collect(|reply| match reply {
+            Reply::Compacted => Ok(Ok(())),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?;
+        for (k, r) in acks.into_iter().enumerate() {
+            if let Err(e) = r {
+                return Err(anyhow!("fleet worker {k} compaction failed: {e}"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Per-shard latency histograms, recorded at the workers and carried
+    /// whole to the front-end (not reconstructed from raw metrics), plus
+    /// each shard's exact SLO-violation count against `slo_ticks`.
+    pub fn shard_latency_histograms(
+        &self,
+        slo_ticks: u64,
+    ) -> Result<Vec<(LatencyHistogram, u64)>> {
+        self.ensure_all_alive()?;
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::LatencyHist { slo_ticks });
+        }
+        self.collect(|reply| match reply {
+            Reply::LatencyHist { hist, violations } => Ok((*hist, violations)),
+            other => Err(other),
+        })
+    }
+
+    /// The fleet's merged latency histogram (lossless bucket-wise merge
+    /// of the per-shard histograms; surfaces in the fleet receipt).
+    pub fn latency_histogram(&self) -> Result<LatencyHistogram> {
+        let mut merged = LatencyHistogram::new();
+        for (h, _) in self.shard_latency_histograms(u64::MAX)? {
+            merged.merge(&h);
+        }
+        Ok(merged)
+    }
+
+    /// The shared replica store, when shipping is enabled (tests poll
+    /// watermarks through this).
+    pub fn replica_store(&self) -> Option<&ReplicaStore> {
+        self.shipping.as_ref().map(|s| &s.store)
+    }
+
+    /// Kill shard `k`'s worker outright — the crash model for failover
+    /// testing. The worker thread is shut down and joined; its in-memory
+    /// state and local journal filesystem are treated as lost (only what
+    /// was shipped survives). Commands addressed to the dead shard park
+    /// until [`FleetService::failover`]; fallible fleet operations error
+    /// until then.
+    pub fn kill_worker(&mut self, k: usize) -> Result<()> {
+        if k >= self.workers.len() {
+            bail!("no fleet worker {k}");
+        }
+        if !self.alive[k] {
+            return Ok(());
+        }
+        let _ = self.workers[k].cmd.send(Cmd::Shutdown);
+        if let Some(join) = self.workers[k].join.take() {
+            let _ = join.join();
+        }
+        self.alive[k] = false;
+        Ok(())
+    }
+
+    /// Rebuild dead shard `k` from its shipped replica: spawn a fresh
+    /// worker from the shard's factory, re-arm its battery template,
+    /// recover it from the materialized replica (snapshot + shipped
+    /// frames through the standard recovery path), re-enable shipping,
+    /// and deliver the commands that parked while the shard was dead —
+    /// in arrival order, so acceptance ordering is preserved. Bumps the
+    /// routing epoch (the failover is receipt-auditable). Returns the
+    /// replacement's recovery report: every obligation acknowledged
+    /// below the shipped watermark is back.
+    pub fn failover(&mut self, k: usize) -> Result<RecoveryReport> {
+        if k >= self.workers.len() {
+            bail!("no fleet worker {k}");
+        }
+        if self.alive[k] {
+            bail!("fleet worker {k} is alive; kill_worker({k}) first");
+        }
+        let Some((mode, fsync, compact_every)) = self.dura_spec[k] else {
+            bail!("failover needs durability attached on shard {k}");
+        };
+        let (store, make, retry_limit) = match &self.shipping {
+            Some(s) => (s.store.clone(), s.make.clone(), s.retry_limit),
+            None => bail!("failover needs log shipping enabled"),
+        };
+        let replica = store.replica(k).unwrap_or_default();
+        let fs = materialize_replica(&replica);
+
+        // A fresh worker from the same recipe, on the same event channel
+        // and shard slot.
+        self.workers[k] = worker::spawn(k, self.factories[k].clone(), self.event_tx.clone());
+        self.collect_one(k, |reply| match reply {
+            Reply::Ready => Ok(Ok(())),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?
+        .map_err(|e| anyhow!("failover rebuild of fleet worker {k} failed: {e}"))?;
+        if let Some(b) = &self.battery {
+            self.send(k, Cmd::SetBattery(b.clone()));
+        }
+        // Recover from the peer's copy; the report says what came back.
+        self.send(
+            k,
+            Cmd::AttachDurability(Durability::mem(mode, fs, compact_every).with_fsync(fsync)),
+        );
+        let report = self
+            .collect_one(k, |reply| match reply {
+                Reply::Attached(r) => Ok(Ok(*r)),
+                Reply::Err(e) => Ok(Err(e)),
+                other => Err(other),
+            })?
+            .map_err(|e| anyhow!("failover recovery of fleet worker {k} failed: {e}"))?;
+        // The replacement ships again (its prime re-converges the peer's
+        // replica to the recovered generation).
+        self.send(
+            k,
+            Cmd::EnableShipping { source: k, transport: make(k, store), retry_limit },
+        );
+        self.collect_one(k, |reply| match reply {
+            Reply::ShipEnabled => Ok(Ok(())),
+            Reply::Err(e) => Ok(Err(e)),
+            other => Err(other),
+        })?
+        .map_err(|e| anyhow!("failover re-shipping on fleet worker {k} failed: {e}"))?;
+        self.alive[k] = true;
+        // Replay what arrived while the shard was dead, in order.
+        for cmd in std::mem::take(&mut self.parked[k]) {
+            self.send(k, cmd);
+        }
+        self.router.note_failover();
+        Ok(report)
     }
 
     /// Deterministic digest of the whole fleet. A 1-worker fleet returns
@@ -306,7 +648,8 @@ impl FleetService {
     /// fleet wraps per-shard receipts (shard order) with the routing
     /// state — seed, epoch, active range, and the derived per-shard
     /// engine seeds (hex, so full u64 precision survives JSON) for seed
-    /// auditing.
+    /// auditing — plus the fleet's merged latency histogram and, when log
+    /// shipping is on, each shard's shipping watermark.
     pub fn state_receipt(&self) -> Result<Json> {
         let mut receipts = self.shard_receipts()?;
         if receipts.len() == 1 {
@@ -326,13 +669,32 @@ impl FleetService {
                         .collect(),
                 ),
             );
-        Ok(Json::obj()
+        let mut out = Json::obj()
             .set("routing", routing)
-            .set("shards", Json::Arr(receipts)))
+            .set("latency_hist", self.latency_histogram()?.to_json());
+        if self.shipping.is_some() {
+            let states = self
+                .shipping_states()?
+                .into_iter()
+                .map(|(r, log_seq)| {
+                    let o = Json::obj().set("log_seq", log_seq);
+                    match r {
+                        Some(r) => o
+                            .set("shipped", r.shipped_seq)
+                            .set("pending", r.pending)
+                            .set("failed", r.failed.map_or(Json::Null, Json::Str)),
+                        None => o,
+                    }
+                })
+                .collect();
+            out = out.set("shipping", Json::Arr(states));
+        }
+        Ok(out.set("shards", Json::Arr(receipts)))
     }
 
     /// Per-shard state receipts in shard order.
     pub fn shard_receipts(&self) -> Result<Vec<Json>> {
+        self.ensure_all_alive()?;
         for k in 0..self.workers.len() {
             self.send(k, Cmd::Receipt);
         }
@@ -351,6 +713,7 @@ impl FleetService {
 
     /// Per-shard run metrics in shard order.
     pub fn shard_metrics(&self) -> Result<Vec<RunMetrics>> {
+        self.ensure_all_alive()?;
         for k in 0..self.workers.len() {
             self.send(k, Cmd::Metrics);
         }
@@ -362,6 +725,7 @@ impl FleetService {
 
     /// Per-window receipts, concatenated in shard order.
     pub fn batch_log(&self) -> Result<Vec<BatchReport>> {
+        self.ensure_all_alive()?;
         for k in 0..self.workers.len() {
             self.send(k, Cmd::BatchLog);
         }
@@ -373,6 +737,7 @@ impl FleetService {
     }
 
     fn counts(&self) -> Result<Vec<(usize, usize, usize)>> {
+        self.ensure_all_alive()?;
         for k in 0..self.workers.len() {
             self.send(k, Cmd::Counts);
         }
@@ -402,6 +767,7 @@ impl FleetService {
 
     /// Events currently in the fleet's log tails (sum over shards).
     pub fn journal_events(&self) -> Result<u64> {
+        self.ensure_all_alive()?;
         for k in 0..self.workers.len() {
             self.send(k, Cmd::JournalEvents);
         }

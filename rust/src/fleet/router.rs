@@ -66,6 +66,14 @@ impl Router {
         }
     }
 
+    /// A shard died and was rebuilt from its peer's shipped log. Routing
+    /// itself is unchanged — users keep their sticky home shard, and the
+    /// replacement worker answers for it — but the epoch bump makes the
+    /// failover auditable in every receipt that carries routing state.
+    pub fn note_failover(&mut self) {
+        self.epoch += 1;
+    }
+
     pub fn active(&self) -> usize {
         self.active
     }
@@ -119,5 +127,8 @@ mod tests {
         r.set_active(99);
         assert_eq!(r.active(), 3);
         assert_eq!(r.workers(), 3);
+        let before = r.epoch();
+        r.note_failover();
+        assert_eq!(r.epoch(), before + 1, "failover is epoch-visible");
     }
 }

@@ -18,15 +18,17 @@
 //! makes a 1-worker fleet byte-identical to the unsharded service.
 
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 use anyhow::Result;
 
 use crate::data::dataset::EdgePopulation;
 use crate::data::trace::UnlearnRequest;
+use crate::load::LatencyHistogram;
 use crate::metrics::RunMetrics;
 use crate::persist::recovery::RecoveryReport;
-use crate::persist::Durability;
+use crate::persist::{Durability, ShipReceipt, ShipTransport};
 use crate::sim::Battery;
 use crate::unlearning::service::Admission;
 use crate::unlearning::{BatchReport, UnlearningService};
@@ -49,6 +51,18 @@ pub(crate) enum Cmd {
     /// admission. Terminates with `Served` or `Err`.
     Drain { flush: bool },
     AttachDurability(Durability),
+    /// Start shipping the shard's journal over `transport` (identifying
+    /// as shard `source`); the current generation is staged immediately.
+    EnableShipping { source: usize, transport: Box<dyn ShipTransport>, retry_limit: u32 },
+    /// Force the group-commit window closed: fsync barrier + ship.
+    SyncJournal,
+    /// Write a snapshot and truncate the shard's log prefix.
+    Compact,
+    /// Shipping receipt + the journal's next sequence number.
+    ShipState,
+    /// Latency histogram of every receipt so far, with exact violation
+    /// count against `slo_ticks` (pass `u64::MAX` for "histogram only").
+    LatencyHist { slo_ticks: u64 },
     Receipt,
     Metrics,
     BatchLog,
@@ -74,6 +88,12 @@ pub(crate) enum Reply {
     Counts { pending: usize, carryover_requests: usize, carryover_lineages: usize },
     Attached(Box<RecoveryReport>),
     Events(u64),
+    ShipEnabled,
+    Synced,
+    Compacted,
+    /// Shipping receipt (`None` = shipping off) + journal next_seq.
+    Shipping { receipt: Option<ShipReceipt>, log_seq: u64 },
+    LatencyHist { hist: Box<LatencyHistogram>, violations: u64 },
     Err(String),
 }
 
@@ -88,9 +108,11 @@ pub(crate) struct WorkerHandle {
 
 /// Spawn shard worker `k`. The service is built inside the thread; the
 /// first event is `Ready` on success or `Err` with the builder failure.
+/// The factory is `Fn` (not `FnOnce`) and shared by `Arc` so failover can
+/// rebuild a dead shard from the same recipe.
 pub(crate) fn spawn(
     k: usize,
-    build: Box<dyn FnOnce() -> Result<UnlearningService> + Send>,
+    build: Arc<dyn Fn() -> Result<UnlearningService> + Send + Sync>,
     events: Sender<(usize, Reply)>,
 ) -> WorkerHandle {
     let (cmd_tx, cmd_rx) = std::sync::mpsc::channel::<Cmd>();
@@ -104,7 +126,7 @@ pub(crate) fn spawn(
 
 fn run(
     k: usize,
-    build: Box<dyn FnOnce() -> Result<UnlearningService> + Send>,
+    build: Arc<dyn Fn() -> Result<UnlearningService> + Send + Sync>,
     cmds: Receiver<Cmd>,
     grants: Receiver<Admission>,
     events: Sender<(usize, Reply)>,
@@ -149,6 +171,35 @@ fn run(
                 Ok(report) => Reply::Attached(Box::new(report)),
                 Err(e) => Reply::Err(format!("{e:#}")),
             }),
+            Cmd::EnableShipping { source, transport, retry_limit } => {
+                Some(match svc.enable_shipping(source, transport, retry_limit) {
+                    Ok(()) => Reply::ShipEnabled,
+                    Err(e) => Reply::Err(format!("{e:#}")),
+                })
+            }
+            Cmd::SyncJournal => Some(match svc.sync_journal() {
+                Ok(()) => Reply::Synced,
+                Err(e) => Reply::Err(format!("{e:#}")),
+            }),
+            Cmd::Compact => Some(match svc.compact_now() {
+                Ok(()) => Reply::Compacted,
+                Err(e) => Reply::Err(format!("{e:#}")),
+            }),
+            Cmd::ShipState => Some(Reply::Shipping {
+                receipt: svc.shipping_state(),
+                log_seq: svc.journal_seq(),
+            }),
+            Cmd::LatencyHist { slo_ticks } => {
+                let mut hist = LatencyHistogram::new();
+                let mut violations = 0u64;
+                for r in &svc.engine().metrics.latency {
+                    hist.record(r.queued_ticks);
+                    if r.queued_ticks > slo_ticks {
+                        violations += 1;
+                    }
+                }
+                Some(Reply::LatencyHist { hist: Box::new(hist), violations })
+            }
             Cmd::Receipt => Some(Reply::Receipt(Box::new(svc.state_receipt()))),
             Cmd::Metrics => Some(Reply::Metrics(Box::new(svc.engine().metrics.clone()))),
             Cmd::BatchLog => Some(Reply::BatchLog(svc.batch_log.clone())),
@@ -199,6 +250,10 @@ fn drain(
             break;
         }
     }
+    // Same commit scope as the standalone drain: seal the group-commit
+    // window (one fsync) and ship the sealed frames before acking.
+    svc.journal_seal();
+    svc.check_journal()?;
     Ok(served)
 }
 

@@ -324,38 +324,46 @@ impl ServiceUnderTest {
 
     /// Per-shard latency histograms (one for the single service), plus
     /// served-receipt count, SLO violations against `slo_ticks`, and
-    /// total retrain energy. Per-shard recording + lossless merge is the
-    /// property `hist` pins down.
+    /// total retrain energy. The fleet arm takes the histograms straight
+    /// off the front-end ([`FleetService::shard_latency_histograms`] —
+    /// recorded at the workers, violations counted exactly against the
+    /// raw delays there) instead of rebuilding them from raw metrics
+    /// here. Per-shard recording + lossless merge is the property `hist`
+    /// pins down.
     pub fn latency_report(&mut self, slo_ticks: u64) -> Result<LatencyReportRaw> {
-        let per_shard: Vec<Vec<u64>> = match self {
+        match self {
             ServiceUnderTest::Single(s) => {
-                vec![s.engine().metrics.latency.iter().map(|r| r.queued_ticks).collect()]
-            }
-            ServiceUnderTest::Fleet(f) => f
-                .shard_metrics()?
-                .iter()
-                .map(|m| m.latency.iter().map(|r| r.queued_ticks).collect())
-                .collect(),
-        };
-        let energy_joules = match self {
-            ServiceUnderTest::Single(s) => s.engine().metrics.energy_joules,
-            ServiceUnderTest::Fleet(f) => f.metrics()?.energy_joules,
-        };
-        let mut shard_hists = Vec::with_capacity(per_shard.len());
-        let mut served = 0u64;
-        let mut violations = 0u64;
-        for delays in &per_shard {
-            let mut h = LatencyHistogram::new();
-            for &d in delays {
-                h.record(d);
-                served += 1;
-                if d > slo_ticks {
-                    violations += 1;
+                let mut h = LatencyHistogram::new();
+                let mut served = 0u64;
+                let mut violations = 0u64;
+                for r in &s.engine().metrics.latency {
+                    h.record(r.queued_ticks);
+                    served += 1;
+                    if r.queued_ticks > slo_ticks {
+                        violations += 1;
+                    }
                 }
+                Ok(LatencyReportRaw {
+                    shard_hists: vec![h],
+                    served,
+                    violations,
+                    energy_joules: s.engine().metrics.energy_joules,
+                })
             }
-            shard_hists.push(h);
+            ServiceUnderTest::Fleet(f) => {
+                let per_shard = f.shard_latency_histograms(slo_ticks)?;
+                let energy_joules = f.metrics()?.energy_joules;
+                let mut shard_hists = Vec::with_capacity(per_shard.len());
+                let mut served = 0u64;
+                let mut violations = 0u64;
+                for (h, v) in per_shard {
+                    served += h.count();
+                    violations += v;
+                    shard_hists.push(h);
+                }
+                Ok(LatencyReportRaw { shard_hists, served, violations, energy_joules })
+            }
         }
-        Ok(LatencyReportRaw { shard_hists, served, violations, energy_joules })
     }
 }
 

@@ -1,12 +1,21 @@
 //! CRC-framed, length-prefixed binary framing for the write-ahead log.
 //!
 //! A persisted file is `magic (8 bytes) ‖ version (u32 LE) ‖ frames…`, and
-//! every frame is `len (u32 LE) ‖ crc32(payload) (u32 LE) ‖ payload`. The
-//! reader stops at the first incomplete or CRC-failing frame, so a crash
-//! that tears a write anywhere — header bytes, length prefix, mid-payload —
-//! degrades to "the log ends at the last fully committed frame". That is
-//! the whole crash-consistency story at this layer: a frame is either
-//! entirely in the log or not in it at all, and
+//! every frame is `len (u32 LE) ‖ chain-crc (u32 LE) ‖ payload`. The
+//! checksum is **chained**: frame `i` stores
+//! `crc32(crc_{i-1} (LE bytes) ‖ payload_i)` with `crc_{-1} =`
+//! [`CHAIN_SEED`], so each frame's checksum commits to the entire frame
+//! history before it. A per-frame CRC alone proves each frame is
+//! internally intact but cannot see a *splice* — a log whose tail was
+//! truncated and rewritten with different (individually well-formed)
+//! frames. With chaining, the first rewritten frame fails its chain check
+//! unless the writer knew the exact checksum of every frame before it.
+//!
+//! The reader stops at the first incomplete or chain-failing frame, so a
+//! crash that tears a write anywhere — header bytes, length prefix,
+//! mid-payload — degrades to "the log ends at the last fully committed
+//! frame". That is the whole crash-consistency story at this layer: a
+//! frame is either entirely in the log or not in it at all, and
 //! [`scan_frames`] is a pure function of the byte prefix, so truncating
 //! the file at *any* byte offset yields the same frames as truncating at
 //! the previous frame boundary (property-tested below and in
@@ -21,19 +30,25 @@ pub const LOG_MAGIC: &[u8; 8] = b"CAUSEWAL";
 pub const SNAP_MAGIC: &[u8; 8] = b"CAUSESNP";
 
 /// On-disk format version (bumped on incompatible layout changes).
-pub const FORMAT_VERSION: u32 = 1;
+/// Version 2 introduced checksum chaining; a v1 file fails `header_ok`
+/// and reads as empty rather than being mis-verified.
+pub const FORMAT_VERSION: u32 = 2;
 
 /// Bytes of `magic ‖ version` at the start of every persisted file.
 pub const HEADER_LEN: usize = 12;
+
+/// Chain value "before the first frame" — the seed every file's checksum
+/// chain starts from, and the value [`EventLog`](super::EventLog) resets
+/// to when it opens a fresh generation.
+pub const CHAIN_SEED: u32 = 0;
 
 /// Upper bound on a single frame's payload — corrupt length prefixes must
 /// not allocate unbounded memory.
 const MAX_FRAME_LEN: u32 = 256 * 1024 * 1024;
 
-/// CRC-32 (IEEE 802.3, reflected) over `bytes`.
-pub fn crc32(bytes: &[u8]) -> u32 {
+fn crc_table() -> &'static [u32; 256] {
     static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
-    let table = TABLE.get_or_init(|| {
+    TABLE.get_or_init(|| {
         let mut t = [0u32; 256];
         for (i, e) in t.iter_mut().enumerate() {
             let mut c = i as u32;
@@ -43,9 +58,26 @@ pub fn crc32(bytes: &[u8]) -> u32 {
             *e = c;
         }
         t
-    });
+    })
+}
+
+/// CRC-32 (IEEE 802.3, reflected) over `bytes`.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let table = crc_table();
     let mut c = !0u32;
     for &b in bytes {
+        c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+/// Chained frame checksum: CRC-32 over `prev (4 LE bytes) ‖ payload`.
+/// Folding the previous frame's checksum into this one makes every
+/// checksum a commitment to the whole log prefix.
+pub fn chain_crc(prev: u32, payload: &[u8]) -> u32 {
+    let table = crc_table();
+    let mut c = !0u32;
+    for &b in prev.to_le_bytes().iter().chain(payload.iter()) {
         c = table[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
     }
     !c
@@ -65,13 +97,17 @@ pub fn header_ok(file: &[u8], magic: &[u8; 8]) -> bool {
         && file[8..12] == FORMAT_VERSION.to_le_bytes()
 }
 
-/// Wrap a payload into one frame.
-pub fn encode_frame(payload: &[u8]) -> Vec<u8> {
+/// Wrap a payload into one frame, chained onto `prev` (the previous
+/// frame's checksum, or [`CHAIN_SEED`] at the start of a file). Returns
+/// the encoded frame and the new chain value to thread into the next
+/// frame.
+pub fn encode_frame(payload: &[u8], prev: u32) -> (Vec<u8>, u32) {
+    let crc = chain_crc(prev, payload);
     let mut out = Vec::with_capacity(8 + payload.len());
     out.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    out.extend_from_slice(&crc32(payload).to_le_bytes());
+    out.extend_from_slice(&crc.to_le_bytes());
     out.extend_from_slice(payload);
-    out
+    (out, crc)
 }
 
 fn read_u32(file: &[u8], at: usize) -> Option<u32> {
@@ -79,13 +115,16 @@ fn read_u32(file: &[u8], at: usize) -> Option<u32> {
     Some(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
 }
 
-/// Scan every complete frame of `file` (header included). Returns the
-/// frame payloads plus the byte length of the valid prefix (header +
-/// complete frames); anything beyond it is a torn tail to discard. A file
-/// whose header itself is torn or mismatched yields `(vec![], 0)`.
-pub fn scan_frames(file: &[u8], magic: &[u8; 8]) -> (Vec<Vec<u8>>, usize) {
+/// Scan every complete frame of `file` (header included), verifying the
+/// checksum chain. Returns the frame payloads, the byte length of the
+/// valid prefix (header + complete frames), and the chain value after the
+/// last valid frame (what the next appended frame must chain onto);
+/// anything beyond the valid prefix is a torn tail to discard. A file
+/// whose header itself is torn or mismatched yields `(vec![], 0, seed)`.
+pub fn scan_frames_chained(file: &[u8], magic: &[u8; 8]) -> (Vec<Vec<u8>>, usize, u32) {
+    let mut chain = CHAIN_SEED;
     if !header_ok(file, magic) {
-        return (Vec::new(), 0);
+        return (Vec::new(), 0, chain);
     }
     let mut frames = Vec::new();
     let mut pos = HEADER_LEN;
@@ -97,22 +136,31 @@ pub fn scan_frames(file: &[u8], magic: &[u8; 8]) -> (Vec<Vec<u8>>, usize) {
         let Some(crc) = read_u32(file, pos + 4) else { break };
         let end = pos + 8 + len as usize;
         let Some(payload) = file.get(pos + 8..end) else { break };
-        if crc32(payload) != crc {
+        if chain_crc(chain, payload) != crc {
             break;
         }
+        chain = crc;
         frames.push(payload.to_vec());
         pos = end;
     }
-    (frames, pos)
+    (frames, pos, chain)
 }
 
-/// End offsets (within `file`) of every complete frame — the legal crash
-/// points the kill-point harness enumerates.
+/// [`scan_frames_chained`] without the final chain value, for callers
+/// that only replay.
+pub fn scan_frames(file: &[u8], magic: &[u8; 8]) -> (Vec<Vec<u8>>, usize) {
+    let (frames, valid, _) = scan_frames_chained(file, magic);
+    (frames, valid)
+}
+
+/// End offsets (within `file`) of every complete chain-valid frame — the
+/// legal crash points the kill-point harness enumerates.
 pub fn frame_bounds(file: &[u8], magic: &[u8; 8]) -> Vec<usize> {
     if !header_ok(file, magic) {
         return Vec::new();
     }
     let mut bounds = Vec::new();
+    let mut chain = CHAIN_SEED;
     let mut pos = HEADER_LEN;
     while let (Some(len), Some(crc)) = (read_u32(file, pos), read_u32(file, pos + 4)) {
         if len > MAX_FRAME_LEN {
@@ -120,7 +168,8 @@ pub fn frame_bounds(file: &[u8], magic: &[u8; 8]) -> Vec<usize> {
         }
         let end = pos + 8 + len as usize;
         match file.get(pos + 8..end) {
-            Some(payload) if crc32(payload) == crc => {
+            Some(payload) if chain_crc(chain, payload) == crc => {
+                chain = crc;
                 bounds.push(end);
                 pos = end;
             }
@@ -136,25 +185,41 @@ mod tests {
     use crate::prng::Rng;
     use crate::testkit::forall;
 
+    /// Build a well-formed file: header + chained frames.
+    fn frame_file(magic: &[u8; 8], payloads: &[Vec<u8>]) -> Vec<u8> {
+        let mut file = header(magic);
+        let mut chain = CHAIN_SEED;
+        for p in payloads {
+            let (bytes, next) = encode_frame(p, chain);
+            file.extend_from_slice(&bytes);
+            chain = next;
+        }
+        file
+    }
+
     #[test]
     fn crc32_matches_known_vectors() {
         // Standard IEEE test vectors.
         assert_eq!(crc32(b""), 0);
         assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
         assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"), 0x414f_a339);
+        // chain_crc is crc32 over the concatenation — pin it to crc32.
+        let mut cat = 7u32.to_le_bytes().to_vec();
+        cat.extend_from_slice(b"payload");
+        assert_eq!(chain_crc(7, b"payload"), crc32(&cat));
     }
 
     #[test]
     fn frames_roundtrip() {
-        let mut file = header(LOG_MAGIC);
         let payloads: Vec<Vec<u8>> =
             vec![vec![], vec![7], vec![1, 2, 3], (0..=255u8).collect()];
-        for p in &payloads {
-            file.extend_from_slice(&encode_frame(p));
-        }
-        let (frames, valid) = scan_frames(&file, LOG_MAGIC);
+        let file = frame_file(LOG_MAGIC, &payloads);
+        let (frames, valid, chain) = scan_frames_chained(&file, LOG_MAGIC);
         assert_eq!(frames, payloads);
         assert_eq!(valid, file.len());
+        // The returned chain is the last frame's stored checksum.
+        let last_at = frame_bounds(&file, LOG_MAGIC)[payloads.len() - 2];
+        assert_eq!(chain, read_u32(&file, last_at + 4).unwrap());
         assert_eq!(frame_bounds(&file, LOG_MAGIC).len(), payloads.len());
         assert_eq!(*frame_bounds(&file, LOG_MAGIC).last().unwrap(), file.len());
     }
@@ -171,10 +236,9 @@ mod tests {
 
     #[test]
     fn corrupt_byte_drops_tail_not_prefix() {
-        let mut file = header(LOG_MAGIC);
-        file.extend_from_slice(&encode_frame(b"first"));
-        let second_at = file.len();
-        file.extend_from_slice(&encode_frame(b"second"));
+        let first = frame_file(LOG_MAGIC, &[b"first".to_vec()]);
+        let second_at = first.len();
+        let file = frame_file(LOG_MAGIC, &[b"first".to_vec(), b"second".to_vec()]);
         // Flip a payload byte of the second frame: frame 1 survives.
         let mut torn = file.clone();
         torn[second_at + 9] ^= 0xff;
@@ -185,14 +249,42 @@ mod tests {
 
     #[test]
     fn insane_length_prefix_is_torn_tail() {
-        let mut file = header(LOG_MAGIC);
-        file.extend_from_slice(&encode_frame(b"ok"));
+        let mut file = frame_file(LOG_MAGIC, &[b"ok".to_vec()]);
         let cut = file.len();
         file.extend_from_slice(&u32::MAX.to_le_bytes()); // absurd length
         file.extend_from_slice(&[0; 32]);
         let (frames, valid) = scan_frames(&file, LOG_MAGIC);
         assert_eq!(frames.len(), 1);
         assert_eq!(valid, cut);
+    }
+
+    /// The attack a per-frame CRC cannot see: truncate the log at a
+    /// boundary and rewrite the tail with different, individually
+    /// well-formed frames. The chain makes the first spliced frame fail
+    /// verification unless it chains onto the true predecessor.
+    #[test]
+    fn spliced_tail_is_detected_by_the_chain() {
+        let payloads: Vec<Vec<u8>> =
+            vec![b"alpha".to_vec(), b"beta".to_vec(), b"gamma".to_vec()];
+        let file = frame_file(LOG_MAGIC, &payloads);
+        let bounds = frame_bounds(&file, LOG_MAGIC);
+        // Truncate after frame 1, splice in a frame a chain-unaware
+        // writer would produce (chained onto the seed, as if the file
+        // were fresh). Its own CRC is internally consistent.
+        let mut spliced = file[..bounds[0]].to_vec();
+        let (forged, _) = encode_frame(b"forged", CHAIN_SEED);
+        spliced.extend_from_slice(&forged);
+        let (frames, valid) = scan_frames(&spliced, LOG_MAGIC);
+        assert_eq!(frames, vec![b"alpha".to_vec()], "splice must not replay");
+        assert_eq!(valid, bounds[0]);
+        // A chain-aware rewrite of the same payload IS accepted — the
+        // chain gates on history knowledge, not on the payload bytes.
+        let true_chain = scan_frames_chained(&file[..bounds[0]], LOG_MAGIC).2;
+        let mut honest = file[..bounds[0]].to_vec();
+        let (ok_frame, _) = encode_frame(b"forged", true_chain);
+        honest.extend_from_slice(&ok_frame);
+        let (frames, _) = scan_frames(&honest, LOG_MAGIC);
+        assert_eq!(frames, vec![b"alpha".to_vec(), b"forged".to_vec()]);
     }
 
     /// The framing invariant the whole durability design rests on:
@@ -214,11 +306,11 @@ mod tests {
                     .collect::<Vec<_>>()
             },
             |payloads| {
-                let mut file = header(LOG_MAGIC);
+                let file = frame_file(LOG_MAGIC, payloads);
                 let mut bounds = vec![HEADER_LEN];
-                for p in payloads {
-                    file.extend_from_slice(&encode_frame(p));
-                    bounds.push(file.len());
+                bounds.extend(frame_bounds(&file, LOG_MAGIC));
+                if bounds.len() != payloads.len() + 1 {
+                    return Err("full file must scan completely".into());
                 }
                 for cut in 0..=file.len() {
                     let (frames, valid) = scan_frames(&file[..cut], LOG_MAGIC);

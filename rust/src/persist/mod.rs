@@ -36,6 +36,7 @@ pub mod event;
 pub mod frame;
 pub mod log;
 pub mod recovery;
+pub mod ship;
 pub mod snapshot;
 
 use std::collections::BTreeMap;
@@ -46,6 +47,7 @@ use std::sync::{Arc, Mutex};
 pub use event::Event;
 pub use log::{EventLog, Manifest};
 pub use recovery::RecoveryReport;
+pub use ship::{Replica, ReplicaStore, ShipReceipt, ShipTransport, Shipment, Shipper};
 pub use snapshot::StateImage;
 
 /// How much the service persists.
@@ -94,6 +96,47 @@ impl DurabilityMode {
     }
 }
 
+/// When the event log issues an fsync barrier. Orthogonal to
+/// [`DurabilityMode`]: the mode decides *what* is logged, the policy
+/// decides when logged bytes are forced to stable storage. The default
+/// keeps the flush-only behavior (and byte-for-byte file contents) of the
+/// pre-fsync durability layer.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum FsyncPolicy {
+    /// Flush-only appends; survives a process crash but not power loss.
+    #[default]
+    Never,
+    /// One fsync per appended event — maximal durability, one barrier per
+    /// transition.
+    Always,
+    /// Group commit: events accumulate unsynced and one fsync seals them
+    /// at each commit scope — a batched window, a round ingest, a drain.
+    /// The SLO-aware planner's deadline slack is exactly the fsync
+    /// batching slack, so durability cost amortizes across the window.
+    GroupCommit,
+}
+
+impl FsyncPolicy {
+    pub fn by_name(name: &str) -> Option<FsyncPolicy> {
+        match name.trim().to_ascii_lowercase().as_str() {
+            "never" | "off" | "none" => Some(FsyncPolicy::Never),
+            "always" | "each" | "every" | "fsync" => Some(FsyncPolicy::Always),
+            "group" | "group_commit" | "group-commit" | "window" => {
+                Some(FsyncPolicy::GroupCommit)
+            }
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FsyncPolicy::Never => "never",
+            FsyncPolicy::Always => "always",
+            FsyncPolicy::GroupCommit => "group_commit",
+        }
+    }
+}
+
 /// The flat filesystem surface the persist layer needs. `write` must
 /// replace atomically (tmp + rename on disk), because the manifest commit
 /// rides on it; `append` may tear at any byte — frames absorb that.
@@ -102,6 +145,16 @@ pub trait PersistFs: Send {
     fn write(&mut self, name: &str, bytes: &[u8]) -> io::Result<()>;
     fn append(&mut self, name: &str, bytes: &[u8]) -> io::Result<()>;
     fn remove(&mut self, name: &str);
+
+    /// Force a file's bytes to stable storage (fsync barrier). Appended
+    /// bytes before a successful `sync` may be lost to power failure;
+    /// bytes covered by one may not. Volatile backends (in-memory test
+    /// filesystems) are their own stable storage, so the default is a
+    /// no-op; a missing file syncs trivially.
+    fn sync(&mut self, name: &str) -> io::Result<()> {
+        let _ = name;
+        Ok(())
+    }
 }
 
 /// In-memory [`PersistFs`] backed by a shared map: clones see the same
@@ -212,6 +265,15 @@ impl PersistFs for DiskFs {
     fn remove(&mut self, name: &str) {
         let _ = std::fs::remove_file(self.path(name));
     }
+
+    fn sync(&mut self, name: &str) -> io::Result<()> {
+        match std::fs::File::open(self.path(name)) {
+            Ok(f) => f.sync_data(),
+            // A file that was never created has nothing to lose.
+            Err(e) if e.kind() == io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(e),
+        }
+    }
 }
 
 /// Everything [`UnlearningService::attach_durability`] needs: the mode,
@@ -224,6 +286,8 @@ pub struct Durability {
     /// Auto-compact after this many events accumulate in the log tail
     /// (0 = only on explicit `compact_now`).
     pub compact_every: u64,
+    /// When appended events are forced to stable storage.
+    pub fsync: FsyncPolicy,
 }
 
 impl Durability {
@@ -233,12 +297,23 @@ impl Durability {
         dir: impl AsRef<Path>,
         compact_every: u64,
     ) -> io::Result<Durability> {
-        Ok(Durability { mode, fs: Box::new(DiskFs::new(dir)?), compact_every })
+        Ok(Durability {
+            mode,
+            fs: Box::new(DiskFs::new(dir)?),
+            compact_every,
+            fsync: FsyncPolicy::Never,
+        })
     }
 
     /// Memory-backed durability (tests, benches).
     pub fn mem(mode: DurabilityMode, fs: MemFs, compact_every: u64) -> Durability {
-        Durability { mode, fs: Box::new(fs), compact_every }
+        Durability { mode, fs: Box::new(fs), compact_every, fsync: FsyncPolicy::Never }
+    }
+
+    /// Set the fsync barrier policy (builder style).
+    pub fn with_fsync(mut self, fsync: FsyncPolicy) -> Durability {
+        self.fsync = fsync;
+        self
     }
 }
 
@@ -257,6 +332,20 @@ mod tests {
         assert!(DurabilityMode::LogSpill.spills());
         assert!(!DurabilityMode::Log.spills());
         assert_eq!(DurabilityMode::default(), DurabilityMode::Off);
+    }
+
+    #[test]
+    fn fsync_policy_names_roundtrip() {
+        for p in [FsyncPolicy::Never, FsyncPolicy::Always, FsyncPolicy::GroupCommit] {
+            assert_eq!(FsyncPolicy::by_name(p.name()), Some(p));
+        }
+        assert_eq!(FsyncPolicy::by_name("window"), Some(FsyncPolicy::GroupCommit));
+        assert_eq!(FsyncPolicy::by_name("fsync"), Some(FsyncPolicy::Always));
+        assert!(FsyncPolicy::by_name("sometimes").is_none());
+        assert_eq!(FsyncPolicy::default(), FsyncPolicy::Never);
+        let d = Durability::mem(DurabilityMode::Log, MemFs::new(), 0)
+            .with_fsync(FsyncPolicy::GroupCommit);
+        assert_eq!(d.fsync, FsyncPolicy::GroupCommit);
     }
 
     #[test]

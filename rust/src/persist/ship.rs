@@ -1,0 +1,433 @@
+//! Cross-shard log shipping: stream a shard's sealed WAL frames to a
+//! peer so its acknowledged unlearning obligations survive *device
+//! loss*, not just a reboot.
+//!
+//! The source side is a [`Shipper`] owned by the shard's journal: every
+//! appended event payload is staged, and at each group-commit seal the
+//! staged frames are flushed through a [`ShipTransport`] as one
+//! [`Shipment`]. The receive side is a [`ReplicaStore`] — an in-process
+//! stand-in for the peer device's disk — holding one [`Replica`] per
+//! source shard: the latest shipped snapshot plus the contiguous event
+//! frames after it. [`materialize_replica`] turns a replica back into a
+//! filesystem image the ordinary recovery path
+//! ([`EventLog::open`](super::EventLog) → replay) can consume, which is
+//! exactly how fleet failover rebuilds a dead shard on its peer.
+//!
+//! Transport faults are expected, not exceptional: `deliver` may fail
+//! (dropped), arrive twice (duplicated), or arrive stale after newer
+//! shipments (reordered). The shipper retries with bounded exponential
+//! backoff measured in *flush opportunities* (deterministic — no wall
+//! clock), and the replica's sequence-contiguous apply absorbs
+//! duplicates and stale arrivals; a gap simply leaves the watermark
+//! where it was and the next flush re-ships everything unacked.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::persist::frame::{encode_frame, header, CHAIN_SEED, LOG_MAGIC, SNAP_MAGIC};
+use crate::persist::log::MANIFEST;
+use crate::persist::{Manifest, MemFs};
+
+/// One delivery unit: a contiguous run of event frames, optionally
+/// preceded by a re-base (snapshot) from a compaction or initial sync.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Shipment {
+    /// Sequence number of `frames[0]` (meaningless when `frames` is
+    /// empty).
+    pub first_seq: u64,
+    /// Event payloads, sequence-contiguous from `first_seq`.
+    pub frames: Vec<Vec<u8>>,
+    /// Present when the source compacted (or on the first shipment):
+    /// re-base the replica before applying `frames`.
+    pub reset: Option<ShipReset>,
+}
+
+/// Re-base a replica: `snapshot` materializes every event below
+/// `base_seq`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShipReset {
+    pub base_seq: u64,
+    pub snapshot: Option<Vec<u8>>,
+}
+
+/// Where shipments go. Implementations must return `Ok` only after the
+/// shipment actually reached the replica (at-least-once delivery);
+/// returning the receiver's watermark lets the source drop acked frames.
+/// An `Err` is a transient transport fault — the shipper retries.
+pub trait ShipTransport: Send {
+    /// Deliver one shipment from shard `source`; returns the replica's
+    /// post-apply watermark (next sequence number it is missing).
+    fn deliver(&mut self, source: usize, shipment: &Shipment) -> Result<u64, String>;
+}
+
+/// A peer-held copy of one shard's durable history: snapshot + the
+/// contiguous frames after it.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Replica {
+    /// Events below this are materialized in `snapshot`.
+    pub base_seq: u64,
+    pub snapshot: Option<Vec<u8>>,
+    /// Event payloads for sequences `base_seq..base_seq + frames.len()`.
+    pub frames: Vec<Vec<u8>>,
+}
+
+impl Replica {
+    /// Next sequence number this replica is missing; everything below it
+    /// survives loss of the source device.
+    pub fn watermark(&self) -> u64 {
+        self.base_seq + self.frames.len() as u64
+    }
+
+    /// Idempotent, sequence-contiguous apply: duplicates are skipped,
+    /// stale resets are ignored, and a gap stops the apply (the returned
+    /// watermark tells the source where to resume).
+    fn apply(&mut self, s: &Shipment) -> u64 {
+        if let Some(r) = &s.reset {
+            // Only a *forward* re-base is actionable; a duplicated or
+            // stale reset must not erase frames shipped since.
+            if r.base_seq > self.base_seq
+                || (r.base_seq == self.base_seq && r.snapshot.is_some())
+            {
+                let drop = (r.base_seq.saturating_sub(self.base_seq) as usize)
+                    .min(self.frames.len());
+                if r.base_seq > self.base_seq + drop as u64 {
+                    // Snapshot is ahead of everything we hold: adopt it
+                    // outright.
+                    self.frames.clear();
+                } else {
+                    self.frames.drain(..drop);
+                }
+                self.base_seq = r.base_seq;
+                self.snapshot = r.snapshot.clone();
+            }
+        }
+        for (i, payload) in s.frames.iter().enumerate() {
+            let seq = s.first_seq + i as u64;
+            if seq < self.watermark() {
+                continue; // duplicate
+            }
+            if seq > self.watermark() {
+                break; // gap — wait for a re-ship
+            }
+            self.frames.push(payload.clone());
+        }
+        self.watermark()
+    }
+}
+
+/// Shared in-process replica store — the "peer device disks" of a fleet.
+/// Cloning shares the underlying map, so the fleet front-end and every
+/// worker-held transport see the same replicas.
+#[derive(Clone, Default)]
+pub struct ReplicaStore {
+    inner: Arc<Mutex<BTreeMap<usize, Replica>>>,
+}
+
+impl ReplicaStore {
+    pub fn new() -> ReplicaStore {
+        ReplicaStore::default()
+    }
+
+    /// Point-in-time copy of shard `source`'s replica.
+    pub fn replica(&self, source: usize) -> Option<Replica> {
+        self.inner.lock().unwrap().get(&source).cloned()
+    }
+
+    /// The replica's watermark (0 if nothing was ever shipped).
+    pub fn watermark(&self, source: usize) -> u64 {
+        self.inner.lock().unwrap().get(&source).map_or(0, Replica::watermark)
+    }
+}
+
+impl ShipTransport for ReplicaStore {
+    fn deliver(&mut self, source: usize, shipment: &Shipment) -> Result<u64, String> {
+        Ok(self.inner.lock().unwrap().entry(source).or_default().apply(shipment))
+    }
+}
+
+/// Shipping state surfaced in receipts.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ShipReceipt {
+    /// Peer-acked watermark: every event below it survives source loss.
+    pub shipped_seq: u64,
+    /// Frames staged locally but not yet acknowledged.
+    pub pending: u64,
+    /// Deliveries attempted (successes and faults).
+    pub attempts: u64,
+    /// Terminal shipping error, once the retry budget is exhausted.
+    pub failed: Option<String>,
+}
+
+/// Source-side shipping state machine, owned by a shard's journal.
+pub struct Shipper {
+    transport: Box<dyn ShipTransport>,
+    source: usize,
+    /// Staged `(seq, payload)` frames the peer has not acknowledged.
+    pending: Vec<(u64, Vec<u8>)>,
+    pending_reset: Option<ShipReset>,
+    shipped_seq: u64,
+    attempts: u64,
+    fail_streak: u32,
+    /// Flush opportunities to skip before the next retry (exponential
+    /// backoff in attempt units — deterministic, no wall clock).
+    skip: u64,
+    retry_limit: u32,
+    failed: Option<String>,
+}
+
+impl Shipper {
+    /// `retry_limit` bounds *consecutive* delivery failures before
+    /// shipping records a terminal error.
+    pub fn new(source: usize, transport: Box<dyn ShipTransport>, retry_limit: u32) -> Shipper {
+        Shipper {
+            transport,
+            source,
+            pending: Vec::new(),
+            pending_reset: None,
+            shipped_seq: 0,
+            attempts: 0,
+            fail_streak: 0,
+            skip: 0,
+            retry_limit,
+            failed: None,
+        }
+    }
+
+    /// Initial sync: stage the journal's current generation — snapshot
+    /// (if any) plus the existing log tail starting at `base_seq`.
+    pub fn prime(&mut self, base_seq: u64, snapshot: Option<Vec<u8>>, frames: Vec<Vec<u8>>) {
+        self.pending_reset = Some(ShipReset { base_seq, snapshot });
+        self.pending =
+            frames.into_iter().enumerate().map(|(i, p)| (base_seq + i as u64, p)).collect();
+    }
+
+    /// Stage one appended event for the next flush.
+    pub fn stage(&mut self, seq: u64, payload: Vec<u8>) {
+        self.pending.push((seq, payload));
+    }
+
+    /// The source compacted: re-base the peer at `base_seq` and drop
+    /// staged frames the snapshot now materializes.
+    pub fn on_compact(&mut self, base_seq: u64, snapshot: Vec<u8>) {
+        self.pending_reset = Some(ShipReset { base_seq, snapshot: Some(snapshot) });
+        self.pending.retain(|(s, _)| *s >= base_seq);
+    }
+
+    /// Attempt one delivery of everything staged. Returns `true` when
+    /// the peer has acknowledged every staged frame. Honors the backoff
+    /// schedule: after a fault, the next `2^(streak-1)` flush calls are
+    /// skipped; after `retry_limit` consecutive faults shipping fails
+    /// terminally (the journal itself is unaffected).
+    pub fn flush(&mut self) -> bool {
+        if self.failed.is_some() {
+            return false;
+        }
+        if self.pending.is_empty() && self.pending_reset.is_none() {
+            return true;
+        }
+        if self.skip > 0 {
+            self.skip -= 1;
+            return false;
+        }
+        let first_seq = self.pending.first().map_or(self.shipped_seq, |(s, _)| *s);
+        let shipment = Shipment {
+            first_seq,
+            frames: self.pending.iter().map(|(_, p)| p.clone()).collect(),
+            reset: self.pending_reset.clone(),
+        };
+        self.attempts += 1;
+        match self.transport.deliver(self.source, &shipment) {
+            Ok(watermark) => {
+                self.fail_streak = 0;
+                self.pending_reset = None;
+                self.shipped_seq = self.shipped_seq.max(watermark);
+                self.pending.retain(|(s, _)| *s >= watermark);
+                self.pending.is_empty()
+            }
+            Err(e) => {
+                self.fail_streak += 1;
+                if self.fail_streak > self.retry_limit {
+                    self.failed =
+                        Some(format!("shipping gave up after {} faults: {e}", self.fail_streak));
+                } else {
+                    self.skip = 1u64 << (self.fail_streak - 1).min(16);
+                }
+                false
+            }
+        }
+    }
+
+    /// Everything staged has been acknowledged (and shipping is healthy).
+    pub fn is_drained(&self) -> bool {
+        self.failed.is_none() && self.pending.is_empty() && self.pending_reset.is_none()
+    }
+
+    pub fn receipt(&self) -> ShipReceipt {
+        ShipReceipt {
+            shipped_seq: self.shipped_seq,
+            pending: self.pending.len() as u64,
+            attempts: self.attempts,
+            failed: self.failed.clone(),
+        }
+    }
+}
+
+/// Turn a shipped replica back into a filesystem image the standard
+/// recovery path reads: `MANIFEST.json` + `snapshot-<base>.bin` +
+/// `wal-<base>.log` with the frames re-framed on a fresh checksum chain.
+/// This is the failover path — the peer "disk" becomes the replacement
+/// shard's journal.
+pub fn materialize_replica(r: &Replica) -> MemFs {
+    let fs = MemFs::new();
+    let log_name = format!("wal-{}.log", r.base_seq);
+    let mut log = header(LOG_MAGIC);
+    let mut chain = CHAIN_SEED;
+    for p in &r.frames {
+        let (bytes, next) = encode_frame(p, chain);
+        log.extend_from_slice(&bytes);
+        chain = next;
+    }
+    fs.put(&log_name, log);
+    let snapshot = r.snapshot.as_ref().map(|payload| {
+        let name = format!("snapshot-{}.bin", r.base_seq);
+        let mut snap = header(SNAP_MAGIC);
+        snap.extend_from_slice(&encode_frame(payload, CHAIN_SEED).0);
+        fs.put(&name, snap);
+        name
+    });
+    let m = Manifest { version: 1, next_seq: r.base_seq, snapshot, log: log_name };
+    fs.put(MANIFEST, (m.to_json().to_pretty() + "\n").into_bytes());
+    fs
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::persist::EventLog;
+
+    fn ship(first_seq: u64, frames: &[&[u8]], reset: Option<ShipReset>) -> Shipment {
+        Shipment {
+            first_seq,
+            frames: frames.iter().map(|f| f.to_vec()).collect(),
+            reset,
+        }
+    }
+
+    #[test]
+    fn replica_apply_is_idempotent_and_gap_safe() {
+        let mut r = Replica::default();
+        assert_eq!(r.apply(&ship(0, &[b"e0", b"e1"], None)), 2);
+        // Duplicate delivery: skipped, watermark unchanged.
+        assert_eq!(r.apply(&ship(0, &[b"e0", b"e1"], None)), 2);
+        // Overlapping delivery: only the new frame lands.
+        assert_eq!(r.apply(&ship(1, &[b"e1", b"e2"], None)), 3);
+        // Gap: nothing applied, watermark tells the source to re-ship.
+        assert_eq!(r.apply(&ship(5, &[b"e5"], None)), 3);
+        assert_eq!(r.frames.len(), 3);
+        // Stale reset (base 0, no snapshot) must not erase progress.
+        assert_eq!(r.apply(&ship(0, &[], Some(ShipReset { base_seq: 0, snapshot: None }))), 3);
+        assert_eq!(r.frames.len(), 3);
+        // Forward reset from a compaction: snapshot absorbs a prefix.
+        let w = r.apply(&ship(
+            3,
+            &[b"e3"],
+            Some(ShipReset { base_seq: 2, snapshot: Some(b"SNAP".to_vec()) }),
+        ));
+        assert_eq!(w, 4);
+        assert_eq!(r.base_seq, 2);
+        assert_eq!(r.snapshot.as_deref(), Some(b"SNAP".as_slice()));
+        assert_eq!(r.frames, vec![b"e2".to_vec(), b"e3".to_vec()]);
+        // Reset ahead of everything held: adopt outright.
+        let w = r.apply(&ship(
+            9,
+            &[],
+            Some(ShipReset { base_seq: 9, snapshot: Some(b"S9".to_vec()) }),
+        ));
+        assert_eq!(w, 9);
+        assert!(r.frames.is_empty());
+    }
+
+    /// Transport that fails on scripted attempt numbers (1-based).
+    struct Flaky {
+        store: ReplicaStore,
+        calls: u64,
+        fail_on: Vec<u64>,
+    }
+
+    impl ShipTransport for Flaky {
+        fn deliver(&mut self, source: usize, s: &Shipment) -> Result<u64, String> {
+            self.calls += 1;
+            if self.fail_on.contains(&self.calls) {
+                return Err(format!("injected fault on call {}", self.calls));
+            }
+            self.store.deliver(source, s)
+        }
+    }
+
+    #[test]
+    fn shipper_retries_with_exponential_backoff_and_converges() {
+        let store = ReplicaStore::new();
+        let flaky = Flaky { store: store.clone(), calls: 0, fail_on: vec![1, 2] };
+        let mut sh = Shipper::new(0, Box::new(flaky), 5);
+        sh.prime(0, None, vec![]);
+        sh.stage(0, b"e0".to_vec());
+        sh.stage(1, b"e1".to_vec());
+        // Attempt 1 fails -> backoff skips 1 flush opportunity.
+        assert!(!sh.flush());
+        assert!(!sh.flush(), "backoff skip, no delivery attempt");
+        // Attempt 2 fails -> skip 2.
+        assert!(!sh.flush());
+        assert!(!sh.flush());
+        assert!(!sh.flush());
+        // Attempt 3 succeeds and drains everything staged.
+        assert!(sh.flush());
+        assert!(sh.is_drained());
+        let rec = sh.receipt();
+        assert_eq!(rec.shipped_seq, 2);
+        assert_eq!(rec.pending, 0);
+        assert_eq!(rec.attempts, 3);
+        assert!(rec.failed.is_none());
+        assert_eq!(store.watermark(0), 2);
+    }
+
+    #[test]
+    fn shipper_gives_up_after_retry_limit_without_poisoning() {
+        let store = ReplicaStore::new();
+        let flaky = Flaky { store: store.clone(), calls: 0, fail_on: (1..=100).collect() };
+        let mut sh = Shipper::new(3, Box::new(flaky), 2);
+        sh.stage(0, b"e0".to_vec());
+        for _ in 0..64 {
+            sh.flush();
+        }
+        let rec = sh.receipt();
+        assert!(rec.failed.is_some(), "retry budget must exhaust");
+        assert_eq!(rec.attempts, 3, "limit of 2 retries = 3 total attempts");
+        assert!(!sh.is_drained());
+        assert_eq!(store.watermark(3), 0);
+    }
+
+    #[test]
+    fn materialized_replica_reopens_through_the_standard_recovery_path() {
+        // Ship a snapshot + two tail frames, then recover the replica as
+        // a filesystem and open it with the ordinary EventLog.
+        let store = ReplicaStore::new();
+        let mut sh = Shipper::new(1, Box::new(store.clone()), 3);
+        sh.prime(0, None, vec![]);
+        sh.stage(0, b"a".to_vec());
+        sh.stage(1, b"b".to_vec());
+        assert!(sh.flush());
+        sh.on_compact(2, b"SNAP@2".to_vec());
+        sh.stage(2, b"c".to_vec());
+        sh.stage(3, b"d".to_vec());
+        assert!(sh.flush());
+
+        let replica = store.replica(1).expect("replica exists");
+        assert_eq!(replica.watermark(), 4);
+        let fs = materialize_replica(&replica);
+        let opened = EventLog::open(Box::new(fs)).expect("open materialized replica");
+        assert_eq!(opened.snapshot.as_deref(), Some(b"SNAP@2".as_slice()));
+        assert_eq!(opened.frames, vec![b"c".to_vec(), b"d".to_vec()]);
+        assert_eq!(opened.log.next_seq(), 4);
+        assert_eq!(opened.torn_bytes, 0);
+    }
+}

@@ -8,9 +8,10 @@
 //! with the failing seed + a Debug dump so the case is reproducible with
 //! `forall(seed, ..)`.
 
+use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use crate::persist::{MemFs, PersistFs};
+use crate::persist::{MemFs, PersistFs, ShipTransport, Shipment};
 use crate::prng::Rng;
 
 /// A [`PersistFs`] that simulates power loss after a byte budget: once the
@@ -27,12 +28,65 @@ pub struct FailpointFs {
     /// Remaining write bytes before the simulated power loss; `None` = no
     /// failpoint armed (writes unrestricted).
     budget: Arc<Mutex<Option<u64>>>,
+    fsync: Arc<Mutex<FsyncState>>,
+}
+
+/// Fsync-barrier failure model: a volatile write cache (appends are lost
+/// on power failure unless covered by a `sync`) plus injectable sync
+/// faults.
+#[derive(Default)]
+struct FsyncState {
+    /// When set, appended bytes sit in a volatile cache until `sync`;
+    /// [`FailpointFs::crash_lose_unsynced`] discards everything past the
+    /// last synced length. Atomic `write`s (tmp + rename) are modeled as
+    /// immediately durable, matching the manifest-commit assumption.
+    volatile: bool,
+    synced_len: BTreeMap<String, u64>,
+    /// This many upcoming `sync` calls fail with an injected I/O error.
+    fail_syncs: u32,
 }
 
 impl FailpointFs {
     /// Wrap `inner` with no failpoint armed.
     pub fn new(inner: MemFs) -> FailpointFs {
-        FailpointFs { inner, budget: Arc::new(Mutex::new(None)) }
+        FailpointFs {
+            inner,
+            budget: Arc::new(Mutex::new(None)),
+            fsync: Arc::new(Mutex::new(FsyncState::default())),
+        }
+    }
+
+    /// Switch on the volatile write cache. Files existing now are taken
+    /// as fully durable; from here on, appended bytes only survive
+    /// [`Self::crash_lose_unsynced`] once a `sync` covers them.
+    pub fn enable_volatile(&self) {
+        let mut st = self.fsync.lock().unwrap();
+        st.volatile = true;
+        st.synced_len = self.inner.sizes().into_iter().collect();
+    }
+
+    /// Inject failures into the next `n` `sync` calls.
+    pub fn fail_next_syncs(&self, n: u32) {
+        self.fsync.lock().unwrap().fail_syncs = n;
+    }
+
+    /// Simulate power loss with the volatile cache unflushed: every file
+    /// is truncated to its last synced length; files never synced (and
+    /// never atomically written) vanish entirely.
+    pub fn crash_lose_unsynced(&self) {
+        let st = self.fsync.lock().unwrap();
+        let mut disk = self.inner.clone();
+        for (name, len) in self.inner.sizes() {
+            match st.synced_len.get(&name) {
+                Some(&synced) if synced < len => {
+                    let mut bytes = self.inner.file(&name).unwrap_or_default();
+                    bytes.truncate(synced as usize);
+                    self.inner.put(&name, bytes);
+                }
+                Some(_) => {}
+                None => disk.remove(&name),
+            }
+        }
     }
 
     /// Arm (or disarm with `None`) the byte budget. Clones share it.
@@ -75,7 +129,13 @@ impl PersistFs for FailpointFs {
         if granted < bytes.len() as u64 {
             return Ok(()); // power died before the rename committed
         }
-        self.inner.write(name, bytes)
+        self.inner.write(name, bytes)?;
+        let mut st = self.fsync.lock().unwrap();
+        if st.volatile {
+            // tmp + rename is modeled as durable at commit.
+            st.synced_len.insert(name.to_string(), bytes.len() as u64);
+        }
+        Ok(())
     }
 
     fn append(&mut self, name: &str, bytes: &[u8]) -> std::io::Result<()> {
@@ -89,7 +149,70 @@ impl PersistFs for FailpointFs {
     fn remove(&mut self, name: &str) {
         if self.consume(1) == 1 {
             self.inner.remove(name);
+            self.fsync.lock().unwrap().synced_len.remove(name);
         }
+    }
+
+    /// Fsync barrier: consumes no byte budget (barriers move no data).
+    /// Subject to injected failures; on success, marks the file's current
+    /// length as surviving [`FailpointFs::crash_lose_unsynced`].
+    fn sync(&mut self, name: &str) -> std::io::Result<()> {
+        let mut st = self.fsync.lock().unwrap();
+        if st.fail_syncs > 0 {
+            st.fail_syncs -= 1;
+            return Err(std::io::Error::other("injected fsync failure"));
+        }
+        if st.volatile {
+            let len = self.inner.file(name).map_or(0, |b| b.len() as u64);
+            st.synced_len.insert(name.to_string(), len);
+        }
+        Ok(())
+    }
+}
+
+/// A [`ShipTransport`] that injects the classic network faults — drops,
+/// duplicates, and stale (reordered) re-deliveries — deterministically
+/// from a seed. Wraps a real transport: `Err` returns mean the shipment
+/// never arrived; `Ok` means it arrived at least once, possibly twice,
+/// and possibly with an *older* shipment replayed just before it.
+pub struct FailpointTransport {
+    inner: Box<dyn ShipTransport>,
+    rng: Rng,
+    drop_p: f64,
+    dup_p: f64,
+    stale_p: f64,
+    held: Option<(usize, Shipment)>,
+}
+
+impl FailpointTransport {
+    pub fn new(
+        inner: Box<dyn ShipTransport>,
+        seed: u64,
+        drop_p: f64,
+        dup_p: f64,
+        stale_p: f64,
+    ) -> FailpointTransport {
+        FailpointTransport { inner, rng: Rng::new(seed), drop_p, dup_p, stale_p, held: None }
+    }
+}
+
+impl ShipTransport for FailpointTransport {
+    fn deliver(&mut self, source: usize, shipment: &Shipment) -> Result<u64, String> {
+        if self.rng.chance(self.drop_p) {
+            return Err("injected transport drop".to_string());
+        }
+        if let Some((src, stale)) = self.held.take() {
+            // An old shipment finally arrives, out of order.
+            self.inner.deliver(src, &stale)?;
+        }
+        let watermark = self.inner.deliver(source, shipment)?;
+        if self.rng.chance(self.dup_p) {
+            self.inner.deliver(source, shipment)?;
+        }
+        if self.rng.chance(self.stale_p) {
+            self.held = Some((source, shipment.clone()));
+        }
+        Ok(watermark)
     }
 }
 
@@ -178,6 +301,66 @@ mod tests {
         assert!(mem.file("m.json").is_none());
         assert!(fp.read("w.log").is_some());
         assert!(fp.inner().file("w.log").is_some());
+    }
+
+    #[test]
+    fn volatile_cache_loses_unsynced_appends_and_sync_can_fail() {
+        let mem = MemFs::new();
+        let mut fp = FailpointFs::new(mem.clone());
+        fp.append("pre.log", b"durable").unwrap();
+        fp.enable_volatile();
+
+        fp.append("pre.log", b"+cached").unwrap();
+        fp.append("new.log", b"never-synced").unwrap();
+        fp.write("m.json", b"{}").unwrap(); // atomic replace = durable
+        fp.append("synced.log", b"ab").unwrap();
+        fp.sync("synced.log").unwrap();
+        fp.append("synced.log", b"cd").unwrap();
+
+        // Injected sync failure leaves the cache dirty.
+        fp.fail_next_syncs(1);
+        assert!(fp.sync("synced.log").is_err());
+
+        fp.crash_lose_unsynced();
+        assert_eq!(mem.file("pre.log").unwrap(), b"durable");
+        assert!(mem.file("new.log").is_none(), "never synced, never written");
+        assert_eq!(mem.file("m.json").unwrap(), b"{}");
+        assert_eq!(mem.file("synced.log").unwrap(), b"ab");
+
+        // After the injected failure drains, sync works again.
+        fp.append("synced.log", b"ef").unwrap();
+        fp.sync("synced.log").unwrap();
+        fp.crash_lose_unsynced();
+        assert_eq!(mem.file("synced.log").unwrap(), b"abef");
+    }
+
+    #[test]
+    fn failpoint_transport_faults_never_lose_acked_frames() {
+        use crate::persist::{ReplicaStore, Shipper};
+        // Heavy fault rates; the shipper's retry + the replica's
+        // idempotent apply must still converge to a complete copy.
+        let store = ReplicaStore::new();
+        let faulty =
+            FailpointTransport::new(Box::new(store.clone()), 0xF417, 0.4, 0.3, 0.3);
+        let mut sh = Shipper::new(0, Box::new(faulty), 32);
+        sh.prime(0, None, vec![]);
+        for seq in 0..40u64 {
+            sh.stage(seq, format!("event-{seq}").into_bytes());
+            sh.flush();
+        }
+        let mut spins = 0;
+        while !sh.is_drained() {
+            sh.flush();
+            spins += 1;
+            assert!(spins < 10_000, "shipping must converge: {:?}", sh.receipt());
+        }
+        assert!(sh.receipt().failed.is_none());
+        assert_eq!(store.watermark(0), 40);
+        let replica = store.replica(0).unwrap();
+        assert_eq!(replica.frames.len(), 40);
+        for (i, f) in replica.frames.iter().enumerate() {
+            assert_eq!(f, format!("event-{i}").as_bytes(), "frame {i} intact and in order");
+        }
     }
 
     #[test]

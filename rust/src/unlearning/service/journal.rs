@@ -9,7 +9,7 @@ use crate::metrics::{LatencyReceipt, RunMetrics};
 use crate::persist::event::{BatteryPost, Event, LatencyRecord, MetricsPost};
 use crate::persist::recovery::{self, RecoveryReport};
 use crate::persist::snapshot::{BatteryImage, MetricsImage, StateImage};
-use crate::persist::{Durability, DurabilityMode};
+use crate::persist::{Durability, DurabilityMode, ShipReceipt, ShipTransport, Shipper};
 use crate::sim::Battery;
 
 use super::{
@@ -29,11 +29,17 @@ impl UnlearningService {
         if d.mode == DurabilityMode::Off {
             return Ok(RecoveryReport::default());
         }
-        let (log, report) = recovery::recover(self, d.fs)
+        let (mut log, report) = recovery::recover(self, d.fs)
             .map_err(|e| anyhow::anyhow!("durability recovery: {e}"))?;
+        log.set_fsync(d.fsync);
         self.engine.set_taping(true);
-        self.journal =
-            Some(Journal { log, mode: d.mode, compact_every: d.compact_every, err: None });
+        self.journal = Some(Journal {
+            log,
+            mode: d.mode,
+            compact_every: d.compact_every,
+            shipper: None,
+            err: None,
+        });
         Ok(report)
     }
 
@@ -70,11 +76,91 @@ impl UnlearningService {
         let image = self.capture_image();
         let bytes = image.encode(j.mode.spills());
         let res = j.log.compact(&bytes);
-        if let Err(e) = &res {
-            j.err = Some(format!("compaction: {e}"));
+        match &res {
+            Err(e) => j.err = Some(format!("compaction: {e}")),
+            Ok(()) => {
+                // Re-base the peer replica at the new generation: the
+                // snapshot materializes everything below next_seq.
+                let base = j.log.manifest().next_seq;
+                if let Some(sh) = j.shipper.as_mut() {
+                    sh.on_compact(base, bytes);
+                }
+            }
         }
         self.journal = Some(j);
+        if res.is_ok() {
+            self.journal_seal();
+        }
         res.map_err(|e| anyhow::anyhow!("compaction: {e}"))
+    }
+
+    /// Seal the current group-commit window: one fsync barrier covers
+    /// every event appended since the last seal, then the sealed frames
+    /// ship to the peer (one flush opportunity — the shipper's backoff
+    /// may skip it). Every commit scope (drain, batched window, round
+    /// ingest, compaction) ends here; a failed barrier poisons the
+    /// journal exactly like a failed append.
+    pub(crate) fn journal_seal(&mut self) {
+        let Some(j) = self.journal.as_mut() else { return };
+        if j.err.is_some() {
+            return;
+        }
+        if let Err(e) = j.log.sync_now() {
+            j.err = Some(format!("fsync: {e}"));
+            return;
+        }
+        if let Some(sh) = j.shipper.as_mut() {
+            sh.flush();
+        }
+    }
+
+    /// Force the group-commit window closed from outside (device
+    /// shutdown, fleet checkpoint): fsync barrier + ship. Errors if the
+    /// journal is (or becomes) poisoned.
+    pub fn sync_journal(&mut self) -> Result<()> {
+        self.check_journal()?;
+        self.journal_seal();
+        self.check_journal()
+    }
+
+    /// Lifetime (events appended, fsync barriers issued) — the group
+    /// commit amortization ratio. `None` without a journal.
+    pub fn journal_fsync_stats(&self) -> Option<(u64, u64)> {
+        self.journal.as_ref().map(|j| j.log.fsync_stats())
+    }
+
+    /// The journal's next event sequence number (0 without a journal) —
+    /// the high edge the shipping watermark chases.
+    pub fn journal_seq(&self) -> u64 {
+        self.journal.as_ref().map_or(0, |j| j.log.next_seq())
+    }
+
+    /// Start shipping this journal's log to a peer over `transport`,
+    /// identifying as shard `source`. The current generation (snapshot +
+    /// log tail) is staged immediately and delivered at the first seal,
+    /// so the peer converges to a full copy, not just the future suffix.
+    /// `retry_limit` bounds consecutive delivery faults before shipping
+    /// fails terminally (the local journal is unaffected).
+    pub fn enable_shipping(
+        &mut self,
+        source: usize,
+        transport: Box<dyn ShipTransport>,
+        retry_limit: u32,
+    ) -> Result<()> {
+        self.check_journal()?;
+        let Some(j) = self.journal.as_mut() else {
+            return Err(anyhow::anyhow!("log shipping requires an attached durability journal"));
+        };
+        let mut sh = Shipper::new(source, transport, retry_limit);
+        sh.prime(j.log.manifest().next_seq, j.log.snapshot_bytes(), j.log.tail_frames());
+        j.shipper = Some(sh);
+        self.journal_seal();
+        Ok(())
+    }
+
+    /// Shipping state for receipts (`None` when shipping is not enabled).
+    pub fn shipping_state(&self) -> Option<ShipReceipt> {
+        self.journal.as_ref().and_then(|j| j.shipper.as_ref()).map(Shipper::receipt)
     }
 
     /// Record the first durability failure; everything after it is
@@ -114,12 +200,18 @@ impl UnlearningService {
     fn append_event(&mut self, ev: Event) {
         let due = {
             let Some(j) = self.journal.as_mut() else { return };
-            let payload = ev.encode(j.log.next_seq(), j.mode.spills());
+            let seq = j.log.next_seq();
+            let payload = ev.encode(seq, j.mode.spills());
             if let Err(e) = j.log.append_payload(&payload) {
                 if j.err.is_none() {
                     j.err = Some(e.to_string());
                 }
                 return;
+            }
+            // Stage for the peer; frames ship at the next seal, after the
+            // fsync barrier covers them.
+            if let Some(sh) = j.shipper.as_mut() {
+                sh.stage(seq, payload);
             }
             j.compact_every > 0 && j.log.events_in_log() >= j.compact_every
         };

@@ -49,7 +49,7 @@ use crate::persist::event::{
     SvcReportRec,
 };
 use crate::persist::log::EventLog;
-use crate::persist::DurabilityMode;
+use crate::persist::{DurabilityMode, Shipper};
 use crate::sim::Battery;
 use crate::unlearning::batch::{BatchPlan, BatchPlanner, LineagePlan};
 use crate::util::Json;
@@ -103,6 +103,9 @@ struct Journal {
     log: EventLog,
     mode: DurabilityMode,
     compact_every: u64,
+    /// Cross-shard log shipping: sealed frames stream to a peer replica
+    /// (`None` = shipping not enabled; every path stays untouched).
+    shipper: Option<Shipper>,
     /// First append/compaction error. Durable emission happens inside
     /// infallible entry points (`submit`), so the error is stashed here
     /// and surfaced by the next fallible call — nothing is silently
@@ -385,6 +388,9 @@ impl UnlearningService {
                 policy_state: svc.engine.store().policy_state(),
             }))
         });
+        // A round ingest is a commit scope: seal the group-commit window
+        // (one fsync) and ship the sealed frames.
+        self.journal_seal();
         Ok(())
     }
 

@@ -225,6 +225,9 @@ impl UnlearningService {
             });
             served += 1;
         }
+        // End of the drain = end of the commit scope: seal the
+        // group-commit window and ship the sealed frames.
+        self.journal_seal();
         Ok(served)
     }
 
@@ -271,6 +274,7 @@ impl UnlearningService {
                 break;
             }
         }
+        self.journal_seal();
         Ok(served)
     }
 

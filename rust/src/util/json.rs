@@ -56,6 +56,25 @@ impl Json {
         }
     }
 
+    /// Exact `u64` extraction. `Num` qualifies only when it is a
+    /// non-negative integer at or below 2^53 — the largest magnitude an
+    /// `f64` represents exactly — so a value that round-tripped through
+    /// the float parser is never silently rounded. Larger integers are
+    /// carried as digit strings (see `Manifest::to_json`) and parsed
+    /// here without ever touching floating point.
+    pub fn as_u64(&self) -> Option<u64> {
+        const EXACT_MAX: f64 = 9_007_199_254_740_992.0; // 2^53
+        match self {
+            Json::Num(x) if x.is_finite() && *x >= 0.0 && x.fract() == 0.0 && *x <= EXACT_MAX => {
+                Some(*x as u64)
+            }
+            Json::Str(s) if !s.is_empty() && s.bytes().all(|b| b.is_ascii_digit()) => {
+                s.parse().ok()
+            }
+            _ => None,
+        }
+    }
+
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -449,6 +468,29 @@ mod tests {
         assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
         assert_eq!(j.get("vals").and_then(Json::as_arr).map(|a| a.len()), Some(3));
         assert_eq!(j.get("missing"), None);
+    }
+
+    #[test]
+    fn as_u64_is_exact_on_both_carriers() {
+        // Num carrier: exact integers up to 2^53, inclusive.
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(5.0).as_u64(), Some(5));
+        assert_eq!(Json::Num(9_007_199_254_740_992.0).as_u64(), Some(1 << 53));
+        // Past 2^53 the float no longer identifies one integer — refuse.
+        assert_eq!(Json::Num(9_007_199_254_741_000.0).as_u64(), None);
+        assert_eq!(Json::Num(5.5).as_u64(), None);
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(f64::NAN).as_u64(), None);
+        assert_eq!(Json::Num(f64::INFINITY).as_u64(), None);
+        // Str carrier: exact for the full u64 range, digits only.
+        assert_eq!(Json::Str(u64::MAX.to_string()).as_u64(), Some(u64::MAX));
+        assert_eq!(Json::Str("12345".into()).as_u64(), Some(12345));
+        assert_eq!(Json::Str("".into()).as_u64(), None);
+        assert_eq!(Json::Str("-3".into()).as_u64(), None);
+        assert_eq!(Json::Str("1.5".into()).as_u64(), None);
+        // Overflowing digit string is a parse failure, not a wrap.
+        assert_eq!(Json::Str("18446744073709551616".into()).as_u64(), None);
+        assert_eq!(Json::Bool(true).as_u64(), None);
     }
 
     #[test]

@@ -17,7 +17,17 @@
 //!   byte (policy counters, partitioner RNG, id sequences all continue);
 //! * compaction (snapshot + log truncation) preserves receipts across a
 //!   reopen, and `log+spill` restores checkpoint payload tensors
-//!   bit-exactly.
+//!   bit-exactly;
+//! * under a volatile write cache, power loss preserves exactly the
+//!   fsync-barrier-covered prefix: `fsync = always` loses nothing,
+//!   `group_commit` recovers the last sealed commit scope, and `never`
+//!   keeps only what was durable at attach time;
+//! * an injected fsync failure poisons the journal loudly — the next
+//!   fallible entry point errors and nothing appends past the failure.
+//!
+//! The byte-offset sweep covers **every** offset when `CAUSE_FAULT_FULL=1`
+//! (the CI main-push configuration); otherwise it samples with a prime
+//! stride, always keeping every frame boundary and its neighbours.
 
 use cause::config::ExperimentConfig;
 use cause::coordinator::engine::EvalPolicy;
@@ -26,7 +36,7 @@ use cause::data::catalog::CIFAR10;
 use cause::data::dataset::{EdgePopulation, PopulationConfig};
 use cause::data::trace::{RequestTrace, TraceConfig};
 use cause::persist::frame::{frame_bounds, HEADER_LEN, LOG_MAGIC};
-use cause::persist::{Durability, DurabilityMode, MemFs, PersistFs as _};
+use cause::persist::{Durability, DurabilityMode, FsyncPolicy, MemFs, PersistFs as _};
 use cause::sim::device::AI_CUBESAT;
 use cause::sim::Battery;
 use cause::testkit::FailpointFs;
@@ -198,6 +208,11 @@ fn mem_durability(fs: &MemFs) -> Durability {
     Durability::mem(DurabilityMode::Log, fs.clone(), 0)
 }
 
+/// Durability journaling through a crash-injecting filesystem.
+fn fp_durability(fp: &FailpointFs, fsync: FsyncPolicy) -> Durability {
+    Durability { mode: DurabilityMode::Log, fs: Box::new(fp.clone()), compact_every: 0, fsync }
+}
+
 /// Recover a fresh service from the given disk image; returns the receipt
 /// and how many events replayed.
 fn recover(w: &Workload, fs: &MemFs) -> (Json, u64) {
@@ -271,10 +286,27 @@ fn killpoints_at_every_byte_recover_to_boundary_states() {
         );
     }
 
-    // Kill-points: crash at EVERY byte offset (torn-write injection via
+    // Kill-points: crash at every byte offset (torn-write injection via
     // FailpointFs), recover, and require exactly the pre-/post-event state
-    // of the last complete frame — never anything in between.
-    for cut in 0..=full.len() {
+    // of the last complete frame — never anything in between. The full
+    // sweep runs under CAUSE_FAULT_FULL=1 (CI main pushes); otherwise a
+    // prime-stride sample plus every frame boundary and its neighbours —
+    // the offsets where an off-by-one would live.
+    let cuts: Vec<usize> = if std::env::var("CAUSE_FAULT_FULL").as_deref() == Ok("1") {
+        (0..=full.len()).collect()
+    } else {
+        let mut cuts: Vec<usize> = (0..=full.len()).step_by(23).collect();
+        cuts.extend(
+            boundaries
+                .iter()
+                .flat_map(|&b| [b.saturating_sub(1), b, (b + 1).min(full.len())]),
+        );
+        cuts.push(full.len());
+        cuts.sort_unstable();
+        cuts.dedup();
+        cuts
+    };
+    for cut in cuts {
         let k = boundaries.iter().filter(|&&b| b <= cut).count().saturating_sub(1);
         // Re-write the prefix through a FailpointFs armed at `cut` bytes
         // of log traffic: what lands is exactly full[..cut].
@@ -295,6 +327,119 @@ fn killpoints_at_every_byte_recover_to_boundary_states() {
             "cut {cut}: torn-write recovery must land on frame boundary {k}"
         );
     }
+}
+
+/// Fsync-barrier matrix under a volatile write cache: power loss keeps
+/// exactly the barrier-covered log prefix. `Always` never loses an acked
+/// event; `GroupCommit` recovers the last sealed commit scope (round
+/// ingest / batched drain / flush — submits, clock ticks, and harvests
+/// appended after the seal are gone); `Never` keeps only what was
+/// durable at attach time — the documented non-guarantee.
+#[test]
+fn fsync_matrix_crash_recovers_the_barrier_covered_prefix() {
+    let w = workload();
+    let (ref_receipts, _) = run_reference(&w);
+    let seals = |op: &Op| matches!(op, Op::Ingest | Op::DrainBatched | Op::Flush);
+
+    for fsync in [FsyncPolicy::Never, FsyncPolicy::Always, FsyncPolicy::GroupCommit] {
+        for crash_after in 0..=w.ops.len() {
+            let mem = MemFs::new();
+            let fp = FailpointFs::new(mem.clone());
+            let mut svc = build(&w, None);
+            svc.attach_durability(fp_durability(&fp, fsync)).expect("attach");
+            // Attach-time files (log header, manifest) count as durable;
+            // from here, appends only survive once a barrier covers them.
+            fp.enable_volatile();
+
+            let mut durable = 0; // index of the last barrier-covered receipt
+            for (i, op) in w.ops[..crash_after].iter().enumerate() {
+                apply(&mut svc, &w, op);
+                durable = match fsync {
+                    FsyncPolicy::Always => i + 1,
+                    FsyncPolicy::GroupCommit if seals(op) => i + 1,
+                    _ => durable,
+                };
+            }
+            assert!(svc.durability_error().is_none(), "{fsync:?}: live run must stay clean");
+            drop(svc);
+            fp.crash_lose_unsynced();
+
+            let (receipt, _) = recover(&w, &mem);
+            assert_eq!(
+                receipt, ref_receipts[durable],
+                "{fsync:?}: crash after op {crash_after} must recover exactly the \
+                 last barrier-covered state (op {durable})"
+            );
+        }
+    }
+
+    // And the barriers amortize: one GroupCommit run issues one barrier
+    // per commit scope, far fewer than one per append (bench_persist
+    // pins the exact ratio as a gated floor).
+    let fp = FailpointFs::new(MemFs::new());
+    let mut svc = build(&w, None);
+    svc.attach_durability(fp_durability(&fp, FsyncPolicy::GroupCommit)).expect("attach");
+    for op in &w.ops {
+        apply(&mut svc, &w, op);
+    }
+    let (appended, fsyncs) = svc.journal_fsync_stats().expect("journal attached");
+    assert!(appended > 0 && fsyncs > 0, "workload must append and seal");
+    assert!(
+        fsyncs < appended,
+        "group commit must amortize barriers: {appended} appends / {fsyncs} fsyncs"
+    );
+}
+
+/// An injected fsync failure poisons the journal: the failed barrier is
+/// recorded as `fsync: ...`, the op that hit it still completes (the
+/// seal runs after serving), every later fallible entry point errors,
+/// and no further events append — durability degrades loudly, never
+/// silently.
+#[test]
+fn injected_fsync_failure_poisons_the_journal() {
+    let w = workload();
+    let mem = MemFs::new();
+    let fp = FailpointFs::new(mem.clone());
+    let mut svc = build(&w, None);
+    svc.attach_durability(fp_durability(&fp, FsyncPolicy::GroupCommit)).expect("attach");
+
+    svc.ingest_round(&w.pop).expect("ingest seals its window cleanly");
+    assert!(svc.durability_error().is_none());
+
+    // Arm one sync failure. The submits below only dirty the window
+    // (group commit defers the barrier), so the drain's seal is the
+    // barrier that fails.
+    fp.fail_next_syncs(1);
+    for req in w.trace.at(1) {
+        svc.submit(req.clone());
+    }
+    svc.drain_batched().expect("the drain that hits the barrier still completes");
+    let err = svc
+        .durability_error()
+        .expect("a failed barrier must poison the journal")
+        .to_string();
+    assert!(err.starts_with("fsync:"), "poison must name the barrier: {err:?}");
+    assert!(err.contains("injected fsync failure"), "{err:?}");
+
+    // Everything appended before the failed barrier is on disk (the
+    // cache was not volatile here — only the barrier call failed), so
+    // recovery still lands on the live state.
+    let (receipt, _) = recover(&w, &mem);
+    assert_eq!(receipt, svc.state_receipt(), "recovery from the surviving image");
+
+    // Fallible entry points refuse to proceed...
+    let msg = format!("{:#}", svc.drain_batched().unwrap_err());
+    assert!(msg.contains("durability journal failed earlier"), "{msg}");
+    assert!(svc.sync_journal().is_err());
+    assert!(svc.compact_now().is_err());
+    // ...and nothing appends past the failure.
+    let seq = svc.journal_seq();
+    svc.advance(3);
+    svc.harvest(1_000.0);
+    for req in w.trace.at(2) {
+        svc.submit(req.clone());
+    }
+    assert_eq!(svc.journal_seq(), seq, "poisoned journal must not append");
 }
 
 /// Recover at every op boundary, then drive the remaining ops: the final

@@ -1,0 +1,384 @@
+//! Shard-death failover under fault injection.
+//!
+//! The fleet's durability story: every shard journals locally and ships
+//! its sealed WAL frames to a peer replica. These tests prove the three
+//! claims that story rests on:
+//!
+//! * **Zero lost obligations** — kill any worker after its shipped
+//!   watermark catches the log head, fail over onto the replica, drive
+//!   the rest of the workload, and the fleet is receipt-identical to one
+//!   that never died (shard receipts, merged latency histogram, and
+//!   aggregate metrics), with the routing epoch bumped exactly once so
+//!   the failover is auditable.
+//! * **Convergence under transport faults** — with drops, duplicates,
+//!   and stale re-deliveries injected into the shipping transport, the
+//!   retry/backoff loop still converges every replica to a byte-identical
+//!   copy of its shard's WAL, and a failover after convergence still
+//!   loses nothing.
+//! * **Compaction kill-points** — crash a shard's filesystem at byte
+//!   budgets spanning every write step of a compaction (snapshot, fresh
+//!   log, manifest commit, old-generation removal); rebuilding the fleet
+//!   from the surviving images always lands on the merged pre-crash
+//!   receipt, whichever shard died.
+
+use cause::config::ExperimentConfig;
+use cause::coordinator::system::SystemVariant;
+use cause::data::dataset::{EdgePopulation, PopulationConfig};
+use cause::data::trace::{RequestTrace, TraceConfig};
+use cause::fleet::FleetService;
+use cause::memory::StoreMeter;
+use cause::persist::frame::HEADER_LEN;
+use cause::persist::ship::materialize_replica;
+use cause::persist::{Durability, DurabilityMode, FsyncPolicy, MemFs};
+use cause::testkit::{FailpointFs, FailpointTransport};
+
+const WAL: &str = "wal-0.log";
+const MANIFEST: &str = "MANIFEST.json";
+
+/// FiboR + byte-budget workload with enough cross-shard traffic that
+/// both workers of a 2-shard fleet serve real requests.
+fn workload(seed: u64) -> (ExperimentConfig, EdgePopulation, RequestTrace) {
+    let mut cfg = ExperimentConfig {
+        users: 20,
+        rounds: 6,
+        shards: 4,
+        unlearn_prob: 0.7,
+        seed,
+        ..Default::default()
+    };
+    cfg.memory_bytes = 64 * 1024;
+    cfg.store_meter = StoreMeter::Bytes;
+    let pop = EdgePopulation::generate(PopulationConfig {
+        spec: cfg.dataset.scaled(8_000),
+        users: cfg.users,
+        rounds: cfg.rounds,
+        size_sigma: 0.8,
+        label_alpha: 0.5,
+        arrival_prob: 0.8,
+        seed: cfg.seed,
+    });
+    let trace = RequestTrace::generate(
+        &pop,
+        &TraceConfig {
+            unlearn_prob: cfg.unlearn_prob,
+            block_incl_prob: 0.8,
+            age_decay: 0.5,
+            frac_range: (0.1, 0.5),
+            seed: cfg.seed ^ 0xf1ee7,
+        },
+    );
+    (cfg, pop, trace)
+}
+
+/// One scheduled round: ingest, clock skew, submits, batched drain.
+fn step_round(f: &mut FleetService, t: u32, pop: &EdgePopulation, trace: &RequestTrace) {
+    f.ingest_round(pop).unwrap();
+    f.advance(u64::from(t) % 3);
+    for req in trace.at(t) {
+        f.submit(req.clone());
+    }
+    f.drain_batched().unwrap();
+}
+
+/// Kill each worker in turn after its shipped watermark catches the log
+/// head; the failed-over fleet must be receipt-identical to one that
+/// never died — zero acknowledged obligations lost.
+#[test]
+fn killing_any_worker_loses_zero_acked_obligations() {
+    for k in 0..2usize {
+        let (mut cfg, pop, trace) = workload(33);
+        cfg.fleet_workers = 2;
+
+        let build = || {
+            let mut f = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+            f.attach_durability(vec![
+                Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+                Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+            ])
+            .unwrap();
+            f.enable_log_shipping().unwrap();
+            f
+        };
+        let mut a = build(); // shard k dies mid-run
+        let mut b = build(); // never killed
+
+        for t in 1..=3u32 {
+            step_round(&mut a, t, &pop, &trace);
+            step_round(&mut b, t, &pop, &trace);
+        }
+        // Seal + ship everything acknowledged so far; the clean
+        // in-process transport drains every shipper in one flush.
+        a.sync_journals().unwrap();
+        b.sync_journals().unwrap();
+        for (r, log_seq) in a.shipping_states().unwrap() {
+            let r = r.expect("shipping enabled");
+            assert_eq!(r.pending, 0, "sealed frames must all be shipped");
+            assert_eq!(r.shipped_seq, log_seq, "watermark must reach the log head");
+            assert!(r.failed.is_none());
+        }
+
+        a.kill_worker(k).unwrap();
+        // Dead shard: fallible fleet ops refuse (a partial answer over a
+        // sharded obligation set would lie)...
+        assert!(a.drain_batched().is_err());
+        assert!(a.state_receipt().is_err());
+        // ...while fire-and-forget traffic parks in arrival order. The
+        // reference fleet sees the identical schedule, live.
+        for req in trace.at(4) {
+            a.submit(req.clone());
+            b.submit(req.clone());
+        }
+        a.advance(2);
+        b.advance(2);
+
+        let report = a.failover(k).unwrap();
+        assert!(
+            report.events_replayed > 0 || report.snapshot_loaded,
+            "failover must recover the shipped log: {report:?}"
+        );
+
+        // Identical schedules from here on (round 4's submits already
+        // happened on both sides, in the same order).
+        for f in [&mut a, &mut b] {
+            f.ingest_round(&pop).unwrap();
+            f.drain_batched().unwrap();
+        }
+        for t in 5..=cfg.rounds {
+            step_round(&mut a, t, &pop, &trace);
+            step_round(&mut b, t, &pop, &trace);
+        }
+        let served_a = a.flush_batched().unwrap();
+        let served_b = b.flush_batched().unwrap();
+        assert_eq!(served_a, served_b, "shard {k}: flush served counts diverged");
+        a.sync_journals().unwrap();
+        b.sync_journals().unwrap();
+
+        let ra = a.state_receipt().unwrap();
+        let rb = b.state_receipt().unwrap();
+        assert_eq!(
+            ra.at(&["shards"]),
+            rb.at(&["shards"]),
+            "shard {k}: killed-and-failed-over fleet diverged from the never-killed one"
+        );
+        assert_eq!(ra.at(&["latency_hist"]), rb.at(&["latency_hist"]));
+        assert_eq!(
+            a.metrics().unwrap().to_json().to_string(),
+            b.metrics().unwrap().to_json().to_string(),
+            "shard {k}: aggregate metrics diverged"
+        );
+        // The failover is receipt-auditable: exactly one epoch bump.
+        assert_eq!(a.epoch(), b.epoch() + 1);
+    }
+}
+
+/// Log shipping converges to a byte-identical peer copy of every
+/// shard's WAL even when the transport drops, duplicates, and reorders
+/// shipments — and a failover after convergence still loses nothing.
+#[test]
+fn shipping_converges_and_fails_over_under_transport_faults() {
+    let (mut cfg, pop, trace) = workload(57);
+    cfg.fleet_workers = 2;
+
+    let fs0 = MemFs::new();
+    let fs1 = MemFs::new();
+    let mut a = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    a.attach_durability(vec![
+        Durability::mem(DurabilityMode::Log, fs0.clone(), 0),
+        Durability::mem(DurabilityMode::Log, fs1.clone(), 0),
+    ])
+    .unwrap();
+    let store = a
+        .enable_log_shipping_with(|k, store| {
+            // Heavy fault rates, deterministic per shard.
+            Box::new(FailpointTransport::new(
+                Box::new(store),
+                0xF417_0000 ^ k as u64,
+                0.35,
+                0.3,
+                0.3,
+            ))
+        })
+        .unwrap();
+
+    // Fault-free reference: the transport never touches service state,
+    // so the faulty fleet must stay receipt-identical to this one.
+    let mut b = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    b.attach_durability(vec![
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+    ])
+    .unwrap();
+
+    for t in 1..=cfg.rounds {
+        step_round(&mut a, t, &pop, &trace);
+        step_round(&mut b, t, &pop, &trace);
+    }
+
+    // Pump seals until every shipper drains through the faulty pipe
+    // (each seal is one flush opportunity; backoff skips some).
+    let mut spins = 0;
+    loop {
+        a.sync_journals().unwrap();
+        let states = a.shipping_states().unwrap();
+        for (r, _) in &states {
+            let r = r.as_ref().expect("shipping enabled");
+            assert!(r.failed.is_none(), "retry budget must absorb the faults: {r:?}");
+        }
+        if states.iter().all(|(r, log_seq)| {
+            let r = r.as_ref().unwrap();
+            r.pending == 0 && r.shipped_seq == *log_seq
+        }) {
+            break;
+        }
+        spins += 1;
+        assert!(spins < 10_000, "shipping must converge under transport faults");
+    }
+
+    // Each replica re-frames to the exact bytes of its shard's WAL: same
+    // payloads, same checksum chain.
+    for (k, fs) in [&fs0, &fs1].into_iter().enumerate() {
+        let replica = store.replica(k).expect("replica exists");
+        let mat = materialize_replica(&replica);
+        assert_eq!(mat.file(WAL), fs.file(WAL), "shard {k}: replica WAL diverged");
+    }
+
+    // Failover after convergence: still zero loss.
+    a.kill_worker(1).unwrap();
+    a.failover(1).unwrap();
+    let served_a = a.flush_batched().unwrap();
+    let served_b = b.flush_batched().unwrap();
+    assert_eq!(served_a, served_b);
+    let ra = a.state_receipt().unwrap();
+    let rb = b.state_receipt().unwrap();
+    assert_eq!(ra.at(&["shards"]), rb.at(&["shards"]));
+    assert_eq!(a.epoch(), b.epoch() + 1);
+}
+
+/// Fleet compaction kill-points: crash a shard's filesystem at byte
+/// budgets spanning every write step of the compaction — nothing lands,
+/// a torn/orphan snapshot, snapshot + fresh log but no manifest, the
+/// manifest commit itself, and the blocked old-generation removal.
+/// Rebuilding the fleet from the surviving images must always land on
+/// the merged pre-crash receipt: compaction is receipt-invisible no
+/// matter where it dies, on either shard.
+#[test]
+fn fleet_compaction_killpoints_preserve_merged_receipts() {
+    let (mut cfg, pop, trace) = workload(71);
+    cfg.fleet_workers = 2;
+
+    // Drive once, journaling to plain memory; every kill-point below
+    // rebuilds from forks of these images.
+    let fs = [MemFs::new(), MemFs::new()];
+    let mut fleet = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    fleet
+        .attach_durability(vec![
+            Durability::mem(DurabilityMode::Log, fs[0].clone(), 0),
+            Durability::mem(DurabilityMode::Log, fs[1].clone(), 0),
+        ])
+        .unwrap();
+    for t in 1..=cfg.rounds {
+        step_round(&mut fleet, t, &pop, &trace);
+    }
+    let receipt_before = fleet.state_receipt().unwrap().to_string();
+    drop(fleet);
+
+    // Recover a fleet from per-shard images and compact with shard k's
+    // filesystem armed to die after `budget` written bytes; returns the
+    // surviving images and the unspent budget.
+    let run = |k: usize, budget: u64| -> ([MemFs; 2], u64) {
+        let imgs = [fs[0].fork(), fs[1].fork()];
+        let fp = FailpointFs::new(imgs[k].clone());
+        let mut f = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+        let ds = (0..2)
+            .map(|j| {
+                if j == k {
+                    Durability {
+                        mode: DurabilityMode::Log,
+                        fs: Box::new(fp.clone()),
+                        compact_every: 0,
+                        fsync: FsyncPolicy::Never,
+                    }
+                } else {
+                    Durability::mem(DurabilityMode::Log, imgs[j].clone(), 0)
+                }
+            })
+            .collect();
+        f.attach_durability(ds).unwrap();
+        fp.set_budget(Some(budget));
+        // Past the budget, writes vanish silently (the power is out);
+        // whether the call "succeeds" is irrelevant — the fleet is
+        // discarded either way, only the images survive.
+        let _ = f.compact_now();
+        drop(f);
+        let left = fp.remaining().expect("budget still armed");
+        fp.set_budget(None);
+        (imgs, left)
+    };
+    let recover = |imgs: [MemFs; 2]| -> FleetService {
+        let [i0, i1] = imgs;
+        let mut f = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+        f.attach_durability(vec![
+            Durability::mem(DurabilityMode::Log, i0, 0),
+            Durability::mem(DurabilityMode::Log, i1, 0),
+        ])
+        .unwrap();
+        f
+    };
+
+    for k in 0..2usize {
+        // Probe with an ample budget: the compaction commits, and the
+        // consumed bytes expose the write-step boundaries.
+        const AMPLE: u64 = 1 << 40;
+        let (committed, left) = run(k, AMPLE);
+        let consumed = AMPLE - left;
+        let sizes = committed[k].sizes();
+        let snap_len = sizes
+            .iter()
+            .find(|(n, _)| n.starts_with("snapshot-"))
+            .map(|(_, l)| *l)
+            .expect("probe compaction must write a snapshot");
+        let manifest_len = sizes.iter().find(|(n, _)| n == MANIFEST).unwrap().1;
+        // Write-step model: snapshot, fresh-log header, manifest commit,
+        // one old-log removal (1 budget unit). Keeps the sampling honest
+        // — if compaction grows a step, this fails loudly.
+        let log_commit = snap_len + HEADER_LEN as u64;
+        let man_commit = log_commit + manifest_len;
+        assert_eq!(consumed, man_commit + 1, "shard {k}: compaction write-step model");
+        let f = recover(committed);
+        assert_eq!(
+            f.state_receipt().unwrap().to_string(),
+            receipt_before,
+            "shard {k}: committed compaction must be receipt-invisible"
+        );
+        drop(f);
+
+        // Every distinct step outcome, plus the exact boundaries.
+        let mut budgets = vec![
+            0,
+            1,
+            snap_len / 2,
+            snap_len - 1,
+            snap_len,
+            snap_len + 1,
+            log_commit - 1,
+            log_commit,
+            log_commit + 1,
+            log_commit + manifest_len / 2,
+            man_commit - 1,
+            man_commit,
+            man_commit + 1,
+        ];
+        budgets.sort_unstable();
+        budgets.dedup();
+        for budget in budgets {
+            let (imgs, _) = run(k, budget);
+            let f = recover(imgs);
+            assert_eq!(
+                f.state_receipt().unwrap().to_string(),
+                receipt_before,
+                "shard {k}: compaction killed at byte budget {budget} must recover \
+                 the merged pre-crash receipt"
+            );
+        }
+    }
+}
