@@ -403,5 +403,43 @@ fn main() -> anyhow::Result<()> {
         "post-failover: the rebuilt shard serves traffic and ships its log \
          again — zero acknowledged obligations lost"
     );
+
+    // 12. Chaos soak: the durability story above, attacked continuously.
+    // `cause::load::chaos` drives any corpus scenario open-loop over a
+    // durable, log-shipping fleet while a seeded `ChaosPlan` injects the
+    // faults the system claims to survive — worker kills with failover,
+    // transport drop/dup/stale bursts, injected fsync failures, battery
+    // collapse, and full crash-restart-recover cycles — and audits an
+    // invariant sweep at every barrier: no acknowledged obligation lost,
+    // journal sequences never regress, shipping watermarks catch the log
+    // head, each peer replica byte-equals the source's durable state and
+    // stays bounded by its live (post-compaction) WAL, and every
+    // recovery lands on the exact pre-fault logical receipt. Set
+    // `spool: true` to ship over the file-backed spool (`FileSpool` —
+    // frames survive process death on the peer's disk; production fleets
+    // get the same via the `ship_spool_dir` config knob), and everything
+    // is seeded, so a failing (scenario, seed) pair replays exactly.
+    // `cargo run --release --bin soak` runs the wide multi-seed sweep CI
+    // gates on (SOAK_report.json); here, one small plan:
+    use cause::load::{run_chaos, ChaosCfg, ChaosPlan, FaultClass};
+    let plan = ChaosPlan::seeded(0xc4a0, 24, &FaultClass::ALL);
+    let chaos_cfg = ChaosCfg { ticks: 24, check_every: 6, spool: true, ..ChaosCfg::default() };
+    let report = run_chaos(scenarios[0].as_ref(), &plan, &chaos_cfg)?;
+    assert!(report.ok(), "chaos violations: {:?}", report.violations);
+    println!(
+        "\nchaos [{}]: {} fault(s) over {} ticks ({} failover(s), {} \
+         restart(s), {} barrier sweeps) — served {}/{} submitted, \
+         replicas {:?} bytes vs live {:?}, zero invariant violations",
+        report.scenario,
+        report.faults.len(),
+        report.ticks,
+        report.failovers,
+        report.restarts,
+        report.barriers,
+        report.served,
+        report.submitted,
+        report.replica_bytes,
+        report.live_bytes
+    );
     Ok(())
 }

@@ -21,6 +21,13 @@
 //!    bytes the compacted generation (snapshot + empty tail) occupies vs
 //!    the raw log (`compaction.ratio`) and that a reopen after compaction
 //!    replays zero events.
+//! 5. **Replica-side compaction** — the live workload shipped to an
+//!    in-process peer replica with a small auto-compaction cadence:
+//!    every compaction ships a `ShipReset` snapshot delta, so the peer
+//!    holds the source's live generation instead of accreting the full
+//!    event history. `gate.replica_compaction_ratio` is full-history
+//!    bytes over final replica bytes — it falls to <= 1 if replicas ever
+//!    go back to accreting history unboundedly.
 //!
 //! Writes `BENCH_persist.json` for CI upload and the regression gate.
 
@@ -32,7 +39,9 @@ use cause::data::catalog::CIFAR10;
 use cause::data::dataset::{EdgePopulation, PopulationConfig};
 use cause::data::trace::{RequestTrace, TraceConfig};
 use cause::persist::frame::{scan_frames, LOG_MAGIC};
-use cause::persist::{DiskFs, Durability, DurabilityMode, EventLog, FsyncPolicy, MemFs};
+use cause::persist::{
+    DiskFs, Durability, DurabilityMode, EventLog, FsyncPolicy, MemFs, ReplicaStore,
+};
 use cause::sim::device::AI_CUBESAT;
 use cause::sim::Battery;
 use cause::util::bench::black_box;
@@ -250,6 +259,50 @@ fn main() {
         pre_bytes, post_bytes, compaction_ratio
     );
 
+    // 5. Replica-side compaction: the same workload journaled with a
+    // small auto-compaction cadence while shipping to an in-process
+    // peer. The peer's replica must track the source's live generation
+    // (snapshot + tail), not the full history the run appended.
+    let store = ReplicaStore::new();
+    let fs_ship = MemFs::new();
+    let mut shipped = build(&cfg);
+    shipped
+        .attach_durability(
+            Durability::mem(DurabilityMode::Log, fs_ship.clone(), 64)
+                .with_fsync(FsyncPolicy::GroupCommit),
+        )
+        .expect("attach for shipping");
+    shipped.enable_shipping(0, Box::new(store.clone()), 8).expect("enable shipping");
+    let ship_secs = run(&mut shipped, &pop, &trace);
+    shipped.sync_journal().expect("final seal");
+    let receipt = shipped.shipping_state().expect("shipping enabled");
+    assert!(receipt.failed.is_none());
+    assert_eq!(receipt.pending, 0, "a clean transport drains at every seal");
+    assert_eq!(
+        shipped.state_receipt(),
+        off_receipt,
+        "shipping + auto-compaction must be observation-only"
+    );
+    let live_bytes = shipped.journal_stats().expect("journal stats").live_bytes();
+    drop(shipped);
+    let replica = store.replica(0).expect("replica shipped");
+    let replica_bytes = replica.bytes().max(1);
+    assert!(
+        replica.bytes() <= 2 * live_bytes.max(1),
+        "replica must stay bounded by the source's live generation: \
+         {} replica bytes vs {} live",
+        replica.bytes(),
+        live_bytes
+    );
+    // `log_bytes` is the same workload's full unbounded history
+    // (section 1 journaled it with auto-compaction off).
+    let replica_compaction_ratio = log_bytes as f64 / replica_bytes as f64;
+    println!(
+        "replica compaction: {} history bytes -> {} replica bytes \
+         ({:.2}x bounded, {:.3}s)",
+        log_bytes, replica_bytes, replica_compaction_ratio, ship_secs
+    );
+
     let summary = Json::obj()
         .set("bench", "persist")
         .set(
@@ -277,7 +330,8 @@ fn main() {
                 .set("append_mbps", append_mbps)
                 .set("append_mbps_fsync", append_mbps_fsync)
                 .set("group_commit_amortization", amortization)
-                .set("recovery_events_per_s", recovery_eps),
+                .set("recovery_events_per_s", recovery_eps)
+                .set("replica_compaction_ratio", replica_compaction_ratio),
         );
     let out_path = std::env::var("CAUSE_BENCH_PERSIST_JSON").unwrap_or_else(|_| {
         concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_persist.json").to_string()
@@ -295,5 +349,10 @@ fn main() {
     assert!(
         amortization >= 2.0,
         "group commit must amortize barriers across the window ({amortization:.2}x)"
+    );
+    assert!(
+        replica_compaction_ratio > 1.0,
+        "replica-side compaction must bound the peer below the full history \
+         ({replica_compaction_ratio:.2}x)"
     );
 }

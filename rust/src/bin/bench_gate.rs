@@ -15,13 +15,17 @@
 //! * `gate.ratio` / `gate.decode_mbps` (from `BENCH_compress.json`) fall
 //!   below the `compress.*` floors, or
 //! * `gate.append_mbps` / `gate.append_mbps_fsync` /
-//!   `gate.group_commit_amortization` / `gate.recovery_events_per_s`
+//!   `gate.group_commit_amortization` / `gate.recovery_events_per_s` /
+//!   `gate.replica_compaction_ratio`
 //!   (from `BENCH_persist.json`) fall below the `persist.*` floors — the
 //!   write-ahead log appends (flush-only or with per-append fsync
 //!   barriers) or crash recovery replays slower than the committed
-//!   floor, or group commit stopped amortizing barriers across the
-//!   batched window. Floors are conservative invariant-derived values
-//!   and are checked directly, without an extra tolerance. Or
+//!   floor, group commit stopped amortizing barriers across the
+//!   batched window, or the shipped peer replica stopped being bounded
+//!   by the source's compacted live WAL (ratio <= 1 means the replica
+//!   accretes the full history). Floors are conservative
+//!   invariant-derived values and are checked directly, without an
+//!   extra tolerance. Or
 //! * `gate.scaling_2w` (from `BENCH_fleet.json`) falls below the
 //!   `fleet.scaling_2w` floor, or `gate.merge_overhead` grows above the
 //!   `fleet.merge_overhead` ceiling, or
@@ -144,8 +148,8 @@ struct Current {
     speedup: Option<f64>,
     compress: Option<(f64, f64)>, // (ratio, decode_mbps)
     // (append_mbps, append_mbps_fsync, group_commit_amortization,
-    // recovery_events_per_s)
-    persist: Option<(f64, f64, f64, f64)>,
+    // recovery_events_per_s, replica_compaction_ratio)
+    persist: Option<(f64, f64, f64, f64, f64)>,
     fleet: Option<(f64, f64)>,    // (scaling_2w, merge_overhead)
     load: Option<LoadArtifact>,
 }
@@ -188,23 +192,29 @@ impl Current {
                 Json::obj().set("ratio", ratio).set("decode_mbps", mbps),
             );
         }
-        if let Some((append, fsync, amort, recovery)) = self.persist {
+        if let Some((append, fsync, amort, recovery, replica)) = self.persist {
             let append = base(&["persist", "append_mbps"]).unwrap_or(append / 10.0);
             let fsync = base(&["persist", "append_mbps_fsync"]).unwrap_or(fsync / 10.0);
             // The amortization ratio is a deterministic counter ratio,
             // but the fast/full bench modes run different workloads, so
-            // it is pinned with headroom and never auto-raised.
+            // it is pinned with headroom and never auto-raised. The same
+            // holds for the replica compaction ratio: the regression it
+            // gates (a peer replica accreting unbounded history) drives
+            // it to <= 1, so a conservative floor is enough.
             let amort =
                 base(&["persist", "group_commit_amortization"]).unwrap_or(amort / 2.0);
             let recovery =
                 base(&["persist", "recovery_events_per_s"]).unwrap_or(recovery / 10.0);
+            let replica =
+                base(&["persist", "replica_compaction_ratio"]).unwrap_or(replica / 2.0);
             pin = pin.set(
                 "persist",
                 Json::obj()
                     .set("append_mbps", append)
                     .set("append_mbps_fsync", fsync)
                     .set("group_commit_amortization", amort)
-                    .set("recovery_events_per_s", recovery),
+                    .set("recovery_events_per_s", recovery)
+                    .set("replica_compaction_ratio", replica),
             );
         }
         if let Some((scaling, merge)) = self.fleet {
@@ -300,6 +310,7 @@ fn run(
                     gate_value(&doc, p, "append_mbps_fsync")?,
                     gate_value(&doc, p, "group_commit_amortization")?,
                     gate_value(&doc, p, "recovery_events_per_s")?,
+                    gate_value(&doc, p, "replica_compaction_ratio")?,
                 ))
             }
             None => None,
@@ -430,7 +441,8 @@ fn run(
         }
     }
 
-    if let Some((cur_append, cur_fsync, cur_amort, cur_recovery)) = cur.persist {
+    if let Some((cur_append, cur_fsync, cur_amort, cur_recovery, cur_replica)) = cur.persist
+    {
         let base_append = baseline.at(&["persist", "append_mbps"]).and_then(Json::as_f64);
         let base_recovery = baseline
             .at(&["persist", "recovery_events_per_s"])
@@ -484,6 +496,22 @@ fn run(
                         failures.push(format!(
                             "group-commit amortization fell below floor: \
                              {cur_amort:.1}x < {floor:.1}x events per barrier"
+                        ));
+                    }
+                }
+                if let Some(floor) = baseline
+                    .at(&["persist", "replica_compaction_ratio"])
+                    .and_then(Json::as_f64)
+                {
+                    println!(
+                        "bench_gate: persist replica compaction floor \
+                         {floor:.2}x -> {cur_replica:.2}x"
+                    );
+                    if cur_replica < floor - 1e-9 {
+                        failures.push(format!(
+                            "replica compaction ratio fell below floor: \
+                             {cur_replica:.2}x < {floor:.2}x (peer replica no \
+                             longer bounded by the source's live WAL)"
                         ));
                     }
                 }
@@ -801,6 +829,7 @@ mod tests {
             .set("append_mbps_fsync", 0.05)
             .set("group_commit_amortization", 2.0)
             .set("recovery_events_per_s", 5000.0)
+            .set("replica_compaction_ratio", 1.05)
     }
 
     fn fleet_section() -> Json {
@@ -840,7 +869,13 @@ mod tests {
             .to_pretty()
     }
 
-    fn persist_doc4(append: f64, fsync: f64, amort: f64, recovery: f64) -> String {
+    fn persist_doc5(
+        append: f64,
+        fsync: f64,
+        amort: f64,
+        recovery: f64,
+        replica: f64,
+    ) -> String {
         Json::obj()
             .set("bench", "persist")
             .set(
@@ -849,9 +884,14 @@ mod tests {
                     .set("append_mbps", append)
                     .set("append_mbps_fsync", fsync)
                     .set("group_commit_amortization", amort)
-                    .set("recovery_events_per_s", recovery),
+                    .set("recovery_events_per_s", recovery)
+                    .set("replica_compaction_ratio", replica),
             )
             .to_pretty()
+    }
+
+    fn persist_doc4(append: f64, fsync: f64, amort: f64, recovery: f64) -> String {
+        persist_doc5(append, fsync, amort, recovery, 3.0)
     }
 
     fn persist_doc(append: f64, recovery: f64) -> String {
@@ -986,6 +1026,12 @@ mod tests {
         let no_amort =
             write_tmp("pers_no_amort.json", &persist_doc4(120.0, 5.0, 1.0, 90_000.0));
         assert!(run(&base, &cur, None, None, Some(&no_amort), None, None).is_err());
+        // Replica accreting unbounded history (ratio <= 1): fail.
+        let no_compact = write_tmp(
+            "pers_no_compact.json",
+            &persist_doc5(120.0, 5.0, 8.0, 90_000.0, 0.9),
+        );
+        assert!(run(&base, &cur, None, None, Some(&no_compact), None, None).is_err());
         // A legacy baseline without the fsync floors still gates the two
         // classic floors and passes (the merged document pins the rest).
         let base_legacy = write_tmp(
@@ -1260,7 +1306,7 @@ mod tests {
             speedup: Some(8.5),       // worse than 10.0 (within 20%) → stays 10.0
             compress: Some((2.8, 310.0)), // ratio better; mbps is wall-clock
             // Wall-clock / mode-dependent → committed floors stay.
-            persist: Some((500.0, 80.0, 30.0, 1_000_000.0)),
+            persist: Some((500.0, 80.0, 30.0, 1_000_000.0, 12.0)),
             fleet: Some((1.9, 0.01)), // core-count dependent → floors stay
             load: Some(LoadArtifact {
                 mode: Some("fast".to_string()),
@@ -1278,6 +1324,7 @@ mod tests {
         assert_eq!(at(&pin, &["persist", "append_mbps_fsync"]), Some(0.05));
         assert_eq!(at(&pin, &["persist", "group_commit_amortization"]), Some(2.0));
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(5000.0));
+        assert_eq!(at(&pin, &["persist", "replica_compaction_ratio"]), Some(1.05));
         // Fleet scaling floor / merge ceiling keep their committed values
         // even when this (possibly many-core, lightly loaded) run beat
         // them.
@@ -1339,6 +1386,7 @@ mod tests {
         assert_eq!(at(&pin, &["persist", "append_mbps_fsync"]), Some(8.0));
         assert_eq!(at(&pin, &["persist", "group_commit_amortization"]), Some(15.0));
         assert_eq!(at(&pin, &["persist", "recovery_events_per_s"]), Some(100_000.0));
+        assert_eq!(at(&pin, &["persist", "replica_compaction_ratio"]), Some(6.0));
         assert_eq!(at(&pin, &["fleet", "scaling_2w"]), Some(1.9 / 1.25));
         assert_eq!(at(&pin, &["fleet", "merge_overhead"]), Some(0.01 * 10.0));
         // Load keys (and the measured mode) pin as measured when nothing

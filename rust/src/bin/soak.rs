@@ -1,0 +1,116 @@
+//! Seeded chaos soak over the scenario corpus: every run drives one
+//! scenario open-loop while a [`ChaosPlan`] injects worker kills with
+//! failover, transport fault bursts, fsync failures, battery collapse,
+//! and full crash-restart cycles, with the invariant checker auditing
+//! durability after every tick-window (see `cause::load::chaos`).
+//!
+//! Knobs (environment):
+//!
+//! * `CAUSE_SOAK_TICKS`  — arrival ticks per run (default 48; CI's
+//!   time-boxed job sets 32).
+//! * `CAUSE_SOAK_SEEDS`  — seeds per scenario (default 8).
+//! * `CAUSE_SOAK_FULL=1` — soak the whole corpus instead of the default
+//!   three-scenario mix (main-branch pushes set this).
+//! * `CAUSE_SOAK_JSON`   — report path (default `SOAK_report.json`).
+//!
+//! Odd seeds ship over the file-backed [`FileSpool`] transport, even
+//! seeds over the in-process replica store, so both shipping paths soak
+//! in every sweep. Exit status is non-zero if any run reports an
+//! invariant violation — CI fails loudly, with the report uploaded as
+//! an artifact.
+
+use cause::load::chaos::{run_chaos, ChaosCfg, ChaosPlan, FaultClass};
+use cause::load::corpus;
+use cause::util::Json;
+
+/// Default scenario mix: a bursty mains-powered queue, a harvest-limited
+/// eclipse orbit, and an elastically resharded fleet — the three load
+/// shapes that stress durability differently.
+const DEFAULT_MIX: [&str; 3] = ["gdpr_storm", "satellite_windows", "iot_fleet_churn"];
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let ticks = env_u64("CAUSE_SOAK_TICKS", 48);
+    let seeds = env_u64("CAUSE_SOAK_SEEDS", 8);
+    let full = std::env::var("CAUSE_SOAK_FULL").as_deref() == Ok("1");
+    let out = std::env::var("CAUSE_SOAK_JSON").unwrap_or_else(|_| "SOAK_report.json".into());
+
+    let corpus = corpus();
+    let scenarios: Vec<_> = corpus
+        .iter()
+        .filter(|s| full || DEFAULT_MIX.contains(&s.name()))
+        .collect();
+
+    let mut reports = Vec::new();
+    let mut violations = 0usize;
+    for scenario in &scenarios {
+        for i in 0..seeds {
+            let seed = 0x50a0_0000 ^ (i << 8) ^ ticks;
+            let plan = ChaosPlan::seeded(seed, ticks, &FaultClass::ALL);
+            let cfg = ChaosCfg {
+                ticks,
+                seed,
+                // Odd seeds take the file-backed spool path.
+                spool: i % 2 == 1,
+                ..ChaosCfg::default()
+            };
+            let label = format!(
+                "{} seed={seed:#x} {}",
+                scenario.name(),
+                if cfg.spool { "spool" } else { "store" }
+            );
+            match run_chaos(scenario.as_ref(), &plan, &cfg) {
+                Ok(report) => {
+                    let ok = report.ok();
+                    violations += report.violations.len();
+                    eprintln!(
+                        "soak: {label}: {} ({} faults, {} barriers, {} served)",
+                        if ok { "ok" } else { "VIOLATIONS" },
+                        report.faults.len(),
+                        report.barriers,
+                        report.served
+                    );
+                    for v in &report.violations {
+                        eprintln!("soak:   violation: {v}");
+                    }
+                    reports.push(report.to_json());
+                }
+                Err(e) => {
+                    violations += 1;
+                    eprintln!("soak: {label}: harness error: {e:#}");
+                    reports.push(
+                        Json::obj()
+                            .set("scenario", scenario.name())
+                            .set("seed", format!("{seed:#x}"))
+                            .set("ok", false)
+                            .set("error", format!("{e:#}")),
+                    );
+                }
+            }
+        }
+    }
+
+    let doc = Json::obj()
+        .set("ticks", ticks)
+        .set("seeds_per_scenario", seeds)
+        .set("scenarios", Json::Arr(scenarios.iter().map(|s| Json::Str(s.name().into())).collect()))
+        .set("runs", reports.len())
+        .set("violations", violations as u64)
+        .set("ok", violations == 0)
+        .set("reports", Json::Arr(reports));
+    if let Err(e) = std::fs::write(&out, doc.to_pretty()) {
+        eprintln!("soak: failed to write {out}: {e}");
+        std::process::exit(2);
+    }
+    eprintln!(
+        "soak: {} runs, {} violations -> {out}",
+        scenarios.len() as u64 * seeds,
+        violations
+    );
+    if violations > 0 {
+        std::process::exit(1);
+    }
+}

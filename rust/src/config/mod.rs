@@ -76,6 +76,13 @@ pub struct ExperimentConfig {
     /// acknowledged obligations lost. Needs `durability != off`; a
     /// 1-worker fleet has no peer and ignores the knob.
     pub ship_to_peer: bool,
+    /// Spool directory for file-backed log shipping. When set (and
+    /// `ship_to_peer` is on), shards ship over an on-disk
+    /// [`FileSpool`](crate::persist::FileSpool) rooted here instead of
+    /// the in-process replica store, so shipped frames survive process
+    /// death and failover can recover from the spool alone. Empty
+    /// string (`ship_spool_dir =`) switches back to in-process.
+    pub ship_spool_dir: Option<String>,
     /// Directory for the write-ahead log / snapshots when `durability`
     /// is not `off`.
     pub persist_dir: String,
@@ -131,6 +138,7 @@ impl Default for ExperimentConfig {
             durability: DurabilityMode::Off,
             fsync: FsyncPolicy::Never,
             ship_to_peer: false,
+            ship_spool_dir: None,
             persist_dir: "cause_persist".to_string(),
             compact_every: 512,
             fleet_workers: 1,
@@ -218,6 +226,13 @@ impl ExperimentConfig {
         self
     }
 
+    /// Ship over a file-backed spool rooted at `dir` (frames survive
+    /// process death) instead of the in-process replica store.
+    pub fn with_ship_spool_dir(mut self, dir: impl Into<String>) -> Self {
+        self.ship_spool_dir = Some(dir.into());
+        self
+    }
+
     /// Run the service as a sharded fleet with this many workers.
     pub fn with_fleet_workers(mut self, workers: usize) -> Self {
         self.fleet_workers = workers;
@@ -296,6 +311,9 @@ impl ExperimentConfig {
                 }
             }
             "ship_to_peer" => self.ship_to_peer = parse_bool(v)?,
+            "ship_spool_dir" => {
+                self.ship_spool_dir = if v.is_empty() { None } else { Some(v.to_string()) };
+            }
             "persist_dir" => {
                 if v.is_empty() {
                     bail!("persist_dir must not be empty");
@@ -487,6 +505,14 @@ mod tests {
         c.apply("ship_to_peer", "0").unwrap();
         assert!(!c.ship_to_peer);
         assert!(c.apply("ship_to_peer", "maybe").is_err());
+        // File-backed spool directory; empty reverts to in-process.
+        assert_eq!(c.ship_spool_dir, None);
+        c.apply("ship_spool_dir", "peer_spool").unwrap();
+        assert_eq!(c.ship_spool_dir.as_deref(), Some("peer_spool"));
+        c.apply("ship_spool_dir", "").unwrap();
+        assert_eq!(c.ship_spool_dir, None);
+        let c2 = ExperimentConfig::default().with_ship_spool_dir("sp");
+        assert_eq!(c2.ship_spool_dir.as_deref(), Some("sp"));
         // Builder shorthands.
         let c = ExperimentConfig::default()
             .with_fsync(FsyncPolicy::GroupCommit)

@@ -19,7 +19,7 @@ use crate::coordinator::engine::{Engine, EvalPolicy};
 use crate::fleet::FleetService;
 use crate::memory::{ModelStore, StoreMeter};
 use crate::partition::{ClassBased, Partitioner, Ucdp, Uniform};
-use crate::persist::{Durability, DurabilityMode};
+use crate::persist::{DiskFs, Durability, DurabilityMode, FileSpool};
 use crate::pruning::PruneSchedule;
 use crate::replacement::{FiboR, NoReplace, RandomReplace, ReplacementPolicy};
 use crate::shard_controller::ShardController;
@@ -257,7 +257,22 @@ impl SystemVariant {
                 cfg.fsync,
             )?;
             if cfg.ship_to_peer && n > 1 {
-                fleet.enable_log_shipping()?;
+                match &cfg.ship_spool_dir {
+                    // File-backed spool: shipped frames land on disk
+                    // under `dir`, survive process death, and failover
+                    // recovers a shard from the spool alone.
+                    Some(dir) => {
+                        let spool = FileSpool::open(Box::new(DiskFs::new(dir)?));
+                        let source = spool.clone();
+                        fleet.enable_log_shipping_custom(
+                            std::sync::Arc::new(source),
+                            move |_k| Box::new(spool.clone()),
+                        )?;
+                    }
+                    None => {
+                        fleet.enable_log_shipping()?;
+                    }
+                }
             }
         }
         Ok(fleet)

@@ -41,12 +41,13 @@ use crate::partition::ShardId;
 use crate::persist::recovery::RecoveryReport;
 use crate::persist::ship::materialize_replica;
 use crate::persist::{
-    Durability, DurabilityMode, FsyncPolicy, ReplicaStore, ShipReceipt, ShipTransport,
+    Durability, DurabilityMode, FsyncPolicy, MemFs, PersistFs, Replica, ReplicaSource,
+    ReplicaStore, ShipReceipt, ShipTransport,
 };
 use crate::prng::Rng;
 use crate::sim::Battery;
 use crate::unlearning::service::admission_decide;
-use crate::unlearning::{BatchReport, UnlearningService};
+use crate::unlearning::{BatchReport, JournalStats, UnlearningService};
 use crate::util::Json;
 
 use worker::{Cmd, Reply, WorkerHandle};
@@ -59,17 +60,22 @@ const SHIP_RETRY_LIMIT: u32 = 8;
 /// used at spawn and again by [`FleetService::failover`].
 type ShardFactory = Arc<dyn Fn() -> Result<UnlearningService> + Send + Sync>;
 
-/// Builds the shipping transport for one shard given the fleet's shared
-/// replica store.
-type TransportFactory = Arc<dyn Fn(usize, ReplicaStore) -> Box<dyn ShipTransport> + Send + Sync>;
+/// Builds the shipping transport for one shard. Rebuilt transports (at
+/// failover re-enable) come from the same recipe.
+type TransportFactory = Arc<dyn Fn(usize) -> Box<dyn ShipTransport> + Send + Sync>;
 
-/// Log-shipping state the front-end keeps: the shared replica store (the
-/// fleet's "peer disks"), the transport recipe, and the retry budget —
-/// everything failover and re-enable need.
+/// Log-shipping state the front-end keeps: where failover reads a dead
+/// shard's replica from (the in-process store, or a reopened file spool
+/// for out-of-process transports), the transport recipe, and the retry
+/// budget — everything failover and re-enable need.
 struct Shipping {
-    store: ReplicaStore,
+    source: Arc<dyn ReplicaSource>,
     make: TransportFactory,
     retry_limit: u32,
+    /// The shared in-process store, when the default transport family is
+    /// in use (tests poll watermarks through it). `None` for custom
+    /// out-of-process sources.
+    store: Option<ReplicaStore>,
 }
 
 /// A fleet of shard workers behind the unsharded service surface.
@@ -435,15 +441,44 @@ impl FleetService {
         &mut self,
         make: impl Fn(usize, ReplicaStore) -> Box<dyn ShipTransport> + Send + Sync + 'static,
     ) -> Result<ReplicaStore> {
-        self.ensure_all_alive()?;
         let store = ReplicaStore::new();
-        let make: TransportFactory = Arc::new(make);
+        let st = store.clone();
+        self.enable_shipping_inner(
+            Arc::new(store.clone()),
+            Arc::new(move |k| make(k, st.clone())),
+            Some(store.clone()),
+        )?;
+        Ok(store)
+    }
+
+    /// Ship over a fully custom transport family whose durable state
+    /// lives *outside* the fleet process (e.g. [`FileSpool`] directories
+    /// on disk — [`crate::persist::FileSpool`]). `source` is where
+    /// failover reads a dead shard's replica back from; for an
+    /// out-of-process spool it should **reopen** the spool from its
+    /// backing store rather than trust any in-memory copy, so recovery
+    /// exercises the same path a fresh process would.
+    pub fn enable_log_shipping_custom(
+        &mut self,
+        source: Arc<dyn ReplicaSource>,
+        make: impl Fn(usize) -> Box<dyn ShipTransport> + Send + Sync + 'static,
+    ) -> Result<()> {
+        self.enable_shipping_inner(source, Arc::new(make), None)
+    }
+
+    fn enable_shipping_inner(
+        &mut self,
+        source: Arc<dyn ReplicaSource>,
+        make: TransportFactory,
+        store: Option<ReplicaStore>,
+    ) -> Result<()> {
+        self.ensure_all_alive()?;
         for k in 0..self.workers.len() {
             self.send(
                 k,
                 Cmd::EnableShipping {
                     source: k,
-                    transport: make(k, store.clone()),
+                    transport: make(k),
                     retry_limit: SHIP_RETRY_LIMIT,
                 },
             );
@@ -458,9 +493,8 @@ impl FleetService {
                 return Err(anyhow!("fleet worker {k} failed to enable shipping: {e}"));
             }
         }
-        self.shipping =
-            Some(Shipping { store: store.clone(), make, retry_limit: SHIP_RETRY_LIMIT });
-        Ok(store)
+        self.shipping = Some(Shipping { source, make, retry_limit: SHIP_RETRY_LIMIT, store });
+        Ok(())
     }
 
     /// Seal every shard's group-commit window (one fsync barrier each)
@@ -544,10 +578,38 @@ impl FleetService {
         Ok(merged)
     }
 
-    /// The shared replica store, when shipping is enabled (tests poll
-    /// watermarks through this).
+    /// The shared replica store, when shipping is enabled over the
+    /// default in-process transport family (tests poll watermarks
+    /// through this). `None` for custom out-of-process sources.
     pub fn replica_store(&self) -> Option<&ReplicaStore> {
-        self.shipping.as_ref().map(|s| &s.store)
+        self.shipping.as_ref().and_then(|s| s.store.as_ref())
+    }
+
+    /// Per-shard aggregate journal counters (fsync stats, log/snapshot
+    /// bytes), in shard order; `None` entries have no journal attached.
+    pub fn journal_stats(&self) -> Result<Vec<Option<JournalStats>>> {
+        self.ensure_all_alive()?;
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::JournalStats);
+        }
+        self.collect(|reply| match reply {
+            Reply::JournalStats(s) => Ok(s),
+            other => Err(other),
+        })
+    }
+
+    /// Each shard journal's durable state as a [`Replica`]-shaped value,
+    /// in shard order. The chaos soak's byte-convergence invariant
+    /// compares these against the peers' shipped replicas.
+    pub fn journal_images(&self) -> Result<Vec<Option<Replica>>> {
+        self.ensure_all_alive()?;
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::JournalImage);
+        }
+        self.collect(|reply| match reply {
+            Reply::JournalImage(r) => Ok(*r),
+            other => Err(other),
+        })
     }
 
     /// Kill shard `k`'s worker outright — the crash model for failover
@@ -581,6 +643,18 @@ impl FleetService {
     /// replacement's recovery report: every obligation acknowledged
     /// below the shipped watermark is back.
     pub fn failover(&mut self, k: usize) -> Result<RecoveryReport> {
+        self.failover_wrapped(k, |fs| Box::new(fs))
+    }
+
+    /// [`FleetService::failover`] with the replacement shard's journal
+    /// filesystem wrapped by `wrap` — the chaos harness re-wraps it in a
+    /// tracked [`FailpointFs`](crate::testkit::FailpointFs) so fault
+    /// injection keeps reaching shards across failovers.
+    pub fn failover_wrapped(
+        &mut self,
+        k: usize,
+        wrap: impl FnOnce(MemFs) -> Box<dyn PersistFs>,
+    ) -> Result<RecoveryReport> {
         if k >= self.workers.len() {
             bail!("no fleet worker {k}");
         }
@@ -590,11 +664,11 @@ impl FleetService {
         let Some((mode, fsync, compact_every)) = self.dura_spec[k] else {
             bail!("failover needs durability attached on shard {k}");
         };
-        let (store, make, retry_limit) = match &self.shipping {
-            Some(s) => (s.store.clone(), s.make.clone(), s.retry_limit),
+        let (source, make, retry_limit) = match &self.shipping {
+            Some(s) => (s.source.clone(), s.make.clone(), s.retry_limit),
             None => bail!("failover needs log shipping enabled"),
         };
-        let replica = store.replica(k).unwrap_or_default();
+        let replica = source.replica(k).unwrap_or_default();
         let fs = materialize_replica(&replica);
 
         // A fresh worker from the same recipe, on the same event channel
@@ -612,7 +686,7 @@ impl FleetService {
         // Recover from the peer's copy; the report says what came back.
         self.send(
             k,
-            Cmd::AttachDurability(Durability::mem(mode, fs, compact_every).with_fsync(fsync)),
+            Cmd::AttachDurability(Durability { mode, fs: wrap(fs), compact_every, fsync }),
         );
         let report = self
             .collect_one(k, |reply| match reply {
@@ -623,10 +697,7 @@ impl FleetService {
             .map_err(|e| anyhow!("failover recovery of fleet worker {k} failed: {e}"))?;
         // The replacement ships again (its prime re-converges the peer's
         // replica to the recovered generation).
-        self.send(
-            k,
-            Cmd::EnableShipping { source: k, transport: make(k, store), retry_limit },
-        );
+        self.send(k, Cmd::EnableShipping { source: k, transport: make(k), retry_limit });
         self.collect_one(k, |reply| match reply {
             Reply::ShipEnabled => Ok(Ok(())),
             Reply::Err(e) => Ok(Err(e)),
@@ -649,7 +720,9 @@ impl FleetService {
     /// state — seed, epoch, active range, and the derived per-shard
     /// engine seeds (hex, so full u64 precision survives JSON) for seed
     /// auditing — plus the fleet's merged latency histogram and, when log
-    /// shipping is on, each shard's shipping watermark.
+    /// shipping is on, each shard's shipping watermark with retry
+    /// diagnostics (attempts / faults / last transport error) and its
+    /// journal's fsync counters.
     pub fn state_receipt(&self) -> Result<Json> {
         let mut receipts = self.shard_receipts()?;
         if receipts.len() == 1 {
@@ -673,15 +746,31 @@ impl FleetService {
             .set("routing", routing)
             .set("latency_hist", self.latency_histogram()?.to_json());
         if self.shipping.is_some() {
+            let stats = self.journal_stats()?;
             let states = self
                 .shipping_states()?
                 .into_iter()
-                .map(|(r, log_seq)| {
-                    let o = Json::obj().set("log_seq", log_seq);
+                .zip(stats)
+                .map(|((r, log_seq), js)| {
+                    // Physical journal counters ride with the (equally
+                    // physical) shipping diagnostics; the logical state
+                    // digest under "shards" stays history-independent.
+                    let journal = js.map_or(Json::Null, |s| {
+                        Json::obj()
+                            .set("appended", s.appended)
+                            .set("fsyncs", s.fsyncs)
+                            .set("events_in_log", s.events_in_log)
+                            .set("log_bytes", s.log_bytes)
+                            .set("snapshot_bytes", s.snapshot_bytes)
+                    });
+                    let o = Json::obj().set("log_seq", log_seq).set("journal", journal);
                     match r {
                         Some(r) => o
                             .set("shipped", r.shipped_seq)
                             .set("pending", r.pending)
+                            .set("attempts", r.attempts)
+                            .set("faults", r.faults)
+                            .set("last_error", r.last_error.map_or(Json::Null, Json::Str))
                             .set("failed", r.failed.map_or(Json::Null, Json::Str)),
                         None => o,
                     }
@@ -807,6 +896,20 @@ impl FleetService {
     /// A user's home shard, if they have ever been routed.
     pub fn shard_of(&self, user: UserId) -> Option<ShardId> {
         self.router.lookup(user)
+    }
+
+    /// Rebuild the router's sticky table after a whole-fleet restart by
+    /// replaying the routing touches of `pop`'s first `rounds` training
+    /// rounds in ingest order. Workers recover their engines from their
+    /// journals, but the front-end router is in-memory only; replaying
+    /// the same touch sequence against the same routing seed lands every
+    /// previously-ingested user back on their home shard.
+    pub fn warm_routes(&mut self, pop: &EdgePopulation, rounds: u32) {
+        for r in 1..=rounds {
+            for b in pop.blocks_at(r) {
+                self.router.route(b.user, b.samples);
+            }
+        }
     }
 }
 

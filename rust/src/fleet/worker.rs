@@ -28,10 +28,10 @@ use crate::data::trace::UnlearnRequest;
 use crate::load::LatencyHistogram;
 use crate::metrics::RunMetrics;
 use crate::persist::recovery::RecoveryReport;
-use crate::persist::{Durability, ShipReceipt, ShipTransport};
+use crate::persist::{Durability, Replica, ShipReceipt, ShipTransport};
 use crate::sim::Battery;
 use crate::unlearning::service::Admission;
-use crate::unlearning::{BatchReport, UnlearningService};
+use crate::unlearning::{BatchReport, JournalStats, UnlearningService};
 use crate::util::Json;
 
 /// Commands the fleet front-end sends a shard worker. Processed strictly
@@ -68,6 +68,11 @@ pub(crate) enum Cmd {
     BatchLog,
     Counts,
     JournalEvents,
+    /// Aggregate journal counters (fsync stats, log/snapshot bytes).
+    JournalStats,
+    /// The journal's durable state, [`Replica`]-shaped (soak-harness
+    /// byte-convergence checks compare this against the peer's copy).
+    JournalImage,
     Shutdown,
 }
 
@@ -94,6 +99,8 @@ pub(crate) enum Reply {
     /// Shipping receipt (`None` = shipping off) + journal next_seq.
     Shipping { receipt: Option<ShipReceipt>, log_seq: u64 },
     LatencyHist { hist: Box<LatencyHistogram>, violations: u64 },
+    JournalStats(Option<JournalStats>),
+    JournalImage(Box<Option<Replica>>),
     Err(String),
 }
 
@@ -209,6 +216,8 @@ fn run(
                 carryover_lineages: svc.carryover_lineages(),
             }),
             Cmd::JournalEvents => Some(Reply::Events(svc.journal_events())),
+            Cmd::JournalStats => Some(Reply::JournalStats(svc.journal_stats())),
+            Cmd::JournalImage => Some(Reply::JournalImage(Box::new(svc.journal_image()))),
             Cmd::Shutdown => break,
         };
         if let Some(reply) = reply {

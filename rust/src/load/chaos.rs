@@ -1,0 +1,834 @@
+//! Chaos soak harness: any corpus [`Scenario`] driven open-loop over a
+//! durable, log-shipping fleet while a seeded [`ChaosPlan`] injects the
+//! faults the durability story claims to survive — worker kills with
+//! failover, transport drop/dup/stale bursts, injected fsync failures,
+//! battery collapse, and full crash-restart-recover cycles — and a
+//! continuous invariant checker audits the run at every barrier:
+//!
+//! * **Ledger conservation** — every submitted obligation is eventually
+//!   served; nothing acknowledged is lost across any fault.
+//! * **Receipt-stream monotonicity** — each shard's journal sequence
+//!   never regresses across kills, failovers, or restarts.
+//! * **Watermark progress** — after every barrier, each shard's shipped
+//!   watermark has caught its log head (nothing stuck in backoff).
+//! * **Replica byte-convergence** — after every barrier, the peer's
+//!   [`Replica`] equals the source journal's durable state byte for
+//!   byte, and stays bounded by the source's live (post-compaction)
+//!   WAL: `replica.bytes() <= 2 * live_bytes` (replica-side compaction
+//!   via `ShipReset` deltas is what makes this hold).
+//! * **Recovery receipt-identity** — every kill+failover and every
+//!   crash-restart lands back on the exact pre-fault logical receipt
+//!   (the `shards` digest; physical counters are allowed to reset).
+//!
+//! Faults are applied at *barrier points*: before a kill or restart the
+//! harness seals, converges shipping, and snapshots the logical receipt,
+//! so the loss window is provably empty and any divergence is a real
+//! durability bug rather than harness bookkeeping. Everything is
+//! deterministic — seeded [`Rng`], logical ticks, a [`FaultDial`] that
+//! scales transport fault rates without perturbing the RNG draw
+//! schedule — so a failing `(scenario, seed)` pair replays exactly.
+
+use std::collections::BTreeSet;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::system::SystemVariant;
+use crate::data::dataset::EdgePopulation;
+use crate::fleet::FleetService;
+use crate::persist::{
+    Durability, DurabilityMode, FileSpool, FsyncPolicy, MemFs, Replica, ReplicaSource,
+};
+use crate::prng::Rng;
+use crate::sim::Battery;
+use crate::testkit::{FailpointFs, FailpointTransport, FaultDial};
+use crate::util::Json;
+
+use super::{fnv_fold, ArrivalSchedule, Scenario, ServiceUnderTest, FNV_OFFSET};
+
+/// Transport fault rates during a burst (the [`FaultDial`] scales them
+/// to zero outside bursts and during barriers).
+const DROP_P: f64 = 0.45;
+const DUP_P: f64 = 0.3;
+const STALE_P: f64 = 0.25;
+
+/// Flush opportunities a barrier grants shipping before declaring it
+/// stuck (backoff skips make one flush ≠ one attempt).
+const BARRIER_SPINS: u32 = 10_000;
+
+/// A negligible harvest used to journal the battery's post-state after a
+/// swap ([`with_battery`](FleetService::with_battery) itself is not an
+/// event, so without this anchor a crash-restart would replay the
+/// pre-swap charge).
+const ANCHOR_SECS: f64 = 1e-9;
+
+// ---------------------------------------------------------------------
+// Fault model
+// ---------------------------------------------------------------------
+
+/// The five fault classes the soak mixes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Kill one worker at a converged barrier, fail over onto its peer
+    /// replica, and require receipt-identity.
+    KillFailover,
+    /// Open the transport fault dial (drops, duplicates, stale
+    /// re-deliveries) for `duration` ticks, then require shipping to
+    /// re-converge.
+    TransportBurst,
+    /// Inject one fsync failure into a shard's journal filesystem and
+    /// require the poisoning to surface through the fleet barrier, then
+    /// recover the shard by failover.
+    FsyncFailure,
+    /// Swap in a fully drained battery for `duration` ticks (windows
+    /// park in carryover), then restore the scenario's template.
+    BatteryCollapse,
+    /// Drop the whole fleet, lose every unsynced byte on every shard
+    /// disk, rebuild from the surviving images, and require
+    /// receipt-identity.
+    CrashRestart,
+}
+
+impl FaultClass {
+    pub const ALL: [FaultClass; 5] = [
+        FaultClass::KillFailover,
+        FaultClass::TransportBurst,
+        FaultClass::FsyncFailure,
+        FaultClass::BatteryCollapse,
+        FaultClass::CrashRestart,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultClass::KillFailover => "kill_failover",
+            FaultClass::TransportBurst => "transport_burst",
+            FaultClass::FsyncFailure => "fsync_failure",
+            FaultClass::BatteryCollapse => "battery_collapse",
+            FaultClass::CrashRestart => "crash_restart",
+        }
+    }
+}
+
+/// One scheduled fault. `shard` is a raw slot index, reduced modulo the
+/// fleet's worker count at apply time so one plan fits any fleet shape.
+#[derive(Clone, Copy, Debug)]
+pub struct Fault {
+    pub tick: u64,
+    pub class: FaultClass,
+    pub shard: usize,
+    /// Ticks a burst or collapse stays open (unused by point faults).
+    pub duration: u64,
+}
+
+/// A seeded fault schedule over one run's arrival ticks.
+#[derive(Clone, Debug)]
+pub struct ChaosPlan {
+    pub seed: u64,
+    /// Faults in tick order, at most one per tick.
+    pub faults: Vec<Fault>,
+}
+
+impl ChaosPlan {
+    /// Schedule `max(1, ticks/32)` occurrences of every class in
+    /// `classes` on distinct ticks of `[max(2, ticks/6), ticks)` —
+    /// faults land only after some traffic exists. Deterministic in
+    /// `(seed, ticks, classes)`.
+    pub fn seeded(seed: u64, ticks: u64, classes: &[FaultClass]) -> ChaosPlan {
+        let mut rng = Rng::new(seed ^ 0xc4a0_5eed);
+        let start = (ticks / 6).max(2).min(ticks.saturating_sub(1));
+        let span = ticks.saturating_sub(start).max(1);
+        let per = (ticks / 32).max(1);
+        let mut used = BTreeSet::new();
+        let mut faults = Vec::new();
+        for class in classes {
+            for _ in 0..per {
+                let mut tick = start + rng.below(span);
+                let mut tries = 0;
+                while used.contains(&tick) && tries < 64 {
+                    tick = start + rng.below(span);
+                    tries += 1;
+                }
+                if used.contains(&tick) {
+                    continue; // schedule saturated; keep what fits
+                }
+                used.insert(tick);
+                faults.push(Fault {
+                    tick,
+                    class: *class,
+                    shard: rng.below(64) as usize,
+                    duration: 2 + rng.below(3),
+                });
+            }
+        }
+        faults.sort_by_key(|f| f.tick);
+        ChaosPlan { seed, faults }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Run shape and report
+// ---------------------------------------------------------------------
+
+/// Shape of one chaos soak run (everything but the scenario and plan).
+#[derive(Clone, Copy, Debug)]
+pub struct ChaosCfg {
+    /// Offered arrival rate, requests per tick (kept comfortably under
+    /// every scenario's harvest envelope so "everything drains" stays an
+    /// invariant rather than a saturation question).
+    pub offered_per_tick: f64,
+    /// Ticks of open-loop arrivals (fault schedule spans these).
+    pub ticks: u64,
+    /// Max extra ticks to finish queued and battery-parked work.
+    pub tail_ticks: u64,
+    /// Seed for request selection (the plan carries its own).
+    pub seed: u64,
+    /// Barrier + invariant-check cadence, in ticks.
+    pub check_every: u64,
+    /// Journal auto-compaction cadence (events), kept small so
+    /// replica-side compaction is exercised mid-run.
+    pub compact_every: u64,
+    /// Ship over the file-backed [`FileSpool`] (frames survive process
+    /// death on the peer's disk) instead of the in-process store.
+    pub spool: bool,
+}
+
+impl Default for ChaosCfg {
+    fn default() -> Self {
+        ChaosCfg {
+            offered_per_tick: 0.5,
+            ticks: 48,
+            tail_ticks: 256,
+            seed: 0xc4a05,
+            check_every: 8,
+            compact_every: 12,
+            spool: false,
+        }
+    }
+}
+
+/// One applied fault, for the report.
+#[derive(Clone, Debug)]
+pub struct FaultRecord {
+    pub tick: u64,
+    pub class: &'static str,
+    pub shard: usize,
+    pub duration: u64,
+}
+
+/// Everything one chaos run produced; `ok()` is the soak verdict.
+#[derive(Clone, Debug)]
+pub struct ChaosReport {
+    pub scenario: String,
+    pub seed: u64,
+    pub spool: bool,
+    pub ticks: u64,
+    pub tail_used: u64,
+    pub submitted: u64,
+    pub served: u64,
+    pub exhausted: bool,
+    /// Barriers run (each one = a full invariant sweep).
+    pub barriers: u64,
+    pub failovers: u64,
+    pub restarts: u64,
+    pub faults: Vec<FaultRecord>,
+    /// Invariant violations, in discovery order. Empty = clean soak.
+    pub violations: Vec<String>,
+    /// Final per-shard peer-replica payload bytes (post-compaction).
+    pub replica_bytes: Vec<u64>,
+    /// Final per-shard source live WAL + snapshot bytes.
+    pub live_bytes: Vec<u64>,
+}
+
+impl ChaosReport {
+    pub fn ok(&self) -> bool {
+        self.violations.is_empty()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj()
+            .set("scenario", self.scenario.as_str())
+            .set("seed", format!("{:#x}", self.seed))
+            .set("spool", self.spool)
+            .set("ticks", self.ticks)
+            .set("tail_used", self.tail_used)
+            .set("submitted", self.submitted)
+            .set("served", self.served)
+            .set("exhausted", self.exhausted)
+            .set("barriers", self.barriers)
+            .set("failovers", self.failovers)
+            .set("restarts", self.restarts)
+            .set(
+                "faults",
+                Json::Arr(
+                    self.faults
+                        .iter()
+                        .map(|f| {
+                            Json::obj()
+                                .set("tick", f.tick)
+                                .set("class", f.class)
+                                .set("shard", f.shard)
+                                .set("duration", f.duration)
+                        })
+                        .collect(),
+                ),
+            )
+            .set(
+                "violations",
+                Json::Arr(self.violations.iter().map(|v| Json::Str(v.clone())).collect()),
+            )
+            .set("replica_bytes", self.replica_bytes.clone())
+            .set("live_bytes", self.live_bytes.clone())
+            .set("ok", self.ok())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Spool-backed replica source
+// ---------------------------------------------------------------------
+
+/// Failover source that **reopens** the spool from its backing store on
+/// every read — recovery sees exactly what a fresh process would find on
+/// the peer's disk, never an in-memory copy.
+struct SpoolReopen {
+    fs: MemFs,
+}
+
+impl ReplicaSource for SpoolReopen {
+    fn replica(&self, source: usize) -> Option<Replica> {
+        FileSpool::open(Box::new(self.fs.clone())).replica(source)
+    }
+}
+
+// ---------------------------------------------------------------------
+// The harness
+// ---------------------------------------------------------------------
+
+struct ChaosRun {
+    cfg: ChaosCfg,
+    ecfg: crate::config::ExperimentConfig,
+    battery: Option<Battery>,
+    fleet: Option<FleetService>,
+    /// Per-shard surviving disks (what a crash cannot take).
+    disks: Vec<MemFs>,
+    /// Per-shard failpoint wrappers over `disks` (fsync faults, crash
+    /// truncation); rebuilt at failover/restart so injection keeps
+    /// reaching replacement shards.
+    fps: Vec<FailpointFs>,
+    dial: FaultDial,
+    /// Backing store of the file spool (spool mode only).
+    spool_fs: Option<MemFs>,
+    /// Where the invariant checker reads peer replicas from.
+    rsource: Option<Arc<dyn ReplicaSource>>,
+    /// Per-shard journal-sequence high-water marks (monotonicity).
+    last_log_seq: Vec<u64>,
+    burst_left: u64,
+    collapse_left: u64,
+}
+
+impl ChaosRun {
+    fn new(scenario: &dyn Scenario, cfg: ChaosCfg) -> ChaosRun {
+        let mut ecfg = scenario.config();
+        // Kills and failovers need peers; chaos always runs a real fleet.
+        ecfg.fleet_workers = ecfg.fleet_workers.max(2);
+        // The harness owns durability (failpoint-wrapped journals).
+        ecfg.durability = DurabilityMode::Off;
+        ChaosRun {
+            cfg,
+            ecfg,
+            battery: scenario.battery(),
+            fleet: None,
+            disks: Vec::new(),
+            fps: Vec::new(),
+            dial: FaultDial::new(0.0),
+            spool_fs: None,
+            rsource: None,
+            last_log_seq: Vec::new(),
+            burst_left: 0,
+            collapse_left: 0,
+        }
+    }
+
+    fn fleet(&mut self) -> &mut FleetService {
+        self.fleet.as_mut().expect("fleet alive")
+    }
+
+    fn workers(&self) -> usize {
+        self.ecfg.fleet_workers
+    }
+
+    /// Current transport fault scale (barriers force 0.0 temporarily).
+    fn scale(&self) -> f64 {
+        if self.burst_left > 0 {
+            1.0
+        } else {
+            0.0
+        }
+    }
+
+    /// Build (or rebuild, after a crash) the fleet: battery template,
+    /// failpoint-wrapped volatile journals over `disks`, shipping with
+    /// dial-scaled fault transports.
+    fn build(&mut self, fresh_disks: bool) -> Result<()> {
+        let mut fleet = SystemVariant::Cause.build_fleet(&self.ecfg)?;
+        if let Some(b) = &self.battery {
+            fleet = fleet.with_battery(b.clone());
+        }
+        let n = fleet.workers();
+        if fresh_disks {
+            self.disks = (0..n).map(|_| MemFs::new()).collect();
+        }
+        self.fps = self
+            .disks
+            .iter()
+            .map(|d| {
+                let fp = FailpointFs::new(d.clone());
+                fp.enable_volatile();
+                fp
+            })
+            .collect();
+        let ds = self
+            .fps
+            .iter()
+            .map(|fp| Durability {
+                mode: DurabilityMode::Log,
+                fs: Box::new(fp.clone()),
+                compact_every: self.cfg.compact_every,
+                fsync: FsyncPolicy::GroupCommit,
+            })
+            .collect();
+        fleet.attach_durability(ds).context("chaos: attach durability")?;
+        self.enable_shipping(&mut fleet)?;
+        self.fleet = Some(fleet);
+        Ok(())
+    }
+
+    fn enable_shipping(&mut self, fleet: &mut FleetService) -> Result<()> {
+        let seed = self.cfg.seed;
+        let dial = self.dial.clone();
+        if self.cfg.spool {
+            let fs = self.spool_fs.get_or_insert_with(MemFs::new).clone();
+            let spool = FileSpool::open(Box::new(fs.clone()));
+            fleet.enable_log_shipping_custom(
+                Arc::new(SpoolReopen { fs: fs.clone() }),
+                move |k| {
+                    Box::new(
+                        FailpointTransport::new(
+                            Box::new(spool.clone()),
+                            seed ^ 0xf11e ^ k as u64,
+                            DROP_P,
+                            DUP_P,
+                            STALE_P,
+                        )
+                        .with_dial(dial.clone()),
+                    )
+                },
+            )?;
+            self.rsource = Some(Arc::new(SpoolReopen { fs }));
+        } else {
+            let store = fleet.enable_log_shipping_with(move |k, store| {
+                Box::new(
+                    FailpointTransport::new(
+                        Box::new(store),
+                        seed ^ 0xf11e ^ k as u64,
+                        DROP_P,
+                        DUP_P,
+                        STALE_P,
+                    )
+                    .with_dial(dial.clone()),
+                )
+            })?;
+            self.rsource = Some(Arc::new(store));
+        }
+        Ok(())
+    }
+
+    /// The logical fleet digest: the `shards` sub-document only, so
+    /// physical counters (shipping attempts, fsync totals, routing
+    /// epoch) may reset across recovery without tripping identity.
+    fn shards_digest(&mut self) -> Result<String> {
+        let receipt = self.fleet().state_receipt()?;
+        Ok(receipt
+            .at(&["shards"])
+            .map(ToString::to_string)
+            .unwrap_or_else(|| receipt.to_string()))
+    }
+
+    /// Seal + converge shipping with faults dialed off, then sweep every
+    /// invariant: watermark progress, sequence monotonicity, replica
+    /// byte-convergence, and the bounded-replica property.
+    fn barrier(&mut self, report: &mut ChaosReport, whence: &str) -> Result<()> {
+        report.barriers += 1;
+        self.dial.set(0.0);
+        let mut spins = 0u32;
+        loop {
+            self.fleet().sync_journals().with_context(|| format!("barrier at {whence}"))?;
+            let states = self.fleet().shipping_states()?;
+            let mut done = true;
+            for (k, (r, log_seq)) in states.iter().enumerate() {
+                let r = r
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("chaos: shipping off on shard {k}"))?;
+                if let Some(f) = &r.failed {
+                    report.violations.push(format!(
+                        "{whence}: shard {k} shipping failed terminally: {f}"
+                    ));
+                    self.dial.set(self.scale());
+                    return Ok(());
+                }
+                if r.pending != 0 || r.shipped_seq != *log_seq {
+                    done = false;
+                }
+            }
+            if done {
+                break;
+            }
+            spins += 1;
+            if spins > BARRIER_SPINS {
+                report.violations.push(format!(
+                    "{whence}: shipping failed to converge within {BARRIER_SPINS} flushes"
+                ));
+                self.dial.set(self.scale());
+                return Ok(());
+            }
+        }
+
+        let stats = self.fleet().journal_stats()?;
+        let images = self.fleet().journal_images()?;
+        let source = self.rsource.clone().expect("shipping enabled");
+        report.replica_bytes.clear();
+        report.live_bytes.clear();
+        for k in 0..self.workers() {
+            let Some(st) = stats[k] else {
+                report.violations.push(format!("{whence}: shard {k} lost its journal"));
+                continue;
+            };
+            if st.next_seq < self.last_log_seq[k] {
+                report.violations.push(format!(
+                    "{whence}: shard {k} journal regressed: seq {} < {}",
+                    st.next_seq, self.last_log_seq[k]
+                ));
+            }
+            self.last_log_seq[k] = self.last_log_seq[k].max(st.next_seq);
+            let img = images[k].clone().unwrap_or_default();
+            let replica = source.replica(k).unwrap_or_default();
+            if replica != img {
+                report.violations.push(format!(
+                    "{whence}: shard {k} replica diverged from source durable state \
+                     (replica base {} / {} frames vs source base {} / {} frames)",
+                    replica.base_seq,
+                    replica.frames.len(),
+                    img.base_seq,
+                    img.frames.len()
+                ));
+            }
+            let live = st.live_bytes();
+            if replica.bytes() > 2 * live.max(1) {
+                report.violations.push(format!(
+                    "{whence}: shard {k} replica unbounded: {} bytes vs live {}",
+                    replica.bytes(),
+                    live
+                ));
+            }
+            report.replica_bytes.push(replica.bytes());
+            report.live_bytes.push(live);
+        }
+        self.dial.set(self.scale());
+        Ok(())
+    }
+
+    /// Fail shard `k` over onto its replica, re-wrapping the replacement
+    /// disk in a fresh tracked failpoint filesystem.
+    fn failover_fresh(&mut self, k: usize) -> Result<()> {
+        let mut newfp = None;
+        self.fleet
+            .as_mut()
+            .expect("fleet alive")
+            .failover_wrapped(k, |fs| {
+                let fp = FailpointFs::new(fs);
+                fp.enable_volatile();
+                newfp = Some(fp.clone());
+                Box::new(fp)
+            })?;
+        let fp = newfp.expect("failover ran the wrap");
+        self.disks[k] = fp.inner().clone();
+        self.fps[k] = fp;
+        Ok(())
+    }
+
+    fn swap_battery(&mut self, b: Battery) {
+        let fleet = self.fleet.take().expect("fleet alive");
+        self.fleet = Some(fleet.with_battery(b));
+        // Journal the post-swap state so a later crash-restart replays
+        // the swapped battery, not the pre-swap charge.
+        self.fleet().harvest(ANCHOR_SECS);
+    }
+
+    fn apply(
+        &mut self,
+        fault: &Fault,
+        report: &mut ChaosReport,
+        pop: &EdgePopulation,
+    ) -> Result<()> {
+        let k = fault.shard % self.workers();
+        let whence = format!("tick {} {}", fault.tick, fault.class.name());
+        report.faults.push(FaultRecord {
+            tick: fault.tick,
+            class: fault.class.name(),
+            shard: k,
+            duration: fault.duration,
+        });
+        match fault.class {
+            FaultClass::KillFailover => {
+                self.barrier(report, &whence)?;
+                let pre = self.shards_digest()?;
+                self.fleet().kill_worker(k)?;
+                self.failover_fresh(k)?;
+                report.failovers += 1;
+                let post = self.shards_digest()?;
+                if pre != post {
+                    report.violations.push(format!(
+                        "{whence}: failover changed the fleet's logical state"
+                    ));
+                }
+            }
+            FaultClass::TransportBurst => {
+                self.burst_left = self.burst_left.max(fault.duration);
+                self.dial.set(1.0);
+            }
+            FaultClass::FsyncFailure => {
+                self.barrier(report, &whence)?;
+                self.fps[k].fail_next_syncs(1);
+                // Dirty every journal (a zero-tick Advance event, no
+                // logical state change) so the next barrier definitely
+                // issues the sync that fails.
+                self.fleet().advance(0);
+                if self.fleet().sync_journals().is_ok() {
+                    report.violations.push(format!(
+                        "{whence}: injected fsync failure did not poison shard {k}"
+                    ));
+                } else {
+                    // The shard is poisoned; the only rolled-back event
+                    // is the unacknowledged harvest anchor. Recover it.
+                    self.fleet().kill_worker(k)?;
+                    self.failover_fresh(k)?;
+                    report.failovers += 1;
+                }
+            }
+            FaultClass::BatteryCollapse => {
+                let Some(template) = self.battery.clone() else {
+                    return Ok(()); // mains-powered scenario: nothing to collapse
+                };
+                let mut dead = template;
+                dead.charge_j = 0.0;
+                self.swap_battery(dead);
+                self.collapse_left = self.collapse_left.max(fault.duration);
+            }
+            FaultClass::CrashRestart => {
+                self.barrier(report, &whence)?;
+                let pre = self.shards_digest()?;
+                drop(self.fleet.take()); // joins every worker
+                for fp in &self.fps {
+                    fp.crash_lose_unsynced();
+                }
+                self.build(false)?;
+                // The front-end router is in-memory only; replay the
+                // preload routing touches so recovered users keep their
+                // sticky shard assignments.
+                self.fleet().warm_routes(pop, pop.rounds());
+                report.restarts += 1;
+                let post = self.shards_digest()?;
+                if pre != post {
+                    report.violations.push(format!(
+                        "{whence}: crash-restart recovery diverged from the pre-crash receipt"
+                    ));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Run one scenario open-loop under a chaos plan. See the module docs
+/// for the invariant set; the returned report's `ok()` is the verdict.
+pub fn run_chaos(
+    scenario: &dyn Scenario,
+    plan: &ChaosPlan,
+    cfg: &ChaosCfg,
+) -> Result<ChaosReport> {
+    let mut run = ChaosRun::new(scenario, *cfg);
+    let mut report = ChaosReport {
+        scenario: scenario.name().to_string(),
+        seed: plan.seed,
+        spool: cfg.spool,
+        ticks: cfg.ticks,
+        tail_used: 0,
+        submitted: 0,
+        served: 0,
+        exhausted: false,
+        barriers: 0,
+        failovers: 0,
+        restarts: 0,
+        faults: Vec::new(),
+        violations: Vec::new(),
+        replica_bytes: Vec::new(),
+        live_bytes: Vec::new(),
+    };
+    run.build(true)?;
+    run.last_log_seq = vec![0; run.workers()];
+    let pop = scenario.population(&run.ecfg);
+
+    // Preload every training round (journaled; recovery replays them).
+    let mut factory = super::RequestFactory::new(&pop);
+    for _ in 0..pop.rounds() {
+        run.fleet().ingest_round(&pop)?;
+        factory.ingest_round();
+    }
+
+    let mut rng = Rng::new(fnv_fold(cfg.seed ^ FNV_OFFSET, scenario.name().as_bytes()));
+    let mut schedule = ArrivalSchedule::new();
+    let mut next_fault = 0usize;
+
+    for t in 0..cfg.ticks {
+        // Expire open fault windows first...
+        if run.burst_left > 0 {
+            run.burst_left -= 1;
+            if run.burst_left == 0 {
+                run.dial.set(0.0);
+                run.barrier(&mut report, &format!("tick {t} burst_end"))?;
+            }
+        }
+        if run.collapse_left > 0 {
+            run.collapse_left -= 1;
+            if run.collapse_left == 0 {
+                if let Some(b) = run.battery.clone() {
+                    run.swap_battery(b);
+                }
+            }
+        }
+        // ...then land this tick's scheduled faults.
+        while next_fault < plan.faults.len() && plan.faults[next_fault].tick == t {
+            let fault = plan.faults[next_fault];
+            run.apply(&fault, &mut report, &pop)?;
+            next_fault += 1;
+        }
+
+        // One open-loop tick, exactly as `run_open_loop` shapes it.
+        for _ in 0..schedule.due(cfg.offered_per_tick, scenario.intensity(t)) {
+            match scenario.make_request(&mut factory, &mut rng) {
+                Some(req) => {
+                    run.fleet().submit(req);
+                    report.submitted += 1;
+                }
+                None => report.exhausted = true,
+            }
+        }
+        run.fleet().advance(1);
+        let h = scenario.harvest_secs(t);
+        if h > 0.0 {
+            run.fleet().harvest(h);
+        }
+        {
+            let fleet = run.fleet.take().expect("fleet alive");
+            let mut sut = ServiceUnderTest::Fleet(fleet);
+            scenario.on_tick(t, &mut sut);
+            match sut {
+                ServiceUnderTest::Fleet(f) => run.fleet = Some(f),
+                ServiceUnderTest::Single(_) => unreachable!("chaos drives a fleet"),
+            }
+        }
+        report.served +=
+            run.fleet().drain_batched().with_context(|| format!("drain at tick {t}"))? as u64;
+
+        if cfg.check_every > 0 && (t + 1) % cfg.check_every == 0 {
+            run.barrier(&mut report, &format!("tick {t} checkpoint"))?;
+        }
+    }
+
+    // Close any window still open, then drain the tail.
+    if run.burst_left > 0 {
+        run.burst_left = 0;
+        run.dial.set(0.0);
+        run.barrier(&mut report, "post-run burst_end")?;
+    }
+    if run.collapse_left > 0 {
+        run.collapse_left = 0;
+        if let Some(b) = run.battery.clone() {
+            run.swap_battery(b);
+        }
+    }
+    while report.tail_used < cfg.tail_ticks {
+        if run.fleet().pending()? == 0
+            && run.fleet().carryover_requests()? == 0
+            && run.fleet().carryover_lineages()? == 0
+        {
+            break;
+        }
+        run.fleet().advance(1);
+        let h = scenario.harvest_secs(cfg.ticks + report.tail_used);
+        if h > 0.0 {
+            run.fleet().harvest(h);
+        }
+        report.served += run.fleet().flush_batched()? as u64;
+        report.tail_used += 1;
+    }
+
+    // Ledger conservation: everything submitted was served.
+    if run.fleet().pending()? != 0
+        || run.fleet().carryover_requests()? != 0
+        || run.fleet().carryover_lineages()? != 0
+    {
+        report.violations.push(format!(
+            "tail: {} queued / {} carried requests survived the drain tail",
+            run.fleet().pending()?,
+            run.fleet().carryover_requests()?
+        ));
+    }
+    if report.served != report.submitted {
+        report.violations.push(format!(
+            "ledger: submitted {} but served {}",
+            report.submitted, report.served
+        ));
+    }
+    // Final bound check from a compacted source: the peer replica must
+    // track the post-compaction WAL, not the run's full history.
+    run.fleet().compact_now()?;
+    run.barrier(&mut report, "final")?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_plans_are_seeded_and_distinct_ticked() {
+        let a = ChaosPlan::seeded(7, 64, &FaultClass::ALL);
+        let b = ChaosPlan::seeded(7, 64, &FaultClass::ALL);
+        assert_eq!(a.faults.len(), b.faults.len());
+        for (x, y) in a.faults.iter().zip(&b.faults) {
+            assert_eq!(
+                (x.tick, x.class, x.shard, x.duration),
+                (y.tick, y.class, y.shard, y.duration)
+            );
+        }
+        // Every class present, on distinct ticks, inside the run.
+        let mut ticks = BTreeSet::new();
+        for f in &a.faults {
+            assert!(f.tick >= 2 && f.tick < 64, "fault at {}", f.tick);
+            assert!(ticks.insert(f.tick), "duplicate fault tick {}", f.tick);
+        }
+        for class in FaultClass::ALL {
+            assert!(
+                a.faults.iter().any(|f| f.class == class),
+                "plan missing {}",
+                class.name()
+            );
+        }
+        // Different seeds move the schedule.
+        let c = ChaosPlan::seeded(8, 64, &FaultClass::ALL);
+        assert!(
+            a.faults.iter().zip(&c.faults).any(|(x, y)| x.tick != y.tick),
+            "seed must move the schedule"
+        );
+    }
+}

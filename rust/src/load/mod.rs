@@ -30,6 +30,7 @@
 //! clock), and an FNV-1a digest of the submitted request trace that
 //! tests assert byte-stable across runs.
 
+pub mod chaos;
 pub mod hist;
 pub mod scenarios;
 
@@ -47,6 +48,7 @@ use crate::sim::Battery;
 use crate::unlearning::UnlearningService;
 use crate::util::Json;
 
+pub use chaos::{run_chaos, ChaosCfg, ChaosPlan, ChaosReport, FaultClass};
 pub use hist::LatencyHistogram;
 pub use scenarios::corpus;
 

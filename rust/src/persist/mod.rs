@@ -47,7 +47,10 @@ use std::sync::{Arc, Mutex};
 pub use event::Event;
 pub use log::{EventLog, Manifest};
 pub use recovery::RecoveryReport;
-pub use ship::{Replica, ReplicaStore, ShipReceipt, ShipTransport, Shipment, Shipper};
+pub use ship::{
+    FileSpool, Replica, ReplicaSource, ReplicaStore, ShipReceipt, ShipTransport, Shipment,
+    Shipper,
+};
 pub use snapshot::StateImage;
 
 /// How much the service persists.

@@ -24,9 +24,12 @@
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex};
 
-use crate::persist::frame::{encode_frame, header, CHAIN_SEED, LOG_MAGIC, SNAP_MAGIC};
+use crate::persist::frame::{
+    encode_frame, header, scan_frames, scan_frames_chained, CHAIN_SEED, LOG_MAGIC, SNAP_MAGIC,
+};
 use crate::persist::log::MANIFEST;
-use crate::persist::{Manifest, MemFs};
+use crate::persist::{Manifest, MemFs, PersistFs};
+use crate::util::Json;
 
 /// One delivery unit: a contiguous run of event frames, optionally
 /// preceded by a re-base (snapshot) from a compaction or initial sync.
@@ -78,6 +81,14 @@ impl Replica {
         self.base_seq + self.frames.len() as u64
     }
 
+    /// Payload bytes this replica holds (snapshot + tail frames) — the
+    /// quantity replica-side compaction bounds against the source's live
+    /// WAL.
+    pub fn bytes(&self) -> u64 {
+        self.snapshot.as_ref().map_or(0, |s| s.len() as u64)
+            + self.frames.iter().map(|f| f.len() as u64).sum::<u64>()
+    }
+
     /// Idempotent, sequence-contiguous apply: duplicates are skipped,
     /// stale resets are ignored, and a gap stops the apply (the returned
     /// watermark tells the source where to resume).
@@ -115,6 +126,20 @@ impl Replica {
     }
 }
 
+/// Anything failover can read a peer replica back out of: the in-process
+/// [`ReplicaStore`], the on-disk [`FileSpool`], or a custom transport's
+/// receive side.
+pub trait ReplicaSource: Send + Sync {
+    /// Point-in-time copy of shard `source`'s replica (None if nothing
+    /// was ever shipped).
+    fn replica(&self, source: usize) -> Option<Replica>;
+
+    /// The replica's watermark (0 if nothing was ever shipped).
+    fn watermark(&self, source: usize) -> u64 {
+        self.replica(source).map_or(0, |r| r.watermark())
+    }
+}
+
 /// Shared in-process replica store — the "peer device disks" of a fleet.
 /// Cloning shares the underlying map, so the fleet front-end and every
 /// worker-held transport see the same replicas.
@@ -145,6 +170,16 @@ impl ShipTransport for ReplicaStore {
     }
 }
 
+impl ReplicaSource for ReplicaStore {
+    fn replica(&self, source: usize) -> Option<Replica> {
+        ReplicaStore::replica(self, source)
+    }
+
+    fn watermark(&self, source: usize) -> u64 {
+        ReplicaStore::watermark(self, source)
+    }
+}
+
 /// Shipping state surfaced in receipts.
 #[derive(Clone, Debug, PartialEq)]
 pub struct ShipReceipt {
@@ -154,6 +189,11 @@ pub struct ShipReceipt {
     pub pending: u64,
     /// Deliveries attempted (successes and faults).
     pub attempts: u64,
+    /// Deliveries that returned a transport error.
+    pub faults: u64,
+    /// Most recent transport error (sticky — survives a later success, so
+    /// a flaky link stays diagnosable from the receipt).
+    pub last_error: Option<String>,
     /// Terminal shipping error, once the retry budget is exhausted.
     pub failed: Option<String>,
 }
@@ -167,6 +207,8 @@ pub struct Shipper {
     pending_reset: Option<ShipReset>,
     shipped_seq: u64,
     attempts: u64,
+    faults: u64,
+    last_error: Option<String>,
     fail_streak: u32,
     /// Flush opportunities to skip before the next retry (exponential
     /// backoff in attempt units — deterministic, no wall clock).
@@ -186,6 +228,8 @@ impl Shipper {
             pending_reset: None,
             shipped_seq: 0,
             attempts: 0,
+            faults: 0,
+            last_error: None,
             fail_streak: 0,
             skip: 0,
             retry_limit,
@@ -245,6 +289,8 @@ impl Shipper {
                 self.pending.is_empty()
             }
             Err(e) => {
+                self.faults += 1;
+                self.last_error = Some(e.clone());
                 self.fail_streak += 1;
                 if self.fail_streak > self.retry_limit {
                     self.failed =
@@ -267,6 +313,8 @@ impl Shipper {
             shipped_seq: self.shipped_seq,
             pending: self.pending.len() as u64,
             attempts: self.attempts,
+            faults: self.faults,
+            last_error: self.last_error.clone(),
             failed: self.failed.clone(),
         }
     }
@@ -298,6 +346,322 @@ pub fn materialize_replica(r: &Replica) -> MemFs {
     let m = Manifest { version: 1, next_seq: r.base_seq, snapshot, log: log_name };
     fs.put(MANIFEST, (m.to_json().to_pretty() + "\n").into_bytes());
     fs
+}
+
+/// Name of the [`FileSpool`] index file: which generation files hold each
+/// source's replica. Committed atomically (`PersistFs::write`) after the
+/// generation files themselves are durable, so a crash between the two
+/// leaves the index pointing at the previous complete generation.
+pub const SPOOL_INDEX: &str = "SPOOL.json";
+
+fn spool_log_name(source: usize, base_seq: u64) -> String {
+    format!("spool-{source}.{base_seq}.log")
+}
+
+fn spool_snap_name(source: usize, base_seq: u64) -> String {
+    format!("spool-{source}.{base_seq}.snap")
+}
+
+/// One source's on-disk replica inside a [`FileSpool`].
+struct SpoolEntry {
+    replica: Replica,
+    /// Chain value after the log file's last frame — what the next
+    /// appended frame must chain onto.
+    chain: u32,
+    log_name: String,
+    snap_name: Option<String>,
+}
+
+struct SpoolInner {
+    fs: Box<dyn PersistFs>,
+    entries: BTreeMap<usize, SpoolEntry>,
+}
+
+/// File-backed out-of-process [`ShipTransport`]: the peer's "disk" is a
+/// real spool directory, so shipped frames survive the death of *both*
+/// processes, not just the source. Each source shard gets one generation
+/// pair — `spool-<src>.<base>.log` (CRC-chained frames, append-only
+/// within a generation) and `spool-<src>.<base>.snap` (the re-base
+/// snapshot) — plus the shared [`SPOOL_INDEX`]. A [`ShipReset`] from a
+/// source compaction starts a new generation: the snapshot materializes
+/// the old frames, the old generation files are deleted, and the spool's
+/// footprint stays bounded by the source's live WAL.
+///
+/// Crash consistency mirrors the WAL itself: appends land before the
+/// `sync` barrier that acks the shipment, torn tails are truncated on
+/// open, and the index commit (atomic replace) is the generation switch
+/// point. Any I/O error reloads the affected entry from disk before
+/// reporting a transport fault, so memory never claims bytes the disk
+/// lost and the shipper's retry re-ships exactly what is missing.
+///
+/// Clones share the underlying spool (fleet front-end + per-worker
+/// transports), same as [`ReplicaStore`].
+#[derive(Clone)]
+pub struct FileSpool {
+    inner: Arc<Mutex<SpoolInner>>,
+}
+
+impl FileSpool {
+    /// Open a spool rooted at `fs`, recovering every entry the index
+    /// names. Recovery is tolerant, like the WAL's: torn log tails are
+    /// truncated to the last chain-valid frame, and an entry whose
+    /// snapshot file is unreadable is dropped entirely (the source's
+    /// next shipment re-bases it).
+    pub fn open(mut fs: Box<dyn PersistFs>) -> FileSpool {
+        let mut entries = BTreeMap::new();
+        if let Some(bytes) = fs.read(SPOOL_INDEX) {
+            if let Ok(doc) = Json::parse(&String::from_utf8_lossy(&bytes)) {
+                for e in doc.get("sources").and_then(Json::as_arr).unwrap_or(&[]) {
+                    let (Some(source), Some(base_seq), Some(log_name)) = (
+                        e.get("source").and_then(Json::as_u64),
+                        e.get("base_seq").and_then(Json::as_u64),
+                        e.get("log").and_then(Json::as_str),
+                    ) else {
+                        continue;
+                    };
+                    let snap_name =
+                        e.get("snapshot").and_then(Json::as_str).map(str::to_string);
+                    if let Some(entry) =
+                        load_spool_entry(&mut fs, base_seq, log_name.to_string(), snap_name)
+                    {
+                        entries.insert(source as usize, entry);
+                    }
+                }
+            }
+        }
+        FileSpool { inner: Arc::new(Mutex::new(SpoolInner { fs, entries })) }
+    }
+
+    /// Sources with a spooled replica.
+    pub fn sources(&self) -> Vec<usize> {
+        self.inner.lock().unwrap().entries.keys().copied().collect()
+    }
+}
+
+impl ReplicaSource for FileSpool {
+    fn replica(&self, source: usize) -> Option<Replica> {
+        self.inner.lock().unwrap().entries.get(&source).map(|e| e.replica.clone())
+    }
+}
+
+impl ShipTransport for FileSpool {
+    fn deliver(&mut self, source: usize, s: &Shipment) -> Result<u64, String> {
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let fresh = !inner.entries.contains_key(&source);
+        let entry = inner.entries.entry(source).or_insert_with(|| SpoolEntry {
+            replica: Replica::default(),
+            chain: CHAIN_SEED,
+            log_name: spool_log_name(source, 0),
+            snap_name: None,
+        });
+        // A re-base starts a new on-disk generation; a fresh source needs
+        // its first one even without a reset. Same actionability test as
+        // `Replica::apply`, decided before the in-memory apply mutates.
+        let rebase = fresh
+            || s.reset.as_ref().is_some_and(|r| {
+                r.base_seq > entry.replica.base_seq
+                    || (r.base_seq == entry.replica.base_seq && r.snapshot.is_some())
+            });
+        let old_len = entry.replica.frames.len();
+        let watermark = entry.replica.apply(s);
+        // `io` carries the superseded generation names when a new one was
+        // written; the entry borrow ends here so the index commit below
+        // can read the whole map.
+        let io: std::io::Result<Option<(String, Option<String>)>> = if rebase {
+            write_spool_generation(&mut inner.fs, source, entry).map(Some)
+        } else if entry.replica.frames.len() > old_len {
+            append_spool_frames(&mut inner.fs, entry, old_len).map(|_| None)
+        } else {
+            Ok(None) // pure duplicate — disk already covers it
+        };
+        let result = match io {
+            Err(e) => Err(e),
+            Ok(None) => Ok(()),
+            Ok(Some((old_log, old_snap))) => {
+                match commit_spool_index(&mut inner.fs, &inner.entries) {
+                    Ok(()) => {
+                        // Prune the superseded generation only once the
+                        // index durably points past it.
+                        let (keep_log, keep_snap) = {
+                            let e = &inner.entries[&source];
+                            (e.log_name.clone(), e.snap_name.clone())
+                        };
+                        if old_log != keep_log {
+                            inner.fs.remove(&old_log);
+                        }
+                        if let Some(n) =
+                            old_snap.filter(|n| keep_snap.as_deref() != Some(n.as_str()))
+                        {
+                            inner.fs.remove(&n);
+                        }
+                        Ok(())
+                    }
+                    Err(e) => Err(e),
+                }
+            }
+        };
+        match result {
+            Ok(()) => Ok(watermark),
+            Err(e) => {
+                // Re-adopt the disk's view so memory never runs ahead of
+                // durable state; the shipper's retry re-ships the rest.
+                reload_spool_entry(inner, source);
+                Err(format!("spool I/O fault: {e}"))
+            }
+        }
+    }
+}
+
+/// Write a full new generation (log + optional snapshot) for `source`,
+/// sync both files, then retarget the entry's names. Returns the old
+/// generation's names; the caller removes them only after the index
+/// commit succeeds, so a crash in between never orphans the index.
+fn write_spool_generation(
+    fs: &mut Box<dyn PersistFs>,
+    source: usize,
+    entry: &mut SpoolEntry,
+) -> std::io::Result<(String, Option<String>)> {
+    let old = (entry.log_name.clone(), entry.snap_name.clone());
+    let base = entry.replica.base_seq;
+    let log_name = spool_log_name(source, base);
+    let mut log = header(LOG_MAGIC);
+    let mut chain = CHAIN_SEED;
+    for p in &entry.replica.frames {
+        let (bytes, next) = encode_frame(p, chain);
+        log.extend_from_slice(&bytes);
+        chain = next;
+    }
+    fs.write(&log_name, &log)?;
+    fs.sync(&log_name)?;
+    let snap_name = match &entry.replica.snapshot {
+        Some(payload) => {
+            let name = spool_snap_name(source, base);
+            let mut snap = header(SNAP_MAGIC);
+            snap.extend_from_slice(&encode_frame(payload, CHAIN_SEED).0);
+            fs.write(&name, &snap)?;
+            fs.sync(&name)?;
+            Some(name)
+        }
+        None => None,
+    };
+    entry.log_name = log_name;
+    entry.snap_name = snap_name;
+    entry.chain = chain;
+    Ok(old)
+}
+
+/// Append the frames past `old_len` to the entry's current log file and
+/// seal them with a sync barrier (the shipment is acked only past it).
+fn append_spool_frames(
+    fs: &mut Box<dyn PersistFs>,
+    entry: &mut SpoolEntry,
+    old_len: usize,
+) -> std::io::Result<()> {
+    let mut buf = Vec::new();
+    let mut chain = entry.chain;
+    for p in &entry.replica.frames[old_len..] {
+        let (bytes, next) = encode_frame(p, chain);
+        buf.extend_from_slice(&bytes);
+        chain = next;
+    }
+    fs.append(&entry.log_name, &buf)?;
+    fs.sync(&entry.log_name)?;
+    entry.chain = chain;
+    Ok(())
+}
+
+fn commit_spool_index(
+    fs: &mut Box<dyn PersistFs>,
+    entries: &BTreeMap<usize, SpoolEntry>,
+) -> std::io::Result<()> {
+    let sources = entries
+        .iter()
+        .map(|(src, e)| {
+            Json::obj()
+                .set("source", *src)
+                .set("base_seq", Json::Str(e.replica.base_seq.to_string()))
+                .set("log", e.log_name.as_str())
+                .set(
+                    "snapshot",
+                    e.snap_name.as_ref().map_or(Json::Null, |n| Json::Str(n.clone())),
+                )
+        })
+        .collect::<Vec<_>>();
+    let doc = Json::obj().set("version", 1u64).set("sources", Json::Arr(sources));
+    fs.write(SPOOL_INDEX, (doc.to_pretty() + "\n").as_bytes())?;
+    fs.sync(SPOOL_INDEX)
+}
+
+/// Load one entry from its generation files. `None` drops the entry
+/// (snapshot unreadable — the source's next shipment re-bases).
+fn load_spool_entry(
+    fs: &mut Box<dyn PersistFs>,
+    base_seq: u64,
+    log_name: String,
+    snap_name: Option<String>,
+) -> Option<SpoolEntry> {
+    let snapshot = match &snap_name {
+        Some(name) => {
+            let file = fs.read(name)?;
+            let (mut frames, _) = scan_frames(&file, SNAP_MAGIC);
+            if frames.is_empty() {
+                return None;
+            }
+            Some(frames.remove(0))
+        }
+        None => None,
+    };
+    let raw = match fs.read(&log_name) {
+        Some(bytes) => bytes,
+        None => {
+            // Log never materialized (or was lost): restart it empty so
+            // later appends have a header to chain onto.
+            let h = header(LOG_MAGIC);
+            let _ = fs.write(&log_name, &h);
+            h
+        }
+    };
+    let (frames, valid, chain) = scan_frames_chained(&raw, LOG_MAGIC);
+    if valid < raw.len() {
+        // Torn tail: truncate to the chain-valid prefix so the next
+        // append continues from committed frames, not garbage bytes.
+        let fixed = if valid == 0 { header(LOG_MAGIC) } else { raw[..valid].to_vec() };
+        let _ = fs.write(&log_name, &fixed);
+    }
+    Some(SpoolEntry {
+        replica: Replica { base_seq, snapshot, frames },
+        chain,
+        log_name,
+        snap_name,
+    })
+}
+
+/// Re-adopt the on-disk view of `source` after an I/O fault: reload from
+/// the committed index, or forget the entry if the index never learned of
+/// it.
+fn reload_spool_entry(inner: &mut SpoolInner, source: usize) {
+    let meta = inner.fs.read(SPOOL_INDEX).and_then(|bytes| {
+        let doc = Json::parse(&String::from_utf8_lossy(&bytes)).ok()?;
+        doc.get("sources")?.as_arr()?.iter().find_map(|e| {
+            if e.get("source").and_then(Json::as_u64) != Some(source as u64) {
+                return None;
+            }
+            Some((
+                e.get("base_seq").and_then(Json::as_u64)?,
+                e.get("log").and_then(Json::as_str)?.to_string(),
+                e.get("snapshot").and_then(Json::as_str).map(str::to_string),
+            ))
+        })
+    });
+    match meta.and_then(|(base, log, snap)| load_spool_entry(&mut inner.fs, base, log, snap)) {
+        Some(entry) => {
+            inner.entries.insert(source, entry);
+        }
+        None => {
+            inner.entries.remove(&source);
+        }
+    }
 }
 
 #[cfg(test)]
@@ -404,6 +768,130 @@ mod tests {
         assert_eq!(rec.attempts, 3, "limit of 2 retries = 3 total attempts");
         assert!(!sh.is_drained());
         assert_eq!(store.watermark(3), 0);
+    }
+
+    #[test]
+    fn receipt_carries_fault_diagnostics() {
+        let store = ReplicaStore::new();
+        let flaky = Flaky { store: store.clone(), calls: 0, fail_on: vec![1] };
+        let mut sh = Shipper::new(0, Box::new(flaky), 5);
+        sh.stage(0, b"e0".to_vec());
+        assert!(!sh.flush()); // fault 1
+        assert!(!sh.flush()); // backoff skip
+        assert!(sh.flush()); // success
+        let rec = sh.receipt();
+        assert_eq!(rec.attempts, 2);
+        assert_eq!(rec.faults, 1);
+        assert_eq!(rec.last_error.as_deref(), Some("injected fault on call 1"));
+        assert!(rec.failed.is_none(), "sticky last_error is diagnostic, not terminal");
+    }
+
+    #[test]
+    fn file_spool_survives_reopen_and_prunes_generations_on_compact() {
+        let disk = MemFs::new();
+        {
+            let spool = FileSpool::open(Box::new(disk.clone()));
+            let mut sh = Shipper::new(1, Box::new(spool.clone()), 3);
+            sh.prime(0, None, vec![]);
+            sh.stage(0, b"a".to_vec());
+            sh.stage(1, b"b".to_vec());
+            assert!(sh.flush());
+            assert!(disk.file("spool-1.0.log").is_some());
+            sh.on_compact(2, b"SNAP@2".to_vec());
+            sh.stage(2, b"c".to_vec());
+            assert!(sh.flush());
+            sh.stage(3, b"d".to_vec());
+            assert!(sh.flush());
+            assert_eq!(ReplicaSource::watermark(&spool, 1), 4);
+        }
+        // Old generation gone, new one present, index committed.
+        assert!(disk.file("spool-1.0.log").is_none(), "pre-compaction generation pruned");
+        assert!(disk.file("spool-1.2.log").is_some());
+        assert!(disk.file("spool-1.2.snap").is_some());
+        // A fresh process (the failover peer) reopens the spool from disk
+        // alone and recovers the identical replica.
+        let spool = FileSpool::open(Box::new(disk.clone()));
+        assert_eq!(spool.sources(), vec![1]);
+        let replica = ReplicaSource::replica(&spool, 1).expect("replica spooled");
+        assert_eq!(replica.base_seq, 2);
+        assert_eq!(replica.snapshot.as_deref(), Some(b"SNAP@2".as_slice()));
+        assert_eq!(replica.frames, vec![b"c".to_vec(), b"d".to_vec()]);
+        assert_eq!(replica.bytes(), 6 + 2);
+        let opened =
+            EventLog::open(Box::new(materialize_replica(&replica))).expect("recovery path");
+        assert_eq!(opened.log.next_seq(), 4);
+        assert_eq!(opened.torn_bytes, 0);
+    }
+
+    #[test]
+    fn file_spool_truncates_torn_tails_and_reships_the_difference() {
+        let disk = MemFs::new();
+        let spool = FileSpool::open(Box::new(disk.clone()));
+        let mut sh = Shipper::new(0, Box::new(spool), 3);
+        sh.prime(0, None, vec![]);
+        for seq in 0..4u64 {
+            sh.stage(seq, format!("event-{seq}").into_bytes());
+        }
+        assert!(sh.flush());
+        // Tear the spool log mid-frame (simulated crash of the peer).
+        let mut log = disk.file("spool-0.0.log").unwrap();
+        log.truncate(log.len() - 3);
+        disk.put("spool-0.0.log", log);
+        // Reopen: the torn frame is discarded, watermark steps back.
+        let spool = FileSpool::open(Box::new(disk.clone()));
+        assert_eq!(ReplicaSource::watermark(&spool, 0), 3);
+        // The source re-ships from its own staging; the idempotent apply
+        // dedups the survivors and restores the lost frame.
+        let mut sh = Shipper::new(0, Box::new(spool.clone()), 3);
+        sh.prime(0, None, (0..4).map(|s| format!("event-{s}").into_bytes()).collect());
+        assert!(sh.flush());
+        let replica = ReplicaSource::replica(&spool, 0).unwrap();
+        assert_eq!(replica.watermark(), 4);
+        assert_eq!(replica.frames[3], b"event-3");
+        // And the repaired log parses cleanly end to end on disk.
+        let (frames, valid, _) = crate::persist::frame::scan_frames_chained(
+            &disk.file("spool-0.0.log").unwrap(),
+            LOG_MAGIC,
+        );
+        assert_eq!(frames.len(), 4);
+        assert_eq!(valid, disk.file("spool-0.0.log").unwrap().len());
+    }
+
+    #[test]
+    fn file_spool_io_fault_reports_err_and_memory_tracks_disk() {
+        use crate::testkit::FailpointFs;
+        let mem = MemFs::new();
+        let fp = FailpointFs::new(mem.clone());
+        let mut spool = FileSpool::open(Box::new(fp.clone()));
+        // First delivery lands (generation write + index commit).
+        let ok = spool.deliver(
+            0,
+            &Shipment {
+                first_seq: 0,
+                frames: vec![b"e0".to_vec()],
+                reset: Some(ShipReset { base_seq: 0, snapshot: None }),
+            },
+        );
+        assert_eq!(ok, Ok(1));
+        // Append path hits an injected fsync failure: the transport must
+        // report a fault and fall back to the disk's committed view.
+        fp.fail_next_syncs(1);
+        let err = spool.deliver(
+            0,
+            &Shipment { first_seq: 1, frames: vec![b"e1".to_vec()], reset: None },
+        );
+        assert!(err.is_err(), "sync fault must surface as a transport fault");
+        // Retry (the shipper's job) succeeds and dedups correctly.
+        let ok = spool.deliver(
+            0,
+            &Shipment { first_seq: 1, frames: vec![b"e1".to_vec()], reset: None },
+        );
+        assert_eq!(ok, Ok(2));
+        let replica = ReplicaSource::replica(&spool, 0).unwrap();
+        assert_eq!(replica.frames, vec![b"e0".to_vec(), b"e1".to_vec()]);
+        // Disk agrees with memory: reopen and compare.
+        let reopened = FileSpool::open(Box::new(mem.clone()));
+        assert_eq!(ReplicaSource::replica(&reopened, 0), Some(replica));
     }
 
     #[test]

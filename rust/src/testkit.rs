@@ -170,6 +170,39 @@ impl PersistFs for FailpointFs {
     }
 }
 
+/// A shared throttle on [`FailpointTransport`] fault rates: every
+/// configured probability is multiplied by the dial's current scale, so a
+/// chaos runner can open a transport-fault *burst* (`set(1.0)`) and close
+/// it again (`set(0.0)`) mid-run without rebuilding the transports.
+/// Clones share the scale. The RNG draw schedule is unchanged by the
+/// dial — a probability of `p * 0.0` still consumes the same draws as
+/// `p * 1.0` — so runs with identical seeds stay comparable.
+#[derive(Clone)]
+pub struct FaultDial {
+    scale: Arc<Mutex<f64>>,
+}
+
+impl FaultDial {
+    /// A dial starting at `scale` (1.0 = configured rates, 0.0 = off).
+    pub fn new(scale: f64) -> FaultDial {
+        FaultDial { scale: Arc::new(Mutex::new(scale)) }
+    }
+
+    pub fn set(&self, scale: f64) {
+        *self.scale.lock().unwrap() = scale;
+    }
+
+    pub fn get(&self) -> f64 {
+        *self.scale.lock().unwrap()
+    }
+}
+
+impl Default for FaultDial {
+    fn default() -> FaultDial {
+        FaultDial::new(1.0)
+    }
+}
+
 /// A [`ShipTransport`] that injects the classic network faults — drops,
 /// duplicates, and stale (reordered) re-deliveries — deterministically
 /// from a seed. Wraps a real transport: `Err` returns mean the shipment
@@ -181,6 +214,7 @@ pub struct FailpointTransport {
     drop_p: f64,
     dup_p: f64,
     stale_p: f64,
+    dial: Option<FaultDial>,
     held: Option<(usize, Shipment)>,
 }
 
@@ -192,13 +226,31 @@ impl FailpointTransport {
         dup_p: f64,
         stale_p: f64,
     ) -> FailpointTransport {
-        FailpointTransport { inner, rng: Rng::new(seed), drop_p, dup_p, stale_p, held: None }
+        FailpointTransport {
+            inner,
+            rng: Rng::new(seed),
+            drop_p,
+            dup_p,
+            stale_p,
+            dial: None,
+            held: None,
+        }
+    }
+
+    /// Attach a shared [`FaultDial`] scaling all three fault rates.
+    pub fn with_dial(mut self, dial: FaultDial) -> FailpointTransport {
+        self.dial = Some(dial);
+        self
+    }
+
+    fn scaled(&self, p: f64) -> f64 {
+        p * self.dial.as_ref().map_or(1.0, FaultDial::get)
     }
 }
 
 impl ShipTransport for FailpointTransport {
     fn deliver(&mut self, source: usize, shipment: &Shipment) -> Result<u64, String> {
-        if self.rng.chance(self.drop_p) {
+        if self.rng.chance(self.scaled(self.drop_p)) {
             return Err("injected transport drop".to_string());
         }
         if let Some((src, stale)) = self.held.take() {
@@ -206,10 +258,10 @@ impl ShipTransport for FailpointTransport {
             self.inner.deliver(src, &stale)?;
         }
         let watermark = self.inner.deliver(source, shipment)?;
-        if self.rng.chance(self.dup_p) {
+        if self.rng.chance(self.scaled(self.dup_p)) {
             self.inner.deliver(source, shipment)?;
         }
-        if self.rng.chance(self.stale_p) {
+        if self.rng.chance(self.scaled(self.stale_p)) {
             self.held = Some((source, shipment.clone()));
         }
         Ok(watermark)

@@ -10,4 +10,4 @@ pub mod batch;
 pub mod service;
 
 pub use batch::{BatchPlan, BatchPlanner, BatchPolicy, LineagePlan};
-pub use service::{BatchReport, ServiceReport, UnlearningService};
+pub use service::{BatchReport, JournalStats, ServiceReport, UnlearningService};

@@ -9,13 +9,43 @@ use crate::metrics::{LatencyReceipt, RunMetrics};
 use crate::persist::event::{BatteryPost, Event, LatencyRecord, MetricsPost};
 use crate::persist::recovery::{self, RecoveryReport};
 use crate::persist::snapshot::{BatteryImage, MetricsImage, StateImage};
-use crate::persist::{Durability, DurabilityMode, ShipReceipt, ShipTransport, Shipper};
+use crate::persist::{
+    Durability, DurabilityMode, Replica, ShipReceipt, ShipTransport, Shipper,
+};
 use crate::sim::Battery;
 
 use super::{
     batch_from_rec, batch_rec_of, carryover_from_rec, carryover_rec_of, req_from_rec,
     req_rec_of, svc_from_rec, svc_rec_of, Journal, UnlearningService,
 };
+
+/// Aggregate journal counters, surfaced per-shard through the fleet
+/// front-end's merged receipts and consumed by the chaos soak's
+/// replica-boundedness invariant.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct JournalStats {
+    /// Events appended over the journal's lifetime.
+    pub appended: u64,
+    /// Fsync barriers issued (appended / fsyncs = group-commit
+    /// amortization).
+    pub fsyncs: u64,
+    /// Next event sequence number.
+    pub next_seq: u64,
+    /// Events in the live log tail (since the last compaction).
+    pub events_in_log: u64,
+    /// Payload bytes in the live log tail.
+    pub log_bytes: u64,
+    /// Bytes of the current generation's snapshot (0 if none).
+    pub snapshot_bytes: u64,
+}
+
+impl JournalStats {
+    /// Bytes of the source's live durable state (snapshot + log tail) —
+    /// the bound a compacting peer replica must stay within.
+    pub fn live_bytes(&self) -> u64 {
+        self.log_bytes + self.snapshot_bytes
+    }
+}
 
 impl UnlearningService {
     /// Attach a durability journal, first recovering whatever state the
@@ -127,6 +157,34 @@ impl UnlearningService {
     /// commit amortization ratio. `None` without a journal.
     pub fn journal_fsync_stats(&self) -> Option<(u64, u64)> {
         self.journal.as_ref().map(|j| j.log.fsync_stats())
+    }
+
+    /// Aggregate journal counters (see [`JournalStats`]). `None` without
+    /// a journal.
+    pub fn journal_stats(&self) -> Option<JournalStats> {
+        self.journal.as_ref().map(|j| {
+            let (appended, fsyncs) = j.log.fsync_stats();
+            JournalStats {
+                appended,
+                fsyncs,
+                next_seq: j.log.next_seq(),
+                events_in_log: j.log.events_in_log(),
+                log_bytes: j.log.log_bytes(),
+                snapshot_bytes: j.log.snapshot_bytes().map_or(0, |s| s.len() as u64),
+            }
+        })
+    }
+
+    /// The journal's durable state as a [`Replica`]-shaped value — the
+    /// current generation's snapshot plus the complete log-tail frames.
+    /// Equality with the peer's shipped [`Replica`] is the chaos soak's
+    /// byte-convergence check. `None` without a journal.
+    pub fn journal_image(&self) -> Option<Replica> {
+        self.journal.as_ref().map(|j| Replica {
+            base_seq: j.log.manifest().next_seq,
+            snapshot: j.log.snapshot_bytes(),
+            frames: j.log.tail_frames(),
+        })
     }
 
     /// The journal's next event sequence number (0 without a journal) —

@@ -34,6 +34,7 @@
 mod journal;
 mod windows;
 
+pub use journal::JournalStats;
 pub(crate) use windows::{admission_decide, Admission, PricedWindow};
 
 use std::collections::VecDeque;

@@ -1,0 +1,121 @@
+//! Chaos soak harness: seeded fault schedules over corpus scenarios.
+//!
+//! CI's dedicated soak job (`cargo run --release --bin soak`) runs the
+//! wide multi-seed sweep; these tests keep a small but representative
+//! matrix inside tier-1 so a broken invariant checker or a durability
+//! regression fails `cargo test` directly:
+//!
+//! * every fault class (kill+failover, transport burst, fsync failure,
+//!   battery collapse, crash-restart) lands at least once per run;
+//! * both shipping paths soak — the in-process replica store and the
+//!   file-backed spool whose frames survive process death;
+//! * a clean run reports zero invariant violations, a fully drained
+//!   ledger, and per-shard replicas bounded by the source's live WAL;
+//! * the whole harness is deterministic: same (scenario, plan, cfg)
+//!   twice gives byte-identical reports.
+
+use cause::load::chaos::{run_chaos, ChaosCfg, ChaosPlan, ChaosReport, FaultClass};
+use cause::load::corpus;
+use cause::load::Scenario;
+
+/// Small soak shape shared by the tests: enough ticks for one fault of
+/// every class (plans schedule max(1, ticks/32) per class) with frequent
+/// invariant checkpoints.
+fn small_cfg(seed: u64, spool: bool) -> ChaosCfg {
+    ChaosCfg {
+        ticks: 28,
+        check_every: 7,
+        seed,
+        spool,
+        ..ChaosCfg::default()
+    }
+}
+
+fn find(name: &str) -> Box<dyn Scenario> {
+    corpus()
+        .into_iter()
+        .find(|s| s.name() == name)
+        .unwrap_or_else(|| panic!("corpus scenario {name} missing"))
+}
+
+/// Run one soak and fail the test with the full violation list if the
+/// report is not clean.
+fn soak(name: &str, seed: u64, spool: bool) -> ChaosReport {
+    let scenario = find(name);
+    let plan = ChaosPlan::seeded(seed, 28, &FaultClass::ALL);
+    let report = run_chaos(scenario.as_ref(), &plan, &small_cfg(seed, spool))
+        .unwrap_or_else(|e| panic!("{name} seed {seed:#x}: harness error: {e:#}"));
+    assert!(
+        report.ok(),
+        "{name} seed {seed:#x} (spool={spool}) violated invariants:\n  {}",
+        report.violations.join("\n  ")
+    );
+    report
+}
+
+fn classes_applied(report: &ChaosReport) -> Vec<&'static str> {
+    report.faults.iter().map(|f| f.class).collect()
+}
+
+#[test]
+fn chaos_soak_battery_scenario_survives_all_fault_classes() {
+    // satellite_windows: harvest-limited eclipse orbit — battery
+    // collapse actually parks work, crash-restart must replay the
+    // battery anchors.
+    let report = soak("satellite_windows", 0xc4a0_0001, false);
+    let classes = classes_applied(&report);
+    for class in FaultClass::ALL {
+        assert!(
+            classes.contains(&class.name()),
+            "plan skipped {} (applied: {classes:?})",
+            class.name()
+        );
+    }
+    assert!(report.failovers >= 1, "kill/fsync faults must fail over");
+    assert!(report.restarts >= 1, "crash_restart must rebuild the fleet");
+    assert!(report.barriers > 0 && report.submitted > 0);
+    assert_eq!(report.served, report.submitted, "ledger must balance");
+    // The final barrier ran against a compacted source: every shard's
+    // peer replica stays within 2x the live WAL.
+    assert!(!report.replica_bytes.is_empty());
+    for (k, (&r, &l)) in
+        report.replica_bytes.iter().zip(&report.live_bytes).enumerate()
+    {
+        assert!(r <= 2 * l.max(1), "shard {k}: replica {r} bytes vs live {l}");
+    }
+}
+
+#[test]
+fn chaos_soak_fleet_churn_scenario_stays_clean() {
+    // iot_fleet_churn re-routes new users onto a shrunken active set
+    // every cycle — chaos faults must compose with routing churn.
+    let report = soak("iot_fleet_churn", 0xc4a0_0002, false);
+    assert_eq!(report.served, report.submitted);
+    assert!(report.restarts >= 1);
+}
+
+#[test]
+fn chaos_soak_over_file_backed_spool() {
+    // Same invariants with shipping over the on-disk FileSpool: failover
+    // and crash recovery read replicas back through a freshly reopened
+    // spool, exactly as a separate process would.
+    let report = soak("gdpr_storm", 0xc4a0_0003, true);
+    assert!(report.spool);
+    assert!(report.failovers >= 1);
+    assert_eq!(report.served, report.submitted);
+}
+
+#[test]
+fn chaos_soak_is_deterministic() {
+    let scenario = find("gdpr_storm");
+    let plan = ChaosPlan::seeded(0xc4a0_0004, 28, &FaultClass::ALL);
+    let cfg = small_cfg(0xc4a0_0004, false);
+    let a = run_chaos(scenario.as_ref(), &plan, &cfg).expect("first run");
+    let b = run_chaos(scenario.as_ref(), &plan, &cfg).expect("second run");
+    assert!(a.ok(), "violations:\n  {}", a.violations.join("\n  "));
+    assert_eq!(
+        a.to_json().to_pretty(),
+        b.to_json().to_pretty(),
+        "same (scenario, plan, cfg) must replay byte-identically"
+    );
+}

@@ -20,6 +20,19 @@
 //!   log, manifest commit, old-generation removal); rebuilding the fleet
 //!   from the surviving images always lands on the merged pre-crash
 //!   receipt, whichever shard died.
+//! * **Fsync poisoning** — an injected fsync failure on one shard's
+//!   journal poisons every fallible front-end op (nothing is acked over
+//!   a torn journal) until failover replaces the shard.
+//! * **Backoff saturation** — a permanently-dead transport exhausts the
+//!   shipper's retry budget cleanly: terminal `failed`, sticky
+//!   `last_error`, and full retry diagnostics in the merged receipt,
+//!   with the journal itself unharmed.
+//! * **File-backed spool failover** — shipping over the on-disk
+//!   [`FileSpool`] leaves enough on the peer's filesystem that a
+//!   failover recovering from a *reopened* spool (what a fresh process
+//!   would find after the peer died) still loses nothing.
+
+use std::sync::Arc;
 
 use cause::config::ExperimentConfig;
 use cause::coordinator::system::SystemVariant;
@@ -29,8 +42,12 @@ use cause::fleet::FleetService;
 use cause::memory::StoreMeter;
 use cause::persist::frame::HEADER_LEN;
 use cause::persist::ship::materialize_replica;
-use cause::persist::{Durability, DurabilityMode, FsyncPolicy, MemFs};
+use cause::persist::{
+    Durability, DurabilityMode, FileSpool, FsyncPolicy, MemFs, Replica, ReplicaSource,
+    ReplicaStore, ShipTransport, Shipment,
+};
 use cause::testkit::{FailpointFs, FailpointTransport};
+use cause::util::Json;
 
 const WAL: &str = "wal-0.log";
 const MANIFEST: &str = "MANIFEST.json";
@@ -381,4 +398,226 @@ fn fleet_compaction_killpoints_preserve_merged_receipts() {
             );
         }
     }
+}
+
+/// An injected fsync failure on one shard's journal poisons every
+/// fallible front-end operation — the fleet refuses to ack anything over
+/// a torn journal — until failover replaces the shard from its shipped
+/// replica.
+#[test]
+fn fsync_failure_poisons_fleet_ops_until_failover() {
+    let (mut cfg, pop, trace) = workload(91);
+    cfg.fleet_workers = 2;
+    let fps: Vec<FailpointFs> = (0..2).map(|_| FailpointFs::new(MemFs::new())).collect();
+    let mut f = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    f.attach_durability(
+        fps.iter()
+            .map(|fp| Durability {
+                mode: DurabilityMode::Log,
+                fs: Box::new(fp.clone()),
+                compact_every: 0,
+                fsync: FsyncPolicy::GroupCommit,
+            })
+            .collect(),
+    )
+    .unwrap();
+    f.enable_log_shipping().unwrap();
+
+    for t in 1..=3u32 {
+        step_round(&mut f, t, &pop, &trace);
+    }
+    f.sync_journals().unwrap();
+
+    // Arm one fsync failure on shard 0 and dirty every journal with a
+    // zero-tick Advance (no logical state change): the next seal issues
+    // the barrier that fails.
+    fps[0].fail_next_syncs(1);
+    f.advance(0);
+    let err = f.sync_journals().unwrap_err().to_string();
+    assert!(err.contains("injected fsync failure"), "unexpected error: {err}");
+
+    // The poison is sticky: every fallible front-end op refuses.
+    assert!(f.drain_batched().is_err());
+    assert!(f.flush_batched().is_err());
+    assert!(f.sync_journals().is_err());
+
+    // Failover onto the shipped replica heals the fleet.
+    f.kill_worker(0).unwrap();
+    let report = f.failover(0).unwrap();
+    assert!(
+        report.events_replayed > 0 || report.snapshot_loaded,
+        "failover must recover the shipped log: {report:?}"
+    );
+    f.sync_journals().unwrap();
+    for t in 4..=cfg.rounds {
+        step_round(&mut f, t, &pop, &trace);
+    }
+    f.flush_batched().unwrap();
+    f.state_receipt().unwrap();
+}
+
+/// A transport that never delivers anything.
+struct DeadTransport;
+
+impl ShipTransport for DeadTransport {
+    fn deliver(&mut self, _source: usize, _s: &Shipment) -> Result<u64, String> {
+        Err("transport down".to_string())
+    }
+}
+
+/// A permanently-dead transport exhausts the shipper's retry budget
+/// cleanly: terminal `failed`, sticky `last_error`, faults == attempts —
+/// and the journal itself is unharmed (drains keep working; the loss is
+/// replication headroom, not durability). The merged receipt carries the
+/// full retry diagnostics plus each shard's journal fsync counters.
+#[test]
+fn shipper_backoff_saturates_cleanly_on_dead_transport() {
+    let (mut cfg, pop, trace) = workload(101);
+    cfg.fleet_workers = 2;
+    let mut f = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    f.attach_durability(vec![
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+    ])
+    .unwrap();
+    f.enable_log_shipping_custom(Arc::new(ReplicaStore::new()), |_k| Box::new(DeadTransport))
+        .unwrap();
+
+    for t in 1..=3u32 {
+        step_round(&mut f, t, &pop, &trace);
+    }
+    // Pump seals until every shipper's retry budget exhausts (backoff
+    // skips spread the attempts over many flush opportunities).
+    let mut gave_up = false;
+    for _ in 0..10_000 {
+        f.sync_journals().unwrap(); // shipping failure is not a journal failure
+        let states = f.shipping_states().unwrap();
+        if states.iter().all(|(r, _)| r.as_ref().unwrap().failed.is_some()) {
+            gave_up = true;
+            break;
+        }
+    }
+    assert!(gave_up, "dead transport must exhaust the retry budget");
+    for (r, log_seq) in f.shipping_states().unwrap() {
+        let r = r.expect("shipping enabled");
+        assert!(r.failed.as_ref().unwrap().contains("transport down"), "{r:?}");
+        assert_eq!(r.last_error.as_deref(), Some("transport down"));
+        assert_eq!(r.faults, r.attempts, "every delivery must have faulted");
+        assert!(r.attempts >= 8, "terminal failure needs the full retry budget: {r:?}");
+        assert_eq!(r.shipped_seq, 0, "nothing can have shipped");
+        assert!(r.pending > 0);
+        assert!(log_seq > 0);
+    }
+
+    // Journal unharmed: the fleet still serves and seals.
+    f.ingest_round(&pop).unwrap();
+    f.drain_batched().unwrap();
+
+    // Satellite diagnostics in the merged receipt: retry counters, the
+    // last transport error, and journal fsync stats per shard.
+    let receipt = f.state_receipt().unwrap();
+    let shipping = receipt.at(&["shipping"]).unwrap().as_arr().unwrap();
+    assert_eq!(shipping.len(), 2);
+    for entry in shipping {
+        assert_eq!(
+            entry.get("last_error").and_then(Json::as_str),
+            Some("transport down")
+        );
+        assert!(entry.get("failed").and_then(Json::as_str).is_some());
+        assert!(entry.get("attempts").and_then(Json::as_u64).unwrap() >= 8);
+        assert!(entry.get("faults").and_then(Json::as_u64).unwrap() >= 8);
+        let journal = entry.get("journal").expect("per-shard journal stats");
+        assert!(journal.get("fsyncs").and_then(Json::as_u64).is_some());
+        assert!(journal.get("log_bytes").and_then(Json::as_u64).unwrap() > 0);
+        assert!(journal.get("appended").and_then(Json::as_u64).unwrap() > 0);
+    }
+}
+
+/// Failover source that **reopens** the spool from its backing
+/// filesystem on every read — recovery sees exactly what a fresh process
+/// would find on the peer's disk after the shipping process died.
+struct ReopenSpool {
+    fs: MemFs,
+}
+
+impl ReplicaSource for ReopenSpool {
+    fn replica(&self, source: usize) -> Option<Replica> {
+        FileSpool::open(Box::new(self.fs.clone())).replica(source)
+    }
+}
+
+/// Shipping over the file-backed spool leaves everything failover needs
+/// on the peer's filesystem: kill a worker and recover it from a
+/// *reopened* spool (fresh parse of the on-disk index + frame files,
+/// never an in-memory copy) — the failed-over fleet stays
+/// receipt-identical to one that never died.
+#[test]
+fn failover_recovers_from_file_backed_spool() {
+    let (mut cfg, pop, trace) = workload(113);
+    cfg.fleet_workers = 2;
+
+    let spool_fs = MemFs::new();
+    let mut a = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    a.attach_durability(vec![
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+    ])
+    .unwrap();
+    let spool = FileSpool::open(Box::new(spool_fs.clone()));
+    a.enable_log_shipping_custom(Arc::new(ReopenSpool { fs: spool_fs.clone() }), move |_k| {
+        Box::new(spool.clone())
+    })
+    .unwrap();
+
+    // Reference fleet that never dies (default in-process shipping).
+    let mut b = SystemVariant::Cause.build_fleet(&cfg).unwrap();
+    b.attach_durability(vec![
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+        Durability::mem(DurabilityMode::Log, MemFs::new(), 0),
+    ])
+    .unwrap();
+    b.enable_log_shipping().unwrap();
+
+    for t in 1..=3u32 {
+        step_round(&mut a, t, &pop, &trace);
+        step_round(&mut b, t, &pop, &trace);
+    }
+    a.sync_journals().unwrap();
+    b.sync_journals().unwrap();
+    for (r, log_seq) in a.shipping_states().unwrap() {
+        let r = r.expect("shipping enabled");
+        assert_eq!(r.pending, 0);
+        assert_eq!(r.shipped_seq, log_seq);
+    }
+    // The spool really is on disk: index plus per-source frame files.
+    let names: Vec<String> = spool_fs.sizes().into_iter().map(|(n, _)| n).collect();
+    assert!(names.iter().any(|n| n == "SPOOL.json"), "spool index on disk: {names:?}");
+    assert!(
+        names.iter().any(|n| n.starts_with("spool-1.")),
+        "shard 1 frames on disk: {names:?}"
+    );
+
+    a.kill_worker(1).unwrap();
+    let report = a.failover(1).unwrap();
+    assert!(
+        report.events_replayed > 0 || report.snapshot_loaded,
+        "failover must recover from the reopened spool: {report:?}"
+    );
+
+    for t in 4..=cfg.rounds {
+        step_round(&mut a, t, &pop, &trace);
+        step_round(&mut b, t, &pop, &trace);
+    }
+    let served_a = a.flush_batched().unwrap();
+    let served_b = b.flush_batched().unwrap();
+    assert_eq!(served_a, served_b);
+    let ra = a.state_receipt().unwrap();
+    let rb = b.state_receipt().unwrap();
+    assert_eq!(
+        ra.at(&["shards"]),
+        rb.at(&["shards"]),
+        "spool-failed-over fleet diverged from the never-killed one"
+    );
+    assert_eq!(ra.at(&["latency_hist"]), rb.at(&["latency_hist"]));
+    assert_eq!(a.epoch(), b.epoch() + 1);
 }
