@@ -316,6 +316,7 @@ fn main() -> anyhow::Result<()> {
         ticks: 12,
         tail_ticks: 64,
         seed: 0x10ad,
+        obs: false,
     };
     let report = cause::load::run_open_loop(sc.as_ref(), &run)?;
     println!(
@@ -441,5 +442,38 @@ fn main() -> anyhow::Result<()> {
         report.replica_bytes,
         report.live_bytes
     );
+
+    // 13. Observability: where did the run's time go? Two config knobs
+    // turn on the deterministic span tracer:
+    //
+    //   obs     = true          # per-shard ring-buffer span tracing:
+    //                           # plan→price→admit→retrain→seal→ship,
+    //                           # zero allocation on the hot path
+    //   obs_dir = cause_traces  # `cause run` writes <prefix>_trace.json
+    //                           # (Chrome trace_event — load it in
+    //                           # chrome://tracing or Perfetto) and
+    //                           # <prefix>_events.jsonl; implies obs
+    //
+    // Spans carry virtual (tick-derived) timestamps, so the same seed
+    // exports a byte-identical trace, and tracing is observation-only:
+    // receipts and metrics do not move by a byte when it is on (both
+    // properties are pinned in `tests/obs_telemetry.rs`, and `cargo
+    // bench --bench bench_obs` gates the wall-clock overhead <= 5% in
+    // CI). Independently of the tracer, every service exposes a metrics
+    // registry — named counters/gauges/histograms unifying run metrics,
+    // journal fsync stats, and ship-retry diagnostics, merged across
+    // fleet shards — which is where `LoadReport::telemetry` comes from.
+    // The `obs` binary (`cargo run --bin obs -- run_trace.json`) folds
+    // any exported trace into the per-phase tick-budget table printed
+    // below.
+    let traced = cause::load::run_open_loop(
+        sc.as_ref(),
+        &cause::load::OpenLoopCfg { obs: true, ..run },
+    )?;
+    println!("\nobs [{}]: telemetry {}", sc.name(), traced.telemetry);
+    let trace = traced.trace.expect("obs run carries a Chrome-trace export");
+    let (spans, markers) = cause::obs::budget::spans_from_chrome(&trace)
+        .map_err(anyhow::Error::msg)?;
+    print!("{}", cause::obs::budget::render(&cause::obs::budget::compute(&spans), &markers));
     Ok(())
 }

@@ -36,7 +36,8 @@
 
 use std::time::Instant;
 
-use cause::load::{corpus, sweep, OpenLoopCfg};
+use cause::load::{corpus, run_open_loop, sweep, OpenLoopCfg};
+use cause::obs::budget;
 use cause::util::Json;
 
 fn fast() -> bool {
@@ -56,6 +57,7 @@ fn main() {
         ticks: if fast() { 32 } else { 96 },
         tail_ticks: if fast() { 192 } else { 256 },
         seed: 0x10ad,
+        obs: false, // gated sweep runs untraced; the trace demo below opts in
     };
 
     let mut scenarios_json = Json::obj();
@@ -127,6 +129,37 @@ fn main() {
     std::fs::write(&out_path, summary.to_pretty() + "\n")
         .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
     println!("\nwrote {out_path}");
+
+    // Traced demo run (informational, never gated): the first corpus
+    // scenario at the committed floor rate with spans on. Writes the
+    // Chrome trace next to the summary and prints the per-phase
+    // tick-budget table plus the registry's durability counters —
+    // re-parsed from the export itself, so the artifact is proven
+    // loadable before CI uploads it.
+    let corpus_v = corpus();
+    let sc = &corpus_v[0];
+    let traced = OpenLoopCfg { offered_per_tick: rates[0], obs: true, ..base };
+    let report = run_open_loop(sc.as_ref(), &traced)
+        .unwrap_or_else(|e| panic!("{} traced run failed: {e:#}", sc.name()));
+    let trace = report.trace.as_ref().expect("obs run carries a trace");
+    let trace_path = std::path::Path::new(&out_path)
+        .parent()
+        .unwrap_or_else(|| std::path::Path::new("."))
+        .join("BENCH_load_trace.json");
+    std::fs::write(&trace_path, trace.to_pretty())
+        .unwrap_or_else(|e| panic!("writing {}: {e}", trace_path.display()));
+    let (spans, markers) =
+        budget::spans_from_chrome(trace).expect("own trace export re-parses");
+    let b = budget::compute(&spans);
+    println!("\ntraced {} run -> {}", sc.name(), trace_path.display());
+    print!("{}", budget::render(&b, &markers));
+    println!("telemetry: {}", report.telemetry);
+    assert!(
+        b.root_us == 0 || b.attributed_us * 100 >= b.root_us * 95,
+        "tick budget attributes only {} of {} in-span us to named spans",
+        b.attributed_us,
+        b.root_us
+    );
 
     // Sanity asserts (after the JSON so failures are diagnosable). The
     // real floors live in BENCH_baseline.json via bench_gate; these only

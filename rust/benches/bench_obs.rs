@@ -1,0 +1,111 @@
+//! bench_obs — tracing overhead ceiling for the observability layer.
+//!
+//! Runs the same open-loop scenario with spans off and on, strictly
+//! interleaved (off, on, off, on, ...) so CPU-frequency drift and cache
+//! warmth hit both arms equally, and compares the min-of-N wall-clock of
+//! each arm. `gate.overhead_pct` is the relative cost of tracing,
+//! clamped at zero (a negative delta is timer noise, not a speedup).
+//!
+//! The served-request counts of the two arms are asserted equal first:
+//! if tracing ever changes what the system *does* rather than how fast
+//! it does it, that is a correctness bug this bench refuses to time.
+//!
+//! Like `merge_overhead`, the pinned ceiling in `BENCH_baseline.json`
+//! (5.0%) is wall-clock-shaped and is never auto-tightened by
+//! `bench_gate` — it is a regression tripwire, not a ratchet. Writes
+//! `BENCH_obs.json` (override with `CAUSE_BENCH_OBS_JSON`);
+//! `CAUSE_BENCH_FAST` shrinks ticks and repetitions for PR smoke runs.
+
+use std::time::Instant;
+
+use cause::load::{corpus, run_open_loop, OpenLoopCfg};
+use cause::util::Json;
+
+fn fast() -> bool {
+    std::env::var("CAUSE_BENCH_FAST").is_ok()
+}
+
+fn main() {
+    let base = OpenLoopCfg {
+        offered_per_tick: 2.0,
+        ticks: if fast() { 32 } else { 96 },
+        tail_ticks: if fast() { 192 } else { 256 },
+        seed: 0x0b50,
+        obs: false,
+    };
+    let traced = OpenLoopCfg { obs: true, ..base };
+    let reps = if fast() { 5 } else { 9 };
+
+    let corpus_v = corpus();
+    let sc = &corpus_v[0];
+
+    // Warm both arms once (page cache, allocator, branch predictors)
+    // and pin the A/B correctness check on the warmup pair.
+    let off = run_open_loop(sc.as_ref(), &base).expect("warmup untraced run");
+    let on = run_open_loop(sc.as_ref(), &traced).expect("warmup traced run");
+    assert_eq!(
+        off.served, on.served,
+        "tracing changed the served count — it must be observation-only"
+    );
+    let spans = on
+        .trace
+        .as_ref()
+        .and_then(|t| t.at(&["traceEvents"]))
+        .and_then(Json::as_arr)
+        .map(|a| a.len() as u64)
+        .unwrap_or(0);
+    assert!(spans > 0, "traced run recorded no events; nothing to measure");
+
+    let mut min_off = f64::INFINITY;
+    let mut min_on = f64::INFINITY;
+    for _ in 0..reps {
+        let t = Instant::now();
+        run_open_loop(sc.as_ref(), &base).expect("untraced run");
+        min_off = min_off.min(t.elapsed().as_secs_f64());
+        let t = Instant::now();
+        run_open_loop(sc.as_ref(), &traced).expect("traced run");
+        min_on = min_on.min(t.elapsed().as_secs_f64());
+    }
+    let overhead_pct = ((min_on / min_off - 1.0) * 100.0).max(0.0);
+
+    println!(
+        "{:>20}: untraced {:.4}s, traced {:.4}s over {reps} reps -> overhead {:.2}% \
+         ({} trace events, {} served)",
+        sc.name(),
+        min_off,
+        min_on,
+        overhead_pct,
+        spans,
+        off.served
+    );
+
+    let summary = Json::obj()
+        .set("bench", "obs")
+        .set(
+            "workload",
+            Json::obj()
+                .set("scenario", sc.name())
+                .set("offered_per_tick", base.offered_per_tick)
+                .set("ticks", base.ticks)
+                .set("tail_ticks", base.tail_ticks)
+                .set("seed", base.seed)
+                .set("reps", reps as u64)
+                .set("fast", fast()),
+        )
+        .set(
+            "results",
+            Json::obj()
+                .set("min_untraced_secs", min_off)
+                .set("min_traced_secs", min_on)
+                .set("trace_events", spans)
+                .set("served", off.served),
+        )
+        .set("gate", Json::obj().set("overhead_pct", overhead_pct));
+
+    let out_path = std::env::var("CAUSE_BENCH_OBS_JSON").unwrap_or_else(|_| {
+        concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_obs.json").to_string()
+    });
+    std::fs::write(&out_path, summary.to_pretty() + "\n")
+        .unwrap_or_else(|e| panic!("writing {out_path}: {e}"));
+    println!("\nwrote {out_path}");
+}

@@ -41,7 +41,12 @@
 //!   counts, so when the baseline's `load` section pins a `mode`
 //!   (`"fast"`/`"full"`), an artifact measured in the other mode fails
 //!   the gate with a re-pin instruction instead of comparing
-//!   incomparable numbers.
+//!   incomparable numbers. Or
+//! * `gate.overhead_pct` (from `BENCH_obs.json`) grows above the
+//!   `obs.overhead_pct` ceiling — span tracing stopped being cheap
+//!   enough to leave on. The ceiling is wall-clock-shaped (smaller is
+//!   better) and, like `merge_overhead`, is never auto-tightened by the
+//!   ratchet.
 //!
 //! **Every pinned baseline section must have a matching artifact.** If the
 //! baseline pins `scale`/`compress`/`persist`/`fleet`/`load` floors and
@@ -101,7 +106,8 @@ const SPEEDUP_TOLERANCE: f64 = 0.20;
 /// Each is both the value of an artifact's top-level `"bench"` field
 /// (for auto-discovery) and — except `coordinator`, whose floors live
 /// under `gate` — the baseline section name holding its floors.
-const KINDS: [&str; 6] = ["coordinator", "scale", "compress", "persist", "fleet", "load"];
+const KINDS: [&str; 7] =
+    ["coordinator", "scale", "compress", "persist", "fleet", "load", "obs"];
 
 fn load(path: &str) -> Result<Json, String> {
     let text =
@@ -152,6 +158,7 @@ struct Current {
     persist: Option<(f64, f64, f64, f64, f64)>,
     fleet: Option<(f64, f64)>,    // (scaling_2w, merge_overhead)
     load: Option<LoadArtifact>,
+    obs: Option<f64>,             // tracing overhead_pct
 }
 
 impl Current {
@@ -266,6 +273,17 @@ impl Current {
             }
             pin = pin.set("load", section);
         }
+        if let Some(overhead) = self.obs {
+            // The tracing-overhead ceiling is wall-clock-shaped (smaller
+            // is better): a quiet runner must not tighten it to a value
+            // loaded machines would fail, so the committed ceiling always
+            // wins. With nothing committed it pins at the 5% budget (or
+            // 2x the measured overhead if a slow bootstrap run exceeds
+            // even that).
+            let ceiling =
+                base(&["obs", "overhead_pct"]).unwrap_or((overhead * 2.0).max(5.0));
+            pin = pin.set("obs", Json::obj().set("overhead_pct", ceiling));
+        }
         pin
     }
 }
@@ -284,6 +302,7 @@ fn run(
     persist_path: Option<&str>,
     fleet_path: Option<&str>,
     load_path: Option<&str>,
+    obs_path: Option<&str>,
 ) -> Result<(), String> {
     let baseline = load(baseline_path)?;
     let current = load(current_path)?;
@@ -335,6 +354,10 @@ fn run(
             }
             None => None,
         },
+        obs: match obs_path {
+            Some(p) => Some(gate_value(&load(p)?, p, "overhead_pct")?),
+            None => None,
+        },
     };
 
     if baseline.get("bootstrap").and_then(Json::as_bool) == Some(true) {
@@ -366,6 +389,7 @@ fn run(
         ("persist", cur.persist.is_some()),
         ("fleet", cur.fleet.is_some()),
         ("load", cur.load.is_some()),
+        ("obs", cur.obs.is_some()),
     ] {
         if baseline_pins(&baseline, section) && !present {
             failures.push(format!(
@@ -640,6 +664,27 @@ fn run(
         }
     }
 
+    if let Some(cur_obs) = cur.obs {
+        match baseline.at(&["obs", "overhead_pct"]).and_then(Json::as_f64) {
+            Some(ceiling) => {
+                println!(
+                    "bench_gate: obs overhead ceiling {ceiling:.1}% -> {cur_obs:.2}%"
+                );
+                if cur_obs > ceiling + 1e-9 {
+                    failures.push(format!(
+                        "span-tracing overhead grew above ceiling: {cur_obs:.2}% > \
+                         {ceiling:.1}% (observability must stay cheap enough to \
+                         leave on)"
+                    ));
+                }
+            }
+            None => println!(
+                "bench_gate: {baseline_path} has no obs ceiling — the merged \
+                 baseline below pins it"
+            ),
+        }
+    }
+
     if failures.is_empty() {
         println!("bench_gate: OK");
         // One ready-to-commit document covering every measured section
@@ -665,7 +710,7 @@ fn run(
 /// *gate* artifact still fails loudly via the pinned-section check). A
 /// missing coordinator artifact is an error — the core gate can never be
 /// skipped.
-fn discover(baseline_path: &str) -> Result<[Option<String>; 6], String> {
+fn discover(baseline_path: &str) -> Result<[Option<String>; 7], String> {
     let base = Path::new(baseline_path);
     let dir = match base.parent() {
         Some(p) if !p.as_os_str().is_empty() => p.to_path_buf(),
@@ -685,7 +730,7 @@ fn discover(baseline_path: &str) -> Result<[Option<String>; 6], String> {
         .collect();
     names.sort(); // deterministic scan order
 
-    let mut slots: [Option<String>; 6] = Default::default();
+    let mut slots: [Option<String>; 7] = Default::default();
     for name in names {
         let path = dir.join(&name).to_string_lossy().into_owned();
         // An unreadable/unparsable sibling (e.g. a truncated figure or
@@ -753,6 +798,7 @@ fn run_discovered(baseline_path: &str) -> Result<(), String> {
         opt(3),
         opt(4),
         opt(5),
+        opt(6),
     )
 }
 
@@ -760,16 +806,17 @@ fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let result = match args.as_slice() {
         [baseline] => run_discovered(baseline),
-        [baseline, current, rest @ ..] if rest.len() <= 5 => {
+        [baseline, current, rest @ ..] if rest.len() <= 6 => {
             let opt = |i: usize| rest.get(i).map(String::as_str);
-            run(baseline, current, opt(0), opt(1), opt(2), opt(3), opt(4))
+            run(baseline, current, opt(0), opt(1), opt(2), opt(3), opt(4), opt(5))
         }
         _ => {
             eprintln!(
                 "usage: bench_gate <BENCH_baseline.json>   (auto-discover BENCH_*.json \
                  siblings)\n   or: bench_gate <BENCH_baseline.json> \
                  <BENCH_coordinator.json> [<BENCH_scale.json> [<BENCH_compress.json> \
-                 [<BENCH_persist.json> [<BENCH_fleet.json> [<BENCH_load.json>]]]]]"
+                 [<BENCH_persist.json> [<BENCH_fleet.json> [<BENCH_load.json> \
+                 [<BENCH_obs.json>]]]]]]"
             );
             return ExitCode::FAILURE;
         }
@@ -843,6 +890,10 @@ mod tests {
             .set("p999_over_p50", 64.0)
     }
 
+    fn obs_section() -> Json {
+        Json::obj().set("overhead_pct", 5.0)
+    }
+
     /// Baseline pinning every section.
     fn doc_everything() -> String {
         Json::parse(&doc(40.0, 4.0))
@@ -852,6 +903,7 @@ mod tests {
             .set("persist", persist_section())
             .set("fleet", fleet_section())
             .set("load", load_section())
+            .set("obs", obs_section())
             .to_pretty()
     }
 
@@ -929,6 +981,13 @@ mod tests {
             .to_pretty()
     }
 
+    fn obs_doc(pct: f64) -> String {
+        Json::obj()
+            .set("bench", "obs")
+            .set("gate", Json::obj().set("overhead_pct", pct))
+            .to_pretty()
+    }
+
     fn coordinator_doc(coalesced: f64, p99: f64) -> String {
         Json::parse(&doc(coalesced, p99))
             .unwrap()
@@ -941,11 +1000,11 @@ mod tests {
         let base = write_tmp("base.json", &doc(40.0, 4.0));
         let same = write_tmp("same.json", &doc(40.0, 4.0));
         let better = write_tmp("better.json", &doc(55.0, 3.0));
-        assert!(run(&base, &same, None, None, None, None, None).is_ok());
-        assert!(run(&base, &better, None, None, None, None, None).is_ok());
+        assert!(run(&base, &same, None, None, None, None, None, None).is_ok());
+        assert!(run(&base, &better, None, None, None, None, None, None).is_ok());
         // Within the 20% latency tolerance.
         let near = write_tmp("near.json", &doc(40.0, 4.8));
-        assert!(run(&base, &near, None, None, None, None, None).is_ok());
+        assert!(run(&base, &near, None, None, None, None, None, None).is_ok());
     }
 
     #[test]
@@ -953,11 +1012,11 @@ mod tests {
         let base = write_tmp("base2.json", &doc(40.0, 4.0));
         let fewer = write_tmp("fewer.json", &doc(39.0, 4.0));
         let slower = write_tmp("slower.json", &doc(40.0, 4.81));
-        assert!(run(&base, &fewer, None, None, None, None, None).is_err());
-        assert!(run(&base, &slower, None, None, None, None, None).is_err());
-        assert!(run("/nonexistent.json", &base, None, None, None, None, None).is_err());
+        assert!(run(&base, &fewer, None, None, None, None, None, None).is_err());
+        assert!(run(&base, &slower, None, None, None, None, None, None).is_err());
+        assert!(run("/nonexistent.json", &base, None, None, None, None, None, None).is_err());
         let junk = write_tmp("junk.json", "not json");
-        assert!(run(&junk, &base, None, None, None, None, None).is_err());
+        assert!(run(&junk, &base, None, None, None, None, None, None).is_err());
     }
 
     #[test]
@@ -967,17 +1026,17 @@ mod tests {
         // Within tolerance (20% of 10.0 → floor 8.0) and above.
         let ok = write_tmp("scale_ok.json", &scale_doc(8.5));
         let better = write_tmp("scale_better.json", &scale_doc(30.0));
-        assert!(run(&base, &cur, Some(&ok), None, None, None, None).is_ok());
-        assert!(run(&base, &cur, Some(&better), None, None, None, None).is_ok());
+        assert!(run(&base, &cur, Some(&ok), None, None, None, None, None).is_ok());
+        assert!(run(&base, &cur, Some(&better), None, None, None, None, None).is_ok());
         // Below the floor: fail.
         let bad = write_tmp("scale_bad.json", &scale_doc(7.9));
-        assert!(run(&base, &cur, Some(&bad), None, None, None, None).is_err());
+        assert!(run(&base, &cur, Some(&bad), None, None, None, None, None).is_err());
         // Malformed scale summary: fail even though coordinator gates pass.
         let junk = write_tmp("scale_junk.json", "{}");
-        assert!(run(&base, &cur, Some(&junk), None, None, None, None).is_err());
+        assert!(run(&base, &cur, Some(&junk), None, None, None, None, None).is_err());
         // Baseline without a pinned scale value: informational pass.
         let base_unpinned = write_tmp("base4.json", &doc(40.0, 4.0));
-        assert!(run(&base_unpinned, &cur, Some(&ok), None, None, None, None).is_ok());
+        assert!(run(&base_unpinned, &cur, Some(&ok), None, None, None, None, None).is_ok());
     }
 
     #[test]
@@ -987,20 +1046,20 @@ mod tests {
         // At or above both floors: pass.
         let ok = write_tmp("comp_ok.json", &compress_doc(2.9, 400.0));
         let exact = write_tmp("comp_exact.json", &compress_doc(2.0, 25.0));
-        assert!(run(&base, &cur, None, Some(&ok), None, None, None).is_ok());
-        assert!(run(&base, &cur, None, Some(&exact), None, None, None).is_ok());
+        assert!(run(&base, &cur, None, Some(&ok), None, None, None, None).is_ok());
+        assert!(run(&base, &cur, None, Some(&exact), None, None, None, None).is_ok());
         // Ratio below the floor: fail (no extra tolerance on floors).
         let thin = write_tmp("comp_thin.json", &compress_doc(1.9, 400.0));
-        assert!(run(&base, &cur, None, Some(&thin), None, None, None).is_err());
+        assert!(run(&base, &cur, None, Some(&thin), None, None, None, None).is_err());
         // Decode throughput below the floor: fail.
         let slow = write_tmp("comp_slow.json", &compress_doc(2.9, 20.0));
-        assert!(run(&base, &cur, None, Some(&slow), None, None, None).is_err());
+        assert!(run(&base, &cur, None, Some(&slow), None, None, None, None).is_err());
         // Malformed compress summary: fail.
         let junk = write_tmp("comp_junk.json", "{}");
-        assert!(run(&base, &cur, None, Some(&junk), None, None, None).is_err());
+        assert!(run(&base, &cur, None, Some(&junk), None, None, None, None).is_err());
         // Baseline without compress floors: informational pass.
         let base_nofloor = write_tmp("base6.json", &doc(40.0, 4.0));
-        assert!(run(&base_nofloor, &cur, None, Some(&ok), None, None, None).is_ok());
+        assert!(run(&base_nofloor, &cur, None, Some(&ok), None, None, None, None).is_ok());
     }
 
     #[test]
@@ -1010,28 +1069,28 @@ mod tests {
         // At/above both floors: pass.
         let ok = write_tmp("pers_ok.json", &persist_doc(120.0, 90_000.0));
         let exact = write_tmp("pers_exact.json", &persist_doc(20.0, 5000.0));
-        assert!(run(&base, &cur, None, None, Some(&ok), None, None).is_ok());
-        assert!(run(&base, &cur, None, None, Some(&exact), None, None).is_ok());
+        assert!(run(&base, &cur, None, None, Some(&ok), None, None, None).is_ok());
+        assert!(run(&base, &cur, None, None, Some(&exact), None, None, None).is_ok());
         // Append below floor: fail.
         let slow_append = write_tmp("pers_slow_a.json", &persist_doc(19.0, 90_000.0));
-        assert!(run(&base, &cur, None, None, Some(&slow_append), None, None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&slow_append), None, None, None).is_err());
         // Recovery below floor: fail.
         let slow_rec = write_tmp("pers_slow_r.json", &persist_doc(120.0, 4000.0));
-        assert!(run(&base, &cur, None, None, Some(&slow_rec), None, None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&slow_rec), None, None, None).is_err());
         // Fsync-mode append below its floor: fail.
         let slow_fsync =
             write_tmp("pers_slow_f.json", &persist_doc4(120.0, 0.01, 8.0, 90_000.0));
-        assert!(run(&base, &cur, None, None, Some(&slow_fsync), None, None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&slow_fsync), None, None, None).is_err());
         // Group commit stopped amortizing: fail.
         let no_amort =
             write_tmp("pers_no_amort.json", &persist_doc4(120.0, 5.0, 1.0, 90_000.0));
-        assert!(run(&base, &cur, None, None, Some(&no_amort), None, None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&no_amort), None, None, None).is_err());
         // Replica accreting unbounded history (ratio <= 1): fail.
         let no_compact = write_tmp(
             "pers_no_compact.json",
             &persist_doc5(120.0, 5.0, 8.0, 90_000.0, 0.9),
         );
-        assert!(run(&base, &cur, None, None, Some(&no_compact), None, None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&no_compact), None, None, None).is_err());
         // A legacy baseline without the fsync floors still gates the two
         // classic floors and passes (the merged document pins the rest).
         let base_legacy = write_tmp(
@@ -1041,13 +1100,13 @@ mod tests {
                 Json::obj().set("append_mbps", 20.0).set("recovery_events_per_s", 5000.0),
             ),
         );
-        assert!(run(&base_legacy, &cur, None, None, Some(&slow_fsync), None, None).is_ok());
+        assert!(run(&base_legacy, &cur, None, None, Some(&slow_fsync), None, None, None).is_ok());
         // Malformed persist summary: fail.
         let junk = write_tmp("pers_junk.json", "{}");
-        assert!(run(&base, &cur, None, None, Some(&junk), None, None).is_err());
+        assert!(run(&base, &cur, None, None, Some(&junk), None, None, None).is_err());
         // Baseline without persist floors: informational pass.
         let base_nofloor = write_tmp("base8.json", &doc(40.0, 4.0));
-        assert!(run(&base_nofloor, &cur, None, None, Some(&ok), None, None).is_ok());
+        assert!(run(&base_nofloor, &cur, None, None, Some(&ok), None, None, None).is_ok());
     }
 
     #[test]
@@ -1057,20 +1116,20 @@ mod tests {
         // At/above the scaling floor and under the merge ceiling: pass.
         let ok = write_tmp("fleet_ok.json", &fleet_doc(1.8, 0.02));
         let exact = write_tmp("fleet_exact.json", &fleet_doc(1.5, 0.5));
-        assert!(run(&base, &cur, None, None, None, Some(&ok), None).is_ok());
-        assert!(run(&base, &cur, None, None, None, Some(&exact), None).is_ok());
+        assert!(run(&base, &cur, None, None, None, Some(&ok), None, None).is_ok());
+        assert!(run(&base, &cur, None, None, None, Some(&exact), None, None).is_ok());
         // Scaling below the floor: fail (no extra tolerance on floors).
         let flat = write_tmp("fleet_flat.json", &fleet_doc(1.4, 0.02));
-        assert!(run(&base, &cur, None, None, None, Some(&flat), None).is_err());
+        assert!(run(&base, &cur, None, None, None, Some(&flat), None, None).is_err());
         // Merge overhead above the ceiling: fail.
         let heavy = write_tmp("fleet_heavy.json", &fleet_doc(1.8, 0.6));
-        assert!(run(&base, &cur, None, None, None, Some(&heavy), None).is_err());
+        assert!(run(&base, &cur, None, None, None, Some(&heavy), None, None).is_err());
         // Malformed fleet summary: fail even though the rest passes.
         let junk = write_tmp("fleet_junk.json", "{}");
-        assert!(run(&base, &cur, None, None, None, Some(&junk), None).is_err());
+        assert!(run(&base, &cur, None, None, None, Some(&junk), None, None).is_err());
         // Baseline without fleet floors: informational pass.
         let base_nofloor = write_tmp("base10.json", &doc(40.0, 4.0));
-        assert!(run(&base_nofloor, &cur, None, None, None, Some(&ok), None).is_ok());
+        assert!(run(&base_nofloor, &cur, None, None, None, Some(&ok), None, None).is_ok());
     }
 
     #[test]
@@ -1080,14 +1139,14 @@ mod tests {
         // At/above every floor and under the ceiling: pass.
         let ok = write_tmp("load_ok.json", &load_doc(2.0, 0.5, 9.0));
         let exact = write_tmp("load_exact.json", &load_doc(0.5, 0.5, 64.0));
-        assert!(run(&base, &cur, None, None, None, None, Some(&ok)).is_ok());
-        assert!(run(&base, &cur, None, None, None, None, Some(&exact)).is_ok());
+        assert!(run(&base, &cur, None, None, None, None, Some(&ok), None).is_ok());
+        assert!(run(&base, &cur, None, None, None, None, Some(&exact), None).is_ok());
         // One scenario's throughput-at-SLO below its floor: fail.
         let slow = write_tmp("load_slow.json", &load_doc(0.0, 2.0, 9.0));
-        assert!(run(&base, &cur, None, None, None, None, Some(&slow)).is_err());
+        assert!(run(&base, &cur, None, None, None, None, Some(&slow), None).is_err());
         // Tail ratio above the histogram-sanity ceiling: fail.
         let tail = write_tmp("load_tail.json", &load_doc(2.0, 2.0, 65.0));
-        assert!(run(&base, &cur, None, None, None, None, Some(&tail)).is_err());
+        assert!(run(&base, &cur, None, None, None, None, Some(&tail), None).is_err());
         // A pinned scenario missing from the artifact's gate: fail loudly.
         let missing = write_tmp(
             "load_missing.json",
@@ -1101,7 +1160,7 @@ mod tests {
                 )
                 .to_pretty(),
         );
-        assert!(run(&base, &cur, None, None, None, None, Some(&missing)).is_err());
+        assert!(run(&base, &cur, None, None, None, None, Some(&missing), None).is_err());
         // An unknown key pinned in the baseline's load section: fail.
         let base_bogus = write_tmp(
             "base12.json",
@@ -1121,13 +1180,13 @@ mod tests {
                 )
                 .to_pretty(),
         );
-        assert!(run(&base_bogus, &cur, None, None, None, None, Some(&full)).is_err());
+        assert!(run(&base_bogus, &cur, None, None, None, None, Some(&full), None).is_err());
         // Malformed load summary: fail.
         let junk = write_tmp("load_junk.json", "{}");
-        assert!(run(&base, &cur, None, None, None, None, Some(&junk)).is_err());
+        assert!(run(&base, &cur, None, None, None, None, Some(&junk), None).is_err());
         // Baseline without load floors: informational pass.
         let base_nofloor = write_tmp("base13.json", &doc(40.0, 4.0));
-        assert!(run(&base_nofloor, &cur, None, None, None, None, Some(&ok)).is_ok());
+        assert!(run(&base_nofloor, &cur, None, None, None, None, Some(&ok), None).is_ok());
     }
 
     #[test]
@@ -1140,26 +1199,26 @@ mod tests {
         // Same mode: gates normally — floors still fail on regressions.
         let fast_ok =
             write_tmp("load_fast_ok.json", &load_doc_mode("fast", 2.0, 0.5, 9.0));
-        assert!(run(&base, &cur, None, None, None, None, Some(&fast_ok)).is_ok());
+        assert!(run(&base, &cur, None, None, None, None, Some(&fast_ok), None).is_ok());
         let fast_bad =
             write_tmp("load_fast_bad.json", &load_doc_mode("fast", 0.0, 2.0, 9.0));
-        assert!(run(&base, &cur, None, None, None, None, Some(&fast_bad)).is_err());
+        assert!(run(&base, &cur, None, None, None, None, Some(&fast_bad), None).is_err());
         // Other mode: fails loudly even though every number beats its
         // floor — fast and full sweep different rate grids.
         let full =
             write_tmp("load_full_mode.json", &load_doc_mode("full", 8.0, 8.0, 2.0));
-        let err = run(&base, &cur, None, None, None, None, Some(&full)).unwrap_err();
+        let err = run(&base, &cur, None, None, None, None, Some(&full), None).unwrap_err();
         assert!(err.contains("`fast` mode"), "{err}");
         // Artifact without a mode against a pinned mode: stale artifact,
         // fail.
         let unmoded = write_tmp("load_unmoded.json", &load_doc(8.0, 8.0, 2.0));
-        let err = run(&base, &cur, None, None, None, None, Some(&unmoded)).unwrap_err();
+        let err = run(&base, &cur, None, None, None, None, Some(&unmoded), None).unwrap_err();
         assert!(err.contains("records no mode"), "{err}");
         // Baseline without a pinned mode gates any artifact (back-compat
         // with pre-mode baselines).
         let base_unmoded =
             write_tmp("base_unmoded.json", &doc_with("load", load_section()));
-        assert!(run(&base_unmoded, &cur, None, None, None, None, Some(&full)).is_ok());
+        assert!(run(&base_unmoded, &cur, None, None, None, None, Some(&full), None).is_ok());
     }
 
     #[test]
@@ -1187,8 +1246,8 @@ mod tests {
         // the matching artifact or the gate fails — no silent skips.
         let base = write_tmp("base14.json", &doc_everything());
         let cur = write_tmp("cur14.json", &doc(40.0, 4.0));
-        let err = run(&base, &cur, None, None, None, None, None).unwrap_err();
-        for section in ["scale", "compress", "persist", "fleet", "load"] {
+        let err = run(&base, &cur, None, None, None, None, None, None).unwrap_err();
+        for section in ["scale", "compress", "persist", "fleet", "load", "obs"] {
             assert!(err.contains(&format!("`{section}`")), "{section} not in: {err}");
         }
         // Supplying all artifacts clears it.
@@ -1197,6 +1256,7 @@ mod tests {
         let pers = write_tmp("all_pers.json", &persist_doc(120.0, 90_000.0));
         let fleet = write_tmp("all_fleet.json", &fleet_doc(1.8, 0.02));
         let load_a = write_tmp("all_load.json", &load_doc(2.0, 0.5, 9.0));
+        let obs_a = write_tmp("all_obs.json", &obs_doc(0.7));
         assert!(run(
             &base,
             &cur,
@@ -1204,7 +1264,8 @@ mod tests {
             Some(&comp),
             Some(&pers),
             Some(&fleet),
-            Some(&load_a)
+            Some(&load_a),
+            Some(&obs_a)
         )
         .is_ok());
         // Dropping exactly one (e.g. the fleet artifact) fails again.
@@ -1216,6 +1277,7 @@ mod tests {
             Some(&pers),
             None,
             Some(&load_a),
+            Some(&obs_a),
         )
         .unwrap_err();
         assert!(err.contains("`fleet`"), "{err}");
@@ -1231,6 +1293,7 @@ mod tests {
         write_in("disc1", "BENCH_persist.json", &persist_doc(120.0, 90_000.0));
         write_in("disc1", "BENCH_fleet.json", &fleet_doc(1.8, 0.02));
         write_in("disc1", "BENCH_load.json", &load_doc(2.0, 0.5, 9.0));
+        write_in("disc1", "BENCH_obs.json", &obs_doc(0.7));
         // A figure output without a "bench" field is skipped, not fatal.
         write_in("disc1", "BENCH_fig99.json", "{\"rows\": []}");
         assert!(run_discovered(&base).is_ok());
@@ -1277,16 +1340,16 @@ mod tests {
     fn bootstrap_baseline_always_passes() {
         let boot = write_tmp("boot.json", &Json::obj().set("bootstrap", true).to_pretty());
         let cur = write_tmp("cur.json", &doc(12.0, 2.0));
-        assert!(run(&boot, &cur, None, None, None, None, None).is_ok());
+        assert!(run(&boot, &cur, None, None, None, None, None, None).is_ok());
         // Bootstrap still requires well-formed current summaries.
         let junk = write_tmp("junk2.json", "{}");
-        assert!(run(&boot, &junk, None, None, None, None, None).is_err());
+        assert!(run(&boot, &junk, None, None, None, None, None, None).is_err());
         let scale = write_tmp("boot_scale.json", &scale_doc(12.5));
-        assert!(run(&boot, &cur, Some(&scale), None, None, None, None).is_ok());
-        assert!(run(&boot, &cur, Some(&junk), None, None, None, None).is_err());
+        assert!(run(&boot, &cur, Some(&scale), None, None, None, None, None).is_ok());
+        assert!(run(&boot, &cur, Some(&junk), None, None, None, None, None).is_err());
         let load_a = write_tmp("boot_load.json", &load_doc(2.0, 0.5, 9.0));
-        assert!(run(&boot, &cur, None, None, None, None, Some(&load_a)).is_ok());
-        assert!(run(&boot, &cur, None, None, None, None, Some(&junk)).is_err());
+        assert!(run(&boot, &cur, None, None, None, None, Some(&load_a), None).is_ok());
+        assert!(run(&boot, &cur, None, None, None, None, Some(&junk), None).is_err());
     }
 
     #[test]
@@ -1312,6 +1375,7 @@ mod tests {
                 mode: Some("fast".to_string()),
                 gate: load_measured,
             }),
+            obs: Some(0.8), // far under the 5% ceiling → ceiling stays
         };
         let pin = cur.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "retrains_coalesced"]), Some(55.0));
@@ -1339,6 +1403,9 @@ mod tests {
         // The measured mode is stamped so future runs refuse cross-mode
         // comparison.
         assert_eq!(pin.at(&["load", "mode"]).and_then(Json::as_str), Some("fast"));
+        // The tracing-overhead ceiling is wall-clock-shaped: a quiet
+        // runner beating it must not tighten it.
+        assert_eq!(at(&pin, &["obs", "overhead_pct"]), Some(5.0));
         // A worse load run cannot loosen the committed floors/ceiling.
         let mut worse = BTreeMap::new();
         worse.insert("gdpr_storm_rps_at_slo".to_string(), 0.0);
@@ -1358,6 +1425,7 @@ mod tests {
             persist: None,
             fleet: None,
             load: None,
+            obs: None,
         };
         let pin = better.pin_block(&baseline);
         assert_eq!(at(&pin, &["gate", "p99_queue_delay"]), Some(3.0));
@@ -1394,6 +1462,9 @@ mod tests {
         assert_eq!(at(&pin, &["load", "gdpr_storm_rps_at_slo"]), Some(2.0));
         assert_eq!(at(&pin, &["load", "p999_over_p50"]), Some(9.0));
         assert_eq!(pin.at(&["load", "mode"]).and_then(Json::as_str), Some("full"));
+        // With nothing committed the obs ceiling pins at the 5% budget
+        // (the measured 0.8% is noise-shaped, not a ceiling).
+        assert_eq!(at(&pin, &["obs", "overhead_pct"]), Some(5.0));
         let sparse = Current {
             coalesced: 1.0,
             p99: 1.0,
@@ -1402,11 +1473,38 @@ mod tests {
             persist: None,
             fleet: None,
             load: None,
+            obs: None,
         };
         assert_eq!(sparse.pin_block(&boot).get("scale"), None);
         assert_eq!(sparse.pin_block(&boot).get("compress"), None);
         assert_eq!(sparse.pin_block(&boot).get("persist"), None);
         assert_eq!(sparse.pin_block(&boot).get("fleet"), None);
         assert_eq!(sparse.pin_block(&boot).get("load"), None);
+        assert_eq!(sparse.pin_block(&boot).get("obs"), None);
+    }
+
+    #[test]
+    fn obs_gate_checks_overhead_ceiling() {
+        let base = write_tmp("base_obs.json", &doc_with("obs", obs_section()));
+        let cur = write_tmp("cur_obs.json", &doc(40.0, 4.0));
+        // Under or exactly at the ceiling: pass.
+        let ok = write_tmp("obs_ok.json", &obs_doc(0.7));
+        let exact = write_tmp("obs_exact.json", &obs_doc(5.0));
+        assert!(run(&base, &cur, None, None, None, None, None, Some(&ok)).is_ok());
+        assert!(run(&base, &cur, None, None, None, None, None, Some(&exact)).is_ok());
+        // Above the ceiling: fail (tracing stopped being cheap).
+        let heavy = write_tmp("obs_heavy.json", &obs_doc(5.1));
+        assert!(run(&base, &cur, None, None, None, None, None, Some(&heavy)).is_err());
+        // Malformed obs summary: fail.
+        let junk = write_tmp("obs_junk.json", "{}");
+        assert!(run(&base, &cur, None, None, None, None, None, Some(&junk)).is_err());
+        // Baseline without an obs ceiling: informational pass.
+        let base_nofloor = write_tmp("base_obs_nofloor.json", &doc(40.0, 4.0));
+        assert!(
+            run(&base_nofloor, &cur, None, None, None, None, None, Some(&ok)).is_ok()
+        );
+        // Baseline pinning the ceiling with no artifact: hard failure.
+        let err = run(&base, &cur, None, None, None, None, None, None).unwrap_err();
+        assert!(err.contains("`obs`"), "{err}");
     }
 }

@@ -1,0 +1,43 @@
+//! `obs` — summarize a Chrome trace export (`*_trace.json`, written by
+//! `cause run obs_dir=...`, `bench_load`, or the soak harness) into a
+//! per-phase tick-budget table: for every span name, how many times it
+//! ran, its total traced microseconds, and its *self* time (duration
+//! minus same-lane children), with self shares summing to 100% of
+//! in-span time. Marker counts (scenario phases, injected fault
+//! classes) print underneath.
+//!
+//! Usage: `obs <trace.json> [more traces...]`
+
+use std::process::ExitCode;
+
+use cause::obs::budget;
+use cause::util::Json;
+
+fn summarize(path: &str) -> Result<(), String> {
+    let text = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let doc = Json::parse(&text).map_err(|e| format!("{path}: {e}"))?;
+    let (spans, markers) = budget::spans_from_chrome(&doc).map_err(|e| format!("{path}: {e}"))?;
+    println!("{path}: {} spans", spans.len());
+    print!("{}", budget::render(&budget::compute(&spans), &markers));
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() || args.iter().any(|a| a == "--help" || a == "-h") {
+        eprintln!("usage: obs <trace.json> [more traces...]");
+        eprintln!("summarize a Chrome trace export into a per-phase tick-budget table");
+        return if args.is_empty() { ExitCode::FAILURE } else { ExitCode::SUCCESS };
+    }
+    let mut code = ExitCode::SUCCESS;
+    for (i, path) in args.iter().enumerate() {
+        if i > 0 {
+            println!();
+        }
+        if let Err(e) = summarize(path) {
+            eprintln!("error: {e}");
+            code = ExitCode::FAILURE;
+        }
+    }
+    code
+}

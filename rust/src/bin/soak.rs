@@ -12,6 +12,9 @@
 //! * `CAUSE_SOAK_FULL=1` — soak the whole corpus instead of the default
 //!   three-scenario mix (main-branch pushes set this).
 //! * `CAUSE_SOAK_JSON`   — report path (default `SOAK_report.json`).
+//! * `CAUSE_SOAK_TRACE`  — when set, trace the first run (spans + fault
+//!   markers) and write its Chrome trace export to this path; summarize
+//!   it with the `obs` binary.
 //!
 //! Odd seeds ship over the file-backed [`FileSpool`] transport, even
 //! seeds over the in-process replica store, so both shipping paths soak
@@ -37,6 +40,8 @@ fn main() {
     let seeds = env_u64("CAUSE_SOAK_SEEDS", 8);
     let full = std::env::var("CAUSE_SOAK_FULL").as_deref() == Ok("1");
     let out = std::env::var("CAUSE_SOAK_JSON").unwrap_or_else(|_| "SOAK_report.json".into());
+    let trace_out = std::env::var("CAUSE_SOAK_TRACE").ok();
+    let mut trace: Option<Json> = None;
 
     let corpus = corpus();
     let scenarios: Vec<_> = corpus
@@ -55,6 +60,9 @@ fn main() {
                 seed,
                 // Odd seeds take the file-backed spool path.
                 spool: i % 2 == 1,
+                // Trace the first run only: one artifact is plenty and
+                // keeps the soak's runtime budget for the faults.
+                obs: trace_out.is_some() && trace.is_none(),
                 ..ChaosCfg::default()
             };
             let label = format!(
@@ -75,6 +83,23 @@ fn main() {
                     );
                     for v in &report.violations {
                         eprintln!("soak:   violation: {v}");
+                    }
+                    let g = |k: &str| {
+                        report.telemetry.get(k).and_then(Json::as_u64).unwrap_or(0)
+                    };
+                    eprintln!(
+                        "soak:   ship attempts {} faults {} failed {} | journal appended {} \
+                         fsyncs {} | latency dropped {} slo_miss {}",
+                        g("ship_attempts"),
+                        g("ship_faults"),
+                        g("ship_failed"),
+                        g("journal_appended"),
+                        g("journal_fsyncs"),
+                        g("latency_dropped"),
+                        g("latency_slo_miss")
+                    );
+                    if report.trace.is_some() {
+                        trace = report.trace.clone();
                     }
                     reports.push(report.to_json());
                 }
@@ -104,6 +129,18 @@ fn main() {
     if let Err(e) = std::fs::write(&out, doc.to_pretty()) {
         eprintln!("soak: failed to write {out}: {e}");
         std::process::exit(2);
+    }
+    if let Some(path) = &trace_out {
+        match &trace {
+            Some(t) => {
+                if let Err(e) = std::fs::write(path, t.to_pretty()) {
+                    eprintln!("soak: failed to write trace {path}: {e}");
+                    std::process::exit(2);
+                }
+                eprintln!("soak: trace -> {path}");
+            }
+            None => eprintln!("soak: no traced run completed; {path} not written"),
+        }
     }
     eprintln!(
         "soak: {} runs, {} violations -> {out}",

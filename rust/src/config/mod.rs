@@ -95,6 +95,14 @@ pub struct ExperimentConfig {
     /// (each with its own engine, store, battery, and — when durability
     /// is on — its own WAL under `persist_dir/shard-<k>/`).
     pub fleet_workers: usize,
+    /// Enable the deterministic span tracer (`obs = true`): every
+    /// service/fleet layer records plan→price→admit→retrain→seal→ship
+    /// spans into per-shard ring buffers (see [`crate::obs`]). Off by
+    /// default; the metrics registry is available regardless.
+    pub obs: bool,
+    /// Where `run` writes the trace exports (Chrome `trace_event` JSON
+    /// + flat JSONL). Setting a non-empty `obs_dir` implies `obs`.
+    pub obs_dir: Option<String>,
     pub model: ModelProfile,
     pub dataset: DatasetSpec,
 }
@@ -142,6 +150,8 @@ impl Default for ExperimentConfig {
             persist_dir: "cause_persist".to_string(),
             compact_every: 512,
             fleet_workers: 1,
+            obs: false,
+            obs_dir: None,
             model: profiles::RESNET34,
             dataset: CIFAR10,
         }
@@ -239,6 +249,19 @@ impl ExperimentConfig {
         self
     }
 
+    /// Enable the deterministic span tracer.
+    pub fn with_obs(mut self, obs: bool) -> Self {
+        self.obs = obs;
+        self
+    }
+
+    /// Enable tracing and write the exports under `dir`.
+    pub fn with_obs_dir(mut self, dir: impl Into<String>) -> Self {
+        self.obs_dir = Some(dir.into());
+        self.obs = true;
+        self
+    }
+
     /// Apply a `key = value` assignment (config file / CLI override).
     pub fn apply(&mut self, key: &str, value: &str) -> Result<()> {
         let v = value.trim();
@@ -322,6 +345,13 @@ impl ExperimentConfig {
             }
             "compact_every" => self.compact_every = v.parse()?,
             "fleet_workers" => self.fleet_workers = v.parse()?,
+            "obs" => self.obs = parse_bool(v)?,
+            "obs_dir" => {
+                self.obs_dir = if v.is_empty() { None } else { Some(v.to_string()) };
+                if self.obs_dir.is_some() {
+                    self.obs = true;
+                }
+            }
             "model" => {
                 self.model = ModelProfile::by_name(v)
                     .ok_or_else(|| anyhow::anyhow!("unknown model '{v}'"))?
@@ -519,6 +549,33 @@ mod tests {
             .with_ship_to_peer(true);
         assert_eq!(c.fsync, FsyncPolicy::GroupCommit);
         assert!(c.ship_to_peer);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn obs_knobs() {
+        let mut c = ExperimentConfig::default();
+        assert!(!c.obs, "tracing is off by default");
+        assert_eq!(c.obs_dir, None);
+        c.apply("obs", "true").unwrap();
+        assert!(c.obs);
+        c.apply("obs", "0").unwrap();
+        assert!(!c.obs);
+        assert!(c.apply("obs", "maybe").is_err());
+        // A non-empty obs_dir implies tracing.
+        c.apply("obs_dir", "traces").unwrap();
+        assert_eq!(c.obs_dir.as_deref(), Some("traces"));
+        assert!(c.obs, "obs_dir implies obs");
+        // Clearing the dir keeps the explicit obs flag alone.
+        c.apply("obs_dir", "").unwrap();
+        assert_eq!(c.obs_dir, None);
+        assert!(c.obs);
+        // Builder shorthands.
+        let c = ExperimentConfig::default().with_obs(true);
+        assert!(c.obs);
+        let c = ExperimentConfig::default().with_obs_dir("t");
+        assert!(c.obs);
+        assert_eq!(c.obs_dir.as_deref(), Some("t"));
         c.validate().unwrap();
     }
 

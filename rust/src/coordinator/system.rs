@@ -211,6 +211,11 @@ impl SystemVariant {
                     .with_fsync(cfg.fsync),
             )?;
         }
+        // After durability: recovery replay stays untraced, so a restarted
+        // service's trace starts at the crash point, not at tick 0.
+        if cfg.obs {
+            svc.enable_obs();
+        }
         Ok(svc)
     }
 
@@ -235,7 +240,8 @@ impl SystemVariant {
         let window = cfg.batch_window;
         let builders = seeds
             .iter()
-            .map(|&seed| {
+            .enumerate()
+            .map(|(k, &seed)| {
                 let mut shard_cfg = cfg.clone();
                 shard_cfg.seed = seed;
                 // Durability is attached per-shard by the fleet below.
@@ -243,12 +249,20 @@ impl SystemVariant {
                 // `Fn`, not `FnOnce`: failover reruns a shard's builder.
                 Box::new(move || {
                     let engine = variant.build_cost(&shard_cfg)?;
-                    Ok(UnlearningService::new(engine)
-                        .with_planner(BatchPlanner::new(policy, window)))
+                    let mut svc = UnlearningService::new(engine)
+                        .with_planner(BatchPlanner::new(policy, window));
+                    svc.set_shard_tag(k as u32);
+                    if shard_cfg.obs {
+                        svc.enable_obs();
+                    }
+                    Ok(svc)
                 }) as Box<dyn Fn() -> Result<UnlearningService> + Send + Sync>
             })
             .collect();
         let mut fleet = FleetService::new(builders, cfg.seed)?;
+        if cfg.obs {
+            fleet.enable_obs();
+        }
         if cfg.durability != DurabilityMode::Off {
             fleet.attach_durability_disk(
                 cfg.durability,

@@ -105,7 +105,18 @@ pub struct FleetService {
     /// the materialized replica (the dead shard's local disk is lost).
     dura_spec: Vec<Option<(DurabilityMode, FsyncPolicy, u64)>>,
     shipping: Option<Shipping>,
+    /// Front-end span tracer ([`FleetService::enable_obs`]); its lane is
+    /// distinct from every shard's, and its drain spans parent the
+    /// worker-side drain roots across the channel boundary.
+    tracer: Option<crate::obs::Tracer>,
+    /// Front-end mirror of the lockstep shard clocks (ticks), used to
+    /// stamp front-end spans and markers.
+    now_tick: u64,
 }
+
+/// Tracer shard key for the fleet front-end: exports to its own lane,
+/// never colliding with a real shard index.
+const FRONT_END_SHARD: u32 = u32::MAX;
 
 impl FleetService {
     /// Derive the per-shard engine seeds from the routing seed. Shard 0
@@ -156,6 +167,8 @@ impl FleetService {
             battery: None,
             dura_spec: vec![None; n],
             shipping: None,
+            tracer: None,
+            now_tick: 0,
         };
         // One Ready (or builder Err) per worker; first failure wins in
         // shard order. Drop shuts the healthy workers down.
@@ -249,6 +262,10 @@ impl FleetService {
     pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
         self.ensure_all_alive()?;
         self.round += 1;
+        // Mirror the workers' clocks: each shard's ingest advances its
+        // service clock by one tick.
+        self.now_tick = self.now_tick.saturating_add(1);
+        let span = crate::obs::begin_root(&mut self.tracer, "fleet_ingest", self.now_tick);
         for b in pop.blocks_at(self.round) {
             self.router.route(b.user, b.samples);
         }
@@ -266,6 +283,7 @@ impl FleetService {
             Reply::Err(e) => Ok(Err(e)),
             other => Err(other),
         })?;
+        crate::obs::end(&mut self.tracer, span, self.now_tick, u64::from(self.round));
         for (k, r) in acks.into_iter().enumerate() {
             if let Err(e) = r {
                 return Err(anyhow!("fleet worker {k} ingest failed: {e}"));
@@ -278,6 +296,7 @@ impl FleetService {
     /// lockstep; a dead shard's ticks are parked and replayed in order at
     /// failover, so its recovered clock catches up exactly).
     pub fn advance(&mut self, ticks: u64) {
+        self.now_tick = self.now_tick.saturating_add(ticks);
         for k in 0..self.workers.len() {
             self.dispatch(k, Cmd::Advance(ticks));
         }
@@ -319,8 +338,16 @@ impl FleetService {
 
     fn drain(&mut self, flush: bool) -> Result<usize> {
         self.ensure_all_alive()?;
+        let root = crate::obs::begin_root(
+            &mut self.tracer,
+            if flush { "fleet_flush" } else { "fleet_drain" },
+            self.now_tick,
+        );
         for k in 0..self.workers.len() {
-            self.send(k, Cmd::Drain { flush });
+            // `root` rides to each worker so the shard-side drain span
+            // parents to this front-end span across the channel boundary
+            // (0 = tracing off).
+            self.send(k, Cmd::Drain { flush, parent: root });
         }
         let results = self.collect(|reply| match reply {
             Reply::Served(n) => Ok(Ok(n)),
@@ -331,9 +358,13 @@ impl FleetService {
         for (k, r) in results.into_iter().enumerate() {
             match r {
                 Ok(n) => served += n,
-                Err(e) => return Err(anyhow!("fleet worker {k} drain failed: {e}")),
+                Err(e) => {
+                    crate::obs::end(&mut self.tracer, root, self.now_tick, served as u64);
+                    return Err(anyhow!("fleet worker {k} drain failed: {e}"));
+                }
             }
         }
+        crate::obs::end(&mut self.tracer, root, self.now_tick, served as u64);
         Ok(served)
     }
 
@@ -808,6 +839,80 @@ impl FleetService {
         }
         self.collect(|reply| match reply {
             Reply::Metrics(m) => Ok(*m),
+            other => Err(other),
+        })
+    }
+
+    /// Turn on span tracing at the fleet front-end. Workers trace (or
+    /// not) per their own build config — [`SystemVariant::build_fleet`]
+    /// enables both sides from one `obs` knob.
+    ///
+    /// [`SystemVariant::build_fleet`]: crate::coordinator::system::SystemVariant::build_fleet
+    pub fn enable_obs(&mut self) {
+        if self.tracer.is_none() {
+            self.tracer = Some(crate::obs::Tracer::new(FRONT_END_SHARD));
+        }
+    }
+
+    /// Whether front-end span tracing is enabled.
+    pub fn obs_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Stamp an instant marker (scenario phase, injected fault) into the
+    /// front-end trace lane. No-op when tracing is off.
+    pub fn obs_marker(&mut self, name: &'static str) {
+        let tick = self.now_tick;
+        crate::obs::marker(&mut self.tracer, name, tick, 0);
+    }
+
+    /// Every retained span record across the fleet: the front-end lane
+    /// first, then each shard's (shard order). One flat vec — the
+    /// exporters lane-split by shard key.
+    pub fn trace_records(&self) -> Result<Vec<crate::obs::SpanRec>> {
+        self.ensure_all_alive()?;
+        let mut out = self
+            .tracer
+            .as_ref()
+            .map_or_else(Vec::new, crate::obs::Tracer::records);
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::ObsSpans);
+        }
+        let shards = self.collect(|reply| match reply {
+            Reply::ObsSpans(v) => Ok(v),
+            other => Err(other),
+        })?;
+        for v in shards {
+            out.extend(v);
+        }
+        Ok(out)
+    }
+
+    /// The fleet's named-metrics registry. A 1-worker fleet returns its
+    /// only shard's registry **verbatim** (byte-identical JSON to the
+    /// unsharded [`UnlearningService::registry`]); a real fleet merges
+    /// the per-shard registries in shard order (counters sum, gauges sum,
+    /// labels union, histograms merge).
+    pub fn registry(&self) -> Result<crate::obs::Registry> {
+        let mut regs = self.shard_registries()?;
+        if regs.len() == 1 {
+            return Ok(regs.remove(0));
+        }
+        let mut out = crate::obs::Registry::new();
+        for r in &regs {
+            out.merge(r);
+        }
+        Ok(out)
+    }
+
+    /// Per-shard named-metrics registries in shard order.
+    pub fn shard_registries(&self) -> Result<Vec<crate::obs::Registry>> {
+        self.ensure_all_alive()?;
+        for k in 0..self.workers.len() {
+            self.send(k, Cmd::ObsRegistry);
+        }
+        self.collect(|reply| match reply {
+            Reply::ObsRegistry(r) => Ok(*r),
             other => Err(other),
         })
     }

@@ -48,8 +48,10 @@ pub(crate) enum Cmd {
     SetBattery(Battery),
     /// Drain batched windows (`flush` = close everything regardless of
     /// deadline slack), quoting each window to the front-end for
-    /// admission. Terminates with `Served` or `Err`.
-    Drain { flush: bool },
+    /// admission. Terminates with `Served` or `Err`. `parent` links the
+    /// worker's drain span to the front-end span that caused it (0 =
+    /// none / tracing off).
+    Drain { flush: bool, parent: u64 },
     AttachDurability(Durability),
     /// Start shipping the shard's journal over `transport` (identifying
     /// as shard `source`); the current generation is staged immediately.
@@ -70,6 +72,11 @@ pub(crate) enum Cmd {
     JournalEvents,
     /// Aggregate journal counters (fsync stats, log/snapshot bytes).
     JournalStats,
+    /// Snapshot of the shard's retained span records (empty when tracing
+    /// is off).
+    ObsSpans,
+    /// The shard's named-metrics registry.
+    ObsRegistry,
     /// The journal's durable state, [`Replica`]-shaped (soak-harness
     /// byte-convergence checks compare this against the peer's copy).
     JournalImage,
@@ -100,6 +107,8 @@ pub(crate) enum Reply {
     Shipping { receipt: Option<ShipReceipt>, log_seq: u64 },
     LatencyHist { hist: Box<LatencyHistogram>, violations: u64 },
     JournalStats(Option<JournalStats>),
+    ObsSpans(Vec<crate::obs::SpanRec>),
+    ObsRegistry(Box<crate::obs::Registry>),
     JournalImage(Box<Option<Replica>>),
     Err(String),
 }
@@ -170,10 +179,12 @@ fn run(
                 svc = svc.with_battery(b);
                 None
             }
-            Cmd::Drain { flush } => Some(match drain(&mut svc, flush, k, &events, &grants) {
-                Ok(served) => Reply::Served(served),
-                Err(e) => Reply::Err(format!("{e:#}")),
-            }),
+            Cmd::Drain { flush, parent } => {
+                Some(match drain(&mut svc, flush, parent, k, &events, &grants) {
+                    Ok(served) => Reply::Served(served),
+                    Err(e) => Reply::Err(format!("{e:#}")),
+                })
+            }
             Cmd::AttachDurability(d) => Some(match svc.attach_durability(d) {
                 Ok(report) => Reply::Attached(Box::new(report)),
                 Err(e) => Reply::Err(format!("{e:#}")),
@@ -197,10 +208,12 @@ fn run(
                 log_seq: svc.journal_seq(),
             }),
             Cmd::LatencyHist { slo_ticks } => {
-                let mut hist = LatencyHistogram::new();
+                // The histogram is maintained incrementally (and covers
+                // receipts folded out of the capped vec); the exact
+                // violation count still scans the retained receipts.
+                let hist = svc.engine().metrics.latency_hist.clone();
                 let mut violations = 0u64;
                 for r in &svc.engine().metrics.latency {
-                    hist.record(r.queued_ticks);
                     if r.queued_ticks > slo_ticks {
                         violations += 1;
                     }
@@ -217,6 +230,8 @@ fn run(
             }),
             Cmd::JournalEvents => Some(Reply::Events(svc.journal_events())),
             Cmd::JournalStats => Some(Reply::JournalStats(svc.journal_stats())),
+            Cmd::ObsSpans => Some(Reply::ObsSpans(svc.obs_records())),
+            Cmd::ObsRegistry => Some(Reply::ObsRegistry(Box::new(svc.registry()))),
             Cmd::JournalImage => Some(Reply::JournalImage(Box::new(svc.journal_image()))),
             Cmd::Shutdown => break,
         };
@@ -233,11 +248,21 @@ fn run(
 fn drain(
     svc: &mut UnlearningService,
     flush: bool,
+    parent: u64,
     k: usize,
     events: &Sender<(usize, Reply)>,
     grants: &Receiver<Admission>,
 ) -> Result<usize> {
     svc.check_journal()?;
+    if parent != 0 {
+        svc.obs_set_parent(parent);
+    }
+    let now = svc.now();
+    let root = crate::obs::begin_root(
+        svc.tracer_mut(),
+        if flush { "drain_flush" } else { "drain" },
+        now,
+    );
     let mut served = 0;
     loop {
         let w = svc.next_window(flush);
@@ -263,6 +288,8 @@ fn drain(
     // window (one fsync) and ship the sealed frames before acking.
     svc.journal_seal();
     svc.check_journal()?;
+    let now = svc.now();
+    crate::obs::end(svc.tracer_mut(), root, now, served as u64);
     Ok(served)
 }
 
@@ -275,11 +302,16 @@ fn exchange(
     grants: &Receiver<Admission>,
 ) -> Result<usize> {
     let pw = svc.price_window(window);
+    let now = svc.now();
+    let span = crate::obs::begin(svc.tracer_mut(), "admit", now);
     events
         .send((k, Reply::Quote { costs: pw.costs.clone(), battery: svc.battery().cloned() }))
         .map_err(|_| anyhow::anyhow!("fleet front-end hung up mid-quote"))?;
     let admission = grants
         .recv()
         .map_err(|_| anyhow::anyhow!("fleet front-end hung up awaiting grant"))?;
+    let granted = matches!(admission, Admission::Granted { .. });
+    let now = svc.now();
+    crate::obs::end(svc.tracer_mut(), span, now, u64::from(granted));
     svc.commit_window(pw, admission)
 }

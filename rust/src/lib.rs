@@ -30,6 +30,7 @@ pub mod fleet;
 pub mod load;
 pub mod memory;
 pub mod metrics;
+pub mod obs;
 pub mod partition;
 pub mod persist;
 pub mod prng;

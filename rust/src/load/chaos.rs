@@ -190,6 +190,11 @@ pub struct ChaosCfg {
     /// Ship over the file-backed [`FileSpool`] (frames survive process
     /// death on the peer's disk) instead of the in-process store.
     pub spool: bool,
+    /// Trace the run: fault markers, spans, and a Chrome-trace export in
+    /// the report. A crash-restart drops the dead fleet's in-memory
+    /// spans — the trace covers the surviving processes, the receipts
+    /// cover everything.
+    pub obs: bool,
 }
 
 impl Default for ChaosCfg {
@@ -202,6 +207,7 @@ impl Default for ChaosCfg {
             check_every: 8,
             compact_every: 12,
             spool: false,
+            obs: false,
         }
     }
 }
@@ -237,6 +243,12 @@ pub struct ChaosReport {
     pub replica_bytes: Vec<u64>,
     /// Final per-shard source live WAL + snapshot bytes.
     pub live_bytes: Vec<u64>,
+    /// Fleet-merged durability/ship/latency counters (registry excerpt).
+    pub telemetry: Json,
+    /// Chrome-trace export when [`ChaosCfg::obs`] is set. Kept out of
+    /// `to_json` — callers write it as its own artifact rather than
+    /// embedding thousands of span events in the verdict report.
+    pub trace: Option<Json>,
 }
 
 impl ChaosReport {
@@ -278,6 +290,7 @@ impl ChaosReport {
             )
             .set("replica_bytes", self.replica_bytes.clone())
             .set("live_bytes", self.live_bytes.clone())
+            .set("telemetry", self.telemetry.clone())
             .set("ok", self.ok())
     }
 }
@@ -330,6 +343,9 @@ impl ChaosRun {
         let mut ecfg = scenario.config();
         // Kills and failovers need peers; chaos always runs a real fleet.
         ecfg.fleet_workers = ecfg.fleet_workers.max(2);
+        if cfg.obs {
+            ecfg.obs = true;
+        }
         // The harness owns durability (failpoint-wrapped journals).
         ecfg.durability = DurabilityMode::Off;
         ChaosRun {
@@ -571,6 +587,9 @@ impl ChaosRun {
     ) -> Result<()> {
         let k = fault.shard % self.workers();
         let whence = format!("tick {} {}", fault.tick, fault.class.name());
+        // Stamp the fault class into the front-end trace lane so the
+        // Chrome view lines faults up against the spans they perturb.
+        self.fleet().obs_marker(fault.class.name());
         report.faults.push(FaultRecord {
             tick: fault.tick,
             class: fault.class.name(),
@@ -672,6 +691,8 @@ pub fn run_chaos(
         violations: Vec::new(),
         replica_bytes: Vec::new(),
         live_bytes: Vec::new(),
+        telemetry: Json::obj(),
+        trace: None,
     };
     run.build(true)?;
     run.last_log_seq = vec![0; run.workers()];
@@ -793,6 +814,22 @@ pub fn run_chaos(
     // track the post-compaction WAL, not the run's full history.
     run.fleet().compact_now()?;
     run.barrier(&mut report, "final")?;
+
+    // Surface the durability/ship/latency counters the soak binaries
+    // print, and the trace when this run recorded one.
+    let reg = run.fleet().registry()?;
+    report.telemetry = Json::obj()
+        .set("ship_attempts", reg.counter("ship.attempts"))
+        .set("ship_faults", reg.counter("ship.faults"))
+        .set("ship_failed", reg.counter("ship.failed"))
+        .set("journal_appended", reg.counter("journal.appended"))
+        .set("journal_fsyncs", reg.counter("journal.fsyncs"))
+        .set("latency_dropped", reg.counter("latency.dropped"))
+        .set("latency_slo_miss", reg.counter("latency.slo_miss"));
+    if run.ecfg.obs {
+        report.trace =
+            Some(crate::obs::export::chrome_trace(&run.fleet().trace_records()?));
+    }
     Ok(report)
 }
 

@@ -137,6 +137,19 @@ impl LatencyHistogram {
         self.max
     }
 
+    /// Decompose into raw parts `(counts, count, sum, max)` for snapshot
+    /// encoding; [`from_parts`](LatencyHistogram::from_parts) inverts it
+    /// exactly (including trailing-zero buckets, so the rebuilt value is
+    /// `==` the original, not just JSON-equal).
+    pub fn to_parts(&self) -> (Vec<u64>, u64, u128, u64) {
+        (self.counts.clone(), self.count, self.sum, self.max)
+    }
+
+    /// Rebuild from [`to_parts`](LatencyHistogram::to_parts) output.
+    pub fn from_parts(counts: Vec<u64>, count: u64, sum: u128, max: u64) -> Self {
+        LatencyHistogram { counts, count, sum, max }
+    }
+
     /// Deterministic JSON: summary quantiles plus the non-empty buckets
     /// as `[lower_bound, count]` rows (full distribution, mergeable by
     /// re-recording).

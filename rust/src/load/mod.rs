@@ -324,6 +324,32 @@ impl ServiceUnderTest {
         }
     }
 
+    /// Stamp an instant marker into the trace (front-end lane in fleet
+    /// mode). No-op when tracing is off.
+    pub fn obs_marker(&mut self, name: &'static str) {
+        match self {
+            ServiceUnderTest::Single(s) => s.obs_marker(name),
+            ServiceUnderTest::Fleet(f) => f.obs_marker(name),
+        }
+    }
+
+    /// Every retained span record (front-end lane first in fleet mode).
+    pub fn trace_records(&self) -> Result<Vec<crate::obs::SpanRec>> {
+        match self {
+            ServiceUnderTest::Single(s) => Ok(s.obs_records()),
+            ServiceUnderTest::Fleet(f) => f.trace_records(),
+        }
+    }
+
+    /// The service's named-metrics registry (shard-merged in fleet mode;
+    /// verbatim for one worker).
+    pub fn registry(&self) -> Result<crate::obs::Registry> {
+        match self {
+            ServiceUnderTest::Single(s) => Ok(s.registry()),
+            ServiceUnderTest::Fleet(f) => f.registry(),
+        }
+    }
+
     /// Per-shard latency histograms (one for the single service), plus
     /// served-receipt count, SLO violations against `slo_ticks`, and
     /// total retrain energy. The fleet arm takes the histograms straight
@@ -335,19 +361,19 @@ impl ServiceUnderTest {
     pub fn latency_report(&mut self, slo_ticks: u64) -> Result<LatencyReportRaw> {
         match self {
             ServiceUnderTest::Single(s) => {
-                let mut h = LatencyHistogram::new();
-                let mut served = 0u64;
+                // The incremental histogram covers receipts folded out of
+                // the capped vec; the exact violation count still scans
+                // the retained receipts.
+                let h = s.engine().metrics.latency_hist.clone();
                 let mut violations = 0u64;
                 for r in &s.engine().metrics.latency {
-                    h.record(r.queued_ticks);
-                    served += 1;
                     if r.queued_ticks > slo_ticks {
                         violations += 1;
                     }
                 }
                 Ok(LatencyReportRaw {
+                    served: h.count(),
                     shard_hists: vec![h],
-                    served,
                     violations,
                     energy_joules: s.engine().metrics.energy_joules,
                 })
@@ -394,11 +420,21 @@ pub struct OpenLoopCfg {
     pub tail_ticks: u64,
     /// Seed for the scenario's request-selection RNG.
     pub seed: u64,
+    /// Enable span tracing on the service under test: scenario phases are
+    /// stamped as trace markers and the report carries a Chrome-trace
+    /// export. Receipts and metrics are unaffected either way.
+    pub obs: bool,
 }
 
 impl Default for OpenLoopCfg {
     fn default() -> Self {
-        OpenLoopCfg { offered_per_tick: 1.0, ticks: 64, tail_ticks: 256, seed: 0x10ad }
+        OpenLoopCfg {
+            offered_per_tick: 1.0,
+            ticks: 64,
+            tail_ticks: 256,
+            seed: 0x10ad,
+            obs: false,
+        }
     }
 }
 
@@ -421,6 +457,15 @@ pub struct LoadReport {
     pub slo_ok: bool,
     pub trace_digest: u64,
     pub hist: LatencyHistogram,
+    /// Cross-layer telemetry pulled from the service registry (shipping
+    /// retries, journal fsync stats, latency-cap counters) — flat, so
+    /// harness binaries print it without digging through receipt JSON.
+    pub telemetry: Json,
+    /// Chrome-trace export of the run's spans when `OpenLoopCfg::obs`
+    /// was set (`None` otherwise). Deliberately NOT part of `to_json`:
+    /// reports stay byte-comparable and small; callers that want the
+    /// trace write it separately.
+    pub trace: Option<Json>,
 }
 
 impl LoadReport {
@@ -459,6 +504,7 @@ impl LoadReport {
             .set("trace_digest", format!("{:016x}", self.trace_digest))
             .set("p999_over_p50", self.p999_over_p50())
             .set("hist", self.hist.to_json())
+            .set("telemetry", self.telemetry.clone())
     }
 }
 
@@ -493,7 +539,10 @@ const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
 /// executes whatever window closed; (3) tail — up to `tail_ticks` of
 /// harvest + flush to let queued and battery-parked work finish.
 pub fn run_open_loop(scenario: &dyn Scenario, run: &OpenLoopCfg) -> Result<LoadReport> {
-    let cfg = scenario.config();
+    let mut cfg = scenario.config();
+    if run.obs {
+        cfg.obs = true;
+    }
     let pop = scenario.population(&cfg);
     let mut sut = ServiceUnderTest::build(&cfg, scenario.battery())?;
     let mut factory = RequestFactory::new(&pop);
@@ -503,6 +552,7 @@ pub fn run_open_loop(scenario: &dyn Scenario, run: &OpenLoopCfg) -> Result<LoadR
         sut.ingest_round(&pop)?;
         factory.ingest_round();
     }
+    sut.obs_marker("phase:arrivals");
 
     // Separate the request-selection stream per scenario so corpus
     // members never share random decisions even under one seed.
@@ -534,6 +584,7 @@ pub fn run_open_loop(scenario: &dyn Scenario, run: &OpenLoopCfg) -> Result<LoadR
     }
 
     // Phase 3: bounded drain tail.
+    sut.obs_marker("phase:tail");
     let mut tail_used = 0u64;
     while tail_used < run.tail_ticks {
         if sut.pending()? == 0
@@ -562,6 +613,21 @@ pub fn run_open_loop(scenario: &dyn Scenario, run: &OpenLoopCfg) -> Result<LoadR
     let slo_ok =
         unserved == 0 && leftover_lineages == 0 && hist.quantile(0.99) <= slo_ticks;
 
+    let reg = sut.registry()?;
+    let telemetry = Json::obj()
+        .set("ship_attempts", reg.counter("ship.attempts"))
+        .set("ship_faults", reg.counter("ship.faults"))
+        .set("ship_failed", reg.counter("ship.failed"))
+        .set("journal_appended", reg.counter("journal.appended"))
+        .set("journal_fsyncs", reg.counter("journal.fsyncs"))
+        .set("latency_dropped", reg.counter("latency.dropped"))
+        .set("latency_slo_miss", reg.counter("latency.slo_miss"));
+    let trace = if cfg.obs {
+        Some(crate::obs::export::chrome_trace(&sut.trace_records()?))
+    } else {
+        None
+    };
+
     Ok(LoadReport {
         scenario: scenario.name().to_string(),
         offered_per_tick: run.offered_per_tick,
@@ -577,6 +643,8 @@ pub fn run_open_loop(scenario: &dyn Scenario, run: &OpenLoopCfg) -> Result<LoadR
         slo_ok,
         trace_digest: digest,
         hist,
+        telemetry,
+        trace,
     })
 }
 

@@ -542,6 +542,7 @@ mod tests {
             ticks: 12,
             tail_ticks: 64,
             seed: 0x5afe,
+            obs: false,
         };
         for sc in corpus() {
             let rep = run_open_loop(sc.as_ref(), &run).expect(sc.name());

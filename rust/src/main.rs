@@ -31,7 +31,7 @@ CONFIG KEYS (key=value):
     seed users rounds epochs_per_round shards memory_gb unlearn_prob
     sc_gamma sc_p prune_keep batch_policy batch_window batch_slo model dataset
     store_mode memory_budget_bytes codec durability persist_dir compact_every
-    fleet_workers
+    fleet_workers obs obs_dir
 
 BATCHING:
     batch_policy = fcfs | coalesce | deadline
@@ -70,6 +70,15 @@ FLEET (sharded service; `run` drives it when fleet_workers > 1):
                     with battery admission decided centrally per priced
                     window. fleet_workers=1 replays the unsharded service
                     byte-identically (receipts, RSN, store stats, journal).
+
+OBSERVABILITY:
+    obs     = true | false   deterministic span tracing (plan→price→admit→
+                             retrain→snapshot→seal→ship) + metrics registry
+    obs_dir = directory for <prefix>_trace.json (Chrome trace format; load
+              in chrome://tracing or Perfetto) and <prefix>_events.jsonl.
+              Setting obs_dir implies obs=true. `cause run` exports the
+              fleet trace when fleet_workers > 1; summarize a trace into a
+              per-phase tick-budget table with the `obs` binary.
 "
 }
 
@@ -151,6 +160,22 @@ fn cmd_run(args: &[String]) -> anyhow::Result<()> {
                 .map(|s| format!("{s:#x}"))
                 .collect::<Vec<_>>()
         );
+        if cfg.obs {
+            if let Some(dir) = cfg.obs_dir.as_deref() {
+                let recs = fleet.trace_records()?;
+                let (trace, events) = cause::obs::export::write_dir(
+                    std::path::Path::new(dir),
+                    "run",
+                    &recs,
+                )?;
+                println!(
+                    "trace: {} ({} spans)  events: {}",
+                    trace.display(),
+                    recs.len(),
+                    events.display()
+                );
+            }
+        }
         fleet.metrics()?
     } else {
         let mut engine = system.build_cost(&cfg)?;

@@ -2,7 +2,16 @@
 //! the service-level latency receipts the deadline-aware batch scheduler
 //! is judged by (queueing delay vs retrains coalesced).
 
+use crate::load::LatencyHistogram;
 use crate::util::Summary;
+
+/// Receipts kept verbatim in [`RunMetrics::latency`]; past this the Vec
+/// stops growing and further receipts land only in the histogram (plus
+/// the `latency_dropped` counter), so an open-loop soak can run for
+/// millions of requests without unbounded memory. Far above anything a
+/// test or bench produces, so capped and uncapped runs are byte-equal
+/// everywhere that matters.
+pub const LATENCY_RECEIPT_CAP: usize = 1 << 16;
 
 /// Per-request latency receipt stamped by the unlearning service when the
 /// request's batch window executes. `queued_ticks` is the service-clock
@@ -47,8 +56,18 @@ pub struct RunMetrics {
     /// poisoned by k requests in one window retrains once, saving k-1.
     pub retrains_coalesced: u64,
     /// Per-request queueing-delay receipts (service drains only; empty
-    /// when the engine is driven directly).
+    /// when the engine is driven directly). Bounded by
+    /// [`LATENCY_RECEIPT_CAP`]; the histogram below keeps the full
+    /// distribution regardless.
     pub latency: Vec<LatencyReceipt>,
+    /// Every receipt's queueing delay, log-bucketed — never dropped,
+    /// mergeable across shards, and what the obs registry exports.
+    pub latency_hist: LatencyHistogram,
+    /// Receipts not retained in `latency` because the cap was hit.
+    pub latency_dropped: u64,
+    /// SLO misses counted at record time (receipts past the cap still
+    /// count, unlike a scan of the truncated Vec).
+    pub latency_slo_miss: u64,
     /// Ensemble accuracy per evaluation point (only with a real trainer).
     pub accuracy_by_round: Vec<Option<f64>>,
 }
@@ -69,9 +88,19 @@ impl RunMetrics {
         *self.requests_by_round.last_mut().expect("slot just ensured") += served;
     }
 
-    /// Record one served request's queueing-delay receipt.
+    /// Record one served request's queueing-delay receipt: always into
+    /// the histogram and the SLO-miss counter, verbatim into `latency`
+    /// only while under [`LATENCY_RECEIPT_CAP`].
     pub fn record_latency(&mut self, receipt: LatencyReceipt) {
-        self.latency.push(receipt);
+        self.latency_hist.record(receipt.queued_ticks);
+        if !receipt.slo_met {
+            self.latency_slo_miss += 1;
+        }
+        if self.latency.len() < LATENCY_RECEIPT_CAP {
+            self.latency.push(receipt);
+        } else {
+            self.latency_dropped += 1;
+        }
     }
 
     /// Distribution of queueing delays (ticks) across latency receipts.
@@ -81,9 +110,10 @@ impl RunMetrics {
         Summary::of(&delays)
     }
 
-    /// Requests served past their latency SLO.
+    /// Requests served past their latency SLO. Counted at record time,
+    /// so receipts dropped past the retention cap still count.
     pub fn slo_violations(&self) -> u64 {
-        self.latency.iter().filter(|r| !r.slo_met).count() as u64
+        self.latency_slo_miss
     }
 
     pub fn total_rsn(&self) -> u64 {
@@ -147,6 +177,9 @@ impl RunMetrics {
             out.batched_requests += m.batched_requests;
             out.retrains_coalesced += m.retrains_coalesced;
             out.latency.extend(m.latency.iter().cloned());
+            out.latency_hist.merge(&m.latency_hist);
+            out.latency_dropped += m.latency_dropped;
+            out.latency_slo_miss += m.latency_slo_miss;
         }
         let acc_rounds = shards.iter().map(|m| m.accuracy_by_round.len()).max().unwrap_or(0);
         for i in 0..acc_rounds {
@@ -185,7 +218,8 @@ impl RunMetrics {
             .set("queue_delay_p50", delays.p50)
             .set("queue_delay_p99", delays.p99)
             .set("slo_violations", self.slo_violations())
-            .set("latency_receipts", self.latency.len())
+            .set("latency_receipts", self.latency.len() as u64 + self.latency_dropped)
+            .set("latency_dropped", self.latency_dropped)
             .set(
                 "accuracy_by_round",
                 Json::Arr(
@@ -251,6 +285,32 @@ mod tests {
         assert_eq!(s.max, 4.0);
         assert!(s.p50 <= s.p99);
         assert_eq!(m.slo_violations(), 2);
+    }
+
+    #[test]
+    fn latency_cap_folds_into_histogram() {
+        let mut m = RunMetrics::default();
+        let n = LATENCY_RECEIPT_CAP + 10;
+        for i in 0..n {
+            m.record_latency(LatencyReceipt {
+                user: 0,
+                round: 0,
+                queued_ticks: i as u64 % 7,
+                slo_met: i % 2 == 0,
+            });
+        }
+        assert_eq!(m.latency.len(), LATENCY_RECEIPT_CAP, "Vec stops at the cap");
+        assert_eq!(m.latency_dropped, 10);
+        assert_eq!(m.latency_hist.count(), n as u64, "histogram never drops");
+        assert_eq!(m.slo_violations(), (n / 2) as u64, "misses counted past the cap");
+        let j = m.to_json();
+        assert_eq!(j.at(&["latency_receipts"]).and_then(|v| v.as_u64()), Some(n as u64));
+        assert_eq!(j.at(&["latency_dropped"]).and_then(|v| v.as_u64()), Some(10));
+        // Fleet aggregation carries the counters and merges the histogram.
+        let f = RunMetrics::fleet_aggregate(&[m.clone(), m.clone()]);
+        assert_eq!(f.latency_dropped, 20);
+        assert_eq!(f.latency_hist.count(), 2 * n as u64);
+        assert_eq!(f.slo_violations(), 2 * (n / 2) as u64);
     }
 
     #[test]

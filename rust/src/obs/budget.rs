@@ -1,0 +1,223 @@
+//! Tick-budget attribution: fold a span trace into a per-phase table
+//! answering "where did the run's traced time go?". Every microsecond
+//! inside a root span is attributed to exactly one named span as *self*
+//! time (its duration minus its same-lane children), so the table's
+//! share column sums to 100% of in-span time by construction. The same
+//! computation runs over live [`SpanRec`]s (bench/load harness) and
+//! over a re-parsed Chrome trace export (the `obs` binary), so the
+//! table printed at run time and the one recovered from the artifact
+//! agree byte for byte.
+
+use std::collections::BTreeMap;
+
+use crate::util::Json;
+
+use super::export::lane;
+use super::SpanRec;
+
+/// One span, decoupled from the in-process record so traces can be
+/// re-loaded from their Chrome export.
+#[derive(Clone, Debug)]
+pub struct BudgetSpan {
+    pub name: String,
+    /// Export lane (front-end = 0, shard `k` = `k + 1`).
+    pub lane: u64,
+    pub id: u64,
+    pub parent: u64,
+    pub ts: u64,
+    pub dur: u64,
+}
+
+/// Aggregated row for one span name.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BudgetRow {
+    pub name: String,
+    pub count: u64,
+    pub total_us: u64,
+    pub self_us: u64,
+}
+
+/// The folded budget: rows sorted by self time (descending, name as the
+/// tie-break), plus the totals the share column is computed against.
+#[derive(Clone, Debug)]
+pub struct Budget {
+    pub rows: Vec<BudgetRow>,
+    /// Σ durations of root spans (parent absent on the span's lane).
+    pub root_us: u64,
+    /// Σ self times over every row; equals `root_us` when every span
+    /// nests inside a root on its own lane.
+    pub attributed_us: u64,
+}
+
+/// Lossless conversion from live tracer records (markers drop out —
+/// they carry no duration).
+pub fn spans_from_records(records: &[SpanRec]) -> Vec<BudgetSpan> {
+    records
+        .iter()
+        .filter(|r| !r.is_marker())
+        .map(|r| BudgetSpan {
+            name: r.name.to_string(),
+            lane: lane(r.shard),
+            id: r.id,
+            parent: r.parent,
+            ts: r.begin_ts,
+            dur: r.dur(),
+        })
+        .collect()
+}
+
+/// Recover spans and marker counts from a Chrome trace document (the
+/// inverse of [`export::chrome_trace`](super::export::chrome_trace)).
+pub fn spans_from_chrome(doc: &Json) -> Result<(Vec<BudgetSpan>, Vec<(String, u64)>), String> {
+    let events = doc
+        .at(&["traceEvents"])
+        .and_then(Json::as_arr)
+        .ok_or("not a Chrome trace: no traceEvents array")?;
+    let mut spans = Vec::new();
+    let mut markers: BTreeMap<String, u64> = BTreeMap::new();
+    for e in events {
+        let ph = e.at(&["ph"]).and_then(Json::as_str).unwrap_or("");
+        let name = e.at(&["name"]).and_then(Json::as_str).unwrap_or("?").to_string();
+        let field = |keys: &[&str]| e.at(keys).and_then(Json::as_u64);
+        match ph {
+            "X" => spans.push(BudgetSpan {
+                name,
+                lane: field(&["tid"]).ok_or("span event without tid")?,
+                id: field(&["args", "id"]).ok_or("span event without args.id")?,
+                parent: field(&["args", "parent"]).unwrap_or(0),
+                ts: field(&["ts"]).ok_or("span event without ts")?,
+                dur: field(&["dur"]).unwrap_or(0),
+            }),
+            "i" => *markers.entry(name).or_insert(0) += 1,
+            _ => {} // metadata ("M") and anything foreign
+        }
+    }
+    Ok((spans, markers.into_iter().collect()))
+}
+
+/// Fold spans into the per-name budget. A span is a *root* when its
+/// parent id does not resolve on its own lane (parent 0, or a
+/// cross-lane parent such as a worker `drain` adopted by the fleet
+/// front-end — each lane budgets its own time).
+pub fn compute(spans: &[BudgetSpan]) -> Budget {
+    let mut by_id: BTreeMap<(u64, u64), usize> = BTreeMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        by_id.insert((s.lane, s.id), i);
+    }
+    let mut child_us = vec![0u64; spans.len()];
+    let mut root_us = 0u64;
+    for s in spans {
+        match by_id.get(&(s.lane, s.parent)) {
+            Some(&p) if s.parent != 0 => child_us[p] += s.dur,
+            _ => root_us += s.dur,
+        }
+    }
+    let mut rows: BTreeMap<&str, BudgetRow> = BTreeMap::new();
+    for (i, s) in spans.iter().enumerate() {
+        let row = rows.entry(s.name.as_str()).or_insert_with(|| BudgetRow {
+            name: s.name.clone(),
+            count: 0,
+            total_us: 0,
+            self_us: 0,
+        });
+        row.count += 1;
+        row.total_us += s.dur;
+        row.self_us += s.dur.saturating_sub(child_us[i]);
+    }
+    let mut rows: Vec<BudgetRow> = rows.into_values().collect();
+    rows.sort_by(|a, b| b.self_us.cmp(&a.self_us).then_with(|| a.name.cmp(&b.name)));
+    let attributed_us = rows.iter().map(|r| r.self_us).sum();
+    Budget { rows, root_us, attributed_us }
+}
+
+/// Render the budget (and marker counts, when any) as the fixed-width
+/// table the `obs` binary and the load harness both print.
+pub fn render(b: &Budget, markers: &[(String, u64)]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "{:<16} {:>7} {:>10} {:>10} {:>8}\n",
+        "phase", "count", "total_us", "self_us", "share%"
+    ));
+    for r in &b.rows {
+        let share = if b.root_us == 0 {
+            0.0
+        } else {
+            100.0 * r.self_us as f64 / b.root_us as f64
+        };
+        out.push_str(&format!(
+            "{:<16} {:>7} {:>10} {:>10} {:>8.1}\n",
+            r.name, r.count, r.total_us, r.self_us, share
+        ));
+    }
+    let pct = if b.root_us == 0 {
+        100.0
+    } else {
+        100.0 * b.attributed_us as f64 / b.root_us as f64
+    };
+    out.push_str(&format!(
+        "in-span time {} us across {} phases; {:.1}% attributed to named spans\n",
+        b.root_us,
+        b.rows.len(),
+        pct
+    ));
+    if !markers.is_empty() {
+        out.push_str("markers:");
+        for (name, n) in markers {
+            out.push_str(&format!(" {name}={n}"));
+        }
+        out.push('\n');
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::chrome_trace;
+    use crate::obs::Tracer;
+
+    fn sample() -> Vec<SpanRec> {
+        let mut front = Tracer::new(u32::MAX);
+        let root = front.begin_root("fleet_drain", 1);
+        front.end(root, 1, 0);
+        let mut shard = Tracer::new(0);
+        shard.adopt_parent(root);
+        let d = shard.begin_root("drain", 1);
+        let s = shard.begin("serve", 1);
+        shard.marker("fault", 1, 0);
+        shard.end(s, 1, 0);
+        shard.end(d, 1, 0);
+        let mut recs = front.records();
+        recs.extend(shard.records());
+        recs
+    }
+
+    #[test]
+    fn attribution_partitions_root_time() {
+        let b = compute(&spans_from_records(&sample()));
+        // `drain` has a cross-lane parent: it must count as a root of
+        // its own lane, and self times must sum to exactly the roots.
+        assert_eq!(b.attributed_us, b.root_us);
+        assert!(b.rows.iter().any(|r| r.name == "serve"));
+        let total: u64 = b
+            .rows
+            .iter()
+            .filter(|r| ["fleet_drain", "drain"].contains(&r.name.as_str()))
+            .map(|r| r.total_us)
+            .sum();
+        assert_eq!(total, b.root_us);
+    }
+
+    #[test]
+    fn chrome_roundtrip_matches_live_records() {
+        let recs = sample();
+        let live = compute(&spans_from_records(&recs));
+        let doc = Json::parse(&chrome_trace(&recs).to_pretty()).unwrap();
+        let (spans, markers) = spans_from_chrome(&doc).unwrap();
+        let back = compute(&spans);
+        assert_eq!(back.rows, live.rows);
+        assert_eq!(back.root_us, live.root_us);
+        assert_eq!(markers, vec![("fault".to_string(), 1)]);
+        assert_eq!(render(&back, &markers), render(&live, &markers));
+    }
+}

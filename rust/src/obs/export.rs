@@ -1,0 +1,171 @@
+//! Trace exporters: Chrome `trace_event` JSON (load `chrome://tracing`
+//! or <https://ui.perfetto.dev> and drop the file in) and a flat JSONL
+//! event dump for ad-hoc grepping. Both are deterministic: records are
+//! re-sorted by `(begin_ts, lane, seq)` so the byte output depends only
+//! on the recorded spans, never on collection order.
+
+use std::path::{Path, PathBuf};
+
+use crate::util::Json;
+
+use super::SpanRec;
+
+/// Chrome trace `tid` lane for a shard: the fleet front-end
+/// (`u32::MAX`) renders as lane 0, worker shard `k` as lane `k + 1`.
+pub fn lane(shard: u32) -> u64 {
+    if shard == u32::MAX {
+        0
+    } else {
+        u64::from(shard) + 1
+    }
+}
+
+/// Sort records into the canonical export order.
+pub fn sort_records(records: &mut [SpanRec]) {
+    records.sort_by_key(|r| (r.begin_ts, lane(r.shard), r.seq));
+}
+
+fn args(r: &SpanRec) -> Json {
+    Json::obj()
+        .set("id", r.id)
+        .set("parent", r.parent)
+        .set("tick", r.begin_tick)
+        .set("detail", r.detail)
+        .set("seq", r.seq)
+}
+
+/// Render records as a Chrome `trace_event` document: one complete
+/// (`"X"`) event per span, one instant (`"i"`) event per marker, plus
+/// `thread_name` metadata naming each lane. Timestamps are the
+/// tracer's virtual microseconds (1 simulated tick = 1 ms on screen).
+pub fn chrome_trace(records: &[SpanRec]) -> Json {
+    let mut sorted = records.to_vec();
+    sort_records(&mut sorted);
+    let mut events = Vec::with_capacity(sorted.len() + 8);
+    let mut lanes: Vec<u32> = sorted.iter().map(|r| r.shard).collect();
+    lanes.sort_by_key(|&s| lane(s));
+    lanes.dedup();
+    for shard in lanes {
+        let name = if shard == u32::MAX {
+            "fleet front-end".to_string()
+        } else {
+            format!("shard {shard}")
+        };
+        events.push(
+            Json::obj()
+                .set("ph", "M")
+                .set("name", "thread_name")
+                .set("pid", 0u64)
+                .set("tid", lane(shard))
+                .set("args", Json::obj().set("name", name)),
+        );
+    }
+    for r in &sorted {
+        let base = Json::obj()
+            .set("name", r.name)
+            .set("cat", "cause")
+            .set("pid", 0u64)
+            .set("tid", lane(r.shard))
+            .set("ts", r.begin_ts)
+            .set("args", args(r));
+        events.push(if r.is_marker() {
+            base.set("ph", "i").set("s", "t")
+        } else {
+            base.set("ph", "X").set("dur", r.dur())
+        });
+    }
+    Json::obj()
+        .set("displayTimeUnit", "ms")
+        .set("traceEvents", Json::Arr(events))
+}
+
+/// One compact JSON object per record, one record per line.
+pub fn jsonl(records: &[SpanRec]) -> String {
+    let mut sorted = records.to_vec();
+    sort_records(&mut sorted);
+    let mut out = String::new();
+    for r in &sorted {
+        let line = Json::obj()
+            .set("kind", if r.is_marker() { "marker" } else { "span" })
+            .set("name", r.name)
+            .set("shard", u64::from(lane(r.shard)))
+            .set("id", r.id)
+            .set("parent", r.parent)
+            .set("begin_ts", r.begin_ts)
+            .set("end_ts", r.end_ts)
+            .set("begin_tick", r.begin_tick)
+            .set("end_tick", r.end_tick)
+            .set("detail", r.detail)
+            .set("seq", r.seq);
+        out.push_str(&line.to_string());
+        out.push('\n');
+    }
+    out
+}
+
+/// Write both exports under `dir`: `{prefix}_trace.json` (Chrome trace)
+/// and `{prefix}_events.jsonl`. Creates `dir` if needed; returns the
+/// two paths written.
+pub fn write_dir(
+    dir: &Path,
+    prefix: &str,
+    records: &[SpanRec],
+) -> std::io::Result<(PathBuf, PathBuf)> {
+    std::fs::create_dir_all(dir)?;
+    let trace_path = dir.join(format!("{prefix}_trace.json"));
+    let jsonl_path = dir.join(format!("{prefix}_events.jsonl"));
+    std::fs::write(&trace_path, chrome_trace(records).to_pretty())?;
+    std::fs::write(&jsonl_path, jsonl(records))?;
+    Ok((trace_path, jsonl_path))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::Tracer;
+
+    fn sample() -> Vec<SpanRec> {
+        let mut front = Tracer::new(u32::MAX);
+        let root = front.begin_root("fleet_drain", 1);
+        front.end(root, 1, 2);
+        let mut shard = Tracer::new(0);
+        shard.adopt_parent(root);
+        let d = shard.begin_root("drain", 1);
+        shard.marker("fault", 1, 0);
+        shard.end(d, 1, 1);
+        let mut recs = front.records();
+        recs.extend(shard.records());
+        recs
+    }
+
+    #[test]
+    fn chrome_trace_is_loadable_and_sorted() {
+        let recs = sample();
+        let doc = chrome_trace(&recs);
+        let text = doc.to_pretty();
+        let back = Json::parse(&text).expect("round-trips through the parser");
+        let events = back.at(&["traceEvents"]).and_then(Json::as_arr).unwrap();
+        // 2 lane-name metadata events + 3 records.
+        assert_eq!(events.len(), 5);
+        let phases: Vec<_> = events
+            .iter()
+            .map(|e| e.at(&["ph"]).and_then(Json::as_str).unwrap().to_string())
+            .collect();
+        assert_eq!(phases.iter().filter(|p| *p == "M").count(), 2);
+        assert_eq!(phases.iter().filter(|p| *p == "X").count(), 2);
+        assert_eq!(phases.iter().filter(|p| *p == "i").count(), 1);
+    }
+
+    #[test]
+    fn exports_are_order_insensitive_and_deterministic() {
+        let recs = sample();
+        let mut reversed = recs.clone();
+        reversed.reverse();
+        assert_eq!(
+            chrome_trace(&recs).to_string(),
+            chrome_trace(&reversed).to_string()
+        );
+        assert_eq!(jsonl(&recs), jsonl(&reversed));
+        assert_eq!(jsonl(&recs).lines().count(), 3);
+    }
+}

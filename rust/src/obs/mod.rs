@@ -1,0 +1,597 @@
+//! Deterministic, low-overhead observability: a span/event [`Tracer`]
+//! with per-shard fixed-capacity ring buffers, and a shard-mergeable
+//! metrics [`Registry`] that unifies the counters scattered across
+//! [`RunMetrics`](crate::metrics::RunMetrics), journal stats, ship
+//! diagnostics, and battery meters into one named namespace.
+//!
+//! Design constraints, in order:
+//!
+//! * **Deterministic.** Span IDs are per-shard sequence numbers (no
+//!   global state, no wall clock); timestamps are *virtual*: one
+//!   simulated tick maps to one millisecond of trace time, and a
+//!   per-tick sub-counter orders the (instantaneous) work done inside a
+//!   tick. Two runs with the same seed export byte-identical traces.
+//! * **Zero allocation on the hot path.** The ring buffer and the open-
+//!   span stack are pre-allocated at [`Tracer::new`]; recording a span
+//!   writes a [`SpanRec`] (a `Copy` struct) into the ring and never
+//!   grows anything. Wrapping silently evicts the oldest records and
+//!   counts them in [`Tracer::wrapped`].
+//! * **Off by default, free when off.** Every instrumented call site
+//!   goes through the free helpers ([`begin`], [`end`], [`marker`]) on
+//!   an `&mut Option<Tracer>`; with `None` they are a branch and a
+//!   return. The helpers are free functions (not methods) so call
+//!   sites that already hold a disjoint field borrow — e.g. the
+//!   journal during a seal — still compile.
+//!
+//! The [`Registry`] is the opposite of the tracer: always available
+//! (it is a pure snapshot of state the service already keeps), built on
+//! demand, and merged across shards exactly like fleet receipts —
+//! counters and gauges sum, labels union under per-shard keys,
+//! histograms bucket-merge. A one-worker fleet's registry is
+//! byte-identical to the unsharded service's, the same keystone
+//! property the receipts uphold.
+
+use std::collections::BTreeMap;
+
+use crate::load::LatencyHistogram;
+use crate::util::Json;
+
+pub mod budget;
+pub mod export;
+
+/// Ring capacity of one tracer: enough for the span-heaviest bench run
+/// (a few spans per request over a few thousand requests) while keeping
+/// a 16-shard fleet's trace memory under ~10 MB. Not a knob: a fixed
+/// capacity is what makes the hot path allocation-free.
+pub const DEFAULT_RING_CAP: usize = 8192;
+
+/// Virtual-time scale: trace timestamps are `tick * TICK_US + sub`,
+/// i.e. one simulated tick renders as 1 ms (1000 µs) in a Chrome trace
+/// viewer, with up to `TICK_US` intra-tick steps ordered by the
+/// sub-counter.
+pub const TICK_US: u64 = 1_000;
+
+/// One completed span or instant marker. `Copy` so the ring buffer is
+/// a flat pre-allocated array; names are `&'static str` so recording
+/// never allocates.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpanRec {
+    /// Unique within a run: `seq * 1024 + shard_lane`, which stays well
+    /// under 2^53 (JSON numbers are f64) for any plausible run length.
+    pub id: u64,
+    /// Enclosing span's `id`, or 0 for a root. Roots spawned by a
+    /// fleet drain carry the front-end span's id across the channel
+    /// boundary.
+    pub parent: u64,
+    pub name: &'static str,
+    /// Worker shard index, or `u32::MAX` for the fleet front-end.
+    pub shard: u32,
+    /// 0 = span, 1 = instant marker.
+    pub kind: u8,
+    /// Virtual begin/end timestamps (`tick * TICK_US + sub`).
+    pub begin_ts: u64,
+    pub end_ts: u64,
+    /// Simulated ticks the span opened and closed on.
+    pub begin_tick: u64,
+    pub end_tick: u64,
+    /// One span-specific payload (requests served, bytes shipped, ...).
+    pub detail: u64,
+    /// Per-tracer record sequence; chronological within a shard.
+    pub seq: u64,
+}
+
+impl SpanRec {
+    pub fn is_marker(&self) -> bool {
+        self.kind == 1
+    }
+
+    /// Virtual duration in trace microseconds.
+    pub fn dur(&self) -> u64 {
+        self.end_ts.saturating_sub(self.begin_ts)
+    }
+}
+
+/// A span begun but not yet ended; lives only on the tracer's stack.
+#[derive(Clone, Copy, Debug)]
+struct OpenSpan {
+    id: u64,
+    parent: u64,
+    name: &'static str,
+    begin_ts: u64,
+    begin_tick: u64,
+}
+
+/// Per-shard span recorder. See the module docs for the design; the
+/// important invariants are that [`Tracer::begin`]/[`Tracer::end`]
+/// never allocate after construction and that every stamp is strictly
+/// monotone within a shard.
+#[derive(Clone, Debug)]
+pub struct Tracer {
+    shard: u32,
+    cap: usize,
+    /// Ring of completed records; grows (within `cap`) only until the
+    /// first wrap, then overwrites in place.
+    buf: Vec<SpanRec>,
+    /// Next ring slot to overwrite once `buf` is full.
+    head: usize,
+    /// Records ever recorded (`total - buf.len()` were evicted).
+    total: u64,
+    next_seq: u64,
+    /// Open-span stack, pre-allocated; deeper nests than its capacity
+    /// would reallocate, but the instrumented call graph is ~4 deep.
+    stack: Vec<OpenSpan>,
+    /// Parent id adopted by the next root span (set by the fleet
+    /// front-end across the worker channel boundary, 0 = none).
+    pending_parent: u64,
+    /// Virtual clock: last tick stamped and the intra-tick sub-step.
+    last_tick: u64,
+    sub: u64,
+}
+
+impl Tracer {
+    pub fn new(shard: u32) -> Tracer {
+        Tracer::with_capacity(shard, DEFAULT_RING_CAP)
+    }
+
+    pub fn with_capacity(shard: u32, cap: usize) -> Tracer {
+        let cap = cap.max(1);
+        Tracer {
+            shard,
+            cap,
+            buf: Vec::with_capacity(cap),
+            head: 0,
+            total: 0,
+            next_seq: 0,
+            stack: Vec::with_capacity(64),
+            pending_parent: 0,
+            // Not a real tick: forces the first stamp to reset `sub`.
+            last_tick: u64::MAX,
+            sub: 0,
+        }
+    }
+
+    pub fn shard(&self) -> u32 {
+        self.shard
+    }
+
+    /// Records ever recorded, including any evicted by ring wrap.
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Records evicted by ring wrap (0 until the ring fills).
+    pub fn wrapped(&self) -> u64 {
+        self.total.saturating_sub(self.buf.len() as u64)
+    }
+
+    /// Virtual timestamp for `tick`, strictly increasing per call.
+    fn stamp(&mut self, tick: u64) -> u64 {
+        if tick != self.last_tick {
+            self.last_tick = tick;
+            self.sub = 0;
+        } else if self.sub < TICK_US - 1 {
+            // Saturate rather than spill into the next tick's window;
+            // ~1000 events inside one tick is far past the ring anyway.
+            self.sub += 1;
+        }
+        tick * TICK_US + self.sub
+    }
+
+    fn make_id(&mut self) -> u64 {
+        self.next_seq += 1;
+        self.next_seq * 1024 + (u64::from(self.shard) + 1).min(1023)
+    }
+
+    fn push(&mut self, rec: SpanRec) {
+        if self.buf.len() < self.cap {
+            self.buf.push(rec);
+        } else {
+            self.buf[self.head] = rec;
+            self.head = (self.head + 1) % self.cap;
+        }
+        self.total += 1;
+    }
+
+    /// Open a span nested under the current stack top (or rootless if
+    /// the stack is empty). Returns the span id to pass to [`end`].
+    pub fn begin(&mut self, name: &'static str, tick: u64) -> u64 {
+        let parent = self.stack.last().map_or(0, |s| s.id);
+        self.begin_with_parent(name, tick, parent)
+    }
+
+    /// Open a new *root* span: any span still open (an error path that
+    /// unwound past its `end`) is force-closed first, and the pending
+    /// cross-boundary parent, if one was adopted, links this root to
+    /// the fleet front-end span that dispatched it.
+    pub fn begin_root(&mut self, name: &'static str, tick: u64) -> u64 {
+        while !self.stack.is_empty() {
+            let straggler = self.stack.last().map_or(0, |s| s.id);
+            self.end(straggler, tick, 0);
+        }
+        let parent = std::mem::take(&mut self.pending_parent);
+        self.begin_with_parent(name, tick, parent)
+    }
+
+    fn begin_with_parent(&mut self, name: &'static str, tick: u64, parent: u64) -> u64 {
+        let id = self.make_id();
+        let begin_ts = self.stamp(tick);
+        self.stack.push(OpenSpan { id, parent, name, begin_ts, begin_tick: tick });
+        id
+    }
+
+    /// Close span `id`, auto-closing any children still open above it
+    /// (pop-through). Unknown ids are a no-op, so error paths that
+    /// already unwound are safe to `end` again.
+    pub fn end(&mut self, id: u64, tick: u64, detail: u64) {
+        if !self.stack.iter().any(|s| s.id == id) {
+            return;
+        }
+        while let Some(open) = self.stack.pop() {
+            let end_ts = self.stamp(tick);
+            self.push(SpanRec {
+                id: open.id,
+                parent: open.parent,
+                name: open.name,
+                shard: self.shard,
+                kind: 0,
+                begin_ts: open.begin_ts,
+                end_ts,
+                begin_tick: open.begin_tick,
+                end_tick: tick,
+                detail: if open.id == id { detail } else { 0 },
+                seq: self.total,
+            });
+            if open.id == id {
+                break;
+            }
+        }
+    }
+
+    /// Record an instant marker (scenario phase, injected fault) under
+    /// the current stack top.
+    pub fn marker(&mut self, name: &'static str, tick: u64, detail: u64) {
+        let id = self.make_id();
+        let parent = self.stack.last().map_or(0, |s| s.id);
+        let ts = self.stamp(tick);
+        self.push(SpanRec {
+            id,
+            parent,
+            name,
+            shard: self.shard,
+            kind: 1,
+            begin_ts: ts,
+            end_ts: ts,
+            begin_tick: tick,
+            end_tick: tick,
+            detail,
+            seq: self.total,
+        });
+    }
+
+    /// Adopt `parent` as the next root span's parent (the fleet
+    /// front-end threads its drain span id to workers through this).
+    pub fn adopt_parent(&mut self, parent: u64) {
+        self.pending_parent = parent;
+    }
+
+    /// Completed records in chronological (record) order. Open spans
+    /// are not included — they have no end yet.
+    pub fn records(&self) -> Vec<SpanRec> {
+        let mut out = Vec::with_capacity(self.buf.len());
+        if self.buf.len() < self.cap {
+            out.extend_from_slice(&self.buf);
+        } else {
+            out.extend_from_slice(&self.buf[self.head..]);
+            out.extend_from_slice(&self.buf[..self.head]);
+        }
+        out
+    }
+}
+
+// ---------------------------------------------------------------------
+// Free helpers over `Option<Tracer>`
+// ---------------------------------------------------------------------
+//
+// Call sites hold the tracer as an `Option` field and pass `&mut` to
+// these; when tracing is off the cost is one branch. They are free
+// functions so a method body that has already borrowed a *different*
+// field of the same struct (e.g. `self.journal.as_mut()`) can still
+// trace — `&mut self.tracer` is a disjoint borrow, `self.method()`
+// would not be.
+
+/// [`Tracer::begin`] through an `Option`; returns 0 when disabled.
+pub fn begin(t: &mut Option<Tracer>, name: &'static str, tick: u64) -> u64 {
+    match t {
+        Some(t) => t.begin(name, tick),
+        None => 0,
+    }
+}
+
+/// [`Tracer::begin_root`] through an `Option`; returns 0 when disabled.
+pub fn begin_root(t: &mut Option<Tracer>, name: &'static str, tick: u64) -> u64 {
+    match t {
+        Some(t) => t.begin_root(name, tick),
+        None => 0,
+    }
+}
+
+/// [`Tracer::end`] through an `Option`; no-op when disabled.
+pub fn end(t: &mut Option<Tracer>, id: u64, tick: u64, detail: u64) {
+    if let Some(t) = t {
+        t.end(id, tick, detail);
+    }
+}
+
+/// [`Tracer::marker`] through an `Option`; no-op when disabled.
+pub fn marker(t: &mut Option<Tracer>, name: &'static str, tick: u64, detail: u64) {
+    if let Some(t) = t {
+        t.marker(name, tick, detail);
+    }
+}
+
+/// [`Tracer::adopt_parent`] through an `Option`; no-op when disabled.
+pub fn adopt_parent(t: &mut Option<Tracer>, parent: u64) {
+    if let Some(t) = t {
+        t.adopt_parent(parent);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Metrics registry
+// ---------------------------------------------------------------------
+
+/// A named snapshot of everything the system counts: monotone counters,
+/// point-in-time gauges, free-form labels (error strings, keyed per
+/// shard so merges never collide), and latency histograms. Built on
+/// demand — it holds no live state — and mergeable across shards with
+/// the same semantics as fleet receipts: counters and gauges sum,
+/// labels union, histograms bucket-merge.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    labels: BTreeMap<String, String>,
+    hists: BTreeMap<String, LatencyHistogram>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn set_counter(&mut self, name: impl Into<String>, v: u64) {
+        self.counters.insert(name.into(), v);
+    }
+
+    pub fn set_gauge(&mut self, name: impl Into<String>, v: f64) {
+        self.gauges.insert(name.into(), v);
+    }
+
+    pub fn set_label(&mut self, name: impl Into<String>, v: impl Into<String>) {
+        self.labels.insert(name.into(), v.into());
+    }
+
+    pub fn set_hist(&mut self, name: impl Into<String>, h: LatencyHistogram) {
+        self.hists.insert(name.into(), h);
+    }
+
+    /// Counter value, 0 if absent — missing and zero are the same
+    /// question to a consumer ("did anything fail?").
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    pub fn gauge(&self, name: &str) -> f64 {
+        self.gauges.get(name).copied().unwrap_or(0.0)
+    }
+
+    pub fn label(&self, name: &str) -> Option<&str> {
+        self.labels.get(name).map(String::as_str)
+    }
+
+    pub fn hist(&self, name: &str) -> Option<&LatencyHistogram> {
+        self.hists.get(name)
+    }
+
+    /// Fold another shard's registry into this one: counters and gauges
+    /// sum, labels union (per-shard key suffixes keep them disjoint),
+    /// histograms bucket-merge.
+    pub fn merge(&mut self, other: &Registry) {
+        for (k, v) in &other.counters {
+            *self.counters.entry(k.clone()).or_insert(0) += v;
+        }
+        for (k, v) in &other.gauges {
+            *self.gauges.entry(k.clone()).or_insert(0.0) += v;
+        }
+        for (k, v) in &other.labels {
+            self.labels.insert(k.clone(), v.clone());
+        }
+        for (k, h) in &other.hists {
+            self.hists.entry(k.clone()).or_default().merge(h);
+        }
+    }
+
+    /// Deterministic JSON (sorted keys throughout): `{counters, gauges,
+    /// labels, hists}`.
+    pub fn to_json(&self) -> Json {
+        let mut counters = Json::obj();
+        for (k, v) in &self.counters {
+            counters = counters.set(k, *v);
+        }
+        let mut gauges = Json::obj();
+        for (k, v) in &self.gauges {
+            gauges = gauges.set(k, *v);
+        }
+        let mut labels = Json::obj();
+        for (k, v) in &self.labels {
+            labels = labels.set(k, v.clone());
+        }
+        let mut hists = Json::obj();
+        for (k, h) in &self.hists {
+            hists = hists.set(k, h.to_json());
+        }
+        Json::obj()
+            .set("counters", counters)
+            .set("gauges", gauges)
+            .set("labels", labels)
+            .set("hists", hists)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn span_ids_are_deterministic_and_distinct_per_shard() {
+        let mut a = Tracer::new(0);
+        let mut b = Tracer::new(0);
+        let mut c = Tracer::new(3);
+        for tick in 0..5 {
+            let (x, y, z) = (a.begin("s", tick), b.begin("s", tick), c.begin("s", tick));
+            assert_eq!(x, y, "same shard, same schedule => same ids");
+            assert_ne!(x, z, "different shard lane => different ids");
+            a.end(x, tick, 0);
+            b.end(y, tick, 0);
+            c.end(z, tick, 0);
+        }
+        assert_eq!(a.records(), b.records());
+    }
+
+    #[test]
+    fn virtual_time_is_strictly_monotone_within_a_tick() {
+        let mut t = Tracer::new(0);
+        let s1 = t.begin("outer", 7);
+        let s2 = t.begin("inner", 7);
+        t.end(s2, 7, 0);
+        t.end(s1, 7, 0);
+        let recs = t.records();
+        assert_eq!(recs.len(), 2);
+        let inner = recs.iter().find(|r| r.name == "inner").unwrap();
+        let outer = recs.iter().find(|r| r.name == "outer").unwrap();
+        assert!(outer.begin_ts < inner.begin_ts);
+        assert!(inner.end_ts < outer.end_ts);
+        assert_eq!(inner.parent, outer.id);
+        assert_eq!(outer.begin_ts, 7 * TICK_US);
+    }
+
+    #[test]
+    fn ring_wraps_in_place_without_growing() {
+        let mut t = Tracer::with_capacity(0, 8);
+        for tick in 0..100u64 {
+            let id = t.begin("s", tick);
+            t.end(id, tick, tick);
+        }
+        assert_eq!(t.buf.len(), 8, "ring never outgrows its capacity");
+        assert_eq!(t.buf.capacity(), 8);
+        assert_eq!(t.total(), 100);
+        assert_eq!(t.wrapped(), 92);
+        let recs = t.records();
+        assert_eq!(recs.len(), 8);
+        // Chronological: the eight newest spans, oldest first.
+        for (i, r) in recs.iter().enumerate() {
+            assert_eq!(r.detail, 92 + i as u64);
+        }
+    }
+
+    #[test]
+    fn end_pops_through_unclosed_children_and_ignores_unknown_ids() {
+        let mut t = Tracer::new(0);
+        let root = t.begin("root", 1);
+        let _child = t.begin("child", 1);
+        t.end(0xdead_beef, 1, 0); // unknown id: no-op
+        assert_eq!(t.total(), 0);
+        t.end(root, 2, 9);
+        let recs = t.records();
+        assert_eq!(recs.len(), 2, "child auto-closed by popping through");
+        assert_eq!(recs[0].name, "child");
+        assert_eq!(recs[1].name, "root");
+        assert_eq!(recs[1].detail, 9);
+    }
+
+    #[test]
+    fn begin_root_force_closes_stragglers_and_adopts_parent() {
+        let mut t = Tracer::new(0);
+        let orphan = t.begin("orphan", 1);
+        t.adopt_parent(777);
+        let root = t.begin_root("root", 2);
+        t.end(root, 2, 0);
+        let recs = t.records();
+        assert_eq!(recs[0].id, orphan);
+        let root_rec = recs.iter().find(|r| r.id == root).unwrap();
+        assert_eq!(root_rec.parent, 777, "pending parent consumed by the root");
+        let again = t.begin_root("root", 3);
+        t.end(again, 3, 0);
+        let last = *t.records().last().unwrap();
+        assert_eq!(last.parent, 0, "parent adoption is one-shot");
+    }
+
+    #[test]
+    fn markers_are_instant_and_parented() {
+        let mut t = Tracer::new(2);
+        let root = t.begin("root", 4);
+        t.marker("fault", 4, 3);
+        t.end(root, 4, 0);
+        let recs = t.records();
+        let m = recs.iter().find(|r| r.is_marker()).unwrap();
+        assert_eq!(m.begin_ts, m.end_ts);
+        assert_eq!(m.parent, root);
+        assert_eq!(m.detail, 3);
+        assert_eq!(m.dur(), 0);
+    }
+
+    #[test]
+    fn option_helpers_are_noops_when_disabled() {
+        let mut none: Option<Tracer> = None;
+        assert_eq!(begin(&mut none, "s", 1), 0);
+        assert_eq!(begin_root(&mut none, "s", 1), 0);
+        end(&mut none, 0, 1, 0);
+        marker(&mut none, "m", 1, 0);
+        adopt_parent(&mut none, 5);
+        assert!(none.is_none());
+    }
+
+    #[test]
+    fn registry_merge_sums_counters_unions_labels_merges_hists() {
+        let mut a = Registry::new();
+        a.set_counter("req.requests", 3);
+        a.set_gauge("energy.joules", 1.5);
+        a.set_label("ship.last_error.shard0", "timeout");
+        let mut ha = LatencyHistogram::new();
+        ha.record(1);
+        ha.record(4);
+        a.set_hist("latency.queue_delay", ha.clone());
+
+        let mut b = Registry::new();
+        b.set_counter("req.requests", 2);
+        b.set_counter("prunes", 7);
+        b.set_gauge("energy.joules", 0.5);
+        b.set_label("ship.last_error.shard1", "refused");
+        let mut hb = LatencyHistogram::new();
+        hb.record(9);
+        b.set_hist("latency.queue_delay", hb.clone());
+
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.counter("req.requests"), 5);
+        assert_eq!(merged.counter("prunes"), 7);
+        assert!((merged.gauge("energy.joules") - 2.0).abs() < 1e-12);
+        assert_eq!(merged.label("ship.last_error.shard0"), Some("timeout"));
+        assert_eq!(merged.label("ship.last_error.shard1"), Some("refused"));
+        let mut want = ha;
+        want.merge(&hb);
+        assert_eq!(merged.hist("latency.queue_delay"), Some(&want));
+    }
+
+    #[test]
+    fn registry_json_is_deterministic() {
+        let mut r = Registry::new();
+        r.set_counter("b", 2);
+        r.set_counter("a", 1);
+        r.set_gauge("g", 0.25);
+        let one = r.to_json().to_string();
+        let two = r.clone().to_json().to_string();
+        assert_eq!(one, two);
+        assert!(one.find("\"a\"").unwrap() < one.find("\"b\"").unwrap());
+    }
+}

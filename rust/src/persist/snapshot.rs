@@ -79,6 +79,16 @@ pub struct MetricsImage {
     pub retrains_coalesced: u64,
     pub latency: Vec<LatencyRecord>,
     pub accuracy_by_round: Vec<Option<f64>>,
+    /// Receipts dropped past the retention cap and SLO misses counted at
+    /// record time (see `RunMetrics`), plus the latency histogram's raw
+    /// parts — its u128 sum rides as two u64 halves.
+    pub latency_dropped: u64,
+    pub latency_slo_miss: u64,
+    pub hist_counts: Vec<u64>,
+    pub hist_count: u64,
+    pub hist_sum_hi: u64,
+    pub hist_sum_lo: u64,
+    pub hist_max: u64,
 }
 
 /// Everything recovery needs to rebuild the service without the log
@@ -231,6 +241,13 @@ impl StateImage {
                 }
             }
         }
+        e.u64(m.latency_dropped);
+        e.u64(m.latency_slo_miss);
+        e.words(&m.hist_counts);
+        e.u64(m.hist_count);
+        e.u64(m.hist_sum_hi);
+        e.u64(m.hist_sum_lo);
+        e.u64(m.hist_max);
         e.buf
     }
 
@@ -366,6 +383,13 @@ impl StateImage {
         for _ in 0..na {
             accuracy_by_round.push(if d.bool()? { Some(d.f64()?) } else { None });
         }
+        let latency_dropped = d.u64()?;
+        let latency_slo_miss = d.u64()?;
+        let hist_counts = d.words()?;
+        let hist_count = d.u64()?;
+        let hist_sum_hi = d.u64()?;
+        let hist_sum_lo = d.u64()?;
+        let hist_max = d.u64()?;
         d.finished()?;
 
         Ok(StateImage {
@@ -397,6 +421,13 @@ impl StateImage {
                 retrains_coalesced,
                 latency,
                 accuracy_by_round,
+                latency_dropped,
+                latency_slo_miss,
+                hist_counts,
+                hist_count,
+                hist_sum_hi,
+                hist_sum_lo,
+                hist_max,
             },
         })
     }
@@ -502,6 +533,13 @@ mod tests {
                 retrains_coalesced: 3,
                 latency: vec![LatencyRecord { user: 1, round: 1, queued_ticks: 0, slo_met: true }],
                 accuracy_by_round: vec![None, Some(0.71), None, None],
+                latency_dropped: 2,
+                latency_slo_miss: 1,
+                hist_counts: vec![1, 0, 2],
+                hist_count: 3,
+                hist_sum_hi: 0,
+                hist_sum_lo: 9,
+                hist_max: 4,
             },
         }
     }

@@ -5,6 +5,7 @@
 use anyhow::Result;
 
 use crate::data::trace::UnlearnRequest;
+use crate::load::LatencyHistogram;
 use crate::metrics::{LatencyReceipt, RunMetrics};
 use crate::persist::event::{BatteryPost, Event, LatencyRecord, MetricsPost};
 use crate::persist::recovery::{self, RecoveryReport};
@@ -103,8 +104,10 @@ impl UnlearningService {
             self.journal = Some(j);
             return Err(anyhow::anyhow!("durability journal failed earlier: {msg}"));
         }
+        let snap = crate::obs::begin(&mut self.tracer, "snapshot", self.now_tick);
         let image = self.capture_image();
         let bytes = image.encode(j.mode.spills());
+        let snapshot_bytes = bytes.len() as u64;
         let res = j.log.compact(&bytes);
         match &res {
             Err(e) => j.err = Some(format!("compaction: {e}")),
@@ -118,6 +121,7 @@ impl UnlearningService {
             }
         }
         self.journal = Some(j);
+        crate::obs::end(&mut self.tracer, snap, self.now_tick, snapshot_bytes);
         if res.is_ok() {
             self.journal_seal();
         }
@@ -131,17 +135,24 @@ impl UnlearningService {
     /// ingest, compaction) ends here; a failed barrier poisons the
     /// journal exactly like a failed append.
     pub(crate) fn journal_seal(&mut self) {
+        let tick = self.now_tick;
         let Some(j) = self.journal.as_mut() else { return };
         if j.err.is_some() {
             return;
         }
+        let seal = crate::obs::begin(&mut self.tracer, "seal", tick);
         if let Err(e) = j.log.sync_now() {
             j.err = Some(format!("fsync: {e}"));
+            crate::obs::end(&mut self.tracer, seal, tick, 0);
             return;
         }
         if let Some(sh) = j.shipper.as_mut() {
+            let ship = crate::obs::begin(&mut self.tracer, "ship", tick);
             sh.flush();
+            let pending = sh.receipt().pending;
+            crate::obs::end(&mut self.tracer, ship, tick, pending);
         }
+        crate::obs::end(&mut self.tracer, seal, tick, 0);
     }
 
     /// Force the group-commit window closed from outside (device
@@ -416,6 +427,7 @@ impl UnlearningService {
     /// Materialize the full service state (the compactor's snapshot).
     pub(crate) fn capture_image(&self) -> StateImage {
         let m = &self.engine.metrics;
+        let (hist_counts, hist_count, hist_sum, hist_max) = m.latency_hist.to_parts();
         StateImage {
             now_tick: self.now_tick,
             head_deferral_logged: self.head_deferral_logged,
@@ -459,6 +471,13 @@ impl UnlearningService {
                     })
                     .collect(),
                 accuracy_by_round: m.accuracy_by_round.clone(),
+                latency_dropped: m.latency_dropped,
+                latency_slo_miss: m.latency_slo_miss,
+                hist_counts,
+                hist_count,
+                hist_sum_hi: (hist_sum >> 64) as u64,
+                hist_sum_lo: hist_sum as u64,
+                hist_max,
             },
         }
     }
@@ -510,6 +529,15 @@ impl UnlearningService {
                 })
                 .collect(),
             accuracy_by_round: img.metrics.accuracy_by_round.clone(),
+            latency_dropped: img.metrics.latency_dropped,
+            latency_slo_miss: img.metrics.latency_slo_miss,
+            latency_hist: LatencyHistogram::from_parts(
+                img.metrics.hist_counts.clone(),
+                img.metrics.hist_count,
+                (u128::from(img.metrics.hist_sum_hi) << 64)
+                    | u128::from(img.metrics.hist_sum_lo),
+                img.metrics.hist_max,
+            ),
         };
     }
 }

@@ -261,6 +261,12 @@ pub struct UnlearningService {
     /// `None` keeps every code path byte-identical to the in-memory
     /// service.
     journal: Option<Journal>,
+    /// Deterministic span tracer ([`UnlearningService::enable_obs`]);
+    /// `None` (the default) keeps the hot path span-free.
+    tracer: Option<crate::obs::Tracer>,
+    /// Fleet shard index this service runs as (0 for the unsharded
+    /// service), used to key per-shard registry labels.
+    shard_tag: u32,
 }
 
 impl UnlearningService {
@@ -279,6 +285,8 @@ impl UnlearningService {
             log: vec![],
             batch_log: vec![],
             journal: None,
+            tracer: None,
+            shard_tag: 0,
         }
     }
 
@@ -348,6 +356,8 @@ impl UnlearningService {
     pub fn ingest_round(&mut self, pop: &EdgePopulation) -> Result<()> {
         self.check_journal()?;
         self.now_tick = self.now_tick.saturating_add(1);
+        let tick = self.now_tick;
+        let span = crate::obs::begin_root(&mut self.tracer, "ingest", tick);
         let report = match self.engine.run_round(pop) {
             Ok(r) => r,
             Err(e) => {
@@ -359,9 +369,11 @@ impl UnlearningService {
                 // committed event).
                 let _ = self.engine.take_tape();
                 self.poison_journal(&format!("engine error mid-round: {e:#}"));
+                crate::obs::end(&mut self.tracer, span, tick, 0);
                 return Err(e);
             }
         };
+        let placements = report.placements.len() as u64;
         let accuracy = self
             .engine
             .metrics
@@ -392,6 +404,7 @@ impl UnlearningService {
         // A round ingest is a commit scope: seal the group-commit window
         // (one fsync) and ship the sealed frames.
         self.journal_seal();
+        crate::obs::end(&mut self.tracer, span, self.now_tick, placements);
         Ok(())
     }
 
@@ -418,6 +431,122 @@ impl UnlearningService {
             });
             self.emit(|_| Event::Harvest { battery });
         }
+    }
+
+    /// Turn on span tracing: every subsequent drain / price / admit /
+    /// retrain / seal / ship / snapshot scope records a span into a
+    /// per-shard fixed-capacity ring ([`crate::obs::Tracer`]). The tracer
+    /// never touches receipts or the journal, so enabling it cannot
+    /// perturb any replayed or compared state.
+    pub fn enable_obs(&mut self) {
+        if self.tracer.is_none() {
+            self.tracer = Some(crate::obs::Tracer::new(self.shard_tag));
+        }
+    }
+
+    /// Whether span tracing is enabled.
+    pub fn obs_enabled(&self) -> bool {
+        self.tracer.is_some()
+    }
+
+    /// Key this service as fleet shard `tag` (registry labels, span lane).
+    /// Call before [`UnlearningService::enable_obs`].
+    pub fn set_shard_tag(&mut self, tag: u32) {
+        self.shard_tag = tag;
+    }
+
+    /// Fleet shard index (0 for the unsharded service).
+    pub fn shard_tag(&self) -> u32 {
+        self.shard_tag
+    }
+
+    /// Snapshot of the retained span records, ring order (oldest first).
+    /// Empty without [`UnlearningService::enable_obs`].
+    pub fn obs_records(&self) -> Vec<crate::obs::SpanRec> {
+        self.tracer.as_ref().map_or_else(Vec::new, crate::obs::Tracer::records)
+    }
+
+    /// Stamp an instant marker (scenario phase, fault injection) into the
+    /// trace at the current service tick. No-op when tracing is off.
+    pub fn obs_marker(&mut self, name: &'static str) {
+        let tick = self.now_tick;
+        crate::obs::marker(&mut self.tracer, name, tick, 0);
+    }
+
+    /// Adopt `parent` as the parent of the next root span — how the fleet
+    /// front-end's drain span links to the worker-side drain it caused
+    /// across the channel boundary. No-op when tracing is off.
+    pub fn obs_set_parent(&mut self, parent: u64) {
+        crate::obs::adopt_parent(&mut self.tracer, parent);
+    }
+
+    pub(crate) fn tracer_mut(&mut self) -> &mut Option<crate::obs::Tracer> {
+        &mut self.tracer
+    }
+
+    /// Unified named-metrics registry: engine counters, queue depth,
+    /// battery / journal / shipping state, and the queue-delay histogram,
+    /// shard-mergeable via [`crate::obs::Registry::merge`]. Always
+    /// available — no [`UnlearningService::enable_obs`] required.
+    /// Deliberately excludes tracer state, so a fleet-of-one worker's
+    /// registry stays byte-identical to the unsharded service's.
+    pub fn registry(&self) -> crate::obs::Registry {
+        let mut reg = crate::obs::Registry::new();
+        let m = &self.engine.metrics;
+        reg.set_counter("req.requests", m.total_requests());
+        reg.set_counter("req.rsn", m.total_rsn());
+        reg.set_counter("retrain.warm", m.warm_retrains);
+        reg.set_counter("retrain.scratch", m.scratch_retrains);
+        reg.set_counter("retrain.coalesced", m.retrains_coalesced);
+        reg.set_counter("retrain.lineages", m.lineages_retrained);
+        reg.set_counter("store.ckpts_stored", m.ckpts_stored);
+        reg.set_counter("store.ckpts_replaced", m.ckpts_replaced);
+        reg.set_counter("store.ckpts_rejected", m.ckpts_rejected);
+        reg.set_counter("store.ckpts_invalidated", m.ckpts_invalidated);
+        reg.set_counter("window.batches", m.batches);
+        reg.set_counter("window.requests", m.batched_requests);
+        reg.set_counter("prunes", m.prunes);
+        reg.set_counter("latency.receipts", m.latency.len() as u64 + m.latency_dropped);
+        reg.set_counter("latency.dropped", m.latency_dropped);
+        reg.set_counter("latency.slo_miss", m.latency_slo_miss);
+        reg.set_counter("queue.pending", self.queue.len() as u64);
+        reg.set_gauge("energy.joules", m.energy_joules);
+        if let Some(b) = &self.battery {
+            reg.set_counter("battery.brownouts", b.brownouts);
+            reg.set_gauge("battery.charge_j", b.charge_j);
+            reg.set_gauge("battery.capacity_j", b.capacity_j);
+        }
+        if let Some(js) = self.journal_stats() {
+            reg.set_counter("journal.appended", js.appended);
+            reg.set_counter("journal.fsyncs", js.fsyncs);
+            reg.set_counter("journal.events_in_log", js.events_in_log);
+            reg.set_counter("journal.log_bytes", js.log_bytes);
+            reg.set_counter("journal.snapshot_bytes", js.snapshot_bytes);
+        }
+        if let Some(e) = self.durability_error() {
+            reg.set_label(format!("journal.error.shard{}", self.shard_tag), e);
+        }
+        if let Some(sr) = self.shipping_state() {
+            reg.set_counter("ship.shipped_seq", sr.shipped_seq);
+            reg.set_counter("ship.pending", sr.pending);
+            reg.set_counter("ship.attempts", sr.attempts);
+            reg.set_counter("ship.faults", sr.faults);
+            reg.set_counter("ship.failed", u64::from(sr.failed.is_some()));
+            if let Some(e) = &sr.last_error {
+                reg.set_label(
+                    format!("ship.last_error.shard{}", self.shard_tag),
+                    e.clone(),
+                );
+            }
+            if let Some(e) = &sr.failed {
+                reg.set_label(
+                    format!("ship.failed_reason.shard{}", self.shard_tag),
+                    e.clone(),
+                );
+            }
+        }
+        reg.set_hist("latency.queue_delay", m.latency_hist.clone());
+        reg
     }
 
     /// Deterministic, comparison-friendly digest of the full service

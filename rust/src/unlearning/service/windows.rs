@@ -118,6 +118,7 @@ impl UnlearningService {
     /// queue head) until `harvest` restores enough charge.
     pub fn drain(&mut self) -> Result<usize> {
         self.check_journal()?;
+        let root = crate::obs::begin_root(&mut self.tracer, "drain_fcfs", self.now_tick);
         // A plan carried over from a failed batched window must not be
         // stranded when the caller switches to FCFS drains: flush it
         // first (its samples are already removed from the lineages).
@@ -160,6 +161,7 @@ impl UnlearningService {
                 let drawn = b.draw(est_j_hint);
                 debug_assert!(drawn, "covered by the can_cover probe above");
             }
+            let serve = crate::obs::begin(&mut self.tracer, "serve", self.now_tick);
             let outcome = match self.engine.process_request(&req) {
                 Ok(o) => o,
                 Err(e) => {
@@ -169,9 +171,12 @@ impl UnlearningService {
                     // recovery replays to the last committed event).
                     let _ = self.engine.take_tape();
                     self.poison_journal(&format!("engine error mid-serve: {e:#}"));
+                    // Ending the root pops the open serve span with it.
+                    crate::obs::end(&mut self.tracer, root, self.now_tick, served as u64);
                     return Err(e);
                 }
             };
+            crate::obs::end(&mut self.tracer, serve, self.now_tick, outcome.rsn);
             let est_seconds = self
                 .engine
                 .cfg
@@ -185,11 +190,20 @@ impl UnlearningService {
             }
             let queued_ticks = self.now_tick.saturating_sub(req.arrival_tick);
             let slo = self.planner.policy.slo();
+            let slo_met = slo.map_or(true, |s| queued_ticks <= s);
+            // Built here (not read back from the receipt vec) because the
+            // vec is capped: the receipt may fold into the histogram only.
+            let latency_rec = LatencyRecord {
+                user: req.user.0,
+                round: req.round,
+                queued_ticks,
+                slo_met,
+            };
             self.engine.metrics.record_latency(LatencyReceipt {
                 user: req.user.0,
                 round: req.round,
                 queued_ticks,
-                slo_met: slo.map_or(true, |s| queued_ticks <= s),
+                slo_met,
             });
             self.log.push(ServiceReport {
                 user: req.user.0,
@@ -203,21 +217,12 @@ impl UnlearningService {
             self.queue.pop_front();
             self.head_deferral_logged = false;
             self.emit(|svc| {
-                let last = {
-                    let l = svc.engine.metrics.latency.last().expect("receipt just recorded");
-                    LatencyRecord {
-                        user: l.user,
-                        round: l.round,
-                        queued_ticks: l.queued_ticks,
-                        slo_met: l.slo_met,
-                    }
-                };
                 Event::Serve(Box::new(ServeRec {
                     popped: true,
                     store_ops: svc.engine.take_tape(),
                     battery: svc.battery_post(),
                     metrics: svc.metrics_post(),
-                    latency: Some(last),
+                    latency: Some(latency_rec),
                     report: svc_rec_of(svc.log.last().expect("report just pushed")),
                     head_deferral_logged: false,
                     policy_state: svc.engine.store().policy_state(),
@@ -228,6 +233,7 @@ impl UnlearningService {
         // End of the drain = end of the commit scope: seal the
         // group-commit window and ship the sealed frames.
         self.journal_seal();
+        crate::obs::end(&mut self.tracer, root, self.now_tick, served as u64);
         Ok(served)
     }
 
@@ -253,6 +259,11 @@ impl UnlearningService {
 
     fn drain_windows(&mut self, flush: bool) -> Result<usize> {
         self.check_journal()?;
+        let root = crate::obs::begin_root(
+            &mut self.tracer,
+            if flush { "drain_flush" } else { "drain" },
+            self.now_tick,
+        );
         let mut served = 0;
         loop {
             let w = self.next_window(flush);
@@ -275,6 +286,7 @@ impl UnlearningService {
             }
         }
         self.journal_seal();
+        crate::obs::end(&mut self.tracer, root, self.now_tick, served as u64);
         Ok(served)
     }
 
@@ -307,6 +319,7 @@ impl UnlearningService {
     /// price it per lineage when battery-gated. Destructive — see the
     /// type docs on [`PricedWindow`].
     pub(crate) fn price_window(&mut self, window: Vec<UnlearnRequest>) -> PricedWindow {
+        let span = crate::obs::begin(&mut self.tracer, "price", self.now_tick);
         let drained = window.len() as u64;
         let mut metas: Vec<ReqMeta> = Vec::with_capacity(window.len());
         if let Some((_, prev_metas)) = &self.carryover {
@@ -335,6 +348,7 @@ impl UnlearningService {
                 )
             }
         };
+        crate::obs::end(&mut self.tracer, span, self.now_tick, drained);
         PricedWindow { plan, metas, drained, costs }
     }
 
@@ -345,6 +359,7 @@ impl UnlearningService {
     /// would remove additional, never-requested samples. Returns the
     /// number of requests served.
     pub(crate) fn commit_window(&mut self, pw: PricedWindow, admission: Admission) -> Result<usize> {
+        let commit = crate::obs::begin(&mut self.tracer, "commit", self.now_tick);
         let PricedWindow { mut plan, metas, drained, costs: _ } = pw;
         let (reserve_j, defer) = match admission {
             Admission::Granted { take, reserve_j } => {
@@ -397,6 +412,7 @@ impl UnlearningService {
                         policy_state: svc.engine.store().policy_state(),
                     }))
                 });
+                crate::obs::end(&mut self.tracer, commit, self.now_tick, 0);
                 return Ok(0);
             }
         };
@@ -409,9 +425,14 @@ impl UnlearningService {
         let coalesced = plan.coalesced_retrains();
         let window_requests = plan.requests;
         debug_assert_eq!(window_requests, metas.len(), "one meta per merged request");
+        let retrain = crate::obs::begin(&mut self.tracer, "retrain", self.now_tick);
         let outcome = match self.engine.execute_plan(&plan) {
-            Ok(outcome) => outcome,
+            Ok(outcome) => {
+                crate::obs::end(&mut self.tracer, retrain, self.now_tick, outcome.rsn);
+                outcome
+            }
             Err(e) => {
+                crate::obs::end(&mut self.tracer, retrain, self.now_tick, 0);
                 if let Some(b) = &mut self.battery {
                     b.refund(reserve_j);
                 }
@@ -435,6 +456,7 @@ impl UnlearningService {
                         policy_state: svc.engine.store().policy_state(),
                     }))
                 });
+                crate::obs::end(&mut self.tracer, commit, self.now_tick, 0);
                 return Err(e);
             }
         };
@@ -450,14 +472,25 @@ impl UnlearningService {
 
         let slo = self.planner.policy.slo();
         let mut oldest_queued = 0u64;
+        // Built alongside the receipts (not sliced back out of the receipt
+        // vec) because the vec is capped: late receipts fold into the
+        // histogram only.
+        let mut latency_records = Vec::with_capacity(metas.len());
         for m in &metas {
             let queued_ticks = self.now_tick.saturating_sub(m.arrival_tick);
             oldest_queued = oldest_queued.max(queued_ticks);
+            let slo_met = slo.map_or(true, |s| queued_ticks <= s);
+            latency_records.push(LatencyRecord {
+                user: m.user,
+                round: m.round,
+                queued_ticks,
+                slo_met,
+            });
             self.engine.metrics.record_latency(LatencyReceipt {
                 user: m.user,
                 round: m.round,
                 queued_ticks,
-                slo_met: slo.map_or(true, |s| queued_ticks <= s),
+                slo_met,
             });
         }
 
@@ -484,28 +517,19 @@ impl UnlearningService {
         });
         self.head_deferral_logged = false;
         self.emit(|svc| {
-            let receipts = &svc.engine.metrics.latency;
-            let latency = receipts[receipts.len() - window_requests..]
-                .iter()
-                .map(|l| LatencyRecord {
-                    user: l.user,
-                    round: l.round,
-                    queued_ticks: l.queued_ticks,
-                    slo_met: l.slo_met,
-                })
-                .collect();
             Event::Window(Box::new(WindowRec {
                 drained,
                 store_ops: svc.engine.take_tape(),
                 battery: svc.battery_post(),
                 metrics: svc.metrics_post(),
-                latency,
+                latency: latency_records,
                 report: Some(batch_rec_of(svc.batch_log.last().expect("just pushed"))),
                 carryover: carryover_rec_of(&svc.carryover),
                 head_deferral_logged: false,
                 policy_state: svc.engine.store().policy_state(),
             }))
         });
+        crate::obs::end(&mut self.tracer, commit, self.now_tick, window_requests as u64);
         Ok(window_requests)
     }
 
@@ -513,7 +537,10 @@ impl UnlearningService {
     /// window (stages 1–3 composed for the standalone service).
     pub(crate) fn execute_window(&mut self, window: Vec<UnlearnRequest>) -> Result<usize> {
         let pw = self.price_window(window);
+        let span = crate::obs::begin(&mut self.tracer, "admit", self.now_tick);
         let admission = admission_decide(pw.costs.as_deref(), self.battery.as_ref());
+        let granted = matches!(admission, Admission::Granted { .. });
+        crate::obs::end(&mut self.tracer, span, self.now_tick, u64::from(granted));
         self.commit_window(pw, admission)
     }
 }

@@ -212,6 +212,20 @@ fn fleet_of_one_replays_unsharded_byte_identically() {
             if ev_ref != ev_fleet {
                 return Err(format!("journal events diverged: {ev_ref} vs {ev_fleet}"));
             }
+            // Metrics registry: the 1-worker fleet's registry (returned
+            // verbatim from its single shard, no merge pass) must be
+            // byte-identical to the unsharded service's.
+            let reg_ref = svc.registry().to_json().to_string();
+            let reg_fleet = fleet
+                .registry()
+                .map_err(|e| format!("fleet registry: {e:#}"))?
+                .to_json()
+                .to_string();
+            if reg_ref != reg_fleet {
+                return Err(format!(
+                    "registries diverged:\n  unsharded: {reg_ref}\n  fleet:     {reg_fleet}"
+                ));
+            }
             // WAL bytes: same file set, same contents.
             let files_ref = fs_ref.sizes();
             let files_fleet = fs_fleet.sizes();
@@ -275,6 +289,23 @@ fn two_worker_fleet_conserves_requests() {
     let batch_requests: usize =
         fleet.batch_log().unwrap().iter().map(|b| b.requests).sum();
     assert_eq!(batch_requests, submitted);
+
+    // The fleet-level registry is exactly the shard registries merged in
+    // shard order — counters sum, histograms merge, and the merged
+    // request counter agrees with the metrics aggregate above.
+    let shard_regs = fleet.shard_registries().unwrap();
+    assert_eq!(shard_regs.len(), 2);
+    let mut merged = shard_regs[0].clone();
+    for r in &shard_regs[1..] {
+        merged.merge(r);
+    }
+    let fleet_reg = fleet.registry().unwrap();
+    assert_eq!(
+        fleet_reg.to_json().to_string(),
+        merged.to_json().to_string(),
+        "fleet registry must equal the in-order merge of shard registries"
+    );
+    assert_eq!(fleet_reg.counter("req.requests"), total);
 }
 
 /// Satellite: per-shard seeds derive deterministically from the routing

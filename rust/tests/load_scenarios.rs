@@ -10,7 +10,7 @@
 use cause::load::{corpus, run_open_loop, sweep, OpenLoopCfg};
 
 fn light_run(seed: u64) -> OpenLoopCfg {
-    OpenLoopCfg { offered_per_tick: 1.0, ticks: 10, tail_ticks: 64, seed }
+    OpenLoopCfg { offered_per_tick: 1.0, ticks: 10, tail_ticks: 64, seed, obs: false }
 }
 
 #[test]

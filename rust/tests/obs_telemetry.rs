@@ -1,0 +1,138 @@
+//! Observability-layer properties, end to end through the load harness:
+//!
+//! * same seed ⇒ byte-identical Chrome-trace exports, for the unsharded
+//!   service and for the threaded fleet (logical ticks only — no wall
+//!   clock ever enters a span);
+//! * tracing is observation-only: the full deterministic `LoadReport`
+//!   (receipts, histograms, telemetry counters) is byte-identical with
+//!   spans on and off;
+//! * cross-process parenting: worker-lane root spans in a fleet trace
+//!   carry the front-end span that dispatched them as their parent;
+//! * the tick-budget fold attributes ≥95% of in-span time to named
+//!   phases and recovers the harness's phase markers from the export.
+//!
+//! Ring-buffer wrap behavior and span-id determinism are unit-tested in
+//! `cause::obs`; this file pins the integration surface the `obs`
+//! binary, `bench_load`, and the soak all share.
+
+use cause::load::{corpus, run_open_loop, OpenLoopCfg, Scenario};
+use cause::obs::budget;
+use cause::util::Json;
+
+/// Pull one corpus member by its gate name.
+fn scenario(name: &str) -> Box<dyn Scenario> {
+    corpus()
+        .into_iter()
+        .find(|s| s.name() == name)
+        .unwrap_or_else(|| panic!("scenario {name} not in corpus"))
+}
+
+/// A short, non-saturating run shape shared by every test here.
+fn cfg(obs: bool) -> OpenLoopCfg {
+    OpenLoopCfg {
+        offered_per_tick: 1.0,
+        ticks: 12,
+        tail_ticks: 128,
+        seed: 0x0b5_7e57,
+        obs,
+    }
+}
+
+/// The exported trace document of one traced run (panics if absent).
+fn trace_of(name: &str) -> Json {
+    let report = run_open_loop(scenario(name).as_ref(), &cfg(true)).unwrap();
+    report.trace.expect("obs run must carry a trace export")
+}
+
+#[test]
+fn same_seed_trace_exports_are_byte_identical() {
+    // One single-node scenario, one threaded two-worker fleet: virtual
+    // timestamps and stable merge order make even the fleet's trace a
+    // pure function of the seed.
+    for name in ["gdpr_storm", "iot_fleet_churn"] {
+        let a = trace_of(name).to_pretty();
+        let b = trace_of(name).to_pretty();
+        assert_eq!(a, b, "{name}: trace export diverged across same-seed runs");
+        let events = Json::parse(&a)
+            .unwrap()
+            .at(&["traceEvents"])
+            .and_then(Json::as_arr)
+            .map(|a| a.len())
+            .unwrap_or(0);
+        assert!(events > 0, "{name}: traced run exported no events");
+    }
+}
+
+#[test]
+fn tracing_is_observation_only() {
+    for name in ["gdpr_storm", "iot_fleet_churn"] {
+        let off = run_open_loop(scenario(name).as_ref(), &cfg(false)).unwrap();
+        let on = run_open_loop(scenario(name).as_ref(), &cfg(true)).unwrap();
+        assert!(off.trace.is_none(), "{name}: untraced run grew a trace");
+        assert!(on.trace.is_some(), "{name}: traced run lost its trace");
+        // The full deterministic report — served counts, trace digest,
+        // latency histogram, registry telemetry — must not move by a
+        // byte when spans turn on.
+        assert_eq!(
+            off.to_json().to_string(),
+            on.to_json().to_string(),
+            "{name}: tracing perturbed the load report"
+        );
+    }
+}
+
+#[test]
+fn fleet_trace_parents_worker_roots_to_front_end() {
+    let doc = trace_of("iot_fleet_churn");
+    let (spans, _) = budget::spans_from_chrome(&doc).unwrap();
+    let front_ids: Vec<u64> =
+        spans.iter().filter(|s| s.lane == 0).map(|s| s.id).collect();
+    assert!(!front_ids.is_empty(), "no front-end spans in fleet trace");
+    assert!(
+        spans.iter().any(|s| s.lane > 1),
+        "two-worker fleet trace shows only one worker lane"
+    );
+    // Worker drains are dispatched by the front-end: their root spans
+    // must link back to a front-end span id (a cross-lane parent).
+    let adopted: Vec<&budget::BudgetSpan> = spans
+        .iter()
+        .filter(|s| s.lane != 0 && s.parent != 0 && front_ids.contains(&s.parent))
+        .collect();
+    assert!(
+        !adopted.is_empty(),
+        "no worker span carries a front-end parent — cross-process link lost"
+    );
+    assert!(
+        adopted.iter().any(|s| s.name.starts_with("drain")),
+        "adopted worker spans exist but none is a drain root: {:?}",
+        adopted.iter().map(|s| s.name.as_str()).collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn budget_attributes_in_span_time_and_recovers_markers() {
+    for name in ["gdpr_storm", "iot_fleet_churn"] {
+        let doc = trace_of(name);
+        let (spans, markers) = budget::spans_from_chrome(&doc).unwrap();
+        let b = budget::compute(&spans);
+        assert!(b.root_us > 0, "{name}: no rooted span time to attribute");
+        assert!(
+            b.attributed_us * 100 >= b.root_us * 95,
+            "{name}: only {}/{} us attributed to named phases",
+            b.attributed_us,
+            b.root_us
+        );
+        for marker in ["phase:arrivals", "phase:tail"] {
+            assert!(
+                markers.iter().any(|(m, n)| m == marker && *n > 0),
+                "{name}: export lost the {marker} marker: {markers:?}"
+            );
+        }
+        // The render is total: every row and the footer line appear.
+        let table = budget::render(&b, &markers);
+        assert!(table.contains("% attributed"));
+        for row in &b.rows {
+            assert!(table.contains(&row.name), "row {} missing", row.name);
+        }
+    }
+}
